@@ -1,0 +1,66 @@
+//! Quickstart: the PERP story in one minute on gpt-nano.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example quickstart
+//! ```
+//!
+//! 1. pretrain (or load the cached) dense model;
+//! 2. magnitude-prune 50% → perplexity degrades;
+//! 3. retrain ONLY the biases (≈1% of params at this scale, 0.03% at OPT
+//!    scale) → most of the damage is gone;
+//! 4. retrain with MaskLoRA and merge losslessly → sparsity preserved.
+
+use anyhow::Result;
+
+use perp::config::ExperimentConfig;
+use perp::coordinator::sweep::ExpContext;
+use perp::peft::Mode;
+use perp::pruning::{Criterion, Pattern};
+use perp::runtime::{default_artifacts_dir, Runtime};
+
+fn main() -> Result<()> {
+    let rt = Runtime::new(&default_artifacts_dir())?;
+    let mut cfg = ExperimentConfig::quick("gpt-nano");
+    cfg.pretrain_steps = 3000;
+    cfg.retrain_steps = 150;
+    let ctx = ExpContext::new(&rt, cfg, "results/cache".into());
+
+    println!("== 1. dense model ==");
+    let dense = ctx.dense_session(0)?;
+    let dense_ppl = dense.eval_ppl_test()?;
+    println!("dense test perplexity: {:.2}", dense_ppl.ppl);
+
+    println!("\n== 2. magnitude pruning @ 50% ==");
+    let (pruned, _) = ctx.pruned_session(0, Criterion::Magnitude, Pattern::Unstructured(0.5))?;
+    let pruned_ppl = pruned.eval_ppl_test()?;
+    println!(
+        "pruned perplexity: {:.2}  (x{:.2} vs dense) — sparsity {:.1}%",
+        pruned_ppl.ppl,
+        pruned_ppl.ppl / dense_ppl.ppl,
+        100.0 * pruned.masks.sparsity()
+    );
+
+    println!("\n== 3. retrain ONLY the biases ==");
+    let (bias_cell, lr) = ctx.retrain_tuned(&pruned, Mode::Biases, 150, false)?;
+    println!(
+        "biases retrained (lr {lr}): perplexity {:.2} — trainable {:.3}% of params",
+        bias_cell.ppl, bias_cell.trainable_pct
+    );
+
+    println!("\n== 4. MaskLoRA: mergeable, sparsity-preserving ==");
+    let mut s = ctx.clone_session(&pruned)?;
+    s.retrain(Mode::MaskLora, 150, lr)?;
+    s.merge_adapters()?; // panics if any pruned weight were resurrected
+    let ml = s.eval_ppl_test()?;
+    println!(
+        "masklora retrained+merged: perplexity {:.2}; post-merge sparsity {:.1}%",
+        ml.ppl,
+        100.0 * s.params.weight_sparsity(&s.mm)
+    );
+
+    println!(
+        "\nsummary: dense {:.2} | pruned {:.2} | +biases {:.2} | +masklora {:.2}",
+        dense_ppl.ppl, pruned_ppl.ppl, bias_cell.ppl, ml.ppl
+    );
+    Ok(())
+}

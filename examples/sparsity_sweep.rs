@@ -1,0 +1,65 @@
+//! Sparsity sweep (Fig 1 shape): perplexity vs sparsity for every retrained
+//! parameter subset, printed as an aligned series.
+//!
+//! ```bash
+//! cargo run --release --offline --example sparsity_sweep -- [--model gpt-nano]
+//! ```
+
+use anyhow::Result;
+
+use perp::config::ExperimentConfig;
+use perp::coordinator::sweep::ExpContext;
+use perp::peft::Mode;
+use perp::pruning::{Criterion, Pattern};
+use perp::runtime::{default_artifacts_dir, Runtime};
+use perp::util::cli::Args;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv).map_err(|e| anyhow::anyhow!(e))?;
+    let model = args.str("model", "gpt-nano");
+    let steps = args.u64("steps", 100);
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    let rt = Runtime::new(&default_artifacts_dir())?;
+    let mut cfg = ExperimentConfig::quick(&model);
+    cfg.pretrain_steps = 3000;
+    let ctx = ExpContext::new(&rt, cfg.clone(), "results/cache".into());
+
+    let sparsities = [0.3, 0.4, 0.5, 0.6, 0.7];
+    let methods: Vec<(&str, Option<Mode>)> = vec![
+        ("no retraining", None),
+        ("head", Some(Mode::Head)),
+        ("embed", Some(Mode::Embed)),
+        ("biases", Some(Mode::Biases)),
+        ("ln", Some(Mode::Ln)),
+        ("masklora", Some(Mode::MaskLora)),
+        ("full ft", Some(Mode::Full)),
+    ];
+
+    print!("{:<16}", "method");
+    for sp in sparsities {
+        print!(" {:>8.0}%", sp * 100.0);
+    }
+    println!();
+
+    for (label, mode) in methods {
+        print!("{label:<16}");
+        for sp in sparsities {
+            let (base, _) =
+                ctx.pruned_session(0, Criterion::Magnitude, Pattern::Unstructured(sp))?;
+            let ppl = match mode {
+                None => base.eval_ppl_test()?.ppl,
+                Some(m) => {
+                    let mut s = ctx.clone_session(&base)?;
+                    s.retrain(m, steps, cfg.lr_grid[0])?;
+                    s.merge_adapters()?;
+                    s.eval_ppl_test()?.ppl
+                }
+            };
+            print!(" {ppl:>9.2}");
+        }
+        println!();
+    }
+    Ok(())
+}

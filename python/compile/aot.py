@@ -1,0 +1,373 @@
+"""AOT compile path: lower every L2 graph to HLO text + manifest.json.
+
+Run once per model config (``make artifacts``):
+
+    cd python && python -m compile.aot --out ../artifacts [--configs a,b,c]
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax ≥0.5
+emits protos with 64-bit instruction ids which the rust side's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest records, for every executable, the exact input/output tensor
+names, shapes and dtypes in call order — the rust runtime binds buffers by
+these names and never guesses.
+
+Naming convention for executable inputs:
+    p::<param>    model parameter            m::<linear>    sparsity mask
+    a::<linear>   LoRA A                     b::<linear>    LoRA B
+    om::<leaf>    AdamW first moment         ov::<leaf>     AdamW second moment
+    tokens / tmask / x / y0 / w / mask       data tensors
+    step / lr                                traced scalars
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import recon as R
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def io_entry(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+class Lowerer:
+    """Collects (function, input specs, io metadata) and writes artifacts."""
+
+    def __init__(self, cfg: M.ModelConfig, out_dir: str):
+        self.cfg = cfg
+        self.dir = os.path.join(out_dir, cfg.name)
+        os.makedirs(self.dir, exist_ok=True)
+        self.executables = {}
+        self.pspecs = M.param_specs(cfg)
+        self.shapes = {n: s for n, s, _ in self.pspecs}
+        self.prunable = M.prunable_names(cfg)
+        self.adapters = M.adapter_specs(cfg)
+        self.ad_shapes = dict(self.adapters)
+
+    # ---- input builders -------------------------------------------------
+
+    def param_inputs(self):
+        return [io_entry(f"p::{n}", s) for n, s, _ in self.pspecs]
+
+    def mask_inputs(self):
+        return [io_entry(f"m::{n}", self.shapes[n]) for n in self.prunable]
+
+    def adapter_inputs(self):
+        out = []
+        for n, s in self.adapters:
+            tag = "a" if n.endswith("::A") else "b"
+            out.append(io_entry(f"{tag}::{n[:-3]}", s))
+        return out
+
+    def opt_inputs(self, leaf_names):
+        ms = [io_entry(f"om::{n}", self._leaf_shape(n)) for n in leaf_names]
+        vs = [io_entry(f"ov::{n}", self._leaf_shape(n)) for n in leaf_names]
+        return ms + vs
+
+    def _leaf_shape(self, n):
+        return self.ad_shapes[n] if n in self.ad_shapes else self.shapes[n]
+
+    # ---- lowering -------------------------------------------------------
+
+    def lower(self, name, fn, inputs, outputs):
+        t0 = time.time()
+        specs = [
+            spec(e["shape"], I32 if e["dtype"] == "i32" else F32) for e in inputs
+        ]
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        self.executables[name] = {
+            "file": f"{self.cfg.name}/{name}.hlo.txt",
+            "inputs": inputs,
+            "outputs": outputs,
+        }
+        print(
+            f"  [{self.cfg.name}] {name}: {len(inputs)} in / {len(outputs)} out, "
+            f"{len(text) / 1e6:.2f} MB HLO, {time.time() - t0:.1f}s",
+            flush=True,
+        )
+
+    def manifest_entry(self):
+        c = self.cfg
+        return {
+            "config": {
+                "name": c.name, "vocab": c.vocab, "d_model": c.d_model,
+                "n_layers": c.n_layers, "n_heads": c.n_heads,
+                "seq_len": c.seq_len, "d_ff": c.d_ff,
+                "use_bias": c.use_bias, "norm": c.norm,
+                "lora_rank": c.lora_rank, "lora_alpha": c.lora_alpha,
+                "lora_scale": c.lora_scale,
+                "train_batch": c.train_batch, "eval_batch": c.eval_batch,
+                "calib_rows": c.calib_rows,
+            },
+            "params": [
+                {"name": n, "shape": list(s), "group": g} for n, s, g in self.pspecs
+            ],
+            "prunable": self.prunable,
+            "taps": {n: M.tap_of(n) for n in self.prunable},
+            "adapters": [
+                {"name": n, "shape": list(s)} for n, s in self.adapters
+            ],
+            "trainable": {
+                mode: M.trainable_names(self.cfg, mode) for mode in M.ALL_MODES
+            },
+            "executables": self.executables,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Per-config lowering plan.
+# ---------------------------------------------------------------------------
+
+
+def unflatten(names, values):
+    return dict(zip(names, values))
+
+
+def lower_config(cfg: M.ModelConfig, out_dir: str, fast: bool = False):
+    lw = Lowerer(cfg, out_dir)
+    pnames = [n for n, _, _ in lw.pspecs]
+    np_, nm = len(pnames), len(lw.prunable)
+
+    # -- eval_loss ---------------------------------------------------------
+    def eval_loss(*args):
+        params = unflatten(pnames, args[:np_])
+        masks = unflatten(lw.prunable, args[np_:np_ + nm])
+        tokens = args[np_ + nm]
+        logits = M.forward(cfg, params, masks, tokens)
+        s, c = M.lm_loss_sums(logits, tokens)
+        return s, c
+
+    tok_eval = io_entry("tokens", (cfg.eval_batch, cfg.seq_len), "i32")
+    lw.lower(
+        "eval_loss", eval_loss,
+        lw.param_inputs() + lw.mask_inputs() + [tok_eval],
+        [io_entry("loss_sum", ()), io_entry("count", ())],
+    )
+
+    # -- score (zero-shot likelihood ranking) -------------------------------
+    def score(*args):
+        params = unflatten(pnames, args[:np_])
+        masks = unflatten(lw.prunable, args[np_:np_ + nm])
+        tokens, tmask = args[np_ + nm], args[np_ + nm + 1]
+        logits = M.forward(cfg, params, masks, tokens)
+        return M.sequence_scores(logits, tokens, tmask)
+
+    lw.lower(
+        "score", score,
+        lw.param_inputs() + lw.mask_inputs()
+        + [tok_eval, io_entry("tmask", (cfg.eval_batch, cfg.seq_len))],
+        [io_entry("scores", (cfg.eval_batch,)), io_entry("counts", (cfg.eval_batch,))],
+    )
+
+    # -- adapter-active eval (standard LoRA is evaluated unmerged: merging
+    # would destroy sparsity — PERP §3.2 / Table 2) -------------------------
+    anames_all = [n for n, _ in lw.adapters]
+
+    def eval_loss_lora(*args):
+        params = unflatten(pnames, args[:np_])
+        masks = unflatten(lw.prunable, args[np_:np_ + nm])
+        i = np_ + nm
+        adapters = unflatten(anames_all, args[i:i + len(anames_all)])
+        tokens = args[i + len(anames_all)]
+        logits = M.forward(cfg, params, masks, tokens, adapters=adapters, mode="lora")
+        return M.lm_loss_sums(logits, tokens)
+
+    lw.lower(
+        "eval_loss_lora", eval_loss_lora,
+        lw.param_inputs() + lw.mask_inputs() + lw.adapter_inputs() + [tok_eval],
+        [io_entry("loss_sum", ()), io_entry("count", ())],
+    )
+
+    def score_lora(*args):
+        params = unflatten(pnames, args[:np_])
+        masks = unflatten(lw.prunable, args[np_:np_ + nm])
+        i = np_ + nm
+        adapters = unflatten(anames_all, args[i:i + len(anames_all)])
+        tokens, tmask = args[i + len(anames_all)], args[i + len(anames_all) + 1]
+        logits = M.forward(cfg, params, masks, tokens, adapters=adapters, mode="lora")
+        return M.sequence_scores(logits, tokens, tmask)
+
+    lw.lower(
+        "score_lora", score_lora,
+        lw.param_inputs() + lw.mask_inputs() + lw.adapter_inputs()
+        + [tok_eval, io_entry("tmask", (cfg.eval_batch, cfg.seq_len))],
+        [io_entry("scores", (cfg.eval_batch,)), io_entry("counts", (cfg.eval_batch,))],
+    )
+
+    # -- train steps ---------------------------------------------------------
+    modes = M.ALL_MODES if not fast else ("full", "biases", "masklora")
+    for mode in modes:
+        is_lora = mode in M.LORA_MODES
+        tnames = M.trainable_names(cfg, mode)
+        anames = [n for n, _ in lw.adapters] if is_lora else []
+        leaf_names = tnames + anames
+        step_fn = M.make_train_step(cfg, mode)
+        nl = len(leaf_names)
+
+        def train(*args, _mode=mode, _tnames=tnames, _anames=anames,
+                  _leaf=leaf_names, _step=step_fn, _nl=nl):
+            params = unflatten(pnames, args[:np_])
+            masks = unflatten(lw.prunable, args[np_:np_ + nm])
+            i = np_ + nm
+            adapters = unflatten(_anames, args[i:i + len(_anames)])
+            i += len(_anames)
+            m = unflatten(_leaf, args[i:i + _nl]); i += _nl
+            v = unflatten(_leaf, args[i:i + _nl]); i += _nl
+            tokens, step_i, lr = args[i], args[i + 1], args[i + 2]
+            trainable = {k: params[k] for k in _tnames}
+            frozen = params
+            new_leaves, m2, v2, loss = _step(
+                trainable, frozen, masks, adapters, m, v, tokens, step_i, lr
+            )
+            outs = [new_leaves[k] for k in _leaf]
+            outs += [m2[k] for k in _leaf]
+            outs += [v2[k] for k in _leaf]
+            return tuple(outs) + (loss,)
+
+        inputs = (
+            lw.param_inputs() + lw.mask_inputs()
+            + (lw.adapter_inputs() if is_lora else [])
+            + lw.opt_inputs(leaf_names)
+            + [io_entry("tokens", (cfg.train_batch, cfg.seq_len), "i32"),
+               io_entry("step", ()), io_entry("lr", ())]
+        )
+        outputs = (
+            [io_entry(f"o::{n}", lw._leaf_shape(n)) for n in leaf_names]
+            + [io_entry(f"om::{n}", lw._leaf_shape(n)) for n in leaf_names]
+            + [io_entry(f"ov::{n}", lw._leaf_shape(n)) for n in leaf_names]
+            + [io_entry("loss", ())]
+        )
+        lw.lower(f"train_{mode}", train, inputs, outputs)
+
+    # -- calibration stats (Wanda / SparseGPT Hessians) ----------------------
+    def calib(*args):
+        params = unflatten(pnames, args[:np_])
+        masks = unflatten(lw.prunable, args[np_:np_ + nm])
+        tokens = args[np_ + nm]
+        grams = M.calib_stats(cfg, params, masks, tokens)
+        return tuple(g for _, g in grams)
+
+    gram_outputs = [
+        io_entry(f"gram::{n}", (lw.shapes[n][1], lw.shapes[n][1]))
+        for n in M.tap_names(cfg)
+    ]
+    lw.lower("calib_stats", calib,
+             lw.param_inputs() + lw.mask_inputs() + [tok_eval], gram_outputs)
+
+    # -- layer-input capture (reconstruction) --------------------------------
+    def capture(*args):
+        params = unflatten(pnames, args[:np_])
+        masks = unflatten(lw.prunable, args[np_:np_ + nm])
+        tokens = args[np_ + nm]
+        caps = M.capture_layer_inputs(cfg, params, masks, tokens)
+        return tuple(x for _, x in caps)
+
+    ntok = cfg.eval_batch * cfg.seq_len
+    cap_outputs = [
+        io_entry(f"x::{n}", (ntok, lw.shapes[n][1])) for n in M.tap_names(cfg)
+    ]
+    lw.lower("capture_inputs", capture,
+             lw.param_inputs() + lw.mask_inputs() + [tok_eval], cap_outputs)
+
+    # -- per-shape reconstruction executables ---------------------------------
+    shapes = sorted({lw.shapes[n] for n in lw.prunable})
+    rows = cfg.calib_rows
+    r = cfg.lora_rank
+    for (o, i) in shapes:
+        tag = f"{o}x{i}"
+        lw.lower(
+            f"linear_fwd_{tag}", R.linear_fwd,
+            [io_entry("x", (rows, i)), io_entry("w", (o, i))],
+            [io_entry("y0", (rows, o))],
+        )
+        step_ml = R.make_recon_step_masklora(cfg.lora_scale)
+        lw.lower(
+            f"recon_masklora_{tag}", step_ml,
+            [io_entry("x", (rows, i)), io_entry("y0", (rows, o)),
+             io_entry("w", (o, i)), io_entry("mask", (o, i)),
+             io_entry("a", (r, i)), io_entry("b", (o, r)),
+             io_entry("om::a", (r, i)), io_entry("ov::a", (r, i)),
+             io_entry("om::b", (o, r)), io_entry("ov::b", (o, r)),
+             io_entry("step", ()), io_entry("lr", ())],
+            [io_entry("o::a", (r, i)), io_entry("o::b", (o, r)),
+             io_entry("om::a", (r, i)), io_entry("ov::a", (r, i)),
+             io_entry("om::b", (o, r)), io_entry("ov::b", (o, r)),
+             io_entry("loss", ())],
+        )
+        step_full = R.make_recon_step_full()
+        lw.lower(
+            f"recon_full_{tag}", step_full,
+            [io_entry("x", (rows, i)), io_entry("y0", (rows, o)),
+             io_entry("w", (o, i)), io_entry("mask", (o, i)),
+             io_entry("om::w", (o, i)), io_entry("ov::w", (o, i)),
+             io_entry("step", ()), io_entry("lr", ())],
+            [io_entry("o::w", (o, i)),
+             io_entry("om::w", (o, i)), io_entry("ov::w", (o, i)),
+             io_entry("loss", ())],
+        )
+
+    return lw.manifest_entry()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="gpt-nano,gpt-tiny,gpt-small,llama-tiny")
+    ap.add_argument("--fast", action="store_true",
+                    help="lower a reduced executable set (CI smoke)")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest_path = os.path.join(args.out, "manifest.json")
+    manifest = {"format": 1, "models": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    for name in args.configs.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        cfg = M.CONFIGS[name]
+        print(f"[aot] lowering {name} ...", flush=True)
+        t0 = time.time()
+        manifest["models"][name] = lower_config(cfg, args.out, fast=args.fast)
+        print(f"[aot] {name} done in {time.time() - t0:.1f}s", flush=True)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,22 @@
+"""L1 Pallas kernels for PERP (interpret=True; see common.py).
+
+Public surface used by the L2 model (compile/model.py):
+
+* matmul.mm_nt / mm_nn / masked_matmul — dense + pruned linears
+* masked_lora.masked_lora_matmul       — MaskLoRA fused forward/backward
+* scale_lora.scale_lora_matmul         — ScaleLoRA fused forward/backward
+* attention.attention                  — causal flash-style attention
+* layernorm.layernorm / rmsnorm        — affine norms (the LN subset)
+* adamw.adamw_update                   — fused optimizer step
+* masks.*                              — device-side mask/score kernels
+* ref.*                                — pure-jnp oracles (tests only)
+"""
+
+from . import ref  # noqa: F401
+from .adamw import adamw_update  # noqa: F401
+from .attention import attention  # noqa: F401
+from .layernorm import layernorm, rmsnorm  # noqa: F401
+from .masked_lora import masked_lora_matmul  # noqa: F401
+from .masks import magnitude_threshold_mask, nm_mask, wanda_score  # noqa: F401
+from .matmul import dmm_nt, masked_matmul, mm_nn, mm_nt  # noqa: F401
+from .scale_lora import scale_lora_init, scale_lora_matmul  # noqa: F401

@@ -1,0 +1,83 @@
+"""Fused AdamW update Pallas kernel.
+
+PERP's efficiency argument hinges on optimizer-state footprint: AdamW keeps
+two f32 buffers per trainable parameter, so shrinking the trainable set from
+100% to 0.01-1% collapses memory.  The update itself is a pure elementwise
+map — a single fused VPU pass over (p, g, m, v) — which this kernel expresses
+blocked over a flattened 1-D view.
+
+``step`` and ``lr`` are traced scalars shipped as (1,1) blocks broadcast to
+every grid cell (scalar-prefetch is TPU-Mosaic-only; this form interprets
+everywhere and lowers to the same fused loop).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, cdiv, round_up
+
+
+def _adamw_kernel(p_ref, g_ref, m_ref, v_ref, sc_ref, p2_ref, m2_ref, v2_ref, *,
+                  beta1, beta2, eps, wd):
+    p = p_ref[...]
+    g = g_ref[...]
+    m = m_ref[...]
+    v = v_ref[...]
+    step = sc_ref[0, 0]
+    lr = sc_ref[0, 1]
+    m2 = beta1 * m + (1.0 - beta1) * g
+    v2 = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m2 / (1.0 - jnp.power(beta1, step))
+    vhat = v2 / (1.0 - jnp.power(beta2, step))
+    p2_ref[...] = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    m2_ref[...] = m2
+    v2_ref[...] = v2
+
+
+def adamw_update(p, g, m, v, step, lr, beta1=0.9, beta2=0.999, eps=1e-8, wd=0.0):
+    """One fused AdamW step on an arbitrary-shaped tensor.
+
+    step: traced f32 scalar (1-based); lr: traced f32 scalar.
+    Returns (p', m', v') with the original shape.
+    """
+    shape = p.shape
+    n = p.size
+    block = 4096
+    padded = round_up(max(n, 1), block)
+
+    def flat(t):
+        f = t.reshape(-1)
+        if padded != n:
+            f = jnp.pad(f, (0, padded - n))
+        return f.reshape(padded // block, block)
+
+    scalars = jnp.stack([step.astype(jnp.float32), lr.astype(jnp.float32)]).reshape(1, 2)
+    rows = padded // block
+    outs = pl.pallas_call(
+        functools.partial(_adamw_kernel, beta1=beta1, beta2=beta2, eps=eps, wd=wd),
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((rows, block), p.dtype)] * 3,
+        interpret=INTERPRET,
+    )(flat(p), flat(g), flat(m), flat(v), scalars)
+
+    def unflat(t):
+        return t.reshape(-1)[:n].reshape(shape)
+
+    return unflat(outs[0]), unflat(outs[1]), unflat(outs[2])

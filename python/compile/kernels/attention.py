@@ -1,0 +1,103 @@
+"""Causal self-attention Pallas kernel.
+
+One grid cell per (batch*head): the full (S, dh) Q/K/V panels are resident in
+VMEM (S ≤ 512 at repro scale: 512² f32 scores = 1 MiB, comfortably inside a
+TPU core's ~16 MiB VMEM).  This is the "one-tile flash" regime — for longer
+sequences the k-block online-softmax extension applies, but the repro configs
+never leave one tile, so the simple schedule is the roofline-optimal one (see
+DESIGN.md §Perf).
+
+The backward pass recomputes probabilities (flash-style: nothing but q,k,v and
+the output gradient are needed) and applies the standard softmax VJP; it is
+expressed with jnp on full panels, which XLA fuses into the surrounding HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, causal: bool, scale: float):
+    q = q_ref[0]  # (S, dh)
+    k = k_ref[0]
+    v = v_ref[0]
+    s = q.shape[0]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        idx = jax.lax.iota(jnp.int32, s)
+        mask = idx[:, None] >= idx[None, :]
+        scores = jnp.where(mask, scores, _NEG_INF)
+    # numerically-stable softmax in VMEM
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p.astype(v.dtype), v, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+def attention_fwd_kernel(q, k, v, causal: bool = True):
+    """q,k,v: (B, H, S, dh) -> (B, H, S, dh)."""
+    bsz, nh, s, dh = q.shape
+    scale = 1.0 / (dh**0.5)
+    qf = q.reshape(bsz * nh, s, dh)
+    kf = k.reshape(bsz * nh, s, dh)
+    vf = v.reshape(bsz * nh, s, dh)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, causal=causal, scale=scale),
+        grid=(bsz * nh,),
+        in_specs=[
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz * nh, s, dh), q.dtype),
+        interpret=INTERPRET,
+    )(qf, kf, vf)
+    return out.reshape(bsz, nh, s, dh)
+
+
+def _probs(q, k, causal):
+    dh = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    if causal:
+        s = q.shape[-2]
+        idx = jnp.arange(s)
+        scores = jnp.where(idx[:, None] >= idx[None, :], scores, _NEG_INF)
+    return jax.nn.softmax(scores, axis=-1)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attention(q, k, v, causal=True):
+    """Flash-style causal attention: pallas fwd, recompute bwd."""
+    return attention_fwd_kernel(q, k, v, causal)
+
+
+def _attn_fwd(q, k, v, causal):
+    return attention_fwd_kernel(q, k, v, causal), (q, k, v)
+
+
+def _attn_bwd(causal, res, g):
+    q, k, v = res
+    dh = q.shape[-1]
+    p = _probs(q, k, causal)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p, g)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", g, v)
+    # softmax VJP: ds = p * (dp - sum(dp * p))
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    ds = ds / jnp.sqrt(jnp.float32(dh))
+    dq = jnp.einsum("bhqk,bhkd->bhqd", ds, k)
+    dk = jnp.einsum("bhqk,bhqd->bhkd", ds, q)
+    return dq, dk, dv
+
+
+attention.defvjp(_attn_fwd, _attn_bwd)

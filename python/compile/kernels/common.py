@@ -1,0 +1,119 @@
+"""Shared helpers for the Pallas kernels (L1).
+
+All kernels in this package run with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so interpret mode lowers the kernels to
+plain HLO ops which any backend (including the rust-side PJRT CPU client)
+executes natively.  Block shapes are still chosen as if targeting a TPU core
+(VMEM ~16 MiB, MXU-friendly multiples of 8/128) so the HBM<->VMEM schedule the
+BlockSpecs express is the one we analyze in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def scratch(shape, dtype=jnp.float32):
+    """A VMEM-style scratch accumulator (ANY memory space interprets on CPU)."""
+    return pl.MemorySpace.ANY(shape, dtype)
+
+
+# Kernels must be interpretable on CPU; flip to False only when compiling for
+# a real TPU target (compile-only validation).
+INTERPRET = True
+
+
+def cdiv(a: int, b: int) -> int:
+    """Ceiling division."""
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    """Round ``a`` up to the next multiple of ``b``."""
+    return cdiv(a, b) * b
+
+
+def pick_block(dim: int, preferred: int) -> int:
+    """Choose a block size for ``dim``: the preferred tile if the dimension is
+    large enough and divisible, otherwise the whole (small) dimension.
+
+    The tiny/small model configs used for CPU reproduction have dims (64-1024)
+    that often fit in a single tile; the preferred sizes (128/256) are the
+    MXU-friendly tiles we would use on real hardware.
+    """
+    if dim % preferred == 0:
+        return preferred
+    # fall back to the largest power-of-two divisor <= preferred
+    b = 1
+    while b * 2 <= preferred and dim % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulBlocks:
+    """Tile sizes for an (n, k) x (m, k)^T -> (n, m) contraction."""
+
+    bn: int
+    bm: int
+    bk: int
+
+    @staticmethod
+    def choose(n: int, m: int, k: int) -> "MatmulBlocks":
+        return MatmulBlocks(
+            bn=pick_block(n, 128),
+            bm=pick_block(m, 128),
+            bk=pick_block(k, 256),
+        )
+
+    def grid(self, n: int, m: int, k: int):
+        return (cdiv(n, self.bn), cdiv(m, self.bm), cdiv(k, self.bk))
+
+    def vmem_bytes(self, rank: int = 0, dtype_bytes: int = 4) -> int:
+        """Analytical VMEM footprint of one grid step (perf model input).
+
+        x-tile + w-tile + mask-tile + (optional lora tiles) + acc + out.
+        """
+        tiles = (
+            self.bn * self.bk  # x
+            + self.bm * self.bk  # w
+            + self.bm * self.bk  # mask
+            + self.bn * self.bm * 2  # acc + out
+        )
+        if rank:
+            tiles += self.bm * rank + rank * self.bk + self.bm * self.bk
+        return tiles * dtype_bytes
+
+
+def flops_masked_lora(n: int, m: int, k: int, r: int) -> int:
+    """FLOP count for the fused (W*M + s*M*(B@A)) @ x^T contraction."""
+    main = 2 * n * m * k  # the MXU contraction
+    lora = 2 * m * r * k  # B@A materialisation per (m,k) tile sweep
+    mask = 3 * m * k  # two hadamards + add
+    return main + lora + mask
+
+
+def assert_rank(x: jax.Array, rank: int, name: str) -> None:
+    if x.ndim != rank:
+        raise ValueError(f"{name}: expected rank {rank}, got shape {x.shape}")
+
+
+def pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    """Zero-pad ``x`` along ``axis`` to a multiple of ``multiple``."""
+    size = x.shape[axis]
+    target = round_up(size, multiple)
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads)
+
+
+def maybe_jit(fn):
+    """jit wrapper that keeps the python call path usable under pytest."""
+    return functools.wraps(fn)(jax.jit(fn))

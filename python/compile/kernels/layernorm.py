@@ -1,0 +1,129 @@
+"""LayerNorm / RMSNorm Pallas kernels.
+
+PERP's cheapest retraining subset is exactly these affine parameters (0.01% of
+an OPT model), so the normalisation layers must expose clean grads for scale
+and bias.  Forward is a row-blocked pallas kernel (full feature dim per tile —
+d ≤ 1024 at repro scale); backward is the closed-form LN VJP in jnp.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_block, cdiv
+
+EPS = 1e-5
+
+
+def _ln_kernel(x_ref, s_ref, b_ref, o_ref):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    xhat = (x - mu) * jax.lax.rsqrt(var + EPS)
+    o_ref[...] = xhat * s_ref[...] + b_ref[...]
+
+
+def layernorm_fwd_kernel(x, scale, bias):
+    """x: (n, d); scale/bias: (d,)."""
+    n, d = x.shape
+    bn = pick_block(n, 256)
+    return pl.pallas_call(
+        _ln_kernel,
+        grid=(cdiv(n, bn),),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=INTERPRET,
+    )(x, scale[None, :], bias[None, :])
+
+
+@jax.custom_vjp
+def layernorm(x, scale, bias):
+    """y = (x - mu)/sqrt(var + eps) * scale + bias, rows normalised."""
+    return layernorm_fwd_kernel(x, scale, bias)
+
+
+def _ln_fwd(x, scale, bias):
+    return layernorm_fwd_kernel(x, scale, bias), (x, scale)
+
+
+def _ln_bwd(res, g):
+    x, scale = res
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + EPS)
+    xhat = (x - mu) * inv
+    dbias = jnp.sum(g, axis=0)
+    dscale = jnp.sum(g * xhat, axis=0)
+    dxhat = g * scale
+    # dx = inv * (dxhat - mean(dxhat) - xhat * mean(dxhat * xhat))
+    dx = inv * (
+        dxhat
+        - jnp.mean(dxhat, axis=-1, keepdims=True)
+        - xhat * jnp.mean(dxhat * xhat, axis=-1, keepdims=True)
+    )
+    return dx, dscale, dbias
+
+
+layernorm.defvjp(_ln_fwd, _ln_bwd)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm (LLaMA-family configs — no bias, no mean subtraction).
+# ---------------------------------------------------------------------------
+
+
+def _rms_kernel(x_ref, s_ref, o_ref):
+    x = x_ref[...]
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(ms + EPS) * s_ref[...]
+
+
+def rmsnorm_fwd_kernel(x, scale):
+    n, d = x.shape
+    bn = pick_block(n, 256)
+    return pl.pallas_call(
+        _rms_kernel,
+        grid=(cdiv(n, bn),),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=INTERPRET,
+    )(x, scale[None, :])
+
+
+@jax.custom_vjp
+def rmsnorm(x, scale):
+    """y = x / sqrt(mean(x^2) + eps) * scale."""
+    return rmsnorm_fwd_kernel(x, scale)
+
+
+def _rms_fwd(x, scale):
+    return rmsnorm_fwd_kernel(x, scale), (x, scale)
+
+
+def _rms_bwd(res, g):
+    x, scale = res
+    d = x.shape[-1]
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + EPS)
+    xhat = x * inv
+    dscale = jnp.sum(g * xhat, axis=0)
+    gs = g * scale
+    # dx = inv * (gs - xhat * mean(gs * xhat))
+    dx = inv * (gs - xhat * jnp.mean(gs * xhat, axis=-1, keepdims=True))
+    return dx, dscale
+
+
+rmsnorm.defvjp(_rms_fwd, _rms_bwd)

@@ -1,0 +1,147 @@
+"""MaskLoRA fused forward/backward Pallas kernels (PERP §3.2).
+
+The PERP hot spot: ``y = x @ (W*M + M ⊙ (s·B@A))^T``.  The naive PyTorch
+implementation in the paper materialises ``B@A`` at full (out, in) size, masks
+it, adds it to W and runs a second GEMM — this is their "MaskLoRA (standard)"
+row in Table 4 (3,000 tps vs 5,300 for LoRA).  Their "optimized" variant fuses
+the adapter construction into the forward (4,700 tps).
+
+This kernel is the TPU-shaped expression of that optimization: per (bm, bk)
+weight tile we compute ``B_tile @ A_tile`` (an (bm, r) x (r, bk) MXU matmul,
+r << bm,bk), apply the mask and the add entirely in VMEM, and feed the fused
+tile straight into the main (bn, bk) x (bk, bm) contraction.  ``B@A`` never
+exists at full size in HBM and the mask is read exactly once per tile.
+
+The backward pass reuses the same fused-tile construction for
+``dx = g @ Z`` and computes the adapter gradients through the masked
+down-projection ``dZm = M ⊙ (g^T @ x)``:
+
+    dA = s * B^T @ dZm        dB = s * dZm @ A^T
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, MatmulBlocks, cdiv, scratch
+from .matmul import mm_nt, mm_nn
+
+
+def _fused_tile(w, m, a, b, scale):
+    """Z-tile = W*M + M ⊙ (s·B@A) computed in registers/VMEM."""
+    ba = jnp.dot(b, a, preferred_element_type=jnp.float32)
+    return m * (w + scale * ba.astype(w.dtype))
+
+
+def _fwd_kernel(x_ref, w_ref, m_ref, a_ref, b_ref, o_ref, acc_ref, *, nk, scale):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    z = _fused_tile(w_ref[...], m_ref[...], a_ref[...], b_ref[...], scale)
+    acc_ref[...] += jnp.dot(x_ref[...], z.T, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def masked_lora_matmul_fwd_kernel(x, w, mask, a, b, scale: float):
+    """Raw fused forward: x:(n,k), w/mask:(m,k), a:(r,k), b:(m,r) -> (n,m)."""
+    n, k = x.shape
+    m, k2 = w.shape
+    r, k3 = a.shape
+    m2, r2 = b.shape
+    assert k == k2 == k3 and m == m2 and r == r2, (x.shape, w.shape, a.shape, b.shape)
+    blk = MatmulBlocks.choose(n, m, k)
+    nk = cdiv(k, blk.bk)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, nk=nk, scale=scale),
+        grid=(cdiv(n, blk.bn), cdiv(m, blk.bm), nk),
+        in_specs=[
+            pl.BlockSpec((blk.bn, blk.bk), lambda i, j, l: (i, l)),  # x
+            pl.BlockSpec((blk.bm, blk.bk), lambda i, j, l: (j, l)),  # w
+            pl.BlockSpec((blk.bm, blk.bk), lambda i, j, l: (j, l)),  # mask
+            pl.BlockSpec((r, blk.bk), lambda i, j, l: (0, l)),       # a
+            pl.BlockSpec((blk.bm, r), lambda i, j, l: (j, 0)),       # b
+        ],
+        out_specs=pl.BlockSpec((blk.bn, blk.bm), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        scratch_shapes=[scratch((blk.bn, blk.bm))],
+        interpret=INTERPRET,
+    )(x, w, mask, a, b)
+
+
+def _bwd_dx_kernel(g_ref, w_ref, m_ref, a_ref, b_ref, o_ref, acc_ref, *, nm, scale):
+    # dx:(n,k) = g:(n,m) @ Z:(m,k); grid (n-blocks, k-blocks, m-blocks).
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    z = _fused_tile(w_ref[...], m_ref[...], a_ref[...], b_ref[...], scale)
+    acc_ref[...] += jnp.dot(g_ref[...], z, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nm - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def masked_lora_matmul_bwd_dx_kernel(g, w, mask, a, b, scale: float):
+    """dx = g @ Z with the Z tiles fused exactly like the forward."""
+    n, m = g.shape
+    m2, k = w.shape
+    r = a.shape[0]
+    assert m == m2
+    blk = MatmulBlocks.choose(n, k, m)  # contraction dim is m here
+    nm = cdiv(m, blk.bk)
+    return pl.pallas_call(
+        functools.partial(_bwd_dx_kernel, nm=nm, scale=scale),
+        grid=(cdiv(n, blk.bn), cdiv(k, blk.bm), nm),
+        in_specs=[
+            pl.BlockSpec((blk.bn, blk.bk), lambda i, j, l: (i, l)),  # g
+            pl.BlockSpec((blk.bk, blk.bm), lambda i, j, l: (l, j)),  # w
+            pl.BlockSpec((blk.bk, blk.bm), lambda i, j, l: (l, j)),  # mask
+            pl.BlockSpec((r, blk.bm), lambda i, j, l: (0, j)),       # a
+            pl.BlockSpec((blk.bk, r), lambda i, j, l: (l, 0)),       # b
+        ],
+        out_specs=pl.BlockSpec((blk.bn, blk.bm), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, k), g.dtype),
+        scratch_shapes=[scratch((blk.bn, blk.bm))],
+        interpret=INTERPRET,
+    )(g, w, mask, a, b)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper.  Trainables are (a, b); w and mask are frozen in
+# MaskLoRA retraining, but we still emit dw for the layer-wise full-FT
+# reconstruction baseline (Table 19) where W itself is optimised.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def masked_lora_matmul(x, w, mask, a, b, scale):
+    """y = x @ (M ⊙ (W + s·B@A))^T — fused pallas fwd + bwd."""
+    return masked_lora_matmul_fwd_kernel(x, w, mask, a, b, scale)
+
+
+def _mlm_fwd(x, w, mask, a, b, scale):
+    return masked_lora_matmul_fwd_kernel(x, w, mask, a, b, scale), (x, w, mask, a, b)
+
+
+def _mlm_bwd(scale, res, g):
+    x, w, mask, a, b = res
+    dx = masked_lora_matmul_bwd_dx_kernel(g, w, mask, a, b, scale)
+    # dZ = g^T @ x, masked.  The full-size (m, k) gradient exists only in the
+    # backward pass (same as the paper's autograd behaviour).
+    dzm = mm_nt(g.T, x.T) * mask
+    da = scale * mm_nn(b.T, dzm)
+    db = scale * mm_nt(dzm, a)
+    dw = dzm  # ∂y/∂W = M ⊙ (g^T x); zero where pruned.
+    return dx, dw, None, da, db
+
+
+masked_lora_matmul.defvjp(_mlm_fwd, _mlm_bwd)

@@ -1,0 +1,110 @@
+"""Mask-generation Pallas kernels: magnitude threshold, N:M semi-structured,
+and Wanda scores.
+
+Exact-k selection (the global/uniform top-k) is a host-side sort and lives in
+rust (rust/src/pruning); these kernels cover the device-side pieces a
+production pipeline fuses into the weight pass:
+
+* ``magnitude_threshold_mask``: |w| > thr elementwise (thr from the host).
+* ``nm_mask``: keep the N largest-|w| within every group of M consecutive
+  inputs — the 2:4 / 4:8 patterns of Mishra et al. (2021).  Rank is computed
+  with an (m × m) pairwise comparison in VMEM, deterministic tie-break by
+  in-group index (matches ref.semistructured_mask's stable argsort).
+* ``wanda_score``: |W_ij| · ||X_j||₂ elementwise-broadcast (Sun et al. 2023).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, cdiv, pick_block
+
+
+# ---------------------------------------------------------------------------
+# Magnitude threshold mask.
+# ---------------------------------------------------------------------------
+
+
+def _thr_kernel(w_ref, t_ref, o_ref):
+    o_ref[...] = (jnp.abs(w_ref[...]) > t_ref[0, 0]).astype(o_ref.dtype)
+
+
+def magnitude_threshold_mask(w, thr):
+    """mask = |w| > thr (thr a traced scalar)."""
+    out, inp = w.shape
+    bo = pick_block(out, 256)
+    return pl.pallas_call(
+        _thr_kernel,
+        grid=(cdiv(out, bo),),
+        in_specs=[
+            pl.BlockSpec((bo, inp), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bo, inp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((out, inp), w.dtype),
+        interpret=INTERPRET,
+    )(w, thr.reshape(1, 1).astype(w.dtype))
+
+
+# ---------------------------------------------------------------------------
+# N:M semi-structured mask.
+# ---------------------------------------------------------------------------
+
+
+def _nm_kernel(w_ref, o_ref, *, n: int, m: int):
+    w = jnp.abs(w_ref[...])
+    bo, bi = w.shape
+    g = w.reshape(bo, bi // m, m)
+    # rank_j = #{i : |w_i| > |w_j|  or  (|w_i| == |w_j| and i < j)}
+    gi = g[:, :, :, None]  # i axis
+    gj = g[:, :, None, :]  # j axis
+    idx = jax.lax.iota(jnp.int32, m)
+    tie = (gi == gj) & (idx[:, None] < idx[None, :])
+    rank = jnp.sum((gi > gj) | tie, axis=2)  # (bo, groups, m)
+    keep = (rank < n).astype(o_ref.dtype)
+    o_ref[...] = keep.reshape(bo, bi)
+
+
+def nm_mask(w, n: int, m: int):
+    """N:M mask along the input dim of w:(out, in); in % m == 0."""
+    out, inp = w.shape
+    assert inp % m == 0, (inp, m)
+    bo = pick_block(out, 128)
+    return pl.pallas_call(
+        functools.partial(_nm_kernel, n=n, m=m),
+        grid=(cdiv(out, bo),),
+        in_specs=[pl.BlockSpec((bo, inp), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bo, inp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((out, inp), w.dtype),
+        interpret=INTERPRET,
+    )(w)
+
+
+# ---------------------------------------------------------------------------
+# Wanda scores.
+# ---------------------------------------------------------------------------
+
+
+def _wanda_kernel(w_ref, n_ref, o_ref):
+    o_ref[...] = jnp.abs(w_ref[...]) * n_ref[...]
+
+
+def wanda_score(w, x_norm):
+    """S = |W| * ||X||₂ broadcast over rows; x_norm: (in,)."""
+    out, inp = w.shape
+    bo = pick_block(out, 256)
+    return pl.pallas_call(
+        _wanda_kernel,
+        grid=(cdiv(out, bo),),
+        in_specs=[
+            pl.BlockSpec((bo, inp), lambda i: (i, 0)),
+            pl.BlockSpec((1, inp), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bo, inp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((out, inp), w.dtype),
+        interpret=INTERPRET,
+    )(w, x_norm[None, :])

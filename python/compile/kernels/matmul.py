@@ -1,0 +1,144 @@
+"""Tiled matmul Pallas kernels — the dense building blocks.
+
+Two layouts cover every contraction in the model and its backward pass:
+
+* ``mm_nt(a, b) = a @ b.T``  for a:(n,k), b:(m,k) — the linear-layer forward
+  (weights stored (out, in)) and the dZ = g^T @ x gradient (via transposes).
+* ``mm_nn(a, b) = a @ b``    for a:(n,k), b:(k,m) — the dx = g @ Z gradient.
+
+Both use the canonical TPU accumulation pattern: a VMEM scratch accumulator,
+zeroed on the first k-step of the grid and flushed to the output tile on the
+last.  ``interpret=True`` lowers this to plain HLO (see common.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, MatmulBlocks, cdiv, scratch
+
+
+def _mm_nt_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def mm_nt(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x:(n,k) @ w:(m,k)^T -> (n,m)."""
+    n, k = x.shape
+    m, k2 = w.shape
+    assert k == k2, (x.shape, w.shape)
+    blk = MatmulBlocks.choose(n, m, k)
+    nk = cdiv(k, blk.bk)
+    return pl.pallas_call(
+        functools.partial(_mm_nt_kernel, nk=nk),
+        grid=(cdiv(n, blk.bn), cdiv(m, blk.bm), nk),
+        in_specs=[
+            pl.BlockSpec((blk.bn, blk.bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((blk.bm, blk.bk), lambda i, j, l: (j, l)),
+        ],
+        out_specs=pl.BlockSpec((blk.bn, blk.bm), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        scratch_shapes=[scratch((blk.bn, blk.bm))],
+        interpret=INTERPRET,
+    )(x, w)
+
+
+def _mm_nn_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def mm_nn(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x:(n,k) @ w:(k,m) -> (n,m)."""
+    n, k = x.shape
+    k2, m = w.shape
+    assert k == k2, (x.shape, w.shape)
+    blk = MatmulBlocks.choose(n, m, k)
+    nk = cdiv(k, blk.bk)
+    return pl.pallas_call(
+        functools.partial(_mm_nn_kernel, nk=nk),
+        grid=(cdiv(n, blk.bn), cdiv(m, blk.bm), nk),
+        in_specs=[
+            pl.BlockSpec((blk.bn, blk.bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((blk.bk, blk.bm), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((blk.bn, blk.bm), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        scratch_shapes=[scratch((blk.bn, blk.bm))],
+        interpret=INTERPRET,
+    )(x, w)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable masked linear built from the kernels above: the pruned-layer
+# forward used everywhere a frozen-sparse weight appears.
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def masked_matmul(x, w, mask):
+    """y = x @ (W*M)^T with pallas fwd and bwd."""
+    return mm_nt(x, w * mask)
+
+
+def _masked_matmul_fwd(x, w, mask):
+    return mm_nt(x, w * mask), (x, w, mask)
+
+
+def _masked_matmul_bwd(res, g):
+    x, w, mask = res
+    weff = w * mask
+    dx = mm_nn(g, weff)
+    # dW = (g^T @ x) ⊙ M — contraction expressed through mm_nt on transposes.
+    dw = mm_nt(g.T, x.T) * mask
+    return dx, dw, None
+
+
+masked_matmul.defvjp(_masked_matmul_fwd, _masked_matmul_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable dense matmul (used for the never-pruned head and the classic
+# LoRA low-rank path, where grads flow to both operands).
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def dmm_nt(x, w):
+    """Differentiable y = x @ W^T, pallas fwd and bwd."""
+    return mm_nt(x, w)
+
+
+def _dmm_nt_fwd(x, w):
+    return mm_nt(x, w), (x, w)
+
+
+def _dmm_nt_bwd(res, g):
+    x, w = res
+    return mm_nn(g, w), mm_nt(g.T, x.T)
+
+
+dmm_nt.defvjp(_dmm_nt_fwd, _dmm_nt_bwd)

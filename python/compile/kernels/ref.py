@@ -1,0 +1,191 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: each kernel's pytest suite sweeps
+shapes/dtypes with hypothesis and asserts allclose against the function here.
+They are also the semantic specification the rust-side property tests mirror
+(rust/src/pruning, rust/src/peft re-implement the mask/merge algebra on host
+tensors and are tested against fixtures generated from these definitions).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Linear / LoRA forwards.  Weight convention: W has shape (out, in); the
+# layer computes y = x @ W^T (+ bias handled by the caller).
+# ---------------------------------------------------------------------------
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """y = x @ W^T for x:(n,k), w:(m,k) -> (n,m)."""
+    return x @ w.T
+
+
+def masked_matmul(x: jax.Array, w: jax.Array, mask: jax.Array) -> jax.Array:
+    """y = x @ (W*M)^T — the pruned-linear forward."""
+    return x @ (w * mask).T
+
+
+def lora_matmul(x, w, a, b, scale):
+    """Standard LoRA: y = x @ W^T + scale * (x @ A^T) @ B^T.
+
+    a: (r, in), b: (out, r). Exploits associativity — BA never materialised.
+    """
+    return x @ w.T + scale * ((x @ a.T) @ b.T)
+
+
+def masked_lora_matmul(x, w, mask, a, b, scale):
+    """MaskLoRA (PERP §3.2): y = x @ (W*M + M ⊙ (scale·B@A))^T.
+
+    The Hadamard with M forces the adapter update to respect the sparsity
+    pattern, which is what makes the merge W <- W*M + M⊙(s·BA) lossless.
+    """
+    z = w * mask + mask * (scale * (b @ a))
+    return x @ z.T
+
+
+def scale_lora_matmul(x, w, mask, a, b):
+    """ScaleLoRA (PERP §3.2): y = x @ ((B@A) ⊙ (W*M))^T.
+
+    Multiplicative adapters: zeros of W*M stay zero under the merge
+    W <- (BA) ⊙ (W*M).  B,A are ones/sqrt(r)-initialised so BA == 1 at start.
+    """
+    z = (b @ a) * (w * mask)
+    return x @ z.T
+
+
+def masklora_merge(w, mask, a, b, scale):
+    """Merged weight after MaskLoRA retraining."""
+    return w * mask + mask * (scale * (b @ a))
+
+
+def scalelora_merge(w, mask, a, b):
+    """Merged weight after ScaleLoRA retraining."""
+    return (b @ a) * (w * mask)
+
+
+def lora_prune_merge(w, mask, a, b, scale):
+    """LoRA-Prune: train unmasked LoRA, then apply the mask at merge time.
+
+    This is the paper's strawman — re-pruning BA disrupts the model."""
+    return (w + scale * (b @ a)) * mask
+
+
+# ---------------------------------------------------------------------------
+# Attention.
+# ---------------------------------------------------------------------------
+
+def attention(q, k, v, causal: bool = True):
+    """softmax(q k^T / sqrt(dh)) v per (batch, head).
+
+    q,k,v: (B, H, S, dh).  Causal mask applied when ``causal``.
+    """
+    *_, s, dh = q.shape
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    if causal:
+        idx = jnp.arange(s)
+        causal_mask = idx[:, None] >= idx[None, :]
+        scores = jnp.where(causal_mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# Normalisation.
+# ---------------------------------------------------------------------------
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def rmsnorm(x, scale, eps: float = 1e-5):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x / jnp.sqrt(ms + eps) * scale
+
+
+# ---------------------------------------------------------------------------
+# Optimizer.
+# ---------------------------------------------------------------------------
+
+def adamw(p, g, m, v, step, lr, beta1=0.9, beta2=0.999, eps=1e-8, wd=0.0):
+    """One AdamW step (decoupled weight decay).  ``step`` is 1-based."""
+    m2 = beta1 * m + (1.0 - beta1) * g
+    v2 = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m2 / (1.0 - beta1**step)
+    vhat = v2 / (1.0 - beta2**step)
+    p2 = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    return p2, m2, v2
+
+
+# ---------------------------------------------------------------------------
+# Pruning criteria (mask generation).
+# ---------------------------------------------------------------------------
+
+def magnitude_mask(w, sparsity: float):
+    """Uniform per-tensor magnitude mask: zero the ``sparsity`` fraction of
+    smallest-|w| entries.  Ties broken by flat index (matches rust impl)."""
+    flat = jnp.abs(w).ravel()
+    k = int(round(sparsity * flat.size))
+    if k == 0:
+        return jnp.ones_like(w)
+    # kth smallest magnitude is the threshold; strictly-below is pruned,
+    # ties at the threshold pruned by ascending flat index.
+    order = jnp.argsort(flat, stable=True)
+    mask = jnp.ones_like(flat)
+    mask = mask.at[order[:k]].set(0.0)
+    return mask.reshape(w.shape)
+
+
+def semistructured_mask(w, n: int, m: int):
+    """N:M mask along the input dim: in every group of ``m`` consecutive
+    inputs keep the ``n`` largest |w|."""
+    out, inp = w.shape
+    assert inp % m == 0, (inp, m)
+    groups = jnp.abs(w).reshape(out, inp // m, m)
+    # rank within each group, descending magnitude; keep rank < n
+    order = jnp.argsort(-groups, axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    mask = (ranks < n).astype(w.dtype)
+    return mask.reshape(out, inp)
+
+
+def wanda_scores(w, x_norm):
+    """Wanda score S_ij = |W_ij| * ||X_j||_2 (Sun et al. 2023).
+
+    x_norm: (in,) — L2 norms of each input feature over the calibration set.
+    """
+    return jnp.abs(w) * x_norm[None, :]
+
+
+def wanda_mask(w, x_norm, sparsity: float):
+    """Per-output-row Wanda mask (comparison group = row, as in the paper)."""
+    s = wanda_scores(w, x_norm)
+    out, inp = w.shape
+    k = int(round(sparsity * inp))
+    if k == 0:
+        return jnp.ones_like(w)
+    order = jnp.argsort(s, axis=1, stable=True)
+    ranks = jnp.argsort(order, axis=1, stable=True)
+    return (ranks >= k).astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Layer-wise reconstruction (PERP Eq. 1).
+# ---------------------------------------------------------------------------
+
+def reconstruction_loss(w0, w_hat, mask, x):
+    """|| W0 X - (M ⊙ W_hat) X ||_F^2 / n  with X given row-major (n, in)."""
+    y0 = x @ w0.T
+    y1 = x @ (mask * w_hat).T
+    return jnp.mean(jnp.square(y0 - y1)) * y0.shape[-1]
+
+
+def masklora_reconstruction_loss(w0, w, mask, a, b, scale, x):
+    """Eq. 1 with W_hat reparametrised through MaskLoRA adapters."""
+    y0 = x @ w0.T
+    y1 = masked_lora_matmul(x, w, mask, a, b, scale)
+    return jnp.mean(jnp.square(y0 - y1)) * y0.shape[-1]

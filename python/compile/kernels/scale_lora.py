@@ -1,0 +1,141 @@
+"""ScaleLoRA fused forward/backward Pallas kernels (PERP §3.2).
+
+Multiplicative adapters: ``y = x @ ((B@A) ⊙ (W*M))^T``.  Zeros of the pruned
+weight stay zero under the eventual merge ``W <- (BA) ⊙ (W*M)``, so sparsity
+is preserved without re-masking.  B and A are ones/sqrt(r)-initialised so that
+``BA == 1`` (identity rescale) before retraining.
+
+Tile structure mirrors masked_lora.py: per (bm, bk) weight tile the rank-r
+product ``B_tile @ A_tile`` is built in VMEM and Hadamard-combined with the
+masked weight tile before the main contraction.
+
+Backward (Z = (BA) ⊙ Weff, Weff = W*M):
+
+    dx  = g @ Z
+    dZ  = g^T @ x
+    dA  = B^T @ (dZ ⊙ Weff)        dB = (dZ ⊙ Weff) @ A^T
+    dW  = dZ ⊙ (BA) ⊙ M            (for the full-FT reconstruction baseline)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, MatmulBlocks, cdiv, scratch
+from .matmul import mm_nn, mm_nt
+
+
+def _fused_tile(w, m, a, b):
+    ba = jnp.dot(b, a, preferred_element_type=jnp.float32)
+    return ba.astype(w.dtype) * (w * m)
+
+
+def _fwd_kernel(x_ref, w_ref, m_ref, a_ref, b_ref, o_ref, acc_ref, *, nk):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    z = _fused_tile(w_ref[...], m_ref[...], a_ref[...], b_ref[...])
+    acc_ref[...] += jnp.dot(x_ref[...], z.T, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def scale_lora_matmul_fwd_kernel(x, w, mask, a, b):
+    """Raw fused forward: x:(n,k), w/mask:(m,k), a:(r,k), b:(m,r) -> (n,m)."""
+    n, k = x.shape
+    m, _ = w.shape
+    r = a.shape[0]
+    blk = MatmulBlocks.choose(n, m, k)
+    nk = cdiv(k, blk.bk)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, nk=nk),
+        grid=(cdiv(n, blk.bn), cdiv(m, blk.bm), nk),
+        in_specs=[
+            pl.BlockSpec((blk.bn, blk.bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((blk.bm, blk.bk), lambda i, j, l: (j, l)),
+            pl.BlockSpec((blk.bm, blk.bk), lambda i, j, l: (j, l)),
+            pl.BlockSpec((r, blk.bk), lambda i, j, l: (0, l)),
+            pl.BlockSpec((blk.bm, r), lambda i, j, l: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk.bn, blk.bm), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        scratch_shapes=[scratch((blk.bn, blk.bm))],
+        interpret=INTERPRET,
+    )(x, w, mask, a, b)
+
+
+def _bwd_dx_kernel(g_ref, w_ref, m_ref, a_ref, b_ref, o_ref, acc_ref, *, nm):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    z = _fused_tile(w_ref[...], m_ref[...], a_ref[...], b_ref[...])
+    acc_ref[...] += jnp.dot(g_ref[...], z, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nm - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def scale_lora_matmul_bwd_dx_kernel(g, w, mask, a, b):
+    n, m = g.shape
+    _, k = w.shape
+    r = a.shape[0]
+    blk = MatmulBlocks.choose(n, k, m)
+    nm = cdiv(m, blk.bk)
+    return pl.pallas_call(
+        functools.partial(_bwd_dx_kernel, nm=nm),
+        grid=(cdiv(n, blk.bn), cdiv(k, blk.bm), nm),
+        in_specs=[
+            pl.BlockSpec((blk.bn, blk.bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((blk.bk, blk.bm), lambda i, j, l: (l, j)),
+            pl.BlockSpec((blk.bk, blk.bm), lambda i, j, l: (l, j)),
+            pl.BlockSpec((r, blk.bm), lambda i, j, l: (0, j)),
+            pl.BlockSpec((blk.bk, r), lambda i, j, l: (l, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk.bn, blk.bm), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, k), g.dtype),
+        scratch_shapes=[scratch((blk.bn, blk.bm))],
+        interpret=INTERPRET,
+    )(g, w, mask, a, b)
+
+
+@jax.custom_vjp
+def scale_lora_matmul(x, w, mask, a, b):
+    """y = x @ ((B@A) ⊙ (W*M))^T — fused pallas fwd + bwd."""
+    return scale_lora_matmul_fwd_kernel(x, w, mask, a, b)
+
+
+def _slm_fwd(x, w, mask, a, b):
+    return scale_lora_matmul_fwd_kernel(x, w, mask, a, b), (x, w, mask, a, b)
+
+
+def _slm_bwd(res, g):
+    x, w, mask, a, b = res
+    weff = w * mask
+    dx = scale_lora_matmul_bwd_dx_kernel(g, w, mask, a, b)
+    dz = mm_nt(g.T, x.T)
+    dzw = dz * weff
+    da = mm_nn(b.T, dzw)
+    db = mm_nt(dzw, a)
+    dw = dz * mm_nn(b, a) * mask
+    return dx, dw, None, da, db
+
+
+scale_lora_matmul.defvjp(_slm_fwd, _slm_bwd)
+
+
+def scale_lora_init(out_dim: int, in_dim: int, rank: int, dtype=jnp.float32):
+    """B = 1/sqrt(r) (out, r), A = 1/sqrt(r) (r, in)  =>  BA == ones."""
+    inv = 1.0 / jnp.sqrt(jnp.float32(rank))
+    return (
+        jnp.full((rank, in_dim), inv, dtype),
+        jnp.full((out_dim, rank), inv, dtype),
+    )

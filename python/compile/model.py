@@ -1,0 +1,385 @@
+"""L2: the GPT model family, loss, scoring and per-PEFT-mode train steps.
+
+Build-time only — this module is lowered once by aot.py into HLO-text
+artifacts; Python never runs on the request path.  The rust coordinator owns
+parameters/optimizer state between step calls and feeds them back in.
+
+Architecture: pre-LN GPT (OPT-style) with learned positional embeddings,
+GELU MLP, biases on every linear, untied head — or the LLaMA-style variant
+(RMSNorm, no biases) via ``use_bias=False, norm="rmsnorm"``.  The distinction
+is load-bearing in the paper: its "Biases" retraining subset does not exist
+for LLaMA-2 (Table 8).
+
+Pruning scope follows Sun et al. (2023)/PERP exactly: all linear layers of
+every transformer block (q, k, v, o, fc, proj) are maskable; embeddings and
+the final head are never pruned.
+
+All dense/sparse/LoRA contractions route through the L1 Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    adamw_update,
+    attention,
+    layernorm,
+    masked_lora_matmul,
+    masked_matmul,
+    dmm_nt,
+    rmsnorm,
+    scale_lora_matmul,
+)
+
+# ---------------------------------------------------------------------------
+# Configs.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture + retraining hyperparameters for one model."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    use_bias: bool = True          # OPT-style; False => LLaMA-style
+    norm: str = "layernorm"        # "layernorm" | "rmsnorm"
+    lora_rank: int = 16
+    lora_alpha: float = 32.0
+    train_batch: int = 8           # static batch of the train-step artifacts
+    eval_batch: int = 8            # static batch of eval/score artifacts
+    calib_rows: int = 512          # rows per layer-wise reconstruction chunk
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def lora_scale(self) -> float:
+        return self.lora_alpha / self.lora_rank
+
+
+# The repro fleet.  The paper's 1.3B -> 30B axis maps onto tiny -> medium:
+# what is checked is *relative* behaviour (collapse, recovery, trainable-%).
+CONFIGS = {
+    "gpt-nano": ModelConfig("gpt-nano", vocab=128, d_model=32, n_layers=2,
+                            n_heads=2, seq_len=32, lora_rank=4,
+                            train_batch=4, eval_batch=4, calib_rows=128),
+    "gpt-tiny": ModelConfig("gpt-tiny", vocab=256, d_model=64, n_layers=2,
+                            n_heads=2, seq_len=64, lora_rank=8,
+                            train_batch=8, eval_batch=8, calib_rows=256),
+    "gpt-small": ModelConfig("gpt-small", vocab=512, d_model=128, n_layers=4,
+                             n_heads=4, seq_len=128, lora_rank=16),
+    "gpt-medium": ModelConfig("gpt-medium", vocab=1024, d_model=256,
+                              n_layers=6, n_heads=8, seq_len=128, lora_rank=16),
+    "llama-tiny": ModelConfig("llama-tiny", vocab=512, d_model=128, n_layers=4,
+                              n_heads=4, seq_len=128, use_bias=False,
+                              norm="rmsnorm", lora_rank=16),
+    # end-to-end example scale (examples/prune_retrain_e2e.rs)
+    "gpt-e2e": ModelConfig("gpt-e2e", vocab=2048, d_model=384, n_layers=6,
+                           n_heads=8, seq_len=128, lora_rank=16,
+                           train_batch=8, eval_batch=8),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs: the single source of truth for names, shapes and ordering.
+# The rust ParamStore mirrors this list (via the manifest) byte-for-byte.
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...], str]]:
+    """(name, shape, group) for every parameter, in canonical order.
+
+    Groups: embed | ln | bias | weight | head — PERP's retraining subsets.
+    """
+    specs: list[tuple[str, tuple[int, ...], str]] = [
+        ("embed_tokens", (cfg.vocab, cfg.d_model), "embed"),
+        ("embed_pos", (cfg.seq_len, cfg.d_model), "embed"),
+    ]
+    d, ff = cfg.d_model, cfg.d_ff
+    for i in range(cfg.n_layers):
+        p = f"h{i}_"
+        specs.append((p + "ln1_scale", (d,), "ln"))
+        if cfg.norm == "layernorm":
+            specs.append((p + "ln1_bias", (d,), "ln"))
+        for lin in ("attn_q", "attn_k", "attn_v", "attn_o"):
+            specs.append((p + lin + "_w", (d, d), "weight"))
+            if cfg.use_bias:
+                specs.append((p + lin + "_b", (d,), "bias"))
+        specs.append((p + "ln2_scale", (d,), "ln"))
+        if cfg.norm == "layernorm":
+            specs.append((p + "ln2_bias", (d,), "ln"))
+        specs.append((p + "mlp_fc_w", (ff, d), "weight"))
+        if cfg.use_bias:
+            specs.append((p + "mlp_fc_b", (ff,), "bias"))
+        specs.append((p + "mlp_proj_w", (d, ff), "weight"))
+        if cfg.use_bias:
+            specs.append((p + "mlp_proj_b", (d,), "bias"))
+    specs.append(("final_ln_scale", (d,), "ln"))
+    if cfg.norm == "layernorm":
+        specs.append(("final_ln_bias", (d,), "ln"))
+    specs.append(("head_w", (cfg.vocab, cfg.d_model), "head"))
+    return specs
+
+
+def tap_names(cfg: ModelConfig) -> list[str]:
+    """Distinct capture points, in forward order.  q/k/v consume the same
+    activation, so one tap (named after attn_q) covers all three."""
+    out = []
+    for i in range(cfg.n_layers):
+        p = f"h{i}_"
+        out += [p + "attn_q_w", p + "attn_o_w", p + "mlp_fc_w", p + "mlp_proj_w"]
+    return out
+
+
+def tap_of(name: str) -> str:
+    """Map a prunable linear to the tap that carries its input."""
+    return name.replace("attn_k", "attn_q").replace("attn_v", "attn_q")
+
+
+def prunable_names(cfg: ModelConfig) -> list[str]:
+    """The maskable linears, in canonical order (matches mask ordering)."""
+    return [n for n, _, g in param_specs(cfg) if g == "weight"]
+
+
+def param_order(cfg: ModelConfig) -> list[str]:
+    return [n for n, _, _ in param_specs(cfg)]
+
+
+def adapter_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """LoRA adapter tensors, one (A, B) pair per prunable linear.
+
+    A: (r, in) — named ``<linear>::A``;  B: (out, r) — named ``<linear>::B``.
+    """
+    shapes = dict((n, s) for n, s, _ in param_specs(cfg))
+    out = []
+    for n in prunable_names(cfg):
+        o, i = shapes[n]
+        out.append((n + "::A", (cfg.lora_rank, i)))
+        out.append((n + "::B", (o, cfg.lora_rank)))
+    return out
+
+
+# Trainable-subset predicates, keyed by retraining mode (PERP §3.1/§3.2).
+# LoRA modes additionally train biases + LN (paper: "further also retrain
+# biases and LN-parameters").
+SUBSET_MODES = {
+    "full": lambda g: True,
+    "biases": lambda g: g == "bias",
+    "ln": lambda g: g == "ln",
+    "biases_ln": lambda g: g in ("bias", "ln"),
+    "head": lambda g: g == "head",
+    "embed": lambda g: g == "embed",
+}
+LORA_MODES = ("lora", "masklora", "masklora_std", "scalelora")
+ALL_MODES = tuple(SUBSET_MODES) + LORA_MODES
+
+
+def trainable_names(cfg: ModelConfig, mode: str) -> list[str]:
+    """Model parameters (not adapters) trained under ``mode``."""
+    if mode in SUBSET_MODES:
+        pred = SUBSET_MODES[mode]
+        return [n for n, _, g in param_specs(cfg) if pred(g)]
+    if mode in LORA_MODES:
+        return [n for n, _, g in param_specs(cfg) if g in ("bias", "ln")]
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Forward pass.
+# ---------------------------------------------------------------------------
+
+
+def _norm(cfg: ModelConfig, params, prefix: str, x2d):
+    if cfg.norm == "layernorm":
+        return layernorm(x2d, params[prefix + "_scale"], params[prefix + "_bias"])
+    return rmsnorm(x2d, params[prefix + "_scale"])
+
+
+def _linear(cfg: ModelConfig, params, masks, adapters, mode, name, x2d):
+    """Dispatch a (possibly pruned / adapted) linear by retraining mode.
+
+    x2d: (N, in) — callers flatten (B, S) first.  Weight (out, in).
+    """
+    w = params[name + "_w"]
+    m = masks[name + "_w"]
+    if mode in SUBSET_MODES or adapters is None:
+        y = masked_matmul(x2d, w, m)
+    elif mode == "lora":
+        a, b = adapters[name + "_w::A"], adapters[name + "_w::B"]
+        # classic LoRA keeps W frozen-sparse and adds the (unmasked) low-rank
+        # path, exploiting associativity: (x A^T) B^T — BA never materialised.
+        y = masked_matmul(x2d, w, m) + cfg.lora_scale * dmm_nt(dmm_nt(x2d, a), b)
+    elif mode == "masklora":
+        a, b = adapters[name + "_w::A"], adapters[name + "_w::B"]
+        y = masked_lora_matmul(x2d, w, m, a, b, cfg.lora_scale)
+    elif mode == "masklora_std":
+        # the paper's *unoptimized* MaskLoRA: materialise BA at (out, in),
+        # mask it, add to W, then a plain GEMM.  Kept as the Table 4
+        # "MaskLoRA (standard)" throughput baseline.
+        a, b = adapters[name + "_w::A"], adapters[name + "_w::B"]
+        z = w * m + m * (cfg.lora_scale * (b @ a))
+        y = dmm_nt(x2d, z)
+    elif mode == "scalelora":
+        a, b = adapters[name + "_w::A"], adapters[name + "_w::B"]
+        y = scale_lora_matmul(x2d, w, m, a, b)
+    else:
+        raise ValueError(mode)
+    if cfg.use_bias:
+        y = y + params[name + "_b"][None, :]
+    return y
+
+
+def forward(cfg: ModelConfig, params, masks, tokens, adapters=None,
+            mode: str = "full", capture: list | None = None):
+    """Token ids (B, S) -> logits (B, S, V).
+
+    ``capture``, when a list, receives (linear_name, x2d) pairs for every
+    prunable linear — the tap used by the calibration/reconstruction path.
+    """
+    bsz, s = tokens.shape
+    d = cfg.d_model
+    x = params["embed_tokens"][tokens] + params["embed_pos"][None, :s, :]
+
+    def tap(name, x2d):
+        if capture is not None:
+            capture.append((name + "_w", x2d))
+
+    for i in range(cfg.n_layers):
+        p = f"h{i}_"
+        h = _norm(cfg, params, p + "ln1", x.reshape(bsz * s, d))
+        tap(p + "attn_q", h)
+        q = _linear(cfg, params, masks, adapters, mode, p + "attn_q", h)
+        k = _linear(cfg, params, masks, adapters, mode, p + "attn_k", h)
+        v = _linear(cfg, params, masks, adapters, mode, p + "attn_v", h)
+
+        def heads(t):
+            return t.reshape(bsz, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+        o = attention(heads(q), heads(k), heads(v), True)
+        o = o.transpose(0, 2, 1, 3).reshape(bsz * s, d)
+        tap(p + "attn_o", o)
+        o = _linear(cfg, params, masks, adapters, mode, p + "attn_o", o)
+        x = x + o.reshape(bsz, s, d)
+
+        h = _norm(cfg, params, p + "ln2", x.reshape(bsz * s, d))
+        tap(p + "mlp_fc", h)
+        f = _linear(cfg, params, masks, adapters, mode, p + "mlp_fc", h)
+        f = jax.nn.gelu(f)
+        tap(p + "mlp_proj", f)
+        f = _linear(cfg, params, masks, adapters, mode, p + "mlp_proj", f)
+        x = x + f.reshape(bsz, s, d)
+
+    h = _norm(cfg, params, "final_ln", x.reshape(bsz * s, d))
+    logits = dmm_nt(h, params["head_w"])  # head never pruned
+    return logits.reshape(bsz, s, cfg.vocab)
+
+
+# ---------------------------------------------------------------------------
+# Losses / scoring.
+# ---------------------------------------------------------------------------
+
+
+def lm_loss_sums(logits, tokens):
+    """Next-token CE.  Returns (loss_sum, token_count) so the caller can
+    aggregate exact perplexity across batches."""
+    tgt = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll), jnp.float32(tgt.size)
+
+
+def lm_loss_mean(logits, tokens):
+    s, c = lm_loss_sums(logits, tokens)
+    return s / c
+
+
+def sequence_scores(logits, tokens, tmask):
+    """Per-sequence sum log-prob of the tokens where tmask==1 (EleutherAI-
+    style likelihood ranking).  tmask marks *target* positions; the token at
+    position t is scored with the logits at t-1."""
+    lp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    tm = tmask[:, 1:]
+    tok_lp = jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(tok_lp * tm, axis=1), jnp.sum(tm, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Train steps (one jitted function per retraining mode).
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, mode: str) -> Callable:
+    """Returns step(trainable, frozen, masks, adapters, m, v, tokens, step_i, lr)
+    -> (new_trainable_and_adapters, new_m, new_v, loss).
+
+    ``trainable``/``adapters`` are dicts; AdamW state dicts ``m, v`` are keyed
+    identically to the trainables.  Frozen params receive no gradient and no
+    optimizer state — that asymmetry IS the paper's memory argument.
+    """
+    assert mode in ALL_MODES, mode
+    is_lora = mode in LORA_MODES
+
+    def step(trainable, frozen, masks, adapters, m, v, tokens, step_i, lr):
+        def loss_fn(train_leaves):
+            params = dict(frozen)
+            ad = None
+            if is_lora:
+                ad = {k: train_leaves[k] for k in adapters}
+            for k in trainable:
+                params[k] = train_leaves[k]
+            logits = forward(cfg, params, masks, tokens, adapters=ad, mode=mode)
+            return lm_loss_mean(logits, tokens)
+
+        leaves = dict(trainable)
+        if is_lora:
+            leaves.update(adapters)
+        loss, grads = jax.value_and_grad(loss_fn)(leaves)
+        new_leaves, new_m, new_v = {}, {}, {}
+        for k, p in leaves.items():
+            new_leaves[k], new_m[k], new_v[k] = adamw_update(
+                p, grads[k], m[k], v[k], step_i, lr
+            )
+        return new_leaves, new_m, new_v, loss
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Calibration statistics (feeds rust-side Wanda + SparseGPT).
+# ---------------------------------------------------------------------------
+
+
+def calib_stats(cfg: ModelConfig, params, masks, tokens):
+    """Per-prunable-linear Gram matrices G = X^T X over this batch.
+
+    Wanda consumes sqrt(diag(G)); SparseGPT consumes the full G (Hessian
+    H = 2 G + λI up to scaling).  Accumulation across batches happens in rust.
+    """
+    capture: list = []
+    forward(cfg, params, masks, tokens, mode="full", capture=capture)
+    return [(name, x.T @ x) for name, x in capture]
+
+
+def capture_layer_inputs(cfg: ModelConfig, params, masks, tokens):
+    """The raw inputs X (N, in) of every prunable linear for this batch —
+    consumed by the layer-wise reconstruction scheduler."""
+    capture: list = []
+    forward(cfg, params, masks, tokens, mode="full", capture=capture)
+    return capture

@@ -1,0 +1,78 @@
+"""L2: layer-wise reconstruction graphs (PERP §3.3, Eq. 1).
+
+For a linear with original weights W0, mask M and calibration inputs X, the
+reconstruction problem is
+
+    min_{Ŵ} ‖ W0 X − (M ⊙ Ŵ) X ‖²   .
+
+Two parametrisations, per the paper:
+
+* **MaskLoRA** (memory-efficient): Ŵ = W + s·B@A with only (A, B) trained —
+  the optimizer state is ~0.35% of the layer.
+* **Full-FT** (Table 19 baseline): Ŵ = W trained directly with masked grads —
+  the paper shows this *overfits the calibration set* at high sparsity.
+
+Both steps take the precomputed dense targets Y0 = X @ W0^T (produced once by
+the ``linear_fwd`` executable) so the frozen GEMM is not re-run every
+iteration.  One executable per distinct (out, in) shape is AOT-compiled.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import adamw_update, masked_lora_matmul, masked_matmul, mm_nt
+
+
+def linear_fwd(x, w):
+    """Y0 = X @ W^T — the dense reconstruction target."""
+    return mm_nt(x, w)
+
+
+def recon_loss_masklora(x, y0, w, mask, a, b, scale):
+    """Mean-squared reconstruction error of the MaskLoRA-reparametrised layer.
+
+    Scaled by out-dim so magnitudes match the Frobenius form of Eq. 1 per row.
+    """
+    y = masked_lora_matmul(x, w, mask, a, b, scale)
+    return jnp.mean(jnp.square(y - y0)) * y.shape[-1]
+
+
+def recon_loss_full(x, y0, w, mask):
+    y = masked_matmul(x, w, mask)
+    return jnp.mean(jnp.square(y - y0)) * y.shape[-1]
+
+
+def make_recon_step_masklora(scale: float):
+    """step(x, y0, w, mask, a, b, ma, va, mb, vb, step_i, lr)
+    -> (a', b', ma', va', mb', vb', loss)."""
+
+    def step(x, y0, w, mask, a, b, ma, va, mb, vb, step_i, lr):
+        def loss_fn(ab):
+            return recon_loss_masklora(x, y0, w, mask, ab[0], ab[1], scale)
+
+        loss, (ga, gb) = jax.value_and_grad(loss_fn)((a, b))
+        a2, ma2, va2 = adamw_update(a, ga, ma, va, step_i, lr)
+        b2, mb2, vb2 = adamw_update(b, gb, mb, vb, step_i, lr)
+        return a2, b2, ma2, va2, mb2, vb2, loss
+
+    return step
+
+
+def make_recon_step_full():
+    """step(x, y0, w, mask, mw, vw, step_i, lr) -> (w', mw', vw', loss).
+
+    Gradients are masked automatically through masked_matmul's VJP, so pruned
+    entries stay exactly zero during optimisation (footnote 1 of the paper).
+    """
+
+    def step(x, y0, w, mask, mw, vw, step_i, lr):
+        def loss_fn(w_):
+            return recon_loss_full(x, y0, w_, mask)
+
+        loss, gw = jax.value_and_grad(loss_fn)(w)
+        w2, mw2, vw2 = adamw_update(w, gw, mw, vw, step_i, lr)
+        return w2, mw2, vw2, loss
+
+    return step

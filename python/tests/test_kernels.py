@@ -1,0 +1,351 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the mask density / rank / scale axes); each
+property asserts allclose against compile.kernels.ref.  Gradients are checked
+through jax.grad on a nonlinear scalarisation (sin-sum) so wrong transposes
+cannot cancel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    adamw_update,
+    attention,
+    layernorm,
+    magnitude_threshold_mask,
+    masked_lora_matmul,
+    masked_matmul,
+    mm_nn,
+    mm_nt,
+    nm_mask,
+    ref,
+    rmsnorm,
+    scale_lora_init,
+    scale_lora_matmul,
+    wanda_score,
+)
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rng_for(*dims):
+    return np.random.default_rng(hash(dims) % (2**32))
+
+
+dims = st.sampled_from([8, 16, 24, 32, 48, 64, 96, 128])
+small_dims = st.sampled_from([8, 16, 32, 64])
+ranks = st.sampled_from([1, 2, 4, 8, 16])
+sparsities = st.sampled_from([0.0, 0.3, 0.5, 0.7, 0.95])
+
+
+def allclose(a, b, atol=2e-4, rtol=2e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# Dense matmuls.
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(n=dims, m=dims, k=dims)
+def test_mm_nt(n, m, k):
+    r = rng_for(n, m, k)
+    x = r.standard_normal((n, k), dtype=np.float32)
+    w = r.standard_normal((m, k), dtype=np.float32)
+    allclose(mm_nt(x, w), x @ w.T, atol=1e-3, rtol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(n=dims, m=dims, k=dims)
+def test_mm_nn(n, m, k):
+    r = rng_for(n, m, k)
+    x = r.standard_normal((n, k), dtype=np.float32)
+    w = r.standard_normal((k, m), dtype=np.float32)
+    allclose(mm_nn(x, w), x @ w, atol=1e-3, rtol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(n=small_dims, m=small_dims, k=small_dims, sp=sparsities)
+def test_masked_matmul_fwd_bwd(n, m, k, sp):
+    r = rng_for(n, m, k, int(sp * 100))
+    x = r.standard_normal((n, k), dtype=np.float32)
+    w = r.standard_normal((m, k), dtype=np.float32)
+    mask = (r.random((m, k)) >= sp).astype(np.float32)
+    allclose(masked_matmul(x, w, mask), ref.masked_matmul(x, w, mask), atol=1e-3, rtol=1e-3)
+    g = jax.grad(lambda x, w: jnp.sum(jnp.sin(masked_matmul(x, w, mask))), (0, 1))(x, w)
+    gr = jax.grad(lambda x, w: jnp.sum(jnp.sin(ref.masked_matmul(x, w, mask))), (0, 1))(x, w)
+    for a, b in zip(g, gr):
+        allclose(a, b, atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# MaskLoRA / ScaleLoRA fused kernels.
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(n=small_dims, m=small_dims, k=small_dims, r=ranks, sp=sparsities)
+def test_masked_lora_fwd_bwd(n, m, k, r, sp):
+    g = rng_for(n, m, k, r, int(sp * 100))
+    x = g.standard_normal((n, k), dtype=np.float32)
+    w = g.standard_normal((m, k), dtype=np.float32)
+    mask = (g.random((m, k)) >= sp).astype(np.float32)
+    a = g.standard_normal((r, k), dtype=np.float32) * 0.2
+    b = g.standard_normal((m, r), dtype=np.float32) * 0.2
+    s = 2.0
+    allclose(
+        masked_lora_matmul(x, w, mask, a, b, s),
+        ref.masked_lora_matmul(x, w, mask, a, b, s),
+        atol=1e-3, rtol=1e-3,
+    )
+    gk = jax.grad(lambda *t: jnp.sum(jnp.sin(masked_lora_matmul(*t, s))), (0, 1, 3, 4))(
+        x, w, mask, a, b
+    )
+    gref = jax.grad(lambda *t: jnp.sum(jnp.sin(ref.masked_lora_matmul(*t, s))), (0, 1, 3, 4))(
+        x, w, mask, a, b
+    )
+    for gi, gri in zip(gk, gref):
+        allclose(gi, gri, atol=2e-3, rtol=2e-3)
+
+
+def test_masked_lora_zero_init_is_identity():
+    """B = 0 ⇒ MaskLoRA forward equals the plain pruned forward (paper init)."""
+    g = rng_for(7)
+    x = g.standard_normal((16, 32), dtype=np.float32)
+    w = g.standard_normal((24, 32), dtype=np.float32)
+    mask = (g.random((24, 32)) >= 0.5).astype(np.float32)
+    a = g.standard_normal((4, 32), dtype=np.float32)
+    b = np.zeros((24, 4), dtype=np.float32)
+    allclose(masked_lora_matmul(x, w, mask, a, b, 2.0), ref.masked_matmul(x, w, mask),
+             atol=1e-4, rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(n=small_dims, m=small_dims, k=small_dims, r=ranks, sp=sparsities)
+def test_scale_lora_fwd_bwd(n, m, k, r, sp):
+    g = rng_for(n, m, k, r, int(sp * 10))
+    x = g.standard_normal((n, k), dtype=np.float32)
+    w = g.standard_normal((m, k), dtype=np.float32)
+    mask = (g.random((m, k)) >= sp).astype(np.float32)
+    a, b = scale_lora_init(m, k, r)
+    a = np.asarray(a) + g.standard_normal((r, k), dtype=np.float32) * 0.05
+    b = np.asarray(b) + g.standard_normal((m, r), dtype=np.float32) * 0.05
+    allclose(
+        scale_lora_matmul(x, w, mask, a, b),
+        ref.scale_lora_matmul(x, w, mask, a, b),
+        atol=1e-3, rtol=1e-3,
+    )
+    gk = jax.grad(lambda *t: jnp.sum(jnp.sin(scale_lora_matmul(*t))), (0, 1, 3, 4))(
+        x, w, mask, a, b
+    )
+    gref = jax.grad(lambda *t: jnp.sum(jnp.sin(ref.scale_lora_matmul(*t))), (0, 1, 3, 4))(
+        x, w, mask, a, b
+    )
+    for gi, gri in zip(gk, gref):
+        allclose(gi, gri, atol=2e-3, rtol=2e-3)
+
+
+def test_scale_lora_init_is_identity():
+    """ones/sqrt(r) init ⇒ BA == 1 ⇒ forward equals plain pruned forward."""
+    g = rng_for(11)
+    x = g.standard_normal((16, 32), dtype=np.float32)
+    w = g.standard_normal((24, 32), dtype=np.float32)
+    mask = (g.random((24, 32)) >= 0.5).astype(np.float32)
+    a, b = scale_lora_init(24, 32, 16)
+    allclose(scale_lora_matmul(x, w, mask, a, b), ref.masked_matmul(x, w, mask),
+             atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Merge semantics: the sparsity-preservation invariants of PERP §3.2.
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(m=small_dims, k=small_dims, r=ranks, sp=sparsities)
+def test_merges_preserve_sparsity(m, k, r, sp):
+    g = rng_for(m, k, r, int(sp * 100), 3)
+    w = g.standard_normal((m, k), dtype=np.float32)
+    mask = (g.random((m, k)) >= sp).astype(np.float32)
+    a = g.standard_normal((r, k), dtype=np.float32)
+    b = g.standard_normal((m, r), dtype=np.float32)
+    for merged in (
+        ref.masklora_merge(w, mask, a, b, 2.0),
+        ref.scalelora_merge(w, mask, a, b),
+        ref.lora_prune_merge(w, mask, a, b, 2.0),
+    ):
+        assert np.all(np.asarray(merged)[np.asarray(mask) == 0.0] == 0.0)
+
+
+@settings(**SETTINGS)
+@given(n=small_dims, m=small_dims, k=small_dims, r=ranks)
+def test_masklora_merge_matches_forward(n, m, k, r):
+    """Post-merge plain forward == adapter forward (no degradation on merge)."""
+    g = rng_for(n, m, k, r, 4)
+    x = g.standard_normal((n, k), dtype=np.float32)
+    w = g.standard_normal((m, k), dtype=np.float32)
+    mask = (g.random((m, k)) >= 0.5).astype(np.float32)
+    a = g.standard_normal((r, k), dtype=np.float32) * 0.3
+    b = g.standard_normal((m, r), dtype=np.float32) * 0.3
+    merged = ref.masklora_merge(w, mask, a, b, 2.0)
+    allclose(x @ np.asarray(merged).T, masked_lora_matmul(x, w, mask, a, b, 2.0),
+             atol=1e-3, rtol=1e-3)
+    merged_s = ref.scalelora_merge(w, mask, a, b)
+    allclose(x @ np.asarray(merged_s).T, scale_lora_matmul(x, w, mask, a, b),
+             atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Attention.
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 2, 3]),
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([4, 8, 16, 32, 64]),
+    dh=st.sampled_from([4, 8, 16, 32]),
+    causal=st.booleans(),
+)
+def test_attention_fwd_bwd(b, h, s, dh, causal):
+    g = rng_for(b, h, s, dh, causal)
+    q = g.standard_normal((b, h, s, dh), dtype=np.float32)
+    k = g.standard_normal((b, h, s, dh), dtype=np.float32)
+    v = g.standard_normal((b, h, s, dh), dtype=np.float32)
+    allclose(attention(q, k, v, causal), ref.attention(q, k, v, causal), atol=1e-4, rtol=1e-4)
+    gk = jax.grad(lambda *t: jnp.sum(jnp.sin(attention(*t, causal))), (0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda *t: jnp.sum(jnp.sin(ref.attention(*t, causal))), (0, 1, 2))(q, k, v)
+    for a_, b_ in zip(gk, gr):
+        allclose(a_, b_, atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(n=dims, d=dims)
+def test_layernorm_fwd_bwd(n, d):
+    g = rng_for(n, d, 1)
+    x = g.standard_normal((n, d), dtype=np.float32) * 3.0
+    sc = g.standard_normal(d, dtype=np.float32)
+    bi = g.standard_normal(d, dtype=np.float32)
+    allclose(layernorm(x, sc, bi), ref.layernorm(x, sc, bi), atol=1e-4, rtol=1e-4)
+    gk = jax.grad(lambda *t: jnp.sum(jnp.sin(layernorm(*t))), (0, 1, 2))(x, sc, bi)
+    gr = jax.grad(lambda *t: jnp.sum(jnp.sin(ref.layernorm(*t))), (0, 1, 2))(x, sc, bi)
+    for a_, b_ in zip(gk, gr):
+        allclose(a_, b_, atol=1e-3, rtol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(n=dims, d=dims)
+def test_rmsnorm_fwd_bwd(n, d):
+    g = rng_for(n, d, 2)
+    x = g.standard_normal((n, d), dtype=np.float32) * 3.0
+    sc = g.standard_normal(d, dtype=np.float32)
+    allclose(rmsnorm(x, sc), ref.rmsnorm(x, sc), atol=1e-4, rtol=1e-4)
+    gk = jax.grad(lambda *t: jnp.sum(jnp.sin(rmsnorm(*t))), (0, 1))(x, sc)
+    gr = jax.grad(lambda *t: jnp.sum(jnp.sin(ref.rmsnorm(*t))), (0, 1))(x, sc)
+    for a_, b_ in zip(gk, gr):
+        allclose(a_, b_, atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# AdamW.
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 5, 33, 257, 4096, 5000]),
+    step=st.sampled_from([1, 2, 10, 1000]),
+    wd=st.sampled_from([0.0, 0.01, 0.1]),
+)
+def test_adamw_matches_ref(n, step, wd):
+    g = rng_for(n, step, int(wd * 100))
+    p = g.standard_normal(n, dtype=np.float32)
+    gr = g.standard_normal(n, dtype=np.float32)
+    m = g.standard_normal(n, dtype=np.float32) * 0.1
+    v = np.abs(g.standard_normal(n, dtype=np.float32)) * 0.01
+    out = adamw_update(p, gr, m, v, jnp.float32(step), jnp.float32(1e-3), wd=wd)
+    exp = ref.adamw(p, gr, m, v, step, 1e-3, wd=wd)
+    for a_, b_ in zip(out, exp):
+        allclose(a_, b_, atol=1e-5, rtol=1e-4)
+
+
+def test_adamw_multidim_shapes():
+    g = rng_for(99)
+    for shape in [(3, 5), (2, 3, 4), (128, 64)]:
+        p = g.standard_normal(shape, dtype=np.float32)
+        gr = g.standard_normal(shape, dtype=np.float32)
+        m = np.zeros(shape, np.float32)
+        v = np.zeros(shape, np.float32)
+        out = adamw_update(p, gr, m, v, jnp.float32(1), jnp.float32(1e-2))
+        exp = ref.adamw(p, gr, m, v, 1, 1e-2)
+        for a_, b_ in zip(out, exp):
+            allclose(a_, b_, atol=1e-5, rtol=1e-4)
+        assert out[0].shape == shape
+
+
+# ---------------------------------------------------------------------------
+# Mask kernels.
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(m=dims, k=dims, thr=st.sampled_from([0.0, 0.25, 0.5, 1.0, 3.0]))
+def test_magnitude_threshold(m, k, thr):
+    g = rng_for(m, k, int(thr * 4))
+    w = g.standard_normal((m, k), dtype=np.float32)
+    mask = magnitude_threshold_mask(w, jnp.float32(thr))
+    allclose(mask, (np.abs(w) > thr).astype(np.float32))
+
+
+@settings(**SETTINGS)
+@given(m=dims, groups=st.sampled_from([2, 4, 8]), nm=st.sampled_from([(1, 4), (2, 4), (4, 8), (2, 8)]))
+def test_nm_mask(m, groups, nm):
+    n_, m_ = nm
+    k = groups * m_
+    g = rng_for(m, k, n_, m_)
+    w = g.standard_normal((m, k), dtype=np.float32)
+    mask = nm_mask(w, n_, m_)
+    allclose(mask, ref.semistructured_mask(w, n_, m_))
+    # invariant: every group keeps exactly n entries
+    kept = np.asarray(mask).reshape(m, k // m_, m_).sum(-1)
+    assert np.all(kept == n_)
+
+
+def test_nm_mask_with_ties():
+    """Duplicate magnitudes must still keep exactly n per group."""
+    w = np.ones((4, 8), dtype=np.float32)
+    mask = np.asarray(nm_mask(w, 2, 4))
+    assert np.all(mask.reshape(4, 2, 4).sum(-1) == 2)
+    allclose(mask, ref.semistructured_mask(w, 2, 4))
+
+
+@settings(**SETTINGS)
+@given(m=dims, k=dims)
+def test_wanda_score(m, k):
+    g = rng_for(m, k, 7)
+    w = g.standard_normal((m, k), dtype=np.float32)
+    nrm = np.abs(g.standard_normal(k, dtype=np.float32))
+    allclose(wanda_score(w, nrm), ref.wanda_scores(w, nrm), atol=1e-5, rtol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(m=small_dims, k=small_dims, sp=sparsities)
+def test_wanda_mask_rowwise_budget(m, k, sp):
+    """ref.wanda_mask prunes exactly round(sp*in) per row (paper's comparison group)."""
+    g = rng_for(m, k, int(sp * 100), 9)
+    w = g.standard_normal((m, k), dtype=np.float32)
+    nrm = np.abs(g.standard_normal(k, dtype=np.float32)) + 0.1
+    mask = np.asarray(ref.wanda_mask(w, nrm, sp))
+    pruned_per_row = (mask == 0).sum(axis=1)
+    assert np.all(pruned_per_row == int(round(sp * k)))

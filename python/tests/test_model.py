@@ -1,0 +1,229 @@
+"""L2 model-level tests: shapes, loss behaviour, trainable-subset isolation,
+and parity of the LoRA-variant forwards at their identity initialisations.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.CONFIGS["gpt-nano"]
+
+
+def init_params(cfg, seed=0):
+    r = np.random.default_rng(seed)
+    params = {}
+    for n, s, g in M.param_specs(cfg):
+        if n.endswith("_scale"):
+            params[n] = np.ones(s, np.float32)
+        elif n.endswith("_b") or n.endswith("_bias"):
+            params[n] = np.zeros(s, np.float32)
+        else:
+            params[n] = (r.standard_normal(s) * 0.02).astype(np.float32)
+    return params
+
+
+def ones_masks(cfg):
+    shapes = {n: s for n, s, _ in M.param_specs(cfg)}
+    return {n: np.ones(shapes[n], np.float32) for n in M.prunable_names(cfg)}
+
+
+def rand_tokens(cfg, b, seed=1):
+    r = np.random.default_rng(seed)
+    return r.integers(0, cfg.vocab, size=(b, cfg.seq_len)).astype(np.int32)
+
+
+def zero_adapters(cfg, seed=2):
+    r = np.random.default_rng(seed)
+    ad = {}
+    for n, s in M.adapter_specs(cfg):
+        if n.endswith("::A"):
+            ad[n] = (r.standard_normal(s) * 0.1).astype(np.float32)
+        else:
+            ad[n] = np.zeros(s, np.float32)
+    return ad
+
+
+def test_param_specs_cover_all_groups():
+    groups = {g for _, _, g in M.param_specs(CFG)}
+    assert groups == {"embed", "ln", "bias", "weight", "head"}
+    # llama-style has no biases and no ln biases
+    lcfg = M.CONFIGS["llama-tiny"]
+    lgroups = {g for _, _, g in M.param_specs(lcfg)}
+    assert "bias" not in lgroups
+    assert not any(n.endswith("ln1_bias") for n, _, _ in M.param_specs(lcfg))
+
+
+def test_trainable_fractions_ordering():
+    """The paper's core quantitative frame: |LN| < |biases| << |lora| << all."""
+    shapes = {n: int(np.prod(s)) for n, s, _ in M.param_specs(CFG)}
+    total = sum(shapes.values())
+    sizes = {}
+    for mode in ("ln", "biases", "full"):
+        names = M.trainable_names(CFG, mode)
+        sizes[mode] = sum(shapes[n] for n in names)
+    lora_extra = sum(int(np.prod(s)) for _, s in M.adapter_specs(CFG))
+    assert sizes["ln"] < sizes["biases"] < lora_extra < total
+    assert sizes["full"] == total
+
+
+def test_forward_shapes_and_determinism():
+    params = init_params(CFG)
+    masks = ones_masks(CFG)
+    toks = rand_tokens(CFG, 2)
+    logits = M.forward(CFG, params, masks, toks)
+    assert logits.shape == (2, CFG.seq_len, CFG.vocab)
+    logits2 = M.forward(CFG, params, masks, toks)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(logits2))
+
+
+def test_loss_near_uniform_at_init():
+    """Random init ⇒ CE ≈ log(V)."""
+    params = init_params(CFG)
+    masks = ones_masks(CFG)
+    toks = rand_tokens(CFG, 4)
+    logits = M.forward(CFG, params, masks, toks)
+    loss = float(M.lm_loss_mean(logits, toks))
+    assert abs(loss - np.log(CFG.vocab)) < 0.5
+
+
+def test_masking_zeroes_weights_effectively():
+    """An all-zero mask on every linear must change the logits vs dense."""
+    params = init_params(CFG)
+    masks = ones_masks(CFG)
+    toks = rand_tokens(CFG, 2)
+    dense = np.asarray(M.forward(CFG, params, masks, toks))
+    zmasks = {k: np.zeros_like(v) for k, v in masks.items()}
+    zeroed = np.asarray(M.forward(CFG, params, zmasks, toks))
+    assert not np.allclose(dense, zeroed)
+
+
+@pytest.mark.parametrize("mode", ["lora", "masklora", "masklora_std"])
+def test_lora_identity_at_zero_B(mode):
+    """B=0 ⇒ every additive LoRA variant equals the plain pruned forward."""
+    params = init_params(CFG)
+    masks = {k: (np.random.default_rng(3).random(v.shape) > 0.5).astype(np.float32)
+             for k, v in ones_masks(CFG).items()}
+    toks = rand_tokens(CFG, 2)
+    base = np.asarray(M.forward(CFG, params, masks, toks))
+    ad = zero_adapters(CFG)
+    out = np.asarray(M.forward(CFG, params, masks, toks, adapters=ad, mode=mode))
+    np.testing.assert_allclose(base, out, atol=1e-5, rtol=1e-5)
+
+
+def test_scalelora_identity_at_ones_init():
+    from compile.kernels import scale_lora_init
+
+    params = init_params(CFG)
+    masks = {k: (np.random.default_rng(4).random(v.shape) > 0.5).astype(np.float32)
+             for k, v in ones_masks(CFG).items()}
+    toks = rand_tokens(CFG, 2)
+    base = np.asarray(M.forward(CFG, params, masks, toks))
+    shapes = {n: s for n, s, _ in M.param_specs(CFG)}
+    ad = {}
+    for n in M.prunable_names(CFG):
+        o, i = shapes[n]
+        a, b = scale_lora_init(o, i, CFG.lora_rank)
+        ad[n + "::A"] = np.asarray(a)
+        ad[n + "::B"] = np.asarray(b)
+    out = np.asarray(M.forward(CFG, params, masks, toks, adapters=ad, mode="scalelora"))
+    np.testing.assert_allclose(base, out, atol=1e-4, rtol=1e-4)
+
+
+def test_subset_step_reduces_loss_and_respects_freeze():
+    """A biases-only train step must (a) reduce loss over a few iterations,
+    (b) leave every frozen parameter byte-identical."""
+    params = init_params(CFG)
+    masks = ones_masks(CFG)
+    toks = rand_tokens(CFG, CFG.train_batch)
+    step = M.make_train_step(CFG, "biases")
+    tnames = M.trainable_names(CFG, "biases")
+    trainable = {k: jnp.asarray(params[k]) for k in tnames}
+    m = {k: jnp.zeros_like(v) for k, v in trainable.items()}
+    v = {k: jnp.zeros_like(vv) for k, vv in trainable.items()}
+    losses = []
+    frozen = {k: jnp.asarray(p) for k, p in params.items()}
+    for i in range(5):
+        for k in trainable:
+            frozen[k] = trainable[k]
+        trainable, m, v, loss = step(
+            trainable, frozen, masks, None, m, v, toks, jnp.float32(i + 1),
+            jnp.float32(5e-2),
+        )
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+    for k, p0 in params.items():
+        if k not in tnames:
+            np.testing.assert_array_equal(np.asarray(frozen[k]), p0)
+
+
+def test_masklora_step_trains_adapters_and_subsets_only():
+    params = init_params(CFG)
+    masks = {k: (np.random.default_rng(5).random(v.shape) > 0.3).astype(np.float32)
+             for k, v in ones_masks(CFG).items()}
+    toks = rand_tokens(CFG, CFG.train_batch)
+    step = M.make_train_step(CFG, "masklora")
+    tnames = M.trainable_names(CFG, "masklora")
+    adapters = zero_adapters(CFG)
+    leaves = {k: jnp.asarray(params[k]) for k in tnames}
+    all_leaf = dict(leaves)
+    all_leaf.update({k: jnp.asarray(val) for k, val in adapters.items()})
+    m = {k: jnp.zeros_like(val) for k, val in all_leaf.items()}
+    v = {k: jnp.zeros_like(val) for k, val in all_leaf.items()}
+    frozen = {k: jnp.asarray(p) for k, p in params.items()}
+    new_leaves, m2, v2, loss = step(
+        leaves, frozen, masks,
+        {k: jnp.asarray(val) for k, val in adapters.items()},
+        m, v, toks, jnp.float32(1), jnp.float32(1e-3),
+    )
+    assert np.isfinite(float(loss))
+    # adapters received gradient (B moves away from zero after one step)
+    moved = sum(
+        float(np.abs(np.asarray(new_leaves[k])).max()) > 0
+        for k in adapters if k.endswith("::B")
+    )
+    assert moved > 0
+
+
+def test_sequence_scores_mask_selectivity():
+    params = init_params(CFG)
+    masks = ones_masks(CFG)
+    toks = rand_tokens(CFG, 2)
+    logits = M.forward(CFG, params, masks, toks)
+    tmask = np.zeros((2, CFG.seq_len), np.float32)
+    tmask[:, 5:10] = 1.0
+    scores, counts = M.sequence_scores(logits, toks, tmask)
+    assert scores.shape == (2,)
+    np.testing.assert_array_equal(np.asarray(counts), [5.0, 5.0])
+    assert np.all(np.asarray(scores) < 0)
+
+
+def test_calib_stats_gram_psd_and_shapes():
+    params = init_params(CFG)
+    masks = ones_masks(CFG)
+    toks = rand_tokens(CFG, CFG.eval_batch)
+    grams = M.calib_stats(CFG, params, masks, toks)
+    names = [n for n, _ in grams]
+    # one tap per distinct activation: q/k/v share their input (tap_names)
+    assert names == M.tap_names(CFG)
+    assert {M.tap_of(n) for n in M.prunable_names(CFG)} == set(names)
+    for _, g in grams:
+        g = np.asarray(g)
+        assert g.shape[0] == g.shape[1]
+        np.testing.assert_allclose(g, g.T, atol=1e-3)
+        ev = np.linalg.eigvalsh(g.astype(np.float64))
+        assert ev.min() > -1e-2 * max(1.0, ev.max())  # PSD up to float noise
+
+
+def test_capture_inputs_match_gram():
+    params = init_params(CFG)
+    masks = ones_masks(CFG)
+    toks = rand_tokens(CFG, CFG.eval_batch)
+    caps = M.capture_layer_inputs(CFG, params, masks, toks)
+    grams = dict(M.calib_stats(CFG, params, masks, toks))
+    for name, x in caps:
+        x = np.asarray(x)
+        np.testing.assert_allclose(x.T @ x, np.asarray(grams[name]),
+                                   atol=5e-2, rtol=1e-3)

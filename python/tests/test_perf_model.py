@@ -1,0 +1,55 @@
+"""Structural perf invariants of the L1 kernels (DESIGN.md §Perf):
+every BlockSpec the kernels would choose — from repro scale up to the
+paper's OPT-30B layer shapes — must fit VMEM and keep MXU-aligned tiles.
+"""
+
+from hypothesis import given, settings, strategies as st
+
+from compile.perf_model import (
+    VMEM_BYTES,
+    masked_lora_estimate,
+    paper_scale_rows,
+)
+from compile.kernels.common import MatmulBlocks, pick_block
+
+
+def test_paper_scale_tiles_fit_vmem():
+    for e in paper_scale_rows():
+        assert e.vmem_bytes <= VMEM_BYTES, (e.shape, e.vmem_bytes)
+
+
+def test_large_shapes_are_compute_bound():
+    # the OPT-scale masked-lora tiles must land compute-bound, matching the
+    # paper's observation that MaskLoRA (optimized) approaches LoRA speed
+    for e in paper_scale_rows():
+        out_dim = int(e.shape.split("(")[2].split("x")[0])
+        if out_dim >= 2560:
+            assert e.roofline_bound == "compute", e.shape
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n=st.integers(8, 8192),
+    m=st.integers(8, 8192),
+    k=st.integers(8, 8192),
+    r=st.sampled_from([4, 8, 16, 32]),
+)
+def test_any_shape_fits_vmem(n, m, k, r):
+    e = masked_lora_estimate(n, m, k, r)
+    assert e.vmem_bytes <= VMEM_BYTES
+
+
+@settings(max_examples=30, deadline=None)
+@given(dim=st.integers(1, 4096), preferred=st.sampled_from([128, 256]))
+def test_pick_block_divides(dim, preferred):
+    b = pick_block(dim, preferred)
+    assert 1 <= b <= max(dim, preferred)
+    if dim % preferred == 0:
+        assert b == preferred
+    else:
+        assert dim % b == 0 or b == preferred
+
+
+def test_blocks_choose_mxu_tiles_when_possible():
+    blk = MatmulBlocks.choose(4096, 2560, 2560)
+    assert blk.bn == 128 and blk.bm == 128 and blk.bk == 256

@@ -1,0 +1,44 @@
+//! Shared bench scaffolding: every paper-table bench builds an ExpContext
+//! against the cached quick-profile checkpoints and appends its markdown
+//! table to `results/bench_tables.md`.
+
+use std::path::PathBuf;
+
+use perp::config::ExperimentConfig;
+use perp::coordinator::sweep::{self, ExpContext};
+use perp::runtime::{default_artifacts_dir, Runtime};
+
+pub fn bench_model() -> String {
+    std::env::var("PERP_BENCH_MODEL").unwrap_or_else(|_| "gpt-nano".to_string())
+}
+
+pub fn bench_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quick(&bench_model());
+    cfg.pretrain_steps = std::env::var("PERP_BENCH_PRETRAIN")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3000);
+    cfg.retrain_steps = 60;
+    cfg.recon_steps = 20;
+    cfg.items_per_task = 20;
+    cfg
+}
+
+pub fn run_experiment(exp: &str) {
+    let rt = Runtime::new(&default_artifacts_dir()).expect("make artifacts first");
+    let ctx = ExpContext::new(&rt, bench_cfg(), PathBuf::from("results/cache"));
+    let t0 = std::time::Instant::now();
+    let tables = sweep::run(&ctx, exp).expect("sweep failed");
+    let out = PathBuf::from("results/bench_tables.md");
+    std::fs::create_dir_all("results").ok();
+    for t in &tables {
+        t.print();
+        t.append_to(&out).ok();
+    }
+    println!(
+        "bench[{exp}] ({}): {:.1}s, {} device executions",
+        bench_model(),
+        t0.elapsed().as_secs_f64(),
+        rt.exec_count.borrow()
+    );
+}

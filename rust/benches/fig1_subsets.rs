@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig1_subsets` — regenerates the paper's fig1
+//! (see coordinator::sweep for the experiment definition).
+mod common;
+
+fn main() {
+    common::run_experiment("fig1");
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig2_iterations` — regenerates the paper's fig2
+//! (see coordinator::sweep for the experiment definition).
+mod common;
+
+fn main() {
+    common::run_experiment("fig2");
+}

@@ -1,0 +1,50 @@
+//! Micro-benchmarks of the host-side pruning criteria: magnitude vs Wanda vs
+//! SparseGPT on one realistic linear layer, across sizes and patterns.
+//!
+//! SparseGPT's O(in²·out / blocksize) OBS sweep dominates — this bench is
+//! the profile driver for the §Perf pruning work.
+
+mod common;
+
+use perp::pruning::{magnitude, sparsegpt, wanda, Pattern};
+use perp::tensor::{linalg, Tensor};
+use perp::util::bench::{fmt_duration, Bench, Table};
+use perp::util::rng::Rng;
+use std::collections::BTreeMap;
+
+fn main() {
+    let bench = Bench::quick();
+    let mut table = Table::new(
+        "pruning criteria micro-bench (one linear layer)",
+        &["layer (out x in)", "pattern", "magnitude", "wanda", "sparsegpt"],
+    );
+    let mut rng = Rng::new(42);
+    for (out, inp) in [(64usize, 64usize), (128, 128), (256, 256), (512, 128)] {
+        let w = Tensor::randn(&[out, inp], 0.05, &mut rng);
+        let x = Tensor::randn(&[256, inp], 1.0, &mut rng);
+        let gram = linalg::matmul(&x.transpose2(), &x);
+        for pattern in [Pattern::Unstructured(0.5), Pattern::SemiStructured { n: 2, m: 4 }] {
+            let mut weights = BTreeMap::new();
+            weights.insert("w".to_string(), &w);
+            let t_mag = bench.run(|| {
+                std::hint::black_box(magnitude::uniform(&weights, pattern));
+            });
+            let t_wanda = bench.run(|| {
+                std::hint::black_box(wanda::mask(&w, &gram, pattern));
+            });
+            let t_sgpt = bench.run(|| {
+                std::hint::black_box(sparsegpt::prune_layer(&w, &gram, pattern, 64, 0.01));
+            });
+            table.row(vec![
+                format!("{out}x{inp}"),
+                pattern.label(),
+                fmt_duration(t_mag.mean),
+                fmt_duration(t_wanda.mean),
+                fmt_duration(t_sgpt.mean),
+            ]);
+        }
+    }
+    table.print();
+    std::fs::create_dir_all("results").ok();
+    table.append_to(std::path::Path::new("results/bench_tables.md")).ok();
+}

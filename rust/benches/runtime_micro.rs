@@ -1,0 +1,69 @@
+//! Micro-benchmarks of the PJRT bridge itself: compile time per executable
+//! and steady-state execution latency of the hot-path graphs.  Feeds the
+//! §Perf analysis of where retraining wall-clock goes (host<->device copies
+//! vs device compute).
+
+mod common;
+
+use perp::config::ExperimentConfig;
+use perp::coordinator::Session;
+use perp::eval::base_feed;
+use perp::runtime::{default_artifacts_dir, Runtime};
+use perp::util::bench::{fmt_duration, Bench, Table};
+
+fn main() {
+    let rt = Runtime::new(&default_artifacts_dir()).expect("make artifacts first");
+    let model = common::bench_model();
+    let cfg = ExperimentConfig::quick(&model);
+    let s = Session::new(&rt, cfg, 0).unwrap();
+    let mm = s.mm.clone();
+    let b = mm.cfg.eval_batch;
+    let sl = mm.cfg.seq_len;
+    let shape = [b, sl];
+    let tokens = s.train.eval_batch(b, 0);
+
+    // compile times (cold)
+    let mut compile_t = Table::new(
+        &format!("PJRT compile time ({model})"),
+        &["executable", "inputs", "HLO file", "compile"],
+    );
+    for exec in ["eval_loss", "score", "train_full", "train_masklora", "calib_stats"] {
+        let spec = mm.exec(exec).unwrap();
+        let bytes = std::fs::metadata(rt.manifest.hlo_path(spec)).map(|m| m.len()).unwrap_or(0);
+        let t0 = std::time::Instant::now();
+        rt.load(&model, exec).unwrap();
+        compile_t.row(vec![
+            exec.to_string(),
+            format!("{}", spec.inputs.len()),
+            format!("{:.2} MB", bytes as f64 / 1e6),
+            fmt_duration(t0.elapsed()),
+        ]);
+    }
+    compile_t.print();
+
+    // steady-state execution latency
+    let bench = Bench::quick();
+    let mut exec_t = Table::new(
+        &format!("execution latency ({model}, batch {b}x{sl})"),
+        &["executable", "mean", "p95", "tokens/s"],
+    );
+    for exec in ["eval_loss", "score", "calib_stats"] {
+        let stats = bench.run(|| {
+            let mut feed = base_feed(&s.params, &s.masks).ints("tokens", &shape, &tokens);
+            if exec == "score" {
+                feed = feed.owned("tmask", perp::tensor::Tensor::ones(&[b, sl]));
+            }
+            std::hint::black_box(rt.run(&model, exec, &feed).unwrap());
+        });
+        exec_t.row(vec![
+            exec.to_string(),
+            fmt_duration(stats.mean),
+            fmt_duration(stats.p95),
+            format!("{:.0}", (b * sl) as f64 / stats.mean_secs()),
+        ]);
+    }
+    exec_t.print();
+    std::fs::create_dir_all("results").ok();
+    compile_t.append_to(std::path::Path::new("results/bench_tables.md")).ok();
+    exec_t.append_to(std::path::Path::new("results/bench_tables.md")).ok();
+}

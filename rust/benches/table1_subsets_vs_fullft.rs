@@ -1,0 +1,7 @@
+//! `cargo bench --bench table1_subsets_vs_fullft` — regenerates the paper's table1
+//! (see coordinator::sweep for the experiment definition).
+mod common;
+
+fn main() {
+    common::run_experiment("table1");
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench table2_lora_variants` — regenerates the paper's table2
+//! (see coordinator::sweep for the experiment definition).
+mod common;
+
+fn main() {
+    common::run_experiment("table2");
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench table4_throughput` — regenerates the paper's table4
+//! (see coordinator::sweep for the experiment definition).
+mod common;
+
+fn main() {
+    common::run_experiment("table4");
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench table5_reconstruction` — regenerates the paper's table5
+//! (see coordinator::sweep for the experiment definition).
+mod common;
+
+fn main() {
+    common::run_experiment("table5");
+}

@@ -1,0 +1,178 @@
+//! Experiment configuration: defaults, JSON overrides and validation.
+//!
+//! Every sweep/bench resolves an [`ExperimentConfig`]; the `--profile` axis
+//! trades fidelity for wall-clock (CI smoke vs full reproduction).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    /// model manifest key (gpt-nano .. gpt-medium, llama-tiny)
+    pub model: String,
+    /// pretraining steps to converge the dense model
+    pub pretrain_steps: u64,
+    pub pretrain_lr: f64,
+    /// retraining iterations after pruning (paper: 1000)
+    pub retrain_steps: u64,
+    /// tuned peak LRs tried per method (paper: {5e-6 .. 5e-4})
+    pub lr_grid: Vec<f64>,
+    /// calibration sequences (paper: 128)
+    pub calib_seqs: usize,
+    /// reconstruction iterations per layer block
+    pub recon_steps: u64,
+    pub recon_lr: f64,
+    /// zero-shot items per task
+    pub items_per_task: usize,
+    /// eval batches cap for perplexity
+    pub eval_batches: usize,
+    pub seeds: Vec<u64>,
+    pub data_seed: u64,
+}
+
+impl ExperimentConfig {
+    /// Full-fidelity defaults (paper-shaped).
+    pub fn full(model: &str) -> ExperimentConfig {
+        ExperimentConfig {
+            model: model.to_string(),
+            // gpt-nano converges around here; the pruning-collapse shape
+            // (Fig 1) only appears on converged models
+            pretrain_steps: 30_000,
+            pretrain_lr: 1e-3,
+            retrain_steps: 200,
+            lr_grid: vec![1e-3],
+            calib_seqs: 128,
+            recon_steps: 60,
+            recon_lr: 2e-3,
+            items_per_task: 30,
+            eval_batches: 8,
+            seeds: vec![0, 1],
+            data_seed: 1234,
+        }
+    }
+
+    /// CI smoke profile: every code path, minutes not hours.
+    pub fn quick(model: &str) -> ExperimentConfig {
+        ExperimentConfig {
+            pretrain_steps: 150,
+            pretrain_lr: 2e-3,
+            retrain_steps: 30,
+            lr_grid: vec![1e-3],
+            calib_seqs: 16,
+            recon_steps: 10,
+            recon_lr: 2e-3,
+            items_per_task: 10,
+            eval_batches: 2,
+            seeds: vec![0],
+            ..ExperimentConfig::full(model)
+        }
+    }
+
+    pub fn profile(name: &str, model: &str) -> Result<ExperimentConfig> {
+        match name {
+            "full" => Ok(ExperimentConfig::full(model)),
+            "quick" => Ok(ExperimentConfig::quick(model)),
+            other => bail!("unknown profile {other:?} (full|quick)"),
+        }
+    }
+
+    /// Apply overrides from a JSON file (fields optional).
+    pub fn with_file(mut self, path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        let j = Json::parse(&text).context("parsing config")?;
+        if let Some(v) = j.get("model").and_then(Json::as_str) {
+            self.model = v.to_string();
+        }
+        if let Some(v) = j.get("pretrain_steps").and_then(Json::as_i64) {
+            self.pretrain_steps = v as u64;
+        }
+        if let Some(v) = j.get("pretrain_lr").and_then(Json::as_f64) {
+            self.pretrain_lr = v;
+        }
+        if let Some(v) = j.get("retrain_steps").and_then(Json::as_i64) {
+            self.retrain_steps = v as u64;
+        }
+        if let Some(v) = j.get("lr_grid").and_then(Json::as_arr) {
+            self.lr_grid = v.iter().filter_map(Json::as_f64).collect();
+        }
+        if let Some(v) = j.get("calib_seqs").and_then(Json::as_usize) {
+            self.calib_seqs = v;
+        }
+        if let Some(v) = j.get("recon_steps").and_then(Json::as_i64) {
+            self.recon_steps = v as u64;
+        }
+        if let Some(v) = j.get("recon_lr").and_then(Json::as_f64) {
+            self.recon_lr = v;
+        }
+        if let Some(v) = j.get("items_per_task").and_then(Json::as_usize) {
+            self.items_per_task = v;
+        }
+        if let Some(v) = j.get("eval_batches").and_then(Json::as_usize) {
+            self.eval_batches = v;
+        }
+        if let Some(v) = j.get("seeds").and_then(Json::as_arr) {
+            self.seeds = v.iter().filter_map(Json::as_i64).map(|x| x as u64).collect();
+        }
+        if let Some(v) = j.get("data_seed").and_then(Json::as_i64) {
+            self.data_seed = v as u64;
+        }
+        self.validate()?;
+        Ok(self)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.lr_grid.is_empty() {
+            bail!("lr_grid must not be empty");
+        }
+        if self.seeds.is_empty() {
+            bail!("seeds must not be empty");
+        }
+        if self.pretrain_steps == 0 {
+            bail!("pretrain_steps must be > 0");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_valid() {
+        ExperimentConfig::full("gpt-small").validate().unwrap();
+        ExperimentConfig::quick("gpt-nano").validate().unwrap();
+        assert!(ExperimentConfig::profile("nope", "x").is_err());
+    }
+
+    #[test]
+    fn quick_is_faster_than_full() {
+        let q = ExperimentConfig::quick("m");
+        let f = ExperimentConfig::full("m");
+        assert!(q.pretrain_steps < f.pretrain_steps);
+        assert!(q.retrain_steps < f.retrain_steps);
+    }
+
+    #[test]
+    fn file_overrides() {
+        let dir = std::env::temp_dir().join("perp_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"retrain_steps": 7, "lr_grid": [0.5], "seeds": [9]}"#).unwrap();
+        let c = ExperimentConfig::quick("gpt-nano").with_file(&p).unwrap();
+        assert_eq!(c.retrain_steps, 7);
+        assert_eq!(c.lr_grid, vec![0.5]);
+        assert_eq!(c.seeds, vec![9]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        let mut c = ExperimentConfig::quick("m");
+        c.lr_grid.clear();
+        assert!(c.validate().is_err());
+    }
+}

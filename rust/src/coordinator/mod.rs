@@ -1,0 +1,20 @@
+//! The coordinator: PERP's prune→retrain / prune→reconstruct pipelines.
+//!
+//! [`session::Session`] owns all mutable state (params, masks, adapters,
+//! optimizer buffers, data) and exposes the pipeline verbs:
+//!
+//! * `pretrain`          — converge the dense model (full-FT steps, dense masks)
+//! * `calibrate`         — accumulate per-layer Grams on calibration data
+//! * `prune`             — magnitude / wanda / sparsegpt × unstructured / N:M
+//! * `retrain`           — any PERP mode (subsets, LoRA variants)
+//! * `merge_adapters`    — fold LoRA state back, verifying sparsity
+//! * `reconstruct`       — sequential layer-wise Eq. 1 optimisation
+//! * `eval_ppl` / `eval_tasks`
+//!
+//! [`sweep`] builds every paper table/figure from these verbs.
+
+pub mod reconstruct;
+pub mod session;
+pub mod sweep;
+
+pub use session::Session;

@@ -1,0 +1,241 @@
+//! Sequential layer-wise reconstruction (PERP §3.3, Eq. 1).
+//!
+//! For each transformer block, in order:
+//!
+//! 1. capture the inputs X of every linear in the block by running the
+//!    network with *already-reconstructed* earlier blocks and *original
+//!    dense* later blocks (the SparseGPT sequential convention);
+//! 2. per linear: targets Y0 = X @ W0ᵀ from the dense weights, then
+//!    AdamW on the MaskLoRA-reparametrised (or full-FT) reconstruction
+//!    objective, cycling fixed-size calibration chunks;
+//! 3. merge and write back; the block's masks switch from dense to pruned.
+//!
+//! Memory note (the paper's §3.3 argument): only one block's activations and
+//! one layer's adapter state are ever alive — `metrics::training_memory`
+//! quantifies the reduction.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::eval::base_feed;
+use crate::optim::OptState;
+use crate::pruning::MaskSet;
+use crate::runtime::Feed;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::session::Session;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReconMode {
+    MaskLora,
+    FullFt,
+}
+
+#[derive(Debug, Clone)]
+pub struct ReconReport {
+    /// (linear, first-step loss, last-step loss)
+    pub layers: Vec<(String, f32, f32)>,
+}
+
+impl ReconReport {
+    pub fn mean_improvement(&self) -> f64 {
+        if self.layers.is_empty() {
+            return 0.0;
+        }
+        self.layers
+            .iter()
+            .map(|(_, first, last)| (*first as f64 - *last as f64).max(0.0))
+            .sum::<f64>()
+            / self.layers.len() as f64
+    }
+}
+
+/// Run layer-wise reconstruction toward `target_masks`.
+///
+/// Preconditions: `session.params` holds the *dense* weights (SparseGPT
+/// callers pass its updated weights as `w_start` overrides), masks are reset
+/// dense by this function before the sweep.
+pub fn reconstruct(
+    session: &mut Session,
+    target_masks: &MaskSet,
+    dense_params: &BTreeMap<String, Tensor>,
+    mode: ReconMode,
+    iters: u64,
+    lr: f64,
+) -> Result<ReconReport> {
+    // Reconstruction *starts from* the pruned session's current weights —
+    // for SparseGPT that means its OBS-updated weights, for magnitude/Wanda
+    // the masked originals — while the *targets* Y0 always come from the
+    // dense weights (Eq. 1's W_l).
+    let start_params: BTreeMap<String, Tensor> = session
+        .mm
+        .prunable
+        .iter()
+        .map(|n| (n.clone(), session.params.get(n).clone()))
+        .collect();
+    let mm = session.mm.clone();
+    let cfg_rows = mm.cfg.calib_rows;
+    let rank = mm.cfg.lora_rank;
+    let scale = mm.cfg.lora_scale as f32;
+    let b = mm.cfg.eval_batch;
+    let s = mm.cfg.seq_len;
+    let shape = [b, s];
+    let model = mm.cfg.name.clone();
+
+    // the capture prefix uses reconstructed blocks; unvisited blocks run
+    // dense (the SparseGPT sequential convention)
+    session.reset_masks();
+    for n in &mm.prunable {
+        session.params.set(n, dense_params[n].clone());
+    }
+
+    let calib = session
+        .train
+        .calibration(session.cfg.calib_seqs, b, session.cfg.data_seed);
+
+    let mut report = ReconReport { layers: Vec::new() };
+    let mut rng = Rng::new(session.cfg.data_seed ^ 0x5EC0);
+
+    for block in 0..mm.cfg.n_layers {
+        let block_prefix = format!("h{block}_");
+        let block_linears: Vec<String> = mm
+            .prunable
+            .iter()
+            .filter(|n| n.starts_with(&block_prefix))
+            .cloned()
+            .collect();
+
+        // ---- capture X for this block over all calibration batches -----
+        let mut xrows: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+        for tokens in &calib {
+            let feed =
+                base_feed(&session.params, &session.masks).ints("tokens", &shape, tokens);
+            let out = session.rt.run(&model, "capture_inputs", &feed)?;
+            for (name, t) in out.values {
+                let key = name.strip_prefix("x::").unwrap_or(&name).to_string();
+                if key.starts_with(&block_prefix) {
+                    xrows.entry(key).or_default().extend_from_slice(t.data());
+                }
+            }
+        }
+
+        // ---- per-linear optimisation ------------------------------------
+        for lin in &block_linears {
+            let w0 = dense_params
+                .get(lin)
+                .with_context(|| format!("dense weights missing {lin}"))?;
+            let wstart = &start_params[lin];
+            let (out_dim, in_dim) = (w0.shape()[0], w0.shape()[1]);
+            let tag = format!("{out_dim}x{in_dim}");
+            let mask = target_masks.get(lin).clone();
+
+            // calibration chunks of exactly calib_rows rows (q/k/v share a tap)
+            let tap = mm.taps.get(lin).unwrap_or(lin);
+            let all = xrows.get(tap).context("no captured rows")?.clone();
+            let total_rows = all.len() / in_dim;
+            let n_chunks = (total_rows / cfg_rows).max(1);
+            let chunk = |i: usize| -> Tensor {
+                let start = (i % n_chunks) * cfg_rows * in_dim;
+                let end = (start + cfg_rows * in_dim).min(all.len());
+                let mut data = all[start..end].to_vec();
+                data.resize(cfg_rows * in_dim, 0.0);
+                Tensor::new(&[cfg_rows, in_dim], data)
+            };
+
+            // targets per chunk (cached) through the linear_fwd executable
+            let mut y0_cache: Vec<Option<Tensor>> = vec![None; n_chunks];
+            let mut y0 = |session: &Session, i: usize, x: &Tensor| -> Result<Tensor> {
+                if let Some(t) = &y0_cache[i % n_chunks] {
+                    return Ok(t.clone());
+                }
+                let feed = Feed::new().tensor("x", x).tensor("w", w0);
+                let mut out = session.rt.run(&model, &format!("linear_fwd_{tag}"), &feed)?;
+                let t = out.take("y0");
+                y0_cache[i % n_chunks] = Some(t.clone());
+                Ok(t)
+            };
+
+            let (mut first_loss, mut last_loss) = (f32::NAN, f32::NAN);
+            match mode {
+                ReconMode::MaskLora => {
+                    let mut a = Tensor::randn(&[rank, in_dim], 0.02, &mut rng);
+                    let mut bmat = Tensor::zeros(&[out_dim, rank]);
+                    let mut opt = OptState::zeros(
+                        [
+                            ("a", &[rank, in_dim][..]),
+                            ("b", &[out_dim, rank][..]),
+                        ]
+                        .into_iter(),
+                    );
+                    for t in 1..=iters {
+                        let x = chunk(t as usize - 1);
+                        let y = y0(session, t as usize - 1, &x)?;
+                        let feed = Feed::new()
+                            .tensor("x", &x)
+                            .tensor("y0", &y)
+                            .tensor("w", wstart)
+                            .tensor("mask", &mask)
+                            .tensor("a", &a)
+                            .tensor("b", &bmat)
+                            .tensor("om::a", &opt.m["a"])
+                            .tensor("ov::a", &opt.v["a"])
+                            .tensor("om::b", &opt.m["b"])
+                            .tensor("ov::b", &opt.v["b"])
+                            .scalar("step", t as f32)
+                            .scalar("lr", lr as f32);
+                        let mut out =
+                            session.rt.run(&model, &format!("recon_masklora_{tag}"), &feed)?;
+                        let loss = out.scalar("loss");
+                        if t == 1 {
+                            first_loss = loss;
+                        }
+                        last_loss = loss;
+                        a = out.take("o::a");
+                        bmat = out.take("o::b");
+                        opt.update("a", out.take("om::a"), out.take("ov::a"));
+                        opt.update("b", out.take("om::b"), out.take("ov::b"));
+                    }
+                    let merged = crate::peft::merge::masklora(wstart, &mask, &a, &bmat, scale);
+                    debug_assert!(crate::peft::merge::preserves_sparsity(&merged, &mask));
+                    session.params.set(lin, merged);
+                }
+                ReconMode::FullFt => {
+                    let mut w = wstart.hadamard(&mask);
+                    let mut opt = OptState::zeros(
+                        [("w", &[out_dim, in_dim][..])].into_iter(),
+                    );
+                    for t in 1..=iters {
+                        let x = chunk(t as usize - 1);
+                        let y = y0(session, t as usize - 1, &x)?;
+                        let feed = Feed::new()
+                            .tensor("x", &x)
+                            .tensor("y0", &y)
+                            .tensor("w", &w)
+                            .tensor("mask", &mask)
+                            .tensor("om::w", &opt.m["w"])
+                            .tensor("ov::w", &opt.v["w"])
+                            .scalar("step", t as f32)
+                            .scalar("lr", lr as f32);
+                        let mut out =
+                            session.rt.run(&model, &format!("recon_full_{tag}"), &feed)?;
+                        let loss = out.scalar("loss");
+                        if t == 1 {
+                            first_loss = loss;
+                        }
+                        last_loss = loss;
+                        w = out.take("o::w");
+                        opt.update("w", out.take("om::w"), out.take("ov::w"));
+                    }
+                    session.params.set(lin, w.hadamard(&mask));
+                }
+            }
+            session.masks.set(lin, mask);
+            report.layers.push((lin.clone(), first_loss, last_loss));
+        }
+    }
+    // force exact zeros everywhere
+    session.params.apply_masks(&session.masks.masks);
+    Ok(report)
+}

@@ -1,0 +1,441 @@
+//! Session: all mutable experiment state plus the pipeline verbs.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::data::{tasks, Batcher, Corpus, CorpusConfig, Tokenizer};
+use crate::eval::{self, PplResult, TaskResult};
+use crate::metrics::TpsMeter;
+use crate::model::{init, ParamStore};
+use crate::optim::{OptState, Schedule};
+use crate::peft::{merge, LoraState, Mode};
+use crate::pruning::{magnitude, sparsegpt, wanda, Criterion, MaskSet, Pattern};
+use crate::runtime::{ModelManifest, Runtime};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Everything one experiment run owns.
+pub struct Session<'rt> {
+    pub rt: &'rt Runtime,
+    pub mm: ModelManifest,
+    pub cfg: ExperimentConfig,
+    pub params: ParamStore,
+    pub masks: MaskSet,
+    pub lora: Option<(Mode, LoraState)>,
+    pub corpus: Corpus,
+    pub tokenizer: Tokenizer,
+    pub train: Batcher,
+    pub val: Batcher,
+    pub test: Batcher,
+    pub word_lut: Vec<i32>,
+    pub rng: Rng,
+    /// tokens/sec of the last retraining loop (Table 4)
+    pub last_tps: f64,
+    /// loss trace of the last (re)training loop
+    pub last_losses: Vec<f32>,
+}
+
+impl<'rt> Session<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: ExperimentConfig, seed: u64) -> Result<Session<'rt>> {
+        let mm = rt.model(&cfg.model)?.clone();
+        let mut rng = Rng::new(seed);
+        let params = init::init_params(&mm, &mut rng);
+        let masks = MaskSet::dense(&mm.prunable, |n| mm.param_shape(n).to_vec());
+
+        // data: corpus sized to the model's vocab, tokenizer trained on the
+        // rendered training split
+        let corpus = Corpus::generate(CorpusConfig::for_vocab(mm.cfg.vocab, cfg.data_seed));
+        let train_texts: Vec<String> = corpus.train.iter().map(|d| corpus.render(d)).collect();
+        let val_texts: Vec<String> = corpus.val.iter().map(|d| corpus.render(d)).collect();
+        let test_texts: Vec<String> = corpus.test.iter().map(|d| corpus.render(d)).collect();
+        let tokenizer = Tokenizer::train(&train_texts, mm.cfg.vocab);
+        let train = Batcher::new(&train_texts, &tokenizer, mm.cfg.seq_len);
+        let val = Batcher::new(&val_texts, &tokenizer, mm.cfg.seq_len);
+        let test = Batcher::new(&test_texts, &tokenizer, mm.cfg.seq_len);
+        let word_lut = eval::word_token_lut(&corpus, &tokenizer);
+
+        Ok(Session {
+            rt,
+            mm,
+            cfg,
+            params,
+            masks,
+            lora: None,
+            corpus,
+            tokenizer,
+            train,
+            val,
+            test,
+            word_lut,
+            rng,
+            last_tps: 0.0,
+            last_losses: Vec::new(),
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // Training loops.
+    // ------------------------------------------------------------------
+
+    /// Pretrain the dense model: full-FT steps with all-ones masks.
+    pub fn pretrain(&mut self, steps: u64, peak_lr: f64) -> Result<()> {
+        let schedule = Schedule::paper_default(peak_lr, steps);
+        self.run_training(Mode::Full, steps, schedule)
+    }
+
+    /// PERP retraining after pruning, any mode.  Initialises adapters for
+    /// LoRA modes (call [`Session::merge_adapters`] before evaluating).
+    pub fn retrain(&mut self, mode: Mode, steps: u64, peak_lr: f64) -> Result<()> {
+        if mode.is_lora() {
+            let st = LoraState::init(&self.mm, mode, &mut self.rng.fork(77));
+            self.lora = Some((mode, st));
+        }
+        let schedule = Schedule::paper_default(peak_lr, steps);
+        self.run_training(mode, steps, schedule)
+    }
+
+    /// Retrain with a combo-subset executable (`train_<mode_key>`, from the
+    /// --ablation artifact set).  No adapters involved.
+    pub fn retrain_custom(&mut self, mode_key: &str, steps: u64, peak_lr: f64) -> Result<()> {
+        let exec = format!("train_{mode_key}");
+        let leaves = self
+            .mm
+            .trainable
+            .get(mode_key)
+            .with_context(|| format!("no trainable set {mode_key:?} in manifest"))?
+            .clone();
+        let schedule = Schedule::paper_default(peak_lr, steps);
+        self.training_loop(&exec, leaves, false, steps, schedule)
+    }
+
+    fn run_training(&mut self, mode: Mode, steps: u64, schedule: Schedule) -> Result<()> {
+        let exec = mode.executable().to_string();
+        let leaf_names = self.leaf_names(mode);
+        self.training_loop(&exec, leaf_names, mode.is_lora(), steps, schedule)
+    }
+
+    fn training_loop(
+        &mut self,
+        exec: &str,
+        leaf_names: Vec<String>,
+        _is_lora: bool,
+        steps: u64,
+        schedule: Schedule,
+    ) -> Result<()> {
+        let mut opt = OptState::zeros(leaf_names.iter().map(|n| {
+            let shape = self.leaf_shape(n);
+            (n.as_str(), shape)
+        }));
+        let b = self.mm.cfg.train_batch;
+        let s = self.mm.cfg.seq_len;
+        let shape = [b, s];
+        let mut meter = TpsMeter::new();
+        let mut losses = Vec::with_capacity(steps as usize);
+        let mut batch_rng = self.rng.fork(0xBA7C);
+
+        for t in 1..=steps {
+            let tokens = self.train.train_batch(b, &mut batch_rng);
+            let lr = schedule.lr(t) as f32;
+
+            let mut feed = eval::base_feed(&self.params, &self.masks)
+                .ints("tokens", &shape, &tokens)
+                .scalar("step", t as f32)
+                .scalar("lr", lr);
+            if let Some((_, lora)) = &self.lora {
+                for (name, tsr) in &lora.tensors {
+                    // borrow, don't clone: adapters can be the largest leaf
+                    // tensors and this is the per-step hot path
+                    let (lin, tag) = split_adapter_name(name);
+                    feed = feed.owned_key(format!("{tag}::{lin}"), tsr);
+                }
+            }
+            for n in &leaf_names {
+                feed = feed
+                    .tensor(&format!("om::{n}"), &opt.m[n])
+                    .tensor(&format!("ov::{n}"), &opt.v[n]);
+            }
+
+            let mut out = self.rt.run(&self.mm.cfg.name, exec, &feed)?;
+            losses.push(out.scalar("loss"));
+            let new_leaves = out.drain_prefix("o::");
+            let new_m = out.drain_prefix("om::");
+            let new_v = out.drain_prefix("ov::");
+            for (name, tsr) in new_leaves {
+                self.write_leaf(&name, tsr);
+            }
+            for (name, tsr) in new_m {
+                opt.m.insert(name, tsr);
+            }
+            for (name, tsr) in new_v {
+                opt.v.insert(name, tsr);
+            }
+            meter.add_tokens((b * s) as u64);
+        }
+        self.last_tps = meter.tps();
+        self.last_losses = losses;
+        Ok(())
+    }
+
+    fn leaf_names(&self, mode: Mode) -> Vec<String> {
+        let mut names = self
+            .mm
+            .trainable
+            .get(mode.trainable_key())
+            .cloned()
+            .unwrap_or_default();
+        if mode.is_lora() {
+            names.extend(self.mm.adapters.iter().map(|(n, _)| n.clone()));
+        }
+        names
+    }
+
+    fn leaf_shape(&self, name: &str) -> &[usize] {
+        if name.contains("::") {
+            self.mm.adapter_shape(name)
+        } else {
+            self.mm.param_shape(name)
+        }
+    }
+
+    fn write_leaf(&mut self, name: &str, t: Tensor) {
+        if name.contains("::") {
+            if let Some((_, lora)) = &mut self.lora {
+                lora.set(name, t);
+            } else {
+                panic!("adapter output {name:?} without LoRA state");
+            }
+        } else {
+            self.params.set(name, t);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Calibration + pruning.
+    // ------------------------------------------------------------------
+
+    /// Accumulate per-prunable-linear Grams G = ΣXᵀX over the shared
+    /// calibration set.
+    pub fn calibrate(&mut self) -> Result<BTreeMap<String, Tensor>> {
+        let b = self.mm.cfg.eval_batch;
+        let s = self.mm.cfg.seq_len;
+        let shape = [b, s];
+        let batches = self
+            .train
+            .calibration(self.cfg.calib_seqs, b, self.cfg.data_seed);
+        let mut tap_grams: BTreeMap<String, Tensor> = BTreeMap::new();
+        for tokens in &batches {
+            let feed = eval::base_feed(&self.params, &self.masks).ints("tokens", &shape, tokens);
+            let out = self.rt.run(&self.mm.cfg.name, "calib_stats", &feed)?;
+            for (name, g) in out.values {
+                let key = name.strip_prefix("gram::").unwrap_or(&name).to_string();
+                tap_grams
+                    .entry(key)
+                    .and_modify(|acc| *acc = acc.add(&g))
+                    .or_insert(g);
+            }
+        }
+        // expand: q/k/v consume the same activations, hence the same Gram
+        let mut grams = BTreeMap::new();
+        for n in &self.mm.prunable {
+            let tap = self.mm.taps.get(n).unwrap_or(n);
+            let g = tap_grams
+                .get(tap)
+                .with_context(|| format!("no gram for tap {tap:?}"))?;
+            grams.insert(n.clone(), g.clone());
+        }
+        Ok(grams)
+    }
+
+    /// Prune every prunable linear; SparseGPT also updates weights.
+    /// `grams` required for Wanda/SparseGPT (from [`Session::calibrate`]).
+    pub fn prune(
+        &mut self,
+        criterion: Criterion,
+        pattern: Pattern,
+        grams: Option<&BTreeMap<String, Tensor>>,
+    ) -> Result<()> {
+        match criterion {
+            Criterion::Magnitude => {
+                let weights: BTreeMap<String, &Tensor> = self
+                    .mm
+                    .prunable
+                    .iter()
+                    .map(|n| (n.clone(), self.params.get(n)))
+                    .collect();
+                self.masks = magnitude::uniform(&weights, pattern);
+            }
+            Criterion::MagnitudeGlobal => {
+                let Pattern::Unstructured(f) = pattern else {
+                    bail!("global magnitude needs unstructured sparsity");
+                };
+                let weights: BTreeMap<String, &Tensor> = self
+                    .mm
+                    .prunable
+                    .iter()
+                    .map(|n| (n.clone(), self.params.get(n)))
+                    .collect();
+                self.masks = magnitude::global(&weights, f);
+            }
+            Criterion::Wanda => {
+                let grams = grams.context("wanda needs calibration grams")?;
+                let mut masks = MaskSet::default();
+                for n in &self.mm.prunable {
+                    let m = wanda::mask(self.params.get(n), &grams[n], pattern);
+                    masks.set(n, m);
+                }
+                self.masks = masks;
+            }
+            Criterion::SparseGpt => {
+                let grams = grams.context("sparsegpt needs calibration grams")?;
+                let mut masks = MaskSet::default();
+                for n in &self.mm.prunable.clone() {
+                    let res = sparsegpt::prune_layer(
+                        self.params.get(n),
+                        &grams[n],
+                        pattern,
+                        sparsegpt::DEFAULT_BLOCKSIZE,
+                        sparsegpt::DEFAULT_PERCDAMP,
+                    );
+                    masks.set(n, res.mask);
+                    self.params.set(n, res.weights);
+                }
+                self.masks = masks;
+            }
+        }
+        // pruned weights are forced to exact zero (footnote 1 of the paper)
+        self.params.apply_masks(&self.masks.masks);
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Adapter merging.
+    // ------------------------------------------------------------------
+
+    /// Fold LoRA adapters back into the weights per the mode's merge rule;
+    /// verifies sparsity preservation for the sparsity-preserving variants.
+    pub fn merge_adapters(&mut self) -> Result<()> {
+        let Some((mode, lora)) = self.lora.take() else {
+            return Ok(()); // nothing to merge (subset modes)
+        };
+        let scale = self.mm.cfg.lora_scale as f32;
+        for n in &self.mm.prunable.clone() {
+            let w = self.params.get(n);
+            let mask = self.masks.get(n);
+            let (a, b) = (lora.a(n), lora.b(n));
+            let merged = match mode {
+                Mode::Lora => merge::lora(w, a, b, scale),
+                Mode::LoraPrune => merge::lora_prune(w, mask, a, b, scale),
+                Mode::MaskLora | Mode::MaskLoraStd => merge::masklora(w, mask, a, b, scale),
+                Mode::ScaleLora => merge::scalelora(w, mask, a, b),
+                _ => unreachable!("merge on non-lora mode"),
+            };
+            if mode.mergeable_sparsity_preserving() == Some(true) {
+                assert!(
+                    merge::preserves_sparsity(&merged, mask),
+                    "{mode:?} merge resurrected pruned weights in {n}"
+                );
+            }
+            self.params.set(n, merged);
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Evaluation.
+    // ------------------------------------------------------------------
+
+    pub fn eval_ppl_val(&self) -> Result<PplResult> {
+        self.eval_ppl_with(&self.val)
+    }
+
+    pub fn eval_ppl_test(&self) -> Result<PplResult> {
+        self.eval_ppl_with(&self.test)
+    }
+
+    fn eval_ppl_with(&self, batcher: &Batcher) -> Result<PplResult> {
+        match &self.lora {
+            None => eval::perplexity(
+                self.rt, &self.mm, &self.params, &self.masks, batcher,
+                self.cfg.eval_batches,
+            ),
+            // standard LoRA is the one variant evaluated UNMERGED (merging
+            // would destroy sparsity — its extra inference cost is the
+            // paper's argument against it)
+            Some((Mode::Lora, lora)) => eval::perplexity_lora(
+                self.rt, &self.mm, &self.params, &self.masks, lora, batcher,
+                self.cfg.eval_batches,
+            ),
+            Some((mode, _)) => {
+                bail!("merge adapters before eval (mode {mode:?} still active)")
+            }
+        }
+    }
+
+    pub fn eval_tasks(&self) -> Result<Vec<TaskResult>> {
+        let lora = match &self.lora {
+            None => None,
+            Some((Mode::Lora, lora)) => Some(lora),
+            Some((mode, _)) => bail!("merge adapters before eval (mode {mode:?})"),
+        };
+        let suite = tasks::build_suite(&self.corpus, self.cfg.items_per_task, self.cfg.data_seed ^ 0x7A5C);
+        eval::zero_shot(
+            self.rt,
+            &self.mm,
+            &self.params,
+            &self.masks,
+            lora,
+            &suite,
+            &self.word_lut,
+        )
+    }
+
+    // ------------------------------------------------------------------
+    // Checkpoints.
+    // ------------------------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.params.save(path)
+    }
+
+    pub fn load(&mut self, path: &Path) -> Result<()> {
+        self.params = ParamStore::load(&self.mm, path)?;
+        Ok(())
+    }
+
+    /// Restore dense state: all-ones masks (params unchanged).
+    pub fn reset_masks(&mut self) {
+        let mm = &self.mm;
+        self.masks = MaskSet::dense(&mm.prunable, |n| mm.param_shape(n).to_vec());
+    }
+}
+
+/// "h0_attn_q_w::A" -> ("h0_attn_q_w", "a")
+pub fn split_adapter_name(name: &str) -> (&str, &'static str) {
+    if let Some(lin) = name.strip_suffix("::A") {
+        (lin, "a")
+    } else if let Some(lin) = name.strip_suffix("::B") {
+        (lin, "b")
+    } else {
+        panic!("not an adapter name: {name:?}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adapter_name_split() {
+        assert_eq!(split_adapter_name("x_w::A"), ("x_w", "a"));
+        assert_eq!(split_adapter_name("x_w::B"), ("x_w", "b"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_adapter_name_panics() {
+        split_adapter_name("plain");
+    }
+}

@@ -1,0 +1,152 @@
+//! Batching: pack tokenized documents into fixed (batch, seq_len) blocks.
+//!
+//! Documents are concatenated with `<sep>` into a single stream per split
+//! (GPT-style packing), then chunked.  Training batches are sampled with a
+//! seeded RNG (infinite, shuffled-with-replacement over chunk windows);
+//! eval batches walk the stream deterministically.  A calibration sampler
+//! draws the fixed `n` sequences Wanda/SparseGPT/reconstruction share.
+
+use crate::util::rng::Rng;
+
+use super::tokenizer::{Tokenizer, BOS, SEP};
+
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    stream: Vec<i32>,
+    pub seq_len: usize,
+}
+
+impl Batcher {
+    pub fn new(docs_text: &[String], tok: &Tokenizer, seq_len: usize) -> Batcher {
+        let mut stream = vec![BOS];
+        for d in docs_text {
+            stream.extend(tok.encode(d));
+            stream.push(SEP);
+        }
+        Batcher { stream, seq_len }
+    }
+
+    pub fn from_ids(mut stream: Vec<i32>, seq_len: usize) -> Batcher {
+        if stream.is_empty() {
+            stream.push(BOS);
+        }
+        Batcher { stream, seq_len }
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.stream.len()
+    }
+
+    /// Number of non-overlapping eval windows.
+    pub fn n_windows(&self) -> usize {
+        self.stream.len() / self.seq_len
+    }
+
+    fn window(&self, i: usize) -> &[i32] {
+        &self.stream[i * self.seq_len..(i + 1) * self.seq_len]
+    }
+
+    /// Deterministic eval batch `idx` of size `batch` (wraps around).
+    pub fn eval_batch(&self, batch: usize, idx: usize) -> Vec<i32> {
+        let n = self.n_windows().max(1);
+        let mut out = Vec::with_capacity(batch * self.seq_len);
+        for b in 0..batch {
+            let w = (idx * batch + b) % n;
+            out.extend_from_slice(self.window(w));
+        }
+        out
+    }
+
+    /// Number of eval batches covering every window once.
+    pub fn n_eval_batches(&self, batch: usize) -> usize {
+        self.n_windows().div_ceil(batch).max(1)
+    }
+
+    /// Random train batch: `batch` windows at random offsets (not only
+    /// window-aligned, to decorrelate epochs).
+    pub fn train_batch(&self, batch: usize, rng: &mut Rng) -> Vec<i32> {
+        let max_start = self.stream.len().saturating_sub(self.seq_len + 1).max(1);
+        let mut out = Vec::with_capacity(batch * self.seq_len);
+        for _ in 0..batch {
+            let start = rng.below(max_start as u64) as usize;
+            out.extend_from_slice(&self.stream[start..start + self.seq_len]);
+        }
+        out
+    }
+
+    /// The shared calibration set: `n` deterministic windows from a seeded
+    /// shuffle (paper: "we use the same set for both methods as well as the
+    /// subsequent reconstruction").
+    pub fn calibration(&self, n: usize, batch: usize, seed: u64) -> Vec<Vec<i32>> {
+        let mut rng = Rng::new(seed ^ 0xCA11B);
+        let mut windows: Vec<usize> = (0..self.n_windows().max(1)).collect();
+        rng.shuffle(&mut windows);
+        let mut batches = Vec::new();
+        let mut taken = 0;
+        while taken < n {
+            let mut out = Vec::with_capacity(batch * self.seq_len);
+            for b in 0..batch {
+                let w = windows[(taken + b) % windows.len()];
+                out.extend_from_slice(self.window(w.min(self.n_windows().saturating_sub(1))));
+            }
+            taken += batch;
+            batches.push(out);
+        }
+        batches
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batcher() -> Batcher {
+        let ids: Vec<i32> = (0..1000).map(|i| (i % 50) + 4).collect();
+        Batcher::from_ids(ids, 32)
+    }
+
+    #[test]
+    fn eval_batches_cover_stream() {
+        let b = batcher();
+        assert_eq!(b.n_windows(), 31);
+        let n = b.n_eval_batches(4);
+        assert_eq!(n, 8);
+        let batch = b.eval_batch(4, 0);
+        assert_eq!(batch.len(), 4 * 32);
+        assert_eq!(batch[0], 4); // first token of stream
+    }
+
+    #[test]
+    fn eval_batches_deterministic() {
+        let b = batcher();
+        assert_eq!(b.eval_batch(4, 3), b.eval_batch(4, 3));
+    }
+
+    #[test]
+    fn train_batches_seeded() {
+        let b = batcher();
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        assert_eq!(b.train_batch(2, &mut r1), b.train_batch(2, &mut r2));
+        let mut r3 = Rng::new(6);
+        assert_ne!(b.train_batch(2, &mut r1), b.train_batch(2, &mut r3));
+    }
+
+    #[test]
+    fn calibration_is_shared_and_sized() {
+        let b = batcher();
+        let c1 = b.calibration(16, 4, 99);
+        let c2 = b.calibration(16, 4, 99);
+        assert_eq!(c1, c2);
+        assert_eq!(c1.len(), 4); // 16 seqs / batch 4
+        assert_ne!(c1, b.calibration(16, 4, 100));
+    }
+
+    #[test]
+    fn short_stream_still_works() {
+        let b = Batcher::from_ids((0..40).collect(), 32);
+        assert_eq!(b.n_windows(), 1);
+        let batch = b.eval_batch(4, 0);
+        assert_eq!(batch.len(), 128);
+    }
+}

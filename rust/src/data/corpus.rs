@@ -1,0 +1,289 @@
+//! SynthText: a synthetic, learnable language.
+//!
+//! Generative process (all deterministic from one seed):
+//!
+//! 1. A lexicon of `n_words` word strings with Zipfian unigram frequencies.
+//! 2. `n_topics` topics; each topic owns a sparse Markov kernel: every word
+//!    gets `branch` preferred successors (drawn per topic).  With prob
+//!    `coherence` the walk follows a preferred successor (weighted), else it
+//!    falls back to the Zipfian unigram draw.
+//! 3. A document picks one topic and random-walks for its length; sentences
+//!    are delimited with a '.' word, documents with a newline.
+//!
+//! Why this suffices for PERP: the model must learn (a) the global Zipf
+//! marginal, (b) per-topic successor tables, (c) topic persistence across a
+//! document.  These are exactly the kinds of distributed features magnitude
+//! pruning damages and cheap retraining re-aligns.  Train/val/test documents
+//! are disjoint by construction (document index ranges).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    pub n_words: usize,
+    pub n_topics: usize,
+    /// preferred successors per (topic, word)
+    pub branch: usize,
+    /// probability of following the topic kernel instead of unigram fallback
+    pub coherence: f64,
+    pub doc_len_words: usize,
+    pub n_docs_train: usize,
+    pub n_docs_val: usize,
+    pub n_docs_test: usize,
+    pub seed: u64,
+}
+
+impl CorpusConfig {
+    /// Scale the corpus to a model's vocab budget: the tokenizer needs room
+    /// for all words plus specials, so n_words stays below `vocab`.
+    pub fn for_vocab(vocab: usize, seed: u64) -> CorpusConfig {
+        let n_words = (vocab * 7 / 8).max(16);
+        CorpusConfig {
+            // hard enough that the model has no spare capacity: many topics,
+            // wide branching, high coherence — every weight ends up carrying
+            // successor-table information, which is exactly the regime where
+            // magnitude pruning collapses (cf. the paper's OPT observations).
+            n_words,
+            n_topics: 16,
+            branch: 6,
+            coherence: 0.92,
+            doc_len_words: 256,
+            n_docs_train: 600,
+            n_docs_val: 40,
+            n_docs_test: 60,
+            seed,
+        }
+    }
+}
+
+/// A fully generated corpus: word-level documents per split.
+pub struct Corpus {
+    pub cfg: CorpusConfig,
+    /// word id -> surface string (the tokenizer consumes these)
+    pub lexicon: Vec<String>,
+    /// Zipf weights over the lexicon
+    unigram: Vec<f64>,
+    /// [topic][word] -> preferred successor ids
+    successors: Vec<Vec<Vec<u32>>>,
+    /// successor weights (shared shape with successors)
+    succ_weights: Vec<f64>,
+    pub train: Vec<Vec<u32>>,
+    pub val: Vec<Vec<u32>>,
+    pub test: Vec<Vec<u32>>,
+}
+
+impl Corpus {
+    pub fn generate(cfg: CorpusConfig) -> Corpus {
+        let mut rng = Rng::new(cfg.seed);
+        let lexicon = make_lexicon(cfg.n_words, &mut rng);
+        let unigram: Vec<f64> = (0..cfg.n_words)
+            .map(|i| 1.0 / ((i + 2) as f64).powf(1.1))
+            .collect();
+        // per-topic successor tables
+        let mut successors = Vec::with_capacity(cfg.n_topics);
+        for _ in 0..cfg.n_topics {
+            let mut table = Vec::with_capacity(cfg.n_words);
+            for _ in 0..cfg.n_words {
+                let succ: Vec<u32> = (0..cfg.branch)
+                    .map(|_| rng.weighted(&unigram) as u32)
+                    .collect();
+                table.push(succ);
+            }
+            successors.push(table);
+        }
+        let succ_weights: Vec<f64> = (0..cfg.branch).map(|i| 1.0 / (i + 1) as f64).collect();
+
+        let mut c = Corpus {
+            cfg,
+            lexicon,
+            unigram,
+            successors,
+            succ_weights,
+            train: vec![],
+            val: vec![],
+            test: vec![],
+        };
+        let mut gen_rng = Rng::new(c.cfg.seed ^ 0xD0C5);
+        c.train = c.gen_docs(c.cfg.n_docs_train, &mut gen_rng);
+        c.val = c.gen_docs(c.cfg.n_docs_val, &mut gen_rng);
+        c.test = c.gen_docs(c.cfg.n_docs_test, &mut gen_rng);
+        c
+    }
+
+    fn gen_docs(&self, n: usize, rng: &mut Rng) -> Vec<Vec<u32>> {
+        (0..n).map(|_| self.gen_doc(self.cfg.doc_len_words, rng)).collect()
+    }
+
+    /// Generate one document as word ids under a random topic.
+    pub fn gen_doc(&self, len: usize, rng: &mut Rng) -> Vec<u32> {
+        let topic = rng.below(self.cfg.n_topics as u64) as usize;
+        self.gen_doc_with_topic(len, topic, rng)
+    }
+
+    pub fn gen_doc_with_topic(&self, len: usize, topic: usize, rng: &mut Rng) -> Vec<u32> {
+        let mut doc = Vec::with_capacity(len);
+        let mut cur = rng.weighted(&self.unigram) as u32;
+        doc.push(cur);
+        for _ in 1..len {
+            cur = self.next_word(topic, cur, rng);
+            doc.push(cur);
+        }
+        doc
+    }
+
+    pub fn next_word(&self, topic: usize, cur: u32, rng: &mut Rng) -> u32 {
+        if rng.f64() < self.cfg.coherence {
+            let succ = &self.successors[topic][cur as usize];
+            succ[rng.weighted(&self.succ_weights)]
+        } else {
+            rng.weighted(&self.unigram) as u32
+        }
+    }
+
+    pub fn n_topics(&self) -> usize {
+        self.cfg.n_topics
+    }
+
+    /// Render a document's surface text (what the tokenizer consumes).
+    pub fn render(&self, doc: &[u32]) -> String {
+        let words: Vec<&str> = doc.iter().map(|&w| self.lexicon[w as usize].as_str()).collect();
+        words.join(" ")
+    }
+
+    /// Analytical entropy bound: with coherence c and branch k the
+    /// conditional distribution mixes a k-support kernel with the unigram;
+    /// a fitted model should land well below the unigram entropy.
+    pub fn unigram_entropy(&self) -> f64 {
+        let z: f64 = self.unigram.iter().sum();
+        -self
+            .unigram
+            .iter()
+            .map(|w| {
+                let p = w / z;
+                p * p.ln()
+            })
+            .sum::<f64>()
+    }
+}
+
+fn make_lexicon(n: usize, rng: &mut Rng) -> Vec<String> {
+    let consonants = b"bcdfghjklmnprstvwz";
+    let vowels = b"aeiou";
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let syllables = 1 + rng.below(3) as usize;
+        let mut w = String::new();
+        for _ in 0..syllables {
+            w.push(consonants[rng.below(consonants.len() as u64) as usize] as char);
+            w.push(vowels[rng.below(vowels.len() as u64) as usize] as char);
+        }
+        if seen.insert(w.clone()) {
+            out.push(w);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Corpus {
+        Corpus::generate(CorpusConfig {
+            n_words: 64,
+            n_topics: 4,
+            branch: 3,
+            coherence: 0.9,
+            doc_len_words: 100,
+            n_docs_train: 20,
+            n_docs_val: 4,
+            n_docs_test: 4,
+            seed: 7,
+        })
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = small();
+        let b = small();
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.lexicon, b.lexicon);
+    }
+
+    #[test]
+    fn splits_have_requested_sizes() {
+        let c = small();
+        assert_eq!(c.train.len(), 20);
+        assert_eq!(c.val.len(), 4);
+        assert_eq!(c.test.len(), 4);
+        assert!(c.train.iter().all(|d| d.len() == 100));
+    }
+
+    #[test]
+    fn words_in_range_and_zipf_head_heavy() {
+        let c = small();
+        let mut counts = vec![0usize; c.cfg.n_words];
+        for d in &c.train {
+            for &w in d {
+                assert!((w as usize) < c.cfg.n_words);
+                counts[w as usize] += 1;
+            }
+        }
+        let head: usize = counts[..8].iter().sum();
+        let tail: usize = counts[32..].iter().sum();
+        assert!(head > tail, "zipf head {head} should outweigh tail {tail}");
+    }
+
+    #[test]
+    fn markov_structure_is_learnable() {
+        // the empirical bigram conditional entropy must be well below the
+        // unigram entropy — that gap is what a trained model exploits.
+        let c = small();
+        let v = c.cfg.n_words;
+        let mut big = vec![0f64; v * v];
+        let mut uni = vec![0f64; v];
+        for d in &c.train {
+            for w in d.windows(2) {
+                big[w[0] as usize * v + w[1] as usize] += 1.0;
+                uni[w[0] as usize] += 1.0;
+            }
+        }
+        let mut h_cond = 0.0;
+        let total: f64 = uni.iter().sum();
+        for a in 0..v {
+            if uni[a] == 0.0 {
+                continue;
+            }
+            let mut h = 0.0;
+            for b in 0..v {
+                let c2 = big[a * v + b];
+                if c2 > 0.0 {
+                    let p = c2 / uni[a];
+                    h -= p * p.ln();
+                }
+            }
+            h_cond += uni[a] / total * h;
+        }
+        let h_uni = c.unigram_entropy();
+        assert!(
+            h_cond < 0.75 * h_uni,
+            "conditional entropy {h_cond:.2} vs unigram {h_uni:.2}"
+        );
+    }
+
+    #[test]
+    fn render_is_textual() {
+        let c = small();
+        let text = c.render(&c.train[0][..10]);
+        assert!(text.split(' ').count() == 10);
+        assert!(text.chars().all(|ch| ch.is_ascii_lowercase() || ch == ' '));
+    }
+
+    #[test]
+    fn lexicon_unique() {
+        let c = small();
+        let set: std::collections::HashSet<_> = c.lexicon.iter().collect();
+        assert_eq!(set.len(), c.lexicon.len());
+    }
+}

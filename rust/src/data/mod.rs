@@ -1,0 +1,18 @@
+//! Data pipeline: synthetic corpus ("SynthText"), tokenizer, batcher and
+//! calibration sampler.
+//!
+//! Substitution for the paper's C4 (retraining) + WikiText (perplexity):
+//! a probabilistic grammar with Zipfian lexicon and per-topic Markov
+//! structure (see [`corpus`]).  The distribution is genuinely learnable —
+//! bigram entropy is far below log|V| — so a converged model shows the
+//! paper's collapse-and-recover behaviour under pruning, while held-out
+//! splits keep perplexity honest.
+
+pub mod batcher;
+pub mod corpus;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use batcher::Batcher;
+pub use corpus::{Corpus, CorpusConfig};
+pub use tokenizer::Tokenizer;

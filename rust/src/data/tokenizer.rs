@@ -1,0 +1,129 @@
+//! Word-level tokenizer with a frequency-built vocabulary.
+//!
+//! The corpus generator emits surface text; this tokenizer builds its vocab
+//! from the training split (most-frequent-first), reserving specials:
+//!
+//! * `<pad>` = 0, `<unk>` = 1, `<bos>` = 2, `<sep>` = 3
+//!
+//! Words beyond the vocab budget map to `<unk>`.  Encoding/decoding is
+//! whitespace-based (the synthetic lexicon contains no punctuation), which
+//! keeps the pipeline honest — model vocab ids are *tokenizer* ids, not
+//! generator word ids, exactly like a real corpus→tokenizer→model stack.
+
+use std::collections::HashMap;
+
+pub const PAD: i32 = 0;
+pub const UNK: i32 = 1;
+pub const BOS: i32 = 2;
+pub const SEP: i32 = 3;
+pub const N_SPECIALS: usize = 4;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab: HashMap<String, i32>,
+    inverse: Vec<String>,
+}
+
+impl Tokenizer {
+    /// Build a vocab of at most `vocab_size` entries from training text.
+    pub fn train(texts: &[String], vocab_size: usize) -> Tokenizer {
+        assert!(vocab_size > N_SPECIALS, "vocab too small");
+        let mut counts: HashMap<&str, u64> = HashMap::new();
+        for t in texts {
+            for w in t.split_whitespace() {
+                *counts.entry(w).or_insert(0) += 1;
+            }
+        }
+        let mut by_freq: Vec<(&str, u64)> = counts.into_iter().collect();
+        // sort: frequency desc, then lexicographic for determinism
+        by_freq.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        let mut inverse = vec![
+            "<pad>".to_string(),
+            "<unk>".to_string(),
+            "<bos>".to_string(),
+            "<sep>".to_string(),
+        ];
+        for (w, _) in by_freq.into_iter().take(vocab_size - N_SPECIALS) {
+            inverse.push(w.to_string());
+        }
+        let vocab = inverse
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as i32))
+            .collect();
+        Tokenizer { vocab, inverse }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.inverse.len()
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.split_whitespace()
+            .map(|w| self.vocab.get(w).copied().unwrap_or(UNK))
+            .collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .map(|&i| {
+                self.inverse
+                    .get(i as usize)
+                    .map(|s| s.as_str())
+                    .unwrap_or("<bad>")
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn unk_rate(&self, ids: &[i32]) -> f64 {
+        ids.iter().filter(|&&i| i == UNK).count() as f64 / ids.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Tokenizer {
+        let texts = vec![
+            "ba ba ba ce ce du".to_string(),
+            "ba ce fu".to_string(),
+        ];
+        Tokenizer::train(&texts, 6) // 4 specials + 2 words
+    }
+
+    #[test]
+    fn most_frequent_words_kept() {
+        let t = toy();
+        assert_eq!(t.vocab_size(), 6);
+        // "ba" (4x) and "ce" (3x) survive; "du"/"fu" fall to <unk>
+        let ids = t.encode("ba ce du fu");
+        assert_eq!(ids[0], 4);
+        assert_eq!(ids[1], 5);
+        assert_eq!(ids[2], UNK);
+        assert_eq!(ids[3], UNK);
+    }
+
+    #[test]
+    fn roundtrip_known_words() {
+        let t = toy();
+        let ids = t.encode("ba ce ba");
+        assert_eq!(t.decode(&ids), "ba ce ba");
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        let texts = vec!["aa bb".to_string()];
+        let t1 = Tokenizer::train(&texts, 6);
+        let t2 = Tokenizer::train(&texts, 6);
+        assert_eq!(t1.encode("aa bb"), t2.encode("aa bb"));
+    }
+
+    #[test]
+    fn unk_rate_measured() {
+        let t = toy();
+        let ids = t.encode("ba xx yy");
+        assert!((t.unk_rate(&ids) - 2.0 / 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,269 @@
+//! Evaluation: perplexity (WikiText analogue) and the zero-shot suite
+//! (EleutherAI-harness analogue).
+//!
+//! Both run purely through compiled executables — `eval_loss` aggregates
+//! exact token-level NLL sums; `score` returns per-sequence option log-probs
+//! for likelihood ranking.
+
+use anyhow::Result;
+
+use crate::data::tasks::Task;
+use crate::data::{Batcher, Corpus, Tokenizer};
+use crate::model::ParamStore;
+use crate::peft::LoraState;
+use crate::pruning::MaskSet;
+use crate::runtime::{Feed, ModelManifest, Runtime};
+use crate::tensor::Tensor;
+
+/// Build the base feed shared by every executable: all params + masks.
+pub fn base_feed<'a>(ps: &'a ParamStore, masks: &'a MaskSet) -> Feed<'a> {
+    let mut f = Feed::new();
+    for (n, t) in ps.map() {
+        f = f.tensor(&format!("p::{n}"), t);
+    }
+    for (n, t) in &masks.masks {
+        f = f.tensor(&format!("m::{n}"), t);
+    }
+    f
+}
+
+/// Extend a feed with adapter tensors under the aot naming (a::/b::).
+pub fn adapter_feed<'a>(mut f: Feed<'a>, lora: &'a LoraState) -> Feed<'a> {
+    for (name, t) in &lora.tensors {
+        let (lin, tag) = crate::coordinator::session::split_adapter_name(name);
+        f = f.owned_key(format!("{tag}::{lin}"), t);
+    }
+    f
+}
+
+#[derive(Debug, Clone)]
+pub struct PplResult {
+    pub loss: f64,
+    pub ppl: f64,
+    pub tokens: f64,
+}
+
+/// Exact perplexity over (up to `max_batches` of) a batcher's windows.
+pub fn perplexity(
+    rt: &Runtime,
+    mm: &ModelManifest,
+    ps: &ParamStore,
+    masks: &MaskSet,
+    batcher: &Batcher,
+    max_batches: usize,
+) -> Result<PplResult> {
+    let b = mm.cfg.eval_batch;
+    let s = mm.cfg.seq_len;
+    let shape = [b, s];
+    let n = batcher.n_eval_batches(b).min(max_batches).max(1);
+    let (mut loss_sum, mut count) = (0.0f64, 0.0f64);
+    for i in 0..n {
+        let tokens = batcher.eval_batch(b, i);
+        let feed = base_feed(ps, masks).ints("tokens", &shape, &tokens);
+        let out = rt.run(&mm.cfg.name, "eval_loss", &feed)?;
+        loss_sum += out.scalar("loss_sum") as f64;
+        count += out.scalar("count") as f64;
+    }
+    let loss = loss_sum / count.max(1.0);
+    Ok(PplResult { loss, ppl: loss.exp(), tokens: count })
+}
+
+/// Perplexity with standard-LoRA adapters active (unmerged).
+pub fn perplexity_lora(
+    rt: &Runtime,
+    mm: &ModelManifest,
+    ps: &ParamStore,
+    masks: &MaskSet,
+    lora: &LoraState,
+    batcher: &Batcher,
+    max_batches: usize,
+) -> Result<PplResult> {
+    let b = mm.cfg.eval_batch;
+    let s = mm.cfg.seq_len;
+    let shape = [b, s];
+    let n = batcher.n_eval_batches(b).min(max_batches).max(1);
+    let (mut loss_sum, mut count) = (0.0f64, 0.0f64);
+    for i in 0..n {
+        let tokens = batcher.eval_batch(b, i);
+        let feed = adapter_feed(base_feed(ps, masks), lora).ints("tokens", &shape, &tokens);
+        let out = rt.run(&mm.cfg.name, "eval_loss_lora", &feed)?;
+        loss_sum += out.scalar("loss_sum") as f64;
+        count += out.scalar("count") as f64;
+    }
+    let loss = loss_sum / count.max(1.0);
+    Ok(PplResult { loss, ppl: loss.exp(), tokens: count })
+}
+
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub name: String,
+    pub accuracy: f64,
+    pub items: usize,
+}
+
+pub fn mean_accuracy(results: &[TaskResult]) -> f64 {
+    results.iter().map(|r| r.accuracy).sum::<f64>() / results.len().max(1) as f64
+}
+
+/// Token-id lookup for corpus word ids (the tasks are generated as word ids).
+pub fn word_token_lut(corpus: &Corpus, tok: &Tokenizer) -> Vec<i32> {
+    corpus
+        .lexicon
+        .iter()
+        .map(|w| {
+            let ids = tok.encode(w);
+            ids.first().copied().unwrap_or(crate::data::tokenizer::UNK)
+        })
+        .collect()
+}
+
+/// Run the full zero-shot suite; per-task accuracy via length-normalised
+/// likelihood ranking, batched through the `score` executable.
+pub fn zero_shot(
+    rt: &Runtime,
+    mm: &ModelManifest,
+    ps: &ParamStore,
+    masks: &MaskSet,
+    lora: Option<&LoraState>,
+    tasks: &[Task],
+    lut: &[i32],
+) -> Result<Vec<TaskResult>> {
+    let exec = if lora.is_some() { "score_lora" } else { "score" };
+    let b = mm.cfg.eval_batch;
+    let s = mm.cfg.seq_len;
+    let shape = [b, s];
+
+    let mut results = Vec::with_capacity(tasks.len());
+    for task in tasks {
+        // flatten (item, option) pairs into scoring rows
+        let mut rows_tokens: Vec<i32> = Vec::new();
+        let mut rows_tmask: Vec<f32> = Vec::new();
+        let mut row_meta: Vec<(usize, usize)> = Vec::new(); // (item, option)
+        for (ii, item) in task.items.iter().enumerate() {
+            for (oi, opt) in item.options.iter().enumerate() {
+                let (t, m) = render_row(&item.context, opt, lut, s);
+                rows_tokens.extend(t);
+                rows_tmask.extend(m);
+                row_meta.push((ii, oi));
+            }
+        }
+        // pad the row count to a batch multiple
+        while row_meta.len() % b != 0 {
+            rows_tokens.extend(vec![crate::data::tokenizer::PAD; s]);
+            rows_tmask.extend(vec![0.0; s]);
+            row_meta.push((usize::MAX, 0));
+        }
+
+        let mut scores: Vec<Vec<f64>> = task
+            .items
+            .iter()
+            .map(|it| vec![0.0; it.options.len()])
+            .collect();
+        for chunk in 0..row_meta.len() / b {
+            let t = &rows_tokens[chunk * b * s..(chunk + 1) * b * s];
+            let mvals = &rows_tmask[chunk * b * s..(chunk + 1) * b * s];
+            let tmask = Tensor::new(&[b, s], mvals.to_vec());
+            let mut feed = base_feed(ps, masks)
+                .ints("tokens", &shape, t)
+                .owned("tmask", tmask);
+            if let Some(l) = lora {
+                feed = adapter_feed(feed, l);
+            }
+            let out = rt.run(&mm.cfg.name, exec, &feed)?;
+            let sc = out.get("scores");
+            let ct = out.get("counts");
+            for r in 0..b {
+                let (ii, oi) = row_meta[chunk * b + r];
+                if ii == usize::MAX {
+                    continue;
+                }
+                let cnt = ct.data()[r].max(1.0);
+                scores[ii][oi] = sc.data()[r] as f64 / cnt as f64;
+            }
+        }
+
+        let correct = task
+            .items
+            .iter()
+            .zip(&scores)
+            .filter(|(item, sc)| {
+                let best = sc
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                best == item.correct
+            })
+            .count();
+        results.push(TaskResult {
+            name: task.name.clone(),
+            accuracy: correct as f64 / task.items.len().max(1) as f64,
+            items: task.items.len(),
+        });
+    }
+    Ok(results)
+}
+
+/// Lay out one scoring row: [BOS] ctx option PAD...; tmask = 1 on option
+/// token positions (truncating from the left if the row overflows).
+fn render_row(context: &[u32], option: &[u32], lut: &[i32], seq_len: usize) -> (Vec<i32>, Vec<f32>) {
+    use crate::data::tokenizer::{BOS, PAD};
+    let mut toks = vec![BOS];
+    toks.extend(context.iter().map(|&w| lut[w as usize]));
+    let opt_start = toks.len();
+    toks.extend(option.iter().map(|&w| lut[w as usize]));
+    let mut tmask = vec![0.0f32; toks.len()];
+    for x in tmask[opt_start..].iter_mut() {
+        *x = 1.0;
+    }
+    if toks.len() > seq_len {
+        let cut = toks.len() - seq_len;
+        toks.drain(..cut);
+        tmask.drain(..cut);
+    }
+    while toks.len() < seq_len {
+        toks.push(PAD);
+        tmask.push(0.0);
+    }
+    (toks, tmask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_row_masks_only_option() {
+        let lut: Vec<i32> = (0..10).map(|i| i + 4).collect();
+        let (t, m) = render_row(&[1, 2], &[3, 4, 5], &lut, 10);
+        assert_eq!(t.len(), 10);
+        assert_eq!(m.len(), 10);
+        assert_eq!(t[0], crate::data::tokenizer::BOS);
+        assert_eq!(&m[..3], &[0.0, 0.0, 0.0]);
+        assert_eq!(&m[3..6], &[1.0, 1.0, 1.0]);
+        assert_eq!(&m[6..], &[0.0; 4]);
+        assert_eq!(t[9], crate::data::tokenizer::PAD);
+    }
+
+    #[test]
+    fn render_row_truncates_left() {
+        let lut: Vec<i32> = (0..50).map(|i| i + 4).collect();
+        let ctx: Vec<u32> = (0..20).collect();
+        let opt: Vec<u32> = (20..25).collect();
+        let (t, m) = render_row(&ctx, &opt, &lut, 12);
+        assert_eq!(t.len(), 12);
+        // option tokens (last 5) all still masked
+        assert_eq!(m.iter().filter(|&&x| x == 1.0).count(), 5);
+        assert_eq!(&m[7..], &[1.0; 5]);
+    }
+
+    #[test]
+    fn mean_accuracy_math() {
+        let rs = vec![
+            TaskResult { name: "a".into(), accuracy: 0.5, items: 10 },
+            TaskResult { name: "b".into(), accuracy: 1.0, items: 10 },
+        ];
+        assert_eq!(mean_accuracy(&rs), 0.75);
+    }
+}

@@ -1,0 +1,34 @@
+//! # PERP — Parameter-Efficient Retraining after Pruning
+//!
+//! Rust + JAX + Pallas reproduction of *PERP: Rethinking the Prune-Retrain
+//! Paradigm in the Era of LLMs* (Zimmer et al., 2023).
+//!
+//! Three layers (see DESIGN.md):
+//!
+//! * **L1** Pallas kernels and **L2** JAX training graphs live in `python/`
+//!   and are AOT-lowered once into `artifacts/*.hlo.txt`.
+//! * **L3** (this crate) is the only runtime layer: it owns model weights,
+//!   optimizer state, masks and adapters on the host, computes pruning
+//!   criteria (magnitude / Wanda / SparseGPT / N:M), schedules retraining
+//!   and layer-wise reconstruction, and evaluates perplexity plus a
+//!   seven-task zero-shot suite — executing the compiled graphs through the
+//!   PJRT CPU client (`runtime`).
+//!
+//! The environment is fully offline with a fixed crate set, so the usual
+//! suspects (serde, clap, criterion, proptest, rand) are re-implemented as
+//! small, tested substrates under [`util`].
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod peft;
+pub mod pruning;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use tensor::Tensor;

@@ -1,0 +1,304 @@
+//! `repro` — the PERP launcher.
+//!
+//! ```text
+//! repro info                                      # models, executables, memory table
+//! repro pretrain  --model gpt-nano --steps 200    # converge + cache dense weights
+//! repro prune     --model gpt-nano --criterion wanda --sparsity 0.5
+//! repro retrain   --model gpt-nano --mode masklora --steps 100
+//! repro reconstruct --model gpt-nano --criterion magnitude --sparsity 0.5
+//! repro eval      --model gpt-nano
+//! repro sweep     --exp table1 [--model gpt-small] [--profile quick|full]
+//! repro tables    [--profile quick]               # regenerate everything
+//! ```
+//!
+//! All state flows through the cache directory (`--out`, default `results/`):
+//! pretrained checkpoints are reused across invocations and sweeps.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use perp::config::ExperimentConfig;
+use perp::coordinator::reconstruct::{self, ReconMode};
+use perp::coordinator::sweep::{self, ExpContext};
+use perp::peft::Mode;
+use perp::pruning::{Criterion, Pattern};
+use perp::runtime::{default_artifacts_dir, Runtime};
+use perp::util::cli::Args;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    match sub.as_str() {
+        "help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        "info" => info(args),
+        "pretrain" => pretrain(args),
+        "prune" => prune(args),
+        "retrain" => retrain(args),
+        "reconstruct" => reconstruct_cmd(args),
+        "eval" => eval_cmd(args),
+        "sweep" => sweep_cmd(args),
+        "tables" => tables(args),
+        other => bail!("unknown subcommand {other:?}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "\
+repro — PERP: Parameter-Efficient Retraining after Pruning (reproduction)
+
+subcommands:
+  info          list models, executables and the analytical memory table
+  pretrain      converge a dense model and cache the checkpoint
+  prune         prune the cached dense model, report ppl collapse
+  retrain       prune + retrain with a PERP mode, report recovery
+  reconstruct   prune + layer-wise reconstruction (Eq. 1)
+  eval          evaluate the cached dense model (ppl + zero-shot)
+  sweep         regenerate one paper table/figure (--exp <id>)
+  tables        regenerate every table/figure
+
+common flags:
+  --model <name>       gpt-nano | gpt-tiny | gpt-small | llama-tiny  [gpt-tiny]
+  --profile <p>        quick | full                                 [quick]
+  --artifacts <dir>    artifacts directory                           [./artifacts]
+  --out <dir>          results + checkpoint cache                    [./results]
+  --seed <n>           experiment seed                               [0]
+  --criterion <c>      magnitude | magnitude-global | wanda | sparsegpt
+  --sparsity <s>       0.5 | 50 | 2:4 | 4:8
+  --mode <m>           full | biases | ln | biases_ln | head | embed |
+                       lora | lora_prune | masklora | masklora_std | scalelora
+  --steps <n>          override step counts
+  --exp <id>           fig1 fig2 table1 table2 table3 table4 table5
+                       table19 table20 table22 memory
+";
+
+struct Env {
+    rt: Runtime,
+    cfg: ExperimentConfig,
+    out: PathBuf,
+    seed: u64,
+}
+
+fn common(args: &Args) -> Result<Env> {
+    let artifacts = args
+        .opt_str("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    let rt = Runtime::new(&artifacts)?;
+    let model = args.str("model", "gpt-tiny");
+    let profile = args.str("profile", "quick");
+    let mut cfg = ExperimentConfig::profile(&profile, &model)?;
+    if let Some(cfg_file) = args.opt_str("config") {
+        cfg = cfg.with_file(std::path::Path::new(&cfg_file))?;
+    }
+    if let Some(steps) = args.opt_str("steps") {
+        let steps: u64 = steps.parse().context("--steps")?;
+        cfg.retrain_steps = steps;
+    }
+    if let Some(steps) = args.opt_str("pretrain-steps") {
+        cfg.pretrain_steps = steps.parse().context("--pretrain-steps")?;
+    }
+    let out = PathBuf::from(args.str("out", "results"));
+    std::fs::create_dir_all(&out).ok();
+    Ok(Env { rt, cfg, out, seed: args.u64("seed", 0) })
+}
+
+fn ctx(env: &Env) -> ExpContext<'_> {
+    ExpContext::new(&env.rt, env.cfg.clone(), env.out.join("cache"))
+}
+
+fn info(args: &Args) -> Result<()> {
+    let env = common(args)?;
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    println!("artifacts: {:?}", env.rt.manifest.dir);
+    for (name, mm) in &env.rt.manifest.models {
+        println!(
+            "  {name}: {} params, {} executables, d={} L={} V={} bias={} norm={}",
+            mm.total_params(),
+            mm.executables.len(),
+            mm.cfg.d_model,
+            mm.cfg.n_layers,
+            mm.cfg.vocab,
+            mm.cfg.use_bias,
+            mm.cfg.norm,
+        );
+        for mode in ["ln", "biases", "masklora", "full"] {
+            let cnt = mm.trainable_count(mode);
+            println!(
+                "     trainable[{mode}]: {cnt} ({:.3}%)",
+                100.0 * cnt as f64 / mm.total_params() as f64
+            );
+        }
+    }
+    for t in sweep::run(&ctx(&env), "memory")? {
+        t.print();
+    }
+    Ok(())
+}
+
+fn pretrain(args: &Args) -> Result<()> {
+    let env = common(args)?;
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    let c = ctx(&env);
+    let s = c.dense_session(env.seed)?;
+    let ppl = s.eval_ppl_test()?;
+    println!(
+        "dense {}: test ppl {:.3} (loss {:.4}), last train tps {:.0}",
+        env.cfg.model, ppl.ppl, ppl.loss, s.last_tps
+    );
+    Ok(())
+}
+
+fn parse_prune(args: &Args) -> Result<(Criterion, Pattern)> {
+    let crit = Criterion::parse(&args.str("criterion", "magnitude"))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let pattern = Pattern::parse(&args.str("sparsity", "0.5")).map_err(|e| anyhow::anyhow!(e))?;
+    Ok((crit, pattern))
+}
+
+fn prune(args: &Args) -> Result<()> {
+    let env = common(args)?;
+    let (crit, pattern) = parse_prune(args)?;
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    let c = ctx(&env);
+    let (s, _) = c.pruned_session(env.seed, crit, pattern)?;
+    let ppl = s.eval_ppl_test()?;
+    println!(
+        "{} @ {} ({}): achieved sparsity {:.3}, test ppl {:.2}",
+        crit.name(),
+        pattern.label(),
+        env.cfg.model,
+        s.masks.sparsity(),
+        ppl.ppl
+    );
+    s.save(&env.out.join("pruned.ptns"))?;
+    Ok(())
+}
+
+fn retrain(args: &Args) -> Result<()> {
+    let env = common(args)?;
+    let (crit, pattern) = parse_prune(args)?;
+    let mode = Mode::parse(&args.str("mode", "masklora")).map_err(|e| anyhow::anyhow!(e))?;
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    let c = ctx(&env);
+    let (base, _) = c.pruned_session(env.seed, crit, pattern)?;
+    let before = {
+        let mut s = c.clone_session(&base)?;
+        c.evaluate(&mut s, false, None)?
+    };
+    let (cell, lr) = c.retrain_tuned(&base, mode, env.cfg.retrain_steps, true)?;
+    println!(
+        "{} @ {} + {} ({} steps, lr {lr}): ppl {:.2} -> {:.2}, acc {:.1}%, tps {:.0}, trainable {:.3}%",
+        crit.name(),
+        pattern.label(),
+        mode.name(),
+        env.cfg.retrain_steps,
+        before.ppl,
+        cell.ppl,
+        cell.acc * 100.0,
+        cell.tps,
+        cell.trainable_pct
+    );
+    Ok(())
+}
+
+fn reconstruct_cmd(args: &Args) -> Result<()> {
+    let env = common(args)?;
+    let (crit, pattern) = parse_prune(args)?;
+    let recon_mode = match args.str("recon-mode", "masklora").as_str() {
+        "masklora" => ReconMode::MaskLora,
+        "full" => ReconMode::FullFt,
+        other => bail!("unknown recon mode {other:?}"),
+    };
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    let c = ctx(&env);
+    let (base, dense) = c.pruned_session(env.seed, crit, pattern)?;
+    let before = {
+        let mut s = c.clone_session(&base)?;
+        c.evaluate(&mut s, false, None)?
+    };
+    let mut s = c.clone_session(&base)?;
+    let target = s.masks.clone();
+    let report = reconstruct::reconstruct(
+        &mut s,
+        &target,
+        &dense,
+        recon_mode,
+        env.cfg.recon_steps,
+        env.cfg.recon_lr,
+    )?;
+    let after = c.evaluate(&mut s, true, None)?;
+    println!(
+        "{} @ {} + reconstruction: ppl {:.2} -> {:.2}, acc {:.1}%, mean layer-loss drop {:.4}",
+        crit.name(),
+        pattern.label(),
+        before.ppl,
+        after.ppl,
+        after.acc * 100.0,
+        report.mean_improvement()
+    );
+    Ok(())
+}
+
+fn eval_cmd(args: &Args) -> Result<()> {
+    let env = common(args)?;
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    let c = ctx(&env);
+    let s = c.dense_session(env.seed)?;
+    let ppl = s.eval_ppl_test()?;
+    let tasks = s.eval_tasks()?;
+    println!("{}: test ppl {:.3}", env.cfg.model, ppl.ppl);
+    for t in &tasks {
+        println!("  {:>6}: {:.1}% ({} items)", t.name, t.accuracy * 100.0, t.items);
+    }
+    println!("  mean zero-shot acc: {:.1}%", perp::eval::mean_accuracy(&tasks) * 100.0);
+    Ok(())
+}
+
+fn run_and_record(env: &Env, exp: &str) -> Result<()> {
+    let c = ctx(env);
+    let t0 = std::time::Instant::now();
+    let tables = sweep::run(&c, exp)?;
+    let path = env.out.join(format!("{exp}.md"));
+    let _ = std::fs::remove_file(&path);
+    for t in &tables {
+        t.print();
+        t.append_to(&path)?;
+    }
+    println!("[{exp}] done in {:.1}s -> {:?}", t0.elapsed().as_secs_f64(), path);
+    Ok(())
+}
+
+fn sweep_cmd(args: &Args) -> Result<()> {
+    let env = common(args)?;
+    let exp = args.str("exp", "");
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    if exp.is_empty() {
+        bail!("--exp required; one of {:?}", sweep::EXPERIMENTS);
+    }
+    run_and_record(&env, &exp)
+}
+
+fn tables(args: &Args) -> Result<()> {
+    let env = common(args)?;
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    for exp in sweep::EXPERIMENTS {
+        run_and_record(&env, exp)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Parameter initialisation (GPT-2/OPT convention), host-side.
+//!
+//! Weights ~ N(0, 0.02), residual-output projections scaled by 1/sqrt(2L)
+//! (the GPT-2 depth correction), biases zero, norm scales one.  Doing this in
+//! rust keeps python strictly on the compile path — no init executable.
+
+use crate::runtime::ModelManifest;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+const INIT_STD: f32 = 0.02;
+
+pub fn init_params(mm: &ModelManifest, rng: &mut Rng) -> super::ParamStore {
+    let mut store = super::ParamStore::zeros(mm);
+    let depth_scale = 1.0 / ((2 * mm.cfg.n_layers) as f32).sqrt();
+    for p in &mm.params {
+        let t = if p.name.ends_with("_scale") {
+            Tensor::ones(&p.shape)
+        } else if p.name.ends_with("_b") || p.name.ends_with("_bias") {
+            Tensor::zeros(&p.shape)
+        } else {
+            // residual-stream output projections get the depth correction
+            let std = if p.name.contains("attn_o") || p.name.contains("mlp_proj") {
+                INIT_STD * depth_scale
+            } else {
+                INIT_STD
+            };
+            Tensor::randn(&p.shape, std, &mut rng.fork(hash_name(&p.name)))
+        };
+        store.set(&p.name, t);
+    }
+    store
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a — per-tensor streams stay stable however iteration order changes
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{default_artifacts_dir, Manifest};
+
+    #[test]
+    fn init_statistics() {
+        let m = Manifest::load(&default_artifacts_dir()).unwrap();
+        let mm = m.model("gpt-nano").unwrap();
+        let mut rng = Rng::new(0);
+        let ps = init_params(mm, &mut rng);
+        // scales are 1, biases 0
+        assert!(ps.get("h0_ln1_scale").data().iter().all(|&x| x == 1.0));
+        assert!(ps.get("h0_attn_q_b").data().iter().all(|&x| x == 0.0));
+        // weights roughly N(0, 0.02)
+        let w = ps.get("h0_attn_q_w");
+        let std = (w.sq_norm() / w.numel() as f64).sqrt();
+        assert!((std - 0.02).abs() < 0.005, "{std}");
+        // depth-corrected projection is smaller
+        let o = ps.get("h0_attn_o_w");
+        let ostd = (o.sq_norm() / o.numel() as f64).sqrt();
+        assert!(ostd < std, "{ostd} vs {std}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let m = Manifest::load(&default_artifacts_dir()).unwrap();
+        let mm = m.model("gpt-nano").unwrap();
+        let a = init_params(mm, &mut Rng::new(5));
+        let b = init_params(mm, &mut Rng::new(5));
+        let c = init_params(mm, &mut Rng::new(6));
+        assert_eq!(a.get("head_w"), b.get("head_w"));
+        assert_ne!(a.get("head_w"), c.get("head_w"));
+    }
+}

@@ -1,0 +1,180 @@
+//! Host-side model state: the parameter store, initialisation and
+//! checkpointing.
+//!
+//! The rust coordinator owns every tensor between PJRT executions; the
+//! manifest (see [`crate::runtime::manifest`]) defines names, shapes and
+//! group membership.  This module is deliberately dumb about *semantics* —
+//! the training graphs live in L2 — and strict about *bookkeeping*:
+//! shape-checked updates, group queries, sparsity accounting.
+
+pub mod init;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::ModelManifest;
+use crate::tensor::{io, Tensor};
+
+/// Named parameter tensors matching the manifest inventory exactly.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    tensors: BTreeMap<String, Tensor>,
+}
+
+impl ParamStore {
+    /// Zero-filled store (tests / loading targets).
+    pub fn zeros(mm: &ModelManifest) -> ParamStore {
+        let tensors = mm
+            .params
+            .iter()
+            .map(|p| (p.name.clone(), Tensor::zeros(&p.shape)))
+            .collect();
+        ParamStore { tensors }
+    }
+
+    pub fn from_map(mm: &ModelManifest, tensors: BTreeMap<String, Tensor>) -> Result<ParamStore> {
+        for p in &mm.params {
+            match tensors.get(&p.name) {
+                None => bail!("checkpoint missing parameter {:?}", p.name),
+                Some(t) if t.shape() != &p.shape[..] => bail!(
+                    "checkpoint shape mismatch for {:?}: {:?} vs {:?}",
+                    p.name,
+                    t.shape(),
+                    p.shape
+                ),
+                _ => {}
+            }
+        }
+        if tensors.len() != mm.params.len() {
+            bail!(
+                "checkpoint has {} tensors, manifest wants {}",
+                tensors.len(),
+                mm.params.len()
+            );
+        }
+        Ok(ParamStore { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        self.tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown parameter {name:?}"))
+    }
+
+    pub fn try_get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.get(name)
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) {
+        let old = self
+            .tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown parameter {name:?}"));
+        assert_eq!(old.shape(), t.shape(), "shape change on {name:?}");
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.tensors.keys()
+    }
+
+    pub fn map(&self) -> &BTreeMap<String, Tensor> {
+        &self.tensors
+    }
+
+    /// Zero out pruned entries of every prunable weight in place.
+    pub fn apply_masks(&mut self, masks: &BTreeMap<String, Tensor>) {
+        for (name, mask) in masks {
+            let w = self.get(name).hadamard(mask);
+            self.set(name, w);
+        }
+    }
+
+    /// Overall fraction of zero entries across the prunable weights.
+    pub fn weight_sparsity(&self, mm: &ModelManifest) -> f64 {
+        let (mut zeros, mut total) = (0usize, 0usize);
+        for name in &mm.prunable {
+            let t = self.get(name);
+            zeros += t.count(|x| x == 0.0);
+            total += t.numel();
+        }
+        zeros as f64 / total.max(1) as f64
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        io::save(path, &self.tensors).context("saving checkpoint")
+    }
+
+    pub fn load(mm: &ModelManifest, path: &Path) -> Result<ParamStore> {
+        let tensors = io::load(path).context("loading checkpoint")?;
+        ParamStore::from_map(mm, tensors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{default_artifacts_dir, Manifest};
+
+    fn nano() -> ModelManifest {
+        Manifest::load(&default_artifacts_dir())
+            .expect("run `make artifacts`")
+            .model("gpt-nano")
+            .unwrap()
+            .clone()
+    }
+
+    #[test]
+    fn zeros_matches_manifest() {
+        let mm = nano();
+        let ps = ParamStore::zeros(&mm);
+        assert_eq!(ps.names().count(), mm.params.len());
+        for p in &mm.params {
+            assert_eq!(ps.get(&p.name).shape(), &p.shape[..]);
+        }
+    }
+
+    #[test]
+    fn masks_apply_and_sparsity_counts() {
+        let mm = nano();
+        let mut rng = crate::util::rng::Rng::new(1);
+        let mut ps = init::init_params(&mm, &mut rng);
+        let mut masks = BTreeMap::new();
+        for n in &mm.prunable {
+            let shape = mm.param_shape(n).to_vec();
+            let mut m = Tensor::ones(&shape);
+            for x in m.data_mut().iter_mut().step_by(2) {
+                *x = 0.0;
+            }
+            masks.insert(n.clone(), m);
+        }
+        ps.apply_masks(&masks);
+        let s = ps.weight_sparsity(&mm);
+        assert!((s - 0.5).abs() < 0.01, "{s}");
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let mm = nano();
+        let mut rng = crate::util::rng::Rng::new(2);
+        let ps = init::init_params(&mm, &mut rng);
+        let dir = std::env::temp_dir().join("perp_store_test");
+        let path = dir.join("m.ptns");
+        ps.save(&path).unwrap();
+        let ps2 = ParamStore::load(&mm, &path).unwrap();
+        for n in ps.names() {
+            assert_eq!(ps.get(n), ps2.get(n));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_shapes() {
+        let mm = nano();
+        let mut map = ParamStore::zeros(&mm).tensors;
+        map.insert("head_w".into(), Tensor::zeros(&[1, 1]));
+        assert!(ParamStore::from_map(&mm, map).is_err());
+    }
+}

@@ -1,0 +1,130 @@
+//! Optimizer state management and learning-rate schedules.
+//!
+//! The AdamW *math* runs on-device (L1 `adamw.py` kernel inside every train
+//! step); this module owns the state tensors between steps — which is the
+//! paper's memory argument made concrete: [`OptState::bytes`] is exactly the
+//! footprint that shrinks 10⁴× when retraining LN-params instead of
+//! everything.
+
+use std::collections::BTreeMap;
+
+use crate::tensor::Tensor;
+
+/// First/second-moment buffers for one trainable leaf set.
+#[derive(Debug, Clone, Default)]
+pub struct OptState {
+    pub m: BTreeMap<String, Tensor>,
+    pub v: BTreeMap<String, Tensor>,
+    pub step: u64,
+}
+
+impl OptState {
+    /// Zero state for the given (name, shape) leaves.
+    pub fn zeros<'a>(leaves: impl Iterator<Item = (&'a str, &'a [usize])>) -> OptState {
+        let mut m = BTreeMap::new();
+        let mut v = BTreeMap::new();
+        for (name, shape) in leaves {
+            m.insert(name.to_string(), Tensor::zeros(shape));
+            v.insert(name.to_string(), Tensor::zeros(shape));
+        }
+        OptState { m, v, step: 0 }
+    }
+
+    pub fn leaf_names(&self) -> impl Iterator<Item = &String> {
+        self.m.keys()
+    }
+
+    /// Optimizer memory footprint in bytes (m + v, f32).
+    pub fn bytes(&self) -> usize {
+        2 * 4 * self.m.values().map(|t| t.numel()).sum::<usize>()
+    }
+
+    pub fn update(&mut self, name: &str, m: Tensor, v: Tensor) {
+        assert!(self.m.contains_key(name), "unknown leaf {name:?}");
+        self.m.insert(name.to_string(), m);
+        self.v.insert(name.to_string(), v);
+    }
+}
+
+/// Learning-rate schedules (paper: linear decay with 10% warmup for LLMs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    Constant { lr: f64 },
+    /// linear warmup for `warmup` steps then linear decay to zero at `total`
+    LinearWarmupDecay { peak: f64, warmup: u64, total: u64 },
+}
+
+impl Schedule {
+    /// The paper's LLM default: 10% warmup, linear decay, tuned peak.
+    pub fn paper_default(peak: f64, total_steps: u64) -> Schedule {
+        Schedule::LinearWarmupDecay {
+            peak,
+            warmup: (total_steps / 10).max(1),
+            total: total_steps.max(1),
+        }
+    }
+
+    /// LR at 1-based step `t`.
+    pub fn lr(&self, t: u64) -> f64 {
+        match *self {
+            Schedule::Constant { lr } => lr,
+            Schedule::LinearWarmupDecay { peak, warmup, total } => {
+                if t <= warmup {
+                    peak * t as f64 / warmup as f64
+                } else if t >= total {
+                    0.0
+                } else {
+                    peak * (total - t) as f64 / (total - warmup) as f64
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_bytes() {
+        let shapes: Vec<(String, Vec<usize>)> =
+            vec![("a".into(), vec![2, 3]), ("b".into(), vec![10])];
+        let st = OptState::zeros(shapes.iter().map(|(n, s)| (n.as_str(), s.as_slice())));
+        assert_eq!(st.bytes(), 2 * 4 * 16);
+        assert_eq!(st.leaf_names().count(), 2);
+    }
+
+    #[test]
+    fn warmup_then_decay() {
+        let s = Schedule::LinearWarmupDecay { peak: 1.0, warmup: 10, total: 110 };
+        assert!((s.lr(1) - 0.1).abs() < 1e-12);
+        assert!((s.lr(10) - 1.0).abs() < 1e-12);
+        assert!(s.lr(60) < 1.0 && s.lr(60) > 0.0);
+        assert_eq!(s.lr(110), 0.0);
+        assert_eq!(s.lr(200), 0.0);
+        // monotone decay after warmup
+        assert!(s.lr(20) > s.lr(50));
+    }
+
+    #[test]
+    fn paper_default_has_10pct_warmup() {
+        let s = Schedule::paper_default(5e-4, 1000);
+        match s {
+            Schedule::LinearWarmupDecay { warmup, total, peak } => {
+                assert_eq!(warmup, 100);
+                assert_eq!(total, 1000);
+                assert_eq!(peak, 5e-4);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn update_replaces_buffers() {
+        let shapes: Vec<(String, Vec<usize>)> = vec![("a".into(), vec![2])];
+        let mut st = OptState::zeros(shapes.iter().map(|(n, s)| (n.as_str(), s.as_slice())));
+        st.update("a", Tensor::full(&[2], 1.0), Tensor::full(&[2], 2.0));
+        assert_eq!(st.m["a"].data(), &[1.0, 1.0]);
+        assert_eq!(st.v["a"].data(), &[2.0, 2.0]);
+    }
+}

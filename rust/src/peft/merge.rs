@@ -1,0 +1,163 @@
+//! Adapter merge rules (PERP §3.2) and their sparsity invariants.
+//!
+//! After retraining, the adapters fold back into the dense weight so
+//! inference pays zero extra cost.  The whole point of MaskLoRA/ScaleLoRA is
+//! that this fold *cannot resurrect pruned weights*; `LoRA` can and does —
+//! [`merged_sparsity_loss`] quantifies exactly how much (Table 2's
+//! "Mergeable" column is verified programmatically from these functions).
+
+use crate::tensor::{linalg, Tensor};
+
+/// Standard LoRA merge: W + s·BA.  Destroys sparsity (returns dense W).
+pub fn lora(w: &Tensor, a: &Tensor, b: &Tensor, scale: f32) -> Tensor {
+    let ba = linalg::matmul(b, a);
+    w.add(&ba.scale(scale))
+}
+
+/// LoRA-Prune: M ⊙ (W + s·BA) — re-prunes the merged update (lossy).
+pub fn lora_prune(w: &Tensor, mask: &Tensor, a: &Tensor, b: &Tensor, scale: f32) -> Tensor {
+    lora(w, a, b, scale).hadamard(mask)
+}
+
+/// MaskLoRA: W·M + M ⊙ (s·BA) — exact, sparsity preserving.
+pub fn masklora(w: &Tensor, mask: &Tensor, a: &Tensor, b: &Tensor, scale: f32) -> Tensor {
+    let ba = linalg::matmul(b, a);
+    w.hadamard(mask).add(&ba.scale(scale).hadamard(mask))
+}
+
+/// ScaleLoRA: (BA) ⊙ (W·M) — exact, sparsity preserving.
+pub fn scalelora(w: &Tensor, mask: &Tensor, a: &Tensor, b: &Tensor) -> Tensor {
+    let ba = linalg::matmul(b, a);
+    ba.hadamard(&w.hadamard(mask))
+}
+
+/// Does `merged` respect the mask's zero pattern exactly?
+pub fn preserves_sparsity(merged: &Tensor, mask: &Tensor) -> bool {
+    merged
+        .data()
+        .iter()
+        .zip(mask.data())
+        .all(|(&w, &m)| m != 0.0 || w == 0.0)
+}
+
+/// ‖forward(adapters) − forward(merged)‖∞ on a probe batch: zero for exact
+/// merges, positive for LoRA-Prune (the paper's "noticeable increase in
+/// perplexity" has this as its mechanism).
+pub fn merge_forward_gap(
+    x: &Tensor,
+    w: &Tensor,
+    mask: &Tensor,
+    a: &Tensor,
+    b: &Tensor,
+    scale: f32,
+    merged: &Tensor,
+) -> f32 {
+    // adapter forward: x @ (W*M)ᵀ + s · (x Aᵀ) Bᵀ   (standard LoRA forward)
+    let base = linalg::matmul_nt(x, &w.hadamard(mask));
+    let xa = linalg::matmul_nt(x, a);
+    let lora_path = linalg::matmul_nt(&xa, b).scale(scale);
+    let y_adapter = base.add(&lora_path);
+    let y_merged = linalg::matmul_nt(x, merged);
+    y_adapter.sub(&y_merged).max_abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    struct Setup {
+        x: Tensor,
+        w: Tensor,
+        mask: Tensor,
+        a: Tensor,
+        b: Tensor,
+    }
+
+    fn setup(rng: &mut Rng, rows: usize, cols: usize, r: usize, sp: f32) -> Setup {
+        let w = Tensor::randn(&[rows, cols], 1.0, rng);
+        let mask = Tensor::new(
+            &[rows, cols],
+            (0..rows * cols)
+                .map(|_| if rng.f32() < sp { 0.0 } else { 1.0 })
+                .collect(),
+        );
+        Setup {
+            x: Tensor::randn(&[6, cols], 1.0, rng),
+            w,
+            mask,
+            a: Tensor::randn(&[r, cols], 0.3, rng),
+            b: Tensor::randn(&[rows, r], 0.3, rng),
+        }
+    }
+
+    #[test]
+    fn prop_sparsity_preservation_matrix() {
+        prop::check("merge_sparsity", 25, |g| {
+            let (rows, cols, sp) = (g.dim(12).max(2), g.dim(24).max(2), g.sparsity());
+            let s = setup(&mut g.rng, rows, cols, 4, sp);
+            let ml = masklora(&s.w, &s.mask, &s.a, &s.b, 2.0);
+            let sl = scalelora(&s.w, &s.mask, &s.a, &s.b);
+            let lp = lora_prune(&s.w, &s.mask, &s.a, &s.b, 2.0);
+            assert!(preserves_sparsity(&ml, &s.mask));
+            assert!(preserves_sparsity(&sl, &s.mask));
+            assert!(preserves_sparsity(&lp, &s.mask));
+        });
+    }
+
+    #[test]
+    fn plain_lora_breaks_sparsity() {
+        let mut rng = Rng::new(1);
+        let s = setup(&mut rng, 8, 16, 4, 0.5);
+        let merged = lora(&s.w.hadamard(&s.mask), &s.a, &s.b, 2.0);
+        assert!(!preserves_sparsity(&merged, &s.mask));
+    }
+
+    #[test]
+    fn lora_merge_is_exact_for_dense() {
+        // no pruning: LoRA merge must match its own forward exactly
+        let mut rng = Rng::new(2);
+        let s = setup(&mut rng, 8, 16, 4, 0.0);
+        let merged = lora(&s.w, &s.a, &s.b, 2.0);
+        let gap = merge_forward_gap(&s.x, &s.w, &s.mask, &s.a, &s.b, 2.0, &merged);
+        assert!(gap < 1e-4, "{gap}");
+    }
+
+    #[test]
+    fn lora_prune_merge_is_lossy_under_sparsity() {
+        // the paper's LoRA-Prune failure mode: re-pruning BA changes the
+        // function the adapters had learned.
+        let mut rng = Rng::new(3);
+        let s = setup(&mut rng, 8, 16, 4, 0.6);
+        let merged = lora_prune(&s.w.hadamard(&s.mask), &s.mask, &s.a, &s.b, 2.0);
+        let gap = merge_forward_gap(&s.x, &s.w, &s.mask, &s.a, &s.b, 2.0, &merged);
+        assert!(gap > 1e-2, "expected a real gap, got {gap}");
+    }
+
+    #[test]
+    fn masklora_merge_matches_masked_forward() {
+        // MaskLoRA's defining property: merged plain GEMM == masked adapter
+        // forward, bit-for-bit up to float assoc.
+        let mut rng = Rng::new(4);
+        let s = setup(&mut rng, 10, 20, 4, 0.5);
+        let merged = masklora(&s.w, &s.mask, &s.a, &s.b, 2.0);
+        // masked adapter forward: x @ (W·M + M ⊙ sBA)ᵀ computed indirectly
+        let ba = linalg::matmul(&s.b, &s.a).scale(2.0).hadamard(&s.mask);
+        let z = s.w.hadamard(&s.mask).add(&ba);
+        let y1 = linalg::matmul_nt(&s.x, &z);
+        let y2 = linalg::matmul_nt(&s.x, &merged);
+        assert!(y1.allclose(&y2, 1e-5));
+    }
+
+    #[test]
+    fn scalelora_identity_init_is_noop_merge() {
+        let mut rng = Rng::new(5);
+        let s = setup(&mut rng, 8, 16, 4, 0.5);
+        let r = 4;
+        let a = Tensor::full(&[r, 16], 1.0 / (r as f32).sqrt());
+        let b = Tensor::full(&[8, r], 1.0 / (r as f32).sqrt());
+        let merged = scalelora(&s.w, &s.mask, &a, &b);
+        assert!(merged.allclose(&s.w.hadamard(&s.mask), 1e-5));
+    }
+}

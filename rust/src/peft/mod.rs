@@ -1,0 +1,233 @@
+//! PEFT state and merge algebra: the paper's §3.2 contribution, host-side.
+//!
+//! [`LoraState`] holds the (A, B) adapter pair for every adapted linear;
+//! [`merge`] implements the four merge rules and their invariants:
+//!
+//! | variant    | forward                      | merge                        | sparsity kept |
+//! |------------|------------------------------|------------------------------|---------------|
+//! | LoRA       | Wx + s·B(Ax)                 | W + s·BA                     | ✗             |
+//! | LoRA-Prune | Wx + s·B(Ax)                 | M ⊙ (W + s·BA)               | ✓ (damages)   |
+//! | ScaleLoRA  | ((BA) ⊙ W)x                  | (BA) ⊙ W                     | ✓             |
+//! | MaskLoRA   | (W + M ⊙ s·BA)x              | W + M ⊙ s·BA                 | ✓             |
+//!
+//! Initialisation follows the paper exactly: additive variants use B = 0
+//! (identity start); ScaleLoRA uses A = B = 1/sqrt(r) so BA == 1.
+
+pub mod merge;
+
+use std::collections::BTreeMap;
+
+use crate::runtime::ModelManifest;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Retraining mode (mirrors python's ALL_MODES).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Full,
+    Biases,
+    Ln,
+    BiasesLn,
+    Head,
+    Embed,
+    Lora,
+    LoraPrune,
+    MaskLora,
+    MaskLoraStd,
+    ScaleLora,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Result<Mode, String> {
+        Ok(match s {
+            "full" => Mode::Full,
+            "biases" => Mode::Biases,
+            "ln" => Mode::Ln,
+            "biases_ln" => Mode::BiasesLn,
+            "head" => Mode::Head,
+            "embed" => Mode::Embed,
+            "lora" => Mode::Lora,
+            "lora_prune" => Mode::LoraPrune,
+            "masklora" => Mode::MaskLora,
+            "masklora_std" => Mode::MaskLoraStd,
+            "scalelora" => Mode::ScaleLora,
+            other => return Err(format!("unknown retraining mode {other:?}")),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Full => "full",
+            Mode::Biases => "biases",
+            Mode::Ln => "ln",
+            Mode::BiasesLn => "biases_ln",
+            Mode::Head => "head",
+            Mode::Embed => "embed",
+            Mode::Lora => "lora",
+            Mode::LoraPrune => "lora_prune",
+            Mode::MaskLora => "masklora",
+            Mode::MaskLoraStd => "masklora_std",
+            Mode::ScaleLora => "scalelora",
+        }
+    }
+
+    pub fn is_lora(&self) -> bool {
+        matches!(
+            self,
+            Mode::Lora | Mode::LoraPrune | Mode::MaskLora | Mode::MaskLoraStd | Mode::ScaleLora
+        )
+    }
+
+    /// Which lowered train-step executable this mode runs.  LoRA-Prune is a
+    /// *merge-time* policy: it trains exactly like standard LoRA.
+    pub fn executable(&self) -> &'static str {
+        match self {
+            Mode::Full => "train_full",
+            Mode::Biases => "train_biases",
+            Mode::Ln => "train_ln",
+            Mode::BiasesLn => "train_biases_ln",
+            Mode::Head => "train_head",
+            Mode::Embed => "train_embed",
+            Mode::Lora | Mode::LoraPrune => "train_lora",
+            Mode::MaskLora => "train_masklora",
+            Mode::MaskLoraStd => "train_masklora_std",
+            Mode::ScaleLora => "train_scalelora",
+        }
+    }
+
+    /// Manifest key for the trainable model-parameter set.
+    pub fn trainable_key(&self) -> &'static str {
+        match self {
+            Mode::Lora | Mode::LoraPrune => "lora",
+            Mode::MaskLora => "masklora",
+            Mode::MaskLoraStd => "masklora_std",
+            Mode::ScaleLora => "scalelora",
+            other => other.name(),
+        }
+    }
+
+    /// Can adapters merge back without destroying sparsity? (Table 2 col 2)
+    pub fn mergeable_sparsity_preserving(&self) -> Option<bool> {
+        match self {
+            Mode::Lora => Some(false),
+            Mode::LoraPrune | Mode::MaskLora | Mode::MaskLoraStd | Mode::ScaleLora => Some(true),
+            _ => None, // subset modes have nothing to merge
+        }
+    }
+
+    pub const ALL_LORA: [Mode; 4] = [Mode::Lora, Mode::LoraPrune, Mode::ScaleLora, Mode::MaskLora];
+}
+
+/// Adapter tensors for every adapted linear: `<linear>::A` and `<linear>::B`.
+#[derive(Debug, Clone, Default)]
+pub struct LoraState {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl LoraState {
+    /// Paper init: A ~ N(0, 0.02), B = 0 (identity start) for additive
+    /// variants; ones/sqrt(r) for ScaleLoRA.
+    pub fn init(mm: &ModelManifest, mode: Mode, rng: &mut Rng) -> LoraState {
+        assert!(mode.is_lora(), "adapters only exist for LoRA modes");
+        let r = mm.cfg.lora_rank as f32;
+        let mut tensors = BTreeMap::new();
+        for (name, shape) in &mm.adapters {
+            let t = if mode == Mode::ScaleLora {
+                Tensor::full(shape, 1.0 / r.sqrt())
+            } else if name.ends_with("::A") {
+                Tensor::randn(shape, 0.02, rng)
+            } else {
+                Tensor::zeros(shape)
+            };
+            tensors.insert(name.clone(), t);
+        }
+        LoraState { tensors }
+    }
+
+    pub fn a(&self, linear: &str) -> &Tensor {
+        &self.tensors[&format!("{linear}::A")]
+    }
+    pub fn b(&self, linear: &str) -> &Tensor {
+        &self.tensors[&format!("{linear}::B")]
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) {
+        let old = self
+            .tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown adapter {name:?}"));
+        assert_eq!(old.shape(), t.shape(), "adapter shape change on {name:?}");
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.tensors.values().map(|t| t.numel()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{default_artifacts_dir, Manifest};
+
+    #[test]
+    fn mode_roundtrip() {
+        for m in [
+            Mode::Full, Mode::Biases, Mode::Ln, Mode::BiasesLn, Mode::Head,
+            Mode::Embed, Mode::Lora, Mode::LoraPrune, Mode::MaskLora,
+            Mode::MaskLoraStd, Mode::ScaleLora,
+        ] {
+            assert_eq!(Mode::parse(m.name()).unwrap(), m);
+        }
+        assert!(Mode::parse("zzz").is_err());
+    }
+
+    #[test]
+    fn mergeability_table_matches_paper() {
+        assert_eq!(Mode::Lora.mergeable_sparsity_preserving(), Some(false));
+        for m in [Mode::LoraPrune, Mode::ScaleLora, Mode::MaskLora] {
+            assert_eq!(m.mergeable_sparsity_preserving(), Some(true));
+        }
+        assert_eq!(Mode::Biases.mergeable_sparsity_preserving(), None);
+    }
+
+    #[test]
+    fn lora_prune_trains_like_lora() {
+        assert_eq!(Mode::LoraPrune.executable(), "train_lora");
+        assert_eq!(Mode::LoraPrune.trainable_key(), "lora");
+    }
+
+    #[test]
+    fn init_identity_properties() {
+        let m = Manifest::load(&default_artifacts_dir()).unwrap();
+        let mm = m.model("gpt-nano").unwrap();
+        let mut rng = Rng::new(1);
+        let add = LoraState::init(mm, Mode::MaskLora, &mut rng);
+        // B = 0 everywhere
+        for (n, t) in &add.tensors {
+            if n.ends_with("::B") {
+                assert_eq!(t.max_abs(), 0.0, "{n}");
+            } else {
+                assert!(t.max_abs() > 0.0, "{n}");
+            }
+        }
+        let scale = LoraState::init(mm, Mode::ScaleLora, &mut rng);
+        // BA == all-ones for every adapted linear
+        for lin in &mm.prunable {
+            let ba = crate::tensor::linalg::matmul(scale.b(lin), scale.a(lin));
+            assert!(
+                ba.allclose(&Tensor::ones(ba.shape()), 1e-5),
+                "BA != 1 for {lin}"
+            );
+        }
+    }
+
+    #[test]
+    fn adapter_count_matches_manifest() {
+        let m = Manifest::load(&default_artifacts_dir()).unwrap();
+        let mm = m.model("gpt-nano").unwrap();
+        let st = LoraState::init(mm, Mode::Lora, &mut Rng::new(2));
+        let expect: usize = mm.adapters.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        assert_eq!(st.param_count(), expect);
+    }
+}

@@ -1,0 +1,125 @@
+//! Magnitude pruning: remove the smallest-|w| weights.
+//!
+//! Two allocation schemes, per the paper's Appendix A.2:
+//!
+//! * **uniform** (the LLM default, following Sun et al. 2023): each prunable
+//!   tensor is pruned by the same relative amount;
+//! * **global** (the vision default): all prunable weights form one pool and
+//!   share a single threshold.
+//!
+//! N:M semi-structured magnitude masks delegate to [`super::semistructured`].
+
+use std::collections::BTreeMap;
+
+use crate::tensor::Tensor;
+
+use super::{mask_smallest_k, MaskSet, Pattern};
+
+/// Uniform per-tensor magnitude masks.
+pub fn uniform(weights: &BTreeMap<String, &Tensor>, pattern: Pattern) -> MaskSet {
+    let mut out = MaskSet::default();
+    for (name, w) in weights {
+        let mask = match pattern {
+            Pattern::Unstructured(f) => {
+                let k = (f * w.numel() as f64).round() as usize;
+                Tensor::new(w.shape(), mask_smallest_k(w.data(), k))
+            }
+            Pattern::SemiStructured { n, m } => super::semistructured::nm_mask(w, n, m),
+        };
+        out.set(name, mask);
+    }
+    out
+}
+
+/// Global magnitude masks: one |w| threshold across all prunable tensors.
+pub fn global(weights: &BTreeMap<String, &Tensor>, sparsity: f64) -> MaskSet {
+    let total: usize = weights.values().map(|w| w.numel()).sum();
+    let k = (sparsity * total as f64).round() as usize;
+    // collect (|w|, tensor idx, flat idx) and select the k smallest
+    let mut mags: Vec<(f32, u32, u32)> = Vec::with_capacity(total);
+    for (ti, (_, w)) in weights.iter().enumerate() {
+        for (fi, &x) in w.data().iter().enumerate() {
+            mags.push((x.abs(), ti as u32, fi as u32));
+        }
+    }
+    mags.select_nth_unstable_by(k.min(total.saturating_sub(1)), |a, b| {
+        a.0.partial_cmp(&b.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then((a.1, a.2).cmp(&(b.1, b.2)))
+    });
+    let mut masks: Vec<Tensor> = weights.values().map(|w| Tensor::ones(w.shape())).collect();
+    for &(_, ti, fi) in &mags[..k] {
+        masks[ti as usize].data_mut()[fi as usize] = 0.0;
+    }
+    let mut out = MaskSet::default();
+    for ((name, _), mask) in weights.iter().zip(masks) {
+        out.set(name, mask);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn weights(rng: &mut Rng) -> (Vec<Tensor>, BTreeMap<String, &'static Tensor>) {
+        // leak for 'static simplicity in tests
+        let a = Box::leak(Box::new(Tensor::randn(&[8, 16], 1.0, rng)));
+        let b = Box::leak(Box::new(Tensor::randn(&[4, 32], 0.1, rng)));
+        let mut m = BTreeMap::new();
+        m.insert("a".to_string(), &*a);
+        m.insert("b".to_string(), &*b);
+        (vec![], m)
+    }
+
+    #[test]
+    fn uniform_hits_exact_fraction() {
+        let mut rng = Rng::new(1);
+        let (_, w) = weights(&mut rng);
+        let ms = uniform(&w, Pattern::Unstructured(0.5));
+        for (_, s) in ms.per_layer_sparsity() {
+            assert!((s - 0.5).abs() < 1e-6, "{s}");
+        }
+    }
+
+    #[test]
+    fn global_shares_threshold() {
+        let mut rng = Rng::new(2);
+        let (_, w) = weights(&mut rng);
+        // tensor "b" has 10x smaller weights — global pruning should hit it
+        // much harder than "a"
+        let ms = global(&w, 0.5);
+        assert!((ms.sparsity() - 0.5).abs() < 1e-2, "{}", ms.sparsity());
+        let per: BTreeMap<_, _> = ms.per_layer_sparsity().into_iter().collect();
+        assert!(per["b"] > 0.8, "b sparsity {}", per["b"]);
+        assert!(per["a"] < 0.3, "a sparsity {}", per["a"]);
+    }
+
+    #[test]
+    fn prop_uniform_keeps_largest() {
+        prop::check("uniform_keeps_largest", 20, |g| {
+            let rows = g.dim(8).max(1);
+            let cols = g.dim(32).max(2);
+            let sp = g.sparsity();
+            let t = Tensor::new(&[rows, cols], g.tensor(rows * cols, 1.0));
+            let mut m = BTreeMap::new();
+            m.insert("w".to_string(), &t);
+            let ms = uniform(&m, Pattern::Unstructured(sp as f64));
+            let mask = ms.get("w");
+            let k = (sp as f64 * t.numel() as f64).round() as usize;
+            assert_eq!(mask.count(|x| x == 0.0), k);
+        });
+    }
+
+    #[test]
+    fn semistructured_dispatch() {
+        let mut rng = Rng::new(3);
+        let t = Tensor::randn(&[8, 16], 1.0, &mut rng);
+        let mut m = BTreeMap::new();
+        m.insert("w".to_string(), &t);
+        let ms = uniform(&m, Pattern::SemiStructured { n: 2, m: 4 });
+        assert!((ms.sparsity() - 0.5).abs() < 1e-9);
+    }
+}

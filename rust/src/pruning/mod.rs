@@ -1,0 +1,258 @@
+//! Pruning criteria and mask management (host-side).
+//!
+//! Implements every pruner the paper touches:
+//!
+//! * [`magnitude`] — uniform per-layer and global magnitude pruning;
+//! * [`semistructured`] — N:M patterns (2:4, 4:8) with deterministic ties;
+//! * [`wanda`] — |W|·‖X‖₂ scores from calibration Grams (Sun et al. 2023);
+//! * [`sparsegpt`] — the full OBS column-block solver with Cholesky-inverse
+//!   Hessians and error compensation (Frantar & Alistarh 2023).
+//!
+//! All criteria produce a [`MaskSet`]; SparseGPT additionally *updates* the
+//! surviving weights.  Pruned entries are represented as exact 0.0 in the
+//! mask, and the invariant "merge/update never resurrects a pruned weight"
+//! is property-tested throughout.
+
+pub mod magnitude;
+pub mod semistructured;
+pub mod sparsegpt;
+pub mod wanda;
+
+use std::collections::BTreeMap;
+
+use crate::tensor::Tensor;
+
+/// Sparsity pattern shared by all criteria.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Pattern {
+    /// fraction of weights pruned, unstructured
+    Unstructured(f64),
+    /// keep n of every m consecutive inputs (2:4, 4:8)
+    SemiStructured { n: usize, m: usize },
+}
+
+impl Pattern {
+    pub fn parse(s: &str) -> Result<Pattern, String> {
+        if let Some((a, b)) = s.split_once(':') {
+            let n = a.parse().map_err(|_| format!("bad pattern {s:?}"))?;
+            let m = b.parse().map_err(|_| format!("bad pattern {s:?}"))?;
+            return Ok(Pattern::SemiStructured { n, m });
+        }
+        let f: f64 = s.parse().map_err(|_| format!("bad sparsity {s:?}"))?;
+        // accept both 0.5 and 50 (percent)
+        let f = if f > 1.0 { f / 100.0 } else { f };
+        Ok(Pattern::Unstructured(f))
+    }
+
+    /// Nominal fraction of weights removed.
+    pub fn nominal_sparsity(&self) -> f64 {
+        match self {
+            Pattern::Unstructured(f) => *f,
+            Pattern::SemiStructured { n, m } => 1.0 - *n as f64 / *m as f64,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Pattern::Unstructured(f) => format!("{:.0}%", f * 100.0),
+            Pattern::SemiStructured { n, m } => format!("{n}:{m}"),
+        }
+    }
+}
+
+/// Pruning criterion selector (CLI / experiment configs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Criterion {
+    Magnitude,
+    MagnitudeGlobal,
+    Wanda,
+    SparseGpt,
+}
+
+impl Criterion {
+    pub fn parse(s: &str) -> Result<Criterion, String> {
+        match s {
+            "magnitude" => Ok(Criterion::Magnitude),
+            "magnitude-global" => Ok(Criterion::MagnitudeGlobal),
+            "wanda" => Ok(Criterion::Wanda),
+            "sparsegpt" => Ok(Criterion::SparseGpt),
+            other => Err(format!("unknown criterion {other:?}")),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Criterion::Magnitude => "magnitude",
+            Criterion::MagnitudeGlobal => "magnitude-global",
+            Criterion::Wanda => "wanda",
+            Criterion::SparseGpt => "sparsegpt",
+        }
+    }
+    /// Does this criterion need calibration Grams?
+    pub fn needs_calibration(&self) -> bool {
+        matches!(self, Criterion::Wanda | Criterion::SparseGpt)
+    }
+}
+
+/// Binary masks (0.0 / 1.0 tensors) for every prunable linear.
+#[derive(Debug, Clone, Default)]
+pub struct MaskSet {
+    pub masks: BTreeMap<String, Tensor>,
+}
+
+impl MaskSet {
+    pub fn dense(prunable: &[String], shapes: impl Fn(&str) -> Vec<usize>) -> MaskSet {
+        MaskSet {
+            masks: prunable
+                .iter()
+                .map(|n| (n.clone(), Tensor::ones(&shapes(n))))
+                .collect(),
+        }
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        self.masks
+            .get(name)
+            .unwrap_or_else(|| panic!("no mask for {name:?}"))
+    }
+
+    pub fn set(&mut self, name: &str, mask: Tensor) {
+        debug_assert!(
+            mask.data().iter().all(|&x| x == 0.0 || x == 1.0),
+            "mask for {name:?} must be binary"
+        );
+        self.masks.insert(name.to_string(), mask);
+    }
+
+    /// Achieved sparsity across all masks.
+    pub fn sparsity(&self) -> f64 {
+        let (mut zeros, mut total) = (0usize, 0usize);
+        for m in self.masks.values() {
+            zeros += m.count(|x| x == 0.0);
+            total += m.numel();
+        }
+        zeros as f64 / total.max(1) as f64
+    }
+
+    pub fn per_layer_sparsity(&self) -> Vec<(String, f64)> {
+        self.masks
+            .iter()
+            .map(|(n, m)| (n.clone(), m.zero_fraction()))
+            .collect()
+    }
+}
+
+/// Exact-k smallest selection over raw (non-negative) values: 0.0 marks the
+/// k smallest, ties broken by ascending index.
+pub fn mask_smallest_k_by(values: &[f32], k: usize) -> Vec<f32> {
+    let mut idx: Vec<u32> = (0..values.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        values[a as usize]
+            .partial_cmp(&values[b as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut mask = vec![1.0f32; values.len()];
+    for &i in idx.iter().take(k.min(values.len())) {
+        mask[i as usize] = 0.0;
+    }
+    mask
+}
+
+/// Exact-k smallest selection threshold over |values|: returns a binary mask
+/// keeping the (len - k) largest |values|; ties broken by ascending index
+/// (matches ref.magnitude_mask's stable argsort).
+pub fn mask_smallest_k(values: &[f32], k: usize) -> Vec<f32> {
+    let mut idx: Vec<u32> = (0..values.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        values[a as usize]
+            .abs()
+            .partial_cmp(&values[b as usize].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut mask = vec![1.0f32; values.len()];
+    for &i in idx.iter().take(k.min(values.len())) {
+        mask[i as usize] = 0.0;
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn pattern_parsing() {
+        assert_eq!(Pattern::parse("0.5").unwrap(), Pattern::Unstructured(0.5));
+        assert_eq!(Pattern::parse("50").unwrap(), Pattern::Unstructured(0.5));
+        assert_eq!(
+            Pattern::parse("2:4").unwrap(),
+            Pattern::SemiStructured { n: 2, m: 4 }
+        );
+        assert!(Pattern::parse("x").is_err());
+        assert_eq!(Pattern::SemiStructured { n: 2, m: 4 }.nominal_sparsity(), 0.5);
+        assert_eq!(Pattern::Unstructured(0.7).label(), "70%");
+        assert_eq!(Pattern::SemiStructured { n: 4, m: 8 }.label(), "4:8");
+    }
+
+    #[test]
+    fn criterion_parsing() {
+        for c in ["magnitude", "magnitude-global", "wanda", "sparsegpt"] {
+            assert_eq!(Criterion::parse(c).unwrap().name(), c);
+        }
+        assert!(Criterion::parse("xx").is_err());
+        assert!(Criterion::Wanda.needs_calibration());
+        assert!(!Criterion::Magnitude.needs_calibration());
+    }
+
+    #[test]
+    fn mask_smallest_k_exact() {
+        let v = [3.0, -1.0, 0.5, -2.0];
+        assert_eq!(mask_smallest_k(&v, 2), vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(mask_smallest_k(&v, 0), vec![1.0; 4]);
+        assert_eq!(mask_smallest_k(&v, 4), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn mask_smallest_k_ties_by_index() {
+        let v = [1.0, 1.0, 1.0, 1.0];
+        assert_eq!(mask_smallest_k(&v, 2), vec![0.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn prop_mask_smallest_k_counts() {
+        prop::check("mask_k_counts", 50, |g| {
+            let n = g.dim(256);
+            let k = g.rng.below((n + 1) as u64) as usize;
+            let v = g.tensor(n, 1.0);
+            let mask = mask_smallest_k(&v, k);
+            assert_eq!(mask.iter().filter(|&&x| x == 0.0).count(), k);
+            // every kept weight's |v| >= every pruned weight's |v| (up to ties)
+            let max_pruned = v
+                .iter()
+                .zip(&mask)
+                .filter(|(_, &m)| m == 0.0)
+                .map(|(x, _)| x.abs())
+                .fold(0.0f32, f32::max);
+            let min_kept = v
+                .iter()
+                .zip(&mask)
+                .filter(|(_, &m)| m == 1.0)
+                .map(|(x, _)| x.abs())
+                .fold(f32::INFINITY, f32::min);
+            assert!(min_kept >= max_pruned || (min_kept - max_pruned).abs() < 1e-6);
+        });
+    }
+
+    #[test]
+    fn maskset_sparsity_accounting() {
+        let mut ms = MaskSet::default();
+        ms.set("a", Tensor::new(&[2, 2], vec![1., 0., 1., 0.]));
+        ms.set("b", Tensor::new(&[2, 2], vec![1., 1., 1., 1.]));
+        assert!((ms.sparsity() - 0.25).abs() < 1e-9);
+        let per = ms.per_layer_sparsity();
+        assert_eq!(per[0].1, 0.5);
+        assert_eq!(per[1].1, 0.0);
+    }
+}

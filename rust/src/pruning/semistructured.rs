@@ -1,0 +1,138 @@
+//! N:M semi-structured masks (Mishra et al. 2021): within every group of M
+//! consecutive *input* weights, keep the N largest by |w| (or by an external
+//! score).  Tie-break: ascending in-group index — byte-identical to the L1
+//! `nm_mask` kernel and `ref.semistructured_mask`.
+
+use crate::tensor::Tensor;
+
+/// N:M magnitude mask for w:(out, in).
+pub fn nm_mask(w: &Tensor, n: usize, m: usize) -> Tensor {
+    nm_mask_scored(w, &w.abs(), n, m)
+}
+
+/// N:M mask keeping the N highest-*score* entries per group (Wanda/SparseGPT
+/// reuse this with their own score tensors).
+pub fn nm_mask_scored(w: &Tensor, scores: &Tensor, n: usize, m: usize) -> Tensor {
+    let (rows, cols) = (w.rows(), w.cols());
+    assert_eq!(w.shape(), scores.shape());
+    assert!(
+        cols % m == 0,
+        "input dim {cols} not divisible by group size {m}"
+    );
+    assert!(n <= m, "cannot keep {n} of {m}");
+    let mut mask = Tensor::zeros(&[rows, cols]);
+    let mut idx: Vec<usize> = Vec::with_capacity(m);
+    for r in 0..rows {
+        let srow = scores.row(r);
+        for g in 0..cols / m {
+            let base = g * m;
+            idx.clear();
+            idx.extend(0..m);
+            idx.sort_by(|&a, &b| {
+                srow[base + b]
+                    .partial_cmp(&srow[base + a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            for &i in idx.iter().take(n) {
+                mask.set2(r, base + i, 1.0);
+            }
+        }
+    }
+    mask
+}
+
+/// Validate the N:M invariant on a mask.
+pub fn check_nm(mask: &Tensor, n: usize, m: usize) -> bool {
+    let (rows, cols) = (mask.rows(), mask.cols());
+    if cols % m != 0 {
+        return false;
+    }
+    for r in 0..rows {
+        let row = mask.row(r);
+        for g in 0..cols / m {
+            let kept: usize = row[g * m..(g + 1) * m]
+                .iter()
+                .filter(|&&x| x == 1.0)
+                .count();
+            if kept != n {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn two_four_keeps_top2() {
+        let w = Tensor::new(&[1, 4], vec![0.1, -3.0, 2.0, 0.5]);
+        let m = nm_mask(&w, 2, 4);
+        assert_eq!(m.data(), &[0.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn ties_break_by_index() {
+        let w = Tensor::new(&[1, 4], vec![1.0, 1.0, 1.0, 1.0]);
+        let m = nm_mask(&w, 2, 4);
+        assert_eq!(m.data(), &[1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn rejects_bad_group() {
+        let w = Tensor::zeros(&[2, 6]);
+        assert!(std::panic::catch_unwind(|| nm_mask(&w, 2, 4)).is_err());
+    }
+
+    #[test]
+    fn prop_nm_invariant_holds() {
+        prop::check("nm_invariant", 30, |g| {
+            let rows = g.dim(16).max(1);
+            let (n, m) = *g.rng.choice(&[(1usize, 4usize), (2, 4), (4, 8), (2, 8)]);
+            let groups = g.dim_multiple_of(1, 8);
+            let cols = groups * m;
+            let w = Tensor::new(&[rows, cols], g.tensor(rows * cols, 1.0));
+            let mask = nm_mask(&w, n, m);
+            assert!(check_nm(&mask, n, m));
+            // kept entries have scores >= dropped within each group
+            for r in 0..rows {
+                for gi in 0..cols / m {
+                    let base = gi * m;
+                    let min_kept = (0..m)
+                        .filter(|&i| mask.at2(r, base + i) == 1.0)
+                        .map(|i| w.at2(r, base + i).abs())
+                        .fold(f32::INFINITY, f32::min);
+                    let max_dropped = (0..m)
+                        .filter(|&i| mask.at2(r, base + i) == 0.0)
+                        .map(|i| w.at2(r, base + i).abs())
+                        .fold(0.0f32, f32::max);
+                    assert!(min_kept >= max_dropped - 1e-6);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn scored_variant_uses_scores_not_weights() {
+        let mut rng = Rng::new(4);
+        let w = Tensor::randn(&[2, 8], 1.0, &mut rng);
+        // scores force keeping the *first* n of each group
+        let mut s = Tensor::zeros(&[2, 8]);
+        for r in 0..2 {
+            for c in 0..8 {
+                s.set2(r, c, if c % 4 < 2 { 10.0 } else { 0.0 });
+            }
+        }
+        let mask = nm_mask_scored(&w, &s, 2, 4);
+        for r in 0..2 {
+            for c in 0..8 {
+                assert_eq!(mask.at2(r, c), if c % 4 < 2 { 1.0 } else { 0.0 });
+            }
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Wanda (Sun et al. 2023): prune by |W_ij| · ‖X_j‖₂.
+//!
+//! The input norms come from the calibration Gram matrices captured by the
+//! `calib_stats` executable: ‖X_j‖₂ = sqrt(G_jj) with G = Σ_batches XᵀX —
+//! Wanda's activation statistics and SparseGPT's Hessian share one pass.
+//!
+//! Comparison group is the output row (the paper's default for LLMs): each
+//! row prunes exactly round(sparsity·in) entries.  N:M masks apply the same
+//! scores within input groups.
+
+use crate::tensor::Tensor;
+
+use super::{mask_smallest_k, Pattern};
+
+/// Per-input-feature L2 norms from an accumulated Gram matrix.
+pub fn norms_from_gram(gram: &Tensor) -> Vec<f32> {
+    let n = gram.rows();
+    (0..n).map(|j| gram.at2(j, j).max(0.0).sqrt()).collect()
+}
+
+/// Wanda scores S = |W| ⊙ norms (broadcast over rows).
+pub fn scores(w: &Tensor, x_norms: &[f32]) -> Tensor {
+    assert_eq!(w.cols(), x_norms.len());
+    let mut s = Tensor::zeros(w.shape());
+    for r in 0..w.rows() {
+        let wrow = w.row(r);
+        let srow = s.row_mut(r);
+        for j in 0..wrow.len() {
+            srow[j] = wrow[j].abs() * x_norms[j];
+        }
+    }
+    s
+}
+
+/// Wanda mask for one linear.
+pub fn mask(w: &Tensor, gram: &Tensor, pattern: Pattern) -> Tensor {
+    let norms = norms_from_gram(gram);
+    let s = scores(w, &norms);
+    match pattern {
+        Pattern::Unstructured(f) => {
+            let k = (f * w.cols() as f64).round() as usize;
+            let mut out = Tensor::zeros(w.shape());
+            for r in 0..w.rows() {
+                let rowmask = mask_smallest_k(s.row(r), k);
+                out.row_mut(r).copy_from_slice(&rowmask);
+            }
+            out
+        }
+        Pattern::SemiStructured { n, m } => {
+            super::semistructured::nm_mask_scored(w, &s, n, m)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::linalg;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn norms_extracted_from_gram() {
+        // X with known column norms
+        let x = Tensor::new(&[2, 3], vec![3.0, 0.0, 1.0, 4.0, 0.0, 1.0]);
+        let gram = linalg::matmul(&x.transpose2(), &x);
+        let n = norms_from_gram(&gram);
+        assert!((n[0] - 5.0).abs() < 1e-5);
+        assert_eq!(n[1], 0.0);
+        assert!((n[2] - 2f32.sqrt()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn outlier_features_survive_magnitude_would_not() {
+        // The paper's core motivation: a small weight feeding a huge feature
+        // must be kept by Wanda even though magnitude would prune it.
+        let w = Tensor::new(&[1, 4], vec![0.1, 1.0, 0.9, 0.8]);
+        let mut gram = Tensor::zeros(&[4, 4]);
+        gram.set2(0, 0, 10_000.0); // outlier feature 0
+        for j in 1..4 {
+            gram.set2(j, j, 1.0);
+        }
+        let m = mask(&w, &gram, Pattern::Unstructured(0.5));
+        assert_eq!(m.at2(0, 0), 1.0, "outlier weight must survive");
+        // while plain magnitude would prune index 0 first
+        let mag = mask_smallest_k(w.row(0), 2);
+        assert_eq!(mag[0], 0.0);
+    }
+
+    #[test]
+    fn rowwise_budget_exact() {
+        prop::check("wanda_row_budget", 20, |g| {
+            let rows = g.dim(8).max(1);
+            let cols = g.dim_multiple_of(4, 64);
+            let sp = g.sparsity() as f64;
+            let w = Tensor::new(&[rows, cols], g.tensor(rows * cols, 1.0));
+            let x = Tensor::new(&[16, cols], g.tensor(16 * cols, 1.0));
+            let gram = linalg::matmul(&x.transpose2(), &x);
+            let m = mask(&w, &gram, Pattern::Unstructured(sp));
+            let k = (sp * cols as f64).round() as usize;
+            for r in 0..rows {
+                let pruned = m.row(r).iter().filter(|&&x| x == 0.0).count();
+                assert_eq!(pruned, k);
+            }
+        });
+    }
+
+    #[test]
+    fn nm_variant_respects_pattern() {
+        let mut rng = Rng::new(5);
+        let w = Tensor::randn(&[4, 16], 1.0, &mut rng);
+        let x = Tensor::randn(&[32, 16], 1.0, &mut rng);
+        let gram = linalg::matmul(&x.transpose2(), &x);
+        let m = mask(&w, &gram, Pattern::SemiStructured { n: 2, m: 4 });
+        assert!(super::super::semistructured::check_nm(&m, 2, 4));
+    }
+}

@@ -1,0 +1,353 @@
+//! Artifact manifest: the contract between aot.py and the rust runtime.
+//!
+//! aot.py records, for every lowered executable, the exact input/output
+//! tensor names, shapes and dtypes in call order.  Everything the rust side
+//! knows about a model (parameter inventory, groups, prunable set, adapter
+//! shapes, trainable sets per mode) comes from here — there is no second
+//! source of truth.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype {other:?} in manifest"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+    fn parse(j: &Json) -> Result<IoSpec> {
+        Ok(IoSpec {
+            name: j.req("name").as_str().context("io name")?.to_string(),
+            shape: j
+                .req("shape")
+                .as_arr()
+                .context("io shape")?
+                .iter()
+                .map(|v| v.as_usize().unwrap())
+                .collect(),
+            dtype: DType::parse(j.req("dtype").as_str().context("io dtype")?)?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ExecSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub group: String,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Static model configuration mirrored from python's ModelConfig.
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub d_ff: usize,
+    pub use_bias: bool,
+    pub norm: String,
+    pub lora_rank: usize,
+    pub lora_alpha: f64,
+    pub lora_scale: f64,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub calib_rows: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub cfg: ModelCfg,
+    pub params: Vec<ParamSpec>,
+    pub prunable: Vec<String>,
+    /// prunable linear -> capture tap that carries its input (q/k/v share)
+    pub taps: BTreeMap<String, String>,
+    /// adapter tensors: name (e.g. "h0_attn_q_w::A") -> shape
+    pub adapters: Vec<(String, Vec<usize>)>,
+    /// retraining mode -> model-parameter names trained under it
+    pub trainable: BTreeMap<String, Vec<String>>,
+    pub executables: BTreeMap<String, ExecSpec>,
+}
+
+impl ModelManifest {
+    pub fn param(&self, name: &str) -> Option<&ParamSpec> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    pub fn param_shape(&self, name: &str) -> &[usize] {
+        &self
+            .param(name)
+            .unwrap_or_else(|| panic!("unknown param {name:?}"))
+            .shape
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    pub fn exec(&self, name: &str) -> Result<&ExecSpec> {
+        self.executables
+            .get(name)
+            .with_context(|| format!("executable {name:?} not in manifest (model {})", self.cfg.name))
+    }
+
+    pub fn adapter_shape(&self, name: &str) -> &[usize] {
+        &self
+            .adapters
+            .iter()
+            .find(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("unknown adapter {name:?}"))
+            .1
+    }
+
+    /// Total trainable parameter count for a retraining mode (incl adapters
+    /// for LoRA modes) — the "% trainable" column of the paper's tables.
+    pub fn trainable_count(&self, mode: &str) -> usize {
+        let base: usize = self
+            .trainable
+            .get(mode)
+            .map(|names| {
+                names
+                    .iter()
+                    .map(|n| self.param(n).map(|p| p.numel()).unwrap_or(0))
+                    .sum()
+            })
+            .unwrap_or(0);
+        let adapters: usize = if is_lora_mode(mode) {
+            self.adapters.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+        } else {
+            0
+        };
+        base + adapters
+    }
+}
+
+pub fn is_lora_mode(mode: &str) -> bool {
+    matches!(mode, "lora" | "masklora" | "masklora_std" | "scalelora")
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let mut models = BTreeMap::new();
+        for (name, mj) in j.req("models").as_obj().context("models")? {
+            models.insert(name.clone(), parse_model(mj)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .with_context(|| {
+                format!(
+                    "model {name:?} not in manifest; available: {:?}",
+                    self.models.keys().collect::<Vec<_>>()
+                )
+            })
+    }
+
+    pub fn hlo_path(&self, exec: &ExecSpec) -> PathBuf {
+        self.dir.join(&exec.file)
+    }
+}
+
+fn parse_model(j: &Json) -> Result<ModelManifest> {
+    let c = j.req("config");
+    let cfg = ModelCfg {
+        name: c.req("name").as_str().unwrap().to_string(),
+        vocab: c.req("vocab").as_usize().unwrap(),
+        d_model: c.req("d_model").as_usize().unwrap(),
+        n_layers: c.req("n_layers").as_usize().unwrap(),
+        n_heads: c.req("n_heads").as_usize().unwrap(),
+        seq_len: c.req("seq_len").as_usize().unwrap(),
+        d_ff: c.req("d_ff").as_usize().unwrap(),
+        use_bias: c.req("use_bias").as_bool().unwrap(),
+        norm: c.req("norm").as_str().unwrap().to_string(),
+        lora_rank: c.req("lora_rank").as_usize().unwrap(),
+        lora_alpha: c.req("lora_alpha").as_f64().unwrap(),
+        lora_scale: c.req("lora_scale").as_f64().unwrap(),
+        train_batch: c.req("train_batch").as_usize().unwrap(),
+        eval_batch: c.req("eval_batch").as_usize().unwrap(),
+        calib_rows: c.req("calib_rows").as_usize().unwrap(),
+    };
+    let params = j
+        .req("params")
+        .as_arr()
+        .context("params")?
+        .iter()
+        .map(|p| ParamSpec {
+            name: p.req("name").as_str().unwrap().to_string(),
+            shape: p
+                .req("shape")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_usize().unwrap())
+                .collect(),
+            group: p.req("group").as_str().unwrap().to_string(),
+        })
+        .collect();
+    let prunable = j
+        .req("prunable")
+        .as_arr()
+        .context("prunable")?
+        .iter()
+        .map(|v| v.as_str().unwrap().to_string())
+        .collect();
+    let mut taps = BTreeMap::new();
+    for (k, v) in j.req("taps").as_obj().context("taps")? {
+        taps.insert(k.clone(), v.as_str().unwrap().to_string());
+    }
+    let adapters = j
+        .req("adapters")
+        .as_arr()
+        .context("adapters")?
+        .iter()
+        .map(|a| {
+            (
+                a.req("name").as_str().unwrap().to_string(),
+                a.req("shape")
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|v| v.as_usize().unwrap())
+                    .collect(),
+            )
+        })
+        .collect();
+    let mut trainable = BTreeMap::new();
+    for (mode, names) in j.req("trainable").as_obj().context("trainable")? {
+        trainable.insert(
+            mode.clone(),
+            names
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_str().unwrap().to_string())
+                .collect(),
+        );
+    }
+    let mut executables = BTreeMap::new();
+    for (name, e) in j.req("executables").as_obj().context("executables")? {
+        let inputs = e
+            .req("inputs")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(IoSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = e
+            .req("outputs")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(IoSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        executables.insert(
+            name.clone(),
+            ExecSpec {
+                name: name.clone(),
+                file: e.req("file").as_str().unwrap().to_string(),
+                inputs,
+                outputs,
+            },
+        );
+    }
+    Ok(ModelManifest { cfg, params, prunable, taps, adapters, trainable, executables })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&artifacts_dir()).expect("run `make artifacts` first");
+        let nano = m.model("gpt-nano").unwrap();
+        assert_eq!(nano.cfg.d_model, 32);
+        assert_eq!(nano.prunable.len(), nano.cfg.n_layers * 6);
+        assert!(nano.exec("eval_loss").is_ok());
+        assert!(nano.exec("train_masklora").is_ok());
+        assert!(nano.exec("nope").is_err());
+        // every executable file exists on disk
+        for e in nano.executables.values() {
+            assert!(m.hlo_path(e).exists(), "{e:?}");
+        }
+    }
+
+    #[test]
+    fn trainable_fractions_match_paper_frame() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let mm = m.model("gpt-small").unwrap();
+        let total = mm.total_params() as f64;
+        let ln = mm.trainable_count("ln") as f64 / total;
+        let biases = mm.trainable_count("biases") as f64 / total;
+        let lora = mm.trainable_count("masklora") as f64 / total;
+        assert!(ln < biases && biases < lora && lora < 0.2, "{ln} {biases} {lora}");
+        assert_eq!(mm.trainable_count("full"), mm.total_params());
+    }
+
+    #[test]
+    fn llama_has_no_bias_group() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let lm = m.model("llama-tiny").unwrap();
+        assert_eq!(lm.trainable_count("biases"), 0);
+        assert!(!lm.cfg.use_bias);
+        assert_eq!(lm.cfg.norm, "rmsnorm");
+    }
+}

@@ -1,0 +1,298 @@
+//! PJRT runtime bridge: load AOT HLO-text artifacts, compile once, execute
+//! from the coordinator hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  Interchange is HLO *text* (jax ≥0.5 protos
+//! carry 64-bit ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns them).
+//!
+//! Executables are compiled lazily and cached per (model, name).  All
+//! lowered graphs return tuples (`return_tuple=True`), unwrapped here.
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{DType, ExecSpec, IoSpec, Manifest, ModelCfg, ModelManifest};
+
+use crate::tensor::Tensor;
+
+// ---------------------------------------------------------------------------
+// Literal conversion helpers.
+// ---------------------------------------------------------------------------
+
+pub fn f32_literal(t: &Tensor) -> Result<xla::Literal> {
+    let mut bytes = Vec::with_capacity(t.numel() * 4);
+    for &x in t.data() {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        t.shape(),
+        &bytes,
+    )
+    .map_err(|e| anyhow::anyhow!("creating f32 literal: {e:?}"))
+}
+
+pub fn i32_literal(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for &x in data {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, &bytes)
+        .map_err(|e| anyhow::anyhow!("creating i32 literal: {e:?}"))
+}
+
+pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let v: Vec<f32> = lit
+        .to_vec()
+        .map_err(|e| anyhow::anyhow!("literal -> f32 vec: {e:?}"))?;
+    Ok(Tensor::new(shape, v))
+}
+
+// ---------------------------------------------------------------------------
+// Feed: named tensors for one execution.
+// ---------------------------------------------------------------------------
+
+/// Input values for one execution, resolved by manifest input name.
+///
+/// The coordinator layers register providers by prefix (`p::`, `m::`, ...)
+/// through [`Feed::provider`]; one-off tensors (tokens, scalars) go in via
+/// [`Feed::tensor`] / [`Feed::ints`] / [`Feed::scalar`].
+#[derive(Default)]
+pub struct Feed<'a> {
+    tensors: HashMap<String, &'a Tensor>,
+    owned: HashMap<String, Tensor>,
+    ints: HashMap<String, (&'a [usize], &'a [i32])>,
+    providers: Vec<&'a dyn Fn(&str) -> Option<&'a Tensor>>,
+}
+
+impl<'a> Feed<'a> {
+    pub fn new() -> Feed<'a> {
+        Feed::default()
+    }
+    pub fn tensor(mut self, name: &str, t: &'a Tensor) -> Self {
+        self.tensors.insert(name.to_string(), t);
+        self
+    }
+    /// Borrow with an owned key (hot loops that format names per step).
+    pub fn owned_key(mut self, name: String, t: &'a Tensor) -> Self {
+        self.tensors.insert(name, t);
+        self
+    }
+    pub fn owned(mut self, name: &str, t: Tensor) -> Self {
+        self.owned.insert(name.to_string(), t);
+        self
+    }
+    pub fn scalar(self, name: &str, v: f32) -> Self {
+        self.owned(name, Tensor::scalar(v))
+    }
+    pub fn ints(mut self, name: &str, shape: &'a [usize], data: &'a [i32]) -> Self {
+        self.ints.insert(name.to_string(), (shape, data));
+        self
+    }
+    /// Register a fallback resolver (e.g. ParamStore lookup for `p::*`).
+    pub fn provider(mut self, f: &'a dyn Fn(&str) -> Option<&'a Tensor>) -> Self {
+        self.providers.push(f);
+        self
+    }
+
+    fn resolve(&self, spec: &IoSpec) -> Result<xla::Literal> {
+        match spec.dtype {
+            DType::I32 => {
+                let (shape, data) = self
+                    .ints
+                    .get(&spec.name)
+                    .with_context(|| format!("missing i32 input {:?}", spec.name))?;
+                if *shape != &spec.shape[..] {
+                    bail!("input {:?}: shape {shape:?} != spec {:?}", spec.name, spec.shape);
+                }
+                i32_literal(shape, data)
+            }
+            DType::F32 => {
+                let t: &Tensor = if let Some(t) = self.tensors.get(&spec.name) {
+                    t
+                } else if let Some(t) = self.owned.get(&spec.name) {
+                    t
+                } else {
+                    self.providers
+                        .iter()
+                        .find_map(|p| p(&spec.name))
+                        .with_context(|| format!("missing f32 input {:?}", spec.name))?
+                };
+                if t.shape() != &spec.shape[..] {
+                    bail!(
+                        "input {:?}: tensor shape {:?} != spec {:?}",
+                        spec.name,
+                        t.shape(),
+                        spec.shape
+                    );
+                }
+                f32_literal(t)
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Outputs: named tensors from one execution.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct Outputs {
+    pub values: Vec<(String, Tensor)>,
+}
+
+impl Outputs {
+    pub fn get(&self, name: &str) -> &Tensor {
+        &self
+            .values
+            .iter()
+            .find(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("no output {name:?}"))
+            .1
+    }
+    pub fn take(&mut self, name: &str) -> Tensor {
+        let idx = self
+            .values
+            .iter()
+            .position(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("no output {name:?}"));
+        self.values.swap_remove(idx).1
+    }
+    pub fn scalar(&self, name: &str) -> f32 {
+        self.get(name).data()[0]
+    }
+    /// Drain outputs whose name starts with `prefix`, stripping it.
+    pub fn drain_prefix(&mut self, prefix: &str) -> Vec<(String, Tensor)> {
+        let mut out = Vec::new();
+        let mut rest = Vec::new();
+        for (n, t) in self.values.drain(..) {
+            if let Some(stripped) = n.strip_prefix(prefix) {
+                out.push((stripped.to_string(), t));
+            } else {
+                rest.push((n, t));
+            }
+        }
+        self.values = rest;
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executable + Runtime.
+// ---------------------------------------------------------------------------
+
+pub struct Executable {
+    pub spec: ExecSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with a [`Feed`]; returns outputs as named host tensors.
+    pub fn run(&self, feed: &Feed) -> Result<Outputs> {
+        let mut literals = Vec::with_capacity(self.spec.inputs.len());
+        for spec in &self.spec.inputs {
+            literals.push(
+                feed.resolve(spec)
+                    .with_context(|| format!("feeding executable {:?}", self.spec.name))?,
+            );
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing {:?}: {e:?}", self.spec.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {:?}: {e:?}", self.spec.name))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling result of {:?}: {e:?}", self.spec.name))?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{:?}: {} outputs from device, {} in manifest",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut values = Vec::with_capacity(parts.len());
+        for (lit, ospec) in parts.iter().zip(&self.spec.outputs) {
+            values.push((ospec.name.clone(), literal_to_tensor(lit, &ospec.shape)?));
+        }
+        Ok(Outputs { values })
+    }
+}
+
+/// PJRT client + compiled-executable cache for one artifacts directory.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<(String, String), Rc<Executable>>>,
+    /// executions performed (metrics)
+    pub exec_count: RefCell<u64>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &std::path::Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            manifest,
+            client,
+            cache: RefCell::new(HashMap::new()),
+            exec_count: RefCell::new(0),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.manifest.model(name)
+    }
+
+    /// Compile (or fetch from cache) one executable of one model.
+    pub fn load(&self, model: &str, exec: &str) -> Result<Rc<Executable>> {
+        let key = (model.to_string(), exec.to_string());
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let mm = self.manifest.model(model)?;
+        let spec = mm.exec(exec)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {exec:?}: {e:?}"))?;
+        let wrapped = Rc::new(Executable { spec, exe });
+        self.cache.borrow_mut().insert(key, wrapped.clone());
+        Ok(wrapped)
+    }
+
+    /// Convenience: load + run in one call.
+    pub fn run(&self, model: &str, exec: &str, feed: &Feed) -> Result<Outputs> {
+        *self.exec_count.borrow_mut() += 1;
+        self.load(model, exec)?.run(feed)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+/// Default artifacts directory: `$PERP_ARTIFACTS` or `<crate>/artifacts`.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var("PERP_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}

@@ -1,0 +1,129 @@
+//! Checkpoint serialization: a minimal named-tensor container ("PTNS").
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "PTNS1\n" | u32 n_entries |
+//!   per entry: u32 name_len | name bytes | u32 ndim | u64 dims... | f32 data...
+//! ```
+//! Used for model checkpoints, masks and optimizer state.  Integrity is
+//! checked on load (magic, lengths, EOF).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Tensor;
+
+const MAGIC: &[u8; 6] = b"PTNS1\n";
+
+pub fn save(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating {path:?}"))?;
+    let mut w = std::io::BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        w.write_all(&(nb.len() as u32).to_le_bytes())?;
+        w.write_all(nb)?;
+        w.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        // SAFETY-free path: serialise f32s explicitly
+        let mut buf = Vec::with_capacity(t.numel() * 4);
+        for &x in t.data() {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut r = std::io::BufReader::new(file);
+    let mut magic = [0u8; 6];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: bad magic {magic:?} — not a PTNS checkpoint");
+    }
+    let n = read_u32(&mut r)? as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..n {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 4096 {
+            bail!("{path:?}: corrupt name length {name_len}");
+        }
+        let mut nb = vec![0u8; name_len];
+        r.read_exact(&mut nb)?;
+        let name = String::from_utf8(nb).context("tensor name not utf8")?;
+        let ndim = read_u32(&mut r)? as usize;
+        if ndim > 8 {
+            bail!("{path:?}: corrupt ndim {ndim}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let mut buf = vec![0u8; numel * 4];
+        r.read_exact(&mut buf)?;
+        let data: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.insert(name, Tensor::new(&shape, data));
+    }
+    Ok(out)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(1);
+        let mut m = BTreeMap::new();
+        m.insert("w".to_string(), Tensor::randn(&[3, 4], 1.0, &mut rng));
+        m.insert("b".to_string(), Tensor::randn(&[7], 0.1, &mut rng));
+        m.insert("scalar".to_string(), Tensor::scalar(3.25));
+        let dir = std::env::temp_dir().join("perp_io_test");
+        let path = dir.join("ckpt.ptns");
+        save(&path, &m).unwrap();
+        let m2 = load(&path).unwrap();
+        assert_eq!(m, m2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("perp_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.ptns");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load(Path::new("/nonexistent/x.ptns")).is_err());
+    }
+}

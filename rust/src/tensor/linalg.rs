@@ -1,0 +1,294 @@
+//! Dense linear algebra on host tensors.
+//!
+//! The load-bearing consumer is SparseGPT's OBS solver
+//! (`pruning::sparsegpt`), which needs the exact Frantar & Alistarh Cholesky
+//! toolchain:
+//!
+//! 1. `cholesky(H)`            — lower factor L, H = L Lᵀ (with damping by
+//!    the caller);
+//! 2. `cholesky_inverse(L)`    — H⁻¹ from the factor;
+//! 3. transpose of `cholesky(H⁻¹)` — the upper-triangular "Hinv" whose rows
+//!    drive the column-wise error compensation.
+//!
+//! Matmul is a cache-blocked ikj kernel — fast enough for calibration-scale
+//! Grams (≤ 1024²) while staying dependency-free.
+
+use super::Tensor;
+
+/// a:(n,k) @ b:(k,m) -> (n,m), blocked over k for cache locality.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (n, k) = (a.rows(), a.cols());
+    let (k2, m) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul inner-dim mismatch {k} vs {k2}");
+    let mut out = vec![0.0f32; n * m];
+    const BK: usize = 64;
+    let ad = a.data();
+    let bd = b.data();
+    for k0 in (0..k).step_by(BK) {
+        let k1 = (k0 + BK).min(k);
+        for i in 0..n {
+            let arow = &ad[i * k..(i + 1) * k];
+            let orow = &mut out[i * m..(i + 1) * m];
+            for kk in k0..k1 {
+                let av = arow[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &bd[kk * m..(kk + 1) * m];
+                for j in 0..m {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+    Tensor::new(&[n, m], out)
+}
+
+/// a:(n,k) @ b:(m,k)ᵀ -> (n,m) — the (out,in)-weight-layout forward.
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (n, k) = (a.rows(), a.cols());
+    let (m, k2) = (b.rows(), b.cols());
+    assert_eq!(k, k2);
+    let mut out = vec![0.0f32; n * m];
+    let ad = a.data();
+    let bd = b.data();
+    for i in 0..n {
+        let arow = &ad[i * k..(i + 1) * k];
+        for j in 0..m {
+            let brow = &bd[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            out[i * m + j] = acc;
+        }
+    }
+    Tensor::new(&[n, m], out)
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum LinalgError {
+    #[error("matrix not positive definite at pivot {0} (value {1})")]
+    NotPd(usize, f64),
+}
+
+/// Lower-triangular Cholesky factor L with A = L Lᵀ.  A must be symmetric.
+pub fn cholesky(a: &Tensor) -> Result<Tensor, LinalgError> {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "cholesky needs a square matrix");
+    let mut l = vec![0.0f64; n * n];
+    let ad = a.data();
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = ad[i * n + j] as f64;
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err(LinalgError::NotPd(i, s));
+                }
+                l[i * n + j] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Ok(Tensor::new(&[n, n], l.into_iter().map(|x| x as f32).collect()))
+}
+
+/// Solve L y = b (forward substitution), L lower triangular.
+pub fn solve_lower(l: &Tensor, b: &[f32]) -> Vec<f32> {
+    let n = l.rows();
+    let mut y = vec![0.0f64; n];
+    let ld = l.data();
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        for k in 0..i {
+            s -= ld[i * n + k] as f64 * y[k];
+        }
+        y[i] = s / ld[i * n + i] as f64;
+    }
+    y.into_iter().map(|x| x as f32).collect()
+}
+
+/// Solve Lᵀ x = y (backward substitution), L lower triangular.
+pub fn solve_lower_t(l: &Tensor, y: &[f32]) -> Vec<f32> {
+    let n = l.rows();
+    let mut x = vec![0.0f64; n];
+    let ld = l.data();
+    for i in (0..n).rev() {
+        let mut s = y[i] as f64;
+        for k in (i + 1)..n {
+            s -= ld[k * n + i] as f64 * x[k];
+        }
+        x[i] = s / ld[i * n + i] as f64;
+    }
+    x.into_iter().map(|x| x as f32).collect()
+}
+
+/// A⁻¹ from the lower Cholesky factor (torch.cholesky_inverse analogue).
+pub fn cholesky_inverse(l: &Tensor) -> Tensor {
+    let n = l.rows();
+    let mut inv = Tensor::zeros(&[n, n]);
+    let mut e = vec![0.0f32; n];
+    for col in 0..n {
+        e[col] = 1.0;
+        let y = solve_lower(l, &e);
+        let x = solve_lower_t(l, &y);
+        for row in 0..n {
+            inv.set2(row, col, x[row]);
+        }
+        e[col] = 0.0;
+    }
+    // symmetrise against float drift
+    for i in 0..n {
+        for j in 0..i {
+            let v = 0.5 * (inv.at2(i, j) + inv.at2(j, i));
+            inv.set2(i, j, v);
+            inv.set2(j, i, v);
+        }
+    }
+    inv
+}
+
+/// SparseGPT's preprocessing: given a (possibly singular) Gram matrix H,
+/// apply percdamp-style damping and return the **upper** Cholesky factor of
+/// H⁻¹ — rows of this factor drive the OBS column updates.
+///
+/// Dead inputs (zero diagonal) get a unit diagonal, matching the reference
+/// implementation's handling.
+pub fn sparsegpt_hinv(h: &Tensor, percdamp: f64) -> Tensor {
+    let n = h.rows();
+    let mut hd = h.clone();
+    let mean_diag: f64 =
+        (0..n).map(|i| hd.at2(i, i) as f64).sum::<f64>() / n as f64;
+    let damp = (percdamp * mean_diag).max(1e-8) as f32;
+    for i in 0..n {
+        let d = hd.at2(i, i);
+        if d == 0.0 {
+            hd.set2(i, i, 1.0);
+        } else {
+            hd.set2(i, i, d + damp);
+        }
+    }
+    // chol(H) -> H^-1 -> chol(H^-1) upper
+    let mut boost = damp;
+    let l = loop {
+        match cholesky(&hd) {
+            Ok(l) => break l,
+            Err(_) => {
+                // escalate damping until PD (mirrors practical SparseGPT forks)
+                boost *= 10.0;
+                for i in 0..n {
+                    hd.set2(i, i, hd.at2(i, i) + boost);
+                }
+            }
+        }
+    };
+    let hinv = cholesky_inverse(&l);
+    let linv = cholesky(&hinv).expect("inverse of PD matrix is PD");
+    linv.transpose2() // upper triangular U with H⁻¹ = Uᵀ U ... (rowwise use)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Tensor {
+        let a = Tensor::randn(&[n, n], 1.0, rng);
+        let mut h = matmul_nt(&a, &a); // A Aᵀ is PSD
+        for i in 0..n {
+            h.set2(i, i, h.at2(i, i) + 0.5);
+        }
+        h
+    }
+
+    #[test]
+    fn matmul_small_exact() {
+        let a = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::new(&[3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_nt_matches_matmul() {
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(&[7, 5], 1.0, &mut rng);
+        let b = Tensor::randn(&[4, 5], 1.0, &mut rng);
+        let c1 = matmul_nt(&a, &b);
+        let c2 = matmul(&a, &b.transpose2());
+        assert!(c1.allclose(&c2, 1e-5));
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(4);
+        let h = random_spd(12, &mut rng);
+        let l = cholesky(&h).unwrap();
+        let rec = matmul_nt(&l, &l);
+        assert!(rec.allclose(&h, 1e-3), "LLᵀ != H");
+        // lower triangular
+        for i in 0..12 {
+            for j in (i + 1)..12 {
+                assert_eq!(l.at2(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let m = Tensor::new(&[2, 2], vec![1.0, 2.0, 2.0, 1.0]); // eigenvalue -1
+        assert!(cholesky(&m).is_err());
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let mut rng = Rng::new(5);
+        let h = random_spd(9, &mut rng);
+        let l = cholesky(&h).unwrap();
+        let b: Vec<f32> = (0..9).map(|i| i as f32 - 4.0).collect();
+        let y = solve_lower(&l, &b);
+        let x = solve_lower_t(&l, &y);
+        // check H x = b
+        let hx = matmul(&h, &Tensor::new(&[9, 1], x));
+        for i in 0..9 {
+            assert!((hx.data()[i] - b[i]).abs() < 1e-3, "{i}");
+        }
+    }
+
+    #[test]
+    fn cholesky_inverse_is_inverse() {
+        let mut rng = Rng::new(6);
+        let h = random_spd(10, &mut rng);
+        let l = cholesky(&h).unwrap();
+        let inv = cholesky_inverse(&l);
+        let prod = matmul(&h, &inv);
+        assert!(prod.allclose(&Tensor::eye(10), 1e-3), "H·H⁻¹ != I");
+    }
+
+    #[test]
+    fn sparsegpt_hinv_properties() {
+        let mut rng = Rng::new(7);
+        let h = random_spd(8, &mut rng);
+        let u = sparsegpt_hinv(&h, 0.01);
+        // upper triangular with positive diagonal
+        for i in 0..8 {
+            assert!(u.at2(i, i) > 0.0);
+            for j in 0..i {
+                assert_eq!(u.at2(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn sparsegpt_hinv_handles_dead_inputs() {
+        // a Gram with an all-zero row/col (dead feature) must not blow up
+        let mut h = Tensor::eye(5);
+        h.set2(2, 2, 0.0);
+        let u = sparsegpt_hinv(&h, 0.01);
+        assert!(u.data().iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,263 @@
+//! Host tensor library.
+//!
+//! Model weights, masks, adapters and optimizer state live on the host
+//! between PJRT executions; the pruning criteria (magnitude / Wanda /
+//! SparseGPT) run entirely on these tensors.  f32, row-major, contiguous.
+//!
+//! Submodules: [`linalg`] (blocked matmul, Cholesky toolchain for
+//! SparseGPT's OBS solver), [`io`] (checkpoint serialization).
+
+pub mod io;
+pub mod linalg;
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    // ----- constructors ---------------------------------------------------
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} incompatible with data length {}",
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor::full(shape, 1.0)
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: rng.normal_vec(n, std) }
+    }
+
+    pub fn eye(n: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    // ----- metadata ---------------------------------------------------------
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "rows() on non-matrix {:?}", self.shape);
+        self.shape[0]
+    }
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "cols() on non-matrix {:?}", self.shape);
+        self.shape[1]
+    }
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    // ----- element access ---------------------------------------------------
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j] = v;
+    }
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    // ----- shape ops ----------------------------------------------------------
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        let (r, c) = (self.rows(), self.cols());
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    // ----- elementwise ----------------------------------------------------------
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape, "shape mismatch in zip");
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn hadamard(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn abs(&self) -> Tensor {
+        self.map(f32::abs)
+    }
+
+    // ----- reductions ----------------------------------------------------------
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+    pub fn mean(&self) -> f64 {
+        self.sum() / self.numel() as f64
+    }
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+    pub fn count(&self, pred: impl Fn(f32) -> bool) -> usize {
+        self.data.iter().filter(|&&x| pred(x)).count()
+    }
+
+    /// Fraction of exactly-zero entries (the sparsity invariant checks).
+    pub fn zero_fraction(&self) -> f64 {
+        self.count(|x| x == 0.0) as f64 / self.numel() as f64
+    }
+
+    pub fn allclose(&self, other: &Tensor, atol: f32) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(&a, &b)| (a - b).abs() <= atol + 1e-5 * b.abs())
+    }
+
+    // ----- matmul (delegates to linalg) -------------------------------------
+    /// self:(n,k) @ other:(k,m) -> (n,m)
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        linalg::matmul(self, other)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+        assert_eq!(t.numel(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        assert_eq!(t.transpose2().transpose2(), t);
+        assert_eq!(t.transpose2().at2(3, 2), t.at2(2, 3));
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(&[2, 2], vec![10., 20., 30., 40.]);
+        assert_eq!(a.add(&b).data(), &[11., 22., 33., 44.]);
+        assert_eq!(a.hadamard(&b).data(), &[10., 40., 90., 160.]);
+        assert_eq!(a.scale(2.0).data(), &[2., 4., 6., 8.]);
+        assert_eq!(b.sub(&a).data(), &[9., 18., 27., 36.]);
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::new(&[4], vec![1., -2., 0., 3.]);
+        assert_eq!(t.sum(), 2.0);
+        assert_eq!(t.max_abs(), 3.0);
+        assert_eq!(t.zero_fraction(), 0.25);
+        assert_eq!(t.sq_norm(), 14.0);
+    }
+
+    #[test]
+    fn eye_and_scalar() {
+        let i = Tensor::eye(3);
+        assert_eq!(i.at2(1, 1), 1.0);
+        assert_eq!(i.at2(0, 1), 0.0);
+        assert_eq!(Tensor::scalar(5.0).numel(), 1);
+    }
+
+    #[test]
+    fn randn_statistics() {
+        let mut rng = Rng::new(2);
+        let t = Tensor::randn(&[100, 100], 0.5, &mut rng);
+        let mean = t.mean();
+        let var = t.sq_norm() / t.numel() as f64 - mean * mean;
+        assert!(mean.abs() < 0.02);
+        assert!((var - 0.25).abs() < 0.02);
+    }
+}

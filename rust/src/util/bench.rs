@@ -1,0 +1,183 @@
+//! Micro/macro benchmark harness (criterion replacement).
+//!
+//! Warmup + timed iterations with mean/p50/p95 reporting and a markdown table
+//! writer, so every `cargo bench` target regenerates its paper table in the
+//! same format EXPERIMENTS.md records.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Stats {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+pub struct Bench {
+    pub warmup: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: 3,
+            min_iters: 5,
+            max_iters: 200,
+            target: Duration::from_secs(2),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup: 1, min_iters: 3, max_iters: 20, target: Duration::from_millis(500) }
+    }
+
+    /// Time `f` until the time budget or max_iters is reached.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (start.elapsed() < self.target && samples.len() < self.max_iters)
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        samples.sort();
+        let total: Duration = samples.iter().sum();
+        Stats {
+            iters: samples.len(),
+            mean: total / samples.len() as u32,
+            p50: samples[samples.len() / 2],
+            p95: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
+            min: samples[0],
+        }
+    }
+}
+
+/// Markdown table accumulator used by every bench target and sweep.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let padded: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+                .collect();
+            format!("| {} |", padded.join(" | "))
+        };
+        let mut out = format!("\n### {}\n\n", self.title);
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&fmt_row(&sep));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_markdown());
+    }
+
+    /// Append the table to a results file (used to accumulate bench output).
+    pub fn append_to(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        f.write_all(self.to_markdown().as_bytes())
+    }
+}
+
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let b = Bench { warmup: 1, min_iters: 4, max_iters: 8, target: Duration::from_millis(5) };
+        let mut n = 0u64;
+        let stats = b.run(|| {
+            n = n.wrapping_add(1);
+            std::hint::black_box(n);
+        });
+        assert!(stats.iters >= 4);
+        assert!(stats.min <= stats.p50 && stats.p50 <= stats.p95);
+    }
+
+    #[test]
+    fn table_markdown_shape() {
+        let mut t = Table::new("Demo", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert_eq!(md.lines().filter(|l| l.starts_with('|')).count(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.00s");
+        assert_eq!(fmt_duration(Duration::from_millis(5)), "5.00ms");
+        assert_eq!(fmt_duration(Duration::from_micros(7)), "7.0µs");
+    }
+}

@@ -1,0 +1,165 @@
+//! Tiny CLI argument parser (clap replacement).
+//!
+//! Grammar: `repro <subcommand> [--key value]... [--flag]...`.
+//! Typed accessors with defaults; unknown-argument detection via
+//! [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut subcommand = None;
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    opts.insert(key.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.push(key.to_string());
+                }
+            } else if subcommand.is_none() {
+                subcommand = Some(a.clone());
+            } else {
+                return Err(format!("unexpected positional argument {a:?}"));
+            }
+            i += 1;
+        }
+        Ok(Args { subcommand, opts, flags, consumed: Default::default() })
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.opts.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.opts.get(key).cloned()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.mark(key);
+        self.opts
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.mark(key);
+        self.opts
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.mark(key);
+        self.opts
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a float, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Comma-separated list option.
+    pub fn list(&self, key: &str, default: &str) -> Vec<String> {
+        self.str(key, default)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    }
+
+    /// Error on any option/flag that no accessor ever looked at.
+    pub fn finish(&self) -> Result<(), String> {
+        let seen = self.consumed.borrow();
+        for k in self.opts.keys().chain(self.flags.iter()) {
+            if !seen.iter().any(|s| s == k) {
+                return Err(format!("unknown argument --{k}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        let v: Vec<String> = s.split_whitespace().map(|x| x.to_string()).collect();
+        Args::parse(&v).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = args("sweep --exp table1 --seed 3 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("sweep"));
+        assert_eq!(a.str("exp", ""), "table1");
+        assert_eq!(a.u64("seed", 0), 3);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = args("run --lr=0.001 --steps=100");
+        assert_eq!(a.f64("lr", 0.0), 0.001);
+        assert_eq!(a.usize("steps", 0), 100);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = args("x --models a,b,,c");
+        assert_eq!(a.list("models", ""), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("x");
+        assert_eq!(a.str("missing", "d"), "d");
+        assert_eq!(a.usize("n", 7), 7);
+    }
+
+    #[test]
+    fn unknown_args_detected() {
+        let a = args("x --known 1 --unknown 2");
+        let _ = a.usize("known", 0);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn rejects_extra_positional() {
+        let v: Vec<String> = ["a", "b"].iter().map(|s| s.to_string()).collect();
+        assert!(Args::parse(&v).is_err());
+    }
+}

@@ -1,0 +1,104 @@
+//! Leveled stderr logging + wall-clock scoped timers.
+//!
+//! `PERP_LOG=debug|info|warn` controls verbosity (default info).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+
+fn level() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l != 255 {
+        return l;
+    }
+    let parsed = match std::env::var("PERP_LOG").as_deref() {
+        Ok("debug") => 0,
+        Ok("warn") => 2,
+        _ => 1,
+    };
+    LEVEL.store(parsed, Ordering::Relaxed);
+    parsed
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    l as u8 >= level()
+}
+
+pub fn log(l: Level, msg: &str) {
+    if enabled(l) {
+        let tag = match l {
+            Level::Debug => "DBG",
+            Level::Info => "INF",
+            Level::Warn => "WRN",
+        };
+        eprintln!("[{tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, &format!($($arg)*)) };
+}
+
+/// RAII scope timer: logs `<name>: <elapsed>` at info level on drop.
+pub struct ScopeTimer {
+    name: String,
+    start: Instant,
+}
+
+impl ScopeTimer {
+    pub fn new(name: &str) -> Self {
+        ScopeTimer { name: name.to_string(), start: Instant::now() }
+    }
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Drop for ScopeTimer {
+    fn drop(&mut self) {
+        log(Level::Info, &format!("{}: {:.2}s", self.name, self.elapsed_secs()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Info));
+    }
+
+    #[test]
+    fn timer_measures() {
+        let t = ScopeTimer::new("test");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_secs() >= 0.004);
+        set_level(Level::Warn); // silence the drop log in test output
+    }
+}

@@ -1,0 +1,13 @@
+//! Hand-rolled substrates for the offline build environment.
+//!
+//! Only the ~99 crates vendored from the reference image are available — no
+//! serde / clap / criterion / proptest / rand.  Each replacement here is a
+//! small, fully tested module with exactly the surface the rest of the crate
+//! needs.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,96 @@
+//! Property-based testing harness (proptest replacement).
+//!
+//! `check(name, cases, |g| {...})` runs the closure against `cases`
+//! independently seeded generator states; on failure it reports the seed that
+//! reproduces.  [`Gen`] wraps [`super::rng::Rng`] with size-biased helpers for
+//! the shapes/densities this crate cares about.
+
+use super::rng::Rng;
+
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    /// Dimension in [1, max], biased toward small and boundary values.
+    pub fn dim(&mut self, max: usize) -> usize {
+        match self.rng.below(10) {
+            0 => 1,
+            1 => max,
+            2 => (max / 2).max(1),
+            _ => 1 + self.rng.below(max as u64) as usize,
+        }
+    }
+
+    /// Dimension that is a multiple of `m`, in [m, max].
+    pub fn dim_multiple_of(&mut self, m: usize, max: usize) -> usize {
+        let k = (max / m).max(1);
+        m * (1 + self.rng.below(k as u64) as usize)
+    }
+
+    pub fn sparsity(&mut self) -> f32 {
+        *self.rng.choice(&[0.0, 0.1, 0.3, 0.5, 0.6, 0.7, 0.8, 0.9, 0.95, 1.0])
+    }
+
+    pub fn tensor(&mut self, n: usize, std: f32) -> Vec<f32> {
+        self.rng.normal_vec(n, std)
+    }
+}
+
+/// Run `f` for `cases` generated inputs; panic with the failing seed on error.
+pub fn check<F: Fn(&mut Gen)>(name: &str, cases: usize, f: F) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut g = Gen { rng: Rng::new(seed), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+        if let Err(e) = result {
+            eprintln!(
+                "property {name:?} failed at case {case} (reproduce with PERP_PROP_SEED={seed})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn base_seed() -> u64 {
+    std::env::var("PERP_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_0000)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let count = AtomicUsize::new(0);
+        check("count", 25, |g| {
+            let d = g.dim(64);
+            assert!((1..=64).contains(&d));
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 25);
+    }
+
+    #[test]
+    fn dim_multiple_respects_divisor() {
+        check("dims", 50, |g| {
+            let d = g.dim_multiple_of(8, 128);
+            assert_eq!(d % 8, 0);
+            assert!(d >= 8 && d <= 128);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        check("fails", 3, |g| {
+            assert!(g.dim(4) > 100);
+        });
+    }
+}

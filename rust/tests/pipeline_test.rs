@@ -1,0 +1,221 @@
+//! Integration tests over the full coordinator pipeline (gpt-nano, quick
+//! profile): prune→retrain→merge→eval with every criterion and mode family.
+//!
+//! These use few-step training so the suite stays in CI budget; the
+//! *qualitative* assertions (ordering, invariants) are the point — exact
+//! numbers live in the sweeps.
+
+use perp::config::ExperimentConfig;
+use perp::coordinator::reconstruct::{reconstruct, ReconMode};
+use perp::coordinator::sweep::ExpContext;
+use perp::coordinator::Session;
+use perp::peft::Mode;
+use perp::pruning::{semistructured, Criterion, Pattern};
+use perp::runtime::{default_artifacts_dir, Runtime};
+
+// Runtime holds PJRT handles (Rc / RefCell — not Sync), so each test owns
+// one; the dense checkpoint cache on disk keeps pretraining shared.
+fn rt() -> Runtime {
+    Runtime::new(&default_artifacts_dir()).expect("make artifacts first")
+}
+
+fn cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::quick("gpt-nano");
+    c.pretrain_steps = 400;
+    c.retrain_steps = 40;
+    c.recon_steps = 8;
+    c.calib_seqs = 8;
+    c.items_per_task = 6;
+    c
+}
+
+fn ctx(rt: &Runtime) -> ExpContext<'_> {
+    let dir = std::env::temp_dir().join("perp_itest_cache");
+    ExpContext::new(rt, cfg(), dir)
+}
+
+#[test]
+fn pretraining_reduces_loss() {
+    let rt = rt();
+    let mut s = Session::new(&rt, cfg(), 3).unwrap();
+    s.pretrain(60, 2e-3).unwrap();
+    let losses = &s.last_losses;
+    let first: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let last: f32 = losses[losses.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(
+        last < first - 0.3,
+        "loss should fall during pretraining: {first} -> {last}"
+    );
+}
+
+#[test]
+fn prune_damages_and_subsets_recover() {
+    let rt = rt();
+    let c = ctx(&rt);
+    let (base, _) = c
+        .pruned_session(0, Criterion::Magnitude, Pattern::Unstructured(0.7))
+        .unwrap();
+    let damaged = {
+        let mut s = c.clone_session(&base).unwrap();
+        c.evaluate(&mut s, false, None).unwrap().ppl
+    };
+    let dense = {
+        let mut s = c.dense_session(0).unwrap();
+        c.evaluate(&mut s, false, None).unwrap().ppl
+    };
+    assert!(damaged > dense, "pruning must hurt: {dense} vs {damaged}");
+
+    let (bias_cell, _) = c.retrain_tuned(&base, Mode::Biases, 40, false).unwrap();
+    assert!(
+        bias_cell.ppl < damaged,
+        "bias retraining must recover: {damaged} -> {}",
+        bias_cell.ppl
+    );
+}
+
+#[test]
+fn all_criteria_hit_target_sparsity() {
+    let rt = rt();
+    let c = ctx(&rt);
+    for crit in [
+        Criterion::Magnitude,
+        Criterion::MagnitudeGlobal,
+        Criterion::Wanda,
+        Criterion::SparseGpt,
+    ] {
+        let (s, _) = c.pruned_session(0, crit, Pattern::Unstructured(0.5)).unwrap();
+        let sp = s.masks.sparsity();
+        assert!((sp - 0.5).abs() < 0.02, "{}: sparsity {sp}", crit.name());
+        // weights agree with masks
+        assert!((s.params.weight_sparsity(&s.mm) - sp).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn semistructured_masks_verified_end_to_end() {
+    let rt = rt();
+    let c = ctx(&rt);
+    for crit in [Criterion::Magnitude, Criterion::Wanda, Criterion::SparseGpt] {
+        let (s, _) = c
+            .pruned_session(0, crit, Pattern::SemiStructured { n: 2, m: 4 })
+            .unwrap();
+        for (name, mask) in &s.masks.masks {
+            assert!(
+                semistructured::check_nm(mask, 2, 4),
+                "{} violated 2:4 on {name}",
+                crit.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn masklora_retrain_preserves_sparsity_through_merge() {
+    let rt = rt();
+    let c = ctx(&rt);
+    let (base, _) = c
+        .pruned_session(0, Criterion::Magnitude, Pattern::Unstructured(0.5))
+        .unwrap();
+    let sparsity_before = base.masks.sparsity();
+    for mode in [Mode::MaskLora, Mode::ScaleLora, Mode::LoraPrune] {
+        let mut s = c.clone_session(&base).unwrap();
+        s.retrain(mode, 10, 1e-3).unwrap();
+        s.merge_adapters().unwrap();
+        let after = s.params.weight_sparsity(&s.mm);
+        assert!(
+            (after - sparsity_before).abs() < 1e-9,
+            "{:?} merge changed sparsity {sparsity_before} -> {after}",
+            mode
+        );
+    }
+    // plain LoRA destroys it
+    let mut s = c.clone_session(&base).unwrap();
+    s.retrain(Mode::Lora, 10, 1e-3).unwrap();
+    s.merge_adapters().unwrap();
+    assert!(s.params.weight_sparsity(&s.mm) < 0.5 * sparsity_before);
+}
+
+#[test]
+fn wanda_and_sparsegpt_beat_magnitude_after_converged_pruning() {
+    // On a converged model at 50%+, calibration-aware criteria should not be
+    // (much) worse than magnitude; SparseGPT should be the best of the three.
+    let rt = rt();
+    let c = ctx(&rt);
+    let mut ppls = std::collections::BTreeMap::new();
+    for crit in [Criterion::Magnitude, Criterion::Wanda, Criterion::SparseGpt] {
+        let (mut s, _) = c.pruned_session(0, crit, Pattern::Unstructured(0.6)).unwrap();
+        ppls.insert(
+            crit.name(),
+            c.evaluate(&mut s, false, None).unwrap().ppl,
+        );
+    }
+    assert!(
+        ppls["sparsegpt"] <= ppls["magnitude"] * 1.05,
+        "{ppls:?}"
+    );
+}
+
+#[test]
+fn reconstruction_improves_pruned_model() {
+    let rt = rt();
+    let c = ctx(&rt);
+    let (base, dense) = c
+        .pruned_session(0, Criterion::Magnitude, Pattern::Unstructured(0.6))
+        .unwrap();
+    let before = {
+        let mut s = c.clone_session(&base).unwrap();
+        c.evaluate(&mut s, false, None).unwrap().ppl
+    };
+    let mut s = c.clone_session(&base).unwrap();
+    let target = s.masks.clone();
+    let report = reconstruct(&mut s, &target, &dense, ReconMode::MaskLora, 10, 2e-3).unwrap();
+    let after = c.evaluate(&mut s, false, None).unwrap().ppl;
+    assert!(report.layers.len() == s.mm.prunable.len());
+    assert!(
+        after < before,
+        "reconstruction should improve ppl: {before} -> {after}"
+    );
+    // sparsity preserved exactly
+    assert!((s.params.weight_sparsity(&s.mm) - target.sparsity()).abs() < 1e-9);
+}
+
+#[test]
+fn full_ft_reconstruction_also_runs() {
+    let rt = rt();
+    let c = ctx(&rt);
+    let (base, dense) = c
+        .pruned_session(0, Criterion::Magnitude, Pattern::Unstructured(0.5))
+        .unwrap();
+    let mut s = c.clone_session(&base).unwrap();
+    let target = s.masks.clone();
+    reconstruct(&mut s, &target, &dense, ReconMode::FullFt, 6, 2e-3).unwrap();
+    assert!((s.params.weight_sparsity(&s.mm) - target.sparsity()).abs() < 1e-9);
+}
+
+#[test]
+fn checkpoint_roundtrip_through_session() {
+    let rt = rt();
+    let c = ctx(&rt);
+    let s = c.dense_session(0).unwrap();
+    let dir = std::env::temp_dir().join("perp_itest_ckpt");
+    let path = dir.join("model.ptns");
+    s.save(&path).unwrap();
+    let mut s2 = Session::new(&rt, cfg(), 9).unwrap();
+    s2.load(&path).unwrap();
+    let p1 = s.eval_ppl_test().unwrap().ppl;
+    let p2 = s2.eval_ppl_test().unwrap().ppl;
+    assert!((p1 - p2).abs() < 1e-6);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn zero_shot_suite_beats_chance_after_training() {
+    let rt = rt();
+    let c = ctx(&rt);
+    let s = c.dense_session(0).unwrap();
+    let results = s.eval_tasks().unwrap();
+    assert_eq!(results.len(), 7);
+    // chance is 50% for 2-option tasks, 25% for 4-option; mean chance ≈ 39%.
+    let mean = perp::eval::mean_accuracy(&results);
+    assert!(mean > 0.42, "trained model should beat chance: {mean}");
+}
