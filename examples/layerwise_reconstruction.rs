@@ -13,7 +13,7 @@ use perp::coordinator::reconstruct::{reconstruct, ReconMode};
 use perp::coordinator::sweep::ExpContext;
 use perp::metrics::training_memory;
 use perp::pruning::{Criterion, Pattern};
-use perp::runtime::{default_artifacts_dir, Runtime};
+use perp::runtime::{open_default_backend, Backend};
 use perp::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -23,11 +23,11 @@ fn main() -> Result<()> {
     let pattern = Pattern::parse(&args.str("sparsity", "0.6")).map_err(|e| anyhow::anyhow!(e))?;
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
 
-    let rt = Runtime::new(&default_artifacts_dir())?;
+    let rt = open_default_backend()?;
     let mut cfg = ExperimentConfig::quick(&model);
     cfg.pretrain_steps = 3000;
     cfg.recon_steps = 40;
-    let ctx = ExpContext::new(&rt, cfg.clone(), "results/cache".into());
+    let ctx = ExpContext::new(rt.as_ref(), cfg.clone(), "results/cache".into());
 
     let dense = ctx.dense_session(0)?;
     let dense_ppl = dense.eval_ppl_test()?.ppl;
@@ -54,7 +54,7 @@ fn main() -> Result<()> {
     }
 
     // the memory argument: global retraining vs one-block reconstruction
-    let mm = rt.model(&model)?;
+    let mm = rt.model(&model)?.clone();
     let tokens = (mm.cfg.train_batch * mm.cfg.seq_len) as u64;
     let full = training_memory(
         mm.total_params() as u64,

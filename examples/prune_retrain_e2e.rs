@@ -4,7 +4,8 @@
 //! synthetic corpus for a few hundred steps (loss curve logged), evaluate
 //! perplexity + the seven-task zero-shot suite, magnitude-prune, retrain with
 //! each headline PERP method, and verify the MaskLoRA merge invariant — all
-//! through the AOT artifacts on the PJRT CPU client; no Python anywhere.
+//! through the pluggable execution backend (native by default); no Python
+//! anywhere.
 //!
 //! ```bash
 //! cargo run --release --offline --example prune_retrain_e2e -- \
@@ -18,7 +19,7 @@ use perp::coordinator::sweep::ExpContext;
 use perp::coordinator::Session;
 use perp::peft::Mode;
 use perp::pruning::{Criterion, Pattern};
-use perp::runtime::{default_artifacts_dir, Runtime};
+use perp::runtime::{open_default_backend, Backend};
 use perp::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -30,13 +31,13 @@ fn main() -> Result<()> {
     let pattern = Pattern::parse(&args.str("sparsity", "0.5")).map_err(|e| anyhow::anyhow!(e))?;
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
 
-    let rt = Runtime::new(&default_artifacts_dir())?;
+    let rt = open_default_backend()?;
     let mut cfg = ExperimentConfig::full(&model);
     cfg.pretrain_steps = steps;
     cfg.retrain_steps = retrain_steps;
     cfg.items_per_task = 25;
 
-    let mm = rt.model(&model)?;
+    let mm = rt.model(&model)?.clone();
     println!(
         "== e2e: {} ({} params, d={}, L={}, V={}) ==",
         model,
@@ -47,7 +48,7 @@ fn main() -> Result<()> {
     );
 
     // ---- 1. pretraining with a logged loss curve -------------------------
-    let mut s = Session::new(&rt, cfg.clone(), 0)?;
+    let mut s = Session::new(rt.as_ref(), cfg.clone(), 0)?;
     let t0 = std::time::Instant::now();
     s.pretrain(steps, cfg.pretrain_lr)?;
     let train_secs = t0.elapsed().as_secs_f64();
@@ -77,7 +78,7 @@ fn main() -> Result<()> {
     }
 
     // ---- 2. prune --------------------------------------------------------
-    let ctx = ExpContext::new(&rt, cfg.clone(), "results/cache".into());
+    let ctx = ExpContext::new(rt.as_ref(), cfg.clone(), "results/cache".into());
     let mut base = ctx.clone_session(&s)?;
     base.prune(Criterion::Magnitude, pattern, None)?;
     let pruned_ppl = base.eval_ppl_test()?;
@@ -122,6 +123,6 @@ fn main() -> Result<()> {
         );
     }
 
-    println!("\ne2e complete: all layers composed (pallas kernels -> jax graphs -> HLO -> rust PJRT).");
+    println!("\ne2e complete: all layers composed on the {} backend.", rt.kind());
     Ok(())
 }

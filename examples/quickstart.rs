@@ -16,14 +16,14 @@ use perp::config::ExperimentConfig;
 use perp::coordinator::sweep::ExpContext;
 use perp::peft::Mode;
 use perp::pruning::{Criterion, Pattern};
-use perp::runtime::{default_artifacts_dir, Runtime};
+use perp::runtime::open_default_backend;
 
 fn main() -> Result<()> {
-    let rt = Runtime::new(&default_artifacts_dir())?;
+    let rt = open_default_backend()?;
     let mut cfg = ExperimentConfig::quick("gpt-nano");
     cfg.pretrain_steps = 3000;
     cfg.retrain_steps = 150;
-    let ctx = ExpContext::new(&rt, cfg, "results/cache".into());
+    let ctx = ExpContext::new(rt.as_ref(), cfg, "results/cache".into());
 
     println!("== 1. dense model ==");
     let dense = ctx.dense_session(0)?;

@@ -11,7 +11,7 @@ use perp::config::ExperimentConfig;
 use perp::coordinator::sweep::ExpContext;
 use perp::peft::Mode;
 use perp::pruning::{Criterion, Pattern};
-use perp::runtime::{default_artifacts_dir, Runtime};
+use perp::runtime::open_default_backend;
 use perp::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -21,10 +21,10 @@ fn main() -> Result<()> {
     let steps = args.u64("steps", 100);
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
 
-    let rt = Runtime::new(&default_artifacts_dir())?;
+    let rt = open_default_backend()?;
     let mut cfg = ExperimentConfig::quick(&model);
     cfg.pretrain_steps = 3000;
-    let ctx = ExpContext::new(&rt, cfg.clone(), "results/cache".into());
+    let ctx = ExpContext::new(rt.as_ref(), cfg.clone(), "results/cache".into());
 
     let sparsities = [0.3, 0.4, 0.5, 0.6, 0.7];
     let methods: Vec<(&str, Option<Mode>)> = vec![

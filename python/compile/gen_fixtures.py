@@ -1,0 +1,350 @@
+"""Generate golden JSON fixtures for the rust NativeBackend tests.
+
+Mirrors model.py's forward/train-step semantics using the pure-jnp oracles in
+kernels/ref.py, with jax.value_and_grad as the gradient oracle, and writes
+everything (inputs + expected outputs) as JSON under rust/tests/fixtures/.
+
+Deliberately does NOT import compile.model: model.py routes every contraction
+through the Pallas kernel package, which only imports on jax versions with
+matching pallas APIs — this generator must run anywhere plain jax runs (ref.py
+is the stated semantic spec the Pallas kernels are themselves tested against).
+The cost is that `param_specs`/`forward` below are a copy of model.py's; when
+model.py's architecture changes, update this mirror and regenerate.
+
+    cd python && python -m compile.gen_fixtures --out ../rust/tests/fixtures
+
+Checked-in outputs: model_micro.json (eval/score/adapter-eval/train-step on a
+micro GPT), adamw.json, merges.json.  Regenerate whenever ref.py semantics
+change.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Micro config (matches the rust-side test's ModelCfg exactly).
+# ---------------------------------------------------------------------------
+
+CFG = dict(
+    name="micro",
+    vocab=17,
+    d_model=8,
+    n_layers=2,
+    n_heads=2,
+    seq_len=6,
+    d_ff=32,
+    use_bias=True,
+    norm="layernorm",
+    lora_rank=3,
+    lora_alpha=6.0,
+    lora_scale=2.0,
+    train_batch=2,
+    eval_batch=2,
+    calib_rows=4,
+)
+
+
+def param_specs(cfg):
+    d, ff = cfg["d_model"], cfg["d_ff"]
+    ln = cfg["norm"] == "layernorm"
+    specs = [
+        ("embed_tokens", (cfg["vocab"], d), "embed"),
+        ("embed_pos", (cfg["seq_len"], d), "embed"),
+    ]
+    for i in range(cfg["n_layers"]):
+        p = f"h{i}_"
+        specs.append((p + "ln1_scale", (d,), "ln"))
+        if ln:
+            specs.append((p + "ln1_bias", (d,), "ln"))
+        for lin in ("attn_q", "attn_k", "attn_v", "attn_o"):
+            specs.append((p + lin + "_w", (d, d), "weight"))
+            if cfg["use_bias"]:
+                specs.append((p + lin + "_b", (d,), "bias"))
+        specs.append((p + "ln2_scale", (d,), "ln"))
+        if ln:
+            specs.append((p + "ln2_bias", (d,), "ln"))
+        specs.append((p + "mlp_fc_w", (ff, d), "weight"))
+        if cfg["use_bias"]:
+            specs.append((p + "mlp_fc_b", (ff,), "bias"))
+        specs.append((p + "mlp_proj_w", (d, ff), "weight"))
+        if cfg["use_bias"]:
+            specs.append((p + "mlp_proj_b", (d,), "bias"))
+    specs.append(("final_ln_scale", (d,), "ln"))
+    if ln:
+        specs.append(("final_ln_bias", (d,), "ln"))
+    specs.append(("head_w", (cfg["vocab"], d), "head"))
+    return specs
+
+
+def prunable_names(cfg):
+    return [n for n, _, g in param_specs(cfg) if g == "weight"]
+
+
+# ---------------------------------------------------------------------------
+# Forward (mirror of model.py, built on ref.py oracles).
+# ---------------------------------------------------------------------------
+
+
+def _norm(cfg, params, prefix, x2d):
+    if cfg["norm"] == "layernorm":
+        return ref.layernorm(x2d, params[prefix + "_scale"], params[prefix + "_bias"])
+    return ref.rmsnorm(x2d, params[prefix + "_scale"])
+
+
+def _linear(cfg, params, masks, adapters, mode, name, x2d):
+    w = params[name + "_w"]
+    m = masks[name + "_w"]
+    if mode == "subset" or adapters is None:
+        y = ref.masked_matmul(x2d, w, m)
+    elif mode == "lora":
+        a, b = adapters[name + "_w::A"], adapters[name + "_w::B"]
+        y = ref.masked_matmul(x2d, w, m) + cfg["lora_scale"] * ((x2d @ a.T) @ b.T)
+    elif mode == "masklora":
+        a, b = adapters[name + "_w::A"], adapters[name + "_w::B"]
+        y = ref.masked_lora_matmul(x2d, w, m, a, b, cfg["lora_scale"])
+    elif mode == "scalelora":
+        a, b = adapters[name + "_w::A"], adapters[name + "_w::B"]
+        y = ref.scale_lora_matmul(x2d, w, m, a, b)
+    else:
+        raise ValueError(mode)
+    if cfg["use_bias"]:
+        y = y + params[name + "_b"][None, :]
+    return y
+
+
+def forward(cfg, params, masks, tokens, adapters=None, mode="subset"):
+    bsz, s = tokens.shape
+    d = cfg["d_model"]
+    h, dh = cfg["n_heads"], cfg["d_model"] // cfg["n_heads"]
+    x = params["embed_tokens"][tokens] + params["embed_pos"][None, :s, :]
+    for i in range(cfg["n_layers"]):
+        p = f"h{i}_"
+        hid = _norm(cfg, params, p + "ln1", x.reshape(bsz * s, d))
+        q = _linear(cfg, params, masks, adapters, mode, p + "attn_q", hid)
+        k = _linear(cfg, params, masks, adapters, mode, p + "attn_k", hid)
+        v = _linear(cfg, params, masks, adapters, mode, p + "attn_v", hid)
+
+        def heads(t):
+            return t.reshape(bsz, s, h, dh).transpose(0, 2, 1, 3)
+
+        o = ref.attention(heads(q), heads(k), heads(v), True)
+        o = o.transpose(0, 2, 1, 3).reshape(bsz * s, d)
+        o = _linear(cfg, params, masks, adapters, mode, p + "attn_o", o)
+        x = x + o.reshape(bsz, s, d)
+
+        hid = _norm(cfg, params, p + "ln2", x.reshape(bsz * s, d))
+        f = _linear(cfg, params, masks, adapters, mode, p + "mlp_fc", hid)
+        f = jax.nn.gelu(f)
+        f = _linear(cfg, params, masks, adapters, mode, p + "mlp_proj", f)
+        x = x + f.reshape(bsz, s, d)
+
+    hid = _norm(cfg, params, "final_ln", x.reshape(bsz * s, d))
+    logits = hid @ params["head_w"].T
+    return logits.reshape(bsz, s, cfg["vocab"])
+
+
+def lm_loss_sums(logits, tokens):
+    tgt = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll), jnp.float32(tgt.size)
+
+
+def sequence_scores(logits, tokens, tmask):
+    lp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    tm = tmask[:, 1:]
+    tok_lp = jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(tok_lp * tm, axis=1), jnp.sum(tm, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Serialisation helpers.
+# ---------------------------------------------------------------------------
+
+
+def arr(x):
+    x = np.asarray(x, dtype=np.float64)
+    return {"shape": list(x.shape), "data": [float(f"{v:.8e}") for v in x.ravel()]}
+
+
+def make_state(cfg, seed):
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape, _group in param_specs(cfg):
+        if name.endswith("_scale"):
+            t = 1.0 + 0.1 * rng.standard_normal(shape)
+        elif name.endswith(("_b", "_bias")):
+            t = 0.1 * rng.standard_normal(shape)
+        else:
+            t = 0.3 * rng.standard_normal(shape)
+        params[name] = jnp.asarray(t, jnp.float32)
+    masks = {}
+    for n in prunable_names(cfg):
+        shape = params[n].shape
+        masks[n] = jnp.asarray(rng.random(shape) > 0.35, jnp.float32)
+    adapters = {}
+    for n in prunable_names(cfg):
+        o, i = params[n].shape
+        adapters[n + "::A"] = jnp.asarray(0.2 * rng.standard_normal((cfg["lora_rank"], i)), jnp.float32)
+        adapters[n + "::B"] = jnp.asarray(0.2 * rng.standard_normal((o, cfg["lora_rank"])), jnp.float32)
+    b, s = cfg["train_batch"], cfg["seq_len"]
+    tokens = rng.integers(0, cfg["vocab"], size=(b, s))
+    tmask = np.zeros((b, s), np.float32)
+    tmask[0, 2:5] = 1.0
+    tmask[1, 1:3] = 1.0
+    return params, masks, adapters, jnp.asarray(tokens, jnp.int32), jnp.asarray(tmask)
+
+
+def train_step_fixture(cfg, params, masks, adapters, tokens, mode, trainable_names_, lr, step):
+    """One AdamW step over the given leaves; returns expected loss/grads/state."""
+    is_lora = mode in ("lora", "masklora", "masklora_std", "scalelora")
+    leaf_names = list(trainable_names_)
+    if is_lora:
+        leaf_names += sorted(adapters.keys())
+
+    def loss_fn(leaves):
+        p = dict(params)
+        ad = dict(adapters) if is_lora else None
+        for k, v in leaves.items():
+            if "::" in k:
+                ad[k] = v
+            else:
+                p[k] = v
+        graph_mode = "masklora" if mode == "masklora_std" else mode
+        logits = forward(cfg, p, masks, tokens, adapters=ad, mode=graph_mode)
+        s, c = lm_loss_sums(logits, tokens)
+        return s / c
+
+    leaves = {}
+    for k in leaf_names:
+        leaves[k] = adapters[k] if "::" in k else params[k]
+    loss, grads = jax.value_and_grad(loss_fn)(leaves)
+    out = {"mode": mode, "lr": lr, "step": step, "loss": float(loss), "leaves": {}}
+    for k in leaf_names:
+        p0 = leaves[k]
+        g = grads[k]
+        m0 = jnp.zeros_like(p0)
+        v0 = jnp.zeros_like(p0)
+        p2, m2, v2 = ref.adamw(p0, g, m0, v0, step, lr)
+        out["leaves"][k] = {
+            "grad": arr(g),
+            "o": arr(p2),
+            "om": arr(m2),
+            "ov": arr(v2),
+        }
+    return out
+
+
+def model_fixture(out_dir):
+    cfg = CFG
+    params, masks, adapters, tokens, tmask = make_state(cfg, seed=20260728)
+
+    logits = forward(cfg, params, masks, tokens, mode="subset")
+    loss_sum, count = lm_loss_sums(logits, tokens)
+    scores, counts = sequence_scores(logits, tokens, tmask)
+
+    logits_lora = forward(cfg, params, masks, tokens, adapters=adapters, mode="lora")
+    lora_sum, _ = lm_loss_sums(logits_lora, tokens)
+    lscores, lcounts = sequence_scores(logits_lora, tokens, tmask)
+
+    biases = [n for n, _, g in param_specs(cfg) if g == "bias"]
+    bias_ln = [n for n, _, g in param_specs(cfg) if g in ("bias", "ln")]
+
+    fixture = {
+        "cfg": cfg,
+        "params": {k: arr(v) for k, v in params.items()},
+        "masks": {k: arr(v) for k, v in masks.items()},
+        "adapters": {k: arr(v) for k, v in adapters.items()},
+        "tokens": [int(t) for t in np.asarray(tokens).ravel()],
+        "tmask": arr(tmask),
+        "expected": {
+            "loss_sum": float(loss_sum),
+            "count": float(count),
+            "scores": [float(x) for x in scores],
+            "counts": [float(x) for x in counts],
+            "lora_loss_sum": float(lora_sum),
+            "lora_scores": [float(x) for x in lscores],
+            "lora_counts": [float(x) for x in lcounts],
+            "train_biases": train_step_fixture(
+                cfg, params, masks, adapters, tokens, "subset", biases, 1e-3, 1
+            ),
+            "train_masklora": train_step_fixture(
+                cfg, params, masks, adapters, tokens, "masklora", bias_ln, 1e-3, 3
+            ),
+            "train_scalelora": train_step_fixture(
+                cfg, params, masks, adapters, tokens, "scalelora", bias_ln, 1e-3, 2
+            ),
+        },
+    }
+    path = os.path.join(out_dir, "model_micro.json")
+    with open(path, "w") as f:
+        json.dump(fixture, f)
+    print(f"wrote {path} ({os.path.getsize(path) / 1e3:.0f} KB)")
+
+
+def adamw_fixture(out_dir):
+    rng = np.random.default_rng(7)
+    p = jnp.asarray(rng.standard_normal((4, 5)), jnp.float32)
+    g = jnp.asarray(0.01 * rng.standard_normal((4, 5)), jnp.float32)
+    m = jnp.asarray(0.05 * rng.standard_normal((4, 5)), jnp.float32)
+    v = jnp.asarray(np.abs(0.002 * rng.standard_normal((4, 5))), jnp.float32)
+    cases = []
+    for step, lr in [(1, 1e-3), (7, 5e-4), (100, 2e-2)]:
+        p2, m2, v2 = ref.adamw(p, g, m, v, step, lr)
+        cases.append(
+            {"step": step, "lr": lr, "p2": arr(p2), "m2": arr(m2), "v2": arr(v2)}
+        )
+    fixture = {"p": arr(p), "g": arr(g), "m": arr(m), "v": arr(v), "cases": cases}
+    path = os.path.join(out_dir, "adamw.json")
+    with open(path, "w") as f:
+        json.dump(fixture, f)
+    print(f"wrote {path}")
+
+
+def merges_fixture(out_dir):
+    rng = np.random.default_rng(11)
+    out, inp, r = 10, 14, 4
+    w = jnp.asarray(0.3 * rng.standard_normal((out, inp)), jnp.float32)
+    mask = jnp.asarray(rng.random((out, inp)) > 0.5, jnp.float32)
+    a = jnp.asarray(0.2 * rng.standard_normal((r, inp)), jnp.float32)
+    b = jnp.asarray(0.2 * rng.standard_normal((out, r)), jnp.float32)
+    scale = 2.0
+    fixture = {
+        "w": arr(w),
+        "mask": arr(mask),
+        "a": arr(a),
+        "b": arr(b),
+        "scale": scale,
+        "masklora": arr(ref.masklora_merge(w, mask, a, b, scale)),
+        "scalelora": arr(ref.scalelora_merge(w, mask, a, b)),
+        "lora_prune": arr(ref.lora_prune_merge(w, mask, a, b, scale)),
+        "lora": arr(w + scale * (b @ a)),
+    }
+    path = os.path.join(out_dir, "merges.json")
+    with open(path, "w") as f:
+        json.dump(fixture, f)
+    print(f"wrote {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../rust/tests/fixtures")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    model_fixture(args.out)
+    adamw_fixture(args.out)
+    merges_fixture(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,13 @@
 //! Shared bench scaffolding: every paper-table bench builds an ExpContext
 //! against the cached quick-profile checkpoints and appends its markdown
 //! table to `results/bench_tables.md`.
+#![allow(dead_code)] // each bench target uses a subset of these helpers
 
 use std::path::PathBuf;
 
 use perp::config::ExperimentConfig;
 use perp::coordinator::sweep::{self, ExpContext};
-use perp::runtime::{default_artifacts_dir, Runtime};
+use perp::runtime::{open_default_backend, Backend};
 
 pub fn bench_model() -> String {
     std::env::var("PERP_BENCH_MODEL").unwrap_or_else(|_| "gpt-nano".to_string())
@@ -25,8 +26,8 @@ pub fn bench_cfg() -> ExperimentConfig {
 }
 
 pub fn run_experiment(exp: &str) {
-    let rt = Runtime::new(&default_artifacts_dir()).expect("make artifacts first");
-    let ctx = ExpContext::new(&rt, bench_cfg(), PathBuf::from("results/cache"));
+    let rt = open_default_backend().expect("opening backend");
+    let ctx = ExpContext::new(rt.as_ref(), bench_cfg(), PathBuf::from("results/cache"));
     let t0 = std::time::Instant::now();
     let tables = sweep::run(&ctx, exp).expect("sweep failed");
     let out = PathBuf::from("results/bench_tables.md");
@@ -36,9 +37,10 @@ pub fn run_experiment(exp: &str) {
         t.append_to(&out).ok();
     }
     println!(
-        "bench[{exp}] ({}): {:.1}s, {} device executions",
+        "bench[{exp}] ({}, {} backend): {:.1}s, {} executions",
         bench_model(),
+        rt.kind(),
         t0.elapsed().as_secs_f64(),
-        rt.exec_count.borrow()
+        rt.exec_count()
     );
 }

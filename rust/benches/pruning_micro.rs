@@ -14,6 +14,32 @@ use std::collections::BTreeMap;
 
 fn main() {
     let bench = Bench::quick();
+
+    // the calibration Gram build (XᵀX) is the pruning pre-pass hot spot —
+    // show the serial baseline vs the rayon kernel feeding it
+    let mut gram_t = Table::new(
+        "calibration Gram XᵀX: serial vs rayon",
+        &["X shape", "serial", "rayon", "speedup"],
+    );
+    let mut grng = Rng::new(7);
+    for (rows, inp) in [(512usize, 256usize), (1024, 512), (2048, 512)] {
+        let x = Tensor::randn(&[rows, inp], 1.0, &mut grng);
+        let xt = x.transpose2();
+        let s = bench.run(|| {
+            std::hint::black_box(linalg::matmul_serial(&xt, &x));
+        });
+        let p = bench.run(|| {
+            std::hint::black_box(linalg::matmul_tn(&x, &x));
+        });
+        gram_t.row(vec![
+            format!("{rows}x{inp}"),
+            perp::util::bench::fmt_duration(s.mean),
+            perp::util::bench::fmt_duration(p.mean),
+            format!("{:.2}x", s.mean_secs() / p.mean_secs()),
+        ]);
+    }
+    gram_t.print();
+
     let mut table = Table::new(
         "pruning criteria micro-bench (one linear layer)",
         &["layer (out x in)", "pattern", "magnitude", "wanda", "sparsegpt"],
@@ -22,7 +48,7 @@ fn main() {
     for (out, inp) in [(64usize, 64usize), (128, 128), (256, 256), (512, 128)] {
         let w = Tensor::randn(&[out, inp], 0.05, &mut rng);
         let x = Tensor::randn(&[256, inp], 1.0, &mut rng);
-        let gram = linalg::matmul(&x.transpose2(), &x);
+        let gram = linalg::matmul_tn(&x, &x);
         for pattern in [Pattern::Unstructured(0.5), Pattern::SemiStructured { n: 2, m: 4 }] {
             let mut weights = BTreeMap::new();
             weights.insert("w".to_string(), &w);
@@ -46,5 +72,6 @@ fn main() {
     }
     table.print();
     std::fs::create_dir_all("results").ok();
+    gram_t.append_to(std::path::Path::new("results/bench_tables.md")).ok();
     table.append_to(std::path::Path::new("results/bench_tables.md")).ok();
 }

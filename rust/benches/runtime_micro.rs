@@ -1,57 +1,109 @@
-//! Micro-benchmarks of the PJRT bridge itself: compile time per executable
-//! and steady-state execution latency of the hot-path graphs.  Feeds the
-//! §Perf analysis of where retraining wall-clock goes (host<->device copies
-//! vs device compute).
+//! Micro-benchmarks of the execution layer: the rayon-parallel matmul
+//! kernels against their single-thread baselines (the NativeBackend hot
+//! path), plus prepare/steady-state latency of the backend graphs.
+//!
+//! The matmul table is the acceptance gauge for the parallel kernel work —
+//! on ≥4 cores the rayon column should be ≥2× the serial column at the
+//! GEMM sizes the retraining loop actually runs.
 
 mod common;
 
 use perp::config::ExperimentConfig;
 use perp::coordinator::Session;
 use perp::eval::base_feed;
-use perp::runtime::{default_artifacts_dir, Runtime};
+use perp::runtime::{open_default_backend, Backend};
+use perp::tensor::{linalg, Tensor};
 use perp::util::bench::{fmt_duration, Bench, Table};
+use perp::util::rng::Rng;
+
+fn matmul_speedups(out: &mut Vec<Table>) {
+    let bench = Bench::quick();
+    let mut t = Table::new(
+        &format!(
+            "matmul kernels: serial vs rayon ({} cores)",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        ),
+        &["op", "shape", "serial", "rayon", "speedup"],
+    );
+    let mut rng = Rng::new(42);
+    for (n, k, m) in [(256usize, 256usize, 256usize), (512, 512, 512), (1024, 256, 1024)] {
+        let a = Tensor::randn(&[n, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, m], 1.0, &mut rng);
+        let s = bench.run(|| {
+            std::hint::black_box(linalg::matmul_serial(&a, &b));
+        });
+        let p = bench.run(|| {
+            std::hint::black_box(linalg::matmul(&a, &b));
+        });
+        t.row(vec![
+            "matmul".into(),
+            format!("{n}x{k} @ {k}x{m}"),
+            fmt_duration(s.mean),
+            fmt_duration(p.mean),
+            format!("{:.2}x", s.mean_secs() / p.mean_secs()),
+        ]);
+        let bt = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let s = bench.run(|| {
+            std::hint::black_box(linalg::matmul_nt_serial(&a, &bt));
+        });
+        let p = bench.run(|| {
+            std::hint::black_box(linalg::matmul_nt(&a, &bt));
+        });
+        t.row(vec![
+            "matmul_nt".into(),
+            format!("{n}x{k} @ ({m}x{k})T"),
+            fmt_duration(s.mean),
+            fmt_duration(p.mean),
+            format!("{:.2}x", s.mean_secs() / p.mean_secs()),
+        ]);
+    }
+    t.print();
+    out.push(t);
+}
 
 fn main() {
-    let rt = Runtime::new(&default_artifacts_dir()).expect("make artifacts first");
+    let mut tables = Vec::new();
+    matmul_speedups(&mut tables);
+
+    let rt = open_default_backend().expect("opening backend");
     let model = common::bench_model();
     let cfg = ExperimentConfig::quick(&model);
-    let s = Session::new(&rt, cfg, 0).unwrap();
+    let s = Session::new(rt.as_ref(), cfg, 0).unwrap();
     let mm = s.mm.clone();
     let b = mm.cfg.eval_batch;
     let sl = mm.cfg.seq_len;
     let shape = [b, sl];
     let tokens = s.train.eval_batch(b, 0);
 
-    // compile times (cold)
+    // prepare times (cold) — compilation on PJRT, validation on native
     let mut compile_t = Table::new(
-        &format!("PJRT compile time ({model})"),
-        &["executable", "inputs", "HLO file", "compile"],
+        &format!("{} prepare time ({model})", rt.kind()),
+        &["executable", "inputs", "prepare"],
     );
     for exec in ["eval_loss", "score", "train_full", "train_masklora", "calib_stats"] {
         let spec = mm.exec(exec).unwrap();
-        let bytes = std::fs::metadata(rt.manifest.hlo_path(spec)).map(|m| m.len()).unwrap_or(0);
         let t0 = std::time::Instant::now();
-        rt.load(&model, exec).unwrap();
+        rt.prepare(&model, exec).unwrap();
         compile_t.row(vec![
             exec.to_string(),
             format!("{}", spec.inputs.len()),
-            format!("{:.2} MB", bytes as f64 / 1e6),
             fmt_duration(t0.elapsed()),
         ]);
     }
     compile_t.print();
+    tables.push(compile_t);
 
     // steady-state execution latency
     let bench = Bench::quick();
     let mut exec_t = Table::new(
-        &format!("execution latency ({model}, batch {b}x{sl})"),
+        &format!("{} execution latency ({model}, batch {b}x{sl})", rt.kind()),
         &["executable", "mean", "p95", "tokens/s"],
     );
     for exec in ["eval_loss", "score", "calib_stats"] {
         let stats = bench.run(|| {
             let mut feed = base_feed(&s.params, &s.masks).ints("tokens", &shape, &tokens);
             if exec == "score" {
-                feed = feed.owned("tmask", perp::tensor::Tensor::ones(&[b, sl]));
+                feed = feed.owned("tmask", Tensor::ones(&[b, sl]));
             }
             std::hint::black_box(rt.run(&model, exec, &feed).unwrap());
         });
@@ -63,7 +115,11 @@ fn main() {
         ]);
     }
     exec_t.print();
+    tables.push(exec_t);
+
     std::fs::create_dir_all("results").ok();
-    compile_t.append_to(std::path::Path::new("results/bench_tables.md")).ok();
-    exec_t.append_to(std::path::Path::new("results/bench_tables.md")).ok();
+    for t in &tables {
+        t.append_to(std::path::Path::new("results/bench_tables.md")).ok();
+    }
+    println!("{} executions on the {} backend", rt.exec_count(), rt.kind());
 }

@@ -13,6 +13,8 @@ use crate::util::json::Json;
 pub struct ExperimentConfig {
     /// model manifest key (gpt-nano .. gpt-medium, llama-tiny)
     pub model: String,
+    /// execution backend ("native" | "pjrt"); overridable with --backend
+    pub backend: String,
     /// pretraining steps to converge the dense model
     pub pretrain_steps: u64,
     pub pretrain_lr: f64,
@@ -38,6 +40,7 @@ impl ExperimentConfig {
     pub fn full(model: &str) -> ExperimentConfig {
         ExperimentConfig {
             model: model.to_string(),
+            backend: "native".to_string(),
             // gpt-nano converges around here; the pruning-collapse shape
             // (Fig 1) only appears on converged models
             pretrain_steps: 30_000,
@@ -86,6 +89,9 @@ impl ExperimentConfig {
         if let Some(v) = j.get("model").and_then(Json::as_str) {
             self.model = v.to_string();
         }
+        if let Some(v) = j.get("backend").and_then(Json::as_str) {
+            self.backend = v.to_string();
+        }
         if let Some(v) = j.get("pretrain_steps").and_then(Json::as_i64) {
             self.pretrain_steps = v as u64;
         }
@@ -124,6 +130,7 @@ impl ExperimentConfig {
     }
 
     pub fn validate(&self) -> Result<()> {
+        crate::runtime::BackendKind::parse(&self.backend).map_err(|e| anyhow::anyhow!(e))?;
         if self.lr_grid.is_empty() {
             bail!("lr_grid must not be empty");
         }
@@ -174,5 +181,23 @@ mod tests {
         let mut c = ExperimentConfig::quick("m");
         c.lr_grid.clear();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn backend_field_defaults_and_validates() {
+        let c = ExperimentConfig::quick("m");
+        assert_eq!(c.backend, "native");
+        c.validate().unwrap();
+        let mut bad = ExperimentConfig::quick("m");
+        bad.backend = "tpu".into();
+        assert!(bad.validate().is_err());
+
+        let dir = std::env::temp_dir().join("perp_cfg_backend_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"backend": "pjrt"}"#).unwrap();
+        let c = ExperimentConfig::quick("gpt-nano").with_file(&p).unwrap();
+        assert_eq!(c.backend, "pjrt");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

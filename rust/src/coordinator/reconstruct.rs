@@ -21,7 +21,7 @@ use anyhow::{Context, Result};
 use crate::eval::base_feed;
 use crate::optim::OptState;
 use crate::pruning::MaskSet;
-use crate::runtime::Feed;
+use crate::runtime::{Backend, Feed};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 

@@ -13,13 +13,13 @@ use crate::model::{init, ParamStore};
 use crate::optim::{OptState, Schedule};
 use crate::peft::{merge, LoraState, Mode};
 use crate::pruning::{magnitude, sparsegpt, wanda, Criterion, MaskSet, Pattern};
-use crate::runtime::{ModelManifest, Runtime};
+use crate::runtime::{Backend, ModelManifest};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 /// Everything one experiment run owns.
 pub struct Session<'rt> {
-    pub rt: &'rt Runtime,
+    pub rt: &'rt dyn Backend,
     pub mm: ModelManifest,
     pub cfg: ExperimentConfig,
     pub params: ParamStore,
@@ -39,7 +39,7 @@ pub struct Session<'rt> {
 }
 
 impl<'rt> Session<'rt> {
-    pub fn new(rt: &'rt Runtime, cfg: ExperimentConfig, seed: u64) -> Result<Session<'rt>> {
+    pub fn new(rt: &'rt dyn Backend, cfg: ExperimentConfig, seed: u64) -> Result<Session<'rt>> {
         let mm = rt.model(&cfg.model)?.clone();
         let mut rng = Rng::new(seed);
         let params = init::init_params(&mm, &mut rng);
@@ -412,16 +412,9 @@ impl<'rt> Session<'rt> {
     }
 }
 
-/// "h0_attn_q_w::A" -> ("h0_attn_q_w", "a")
-pub fn split_adapter_name(name: &str) -> (&str, &'static str) {
-    if let Some(lin) = name.strip_suffix("::A") {
-        (lin, "a")
-    } else if let Some(lin) = name.strip_suffix("::B") {
-        (lin, "b")
-    } else {
-        panic!("not an adapter name: {name:?}")
-    }
-}
+// Canonical decoder lives next to the adapter inventory; re-exported here
+// for the coordinator/eval call sites that predate the backend split.
+pub use crate::runtime::manifest::split_adapter_name;
 
 #[cfg(test)]
 mod tests {

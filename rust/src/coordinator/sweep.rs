@@ -28,7 +28,7 @@ use crate::coordinator::reconstruct::{self, ReconMode};
 use crate::coordinator::Session;
 use crate::peft::Mode;
 use crate::pruning::{Criterion, Pattern};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::tensor::Tensor;
 use crate::util::bench::Table;
 
@@ -38,7 +38,7 @@ pub const EXPERIMENTS: [&str; 11] = [
 ];
 
 pub struct ExpContext<'rt> {
-    pub rt: &'rt Runtime,
+    pub rt: &'rt dyn Backend,
     pub cfg: ExperimentConfig,
     pub cache_dir: PathBuf,
 }
@@ -53,7 +53,7 @@ pub struct CellResult {
 }
 
 impl<'rt> ExpContext<'rt> {
-    pub fn new(rt: &'rt Runtime, cfg: ExperimentConfig, cache_dir: PathBuf) -> Self {
+    pub fn new(rt: &'rt dyn Backend, cfg: ExperimentConfig, cache_dir: PathBuf) -> Self {
         ExpContext { rt, cfg, cache_dir }
     }
 

@@ -12,7 +12,7 @@ use crate::data::{Batcher, Corpus, Tokenizer};
 use crate::model::ParamStore;
 use crate::peft::LoraState;
 use crate::pruning::MaskSet;
-use crate::runtime::{Feed, ModelManifest, Runtime};
+use crate::runtime::{Backend, Feed, ModelManifest};
 use crate::tensor::Tensor;
 
 /// Build the base feed shared by every executable: all params + masks.
@@ -45,7 +45,7 @@ pub struct PplResult {
 
 /// Exact perplexity over (up to `max_batches` of) a batcher's windows.
 pub fn perplexity(
-    rt: &Runtime,
+    rt: &dyn Backend,
     mm: &ModelManifest,
     ps: &ParamStore,
     masks: &MaskSet,
@@ -70,7 +70,7 @@ pub fn perplexity(
 
 /// Perplexity with standard-LoRA adapters active (unmerged).
 pub fn perplexity_lora(
-    rt: &Runtime,
+    rt: &dyn Backend,
     mm: &ModelManifest,
     ps: &ParamStore,
     masks: &MaskSet,
@@ -120,7 +120,7 @@ pub fn word_token_lut(corpus: &Corpus, tok: &Tokenizer) -> Vec<i32> {
 /// Run the full zero-shot suite; per-task accuracy via length-normalised
 /// likelihood ranking, batched through the `score` executable.
 pub fn zero_shot(
-    rt: &Runtime,
+    rt: &dyn Backend,
     mm: &ModelManifest,
     ps: &ParamStore,
     masks: &MaskSet,

@@ -6,13 +6,20 @@
 //! Three layers (see DESIGN.md):
 //!
 //! * **L1** Pallas kernels and **L2** JAX training graphs live in `python/`
-//!   and are AOT-lowered once into `artifacts/*.hlo.txt`.
+//!   and can be AOT-lowered once into `artifacts/*.hlo.txt` (the optional
+//!   `pjrt` path).
 //! * **L3** (this crate) is the only runtime layer: it owns model weights,
 //!   optimizer state, masks and adapters on the host, computes pruning
 //!   criteria (magnitude / Wanda / SparseGPT / N:M), schedules retraining
 //!   and layer-wise reconstruction, and evaluates perplexity plus a
-//!   seven-task zero-shot suite — executing the compiled graphs through the
-//!   PJRT CPU client (`runtime`).
+//!   seven-task zero-shot suite — executing the named graphs through a
+//!   pluggable [`runtime::Backend`]:
+//!
+//!   * [`runtime::NativeBackend`] (default) — hermetic, pure-rust,
+//!     rayon-parallel implementation of every graph; `cargo test` and all
+//!     examples run with zero native dependencies.
+//!   * `runtime::PjrtBackend` (cargo feature `pjrt`) — the AOT HLO-text
+//!     artifacts executed on the PJRT CPU client.
 //!
 //! The environment is fully offline with a fixed crate set, so the usual
 //! suspects (serde, clap, criterion, proptest, rand) are re-implemented as

@@ -23,7 +23,7 @@ use perp::coordinator::reconstruct::{self, ReconMode};
 use perp::coordinator::sweep::{self, ExpContext};
 use perp::peft::Mode;
 use perp::pruning::{Criterion, Pattern};
-use perp::runtime::{default_artifacts_dir, Runtime};
+use perp::runtime::{default_artifacts_dir, open_backend, Backend, BackendKind};
 use perp::util::cli::Args;
 
 fn main() {
@@ -74,8 +74,9 @@ subcommands:
 
 common flags:
   --model <name>       gpt-nano | gpt-tiny | gpt-small | llama-tiny  [gpt-tiny]
+  --backend <b>        native | pjrt (pjrt needs the cargo feature)  [native]
   --profile <p>        quick | full                                 [quick]
-  --artifacts <dir>    artifacts directory                           [./artifacts]
+  --artifacts <dir>    artifacts directory (pjrt backend only)       [./artifacts]
   --out <dir>          results + checkpoint cache                    [./results]
   --seed <n>           experiment seed                               [0]
   --criterion <c>      magnitude | magnitude-global | wanda | sparsegpt
@@ -88,7 +89,7 @@ common flags:
 ";
 
 struct Env {
-    rt: Runtime,
+    rt: Box<dyn Backend>,
     cfg: ExperimentConfig,
     out: PathBuf,
     seed: u64,
@@ -99,12 +100,14 @@ fn common(args: &Args) -> Result<Env> {
         .opt_str("artifacts")
         .map(PathBuf::from)
         .unwrap_or_else(default_artifacts_dir);
-    let rt = Runtime::new(&artifacts)?;
     let model = args.str("model", "gpt-tiny");
     let profile = args.str("profile", "quick");
     let mut cfg = ExperimentConfig::profile(&profile, &model)?;
     if let Some(cfg_file) = args.opt_str("config") {
         cfg = cfg.with_file(std::path::Path::new(&cfg_file))?;
+    }
+    if let Some(backend) = args.opt_str("backend") {
+        cfg.backend = backend;
     }
     if let Some(steps) = args.opt_str("steps") {
         let steps: u64 = steps.parse().context("--steps")?;
@@ -113,20 +116,26 @@ fn common(args: &Args) -> Result<Env> {
     if let Some(steps) = args.opt_str("pretrain-steps") {
         cfg.pretrain_steps = steps.parse().context("--pretrain-steps")?;
     }
+    let kind = BackendKind::parse(&cfg.backend).map_err(|e| anyhow::anyhow!(e))?;
+    let rt = open_backend(kind, &artifacts)?;
     let out = PathBuf::from(args.str("out", "results"));
     std::fs::create_dir_all(&out).ok();
     Ok(Env { rt, cfg, out, seed: args.u64("seed", 0) })
 }
 
 fn ctx(env: &Env) -> ExpContext<'_> {
-    ExpContext::new(&env.rt, env.cfg.clone(), env.out.join("cache"))
+    ExpContext::new(env.rt.as_ref(), env.cfg.clone(), env.out.join("cache"))
 }
 
 fn info(args: &Args) -> Result<()> {
     let env = common(args)?;
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
-    println!("artifacts: {:?}", env.rt.manifest.dir);
-    for (name, mm) in &env.rt.manifest.models {
+    println!(
+        "backend: {} (manifest: {:?})",
+        env.rt.kind(),
+        env.rt.manifest().dir
+    );
+    for (name, mm) in &env.rt.manifest().models {
         println!(
             "  {name}: {} params, {} executables, d={} L={} V={} bias={} norm={}",
             mm.total_params(),

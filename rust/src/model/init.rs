@@ -45,11 +45,11 @@ fn hash_name(name: &str) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::{default_artifacts_dir, Manifest};
+    use crate::runtime::Manifest;
 
     #[test]
     fn init_statistics() {
-        let m = Manifest::load(&default_artifacts_dir()).unwrap();
+        let m = Manifest::builtin();
         let mm = m.model("gpt-nano").unwrap();
         let mut rng = Rng::new(0);
         let ps = init_params(mm, &mut rng);
@@ -68,7 +68,7 @@ mod tests {
 
     #[test]
     fn deterministic_per_seed() {
-        let m = Manifest::load(&default_artifacts_dir()).unwrap();
+        let m = Manifest::builtin();
         let mm = m.model("gpt-nano").unwrap();
         let a = init_params(mm, &mut Rng::new(5));
         let b = init_params(mm, &mut Rng::new(5));

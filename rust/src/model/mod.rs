@@ -116,14 +116,10 @@ impl ParamStore {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::{default_artifacts_dir, Manifest};
+    use crate::runtime::Manifest;
 
     fn nano() -> ModelManifest {
-        Manifest::load(&default_artifacts_dir())
-            .expect("run `make artifacts`")
-            .model("gpt-nano")
-            .unwrap()
-            .clone()
+        Manifest::builtin().model("gpt-nano").unwrap().clone()
     }
 
     #[test]

@@ -147,7 +147,7 @@ mod tests {
         let z = s.w.hadamard(&s.mask).add(&ba);
         let y1 = linalg::matmul_nt(&s.x, &z);
         let y2 = linalg::matmul_nt(&s.x, &merged);
-        assert!(y1.allclose(&y2, 1e-5));
+        assert!(y1.allclose(&y2, 1e-5, 1e-5));
     }
 
     #[test]
@@ -158,6 +158,6 @@ mod tests {
         let a = Tensor::full(&[r, 16], 1.0 / (r as f32).sqrt());
         let b = Tensor::full(&[8, r], 1.0 / (r as f32).sqrt());
         let merged = scalelora(&s.w, &s.mask, &a, &b);
-        assert!(merged.allclose(&s.w.hadamard(&s.mask), 1e-5));
+        assert!(merged.allclose(&s.w.hadamard(&s.mask), 1e-5, 1e-5));
     }
 }

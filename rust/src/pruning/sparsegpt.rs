@@ -286,7 +286,7 @@ mod tests {
         let gram = linalg::matmul(&x.transpose2(), &x);
         let res = prune_layer(&w, &gram, Pattern::Unstructured(0.0), 16, 0.01);
         assert_eq!(res.mask.zero_fraction(), 0.0);
-        assert!(res.weights.allclose(&w, 1e-6));
+        assert!(res.weights.allclose(&w, 1e-6, 1e-6));
         assert_eq!(res.obs_error, 0.0);
     }
 }

@@ -1,10 +1,23 @@
-//! Artifact manifest: the contract between aot.py and the rust runtime.
+//! Model manifest: the contract between graph producers and the rust
+//! coordinator.
 //!
-//! aot.py records, for every lowered executable, the exact input/output
-//! tensor names, shapes and dtypes in call order.  Everything the rust side
-//! knows about a model (parameter inventory, groups, prunable set, adapter
-//! shapes, trainable sets per mode) comes from here — there is no second
-//! source of truth.
+//! Two producers exist:
+//!
+//! * [`Manifest::builtin`] — the hermetic default.  A rust port of
+//!   `python/compile/model.py`'s spec builders (`param_specs`, `tap_of`,
+//!   `adapter_specs`, `trainable_names`) plus the executable I/O tables
+//!   `aot.py` would record.  This is what the [`NativeBackend`] executes
+//!   against; no artifacts directory required.
+//! * [`Manifest::load`] — `manifest.json` written by `aot.py` alongside the
+//!   AOT-lowered HLO-text artifacts, consumed by the PJRT backend.
+//!
+//! For every executable the manifest records the exact input/output tensor
+//! names, shapes and dtypes in call order.  Everything the rust side knows
+//! about a model (parameter inventory, groups, prunable set, adapter shapes,
+//! trainable sets per mode) comes from here — there is no second source of
+//! truth.
+//!
+//! [`NativeBackend`]: crate::runtime::NativeBackend
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -167,10 +180,374 @@ pub fn is_lora_mode(mode: &str) -> bool {
     matches!(mode, "lora" | "masklora" | "masklora_std" | "scalelora")
 }
 
+/// Canonical adapter-name split: `"h0_attn_q_w::A"` -> `("h0_attn_q_w", "a")`
+/// — the single place the `<linear>::A/B` <-> `a::<linear>`/`b::<linear>`
+/// naming convention is decoded.
+pub fn split_adapter_name(name: &str) -> (&str, &'static str) {
+    if let Some(lin) = name.strip_suffix("::A") {
+        (lin, "a")
+    } else if let Some(lin) = name.strip_suffix("::B") {
+        (lin, "b")
+    } else {
+        panic!("not an adapter name: {name:?}")
+    }
+}
+
 #[derive(Debug)]
 pub struct Manifest {
     pub dir: PathBuf,
     pub models: BTreeMap<String, ModelManifest>,
+}
+
+// ---------------------------------------------------------------------------
+// Builtin manifest: the hermetic port of model.py + aot.py's spec tables.
+// ---------------------------------------------------------------------------
+
+impl ModelCfg {
+    pub fn d_head(&self) -> usize {
+        debug_assert_eq!(self.d_model % self.n_heads, 0);
+        self.d_model / self.n_heads
+    }
+
+    /// The repro fleet (mirrors python's CONFIGS map).
+    pub fn builtin(name: &str) -> Option<ModelCfg> {
+        let base = |name: &str, vocab, d_model, n_layers, n_heads, seq_len, lora_rank| ModelCfg {
+            name: name.to_string(),
+            vocab,
+            d_model,
+            n_layers,
+            n_heads,
+            seq_len,
+            d_ff: 4 * d_model,
+            use_bias: true,
+            norm: "layernorm".to_string(),
+            lora_rank,
+            lora_alpha: 32.0,
+            lora_scale: 32.0 / lora_rank as f64,
+            train_batch: 8,
+            eval_batch: 8,
+            calib_rows: 512,
+        };
+        Some(match name {
+            "gpt-nano" => ModelCfg {
+                train_batch: 4,
+                eval_batch: 4,
+                calib_rows: 128,
+                ..base("gpt-nano", 128, 32, 2, 2, 32, 4)
+            },
+            "gpt-tiny" => ModelCfg { calib_rows: 256, ..base("gpt-tiny", 256, 64, 2, 2, 64, 8) },
+            "gpt-small" => base("gpt-small", 512, 128, 4, 4, 128, 16),
+            "gpt-medium" => base("gpt-medium", 1024, 256, 6, 8, 128, 16),
+            "llama-tiny" => ModelCfg {
+                use_bias: false,
+                norm: "rmsnorm".to_string(),
+                ..base("llama-tiny", 512, 128, 4, 4, 128, 16)
+            },
+            "gpt-e2e" => base("gpt-e2e", 2048, 384, 6, 8, 128, 16),
+            _ => return None,
+        })
+    }
+
+    pub const BUILTIN_NAMES: [&'static str; 6] = [
+        "gpt-nano", "gpt-tiny", "gpt-small", "gpt-medium", "llama-tiny", "gpt-e2e",
+    ];
+}
+
+/// (name, shape, group) for every parameter, in canonical order — the exact
+/// port of model.py's `param_specs`.
+fn builtin_param_specs(cfg: &ModelCfg) -> Vec<ParamSpec> {
+    let (d, ff) = (cfg.d_model, cfg.d_ff);
+    let layernorm = cfg.norm == "layernorm";
+    let mut specs = vec![
+        ParamSpec { name: "embed_tokens".into(), shape: vec![cfg.vocab, d], group: "embed".into() },
+        ParamSpec { name: "embed_pos".into(), shape: vec![cfg.seq_len, d], group: "embed".into() },
+    ];
+    let mut push = |specs: &mut Vec<ParamSpec>, name: String, shape: Vec<usize>, group: &str| {
+        specs.push(ParamSpec { name, shape, group: group.to_string() });
+    };
+    for i in 0..cfg.n_layers {
+        let p = format!("h{i}_");
+        push(&mut specs, format!("{p}ln1_scale"), vec![d], "ln");
+        if layernorm {
+            push(&mut specs, format!("{p}ln1_bias"), vec![d], "ln");
+        }
+        for lin in ["attn_q", "attn_k", "attn_v", "attn_o"] {
+            push(&mut specs, format!("{p}{lin}_w"), vec![d, d], "weight");
+            if cfg.use_bias {
+                push(&mut specs, format!("{p}{lin}_b"), vec![d], "bias");
+            }
+        }
+        push(&mut specs, format!("{p}ln2_scale"), vec![d], "ln");
+        if layernorm {
+            push(&mut specs, format!("{p}ln2_bias"), vec![d], "ln");
+        }
+        push(&mut specs, format!("{p}mlp_fc_w"), vec![ff, d], "weight");
+        if cfg.use_bias {
+            push(&mut specs, format!("{p}mlp_fc_b"), vec![ff], "bias");
+        }
+        push(&mut specs, format!("{p}mlp_proj_w"), vec![d, ff], "weight");
+        if cfg.use_bias {
+            push(&mut specs, format!("{p}mlp_proj_b"), vec![d], "bias");
+        }
+    }
+    push(&mut specs, "final_ln_scale".into(), vec![d], "ln");
+    if layernorm {
+        push(&mut specs, "final_ln_bias".into(), vec![d], "ln");
+    }
+    push(&mut specs, "head_w".into(), vec![cfg.vocab, d], "head");
+    specs
+}
+
+/// Map a prunable linear to the capture tap carrying its input (q/k/v share).
+pub fn tap_of(name: &str) -> String {
+    name.replace("attn_k", "attn_q").replace("attn_v", "attn_q")
+}
+
+/// Distinct capture points, in forward order (model.py `tap_names`).
+pub fn builtin_tap_names(cfg: &ModelCfg) -> Vec<String> {
+    let mut out = Vec::new();
+    for i in 0..cfg.n_layers {
+        for lin in ["attn_q_w", "attn_o_w", "mlp_fc_w", "mlp_proj_w"] {
+            out.push(format!("h{i}_{lin}"));
+        }
+    }
+    out
+}
+
+/// Model parameters (not adapters) trained under `mode` (model.py
+/// `trainable_names`).
+fn builtin_trainable(params: &[ParamSpec], mode: &str) -> Vec<String> {
+    let pred: fn(&str) -> bool = match mode {
+        "full" => |_| true,
+        "biases" => |g| g == "bias",
+        "ln" => |g| g == "ln",
+        "biases_ln" => |g| g == "bias" || g == "ln",
+        "head" => |g| g == "head",
+        "embed" => |g| g == "embed",
+        m if is_lora_mode(m) => |g| g == "bias" || g == "ln",
+        other => panic!("unknown retraining mode {other:?}"),
+    };
+    params.iter().filter(|p| pred(&p.group)).map(|p| p.name.clone()).collect()
+}
+
+const ALL_MODES: [&str; 10] = [
+    "full", "biases", "ln", "biases_ln", "head", "embed",
+    "lora", "masklora", "masklora_std", "scalelora",
+];
+
+fn io(name: impl Into<String>, shape: &[usize]) -> IoSpec {
+    IoSpec { name: name.into(), shape: shape.to_vec(), dtype: DType::F32 }
+}
+
+fn io_i32(name: impl Into<String>, shape: &[usize]) -> IoSpec {
+    IoSpec { name: name.into(), shape: shape.to_vec(), dtype: DType::I32 }
+}
+
+impl ModelManifest {
+    /// Build the full hermetic manifest entry for one config — parameter
+    /// inventory plus the executable I/O tables aot.py would have recorded.
+    pub fn builtin(cfg: ModelCfg) -> ModelManifest {
+        let params = builtin_param_specs(&cfg);
+        let shapes: BTreeMap<&str, &[usize]> =
+            params.iter().map(|p| (p.name.as_str(), &p.shape[..])).collect();
+        let prunable: Vec<String> = params
+            .iter()
+            .filter(|p| p.group == "weight")
+            .map(|p| p.name.clone())
+            .collect();
+        let taps: BTreeMap<String, String> =
+            prunable.iter().map(|n| (n.clone(), tap_of(n))).collect();
+        let mut adapters: Vec<(String, Vec<usize>)> = Vec::new();
+        for n in &prunable {
+            let s = shapes[n.as_str()];
+            adapters.push((format!("{n}::A"), vec![cfg.lora_rank, s[1]]));
+            adapters.push((format!("{n}::B"), vec![s[0], cfg.lora_rank]));
+        }
+        let trainable: BTreeMap<String, Vec<String>> = ALL_MODES
+            .iter()
+            .map(|m| (m.to_string(), builtin_trainable(&params, m)))
+            .collect();
+
+        // ---- executable I/O tables ------------------------------------
+        let param_inputs: Vec<IoSpec> =
+            params.iter().map(|p| io(format!("p::{}", p.name), &p.shape)).collect();
+        let mask_inputs: Vec<IoSpec> =
+            prunable.iter().map(|n| io(format!("m::{n}"), shapes[n.as_str()])).collect();
+        let adapter_inputs: Vec<IoSpec> = adapters
+            .iter()
+            .map(|(n, s)| {
+                let (lin, tag) = split_adapter_name(n);
+                io(format!("{tag}::{lin}"), s)
+            })
+            .collect();
+        let leaf_shape = |n: &str| -> Vec<usize> {
+            adapters
+                .iter()
+                .find(|(an, _)| an == n)
+                .map(|(_, s)| s.clone())
+                .unwrap_or_else(|| shapes[n].to_vec())
+        };
+        let tok_eval = io_i32("tokens", &[cfg.eval_batch, cfg.seq_len]);
+        let tok_train = io_i32("tokens", &[cfg.train_batch, cfg.seq_len]);
+        let scalar_ins = [io("step", &[]), io("lr", &[])];
+
+        let mut executables = BTreeMap::new();
+        let mut add = |name: &str, inputs: Vec<IoSpec>, outputs: Vec<IoSpec>| {
+            executables.insert(
+                name.to_string(),
+                ExecSpec { name: name.to_string(), file: String::new(), inputs, outputs },
+            );
+        };
+
+        let base: Vec<IoSpec> =
+            param_inputs.iter().chain(&mask_inputs).cloned().collect();
+        let base_lora: Vec<IoSpec> =
+            base.iter().chain(&adapter_inputs).cloned().collect();
+
+        add(
+            "eval_loss",
+            base.iter().cloned().chain([tok_eval.clone()]).collect(),
+            vec![io("loss_sum", &[]), io("count", &[])],
+        );
+        add(
+            "score",
+            base.iter()
+                .cloned()
+                .chain([tok_eval.clone(), io("tmask", &[cfg.eval_batch, cfg.seq_len])])
+                .collect(),
+            vec![io("scores", &[cfg.eval_batch]), io("counts", &[cfg.eval_batch])],
+        );
+        add(
+            "eval_loss_lora",
+            base_lora.iter().cloned().chain([tok_eval.clone()]).collect(),
+            vec![io("loss_sum", &[]), io("count", &[])],
+        );
+        add(
+            "score_lora",
+            base_lora
+                .iter()
+                .cloned()
+                .chain([tok_eval.clone(), io("tmask", &[cfg.eval_batch, cfg.seq_len])])
+                .collect(),
+            vec![io("scores", &[cfg.eval_batch]), io("counts", &[cfg.eval_batch])],
+        );
+
+        for mode in ALL_MODES {
+            let lora = is_lora_mode(mode);
+            let mut leaves = trainable[mode].clone();
+            if lora {
+                leaves.extend(adapters.iter().map(|(n, _)| n.clone()));
+            }
+            let mut inputs = if lora { base_lora.clone() } else { base.clone() };
+            inputs.extend(leaves.iter().map(|n| io(format!("om::{n}"), &leaf_shape(n))));
+            inputs.extend(leaves.iter().map(|n| io(format!("ov::{n}"), &leaf_shape(n))));
+            inputs.push(tok_train.clone());
+            inputs.extend(scalar_ins.iter().cloned());
+            let mut outputs: Vec<IoSpec> =
+                leaves.iter().map(|n| io(format!("o::{n}"), &leaf_shape(n))).collect();
+            outputs.extend(leaves.iter().map(|n| io(format!("om::{n}"), &leaf_shape(n))));
+            outputs.extend(leaves.iter().map(|n| io(format!("ov::{n}"), &leaf_shape(n))));
+            outputs.push(io("loss", &[]));
+            add(&format!("train_{mode}"), inputs, outputs);
+        }
+
+        let tap_names = builtin_tap_names(&cfg);
+        let ntok = cfg.eval_batch * cfg.seq_len;
+        add(
+            "calib_stats",
+            base.iter().cloned().chain([tok_eval.clone()]).collect(),
+            tap_names
+                .iter()
+                .map(|n| {
+                    let d_in = shapes[n.as_str()][1];
+                    io(format!("gram::{n}"), &[d_in, d_in])
+                })
+                .collect(),
+        );
+        add(
+            "capture_inputs",
+            base.iter().cloned().chain([tok_eval.clone()]).collect(),
+            tap_names
+                .iter()
+                .map(|n| io(format!("x::{n}"), &[ntok, shapes[n.as_str()][1]]))
+                .collect(),
+        );
+
+        let mut lin_shapes: Vec<(usize, usize)> = prunable
+            .iter()
+            .map(|n| (shapes[n.as_str()][0], shapes[n.as_str()][1]))
+            .collect();
+        lin_shapes.sort();
+        lin_shapes.dedup();
+        let (rows, r) = (cfg.calib_rows, cfg.lora_rank);
+        for (o, i) in lin_shapes {
+            let tag = format!("{o}x{i}");
+            add(
+                &format!("linear_fwd_{tag}"),
+                vec![io("x", &[rows, i]), io("w", &[o, i])],
+                vec![io("y0", &[rows, o])],
+            );
+            add(
+                &format!("recon_masklora_{tag}"),
+                vec![
+                    io("x", &[rows, i]),
+                    io("y0", &[rows, o]),
+                    io("w", &[o, i]),
+                    io("mask", &[o, i]),
+                    io("a", &[r, i]),
+                    io("b", &[o, r]),
+                    io("om::a", &[r, i]),
+                    io("ov::a", &[r, i]),
+                    io("om::b", &[o, r]),
+                    io("ov::b", &[o, r]),
+                    io("step", &[]),
+                    io("lr", &[]),
+                ],
+                vec![
+                    io("o::a", &[r, i]),
+                    io("o::b", &[o, r]),
+                    io("om::a", &[r, i]),
+                    io("ov::a", &[r, i]),
+                    io("om::b", &[o, r]),
+                    io("ov::b", &[o, r]),
+                    io("loss", &[]),
+                ],
+            );
+            add(
+                &format!("recon_full_{tag}"),
+                vec![
+                    io("x", &[rows, i]),
+                    io("y0", &[rows, o]),
+                    io("w", &[o, i]),
+                    io("mask", &[o, i]),
+                    io("om::w", &[o, i]),
+                    io("ov::w", &[o, i]),
+                    io("step", &[]),
+                    io("lr", &[]),
+                ],
+                vec![
+                    io("o::w", &[o, i]),
+                    io("om::w", &[o, i]),
+                    io("ov::w", &[o, i]),
+                    io("loss", &[]),
+                ],
+            );
+        }
+
+        ModelManifest { cfg, params, prunable, taps, adapters, trainable, executables }
+    }
+}
+
+impl Manifest {
+    /// The hermetic manifest for the whole builtin fleet — what the native
+    /// backend executes against.  No filesystem access.
+    pub fn builtin() -> Manifest {
+        let models = ModelCfg::BUILTIN_NAMES
+            .iter()
+            .map(|n| (n.to_string(), ModelManifest::builtin(ModelCfg::builtin(n).unwrap())))
+            .collect();
+        Manifest { dir: PathBuf::from("<builtin>"), models }
+    }
 }
 
 impl Manifest {
@@ -311,28 +688,68 @@ fn parse_model(j: &Json) -> Result<ModelManifest> {
 mod tests {
     use super::*;
 
-    fn artifacts_dir() -> PathBuf {
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
-
     #[test]
-    fn loads_real_manifest() {
-        let m = Manifest::load(&artifacts_dir()).expect("run `make artifacts` first");
+    fn builtin_fleet_is_complete() {
+        let m = Manifest::builtin();
+        assert_eq!(m.models.len(), ModelCfg::BUILTIN_NAMES.len());
         let nano = m.model("gpt-nano").unwrap();
         assert_eq!(nano.cfg.d_model, 32);
+        assert_eq!(nano.cfg.d_head(), 16);
         assert_eq!(nano.prunable.len(), nano.cfg.n_layers * 6);
         assert!(nano.exec("eval_loss").is_ok());
         assert!(nano.exec("train_masklora").is_ok());
+        assert!(nano.exec("linear_fwd_32x32").is_ok());
+        assert!(nano.exec("recon_masklora_128x32").is_ok()); // (d_ff, d) fc
+        assert!(nano.exec("recon_masklora_32x128").is_ok()); // (d, d_ff) proj
+        assert!(nano.exec("recon_full_32x32").is_ok());
         assert!(nano.exec("nope").is_err());
-        // every executable file exists on disk
-        for e in nano.executables.values() {
-            assert!(m.hlo_path(e).exists(), "{e:?}");
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn executable_io_tables_are_consistent() {
+        let m = Manifest::builtin();
+        let mm = m.model("gpt-nano").unwrap();
+        // eval_loss takes every param, every mask and i32 tokens
+        let e = mm.exec("eval_loss").unwrap();
+        assert_eq!(e.inputs.len(), mm.params.len() + mm.prunable.len() + 1);
+        let tok = e.inputs.last().unwrap();
+        assert_eq!(tok.dtype, DType::I32);
+        assert_eq!(tok.shape, vec![mm.cfg.eval_batch, mm.cfg.seq_len]);
+        // train_biases round-trips its leaves: o::/om::/ov:: per trainable
+        let t = mm.exec("train_biases").unwrap();
+        let n_leaves = mm.trainable["biases"].len();
+        assert_eq!(t.outputs.len(), 3 * n_leaves + 1);
+        assert_eq!(t.outputs.last().unwrap().name, "loss");
+        // train_masklora additionally carries the adapter pairs
+        let tm = mm.exec("train_masklora").unwrap();
+        let n_lora_leaves = mm.trainable["masklora"].len() + mm.adapters.len();
+        assert_eq!(tm.outputs.len(), 3 * n_lora_leaves + 1);
+        // calib_stats emits one Gram per tap with the input dim squared
+        let c = mm.exec("calib_stats").unwrap();
+        assert_eq!(c.outputs.len(), mm.cfg.n_layers * 4);
+        for o in &c.outputs {
+            let lin = o.name.strip_prefix("gram::").unwrap();
+            let d_in = mm.param_shape(lin)[1];
+            assert_eq!(o.shape, vec![d_in, d_in]);
+        }
+    }
+
+    #[test]
+    fn taps_share_qkv_inputs() {
+        let m = Manifest::builtin();
+        let mm = m.model("gpt-tiny").unwrap();
+        assert_eq!(mm.taps["h0_attn_k_w"], "h0_attn_q_w");
+        assert_eq!(mm.taps["h0_attn_v_w"], "h0_attn_q_w");
+        assert_eq!(mm.taps["h1_mlp_fc_w"], "h1_mlp_fc_w");
+        for tap in builtin_tap_names(&mm.cfg) {
+            assert!(mm.param(&tap).is_some(), "{tap}");
         }
     }
 
     #[test]
     fn trainable_fractions_match_paper_frame() {
-        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let m = Manifest::builtin();
         let mm = m.model("gpt-small").unwrap();
         let total = mm.total_params() as f64;
         let ln = mm.trainable_count("ln") as f64 / total;
@@ -344,10 +761,13 @@ mod tests {
 
     #[test]
     fn llama_has_no_bias_group() {
-        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let m = Manifest::builtin();
         let lm = m.model("llama-tiny").unwrap();
         assert_eq!(lm.trainable_count("biases"), 0);
         assert!(!lm.cfg.use_bias);
         assert_eq!(lm.cfg.norm, "rmsnorm");
+        // and no bias inputs anywhere in its train executables
+        let t = lm.exec("train_full").unwrap();
+        assert!(t.inputs.iter().all(|i| !i.name.ends_with("_b")));
     }
 }

@@ -1,60 +1,40 @@
-//! PJRT runtime bridge: load AOT HLO-text artifacts, compile once, execute
-//! from the coordinator hot path.
+//! Execution backends: compile/execute named graphs over named tensor I/O.
 //!
-//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`.  Interchange is HLO *text* (jax ≥0.5 protos
-//! carry 64-bit ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns them).
+//! The [`Backend`] trait is the seam between the coordinator (which owns all
+//! state host-side and thinks in manifest names) and whatever actually
+//! computes:
 //!
-//! Executables are compiled lazily and cached per (model, name).  All
-//! lowered graphs return tuples (`return_tuple=True`), unwrapped here.
+//! * [`NativeBackend`] — the default.  A pure-rust, rayon-parallel
+//!   implementation of every lowered graph (forward, loss, backward, AdamW,
+//!   layer-wise reconstruction) driven by the builtin manifest.  Hermetic:
+//!   zero native dependencies, no artifacts directory.
+//! * `PjrtBackend` (cargo feature `pjrt`) — the original AOT path: HLO-text
+//!   artifacts produced by `python/compile/aot.py`, compiled once per
+//!   (model, executable) on the PJRT CPU client.
+//!
+//! Both speak [`Feed`] (named inputs, resolved by manifest `IoSpec`s) and
+//! [`Outputs`] (named host tensors), so the coordinator/eval/bench layers are
+//! backend-blind.  Select at runtime with `--backend {native,pjrt}` or the
+//! `PERP_BACKEND` environment variable.
 
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
 
-pub use manifest::{DType, ExecSpec, IoSpec, Manifest, ModelCfg, ModelManifest};
+pub use manifest::{
+    split_adapter_name, DType, ExecSpec, IoSpec, Manifest, ModelCfg, ModelManifest,
+};
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
 
 use crate::tensor::Tensor;
-
-// ---------------------------------------------------------------------------
-// Literal conversion helpers.
-// ---------------------------------------------------------------------------
-
-pub fn f32_literal(t: &Tensor) -> Result<xla::Literal> {
-    let mut bytes = Vec::with_capacity(t.numel() * 4);
-    for &x in t.data() {
-        bytes.extend_from_slice(&x.to_le_bytes());
-    }
-    xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::F32,
-        t.shape(),
-        &bytes,
-    )
-    .map_err(|e| anyhow::anyhow!("creating f32 literal: {e:?}"))
-}
-
-pub fn i32_literal(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
-    assert_eq!(shape.iter().product::<usize>(), data.len());
-    let mut bytes = Vec::with_capacity(data.len() * 4);
-    for &x in data {
-        bytes.extend_from_slice(&x.to_le_bytes());
-    }
-    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, &bytes)
-        .map_err(|e| anyhow::anyhow!("creating i32 literal: {e:?}"))
-}
-
-pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
-    let v: Vec<f32> = lit
-        .to_vec()
-        .map_err(|e| anyhow::anyhow!("literal -> f32 vec: {e:?}"))?;
-    Ok(Tensor::new(shape, v))
-}
 
 // ---------------------------------------------------------------------------
 // Feed: named tensors for one execution.
@@ -103,40 +83,21 @@ impl<'a> Feed<'a> {
         self
     }
 
-    fn resolve(&self, spec: &IoSpec) -> Result<xla::Literal> {
-        match spec.dtype {
-            DType::I32 => {
-                let (shape, data) = self
-                    .ints
-                    .get(&spec.name)
-                    .with_context(|| format!("missing i32 input {:?}", spec.name))?;
-                if *shape != &spec.shape[..] {
-                    bail!("input {:?}: shape {shape:?} != spec {:?}", spec.name, spec.shape);
-                }
-                i32_literal(shape, data)
-            }
-            DType::F32 => {
-                let t: &Tensor = if let Some(t) = self.tensors.get(&spec.name) {
-                    t
-                } else if let Some(t) = self.owned.get(&spec.name) {
-                    t
-                } else {
-                    self.providers
-                        .iter()
-                        .find_map(|p| p(&spec.name))
-                        .with_context(|| format!("missing f32 input {:?}", spec.name))?
-                };
-                if t.shape() != &spec.shape[..] {
-                    bail!(
-                        "input {:?}: tensor shape {:?} != spec {:?}",
-                        spec.name,
-                        t.shape(),
-                        spec.shape
-                    );
-                }
-                f32_literal(t)
-            }
+    /// Resolve an f32 input by name: direct tensors, then owned, then
+    /// providers.
+    pub fn get_tensor(&self, name: &str) -> Option<&Tensor> {
+        if let Some(t) = self.tensors.get(name) {
+            return Some(*t);
         }
+        if let Some(t) = self.owned.get(name) {
+            return Some(t);
+        }
+        self.providers.iter().find_map(|p| p(name))
+    }
+
+    /// Resolve an i32 input by name.
+    pub fn get_ints(&self, name: &str) -> Option<(&[usize], &[i32])> {
+        self.ints.get(name).map(|(s, d)| (*s, *d))
     }
 }
 
@@ -186,106 +147,98 @@ impl Outputs {
 }
 
 // ---------------------------------------------------------------------------
-// Executable + Runtime.
+// The Backend trait.
 // ---------------------------------------------------------------------------
 
-pub struct Executable {
-    pub spec: ExecSpec,
-    exe: xla::PjRtLoadedExecutable,
+/// An execution engine for the manifest's named graphs.
+///
+/// Implementations cache per-(model, executable) compiled state — reported by
+/// [`Backend::compiled_count`] — and count executions for the metrics layer.
+/// Object-safe on purpose: the coordinator holds `&dyn Backend`.
+pub trait Backend {
+    /// Short identifier ("native" / "pjrt") for logs and tables.
+    fn kind(&self) -> &'static str;
+
+    /// The model inventory this backend executes against.
+    fn manifest(&self) -> &Manifest;
+
+    fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.manifest().model(name)
+    }
+
+    /// Warm the per-(model, executable) cache (PJRT: compile the HLO) without
+    /// executing.  Idempotent.
+    fn prepare(&self, model: &str, exec: &str) -> Result<()>;
+
+    /// Execute one named graph over a [`Feed`]; returns named host tensors in
+    /// manifest output order.
+    fn run(&self, model: &str, exec: &str, feed: &Feed) -> Result<Outputs>;
+
+    /// Executions performed so far (metrics).
+    fn exec_count(&self) -> u64;
+
+    /// Distinct (model, executable) pairs prepared/compiled so far.
+    fn compiled_count(&self) -> usize;
 }
 
-impl Executable {
-    /// Execute with a [`Feed`]; returns outputs as named host tensors.
-    pub fn run(&self, feed: &Feed) -> Result<Outputs> {
-        let mut literals = Vec::with_capacity(self.spec.inputs.len());
-        for spec in &self.spec.inputs {
-            literals.push(
-                feed.resolve(spec)
-                    .with_context(|| format!("feeding executable {:?}", self.spec.name))?,
-            );
+// ---------------------------------------------------------------------------
+// Backend selection.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind, String> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => Err(format!("unknown backend {other:?} (native|pjrt)")),
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow::anyhow!("executing {:?}: {e:?}", self.spec.name))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching result of {:?}: {e:?}", self.spec.name))?;
-        let parts = lit
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untupling result of {:?}: {e:?}", self.spec.name))?;
-        if parts.len() != self.spec.outputs.len() {
-            bail!(
-                "{:?}: {} outputs from device, {} in manifest",
-                self.spec.name,
-                parts.len(),
-                self.spec.outputs.len()
-            );
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
         }
-        let mut values = Vec::with_capacity(parts.len());
-        for (lit, ospec) in parts.iter().zip(&self.spec.outputs) {
-            values.push((ospec.name.clone(), literal_to_tensor(lit, &ospec.shape)?));
-        }
-        Ok(Outputs { values })
     }
 }
 
-/// PJRT client + compiled-executable cache for one artifacts directory.
-pub struct Runtime {
-    pub manifest: Manifest,
-    client: xla::PjRtClient,
-    cache: RefCell<HashMap<(String, String), Rc<Executable>>>,
-    /// executions performed (metrics)
-    pub exec_count: RefCell<u64>,
+/// Open a backend by kind.  `artifacts` is only consulted by the PJRT path.
+pub fn open_backend(kind: BackendKind, artifacts: &Path) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Native => {
+            let _ = artifacts;
+            Ok(Box::new(NativeBackend::new()))
+        }
+        BackendKind::Pjrt => {
+            #[cfg(feature = "pjrt")]
+            {
+                Ok(Box::new(PjrtBackend::new(artifacts)?))
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                let _ = artifacts;
+                anyhow::bail!(
+                    "this build has no PJRT support; rebuild with `--features pjrt` \
+                     or use --backend native"
+                )
+            }
+        }
+    }
 }
 
-impl Runtime {
-    pub fn new(artifacts_dir: &std::path::Path) -> Result<Runtime> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
-        Ok(Runtime {
-            manifest,
-            client,
-            cache: RefCell::new(HashMap::new()),
-            exec_count: RefCell::new(0),
-        })
-    }
-
-    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
-        self.manifest.model(name)
-    }
-
-    /// Compile (or fetch from cache) one executable of one model.
-    pub fn load(&self, model: &str, exec: &str) -> Result<Rc<Executable>> {
-        let key = (model.to_string(), exec.to_string());
-        if let Some(e) = self.cache.borrow().get(&key) {
-            return Ok(e.clone());
-        }
-        let mm = self.manifest.model(model)?;
-        let spec = mm.exec(exec)?.clone();
-        let path = self.manifest.hlo_path(&spec);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {exec:?}: {e:?}"))?;
-        let wrapped = Rc::new(Executable { spec, exe });
-        self.cache.borrow_mut().insert(key, wrapped.clone());
-        Ok(wrapped)
-    }
-
-    /// Convenience: load + run in one call.
-    pub fn run(&self, model: &str, exec: &str, feed: &Feed) -> Result<Outputs> {
-        *self.exec_count.borrow_mut() += 1;
-        self.load(model, exec)?.run(feed)
-    }
-
-    pub fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
-    }
+/// Backend for examples/benches: `$PERP_BACKEND` (native|pjrt), default
+/// native; the PJRT path reads artifacts from [`default_artifacts_dir`].
+pub fn open_default_backend() -> Result<Box<dyn Backend>> {
+    let kind = match std::env::var("PERP_BACKEND") {
+        Ok(v) => BackendKind::parse(&v).map_err(|e| anyhow::anyhow!(e))?,
+        Err(_) => BackendKind::Native,
+    };
+    open_backend(kind, &default_artifacts_dir())
 }
 
 /// Default artifacts directory: `$PERP_ARTIFACTS` or `<crate>/artifacts`.
@@ -295,4 +248,54 @@ pub fn default_artifacts_dir() -> std::path::PathBuf {
         .unwrap_or_else(|_| {
             std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
         })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::Native.name(), "native");
+    }
+
+    #[test]
+    fn open_native_backend_works() {
+        let b = open_backend(BackendKind::Native, Path::new("/nonexistent")).unwrap();
+        assert_eq!(b.kind(), "native");
+        assert!(b.model("gpt-nano").is_ok());
+        assert_eq!(b.exec_count(), 0);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_without_feature_is_a_clear_error() {
+        let err = open_backend(BackendKind::Pjrt, Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("pjrt"));
+    }
+
+    #[test]
+    fn feed_lookup_precedence_and_providers() {
+        let a = Tensor::scalar(1.0);
+        let provided = Tensor::scalar(3.0);
+        let lookup = |name: &str| if name == "p::x" { Some(&provided) } else { None };
+        let feed = Feed::new()
+            .tensor("a", &a)
+            .owned("b", Tensor::scalar(2.0))
+            .provider(&lookup);
+        assert_eq!(feed.get_tensor("a").unwrap().data()[0], 1.0);
+        assert_eq!(feed.get_tensor("b").unwrap().data()[0], 2.0);
+        assert_eq!(feed.get_tensor("p::x").unwrap().data()[0], 3.0);
+        assert!(feed.get_tensor("missing").is_none());
+        let shape = [2usize];
+        let data = [5i32, 6];
+        let feed = Feed::new().ints("tok", &shape, &data);
+        let (s, d) = feed.get_ints("tok").unwrap();
+        assert_eq!(s, &[2]);
+        assert_eq!(d, &[5, 6]);
+        assert!(feed.get_ints("nope").is_none());
+    }
 }

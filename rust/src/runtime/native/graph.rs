@@ -1,0 +1,667 @@
+//! The native transformer graph: a hand-rolled forward + reverse pass over
+//! the manifest-described GPT family (pre-LN, learned positions, GELU MLP,
+//! optional biases / RMSNorm — the exact architecture of
+//! `python/compile/model.py::forward`).
+//!
+//! The backward pass is activation-checkpointed the cheap way: [`forward`]
+//! records a [`Tape`] (normed activations, attention probabilities, effective
+//! weights) and [`backward`] walks it in reverse, accumulating gradients
+//! *only* for the requested leaves — subset retraining modes therefore skip
+//! every weight-gradient GEMM, which is PERP's efficiency argument realised
+//! natively.
+
+use std::collections::{BTreeMap, HashSet};
+
+use crate::runtime::manifest::ModelManifest;
+use crate::tensor::{linalg, Tensor};
+
+use super::ops;
+
+/// How the six per-block linears are parametrised (mirrors model.py modes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModeKind {
+    /// Plain masked forward — all subset modes (full, biases, ln, ...).
+    Subset,
+    /// Frozen-sparse W plus the unmasked low-rank path (standard LoRA).
+    Lora,
+    /// MaskLoRA: W·M + M ⊙ (s·BA).  Also covers masklora_std (same math,
+    /// the std/optimized split is a device-kernel distinction).
+    MaskLora,
+    /// ScaleLoRA: (BA) ⊙ (W·M) multiplicative adapters.
+    ScaleLora,
+}
+
+impl ModeKind {
+    pub fn from_key(key: &str) -> ModeKind {
+        match key {
+            "lora" => ModeKind::Lora,
+            "masklora" | "masklora_std" => ModeKind::MaskLora,
+            "scalelora" => ModeKind::ScaleLora,
+            _ => ModeKind::Subset,
+        }
+    }
+}
+
+/// Borrowed model state for one execution, resolved from the Feed.
+pub struct GraphIn<'a> {
+    pub mm: &'a ModelManifest,
+    pub params: &'a BTreeMap<String, &'a Tensor>,
+    pub masks: &'a BTreeMap<String, &'a Tensor>,
+    /// Adapter tensors keyed `<linear>::A` / `<linear>::B` (LoRA modes only).
+    pub adapters: Option<&'a BTreeMap<String, &'a Tensor>>,
+    pub mode: ModeKind,
+}
+
+impl<'a> GraphIn<'a> {
+    fn p(&self, name: &str) -> &'a Tensor {
+        self.params
+            .get(name)
+            .copied()
+            .unwrap_or_else(|| panic!("graph: missing parameter {name:?}"))
+    }
+    fn m(&self, name: &str) -> &'a Tensor {
+        self.masks
+            .get(name)
+            .copied()
+            .unwrap_or_else(|| panic!("graph: missing mask {name:?}"))
+    }
+    fn adapter(&self, wname: &str, tag: &str) -> &'a Tensor {
+        let key = format!("{wname}::{tag}");
+        self.adapters
+            .unwrap_or_else(|| panic!("graph: mode needs adapters but none were fed"))
+            .get(&key)
+            .copied()
+            .unwrap_or_else(|| panic!("graph: missing adapter {key:?}"))
+    }
+    fn scale(&self) -> f32 {
+        self.mm.cfg.lora_scale as f32
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tape.
+// ---------------------------------------------------------------------------
+
+struct LinTape {
+    /// W ⊙ M — the frozen-sparse operand.
+    wm: Tensor,
+    /// Effective weight for the z-parametrised modes (MaskLoRA / ScaleLoRA).
+    z: Option<Tensor>,
+    /// x Aᵀ intermediate of the standard-LoRA path.
+    u: Option<Tensor>,
+}
+
+struct BlockTape {
+    ln1: ops::NormCache,
+    h1: Tensor,
+    q: LinTape,
+    k: LinTape,
+    v: LinTape,
+    qh: Tensor,
+    kh: Tensor,
+    vh: Tensor,
+    probs: Tensor,
+    attn_merged: Tensor,
+    o: LinTape,
+    ln2: ops::NormCache,
+    h2: Tensor,
+    fc: LinTape,
+    fc_pre: Tensor,
+    gelu_out: Tensor,
+    proj: LinTape,
+}
+
+pub struct Tape {
+    pub b: usize,
+    pub s: usize,
+    blocks: Vec<BlockTape>,
+    fln: ops::NormCache,
+    h_final: Tensor,
+    /// (B*S, V)
+    pub logits: Tensor,
+}
+
+// ---------------------------------------------------------------------------
+// Forward.
+// ---------------------------------------------------------------------------
+
+fn norm_fwd(gi: &GraphIn, prefix: &str, x: &Tensor) -> (Tensor, ops::NormCache) {
+    let scale = gi.p(&format!("{prefix}_scale"));
+    if gi.mm.cfg.norm == "layernorm" {
+        ops::layernorm_fwd(x, scale, gi.p(&format!("{prefix}_bias")))
+    } else {
+        ops::rmsnorm_fwd(x, scale)
+    }
+}
+
+fn norm_bwd(
+    gi: &GraphIn,
+    prefix: &str,
+    cache: &ops::NormCache,
+    dy: &Tensor,
+    grads: &mut Grads,
+) -> Tensor {
+    let sname = format!("{prefix}_scale");
+    let scale = gi.p(&sname);
+    if gi.mm.cfg.norm == "layernorm" {
+        let bname = format!("{prefix}_bias");
+        let want = grads.wanted(&sname) || grads.wanted(&bname);
+        let (dx, pg) = ops::layernorm_bwd(cache, scale, dy, want);
+        if let Some((dscale, dbias)) = pg {
+            grads.add(sname, dscale);
+            grads.add(bname, dbias);
+        }
+        dx
+    } else {
+        let want = grads.wanted(&sname);
+        let (dx, pg) = ops::rmsnorm_bwd(cache, scale, dy, want);
+        if let Some(dscale) = pg {
+            grads.add(sname, dscale);
+        }
+        dx
+    }
+}
+
+fn linear_fwd(gi: &GraphIn, base: &str, x: &Tensor) -> (Tensor, LinTape) {
+    let wname = format!("{base}_w");
+    let w = gi.p(&wname);
+    let mask = gi.m(&wname);
+    let wm = w.hadamard(mask);
+    let (mut y, z, u) = match gi.mode {
+        ModeKind::Subset => (linalg::matmul_nt(x, &wm), None, None),
+        ModeKind::Lora => {
+            let a = gi.adapter(&wname, "A");
+            let bmat = gi.adapter(&wname, "B");
+            let s = gi.scale();
+            let u = linalg::matmul_nt(x, a); // (n, r)
+            let low = linalg::matmul_nt(&u, bmat); // (n, out)
+            let y = linalg::matmul_nt(x, &wm).zip(&low, |p, q| p + s * q);
+            (y, None, Some(u))
+        }
+        ModeKind::MaskLora => {
+            let a = gi.adapter(&wname, "A");
+            let bmat = gi.adapter(&wname, "B");
+            let s = gi.scale();
+            let ba = linalg::matmul(bmat, a); // (out, in)
+            let z = wm.zip(&ba.hadamard(mask), |p, q| p + s * q);
+            (linalg::matmul_nt(x, &z), Some(z), None)
+        }
+        ModeKind::ScaleLora => {
+            let a = gi.adapter(&wname, "A");
+            let bmat = gi.adapter(&wname, "B");
+            let ba = linalg::matmul(bmat, a);
+            let z = ba.hadamard(&wm);
+            (linalg::matmul_nt(x, &z), Some(z), None)
+        }
+    };
+    if gi.mm.cfg.use_bias {
+        ops::add_bias(&mut y, gi.p(&format!("{base}_b")));
+    }
+    (y, LinTape { wm, z, u })
+}
+
+fn linear_bwd(
+    gi: &GraphIn,
+    base: &str,
+    x: &Tensor,
+    dy: &Tensor,
+    tape: &LinTape,
+    grads: &mut Grads,
+) -> Tensor {
+    let wname = format!("{base}_w");
+    if gi.mm.cfg.use_bias {
+        let bname = format!("{base}_b");
+        if grads.wanted(&bname) {
+            grads.add(bname, ops::col_sums(dy));
+        }
+    }
+    match gi.mode {
+        ModeKind::Subset => {
+            if grads.wanted(&wname) {
+                // masked-matmul VJP: pruned entries stay exactly zero
+                let dw = linalg::matmul_tn(dy, x).hadamard(gi.m(&wname));
+                grads.add(wname.clone(), dw);
+            }
+            linalg::matmul(dy, &tape.wm)
+        }
+        ModeKind::Lora => {
+            let a = gi.adapter(&wname, "A");
+            let bmat = gi.adapter(&wname, "B");
+            let s = gi.scale();
+            let u = tape.u.as_ref().expect("lora tape");
+            let du = linalg::matmul(dy, bmat).scale(s); // (n, r)
+            grads.add(format!("{wname}::B"), linalg::matmul_tn(dy, u).scale(s));
+            grads.add(format!("{wname}::A"), linalg::matmul_tn(&du, x));
+            linalg::matmul(dy, &tape.wm).add(&linalg::matmul(&du, a))
+        }
+        ModeKind::MaskLora => {
+            let a = gi.adapter(&wname, "A");
+            let bmat = gi.adapter(&wname, "B");
+            let z = tape.z.as_ref().expect("masklora tape");
+            let dz = linalg::matmul_tn(dy, x); // (out, in)
+            let (da, db) = ops::adapter_vjp(&dz, gi.m(&wname), a, bmat, gi.scale());
+            grads.add(format!("{wname}::B"), db);
+            grads.add(format!("{wname}::A"), da);
+            linalg::matmul(dy, z)
+        }
+        ModeKind::ScaleLora => {
+            let a = gi.adapter(&wname, "A");
+            let bmat = gi.adapter(&wname, "B");
+            let z = tape.z.as_ref().expect("scalelora tape");
+            let dz = linalg::matmul_tn(dy, x);
+            let (da, db) = ops::adapter_vjp(&dz, &tape.wm, a, bmat, 1.0);
+            grads.add(format!("{wname}::B"), db);
+            grads.add(format!("{wname}::A"), da);
+            linalg::matmul(dy, z)
+        }
+    }
+}
+
+/// Token ids (B, S) -> logits, recording the tape for [`backward`].  When
+/// `capture` is given it receives `(tap_param_name, X)` pairs for every
+/// capture point, in forward order (the calibration/reconstruction taps).
+pub fn forward(
+    gi: &GraphIn,
+    tokens: &[i32],
+    b: usize,
+    s: usize,
+    mut capture: Option<&mut Vec<(String, Tensor)>>,
+) -> Tape {
+    let cfg = &gi.mm.cfg;
+    let (h, dh) = (cfg.n_heads, cfg.d_head());
+    let mut cur = ops::embed_fwd(tokens, b, s, gi.p("embed_tokens"), gi.p("embed_pos"));
+    let mut blocks = Vec::with_capacity(cfg.n_layers);
+    for i in 0..cfg.n_layers {
+        let p = format!("h{i}_");
+        let (h1, ln1) = norm_fwd(gi, &format!("{p}ln1"), &cur);
+        if let Some(cap) = capture.as_deref_mut() {
+            cap.push((format!("{p}attn_q_w"), h1.clone()));
+        }
+        let (q2, qt) = linear_fwd(gi, &format!("{p}attn_q"), &h1);
+        let (k2, kt) = linear_fwd(gi, &format!("{p}attn_k"), &h1);
+        let (v2, vt) = linear_fwd(gi, &format!("{p}attn_v"), &h1);
+        let qh = ops::split_heads(&q2, b, s, h, dh);
+        let kh = ops::split_heads(&k2, b, s, h, dh);
+        let vh = ops::split_heads(&v2, b, s, h, dh);
+        let (oh, probs) = ops::attention_fwd(&qh, &kh, &vh);
+        let attn_merged = ops::merge_heads(&oh, b, s, h, dh);
+        if let Some(cap) = capture.as_deref_mut() {
+            cap.push((format!("{p}attn_o_w"), attn_merged.clone()));
+        }
+        let (o2, ot) = linear_fwd(gi, &format!("{p}attn_o"), &attn_merged);
+        let res_mid = cur.add(&o2);
+        let (h2, ln2) = norm_fwd(gi, &format!("{p}ln2"), &res_mid);
+        if let Some(cap) = capture.as_deref_mut() {
+            cap.push((format!("{p}mlp_fc_w"), h2.clone()));
+        }
+        let (fc_pre, fct) = linear_fwd(gi, &format!("{p}mlp_fc"), &h2);
+        let gelu_out = ops::gelu(&fc_pre);
+        if let Some(cap) = capture.as_deref_mut() {
+            cap.push((format!("{p}mlp_proj_w"), gelu_out.clone()));
+        }
+        let (proj2, pt) = linear_fwd(gi, &format!("{p}mlp_proj"), &gelu_out);
+        cur = res_mid.add(&proj2);
+        blocks.push(BlockTape {
+            ln1,
+            h1,
+            q: qt,
+            k: kt,
+            v: vt,
+            qh,
+            kh,
+            vh,
+            probs,
+            attn_merged,
+            o: ot,
+            ln2,
+            h2,
+            fc: fct,
+            fc_pre,
+            gelu_out,
+            proj: pt,
+        });
+    }
+    let (h_final, fln) = norm_fwd(gi, "final_ln", &cur);
+    let logits = linalg::matmul_nt(&h_final, gi.p("head_w"));
+    Tape { b, s, blocks, fln, h_final, logits }
+}
+
+// ---------------------------------------------------------------------------
+// Backward.
+// ---------------------------------------------------------------------------
+
+/// Gradient sink filtered by the trainable-leaf set.
+pub struct Grads {
+    wants: HashSet<String>,
+    map: BTreeMap<String, Tensor>,
+}
+
+impl Grads {
+    fn wanted(&self, name: &str) -> bool {
+        self.wants.contains(name)
+    }
+    fn add(&mut self, name: impl Into<String>, t: Tensor) {
+        let name = name.into();
+        if !self.wants.contains(&name) {
+            return;
+        }
+        match self.map.entry(name) {
+            std::collections::btree_map::Entry::Occupied(mut e) => {
+                let acc = e.get().add(&t);
+                e.insert(acc);
+            }
+            std::collections::btree_map::Entry::Vacant(e) => {
+                e.insert(t);
+            }
+        }
+    }
+}
+
+/// Reverse pass: gradients of the mean loss wrt every leaf named in `wants`
+/// (model parameters and/or `<linear>::A/B` adapters), given dL/dlogits.
+pub fn backward(
+    gi: &GraphIn,
+    tape: &Tape,
+    tokens: &[i32],
+    dlogits: &Tensor,
+    wants: HashSet<String>,
+) -> BTreeMap<String, Tensor> {
+    let cfg = &gi.mm.cfg;
+    let (b, s) = (tape.b, tape.s);
+    let (h, dh) = (cfg.n_heads, cfg.d_head());
+    let mut grads = Grads { wants, map: BTreeMap::new() };
+
+    if grads.wanted("head_w") {
+        grads.add("head_w", linalg::matmul_tn(dlogits, &tape.h_final));
+    }
+    // everything past the final norm is only needed for leaves living below
+    // it — the "head" retraining subset stops here (one GEMM per step, which
+    // IS its efficiency pitch)
+    let below_final_norm = grads
+        .wants
+        .iter()
+        .any(|n| n != "head_w" && n != "final_ln_scale" && n != "final_ln_bias");
+    if !below_final_norm && !grads.wanted("final_ln_scale") && !grads.wanted("final_ln_bias") {
+        return grads.map;
+    }
+    let dh_final = linalg::matmul(dlogits, gi.p("head_w"));
+    let mut dcur = norm_bwd(gi, "final_ln", &tape.fln, &dh_final, &mut grads);
+    if !below_final_norm {
+        return grads.map;
+    }
+
+    for (i, bt) in tape.blocks.iter().enumerate().rev() {
+        let p = format!("h{i}_");
+        // ---- MLP branch (res_out = res_mid + proj(gelu(fc(ln2(res_mid))))) --
+        let dg = linear_bwd(gi, &format!("{p}mlp_proj"), &bt.gelu_out, &dcur, &bt.proj, &mut grads);
+        let dfc = ops::gelu_vjp(&bt.fc_pre, &dg);
+        let dh2 = linear_bwd(gi, &format!("{p}mlp_fc"), &bt.h2, &dfc, &bt.fc, &mut grads);
+        let dres_mid = dcur.add(&norm_bwd(gi, &format!("{p}ln2"), &bt.ln2, &dh2, &mut grads));
+        // ---- attention branch (res_mid = res_in + o(attn(qkv(ln1(res_in))))) --
+        let d_attn_merged =
+            linear_bwd(gi, &format!("{p}attn_o"), &bt.attn_merged, &dres_mid, &bt.o, &mut grads);
+        let doh = ops::split_heads(&d_attn_merged, b, s, h, dh);
+        let (dqh, dkh, dvh) = ops::attention_bwd(&bt.qh, &bt.kh, &bt.vh, &bt.probs, &doh);
+        let dq2 = ops::merge_heads(&dqh, b, s, h, dh);
+        let dk2 = ops::merge_heads(&dkh, b, s, h, dh);
+        let dv2 = ops::merge_heads(&dvh, b, s, h, dh);
+        let dh1 = linear_bwd(gi, &format!("{p}attn_q"), &bt.h1, &dq2, &bt.q, &mut grads)
+            .add(&linear_bwd(gi, &format!("{p}attn_k"), &bt.h1, &dk2, &bt.k, &mut grads))
+            .add(&linear_bwd(gi, &format!("{p}attn_v"), &bt.h1, &dv2, &bt.v, &mut grads));
+        dcur = dres_mid.add(&norm_bwd(gi, &format!("{p}ln1"), &bt.ln1, &dh1, &mut grads));
+    }
+
+    if grads.wanted("embed_pos") {
+        grads.add("embed_pos", ops::embed_pos_bwd(&dcur, b, s));
+    }
+    if grads.wanted("embed_tokens") {
+        grads.add("embed_tokens", ops::embed_tokens_bwd(tokens, &dcur, cfg.vocab));
+    }
+    grads.map
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{Manifest, ModelCfg, ModelManifest};
+    use crate::util::rng::Rng;
+
+    /// A micro model (builtin-shaped but tiny) for gradient checking.
+    fn micro(norm: &str, use_bias: bool) -> ModelManifest {
+        let cfg = ModelCfg {
+            name: "micro".into(),
+            vocab: 17,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            seq_len: 6,
+            d_ff: 32,
+            use_bias,
+            norm: norm.into(),
+            lora_rank: 3,
+            lora_alpha: 6.0,
+            lora_scale: 2.0,
+            train_batch: 2,
+            eval_batch: 2,
+            calib_rows: 4,
+        };
+        ModelManifest::builtin(cfg)
+    }
+
+    struct State {
+        params: BTreeMap<String, Tensor>,
+        masks: BTreeMap<String, Tensor>,
+        adapters: BTreeMap<String, Tensor>,
+        tokens: Vec<i32>,
+    }
+
+    fn random_state(mm: &ModelManifest, seed: u64) -> State {
+        let mut rng = Rng::new(seed);
+        let mut params = BTreeMap::new();
+        for p in &mm.params {
+            let t = if p.name.ends_with("_scale") {
+                Tensor::randn(&p.shape, 0.1, &mut rng).map(|v| v + 1.0)
+            } else {
+                Tensor::randn(&p.shape, 0.3, &mut rng)
+            };
+            params.insert(p.name.clone(), t);
+        }
+        let mut masks = BTreeMap::new();
+        for n in &mm.prunable {
+            let shape = mm.param_shape(n);
+            let m = Tensor::randn(shape, 1.0, &mut rng).map(|v| if v > -0.3 { 1.0 } else { 0.0 });
+            masks.insert(n.clone(), m);
+        }
+        let mut adapters = BTreeMap::new();
+        for (n, shape) in &mm.adapters {
+            adapters.insert(n.clone(), Tensor::randn(shape, 0.2, &mut rng));
+        }
+        let b = mm.cfg.train_batch;
+        let s = mm.cfg.seq_len;
+        let tokens: Vec<i32> =
+            (0..b * s).map(|_| rng.below(mm.cfg.vocab as u64) as i32).collect();
+        State { params, masks, adapters, tokens }
+    }
+
+    fn loss_of(mm: &ModelManifest, st: &State, mode: ModeKind) -> f32 {
+        let params: BTreeMap<String, &Tensor> =
+            st.params.iter().map(|(k, v)| (k.clone(), v)).collect();
+        let masks: BTreeMap<String, &Tensor> =
+            st.masks.iter().map(|(k, v)| (k.clone(), v)).collect();
+        let adapters: BTreeMap<String, &Tensor> =
+            st.adapters.iter().map(|(k, v)| (k.clone(), v)).collect();
+        let gi = GraphIn {
+            mm,
+            params: &params,
+            masks: &masks,
+            adapters: if mode == ModeKind::Subset { None } else { Some(&adapters) },
+            mode,
+        };
+        let b = mm.cfg.train_batch;
+        let s = mm.cfg.seq_len;
+        let tape = forward(&gi, &st.tokens, b, s, None);
+        let (loss, _) = ops::ce_grad(&tape.logits, &st.tokens, b, s);
+        loss
+    }
+
+    fn grads_of(
+        mm: &ModelManifest,
+        st: &State,
+        mode: ModeKind,
+        wants: &[&str],
+    ) -> BTreeMap<String, Tensor> {
+        let params: BTreeMap<String, &Tensor> =
+            st.params.iter().map(|(k, v)| (k.clone(), v)).collect();
+        let masks: BTreeMap<String, &Tensor> =
+            st.masks.iter().map(|(k, v)| (k.clone(), v)).collect();
+        let adapters: BTreeMap<String, &Tensor> =
+            st.adapters.iter().map(|(k, v)| (k.clone(), v)).collect();
+        let gi = GraphIn {
+            mm,
+            params: &params,
+            masks: &masks,
+            adapters: if mode == ModeKind::Subset { None } else { Some(&adapters) },
+            mode,
+        };
+        let b = mm.cfg.train_batch;
+        let s = mm.cfg.seq_len;
+        let tape = forward(&gi, &st.tokens, b, s, None);
+        let (_, dlogits) = ops::ce_grad(&tape.logits, &st.tokens, b, s);
+        let wants: HashSet<String> = wants.iter().map(|s| s.to_string()).collect();
+        backward(&gi, &tape, &st.tokens, &dlogits, wants)
+    }
+
+    /// Central-difference check of d(loss)/d(leaf[idx]).
+    fn check_grad(
+        mm: &ModelManifest,
+        st: &mut State,
+        mode: ModeKind,
+        leaf: &str,
+        idx: usize,
+        got: f32,
+    ) {
+        let eps = 2e-2f32;
+        let is_adapter = leaf.contains("::");
+        let bump = |st: &mut State, delta: f32| {
+            let t = if is_adapter {
+                st.adapters.get_mut(leaf).unwrap()
+            } else {
+                st.params.get_mut(leaf).unwrap()
+            };
+            t.data_mut()[idx] += delta;
+        };
+        bump(st, eps);
+        let lp = loss_of(mm, st, mode);
+        bump(st, -2.0 * eps);
+        let lm = loss_of(mm, st, mode);
+        bump(st, eps);
+        let fd = (lp - lm) / (2.0 * eps);
+        assert!(
+            (fd - got).abs() < 2e-3 + 0.05 * fd.abs().max(got.abs()),
+            "{leaf}[{idx}] (mode {mode:?}): finite-diff {fd} vs backward {got}"
+        );
+    }
+
+    #[test]
+    fn full_mode_gradients_match_finite_difference() {
+        let mm = micro("layernorm", true);
+        let mut st = random_state(&mm, 1);
+        let leaves = [
+            "embed_tokens",
+            "embed_pos",
+            "h0_attn_q_w",
+            "h0_attn_o_b",
+            "h1_mlp_fc_w",
+            "h1_mlp_proj_w",
+            "h0_ln1_scale",
+            "h1_ln2_bias",
+            "final_ln_scale",
+            "head_w",
+        ];
+        let grads = grads_of(&mm, &st, ModeKind::Subset, &leaves);
+        assert_eq!(grads.len(), leaves.len());
+        let mut rng = Rng::new(7);
+        for leaf in leaves {
+            let g = grads[leaf].clone();
+            // pick the largest-|grad| coordinate plus a random one
+            let (mut best, mut bv) = (0usize, 0.0f32);
+            for (i, &v) in g.data().iter().enumerate() {
+                if v.abs() > bv {
+                    best = i;
+                    bv = v.abs();
+                }
+            }
+            let rand_i = rng.below(g.numel() as u64) as usize;
+            for idx in [best, rand_i] {
+                check_grad(&mm, &mut st, ModeKind::Subset, leaf, idx, g.data()[idx]);
+            }
+        }
+    }
+
+    #[test]
+    fn masked_weight_gradients_are_masked() {
+        let mm = micro("layernorm", true);
+        let st = random_state(&mm, 2);
+        let grads = grads_of(&mm, &st, ModeKind::Subset, &["h0_attn_v_w"]);
+        let g = &grads["h0_attn_v_w"];
+        let m = &st.masks["h0_attn_v_w"];
+        for (gv, mv) in g.data().iter().zip(m.data()) {
+            if *mv == 0.0 {
+                assert_eq!(*gv, 0.0, "gradient leaked through the mask");
+            }
+        }
+    }
+
+    #[test]
+    fn rmsnorm_nobias_gradients_match_finite_difference() {
+        let mm = micro("rmsnorm", false);
+        let mut st = random_state(&mm, 3);
+        let leaves = ["h0_ln1_scale", "h1_attn_k_w", "final_ln_scale", "embed_pos"];
+        let grads = grads_of(&mm, &st, ModeKind::Subset, &leaves);
+        let mut rng = Rng::new(11);
+        for leaf in leaves {
+            let g = grads[leaf].clone();
+            let idx = rng.below(g.numel() as u64) as usize;
+            check_grad(&mm, &mut st, ModeKind::Subset, leaf, idx, g.data()[idx]);
+        }
+    }
+
+    #[test]
+    fn adapter_gradients_match_finite_difference_per_mode() {
+        for mode in [ModeKind::Lora, ModeKind::MaskLora, ModeKind::ScaleLora] {
+            let mm = micro("layernorm", true);
+            let mut st = random_state(&mm, 4);
+            let leaves = ["h0_attn_q_w::A", "h0_attn_q_w::B", "h1_mlp_proj_w::A", "h0_attn_o_b"];
+            let grads = grads_of(&mm, &st, mode, &leaves);
+            let mut rng = Rng::new(13);
+            for leaf in leaves {
+                let g = grads[leaf].clone();
+                let idx = rng.below(g.numel() as u64) as usize;
+                check_grad(&mm, &mut st, mode, leaf, idx, g.data()[idx]);
+            }
+        }
+    }
+
+    #[test]
+    fn capture_taps_are_in_forward_order() {
+        let m = Manifest::builtin();
+        let mm = m.model("gpt-nano").unwrap();
+        let st = random_state(mm, 5);
+        let params: BTreeMap<String, &Tensor> =
+            st.params.iter().map(|(k, v)| (k.clone(), v)).collect();
+        let masks: BTreeMap<String, &Tensor> =
+            st.masks.iter().map(|(k, v)| (k.clone(), v)).collect();
+        let gi = GraphIn { mm, params: &params, masks: &masks, adapters: None, mode: ModeKind::Subset };
+        let b = mm.cfg.eval_batch;
+        let s = mm.cfg.seq_len;
+        let tokens: Vec<i32> = vec![1; b * s];
+        let mut cap = Vec::new();
+        forward(&gi, &tokens, b, s, Some(&mut cap));
+        let names: Vec<String> = cap.iter().map(|(n, _)| n.clone()).collect();
+        let expect = crate::runtime::manifest::builtin_tap_names(&mm.cfg);
+        assert_eq!(names, expect);
+        for (n, x) in &cap {
+            assert_eq!(x.shape(), &[b * s, mm.param_shape(n)[1]], "{n}");
+        }
+    }
+}

@@ -1,0 +1,853 @@
+//! Rayon-parallel host kernels for the native backend.
+//!
+//! Each function is the rust port of the corresponding oracle in
+//! `python/compile/kernels/ref.py` (the semantic spec the Pallas kernels are
+//! tested against): tanh-approximate GELU, LayerNorm/RMSNorm with
+//! biased variance, causal softmax attention, decoupled AdamW and the
+//! next-token cross-entropy / likelihood-ranking heads.  Golden-fixture tests
+//! in `rust/tests/native_kernels.rs` pin these against jax outputs.
+
+use rayon::prelude::*;
+
+use crate::tensor::{linalg, Tensor};
+
+pub const NORM_EPS: f32 = 1e-5;
+/// AdamW defaults mirrored from ref.adamw (wd = 0 in every train graph).
+pub const ADAM_BETA1: f32 = 0.9;
+pub const ADAM_BETA2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+
+// ---------------------------------------------------------------------------
+// Elementwise.
+// ---------------------------------------------------------------------------
+
+const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
+const GELU_A: f32 = 0.044715;
+
+/// Tanh-approximate GELU (jax.nn.gelu's default).
+pub fn gelu(x: &Tensor) -> Tensor {
+    x.map(|v| {
+        let t = (GELU_C * (v + GELU_A * v * v * v)).tanh();
+        0.5 * v * (1.0 + t)
+    })
+}
+
+/// VJP of [`gelu`] at pre-activation `x`: dy ⊙ gelu'(x).
+pub fn gelu_vjp(x: &Tensor, dy: &Tensor) -> Tensor {
+    x.zip(dy, |v, g| {
+        let inner = GELU_C * (v + GELU_A * v * v * v);
+        let t = inner.tanh();
+        let dinner = GELU_C * (1.0 + 3.0 * GELU_A * v * v);
+        g * (0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * dinner)
+    })
+}
+
+/// y[i, :] += b — the linear bias broadcast.
+pub fn add_bias(y: &mut Tensor, b: &Tensor) {
+    let m = b.numel();
+    let bd = b.data().to_vec();
+    y.data_mut().par_chunks_mut(m).for_each(|row| {
+        for (o, &bv) in row.iter_mut().zip(&bd) {
+            *o += bv;
+        }
+    });
+}
+
+/// Column sums of a (n, m) matrix — the bias gradient.
+pub fn col_sums(dy: &Tensor) -> Tensor {
+    let (n, m) = (dy.rows(), dy.cols());
+    let mut out = vec![0.0f64; m];
+    let d = dy.data();
+    for i in 0..n {
+        for (o, &v) in out.iter_mut().zip(&d[i * m..(i + 1) * m]) {
+            *o += v as f64;
+        }
+    }
+    Tensor::new(&[m], out.into_iter().map(|x| x as f32).collect())
+}
+
+// ---------------------------------------------------------------------------
+// Normalisation (forward + VJP).  Saved state mirrors what the backward pass
+// needs: LayerNorm keeps x̂ and 1/σ, RMSNorm keeps the raw input and 1/rms.
+// ---------------------------------------------------------------------------
+
+pub struct NormCache {
+    /// LayerNorm: x̂ (normalised, pre-scale).  RMSNorm: the raw input x.
+    pub saved: Tensor,
+    /// Per-row 1/σ (LayerNorm) or 1/rms (RMSNorm).
+    pub inv: Vec<f32>,
+}
+
+pub fn layernorm_fwd(x: &Tensor, scale: &Tensor, bias: &Tensor) -> (Tensor, NormCache) {
+    let (n, d) = (x.rows(), x.cols());
+    let mut y = vec![0.0f32; n * d];
+    let mut xhat = vec![0.0f32; n * d];
+    let mut inv = vec![0.0f32; n];
+    let (sd, bd) = (scale.data(), bias.data());
+    y.par_chunks_mut(d)
+        .zip(xhat.par_chunks_mut(d))
+        .zip(inv.par_iter_mut())
+        .enumerate()
+        .for_each(|(i, ((yrow, xrow), invi))| {
+            let row = &x.data()[i * d..(i + 1) * d];
+            let mu = row.iter().sum::<f32>() / d as f32;
+            let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+            let istd = 1.0 / (var + NORM_EPS).sqrt();
+            *invi = istd;
+            for j in 0..d {
+                let h = (row[j] - mu) * istd;
+                xrow[j] = h;
+                yrow[j] = h * sd[j] + bd[j];
+            }
+        });
+    (
+        Tensor::new(&[n, d], y),
+        NormCache { saved: Tensor::new(&[n, d], xhat), inv },
+    )
+}
+
+/// Returns (dx, Some((dscale, dbias)) when `param_grads`).  The reductions
+/// are skipped entirely for retraining subsets that freeze the norms.
+pub fn layernorm_bwd(
+    cache: &NormCache,
+    scale: &Tensor,
+    dy: &Tensor,
+    param_grads: bool,
+) -> (Tensor, Option<(Tensor, Tensor)>) {
+    let (n, d) = (dy.rows(), dy.cols());
+    let sd = scale.data();
+    let xh = cache.saved.data();
+    let mut dx = vec![0.0f32; n * d];
+    dx.par_chunks_mut(d).enumerate().for_each(|(i, dxrow)| {
+        let dyrow = &dy.data()[i * d..(i + 1) * d];
+        let xrow = &xh[i * d..(i + 1) * d];
+        let istd = cache.inv[i];
+        let mut mg = 0.0f32; // mean of g = dy * scale
+        let mut mgx = 0.0f32; // mean of g * x̂
+        for j in 0..d {
+            let g = dyrow[j] * sd[j];
+            mg += g;
+            mgx += g * xrow[j];
+        }
+        mg /= d as f32;
+        mgx /= d as f32;
+        for j in 0..d {
+            let g = dyrow[j] * sd[j];
+            dxrow[j] = istd * (g - mg - xrow[j] * mgx);
+        }
+    });
+    let dx = Tensor::new(&[n, d], dx);
+    if !param_grads {
+        return (dx, None);
+    }
+    // parameter grads (reduced over rows, f64 accumulation)
+    let mut dscale = vec![0.0f64; d];
+    let mut dbias = vec![0.0f64; d];
+    for i in 0..n {
+        let dyrow = &dy.data()[i * d..(i + 1) * d];
+        let xrow = &xh[i * d..(i + 1) * d];
+        for j in 0..d {
+            dscale[j] += (dyrow[j] * xrow[j]) as f64;
+            dbias[j] += dyrow[j] as f64;
+        }
+    }
+    (
+        dx,
+        Some((
+            Tensor::new(&[d], dscale.into_iter().map(|x| x as f32).collect()),
+            Tensor::new(&[d], dbias.into_iter().map(|x| x as f32).collect()),
+        )),
+    )
+}
+
+pub fn rmsnorm_fwd(x: &Tensor, scale: &Tensor) -> (Tensor, NormCache) {
+    let (n, d) = (x.rows(), x.cols());
+    let mut y = vec![0.0f32; n * d];
+    let mut inv = vec![0.0f32; n];
+    let sd = scale.data();
+    y.par_chunks_mut(d).zip(inv.par_iter_mut()).enumerate().for_each(|(i, (yrow, invi))| {
+        let row = &x.data()[i * d..(i + 1) * d];
+        let ms = row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let r = 1.0 / (ms + NORM_EPS).sqrt();
+        *invi = r;
+        for j in 0..d {
+            yrow[j] = row[j] * r * sd[j];
+        }
+    });
+    (Tensor::new(&[n, d], y), NormCache { saved: x.clone(), inv })
+}
+
+/// Returns (dx, Some(dscale) when `param_grads`).
+pub fn rmsnorm_bwd(
+    cache: &NormCache,
+    scale: &Tensor,
+    dy: &Tensor,
+    param_grads: bool,
+) -> (Tensor, Option<Tensor>) {
+    let (n, d) = (dy.rows(), dy.cols());
+    let sd = scale.data();
+    let xd = cache.saved.data();
+    let mut dx = vec![0.0f32; n * d];
+    dx.par_chunks_mut(d).enumerate().for_each(|(i, dxrow)| {
+        let dyrow = &dy.data()[i * d..(i + 1) * d];
+        let xrow = &xd[i * d..(i + 1) * d];
+        let r = cache.inv[i];
+        let mut gx = 0.0f32; // Σ dy·scale·x
+        for j in 0..d {
+            gx += dyrow[j] * sd[j] * xrow[j];
+        }
+        let coef = gx * r * r * r / d as f32;
+        for j in 0..d {
+            dxrow[j] = dyrow[j] * sd[j] * r - xrow[j] * coef;
+        }
+    });
+    let dx = Tensor::new(&[n, d], dx);
+    if !param_grads {
+        return (dx, None);
+    }
+    let mut dscale = vec![0.0f64; d];
+    for i in 0..n {
+        let dyrow = &dy.data()[i * d..(i + 1) * d];
+        let xrow = &xd[i * d..(i + 1) * d];
+        let r = cache.inv[i];
+        for j in 0..d {
+            dscale[j] += (dyrow[j] * xrow[j] * r) as f64;
+        }
+    }
+    (
+        dx,
+        Some(Tensor::new(&[d], dscale.into_iter().map(|x| x as f32).collect())),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Head split/merge: (B*S, d) <-> (B, H, S, dh).
+// ---------------------------------------------------------------------------
+
+pub fn split_heads(x: &Tensor, b: usize, s: usize, h: usize, dh: usize) -> Tensor {
+    let d = h * dh;
+    assert_eq!(x.shape(), &[b * s, d]);
+    let xd = x.data();
+    let mut out = vec![0.0f32; b * h * s * dh];
+    out.par_chunks_mut(s * dh).enumerate().for_each(|(bh, chunk)| {
+        let (bi, hi) = (bh / h, bh % h);
+        for si in 0..s {
+            let src = &xd[(bi * s + si) * d + hi * dh..(bi * s + si) * d + (hi + 1) * dh];
+            chunk[si * dh..(si + 1) * dh].copy_from_slice(src);
+        }
+    });
+    Tensor::new(&[b, h, s, dh], out)
+}
+
+pub fn merge_heads(x: &Tensor, b: usize, s: usize, h: usize, dh: usize) -> Tensor {
+    let d = h * dh;
+    assert_eq!(x.shape(), &[b, h, s, dh]);
+    let xd = x.data();
+    let mut out = vec![0.0f32; b * s * d];
+    out.par_chunks_mut(d).enumerate().for_each(|(bs, row)| {
+        let (bi, si) = (bs / s, bs % s);
+        for hi in 0..h {
+            let src = &xd[((bi * h + hi) * s + si) * dh..((bi * h + hi) * s + si + 1) * dh];
+            row[hi * dh..(hi + 1) * dh].copy_from_slice(src);
+        }
+    });
+    Tensor::new(&[b * s, d], out)
+}
+
+// ---------------------------------------------------------------------------
+// Causal softmax attention (forward + VJP), parallel over (batch, head).
+// ---------------------------------------------------------------------------
+
+/// q, k, v: (B, H, S, dh).  Returns (output (B, H, S, dh), probs (B, H, S, S)).
+pub fn attention_fwd(q: &Tensor, k: &Tensor, v: &Tensor) -> (Tensor, Tensor) {
+    let (b, h, s, dh) = dims4(q);
+    assert_eq!(k.shape(), q.shape());
+    assert_eq!(v.shape(), q.shape());
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = vec![0.0f32; b * h * s * dh];
+    let mut probs = vec![0.0f32; b * h * s * s];
+    out.par_chunks_mut(s * dh)
+        .zip(probs.par_chunks_mut(s * s))
+        .enumerate()
+        .for_each(|(bh, (ochunk, pchunk))| {
+            let base = bh * s * dh;
+            let qd = &q.data()[base..base + s * dh];
+            let kd = &k.data()[base..base + s * dh];
+            let vd = &v.data()[base..base + s * dh];
+            let mut row = vec![0.0f32; s];
+            for i in 0..s {
+                let qi = &qd[i * dh..(i + 1) * dh];
+                let mut mx = f32::NEG_INFINITY;
+                for (j, rj) in row.iter_mut().enumerate().take(i + 1) {
+                    let kj = &kd[j * dh..(j + 1) * dh];
+                    let dot: f32 = qi.iter().zip(kj).map(|(&a, &c)| a * c).sum();
+                    *rj = dot * scale;
+                    mx = mx.max(*rj);
+                }
+                let mut denom = 0.0f32;
+                for rj in row.iter_mut().take(i + 1) {
+                    *rj = (*rj - mx).exp();
+                    denom += *rj;
+                }
+                let prow = &mut pchunk[i * s..(i + 1) * s];
+                let orow = &mut ochunk[i * dh..(i + 1) * dh];
+                for j in 0..=i {
+                    let p = row[j] / denom;
+                    prow[j] = p;
+                    let vj = &vd[j * dh..(j + 1) * dh];
+                    for (o, &vv) in orow.iter_mut().zip(vj) {
+                        *o += p * vv;
+                    }
+                }
+            }
+        });
+    (
+        Tensor::new(&[b, h, s, dh], out),
+        Tensor::new(&[b, h, s, s], probs),
+    )
+}
+
+/// VJP of [`attention_fwd`].  Returns (dq, dk, dv), each (B, H, S, dh).
+pub fn attention_bwd(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    probs: &Tensor,
+    dout: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let (b, h, s, dh) = dims4(q);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut dq = vec![0.0f32; b * h * s * dh];
+    let mut dk = vec![0.0f32; b * h * s * dh];
+    let mut dv = vec![0.0f32; b * h * s * dh];
+    dq.par_chunks_mut(s * dh)
+        .zip(dk.par_chunks_mut(s * dh))
+        .zip(dv.par_chunks_mut(s * dh))
+        .enumerate()
+        .for_each(|(bh, ((dqc, dkc), dvc))| {
+            let base = bh * s * dh;
+            let qd = &q.data()[base..base + s * dh];
+            let kd = &k.data()[base..base + s * dh];
+            let vd = &v.data()[base..base + s * dh];
+            let dod = &dout.data()[base..base + s * dh];
+            let pd = &probs.data()[bh * s * s..(bh + 1) * s * s];
+            let mut dp = vec![0.0f32; s];
+            for i in 0..s {
+                let doi = &dod[i * dh..(i + 1) * dh];
+                let prow = &pd[i * s..(i + 1) * s];
+                // dp_j = do_i · v_j; row-sum for the softmax pullback
+                let mut psum = 0.0f32;
+                for (j, dpj) in dp.iter_mut().enumerate().take(i + 1) {
+                    let vj = &vd[j * dh..(j + 1) * dh];
+                    *dpj = doi.iter().zip(vj).map(|(&a, &c)| a * c).sum();
+                    psum += *dpj * prow[j];
+                }
+                let dqrow = &mut dqc[i * dh..(i + 1) * dh];
+                for j in 0..=i {
+                    let p = prow[j];
+                    // dv_j += p * do_i
+                    let dvrow = &mut dvc[j * dh..(j + 1) * dh];
+                    for (o, &g) in dvrow.iter_mut().zip(doi) {
+                        *o += p * g;
+                    }
+                    let ds = p * (dp[j] - psum) * scale;
+                    if ds == 0.0 {
+                        continue;
+                    }
+                    let kj = &kd[j * dh..(j + 1) * dh];
+                    for (o, &kv) in dqrow.iter_mut().zip(kj) {
+                        *o += ds * kv;
+                    }
+                    let qi = &qd[i * dh..(i + 1) * dh];
+                    let dkrow = &mut dkc[j * dh..(j + 1) * dh];
+                    for (o, &qv) in dkrow.iter_mut().zip(qi) {
+                        *o += ds * qv;
+                    }
+                }
+            }
+        });
+    let shape = [b, h, s, dh];
+    (
+        Tensor::new(&shape, dq),
+        Tensor::new(&shape, dk),
+        Tensor::new(&shape, dv),
+    )
+}
+
+fn dims4(t: &Tensor) -> (usize, usize, usize, usize) {
+    let s = t.shape();
+    assert_eq!(s.len(), 4, "expected (B,H,S,dh), got {s:?}");
+    (s[0], s[1], s[2], s[3])
+}
+
+// ---------------------------------------------------------------------------
+// Embedding.
+// ---------------------------------------------------------------------------
+
+/// E[tokens] + P[:s] broadcast over the batch -> (B*S, d).  Token ids are
+/// clamped to the vocabulary like jax's default clipping gather.
+pub fn embed_fwd(tokens: &[i32], b: usize, s: usize, emb: &Tensor, pos: &Tensor) -> Tensor {
+    let d = emb.cols();
+    let vocab = emb.rows();
+    assert_eq!(tokens.len(), b * s);
+    let mut out = vec![0.0f32; b * s * d];
+    out.par_chunks_mut(d).enumerate().for_each(|(bs, row)| {
+        let si = bs % s;
+        let tok = (tokens[bs].max(0) as usize).min(vocab - 1);
+        let erow = &emb.data()[tok * d..(tok + 1) * d];
+        let prow = &pos.data()[si * d..(si + 1) * d];
+        for j in 0..d {
+            row[j] = erow[j] + prow[j];
+        }
+    });
+    Tensor::new(&[b * s, d], out)
+}
+
+/// Scatter-add gradient into the token embedding table.
+pub fn embed_tokens_bwd(tokens: &[i32], dx: &Tensor, vocab: usize) -> Tensor {
+    let d = dx.cols();
+    let mut out = vec![0.0f32; vocab * d];
+    for (bs, &t) in tokens.iter().enumerate() {
+        let tok = (t.max(0) as usize).min(vocab - 1);
+        let src = &dx.data()[bs * d..(bs + 1) * d];
+        let dst = &mut out[tok * d..(tok + 1) * d];
+        for (o, &g) in dst.iter_mut().zip(src) {
+            *o += g;
+        }
+    }
+    Tensor::new(&[vocab, d], out)
+}
+
+/// Positional gradient: sum over the batch dim -> (S, d).
+pub fn embed_pos_bwd(dx: &Tensor, b: usize, s: usize) -> Tensor {
+    let d = dx.cols();
+    let mut out = vec![0.0f64; s * d];
+    for bi in 0..b {
+        for si in 0..s {
+            let src = &dx.data()[(bi * s + si) * d..(bi * s + si + 1) * d];
+            let dst = &mut out[si * d..(si + 1) * d];
+            for (o, &g) in dst.iter_mut().zip(src) {
+                *o += g as f64;
+            }
+        }
+    }
+    Tensor::new(&[s, d], out.into_iter().map(|x| x as f32).collect())
+}
+
+// ---------------------------------------------------------------------------
+// Cross-entropy heads.
+// ---------------------------------------------------------------------------
+
+/// Exact next-token NLL sums: (loss_sum, token_count) over (B, S) tokens and
+/// (B*S, V) logits — position S-1 of every sequence predicts nothing.
+pub fn ce_sums(logits: &Tensor, tokens: &[i32], b: usize, s: usize) -> (f64, f64) {
+    let v = logits.cols();
+    let ld = logits.data();
+    let loss_sum: f64 = (0..b * s)
+        .into_par_iter()
+        .map(|bs| {
+            let si = bs % s;
+            if si + 1 >= s {
+                return 0.0f64;
+            }
+            let row = &ld[bs * v..(bs + 1) * v];
+            let tgt = (tokens[bs + 1].max(0) as usize).min(v - 1);
+            let mx = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+            let lse: f32 = row.iter().map(|&x| (x - mx).exp()).sum::<f32>().ln() + mx;
+            (lse - row[tgt]) as f64
+        })
+        .sum();
+    (loss_sum, (b * (s - 1)) as f64)
+}
+
+/// Mean next-token NLL and its logits gradient (the train-step head).
+pub fn ce_grad(logits: &Tensor, tokens: &[i32], b: usize, s: usize) -> (f32, Tensor) {
+    let v = logits.cols();
+    let count = (b * (s - 1)) as f32;
+    let ld = logits.data();
+    let mut dl = vec![0.0f32; b * s * v];
+    let loss_sum: f64 = dl
+        .par_chunks_mut(v)
+        .enumerate()
+        .map(|(bs, drow)| {
+            let si = bs % s;
+            if si + 1 >= s {
+                return 0.0f64; // last position: no target, zero grad
+            }
+            let row = &ld[bs * v..(bs + 1) * v];
+            let tgt = (tokens[bs + 1].max(0) as usize).min(v - 1);
+            let mx = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+            let mut denom = 0.0f32;
+            for (o, &x) in drow.iter_mut().zip(row) {
+                *o = (x - mx).exp();
+                denom += *o;
+            }
+            for o in drow.iter_mut() {
+                *o /= denom * count;
+            }
+            drow[tgt] -= 1.0 / count;
+            ((denom.ln() + mx) - row[tgt]) as f64
+        })
+        .sum();
+    (
+        (loss_sum / count as f64) as f32,
+        Tensor::new(&[b * s, v], dl),
+    )
+}
+
+/// Per-sequence sum log-prob of tmask-marked tokens (EleutherAI-style
+/// likelihood ranking).  Returns (scores, counts), each length B.
+pub fn sequence_scores(
+    logits: &Tensor,
+    tokens: &[i32],
+    tmask: &Tensor,
+    b: usize,
+    s: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let v = logits.cols();
+    let ld = logits.data();
+    let td = tmask.data();
+    let pairs: Vec<(f32, f32)> = (0..b)
+        .into_par_iter()
+        .map(|bi| {
+            let mut score = 0.0f64;
+            let mut cnt = 0.0f32;
+            for si in 0..s - 1 {
+                let tm = td[bi * s + si + 1];
+                if tm == 0.0 {
+                    continue;
+                }
+                let bs = bi * s + si;
+                let row = &ld[bs * v..(bs + 1) * v];
+                let tgt = (tokens[bs + 1].max(0) as usize).min(v - 1);
+                let mx = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+                let lse: f32 = row.iter().map(|&x| (x - mx).exp()).sum::<f32>().ln() + mx;
+                score += ((row[tgt] - lse) * tm) as f64;
+                cnt += tm;
+            }
+            (score as f32, cnt)
+        })
+        .collect();
+    (
+        pairs.iter().map(|p| p.0).collect(),
+        pairs.iter().map(|p| p.1).collect(),
+    )
+}
+
+/// Shared VJP of the gated low-rank adapter path: given dZ = dYᵀX and a gate
+/// (MaskLoRA: the mask with `s` = lora_scale; ScaleLoRA: W⊙M with `s` = 1),
+/// G = s·(dZ ⊙ gate), dA = Bᵀ G, dB = G Aᵀ.  Used by both the full-model
+/// backward pass and the per-shape reconstruction steps.
+pub fn adapter_vjp(
+    dz: &Tensor,
+    gate: &Tensor,
+    a: &Tensor,
+    bmat: &Tensor,
+    s: f32,
+) -> (Tensor, Tensor) {
+    let g = dz.hadamard(gate).scale(s);
+    let da = linalg::matmul_tn(bmat, &g);
+    let db = linalg::matmul_nt(&g, a);
+    (da, db)
+}
+
+// ---------------------------------------------------------------------------
+// AdamW (decoupled weight decay; wd = 0 in every lowered graph).
+// ---------------------------------------------------------------------------
+
+/// One AdamW step; `step` is 1-based.  Returns (p', m', v').
+pub fn adamw(
+    p: &Tensor,
+    g: &Tensor,
+    m: &Tensor,
+    v: &Tensor,
+    step: f32,
+    lr: f32,
+) -> (Tensor, Tensor, Tensor) {
+    assert_eq!(p.shape(), g.shape());
+    let bc1 = 1.0 - ADAM_BETA1.powf(step);
+    let bc2 = 1.0 - ADAM_BETA2.powf(step);
+    let n = p.numel();
+    let mut p2 = vec![0.0f32; n];
+    let mut m2 = vec![0.0f32; n];
+    let mut v2 = vec![0.0f32; n];
+    let (pd, gd, md, vd) = (p.data(), g.data(), m.data(), v.data());
+    p2.par_iter_mut()
+        .zip(m2.par_iter_mut())
+        .zip(v2.par_iter_mut())
+        .enumerate()
+        .for_each(|(i, ((po, mo), vo))| {
+            let gi = gd[i];
+            let mn = ADAM_BETA1 * md[i] + (1.0 - ADAM_BETA1) * gi;
+            let vn = ADAM_BETA2 * vd[i] + (1.0 - ADAM_BETA2) * gi * gi;
+            let mhat = mn / bc1;
+            let vhat = vn / bc2;
+            *po = pd[i] - lr * (mhat / (vhat.sqrt() + ADAM_EPS));
+            *mo = mn;
+            *vo = vn;
+        });
+    (
+        Tensor::new(p.shape(), p2),
+        Tensor::new(p.shape(), m2),
+        Tensor::new(p.shape(), v2),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::linalg;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gelu_matches_reference_points() {
+        // reference values from jax.nn.gelu (approximate=True)
+        let x = Tensor::new(&[4], vec![-2.0, -0.5, 0.0, 1.5]);
+        let y = gelu(&x);
+        let expect = [-0.045402, -0.154286, 0.0, 1.399572];
+        for (a, e) in y.data().iter().zip(expect) {
+            assert!((a - e).abs() < 1e-4, "{a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn gelu_vjp_matches_finite_difference() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[64], 1.5, &mut rng);
+        let dy = Tensor::ones(&[64]);
+        let g = gelu_vjp(&x, &dy);
+        let eps = 1e-3;
+        for i in 0..64 {
+            let mut xp = x.clone();
+            xp.data_mut()[i] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[i] -= eps;
+            let fd = (gelu(&xp).data()[i] - gelu(&xm).data()[i]) / (2.0 * eps);
+            assert!((fd - g.data()[i]).abs() < 1e-2, "i={i}: {fd} vs {}", g.data()[i]);
+        }
+    }
+
+    #[test]
+    fn layernorm_normalises_and_roundtrips_grads() {
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&[6, 16], 2.0, &mut rng);
+        let scale = Tensor::ones(&[16]);
+        let bias = Tensor::zeros(&[16]);
+        let (y, cache) = layernorm_fwd(&x, &scale, &bias);
+        for i in 0..6 {
+            let row = &y.data()[i * 16..(i + 1) * 16];
+            let mu: f32 = row.iter().sum::<f32>() / 16.0;
+            let var: f32 = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / 16.0;
+            assert!(mu.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+        // dx orthogonal to constants: a constant shift of x leaves y unchanged
+        let dy = Tensor::randn(&[6, 16], 1.0, &mut rng);
+        let (dx, pg) = layernorm_bwd(&cache, &scale, &dy, true);
+        for i in 0..6 {
+            let rsum: f32 = dx.data()[i * 16..(i + 1) * 16].iter().sum();
+            assert!(rsum.abs() < 1e-4, "row {i}: {rsum}");
+        }
+        // dbias is the column sum of dy
+        let (_, db) = pg.unwrap();
+        assert!(db.allclose(&col_sums(&dy), 1e-5, 1e-5));
+        // frozen-norm path skips the reductions but returns the same dx
+        let (dx2, none) = layernorm_bwd(&cache, &scale, &dy, false);
+        assert!(none.is_none());
+        assert_eq!(dx2, dx);
+    }
+
+    #[test]
+    fn rmsnorm_fwd_bwd_finite_difference() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[3, 8], 1.0, &mut rng);
+        let scale = Tensor::randn(&[8], 0.5, &mut rng).map(|v| v + 1.0);
+        let (_, cache) = rmsnorm_fwd(&x, &scale);
+        let dy = Tensor::randn(&[3, 8], 1.0, &mut rng);
+        let (dx, _) = rmsnorm_bwd(&cache, &scale, &dy, true);
+        let f = |xt: &Tensor| -> f32 {
+            let (y, _) = rmsnorm_fwd(xt, &scale);
+            y.data().iter().zip(dy.data()).map(|(&a, &b)| a * b).sum()
+        };
+        let eps = 1e-3;
+        for i in [0usize, 5, 13, 23] {
+            let mut xp = x.clone();
+            xp.data_mut()[i] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[i] -= eps;
+            let fd = (f(&xp) - f(&xm)) / (2.0 * eps);
+            assert!((fd - dx.data()[i]).abs() < 2e-2, "i={i}: {fd} vs {}", dx.data()[i]);
+        }
+    }
+
+    #[test]
+    fn heads_split_merge_roundtrip() {
+        let mut rng = Rng::new(4);
+        let x = Tensor::randn(&[2 * 5, 12], 1.0, &mut rng);
+        let h = split_heads(&x, 2, 5, 3, 4);
+        assert_eq!(h.shape(), &[2, 3, 5, 4]);
+        let back = merge_heads(&h, 2, 5, 3, 4);
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn attention_is_causal_and_rows_normalise() {
+        let mut rng = Rng::new(5);
+        let q = Tensor::randn(&[1, 2, 6, 4], 1.0, &mut rng);
+        let k = Tensor::randn(&[1, 2, 6, 4], 1.0, &mut rng);
+        let v = Tensor::randn(&[1, 2, 6, 4], 1.0, &mut rng);
+        let (_, probs) = attention_fwd(&q, &k, &v);
+        for h in 0..2 {
+            for i in 0..6 {
+                let row = &probs.data()[(h * 6 + i) * 6..(h * 6 + i + 1) * 6];
+                let sum: f32 = row.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-5);
+                for (j, &p) in row.iter().enumerate() {
+                    if j > i {
+                        assert_eq!(p, 0.0, "future leak at ({i},{j})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn attention_bwd_finite_difference() {
+        let mut rng = Rng::new(6);
+        let q = Tensor::randn(&[1, 1, 5, 3], 0.7, &mut rng);
+        let k = Tensor::randn(&[1, 1, 5, 3], 0.7, &mut rng);
+        let v = Tensor::randn(&[1, 1, 5, 3], 0.7, &mut rng);
+        let dy = Tensor::randn(&[1, 1, 5, 3], 1.0, &mut rng);
+        let (_, probs) = attention_fwd(&q, &k, &v);
+        let (dq, dk, dv) = attention_bwd(&q, &k, &v, &probs, &dy);
+        let f = |qt: &Tensor, kt: &Tensor, vt: &Tensor| -> f32 {
+            let (o, _) = attention_fwd(qt, kt, vt);
+            o.data().iter().zip(dy.data()).map(|(&a, &b)| a * b).sum()
+        };
+        let eps = 1e-3;
+        for i in [0usize, 4, 9, 14] {
+            for (t, g) in [(&q, &dq), (&k, &dk), (&v, &dv)] {
+                let mut tp = (*t).clone();
+                tp.data_mut()[i] += eps;
+                let mut tm = (*t).clone();
+                tm.data_mut()[i] -= eps;
+                let fd = if std::ptr::eq(t, &q) {
+                    (f(&tp, &k, &v) - f(&tm, &k, &v)) / (2.0 * eps)
+                } else if std::ptr::eq(t, &k) {
+                    (f(&q, &tp, &v) - f(&q, &tm, &v)) / (2.0 * eps)
+                } else {
+                    (f(&q, &k, &tp) - f(&q, &k, &tm)) / (2.0 * eps)
+                };
+                assert!((fd - g.data()[i]).abs() < 2e-2, "i={i}: {fd} vs {}", g.data()[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn ce_uniform_logits_give_log_v() {
+        let (b, s, v) = (2usize, 4usize, 10usize);
+        let logits = Tensor::zeros(&[b * s, v]);
+        let tokens = vec![3i32; b * s];
+        let (sum, count) = ce_sums(&logits, &tokens, b, s);
+        assert_eq!(count, (b * (s - 1)) as f64);
+        assert!((sum / count - (v as f64).ln()).abs() < 1e-5);
+        let (mean, dl) = ce_grad(&logits, &tokens, b, s);
+        assert!((mean as f64 - (v as f64).ln()).abs() < 1e-5);
+        // grad sums to zero per scored row; zero at final positions
+        for bs in 0..b * s {
+            let row = &dl.data()[bs * v..(bs + 1) * v];
+            let rs: f32 = row.iter().sum();
+            if bs % s == s - 1 {
+                assert!(row.iter().all(|&x| x == 0.0));
+            } else {
+                assert!(rs.abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn ce_grad_matches_finite_difference() {
+        let mut rng = Rng::new(7);
+        let (b, s, v) = (2usize, 3usize, 6usize);
+        let logits = Tensor::randn(&[b * s, v], 1.0, &mut rng);
+        let tokens: Vec<i32> = (0..b * s).map(|_| rng.below(v as u64) as i32).collect();
+        let (_, dl) = ce_grad(&logits, &tokens, b, s);
+        let eps = 1e-2;
+        for i in [0usize, 7, 20, 35] {
+            let mut lp = logits.clone();
+            lp.data_mut()[i] += eps;
+            let mut lm = logits.clone();
+            lm.data_mut()[i] -= eps;
+            let (sp, c) = ce_sums(&lp, &tokens, b, s);
+            let (sm, _) = ce_sums(&lm, &tokens, b, s);
+            let fd = ((sp - sm) / (2.0 * eps as f64) / c) as f32;
+            assert!((fd - dl.data()[i]).abs() < 1e-3, "i={i}: {fd} vs {}", dl.data()[i]);
+        }
+    }
+
+    #[test]
+    fn sequence_scores_count_masked_positions() {
+        let (b, s, v) = (2usize, 4usize, 8usize);
+        let logits = Tensor::zeros(&[b * s, v]);
+        let tokens = vec![1i32; b * s];
+        // mask scores positions 1..3 of sequence 0, nothing of sequence 1
+        let mut tm = vec![0.0f32; b * s];
+        tm[1] = 1.0;
+        tm[2] = 1.0;
+        let (scores, counts) = sequence_scores(&logits, &tokens, &Tensor::new(&[b, s], tm), b, s);
+        assert_eq!(counts, vec![2.0, 0.0]);
+        assert!((scores[0] + 2.0 * (v as f32).ln()).abs() < 1e-4);
+        assert_eq!(scores[1], 0.0);
+    }
+
+    #[test]
+    fn adamw_first_step_is_signed_lr() {
+        // with zero state and step 1: mhat = g, vhat = g² -> update ≈ lr·sign(g)
+        let p = Tensor::new(&[3], vec![1.0, 2.0, -3.0]);
+        let g = Tensor::new(&[3], vec![0.5, -0.25, 4.0]);
+        let z = Tensor::zeros(&[3]);
+        let (p2, m2, v2) = adamw(&p, &g, &z, &z, 1.0, 0.1);
+        for i in 0..3 {
+            let expect = p.data()[i] - 0.1 * g.data()[i].signum();
+            assert!((p2.data()[i] - expect).abs() < 1e-4);
+            assert!((m2.data()[i] - 0.1 * g.data()[i]).abs() < 1e-6);
+            assert!((v2.data()[i] - 0.001 * g.data()[i] * g.data()[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn embed_and_grads_are_consistent() {
+        let mut rng = Rng::new(8);
+        let (b, s, v, d) = (2usize, 3usize, 5usize, 4usize);
+        let emb = Tensor::randn(&[v, d], 1.0, &mut rng);
+        let pos = Tensor::randn(&[s, d], 1.0, &mut rng);
+        let tokens = vec![0i32, 1, 2, 2, 4, 0];
+        let x = embed_fwd(&tokens, b, s, &emb, &pos);
+        assert_eq!(x.shape(), &[b * s, d]);
+        // row (1, 2) = E[0] + P[2]
+        for j in 0..d {
+            let got = x.data()[5 * d + j];
+            assert!((got - (emb.data()[j] + pos.data()[2 * d + j])).abs() < 1e-6);
+        }
+        let dx = Tensor::ones(&[b * s, d]);
+        let de = embed_tokens_bwd(&tokens, &dx, v);
+        // token 2 appears twice
+        assert!((de.data()[2 * d] - 2.0).abs() < 1e-6);
+        // token 3 never
+        assert_eq!(de.data()[3 * d], 0.0);
+        let dp = embed_pos_bwd(&dx, b, s);
+        assert!(dp.data().iter().all(|&g| (g - b as f32).abs() < 1e-6));
+    }
+
+    #[test]
+    fn col_sums_matches_matmul() {
+        let mut rng = Rng::new(9);
+        let dy = Tensor::randn(&[13, 7], 1.0, &mut rng);
+        let ones = Tensor::ones(&[13, 1]);
+        let via_mm = linalg::matmul_tn(&dy, &ones); // (7,1)ᵀ... (7,1)
+        let cs = col_sums(&dy);
+        for j in 0..7 {
+            assert!((cs.data()[j] - via_mm.data()[j]).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! PJRT backend (cargo feature `pjrt`): load AOT HLO-text artifacts, compile
+//! once, execute from the coordinator hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  Interchange is HLO *text* (jax ≥0.5 protos
+//! carry 64-bit ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns them).
+//!
+//! Executables are compiled lazily and cached per (model, name).  All
+//! lowered graphs return tuples (`return_tuple=True`), unwrapped here.
+//!
+//! Builds without the real `xla` crate link the in-tree stub
+//! (`rust/xla-stub`), which type-checks this module and fails at runtime
+//! with a pointer to `--backend native`.
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{DType, ExecSpec, IoSpec, Manifest};
+use crate::runtime::{Backend, Feed, Outputs};
+use crate::tensor::Tensor;
+
+// ---------------------------------------------------------------------------
+// Literal conversion helpers.
+// ---------------------------------------------------------------------------
+
+pub fn f32_literal(t: &Tensor) -> Result<xla::Literal> {
+    let mut bytes = Vec::with_capacity(t.numel() * 4);
+    for &x in t.data() {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        t.shape(),
+        &bytes,
+    )
+    .map_err(|e| anyhow::anyhow!("creating f32 literal: {e:?}"))
+}
+
+pub fn i32_literal(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for &x in data {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, &bytes)
+        .map_err(|e| anyhow::anyhow!("creating i32 literal: {e:?}"))
+}
+
+pub fn literal_to_tensor(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let v: Vec<f32> = lit
+        .to_vec()
+        .map_err(|e| anyhow::anyhow!("literal -> f32 vec: {e:?}"))?;
+    Ok(Tensor::new(shape, v))
+}
+
+/// Resolve one declared input from the feed into a device literal.
+fn resolve_literal(feed: &Feed, spec: &IoSpec) -> Result<xla::Literal> {
+    match spec.dtype {
+        DType::I32 => {
+            let (shape, data) = feed
+                .get_ints(&spec.name)
+                .with_context(|| format!("missing i32 input {:?}", spec.name))?;
+            if shape != &spec.shape[..] {
+                bail!("input {:?}: shape {shape:?} != spec {:?}", spec.name, spec.shape);
+            }
+            i32_literal(shape, data)
+        }
+        DType::F32 => {
+            let t = feed
+                .get_tensor(&spec.name)
+                .with_context(|| format!("missing f32 input {:?}", spec.name))?;
+            if t.shape() != &spec.shape[..] {
+                bail!(
+                    "input {:?}: tensor shape {:?} != spec {:?}",
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+            f32_literal(t)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executable + backend.
+// ---------------------------------------------------------------------------
+
+pub struct Executable {
+    pub spec: ExecSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with a [`Feed`]; returns outputs as named host tensors.
+    pub fn run(&self, feed: &Feed) -> Result<Outputs> {
+        let mut literals = Vec::with_capacity(self.spec.inputs.len());
+        for spec in &self.spec.inputs {
+            literals.push(
+                resolve_literal(feed, spec)
+                    .with_context(|| format!("feeding executable {:?}", self.spec.name))?,
+            );
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing {:?}: {e:?}", self.spec.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {:?}: {e:?}", self.spec.name))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling result of {:?}: {e:?}", self.spec.name))?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{:?}: {} outputs from device, {} in manifest",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut values = Vec::with_capacity(parts.len());
+        for (lit, ospec) in parts.iter().zip(&self.spec.outputs) {
+            values.push((ospec.name.clone(), literal_to_tensor(lit, &ospec.shape)?));
+        }
+        Ok(Outputs { values })
+    }
+}
+
+/// PJRT client + compiled-executable cache for one artifacts directory.
+pub struct PjrtBackend {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<(String, String), Rc<Executable>>>,
+    exec_count: Cell<u64>,
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts_dir: &std::path::Path) -> Result<PjrtBackend> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(PjrtBackend {
+            manifest,
+            client,
+            cache: RefCell::new(HashMap::new()),
+            exec_count: Cell::new(0),
+        })
+    }
+
+    /// Compile (or fetch from cache) one executable of one model.
+    pub fn load(&self, model: &str, exec: &str) -> Result<Rc<Executable>> {
+        let key = (model.to_string(), exec.to_string());
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let mm = self.manifest.model(model)?;
+        let spec = mm.exec(exec)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {exec:?}: {e:?}"))?;
+        let wrapped = Rc::new(Executable { spec, exe });
+        self.cache.borrow_mut().insert(key, wrapped.clone());
+        Ok(wrapped)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn kind(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn prepare(&self, model: &str, exec: &str) -> Result<()> {
+        self.load(model, exec).map(|_| ())
+    }
+
+    fn run(&self, model: &str, exec: &str, feed: &Feed) -> Result<Outputs> {
+        self.exec_count.set(self.exec_count.get() + 1);
+        self.load(model, exec)?.run(feed)
+    }
+
+    fn exec_count(&self) -> u64 {
+        self.exec_count.get()
+    }
+
+    fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

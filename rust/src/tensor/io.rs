@@ -22,8 +22,13 @@ pub fn save(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    let file = std::fs::File::create(path)
-        .with_context(|| format!("creating {path:?}"))?;
+    // write to a sibling temp file, then rename: concurrent readers (tests
+    // sharing a checkpoint cache) never observe a half-written file
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let unique = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let tmp = path.with_extension(format!("tmp{}-{unique}", std::process::id()));
+    let file = std::fs::File::create(&tmp)
+        .with_context(|| format!("creating {tmp:?}"))?;
     let mut w = std::io::BufWriter::new(file);
     w.write_all(MAGIC)?;
     w.write_all(&(tensors.len() as u32).to_le_bytes())?;
@@ -43,6 +48,8 @@ pub fn save(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
         w.write_all(&buf)?;
     }
     w.flush()?;
+    drop(w);
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
     Ok(())
 }
 

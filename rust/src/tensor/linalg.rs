@@ -10,18 +10,64 @@
 //! 3. transpose of `cholesky(H⁻¹)` — the upper-triangular "Hinv" whose rows
 //!    drive the column-wise error compensation.
 //!
-//! Matmul is a cache-blocked ikj kernel — fast enough for calibration-scale
-//! Grams (≤ 1024²) while staying dependency-free.
+//! Matmul is a rayon-parallel, cache-blocked (i/j/k) kernel — the NativeBackend
+//! hot path as well as the calibration-scale Gram builder.  The single-thread
+//! `*_serial` variants are kept as the bench baselines (`runtime_micro`).
+
+use rayon::prelude::*;
 
 use super::Tensor;
 
-/// a:(n,k) @ b:(k,m) -> (n,m), blocked over k for cache locality.
+/// Row-block size each rayon task owns.
+const BI: usize = 32;
+/// Column tile width (j blocking): one output tile row stays in L1.
+const BJ: usize = 256;
+/// Inner-dim tile (k blocking): the A-row segment is reused across j tiles.
+const BK: usize = 64;
+
+/// a:(n,k) @ b:(k,m) -> (n,m); rayon-parallel over row blocks, blocked over
+/// i/j/k.  Exact zeros in `a` are skipped — masked/sparse operands get the
+/// axpy for free.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (n, k) = (a.rows(), a.cols());
     let (k2, m) = (b.rows(), b.cols());
     assert_eq!(k, k2, "matmul inner-dim mismatch {k} vs {k2}");
     let mut out = vec![0.0f32; n * m];
-    const BK: usize = 64;
+    let ad = a.data();
+    let bd = b.data();
+    out.par_chunks_mut(BI * m).enumerate().for_each(|(ci, chunk)| {
+        let i0 = ci * BI;
+        for k0 in (0..k).step_by(BK) {
+            let k1 = (k0 + BK).min(k);
+            for j0 in (0..m).step_by(BJ) {
+                let j1 = (j0 + BJ).min(m);
+                for (ii, orow) in chunk.chunks_mut(m).enumerate() {
+                    let arow = &ad[(i0 + ii) * k..(i0 + ii + 1) * k];
+                    let otile = &mut orow[j0..j1];
+                    for kk in k0..k1 {
+                        let av = arow[kk];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let btile = &bd[kk * m + j0..kk * m + j1];
+                        for (o, &bv) in otile.iter_mut().zip(btile) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+            }
+        }
+    });
+    Tensor::new(&[n, m], out)
+}
+
+/// Single-thread reference kernel (the pre-rayon implementation); kept for
+/// the `runtime_micro` speedup comparison and as a fallback oracle.
+pub fn matmul_serial(a: &Tensor, b: &Tensor) -> Tensor {
+    let (n, k) = (a.rows(), a.cols());
+    let (k2, m) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul inner-dim mismatch {k} vs {k2}");
+    let mut out = vec![0.0f32; n * m];
     let ad = a.data();
     let bd = b.data();
     for k0 in (0..k).step_by(BK) {
@@ -45,7 +91,37 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
 }
 
 /// a:(n,k) @ b:(m,k)ᵀ -> (n,m) — the (out,in)-weight-layout forward.
+/// Both operands are read row-major (sequential dots); rayon over row blocks
+/// with j tiling so a B-row block stays cached across the i rows of a block.
 pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (n, k) = (a.rows(), a.cols());
+    let (m, k2) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul_nt inner-dim mismatch {k} vs {k2}");
+    let mut out = vec![0.0f32; n * m];
+    let ad = a.data();
+    let bd = b.data();
+    out.par_chunks_mut(BI * m).enumerate().for_each(|(ci, chunk)| {
+        let i0 = ci * BI;
+        for j0 in (0..m).step_by(64) {
+            let j1 = (j0 + 64).min(m);
+            for (ii, orow) in chunk.chunks_mut(m).enumerate() {
+                let arow = &ad[(i0 + ii) * k..(i0 + ii + 1) * k];
+                for j in j0..j1 {
+                    let brow = &bd[j * k..(j + 1) * k];
+                    let mut acc = 0.0f32;
+                    for kk in 0..k {
+                        acc += arow[kk] * brow[kk];
+                    }
+                    orow[j] = acc;
+                }
+            }
+        }
+    });
+    Tensor::new(&[n, m], out)
+}
+
+/// Single-thread reference of [`matmul_nt`] (bench baseline).
+pub fn matmul_nt_serial(a: &Tensor, b: &Tensor) -> Tensor {
     let (n, k) = (a.rows(), a.cols());
     let (m, k2) = (b.rows(), b.cols());
     assert_eq!(k, k2);
@@ -64,6 +140,37 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
         }
     }
     Tensor::new(&[n, m], out)
+}
+
+/// a:(n,m)ᵀ @ b:(n,k) -> (m,k) — the backward-pass contraction (dWᵀ = dYᵀ X,
+/// Grams XᵀX).  Parallel over blocks of output rows; each task scans the
+/// shared operands once, skipping exact zeros of the transposed column.
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (n, m) = (a.rows(), a.cols());
+    let (n2, k) = (b.rows(), b.cols());
+    assert_eq!(n, n2, "matmul_tn outer-dim mismatch {n} vs {n2}");
+    let mut out = vec![0.0f32; m * k];
+    let ad = a.data();
+    let bd = b.data();
+    out.par_chunks_mut(BI * k).enumerate().for_each(|(ci, chunk)| {
+        let i0 = ci * BI;
+        let rows = chunk.len() / k;
+        for nn in 0..n {
+            let acol = &ad[nn * m..(nn + 1) * m];
+            let brow = &bd[nn * k..(nn + 1) * k];
+            for ii in 0..rows {
+                let av = acol[i0 + ii];
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut chunk[ii * k..(ii + 1) * k];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    });
+    Tensor::new(&[m, k], out)
 }
 
 #[derive(Debug, thiserror::Error)]
@@ -220,7 +327,31 @@ mod tests {
         let b = Tensor::randn(&[4, 5], 1.0, &mut rng);
         let c1 = matmul_nt(&a, &b);
         let c2 = matmul(&a, &b.transpose2());
-        assert!(c1.allclose(&c2, 1e-5));
+        assert!(c1.allclose(&c2, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn parallel_kernels_match_serial() {
+        let mut rng = Rng::new(8);
+        // sizes straddling the block boundaries, incl. non-multiples
+        for (n, k, m) in [(1, 1, 1), (33, 65, 31), (70, 130, 257), (128, 64, 64)] {
+            let a = Tensor::randn(&[n, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, m], 1.0, &mut rng);
+            let bt = Tensor::randn(&[m, k], 1.0, &mut rng);
+            assert!(matmul(&a, &b).allclose(&matmul_serial(&a, &b), 1e-4, 1e-4));
+            assert!(matmul_nt(&a, &bt).allclose(&matmul_nt_serial(&a, &bt), 1e-4, 1e-4));
+        }
+    }
+
+    #[test]
+    fn matmul_tn_is_transposed_product() {
+        let mut rng = Rng::new(9);
+        let a = Tensor::randn(&[37, 19], 1.0, &mut rng);
+        let b = Tensor::randn(&[37, 23], 1.0, &mut rng);
+        let c1 = matmul_tn(&a, &b);
+        let c2 = matmul(&a.transpose2(), &b);
+        assert_eq!(c1.shape(), &[19, 23]);
+        assert!(c1.allclose(&c2, 1e-4, 1e-4));
     }
 
     #[test]
@@ -229,7 +360,7 @@ mod tests {
         let h = random_spd(12, &mut rng);
         let l = cholesky(&h).unwrap();
         let rec = matmul_nt(&l, &l);
-        assert!(rec.allclose(&h, 1e-3), "LLᵀ != H");
+        assert!(rec.allclose(&h, 1e-3, 1e-4), "LLᵀ != H");
         // lower triangular
         for i in 0..12 {
             for j in (i + 1)..12 {
@@ -266,7 +397,7 @@ mod tests {
         let l = cholesky(&h).unwrap();
         let inv = cholesky_inverse(&l);
         let prod = matmul(&h, &inv);
-        assert!(prod.allclose(&Tensor::eye(10), 1e-3), "H·H⁻¹ != I");
+        assert!(prod.allclose(&Tensor::eye(10), 1e-3, 1e-4), "H·H⁻¹ != I");
     }
 
     #[test]

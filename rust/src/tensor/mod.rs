@@ -182,13 +182,18 @@ impl Tensor {
         self.count(|x| x == 0.0) as f64 / self.numel() as f64
     }
 
-    pub fn allclose(&self, other: &Tensor, atol: f32) -> bool {
+    /// Symmetric closeness check: |a - b| <= atol + rtol * max(|a|, |b|).
+    ///
+    /// The relative term uses the larger magnitude of the pair so the check
+    /// is order-independent (allclose(a, b) == allclose(b, a)), and the
+    /// caller controls the relative tolerance explicitly.
+    pub fn allclose(&self, other: &Tensor, atol: f32, rtol: f32) -> bool {
         self.shape == other.shape
             && self
                 .data
                 .iter()
                 .zip(&other.data)
-                .all(|(&a, &b)| (a - b).abs() <= atol + 1e-5 * b.abs())
+                .all(|(&a, &b)| (a - b).abs() <= atol + rtol * a.abs().max(b.abs()))
     }
 
     // ----- matmul (delegates to linalg) -------------------------------------
@@ -241,6 +246,18 @@ mod tests {
         assert_eq!(t.max_abs(), 3.0);
         assert_eq!(t.zero_fraction(), 0.25);
         assert_eq!(t.sq_norm(), 14.0);
+    }
+
+    #[test]
+    fn allclose_is_symmetric_and_tolerant() {
+        let a = Tensor::new(&[2], vec![100.0, 0.0]);
+        let b = Tensor::new(&[2], vec![100.001, 1e-7]);
+        // pure-atol check fails, rtol on max(|a|,|b|) passes either way round
+        assert!(!a.allclose(&b, 1e-6, 0.0));
+        assert!(a.allclose(&b, 1e-6, 1e-4));
+        assert!(b.allclose(&a, 1e-6, 1e-4));
+        // shape mismatch is never close
+        assert!(!a.allclose(&Tensor::zeros(&[3]), 1e9, 1.0));
     }
 
     #[test]

@@ -11,12 +11,12 @@ use perp::coordinator::sweep::ExpContext;
 use perp::coordinator::Session;
 use perp::peft::Mode;
 use perp::pruning::{semistructured, Criterion, Pattern};
-use perp::runtime::{default_artifacts_dir, Runtime};
+use perp::runtime::NativeBackend;
 
-// Runtime holds PJRT handles (Rc / RefCell — not Sync), so each test owns
-// one; the dense checkpoint cache on disk keeps pretraining shared.
-fn rt() -> Runtime {
-    Runtime::new(&default_artifacts_dir()).expect("make artifacts first")
+// Backends hold interior-mutable caches (RefCell — not Sync), so each test
+// owns one; the dense checkpoint cache on disk keeps pretraining shared.
+fn rt() -> NativeBackend {
+    NativeBackend::new()
 }
 
 fn cfg() -> ExperimentConfig {
@@ -29,7 +29,7 @@ fn cfg() -> ExperimentConfig {
     c
 }
 
-fn ctx(rt: &Runtime) -> ExpContext<'_> {
+fn ctx(rt: &NativeBackend) -> ExpContext<'_> {
     let dir = std::env::temp_dir().join("perp_itest_cache");
     ExpContext::new(rt, cfg(), dir)
 }

@@ -1,12 +1,14 @@
-//! End-to-end smoke of the AOT bridge: rust-initialised params through the
-//! compiled `eval_loss` / `train_biases` graphs on the PJRT CPU client.
+//! End-to-end smoke of the execution backend: rust-initialised params through
+//! the `eval_loss` / `train_biases` graphs on the hermetic native backend.
 //!
-//! Requires `make artifacts` (gpt-nano) — the tests fail loudly otherwise.
+//! These are the same assertions the PJRT bridge smoke ran — the Backend
+//! trait keeps them backend-blind, so they double as the trait's contract
+//! tests (caching, shape validation, output naming).
 
 use std::collections::BTreeMap;
 
 use perp::model::{init, ParamStore};
-use perp::runtime::{default_artifacts_dir, Feed, Runtime};
+use perp::runtime::{Backend, Feed, NativeBackend};
 use perp::tensor::Tensor;
 use perp::util::rng::Rng;
 
@@ -24,18 +26,17 @@ fn feed_params<'a>(
 ) -> Feed<'a> {
     let mut f = feed;
     for (name, t) in ps.map() {
-        // the manifest names params `p::<name>` — cheap to pre-insert all
-        f = f.owned(&format!("p::{name}"), t.clone());
+        f = f.owned_key(format!("p::{name}"), t);
     }
     for (name, t) in masks {
-        f = f.owned(&format!("m::{name}"), t.clone());
+        f = f.owned_key(format!("m::{name}"), t);
     }
     f
 }
 
 #[test]
 fn eval_loss_near_uniform_at_init() {
-    let rt = Runtime::new(&default_artifacts_dir()).expect("make artifacts first");
+    let rt = NativeBackend::new();
     let mm = rt.model("gpt-nano").unwrap().clone();
     let mut rng = Rng::new(0);
     let ps = init::init_params(&mm, &mut rng);
@@ -59,7 +60,7 @@ fn eval_loss_near_uniform_at_init() {
 
 #[test]
 fn train_biases_step_updates_only_biases() {
-    let rt = Runtime::new(&default_artifacts_dir()).unwrap();
+    let rt = NativeBackend::new();
     let mm = rt.model("gpt-nano").unwrap().clone();
     let mut rng = Rng::new(1);
     let ps = init::init_params(&mm, &mut rng);
@@ -98,20 +99,26 @@ fn train_biases_step_updates_only_biases() {
         }
     }
     assert!(any_moved, "no bias moved after one step");
+    // the moment buffers moved too
+    let new_m = out.drain_prefix("om::");
+    assert_eq!(new_m.len(), trainables.len());
+    assert!(new_m.iter().any(|(_, t)| t.max_abs() > 0.0));
 }
 
 #[test]
-fn executable_cache_compiles_once() {
-    let rt = Runtime::new(&default_artifacts_dir()).unwrap();
-    let a = rt.load("gpt-nano", "eval_loss").unwrap();
-    let b = rt.load("gpt-nano", "eval_loss").unwrap();
-    assert!(std::rc::Rc::ptr_eq(&a, &b));
+fn executable_cache_prepares_once() {
+    let rt = NativeBackend::new();
+    rt.prepare("gpt-nano", "eval_loss").unwrap();
+    rt.prepare("gpt-nano", "eval_loss").unwrap();
     assert_eq!(rt.compiled_count(), 1);
+    rt.prepare("gpt-nano", "score").unwrap();
+    assert_eq!(rt.compiled_count(), 2);
+    assert_eq!(rt.exec_count(), 0, "prepare must not execute");
 }
 
 #[test]
 fn feed_shape_mismatch_is_detected() {
-    let rt = Runtime::new(&default_artifacts_dir()).unwrap();
+    let rt = NativeBackend::new();
     let mm = rt.model("gpt-nano").unwrap().clone();
     let ps = ParamStore::zeros(&mm);
     let masks = ones_masks(&mm);
@@ -120,4 +127,70 @@ fn feed_shape_mismatch_is_detected() {
     let feed = feed_params(Feed::new(), &ps, &masks).ints("tokens", &shape, &tokens);
     let err = rt.run("gpt-nano", "eval_loss", &feed);
     assert!(err.is_err());
+}
+
+#[test]
+fn missing_input_is_reported_by_name() {
+    let rt = NativeBackend::new();
+    let mm = rt.model("gpt-nano").unwrap().clone();
+    let ps = ParamStore::zeros(&mm);
+    let masks = ones_masks(&mm);
+    // no tokens fed at all
+    let feed = feed_params(Feed::new(), &ps, &masks);
+    let err = rt.run("gpt-nano", "eval_loss", &feed).unwrap_err();
+    assert!(format!("{err:#}").contains("tokens"), "{err:#}");
+}
+
+#[test]
+fn adapter_feed_round_trips_through_train_masklora() {
+    let rt = NativeBackend::new();
+    let mm = rt.model("gpt-nano").unwrap().clone();
+    let mut rng = Rng::new(2);
+    let ps = init::init_params(&mm, &mut rng);
+    let masks = ones_masks(&mm);
+    let lora = perp::peft::LoraState::init(&mm, perp::peft::Mode::MaskLora, &mut rng);
+
+    let trainables = mm.trainable.get("masklora").unwrap().clone();
+    let leaves: Vec<String> = trainables
+        .iter()
+        .cloned()
+        .chain(mm.adapters.iter().map(|(n, _)| n.clone()))
+        .collect();
+
+    let b = mm.cfg.train_batch;
+    let s = mm.cfg.seq_len;
+    let tokens: Vec<i32> = (0..b * s)
+        .map(|_| rng.below(mm.cfg.vocab as u64) as i32)
+        .collect();
+    let shape = [b, s];
+    let mut feed = feed_params(Feed::new(), &ps, &masks)
+        .ints("tokens", &shape, &tokens)
+        .scalar("step", 1.0)
+        .scalar("lr", 1e-3);
+    for (name, t) in &lora.tensors {
+        let (lin, tag) = perp::coordinator::session::split_adapter_name(name);
+        feed = feed.owned_key(format!("{tag}::{lin}"), t);
+    }
+    let leaf_shape = |n: &str| -> Vec<usize> {
+        if n.contains("::") {
+            mm.adapter_shape(n).to_vec()
+        } else {
+            mm.param_shape(n).to_vec()
+        }
+    };
+    for n in &leaves {
+        feed = feed
+            .owned(&format!("om::{n}"), Tensor::zeros(&leaf_shape(n)))
+            .owned(&format!("ov::{n}"), Tensor::zeros(&leaf_shape(n)));
+    }
+    let mut out = rt.run("gpt-nano", "train_masklora", &feed).unwrap();
+    assert!(out.scalar("loss").is_finite());
+    let updated = out.drain_prefix("o::");
+    assert_eq!(updated.len(), leaves.len());
+    // B matrices start at zero; after one step at least one B entry moved
+    let moved_b = updated
+        .iter()
+        .filter(|(n, _)| n.ends_with("::B"))
+        .any(|(_, t)| t.max_abs() > 0.0);
+    assert!(moved_b, "MaskLoRA B adapters did not move");
 }
