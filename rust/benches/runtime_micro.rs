@@ -11,8 +11,9 @@ mod common;
 use perp::config::ExperimentConfig;
 use perp::coordinator::Session;
 use perp::eval::base_feed;
+use perp::optim::OptState;
 use perp::runtime::{open_default_backend, Backend};
-use perp::tensor::{linalg, Tensor};
+use perp::tensor::{linalg, pool, Tensor};
 use perp::util::bench::{fmt_duration, Bench, Table};
 use perp::util::rng::Rng;
 
@@ -116,6 +117,47 @@ fn main() {
     }
     exec_t.print();
     tables.push(exec_t);
+
+    // tape-buffer reuse: the same train step with the thread-local pool
+    // disabled (fresh allocations every step, the pre-pool behaviour) vs
+    // enabled — the "on" row must not regress, and typically wins once the
+    // first step has populated the pool
+    let leaves = mm.trainable["biases"].clone();
+    let opt = OptState::zeros(leaves.iter().map(|n| (n.as_str(), mm.param_shape(n))));
+    let tb = mm.cfg.train_batch;
+    let tshape = [tb, sl];
+    let mut rng = Rng::new(7);
+    let train_tokens = s.train.train_batch(tb, &mut rng);
+    let mut pool_t = Table::new(
+        &format!("train_biases step ({model}): tape pool off vs on"),
+        &["pool", "mean", "p95", "pool hits"],
+    );
+    for on in [false, true] {
+        pool::set_enabled(on);
+        let (h0, _) = pool::stats();
+        let stats = bench.run(|| {
+            let mut feed = base_feed(&s.params, &s.masks)
+                .ints("tokens", &tshape, &train_tokens)
+                .scalar("step", 1.0)
+                .scalar("lr", 1e-3);
+            for n in &leaves {
+                feed = feed
+                    .tensor(&format!("om::{n}"), &opt.m[n])
+                    .tensor(&format!("ov::{n}"), &opt.v[n]);
+            }
+            std::hint::black_box(rt.run(&model, "train_biases", &feed).unwrap());
+        });
+        let (h1, _) = pool::stats();
+        pool_t.row(vec![
+            if on { "on" } else { "off" }.to_string(),
+            fmt_duration(stats.mean),
+            fmt_duration(stats.p95),
+            format!("{}", h1 - h0),
+        ]);
+    }
+    pool::set_enabled(true);
+    pool_t.print();
+    tables.push(pool_t);
 
     std::fs::create_dir_all("results").ok();
     for t in &tables {

@@ -396,6 +396,22 @@ impl<'rt> Session<'rt> {
     // Checkpoints.
     // ------------------------------------------------------------------
 
+    /// A session whose weights come from a saved checkpoint — the entry
+    /// point for `repro eval --from` and the serving layer, which evaluate
+    /// and serve pruned/retrained/merged artifacts in the same `.ptns`
+    /// format the pipeline writes.  Masks stay dense: pruned checkpoints
+    /// carry their zeros in the weights themselves.
+    pub fn from_checkpoint(
+        rt: &'rt dyn Backend,
+        cfg: ExperimentConfig,
+        seed: u64,
+        path: &Path,
+    ) -> Result<Session<'rt>> {
+        let mut s = Session::new(rt, cfg, seed)?;
+        s.load(path)?;
+        Ok(s)
+    }
+
     pub fn save(&self, path: &Path) -> Result<()> {
         self.params.save(path)
     }

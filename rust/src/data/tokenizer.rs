@@ -64,6 +64,26 @@ impl Tokenizer {
             .collect()
     }
 
+    /// Generation stop token.  The synthetic corpus has no dedicated EOS;
+    /// `<sep>` (the document-segment separator the model learns to emit
+    /// between spans) plays that role for the serving layer.
+    pub fn eos(&self) -> i32 {
+        SEP
+    }
+
+    /// Encode a generation prompt: `<bos>` + text, left-truncated to
+    /// `max_len` tokens so the most recent context survives.  Always
+    /// returns at least the BOS token.
+    pub fn encode_prompt(&self, text: &str, max_len: usize) -> Vec<i32> {
+        let max_len = max_len.max(1);
+        let mut ids = vec![BOS];
+        ids.extend(self.encode(text));
+        if ids.len() > max_len {
+            ids.drain(..ids.len() - max_len);
+        }
+        ids
+    }
+
     pub fn decode(&self, ids: &[i32]) -> String {
         ids.iter()
             .map(|&i| {
@@ -125,5 +145,20 @@ mod tests {
         let t = toy();
         let ids = t.encode("ba xx yy");
         assert!((t.unk_rate(&ids) - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prompt_encoding_keeps_recent_context() {
+        let t = toy();
+        let ids = t.encode_prompt("ba ce ba", 10);
+        assert_eq!(ids[0], BOS);
+        assert_eq!(ids.len(), 4);
+        // left truncation: the newest tokens survive, BOS may be dropped
+        let ids = t.encode_prompt("ba ce ba ce", 2);
+        assert_eq!(ids.len(), 2);
+        assert_eq!(t.decode(&ids), "ba ce");
+        // degenerate budget still yields something to prefill
+        assert_eq!(t.encode_prompt("", 0), vec![BOS]);
+        assert_eq!(t.eos(), SEP);
     }
 }

@@ -35,6 +35,7 @@ pub mod optim;
 pub mod peft;
 pub mod pruning;
 pub mod runtime;
+pub mod server;
 pub mod tensor;
 pub mod util;
 

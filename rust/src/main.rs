@@ -6,25 +6,34 @@
 //! repro prune     --model gpt-nano --criterion wanda --sparsity 0.5
 //! repro retrain   --model gpt-nano --mode masklora --steps 100
 //! repro reconstruct --model gpt-nano --criterion magnitude --sparsity 0.5
-//! repro eval      --model gpt-nano
+//! repro eval      --model gpt-nano [--from pruned.ptns]
+//! repro serve     --model gpt-nano [--from pruned.ptns] [--port 7777]
+//! repro bench-serve --model gpt-nano              # batched vs sequential decode
 //! repro sweep     --exp table1 [--model gpt-small] [--profile quick|full]
 //! repro tables    [--profile quick]               # regenerate everything
 //! ```
 //!
 //! All state flows through the cache directory (`--out`, default `results/`):
-//! pretrained checkpoints are reused across invocations and sweeps.
+//! pretrained checkpoints are reused across invocations, sweeps and the
+//! serving layer.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicBool;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use perp::config::ExperimentConfig;
 use perp::coordinator::reconstruct::{self, ReconMode};
 use perp::coordinator::sweep::{self, ExpContext};
+use perp::coordinator::Session;
 use perp::peft::Mode;
 use perp::pruning::{Criterion, Pattern};
 use perp::runtime::{default_artifacts_dir, open_backend, Backend, BackendKind};
+use perp::server::{batcher, client, BatchCfg, EngineSpec, ServeState, Server};
 use perp::util::cli::Args;
+use perp::util::json::Json;
 
 fn main() {
     let args = match Args::from_env() {
@@ -53,6 +62,8 @@ fn dispatch(args: &Args) -> Result<()> {
         "retrain" => retrain(args),
         "reconstruct" => reconstruct_cmd(args),
         "eval" => eval_cmd(args),
+        "serve" => serve(args),
+        "bench-serve" => bench_serve(args),
         "sweep" => sweep_cmd(args),
         "tables" => tables(args),
         other => bail!("unknown subcommand {other:?}\n{HELP}"),
@@ -68,7 +79,9 @@ subcommands:
   prune         prune the cached dense model, report ppl collapse
   retrain       prune + retrain with a PERP mode, report recovery
   reconstruct   prune + layer-wise reconstruction (Eq. 1)
-  eval          evaluate the cached dense model (ppl + zero-shot)
+  eval          evaluate the cached dense model, or --from <ckpt> (ppl + zero-shot)
+  serve         HTTP inference server with KV-cache decoding + dynamic batching
+  bench-serve   load-generate against the batcher; write results/bench_serve.json
   sweep         regenerate one paper table/figure (--exp <id>)
   tables        regenerate every table/figure
 
@@ -79,6 +92,7 @@ common flags:
   --artifacts <dir>    artifacts directory (pjrt backend only)       [./artifacts]
   --out <dir>          results + checkpoint cache                    [./results]
   --seed <n>           experiment seed                               [0]
+  --threads <n>        rayon kernel threads (or PERP_THREADS)        [all cores]
   --criterion <c>      magnitude | magnitude-global | wanda | sparsegpt
   --sparsity <s>       0.5 | 50 | 2:4 | 4:8
   --mode <m>           full | biases | ln | biases_ln | head | embed |
@@ -86,6 +100,24 @@ common flags:
   --steps <n>          override step counts
   --exp <id>           fig1 fig2 table1 table2 table3 table4 table5
                        table19 table20 table22 memory
+
+eval flags:
+  --from <ckpt>        evaluate a saved .ptns checkpoint (pruned/retrained/
+                       merged artifacts) instead of the cached dense model
+
+serve flags:
+  --from <ckpt>        checkpoint to serve            [cached dense pretrain]
+  --variants n=p,...   extra hot-loaded variants (name=checkpoint pairs)
+  --host <h>           bind address                   [127.0.0.1]
+  --port <p>           bind port                      [7777]
+  --workers <n>        HTTP worker threads            [serve_slots + 2]
+  --max-batch <n>      concurrent decode streams      [model serve_slots]
+
+bench-serve flags:
+  --requests <n>       total /generate requests per phase    [16]
+  --max-tokens <n>     new tokens per request                [16]
+  --concurrency <n>    concurrent clients (batched phase)    [8]
+  --from <ckpt>        checkpoint to serve                   [cached dense]
 ";
 
 struct Env {
@@ -96,6 +128,8 @@ struct Env {
 }
 
 fn common(args: &Args) -> Result<Env> {
+    // size the kernel pool before the first rayon use anywhere
+    perp::util::threads::configure(args.opt_usize("threads"));
     let artifacts = args
         .opt_str("artifacts")
         .map(PathBuf::from)
@@ -266,12 +300,26 @@ fn reconstruct_cmd(args: &Args) -> Result<()> {
 
 fn eval_cmd(args: &Args) -> Result<()> {
     let env = common(args)?;
+    let from = args.opt_str("from");
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
-    let c = ctx(&env);
-    let s = c.dense_session(env.seed)?;
+    let s = match &from {
+        // evaluate a saved artifact (pruned / retrained / merged) directly
+        Some(path) => {
+            Session::from_checkpoint(env.rt.as_ref(), env.cfg.clone(), env.seed, Path::new(path))?
+        }
+        None => ctx(&env).dense_session(env.seed)?,
+    };
     let ppl = s.eval_ppl_test()?;
     let tasks = s.eval_tasks()?;
-    println!("{}: test ppl {:.3}", env.cfg.model, ppl.ppl);
+    match &from {
+        Some(path) => println!(
+            "{} (from {path}, sparsity {:.3}): test ppl {:.3}",
+            env.cfg.model,
+            s.params.weight_sparsity(&s.mm),
+            ppl.ppl
+        ),
+        None => println!("{}: test ppl {:.3}", env.cfg.model, ppl.ppl),
+    }
     for t in &tasks {
         println!("  {:>6}: {:.1}% ({} items)", t.name, t.accuracy * 100.0, t.items);
     }
@@ -309,5 +357,230 @@ fn tables(args: &Args) -> Result<()> {
     for exp in sweep::EXPERIMENTS {
         run_and_record(&env, exp)?;
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Serving.
+// ---------------------------------------------------------------------------
+
+fn serve(args: &Args) -> Result<()> {
+    let env = common(args)?;
+    let host = args.str("host", "127.0.0.1");
+    let port = args.usize("port", 7777);
+    let workers = args.opt_usize("workers");
+    let max_batch = args.opt_usize("max-batch");
+    let from = args.opt_str("from").map(PathBuf::from);
+    let variants = args.opt_str("variants");
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    let cache_dir = env.out.join("cache");
+    let mut batch = BatchCfg::default();
+    if let Some(mb) = max_batch {
+        batch.max_active = mb;
+    }
+    let state = Arc::new(ServeState::new(
+        env.cfg.model.clone(),
+        env.cfg.clone(),
+        cache_dir.clone(),
+        env.seed,
+    ));
+    // default engine carries the model's name; extra variants ride along
+    let handle = batcher::spawn(EngineSpec {
+        name: env.cfg.model.clone(),
+        cfg: env.cfg.clone(),
+        seed: env.seed,
+        checkpoint: from,
+        cache_dir: cache_dir.clone(),
+        batch: batch.clone(),
+    })?;
+    state.insert(handle)?;
+    if let Some(pairs) = variants {
+        for pair in pairs.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (name, path) = pair
+                .split_once('=')
+                .context("--variants expects name=checkpoint[,name=checkpoint...]")?;
+            let handle = batcher::spawn(EngineSpec {
+                name: name.trim().to_string(),
+                cfg: env.cfg.clone(),
+                seed: env.seed,
+                checkpoint: Some(PathBuf::from(path.trim())),
+                cache_dir: cache_dir.clone(),
+                batch: batch.clone(),
+            })?;
+            state.insert(handle)?;
+        }
+    }
+
+    // every /generate occupies one HTTP worker end-to-end, so the pool must
+    // be at least as wide as the decode batch or the batcher can never fill
+    let slots = env.rt.model(&env.cfg.model)?.cfg.serve_slots;
+    let workers = workers.unwrap_or(slots.max(8) + 2);
+    let server = Server::bind(state, &format!("{host}:{port}"), workers)?;
+    println!("perp-serve listening on http://{}", server.addr);
+    println!("  GET  /healthz /metrics /models");
+    println!("  POST /generate /score /models/load");
+    server.run(Arc::new(AtomicBool::new(false)));
+    Ok(())
+}
+
+struct PhaseStats {
+    tokens: u64,
+    wall_s: f64,
+    tps: f64,
+    mean_ms: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+}
+
+fn bench_phase(
+    addr: std::net::SocketAddr,
+    model: &str,
+    requests: usize,
+    concurrency: usize,
+    max_tokens: usize,
+) -> Result<PhaseStats> {
+    let samples: Mutex<Vec<(f64, u64)>> = Mutex::new(Vec::with_capacity(requests));
+    let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        let samples = &samples;
+        let errors = &errors;
+        for w in 0..concurrency {
+            let share = requests / concurrency + usize::from(w < requests % concurrency);
+            scope.spawn(move || {
+                for i in 0..share {
+                    let body = Json::obj(vec![
+                        ("prompt", Json::Str(format!("the model serves request {w} {i}"))),
+                        ("model", Json::Str(model.to_string())),
+                        ("max_tokens", Json::Num(max_tokens as f64)),
+                    ]);
+                    let t = Instant::now();
+                    match client::post_json(addr, "/generate", &body) {
+                        Ok((200, j)) => {
+                            let toks = j
+                                .get("tokens")
+                                .and_then(Json::as_arr)
+                                .map(|a| a.len() as u64)
+                                .unwrap_or(0);
+                            samples
+                                .lock()
+                                .unwrap()
+                                .push((t.elapsed().as_secs_f64() * 1e3, toks));
+                        }
+                        Ok((code, j)) => {
+                            errors.lock().unwrap().push(format!("status {code}: {j}"))
+                        }
+                        Err(e) => errors.lock().unwrap().push(format!("{e:#}")),
+                    }
+                }
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let errors = errors.into_inner().unwrap();
+    if !errors.is_empty() {
+        bail!("bench requests failed ({} total): {}", errors.len(), errors[0]);
+    }
+    let samples = samples.into_inner().unwrap();
+    let tokens: u64 = samples.iter().map(|&(_, t)| t).sum();
+    let mut lats: Vec<f64> = samples.iter().map(|&(l, _)| l).collect();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| lats[((lats.len() as f64 * p) as usize).min(lats.len() - 1)];
+    Ok(PhaseStats {
+        tokens,
+        wall_s,
+        tps: tokens as f64 / wall_s.max(1e-9),
+        mean_ms: lats.iter().sum::<f64>() / lats.len().max(1) as f64,
+        p50_ms: pct(0.50),
+        p95_ms: pct(0.95),
+    })
+}
+
+fn bench_serve(args: &Args) -> Result<()> {
+    let env = common(args)?;
+    let requests = args.usize("requests", 16).max(1);
+    let max_tokens = args.usize("max-tokens", 16).max(1);
+    let concurrency = args.usize("concurrency", 8).max(2);
+    let from = args.opt_str("from").map(PathBuf::from);
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    let cache_dir = env.out.join("cache");
+    if from.is_none() {
+        // converge/cached once so both engines boot from the same weights
+        ctx(&env).dense_session(env.seed)?;
+    }
+    let state = Arc::new(ServeState::new(
+        "batched".to_string(),
+        env.cfg.clone(),
+        cache_dir.clone(),
+        env.seed,
+    ));
+    for (name, max_active) in [("seq", 1usize), ("batched", usize::MAX)] {
+        let handle = batcher::spawn(EngineSpec {
+            name: name.to_string(),
+            cfg: env.cfg.clone(),
+            seed: env.seed,
+            checkpoint: from.clone(),
+            cache_dir: cache_dir.clone(),
+            batch: BatchCfg {
+                max_active,
+                max_new_default: max_tokens,
+                min_tokens: 1,
+            },
+        })?;
+        state.insert(handle)?;
+    }
+    let server = Server::bind(state, "127.0.0.1:0", concurrency + 2)?;
+    let addr = server.addr;
+    let handle = server.spawn();
+
+    println!("bench-serve: {} requests x {} tokens on {addr}", requests, max_tokens);
+    let seq = bench_phase(addr, "seq", requests, 1, max_tokens)?;
+    let bat = bench_phase(addr, "batched", requests, concurrency, max_tokens)?;
+    handle.stop();
+
+    let speedup = bat.tps / seq.tps.max(1e-9);
+    let mut t = perp::util::bench::Table::new(
+        &format!("serve decode throughput ({}, {requests} reqs)", env.cfg.model),
+        &["phase", "clients", "tokens", "wall", "tok/s", "p50", "p95"],
+    );
+    for (name, clients, p) in [("sequential", 1, &seq), ("batched", concurrency, &bat)] {
+        t.row(vec![
+            name.to_string(),
+            format!("{clients}"),
+            format!("{}", p.tokens),
+            format!("{:.2}s", p.wall_s),
+            format!("{:.1}", p.tps),
+            format!("{:.1}ms", p.p50_ms),
+            format!("{:.1}ms", p.p95_ms),
+        ]);
+    }
+    t.print();
+    println!("batched/sequential speedup: {speedup:.2}x");
+
+    let phase_json = |p: &PhaseStats| {
+        Json::obj(vec![
+            ("tokens", Json::Num(p.tokens as f64)),
+            ("wall_s", Json::Num(p.wall_s)),
+            ("tokens_per_s", Json::Num(p.tps)),
+            ("latency_mean_ms", Json::Num(p.mean_ms)),
+            ("latency_p50_ms", Json::Num(p.p50_ms)),
+            ("latency_p95_ms", Json::Num(p.p95_ms)),
+        ])
+    };
+    let report = Json::obj(vec![
+        ("bench", Json::Str("serve".to_string())),
+        ("model", Json::Str(env.cfg.model.clone())),
+        ("requests", Json::Num(requests as f64)),
+        ("max_tokens", Json::Num(max_tokens as f64)),
+        ("concurrency", Json::Num(concurrency as f64)),
+        ("sequential", phase_json(&seq)),
+        ("batched", phase_json(&bat)),
+        ("speedup", Json::Num(speedup)),
+    ]);
+    let path = env.out.join("bench_serve.json");
+    std::fs::write(&path, report.to_string()).with_context(|| format!("writing {path:?}"))?;
+    println!("wrote {path:?}");
     Ok(())
 }

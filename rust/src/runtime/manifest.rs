@@ -107,6 +107,10 @@ pub struct ModelCfg {
     pub train_batch: usize,
     pub eval_batch: usize,
     pub calib_rows: usize,
+    /// Concurrent KV-cache decode slots of the serving executables
+    /// (`prefill` / `decode_step`) — the lock-step batch width of the
+    /// dynamic request batcher.
+    pub serve_slots: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -227,6 +231,7 @@ impl ModelCfg {
             train_batch: 8,
             eval_batch: 8,
             calib_rows: 512,
+            serve_slots: 8,
         };
         Some(match name {
             "gpt-nano" => ModelCfg {
@@ -534,6 +539,49 @@ impl ModelManifest {
             );
         }
 
+        // ---- serving: KV-cache prefill + single-token decode ----------
+        // `prefill` runs the full padded forward over up to `serve_slots`
+        // prompts and emits last-valid-position logits plus every layer's
+        // K/V planes; `decode_step` advances each active stream by one
+        // token against those caches, returning only the new K/V rows (the
+        // server owns the cache and writes them in place).
+        let slots = cfg.serve_slots;
+        let (nh, dh) = (cfg.n_heads, cfg.d_model / cfg.n_heads);
+        let kv_planes: Vec<IoSpec> = (0..cfg.n_layers)
+            .flat_map(|i| {
+                [
+                    io(format!("k::h{i}"), &[slots, nh, cfg.seq_len, dh]),
+                    io(format!("v::h{i}"), &[slots, nh, cfg.seq_len, dh]),
+                ]
+            })
+            .collect();
+        add(
+            "prefill",
+            base.iter()
+                .cloned()
+                .chain([io_i32("tokens", &[slots, cfg.seq_len]), io_i32("lens", &[slots])])
+                .collect(),
+            std::iter::once(io("logits", &[slots, cfg.vocab]))
+                .chain(kv_planes.iter().cloned())
+                .collect(),
+        );
+        add(
+            "decode_step",
+            base.iter()
+                .cloned()
+                .chain(kv_planes.iter().cloned())
+                .chain([io_i32("tokens", &[slots]), io_i32("pos", &[slots])])
+                .collect(),
+            std::iter::once(io("logits", &[slots, cfg.vocab]))
+                .chain((0..cfg.n_layers).flat_map(|i| {
+                    [
+                        io(format!("knew::h{i}"), &[slots, nh, dh]),
+                        io(format!("vnew::h{i}"), &[slots, nh, dh]),
+                    ]
+                }))
+                .collect(),
+        );
+
         ModelManifest { cfg, params, prunable, taps, adapters, trainable, executables }
     }
 }
@@ -597,6 +645,8 @@ fn parse_model(j: &Json) -> Result<ModelManifest> {
         train_batch: c.req("train_batch").as_usize().unwrap(),
         eval_batch: c.req("eval_batch").as_usize().unwrap(),
         calib_rows: c.req("calib_rows").as_usize().unwrap(),
+        // older aot.py manifests predate the serving executables
+        serve_slots: c.get("serve_slots").and_then(Json::as_usize).unwrap_or(8),
     };
     let params = j
         .req("params")
@@ -702,8 +752,37 @@ mod tests {
         assert!(nano.exec("recon_masklora_128x32").is_ok()); // (d_ff, d) fc
         assert!(nano.exec("recon_masklora_32x128").is_ok()); // (d, d_ff) proj
         assert!(nano.exec("recon_full_32x32").is_ok());
+        assert!(nano.exec("prefill").is_ok());
+        assert!(nano.exec("decode_step").is_ok());
         assert!(nano.exec("nope").is_err());
         assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn serving_executables_carry_kv_planes() {
+        let m = Manifest::builtin();
+        let mm = m.model("gpt-nano").unwrap();
+        let cfg = &mm.cfg;
+        let (slots, nh, dh) = (cfg.serve_slots, cfg.n_heads, cfg.d_head());
+        let p = mm.exec("prefill").unwrap();
+        // params + masks + tokens + lens in; logits + 2 planes per layer out
+        assert_eq!(p.inputs.len(), mm.params.len() + mm.prunable.len() + 2);
+        assert_eq!(p.outputs.len(), 1 + 2 * cfg.n_layers);
+        assert_eq!(p.outputs[0].shape, vec![slots, cfg.vocab]);
+        assert_eq!(p.outputs[1].name, "k::h0");
+        assert_eq!(p.outputs[1].shape, vec![slots, nh, cfg.seq_len, dh]);
+        let d = mm.exec("decode_step").unwrap();
+        // cache planes are inputs; only the new rows come back
+        assert_eq!(
+            d.inputs.len(),
+            mm.params.len() + mm.prunable.len() + 2 * cfg.n_layers + 2
+        );
+        assert_eq!(d.outputs.len(), 1 + 2 * cfg.n_layers);
+        let knew = d.outputs.iter().find(|o| o.name == "knew::h1").unwrap();
+        assert_eq!(knew.shape, vec![slots, nh, dh]);
+        let tok = d.inputs.iter().find(|i| i.name == "tokens").unwrap();
+        assert_eq!(tok.dtype, DType::I32);
+        assert_eq!(tok.shape, vec![slots]);
     }
 
     #[test]

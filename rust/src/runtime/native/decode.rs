@@ -1,0 +1,252 @@
+//! Serving executables: KV-cache `prefill` and single-token `decode_step`.
+//!
+//! `prefill` runs the ordinary padded forward pass over up to
+//! `cfg.serve_slots` prompts, then extracts each layer's K/V head planes
+//! from the tape together with the logits at every stream's last valid
+//! prompt position.  `decode_step` advances the active streams by exactly
+//! one token: it embeds the freshly sampled token at its stream position,
+//! runs the per-layer linears over the *compacted* active rows (so a
+//! batch=1 stream pays batch=1 cost), attends each stream's single query
+//! against its cache rows plus the new K/V, and emits the next-token
+//! logits together with the new K/V rows.  The server owns the cache
+//! tensors and writes those rows in place — the backend stays stateless.
+//!
+//! Every arithmetic loop mirrors the full forward pass' accumulation order
+//! (`graph::forward` / `ops::attention_fwd`), so greedy KV decoding is
+//! bit-identical to re-running the growing context through `forward` —
+//! pinned by `tests/decode_parity.rs` on dense and 50%-sparse gpt-nano.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+use rayon::prelude::*;
+
+use crate::runtime::manifest::ModelManifest;
+use crate::runtime::Outputs;
+use crate::tensor::{linalg, pool, Tensor};
+
+use super::graph::{self, GraphIn, ModeKind};
+use super::ops;
+
+pub(super) fn prefill(
+    mm: &ModelManifest,
+    f32s: &BTreeMap<&str, &Tensor>,
+    i32s: &BTreeMap<&str, (&[usize], &[i32])>,
+) -> Result<Outputs> {
+    let (params, masks) = super::gather_params(mm, f32s);
+    let gi = GraphIn { mm, params: &params, masks: &masks, adapters: None, mode: ModeKind::Subset };
+    let (slots, s, toks) = super::tokens_in(i32s);
+    let (_, lens) = i32s["lens"];
+    let vocab = mm.cfg.vocab;
+
+    let tape = graph::forward(&gi, toks, slots, s, None);
+    let (full_logits, kv) = tape.into_logits_and_kv();
+    let mut lg = pool::zeroed(slots * vocab);
+    for (b, &len) in lens.iter().enumerate() {
+        let len = (len.max(0) as usize).min(s);
+        if len == 0 {
+            continue; // idle slot: zero logits, cache plane is garbage
+        }
+        let src = &full_logits.data()[(b * s + len - 1) * vocab..(b * s + len) * vocab];
+        lg[b * vocab..(b + 1) * vocab].copy_from_slice(src);
+    }
+    pool::recycle(full_logits);
+
+    let mut values = vec![("logits".to_string(), Tensor::new(&[slots, vocab], lg))];
+    for (i, (k, v)) in kv.into_iter().enumerate() {
+        values.push((format!("k::h{i}"), k));
+        values.push((format!("v::h{i}"), v));
+    }
+    Ok(Outputs { values })
+}
+
+pub(super) fn decode_step(
+    mm: &ModelManifest,
+    f32s: &BTreeMap<&str, &Tensor>,
+    i32s: &BTreeMap<&str, (&[usize], &[i32])>,
+) -> Result<Outputs> {
+    let cfg = &mm.cfg;
+    let (nh, dh, d) = (cfg.n_heads, cfg.d_head(), cfg.d_model);
+    let (slots, seq, vocab) = (cfg.serve_slots, cfg.seq_len, cfg.vocab);
+    let (params, masks) = super::gather_params(mm, f32s);
+    let gi = GraphIn { mm, params: &params, masks: &masks, adapters: None, mode: ModeKind::Subset };
+    let (_, toks) = i32s["tokens"];
+    let (_, pos) = i32s["pos"];
+
+    // compact the active streams: row r of every intermediate below belongs
+    // to stream `active[r]`, so idle slots cost nothing
+    let active: Vec<usize> =
+        (0..slots).filter(|&b| pos[b] >= 0 && (pos[b] as usize) < seq).collect();
+
+    let mut out_logits = pool::zeroed(slots * vocab);
+    let mut knew: Vec<Vec<f32>> =
+        (0..cfg.n_layers).map(|_| pool::zeroed(slots * nh * dh)).collect();
+    let mut vnew: Vec<Vec<f32>> =
+        (0..cfg.n_layers).map(|_| pool::zeroed(slots * nh * dh)).collect();
+
+    if !active.is_empty() {
+        let na = active.len();
+        // x = E[token] + P[pos], one row per active stream
+        let embt = gi.p("embed_tokens");
+        let post = gi.p("embed_pos");
+        let mut x = pool::zeroed(na * d);
+        for (r, &b) in active.iter().enumerate() {
+            let tok = (toks[b].max(0) as usize).min(vocab - 1);
+            let p = pos[b] as usize;
+            let erow = &embt.data()[tok * d..(tok + 1) * d];
+            let prow = &post.data()[p * d..(p + 1) * d];
+            for j in 0..d {
+                x[r * d + j] = erow[j] + prow[j];
+            }
+        }
+        let mut cur = Tensor::new(&[na, d], x);
+
+        for i in 0..cfg.n_layers {
+            let pfx = format!("h{i}_");
+            let h1 = norm_apply(&gi, &format!("{pfx}ln1"), &cur);
+            let q = linear_apply(&gi, &format!("{pfx}attn_q"), &h1);
+            let k = linear_apply(&gi, &format!("{pfx}attn_k"), &h1);
+            let v = linear_apply(&gi, &format!("{pfx}attn_v"), &h1);
+            pool::recycle(h1);
+            // the new K/V rows, head-major — both the cache-delta outputs
+            // and this step's self-attention contribution
+            for (r, &b) in active.iter().enumerate() {
+                for hd in 0..nh {
+                    let src = r * d + hd * dh;
+                    let dst = b * nh * dh + hd * dh;
+                    knew[i][dst..dst + dh].copy_from_slice(&k.data()[src..src + dh]);
+                    vnew[i][dst..dst + dh].copy_from_slice(&v.data()[src..src + dh]);
+                }
+            }
+            let kc = f32s[format!("k::h{i}").as_str()];
+            let vc = f32s[format!("v::h{i}").as_str()];
+            let merged = attend(&q, &k, &v, kc, vc, &active, pos, nh, dh, seq);
+            pool::recycle(q);
+            pool::recycle(k);
+            pool::recycle(v);
+            let o = linear_apply(&gi, &format!("{pfx}attn_o"), &merged);
+            pool::recycle(merged);
+            let res_mid = cur.add(&o);
+            pool::recycle(cur);
+            pool::recycle(o);
+            let h2 = norm_apply(&gi, &format!("{pfx}ln2"), &res_mid);
+            let fc = linear_apply(&gi, &format!("{pfx}mlp_fc"), &h2);
+            pool::recycle(h2);
+            let g = ops::gelu(&fc);
+            pool::recycle(fc);
+            let proj = linear_apply(&gi, &format!("{pfx}mlp_proj"), &g);
+            pool::recycle(g);
+            cur = res_mid.add(&proj);
+            pool::recycle(res_mid);
+            pool::recycle(proj);
+        }
+
+        let hf = norm_apply(&gi, "final_ln", &cur);
+        pool::recycle(cur);
+        let logits = linalg::matmul_nt(&hf, gi.p("head_w"));
+        pool::recycle(hf);
+        for (r, &b) in active.iter().enumerate() {
+            out_logits[b * vocab..(b + 1) * vocab]
+                .copy_from_slice(&logits.data()[r * vocab..(r + 1) * vocab]);
+        }
+        pool::recycle(logits);
+    }
+
+    let mut values = vec![("logits".to_string(), Tensor::new(&[slots, vocab], out_logits))];
+    for (i, (kn, vn)) in knew.into_iter().zip(vnew).enumerate() {
+        values.push((format!("knew::h{i}"), Tensor::new(&[slots, nh, dh], kn)));
+        values.push((format!("vnew::h{i}"), Tensor::new(&[slots, nh, dh], vn)));
+    }
+    Ok(Outputs { values })
+}
+
+/// Norm forward without keeping the backward cache.
+fn norm_apply(gi: &GraphIn, prefix: &str, x: &Tensor) -> Tensor {
+    let scale = gi.p(&format!("{prefix}_scale"));
+    if gi.mm.cfg.norm == "layernorm" {
+        let (y, cache) = ops::layernorm_fwd(x, scale, gi.p(&format!("{prefix}_bias")));
+        cache.recycle();
+        y
+    } else {
+        let (y, cache) = ops::rmsnorm_fwd(x, scale);
+        cache.recycle();
+        y
+    }
+}
+
+/// Plain masked linear (the decode path always runs merged weights —
+/// adapters are folded before serving).
+fn linear_apply(gi: &GraphIn, base: &str, x: &Tensor) -> Tensor {
+    let wname = format!("{base}_w");
+    let wm = gi.p(&wname).hadamard(gi.m(&wname));
+    let mut y = linalg::matmul_nt(x, &wm);
+    pool::recycle(wm);
+    if gi.mm.cfg.use_bias {
+        ops::add_bias(&mut y, gi.p(&format!("{base}_b")));
+    }
+    y
+}
+
+/// One query per active stream against its cache rows plus the freshly
+/// computed K/V at position `pos[b]`.  Mirrors `ops::attention_fwd`'s
+/// score/softmax/accumulation order exactly so KV decoding stays
+/// bit-identical to the full forward pass.
+#[allow(clippy::too_many_arguments)]
+fn attend(
+    q: &Tensor,
+    knew: &Tensor,
+    vnew: &Tensor,
+    kc: &Tensor,
+    vc: &Tensor,
+    active: &[usize],
+    pos: &[i32],
+    nh: usize,
+    dh: usize,
+    seq: usize,
+) -> Tensor {
+    let na = active.len();
+    let d = nh * dh;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = pool::zeroed(na * d);
+    let (qd, knd, vnd) = (q.data(), knew.data(), vnew.data());
+    let (kcd, vcd) = (kc.data(), vc.data());
+    out.par_chunks_mut(d).enumerate().for_each(|(r, orow)| {
+        let b = active[r];
+        let p = pos[b] as usize; // cached rows 0..p are valid; self at j == p
+        for hd in 0..nh {
+            let qv = &qd[r * d + hd * dh..r * d + (hd + 1) * dh];
+            let newrow = r * d + hd * dh..r * d + (hd + 1) * dh;
+            let cbase = b * nh * seq * dh + hd * seq * dh;
+            let mut row = vec![0.0f32; p + 1];
+            let mut mx = f32::NEG_INFINITY;
+            for (j, rj) in row.iter_mut().enumerate() {
+                let kj: &[f32] = if j < p {
+                    &kcd[cbase + j * dh..cbase + (j + 1) * dh]
+                } else {
+                    &knd[newrow.clone()]
+                };
+                let dot: f32 = qv.iter().zip(kj).map(|(&a, &c)| a * c).sum();
+                *rj = dot * scale;
+                mx = mx.max(*rj);
+            }
+            let mut denom = 0.0f32;
+            for rj in row.iter_mut() {
+                *rj = (*rj - mx).exp();
+                denom += *rj;
+            }
+            let orow_h = &mut orow[hd * dh..(hd + 1) * dh];
+            for (j, &rj) in row.iter().enumerate() {
+                let pj = rj / denom;
+                let vj: &[f32] = if j < p {
+                    &vcd[cbase + j * dh..cbase + (j + 1) * dh]
+                } else {
+                    &vnd[newrow.clone()]
+                };
+                for (o, &vv) in orow_h.iter_mut().zip(vj) {
+                    *o += pj * vv;
+                }
+            }
+        }
+    });
+    Tensor::new(&[na, d], out)
+}

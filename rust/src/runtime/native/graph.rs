@@ -13,7 +13,7 @@
 use std::collections::{BTreeMap, HashSet};
 
 use crate::runtime::manifest::ModelManifest;
-use crate::tensor::{linalg, Tensor};
+use crate::tensor::{linalg, pool, Tensor};
 
 use super::ops;
 
@@ -53,13 +53,13 @@ pub struct GraphIn<'a> {
 }
 
 impl<'a> GraphIn<'a> {
-    fn p(&self, name: &str) -> &'a Tensor {
+    pub(super) fn p(&self, name: &str) -> &'a Tensor {
         self.params
             .get(name)
             .copied()
             .unwrap_or_else(|| panic!("graph: missing parameter {name:?}"))
     }
-    fn m(&self, name: &str) -> &'a Tensor {
+    pub(super) fn m(&self, name: &str) -> &'a Tensor {
         self.masks
             .get(name)
             .copied()
@@ -91,6 +91,18 @@ struct LinTape {
     u: Option<Tensor>,
 }
 
+impl LinTape {
+    fn recycle(self) {
+        pool::recycle(self.wm);
+        if let Some(z) = self.z {
+            pool::recycle(z);
+        }
+        if let Some(u) = self.u {
+            pool::recycle(u);
+        }
+    }
+}
+
 struct BlockTape {
     ln1: ops::NormCache,
     h1: Tensor,
@@ -119,6 +131,60 @@ pub struct Tape {
     h_final: Tensor,
     /// (B*S, V)
     pub logits: Tensor,
+}
+
+impl Tape {
+    /// Consume the tape into (full logits, per-layer (K, V) head planes) —
+    /// the serving prefill's cache extraction.  The K/V tensors are
+    /// (B, H, S, dh), exactly the `prefill` output layout; every other
+    /// activation buffer is returned to the thread-local pool.
+    pub fn into_logits_and_kv(self) -> (Tensor, Vec<(Tensor, Tensor)>) {
+        let mut kv = Vec::with_capacity(self.blocks.len());
+        for bt in self.blocks {
+            let BlockTape {
+                ln1,
+                h1,
+                q,
+                k,
+                v,
+                qh,
+                kh,
+                vh,
+                probs,
+                attn_merged,
+                o,
+                ln2,
+                h2,
+                fc,
+                fc_pre,
+                gelu_out,
+                proj,
+            } = bt;
+            ln1.recycle();
+            ln2.recycle();
+            for lt in [q, k, v, o, fc, proj] {
+                lt.recycle();
+            }
+            for t in [h1, qh, probs, attn_merged, h2, fc_pre, gelu_out] {
+                pool::recycle(t);
+            }
+            kv.push((kh, vh));
+        }
+        self.fln.recycle();
+        pool::recycle(self.h_final);
+        (self.logits, kv)
+    }
+
+    /// Return every tape buffer to the thread-local pool — for callers that
+    /// have fully consumed the activations (train and eval steps).
+    pub fn recycle(self) {
+        let (logits, kv) = self.into_logits_and_kv();
+        pool::recycle(logits);
+        for (k, v) in kv {
+            pool::recycle(k);
+            pool::recycle(v);
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -444,6 +510,7 @@ mod tests {
             train_batch: 2,
             eval_batch: 2,
             calib_rows: 4,
+            serve_slots: 4,
         };
         ModelManifest::builtin(cfg)
     }

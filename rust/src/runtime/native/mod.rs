@@ -2,15 +2,21 @@
 //!
 //! Implements every graph the manifest names — eval/score (plain and
 //! adapter-active), the per-mode train steps (forward + hand-rolled reverse
-//! pass + AdamW), calibration Grams, reconstruction capture, and the
-//! per-shape layer-wise reconstruction steps — directly on host tensors.
+//! pass + AdamW), calibration Grams, reconstruction capture, the per-shape
+//! layer-wise reconstruction steps, and the serving pair
+//! (`prefill`/`decode_step`, see [`decode`]) — directly on host tensors.
 //! Semantics are pinned to `python/compile/kernels/ref.py` by golden-fixture
 //! and finite-difference tests.
+//!
+//! Per-step activation buffers are recycled through the thread-local
+//! [`crate::tensor::pool`], so steady-state train/decode loops run without
+//! allocator churn (`PERP_TAPE_POOL=0` disables reuse).
 //!
 //! "Compilation" is input validation against the manifest's `ExecSpec`; the
 //! prepared set backs [`Backend::compiled_count`] so cache-behaviour tests
 //! and benches read the same way as on the PJRT backend.
 
+pub mod decode;
 pub mod graph;
 pub mod ops;
 
@@ -21,7 +27,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::runtime::manifest::{is_lora_mode, split_adapter_name, DType, Manifest, ModelManifest};
 use crate::runtime::{Backend, Feed, Outputs};
-use crate::tensor::{linalg, Tensor};
+use crate::tensor::{linalg, pool, Tensor};
 
 use graph::{GraphIn, ModeKind};
 
@@ -121,6 +127,8 @@ impl Backend for NativeBackend {
             "score" | "score_lora" => score(mm, &f32s, &i32s, exec.ends_with("_lora")),
             "calib_stats" => capture(mm, &f32s, &i32s, true),
             "capture_inputs" => capture(mm, &f32s, &i32s, false),
+            "prefill" => decode::prefill(mm, &f32s, &i32s),
+            "decode_step" => decode::decode_step(mm, &f32s, &i32s),
             e if e.starts_with("train_") => {
                 train(mm, &f32s, &i32s, e.strip_prefix("train_").unwrap())
             }
@@ -208,6 +216,7 @@ fn eval_loss(
     let (b, s, toks) = tokens_in(i32s);
     let tape = graph::forward(&gi, toks, b, s, None);
     let (sum, count) = ops::ce_sums(&tape.logits, toks, b, s);
+    tape.recycle();
     Ok(Outputs {
         values: vec![
             ("loss_sum".to_string(), Tensor::scalar(sum as f32)),
@@ -234,6 +243,7 @@ fn score(
     let (b, s, toks) = tokens_in(i32s);
     let tape = graph::forward(&gi, toks, b, s, None);
     let (scores, counts) = ops::sequence_scores(&tape.logits, toks, f32s["tmask"], b, s);
+    tape.recycle();
     Ok(Outputs {
         values: vec![
             ("scores".to_string(), Tensor::new(&[b], scores)),
@@ -254,7 +264,7 @@ fn capture(
     let gi = GraphIn { mm, params: &params, masks: &masks, adapters: None, mode: ModeKind::Subset };
     let (b, s, toks) = tokens_in(i32s);
     let mut cap = Vec::new();
-    graph::forward(&gi, toks, b, s, Some(&mut cap));
+    graph::forward(&gi, toks, b, s, Some(&mut cap)).recycle();
     let values = cap
         .into_iter()
         .map(|(tap, x)| {
@@ -300,6 +310,8 @@ fn train(
     let (loss, dlogits) = ops::ce_grad(&tape.logits, toks, b, s);
     let wants: HashSet<String> = leaves.iter().cloned().collect();
     let mut grads = graph::backward(&gi, &tape, toks, &dlogits, wants);
+    tape.recycle();
+    pool::recycle(dlogits);
 
     let mut o_vals = Vec::with_capacity(leaves.len());
     let mut m_vals = Vec::with_capacity(leaves.len());
@@ -319,6 +331,7 @@ fn train(
         let m_in = f32s[format!("om::{leaf}").as_str()];
         let v_in = f32s[format!("ov::{leaf}").as_str()];
         let (p2, m2, v2) = ops::adamw(p, &g, m_in, v_in, step, lr);
+        pool::recycle(g);
         o_vals.push((format!("o::{leaf}"), p2));
         m_vals.push((format!("om::{leaf}"), m2));
         v_vals.push((format!("ov::{leaf}"), v2));
@@ -341,6 +354,7 @@ fn recon_loss_grad(y: &Tensor, y0: &Tensor) -> (f32, Tensor) {
     let diff = y.sub(y0);
     let loss = diff.sq_norm() / rows;
     let dy = diff.scale(2.0 / rows as f32);
+    pool::recycle(diff);
     (loss as f32, dy)
 }
 
@@ -354,13 +368,21 @@ fn recon_masklora(mm: &ModelManifest, f32s: &BTreeMap<&str, &Tensor>) -> Result<
     let wm = w.hadamard(mask);
     let ba = linalg::matmul(bmat, a);
     let z = wm.zip(&ba.hadamard(mask), |p, q| p + scale * q);
+    pool::recycle(wm);
+    pool::recycle(ba);
     let y = linalg::matmul_nt(x, &z);
+    pool::recycle(z);
     let (loss, dy) = recon_loss_grad(&y, y0);
+    pool::recycle(y);
     let dz = linalg::matmul_tn(&dy, x);
+    pool::recycle(dy);
     let (da, db) = ops::adapter_vjp(&dz, mask, a, bmat, scale);
+    pool::recycle(dz);
 
     let (a2, ma2, va2) = ops::adamw(a, &da, f32s["om::a"], f32s["ov::a"], step, lr);
     let (b2, mb2, vb2) = ops::adamw(bmat, &db, f32s["om::b"], f32s["ov::b"], step, lr);
+    pool::recycle(da);
+    pool::recycle(db);
     Ok(Outputs {
         values: vec![
             ("o::a".to_string(), a2),
@@ -381,10 +403,16 @@ fn recon_full(f32s: &BTreeMap<&str, &Tensor>) -> Result<Outputs> {
 
     let wm = w.hadamard(mask);
     let y = linalg::matmul_nt(x, &wm);
+    pool::recycle(wm);
     let (loss, dy) = recon_loss_grad(&y, y0);
+    pool::recycle(y);
     // masked-matmul VJP: pruned entries get zero gradient and never move
-    let dw = linalg::matmul_tn(&dy, x).hadamard(mask);
+    let dzt = linalg::matmul_tn(&dy, x);
+    pool::recycle(dy);
+    let dw = dzt.hadamard(mask);
+    pool::recycle(dzt);
     let (w2, mw2, vw2) = ops::adamw(w, &dw, f32s["om::w"], f32s["ov::w"], step, lr);
+    pool::recycle(dw);
     Ok(Outputs {
         values: vec![
             ("o::w".to_string(), w2),
@@ -506,6 +534,35 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn pool_reuse_is_invisible_to_results() {
+        let (be, params, masks) = nano_feed_state(11);
+        let mm = be.model("gpt-nano").unwrap().clone();
+        let b = mm.cfg.eval_batch;
+        let s = mm.cfg.seq_len;
+        let mut rng = Rng::new(12);
+        let tokens: Vec<i32> =
+            (0..b * s).map(|_| rng.below(mm.cfg.vocab as u64) as i32).collect();
+        let shape = [b, s];
+        let run = || {
+            let mut feed = Feed::new().ints("tokens", &shape, &tokens);
+            for (n, t) in params.iter().chain(masks.iter()) {
+                feed = feed.owned_key(n.clone(), t);
+            }
+            be.run("gpt-nano", "eval_loss", &feed).unwrap().scalar("loss_sum")
+        };
+        let prev = pool::set_enabled(false);
+        let cold = run();
+        pool::set_enabled(true);
+        let warm1 = run(); // populates the pool from its recycled tape
+        let warm2 = run(); // runs on reused buffers
+        let (hits, _) = pool::stats();
+        assert!(hits > 0, "warm run should reuse tape buffers");
+        assert_eq!(cold.to_bits(), warm1.to_bits(), "pooling must not change results");
+        assert_eq!(cold.to_bits(), warm2.to_bits(), "reused buffers must be clean");
+        pool::set_enabled(prev);
     }
 
     #[test]

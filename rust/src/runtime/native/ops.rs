@@ -9,7 +9,7 @@
 
 use rayon::prelude::*;
 
-use crate::tensor::{linalg, Tensor};
+use crate::tensor::{linalg, pool, Tensor};
 
 pub const NORM_EPS: f32 = 1e-5;
 /// AdamW defaults mirrored from ref.adamw (wd = 0 in every train graph).
@@ -78,11 +78,19 @@ pub struct NormCache {
     pub inv: Vec<f32>,
 }
 
+impl NormCache {
+    /// Return the cached buffers to the thread-local pool.
+    pub fn recycle(self) {
+        pool::recycle(self.saved);
+        pool::give(self.inv);
+    }
+}
+
 pub fn layernorm_fwd(x: &Tensor, scale: &Tensor, bias: &Tensor) -> (Tensor, NormCache) {
     let (n, d) = (x.rows(), x.cols());
-    let mut y = vec![0.0f32; n * d];
-    let mut xhat = vec![0.0f32; n * d];
-    let mut inv = vec![0.0f32; n];
+    let mut y = pool::zeroed(n * d);
+    let mut xhat = pool::zeroed(n * d);
+    let mut inv = pool::zeroed(n);
     let (sd, bd) = (scale.data(), bias.data());
     y.par_chunks_mut(d)
         .zip(xhat.par_chunks_mut(d))
@@ -117,7 +125,7 @@ pub fn layernorm_bwd(
     let (n, d) = (dy.rows(), dy.cols());
     let sd = scale.data();
     let xh = cache.saved.data();
-    let mut dx = vec![0.0f32; n * d];
+    let mut dx = pool::zeroed(n * d);
     dx.par_chunks_mut(d).enumerate().for_each(|(i, dxrow)| {
         let dyrow = &dy.data()[i * d..(i + 1) * d];
         let xrow = &xh[i * d..(i + 1) * d];
@@ -162,8 +170,8 @@ pub fn layernorm_bwd(
 
 pub fn rmsnorm_fwd(x: &Tensor, scale: &Tensor) -> (Tensor, NormCache) {
     let (n, d) = (x.rows(), x.cols());
-    let mut y = vec![0.0f32; n * d];
-    let mut inv = vec![0.0f32; n];
+    let mut y = pool::zeroed(n * d);
+    let mut inv = pool::zeroed(n);
     let sd = scale.data();
     y.par_chunks_mut(d).zip(inv.par_iter_mut()).enumerate().for_each(|(i, (yrow, invi))| {
         let row = &x.data()[i * d..(i + 1) * d];
@@ -187,7 +195,7 @@ pub fn rmsnorm_bwd(
     let (n, d) = (dy.rows(), dy.cols());
     let sd = scale.data();
     let xd = cache.saved.data();
-    let mut dx = vec![0.0f32; n * d];
+    let mut dx = pool::zeroed(n * d);
     dx.par_chunks_mut(d).enumerate().for_each(|(i, dxrow)| {
         let dyrow = &dy.data()[i * d..(i + 1) * d];
         let xrow = &xd[i * d..(i + 1) * d];
@@ -228,7 +236,7 @@ pub fn split_heads(x: &Tensor, b: usize, s: usize, h: usize, dh: usize) -> Tenso
     let d = h * dh;
     assert_eq!(x.shape(), &[b * s, d]);
     let xd = x.data();
-    let mut out = vec![0.0f32; b * h * s * dh];
+    let mut out = pool::zeroed(b * h * s * dh);
     out.par_chunks_mut(s * dh).enumerate().for_each(|(bh, chunk)| {
         let (bi, hi) = (bh / h, bh % h);
         for si in 0..s {
@@ -243,7 +251,7 @@ pub fn merge_heads(x: &Tensor, b: usize, s: usize, h: usize, dh: usize) -> Tenso
     let d = h * dh;
     assert_eq!(x.shape(), &[b, h, s, dh]);
     let xd = x.data();
-    let mut out = vec![0.0f32; b * s * d];
+    let mut out = pool::zeroed(b * s * d);
     out.par_chunks_mut(d).enumerate().for_each(|(bs, row)| {
         let (bi, si) = (bs / s, bs % s);
         for hi in 0..h {
@@ -264,8 +272,8 @@ pub fn attention_fwd(q: &Tensor, k: &Tensor, v: &Tensor) -> (Tensor, Tensor) {
     assert_eq!(k.shape(), q.shape());
     assert_eq!(v.shape(), q.shape());
     let scale = 1.0 / (dh as f32).sqrt();
-    let mut out = vec![0.0f32; b * h * s * dh];
-    let mut probs = vec![0.0f32; b * h * s * s];
+    let mut out = pool::zeroed(b * h * s * dh);
+    let mut probs = pool::zeroed(b * h * s * s);
     out.par_chunks_mut(s * dh)
         .zip(probs.par_chunks_mut(s * s))
         .enumerate()
@@ -317,9 +325,9 @@ pub fn attention_bwd(
 ) -> (Tensor, Tensor, Tensor) {
     let (b, h, s, dh) = dims4(q);
     let scale = 1.0 / (dh as f32).sqrt();
-    let mut dq = vec![0.0f32; b * h * s * dh];
-    let mut dk = vec![0.0f32; b * h * s * dh];
-    let mut dv = vec![0.0f32; b * h * s * dh];
+    let mut dq = pool::zeroed(b * h * s * dh);
+    let mut dk = pool::zeroed(b * h * s * dh);
+    let mut dv = pool::zeroed(b * h * s * dh);
     dq.par_chunks_mut(s * dh)
         .zip(dk.par_chunks_mut(s * dh))
         .zip(dv.par_chunks_mut(s * dh))
@@ -390,7 +398,7 @@ pub fn embed_fwd(tokens: &[i32], b: usize, s: usize, emb: &Tensor, pos: &Tensor)
     let d = emb.cols();
     let vocab = emb.rows();
     assert_eq!(tokens.len(), b * s);
-    let mut out = vec![0.0f32; b * s * d];
+    let mut out = pool::zeroed(b * s * d);
     out.par_chunks_mut(d).enumerate().for_each(|(bs, row)| {
         let si = bs % s;
         let tok = (tokens[bs].max(0) as usize).min(vocab - 1);
@@ -406,7 +414,7 @@ pub fn embed_fwd(tokens: &[i32], b: usize, s: usize, emb: &Tensor, pos: &Tensor)
 /// Scatter-add gradient into the token embedding table.
 pub fn embed_tokens_bwd(tokens: &[i32], dx: &Tensor, vocab: usize) -> Tensor {
     let d = dx.cols();
-    let mut out = vec![0.0f32; vocab * d];
+    let mut out = pool::zeroed(vocab * d);
     for (bs, &t) in tokens.iter().enumerate() {
         let tok = (t.max(0) as usize).min(vocab - 1);
         let src = &dx.data()[bs * d..(bs + 1) * d];
@@ -465,7 +473,7 @@ pub fn ce_grad(logits: &Tensor, tokens: &[i32], b: usize, s: usize) -> (f32, Ten
     let v = logits.cols();
     let count = (b * (s - 1)) as f32;
     let ld = logits.data();
-    let mut dl = vec![0.0f32; b * s * v];
+    let mut dl = pool::zeroed(b * s * v);
     let loss_sum: f64 = dl
         .par_chunks_mut(v)
         .enumerate()
@@ -568,9 +576,9 @@ pub fn adamw(
     let bc1 = 1.0 - ADAM_BETA1.powf(step);
     let bc2 = 1.0 - ADAM_BETA2.powf(step);
     let n = p.numel();
-    let mut p2 = vec![0.0f32; n];
-    let mut m2 = vec![0.0f32; n];
-    let mut v2 = vec![0.0f32; n];
+    let mut p2 = pool::zeroed(n);
+    let mut m2 = pool::zeroed(n);
+    let mut v2 = pool::zeroed(n);
     let (pd, gd, md, vd) = (p.data(), g.data(), m.data(), v.data());
     p2.par_iter_mut()
         .zip(m2.par_iter_mut())

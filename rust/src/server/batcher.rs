@@ -1,0 +1,605 @@
+//! The dynamic request batcher: one engine thread per served model variant.
+//!
+//! HTTP workers hand [`Work`] items to the engine over a channel; the
+//! engine owns the backend, the session (weights/masks/tokenizer) and the
+//! per-stream [`KvCache`] slots, and runs the serving loop:
+//!
+//! 1. **intake** — drain queued requests (blocking only when fully idle);
+//! 2. **admit** — assign free KV slots to waiting requests (up to
+//!    `max_active`) and run one padded `prefill` batch over the wave;
+//! 3. **decode** — lock-step every active stream one token forward through
+//!    `decode_step`, writing the returned K/V rows into each stream's slot
+//!    and early-exiting streams on EOS / length / cache-full.
+//!
+//! New requests join between decode steps (continuous batching), so a
+//! long-running stream never blocks admission, and a `max_active = 1`
+//! engine degrades to the sequential baseline `bench-serve` compares
+//! against.  The engine thread is the only place model state lives —
+//! backends keep their interior-mutability (`!Sync`) and the HTTP layer
+//! stays a thin codec.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::sweep::ExpContext;
+use crate::coordinator::Session;
+use crate::data::tokenizer::PAD;
+use crate::data::Tokenizer;
+use crate::eval::base_feed;
+use crate::runtime::{default_artifacts_dir, open_backend, BackendKind};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::kv::{self, KvCache};
+
+// ---------------------------------------------------------------------------
+// Requests and results.
+// ---------------------------------------------------------------------------
+
+pub struct GenRequest {
+    pub prompt: String,
+    /// Requested new tokens; clamped to [1, seq_len - prompt_len].
+    pub max_new: Option<usize>,
+    /// 0 = greedy argmax; > 0 = softmax sampling at this temperature.
+    pub temperature: f32,
+    pub reply: Sender<GenResult>,
+}
+
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    pub completion: String,
+    pub tokens: Vec<i32>,
+    pub prompt_tokens: usize,
+    /// "eos" | "length"
+    pub finish: &'static str,
+}
+
+#[derive(Debug, Clone)]
+pub struct ScoreResult {
+    /// Mean next-token NLL over the scored positions.
+    pub nll: f64,
+    pub ppl: f64,
+    pub tokens: usize,
+}
+
+pub enum Work {
+    Gen(GenRequest),
+    Score { text: String, reply: Sender<Result<ScoreResult, String>> },
+    Shutdown,
+}
+
+// ---------------------------------------------------------------------------
+// Engine configuration, metrics and handle.
+// ---------------------------------------------------------------------------
+
+/// Batcher knobs (documented in rust/README.md § Serving).
+#[derive(Debug, Clone)]
+pub struct BatchCfg {
+    /// Concurrent decode streams; clamped to the model's `serve_slots`.
+    /// 1 = the sequential (batch = 1) baseline.
+    pub max_active: usize,
+    /// Default per-request new-token budget when the client sends none.
+    pub max_new_default: usize,
+    /// EOS sampled before this many emitted tokens is kept as a regular
+    /// token, so completions are never empty.
+    pub min_tokens: usize,
+}
+
+impl Default for BatchCfg {
+    fn default() -> Self {
+        BatchCfg { max_active: usize::MAX, max_new_default: 16, min_tokens: 1 }
+    }
+}
+
+#[derive(Default)]
+pub struct EngineMetrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub gen_tokens: AtomicU64,
+    pub prefills: AtomicU64,
+    pub decode_steps: AtomicU64,
+    /// Requests accepted but not yet assigned a KV slot.
+    pub queued: AtomicU64,
+    pub active: AtomicU64,
+    pub peak_active: AtomicU64,
+}
+
+/// Static facts about a spawned engine (for `/models` and `/healthz`).
+#[derive(Debug, Clone)]
+pub struct EngineInfo {
+    pub total_params: usize,
+    pub weight_sparsity: f64,
+    pub slots: usize,
+    pub max_active: usize,
+    pub seq_len: usize,
+    pub kv_bytes: usize,
+    pub checkpoint: Option<String>,
+}
+
+/// Everything needed to bring one model variant up.
+pub struct EngineSpec {
+    pub name: String,
+    pub cfg: ExperimentConfig,
+    pub seed: u64,
+    /// Checkpoint to serve; `None` falls back to the cached dense pretrain
+    /// (pretraining on cache miss, exactly like the sweeps).
+    pub checkpoint: Option<PathBuf>,
+    /// Dense-checkpoint cache directory (`<out>/cache`).
+    pub cache_dir: PathBuf,
+    pub batch: BatchCfg,
+}
+
+pub struct EngineHandle {
+    pub name: String,
+    pub model: String,
+    pub metrics: Arc<EngineMetrics>,
+    pub info: EngineInfo,
+    tx: Mutex<Sender<Work>>,
+}
+
+impl EngineHandle {
+    fn submit(&self, w: Work) -> Result<()> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(w)
+            .map_err(|_| anyhow!("engine thread is gone"))
+    }
+
+    /// Enqueue a generation request and block until its stream completes.
+    pub fn generate(
+        &self,
+        prompt: String,
+        max_new: Option<usize>,
+        temperature: f32,
+    ) -> Result<GenResult> {
+        let (tx, rx) = mpsc::channel();
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.metrics.queued.fetch_add(1, Ordering::Relaxed);
+        self.submit(Work::Gen(GenRequest { prompt, max_new, temperature, reply: tx }))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped the request"))
+    }
+
+    /// Score a text's per-token NLL through the `score` executable.
+    pub fn score(&self, text: String) -> Result<ScoreResult> {
+        let (tx, rx) = mpsc::channel();
+        self.submit(Work::Score { text, reply: tx })?;
+        rx.recv()
+            .map_err(|_| anyhow!("engine dropped the request"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.submit(Work::Shutdown);
+    }
+}
+
+/// Spawn the engine thread and block until its session is ready (the dense
+/// fallback may pretrain on a cache miss, so this can take a while on the
+/// first boot of a model).
+pub fn spawn(spec: EngineSpec) -> Result<Arc<EngineHandle>> {
+    let (work_tx, work_rx) = mpsc::channel::<Work>();
+    let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<EngineInfo, String>>();
+    let metrics = Arc::new(EngineMetrics::default());
+    let thread_metrics = metrics.clone();
+    let name = spec.name.clone();
+    let model = spec.cfg.model.clone();
+    thread::Builder::new()
+        .name(format!("engine-{name}"))
+        .spawn(move || engine_main(spec, work_rx, ready_tx, thread_metrics))?;
+    let info = ready_rx
+        .recv()
+        .map_err(|_| anyhow!("engine thread died during startup"))?
+        .map_err(|e| anyhow!("engine startup failed: {e}"))?;
+    Ok(Arc::new(EngineHandle { name, model, metrics, info, tx: Mutex::new(work_tx) }))
+}
+
+// ---------------------------------------------------------------------------
+// The engine thread.
+// ---------------------------------------------------------------------------
+
+fn engine_main(
+    spec: EngineSpec,
+    rx: Receiver<Work>,
+    ready: Sender<std::result::Result<EngineInfo, String>>,
+    metrics: Arc<EngineMetrics>,
+) {
+    let kind = match BackendKind::parse(&spec.cfg.backend) {
+        Ok(k) => k,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let backend = match open_backend(kind, &default_artifacts_dir()) {
+        Ok(b) => b,
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    let session = match &spec.checkpoint {
+        Some(path) => Session::from_checkpoint(backend.as_ref(), spec.cfg.clone(), spec.seed, path),
+        None => ExpContext::new(backend.as_ref(), spec.cfg.clone(), spec.cache_dir.clone())
+            .dense_session(spec.seed),
+    };
+    let s = match session {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    let cfg = &s.mm.cfg;
+    let max_active = spec.batch.max_active.clamp(1, cfg.serve_slots);
+    let info = EngineInfo {
+        total_params: s.mm.total_params(),
+        weight_sparsity: s.params.weight_sparsity(&s.mm),
+        slots: cfg.serve_slots,
+        max_active,
+        seq_len: cfg.seq_len,
+        kv_bytes: kv::kv_bytes(cfg),
+        checkpoint: spec.checkpoint.as_ref().map(|p| p.display().to_string()),
+    };
+    if ready.send(Ok(info)).is_err() {
+        return; // spawner gave up
+    }
+    crate::info!(
+        "engine {}: serving {} (sparsity {:.3}, {} slots, max_active {})",
+        spec.name,
+        cfg.name,
+        s.params.weight_sparsity(&s.mm),
+        cfg.serve_slots,
+        max_active
+    );
+    run_loop(&spec, &s, rx, &metrics, max_active);
+}
+
+struct Stream {
+    /// Valid cache rows; also the position index the next decode writes.
+    pos: usize,
+    /// Last sampled token — the next decode step's input.
+    last: i32,
+    out: Vec<i32>,
+    max_new: usize,
+    temperature: f32,
+    prompt_tokens: usize,
+    reply: Sender<GenResult>,
+}
+
+fn run_loop(
+    spec: &EngineSpec,
+    s: &Session,
+    rx: Receiver<Work>,
+    metrics: &EngineMetrics,
+    max_active: usize,
+) {
+    let mm = &s.mm;
+    let cfg = &mm.cfg;
+    let (slots, seq, vocab) = (cfg.serve_slots, cfg.seq_len, cfg.vocab);
+    let eos = s.tokenizer.eos();
+    let min_tokens = spec.batch.min_tokens;
+    let mut cache = KvCache::new(cfg);
+    let mut streams: Vec<Option<Stream>> = (0..slots).map(|_| None).collect();
+    let mut pending: VecDeque<GenRequest> = VecDeque::new();
+    type ScoreReply = Sender<std::result::Result<ScoreResult, String>>;
+    let mut pending_scores: VecDeque<(String, ScoreReply)> = VecDeque::new();
+    let mut rng = Rng::new(spec.seed ^ 0x5EAF);
+    let slot_shape = [slots];
+    let prefill_shape = [slots, seq];
+    let mut step_tokens = vec![0i32; slots];
+    let mut step_pos = vec![-1i32; slots];
+
+    'outer: loop {
+        // ---- 1. intake -------------------------------------------------
+        let mut block = pending.is_empty()
+            && pending_scores.is_empty()
+            && streams.iter().all(Option::is_none);
+        loop {
+            let w = if block {
+                block = false;
+                match rx.recv() {
+                    Ok(w) => w,
+                    Err(_) => break 'outer,
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(w) => w,
+                    Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                }
+            };
+            match w {
+                Work::Gen(req) => pending.push_back(req),
+                // deferred: a full score forward between every decode step
+                // would stall all active streams, so at most one runs per
+                // loop iteration, after the decode step
+                Work::Score { text, reply } => pending_scores.push_back((text, reply)),
+                Work::Shutdown => break 'outer,
+            }
+        }
+
+        // ---- 2. admit a wave of new streams + prefill ------------------
+        let active = streams.iter().filter(|x| x.is_some()).count();
+        let headroom = max_active.saturating_sub(active).min(cache.free_slots());
+        if headroom > 0 && !pending.is_empty() {
+            let mut admitted: Vec<usize> = Vec::new();
+            let mut ptoks = vec![PAD; slots * seq];
+            let mut lens = vec![0i32; slots];
+            while admitted.len() < headroom {
+                let Some(req) = pending.pop_front() else { break };
+                metrics.queued.fetch_sub(1, Ordering::Relaxed);
+                let slot = cache.alloc().expect("headroom implies a free slot");
+                // leave at least one position for generation
+                let ids = s.tokenizer.encode_prompt(&req.prompt, seq - 1);
+                ptoks[slot * seq..slot * seq + ids.len()].copy_from_slice(&ids);
+                lens[slot] = ids.len() as i32;
+                let cap = seq - ids.len();
+                let max_new =
+                    req.max_new.unwrap_or(spec.batch.max_new_default).clamp(1, cap);
+                streams[slot] = Some(Stream {
+                    pos: ids.len(),
+                    last: 0,
+                    out: Vec::new(),
+                    max_new,
+                    temperature: req.temperature,
+                    prompt_tokens: ids.len(),
+                    reply: req.reply,
+                });
+                admitted.push(slot);
+            }
+            metrics.prefills.fetch_add(1, Ordering::Relaxed);
+            let run = {
+                let feed = base_feed(&s.params, &s.masks)
+                    .ints("tokens", &prefill_shape, &ptoks)
+                    .ints("lens", &slot_shape, &lens);
+                s.rt.run(&cfg.name, "prefill", &feed)
+            };
+            match run {
+                Err(e) => {
+                    crate::warn!("prefill failed: {e:#}");
+                    for slot in admitted {
+                        streams[slot] = None; // dropped reply -> client error
+                        cache.release(slot);
+                    }
+                }
+                Ok(out) => {
+                    for layer in 0..cache.n_layers() {
+                        let k = out.get(&format!("k::h{layer}"));
+                        let v = out.get(&format!("v::h{layer}"));
+                        for &slot in &admitted {
+                            cache.adopt_prefill(slot, layer, k, v);
+                        }
+                    }
+                    let logits = out.get("logits");
+                    for &slot in &admitted {
+                        let st = streams[slot].as_mut().expect("just admitted");
+                        let tok = sample(
+                            &logits.data()[slot * vocab..(slot + 1) * vocab],
+                            st.temperature,
+                            &mut rng,
+                        );
+                        let before = st.out.len();
+                        let done = advance(st, tok, eos, min_tokens, seq);
+                        metrics
+                            .gen_tokens
+                            .fetch_add((st.out.len() - before) as u64, Ordering::Relaxed);
+                        if let Some(reason) = done {
+                            finish_stream(&mut streams, slot, &mut cache, &s.tokenizer, reason, metrics);
+                        }
+                    }
+                }
+            }
+        }
+        let active = streams.iter().filter(|x| x.is_some()).count() as u64;
+        metrics.active.store(active, Ordering::Relaxed);
+        metrics.peak_active.fetch_max(active, Ordering::Relaxed);
+
+        // ---- 3. at most one deferred /score per iteration ---------------
+        if let Some((text, reply)) = pending_scores.pop_front() {
+            let _ = reply.send(score_text(s, &text).map_err(|e| format!("{e:#}")));
+        }
+
+        // ---- 4. one lock-step decode over the active streams -----------
+        if active == 0 {
+            continue;
+        }
+        for b in 0..slots {
+            match &streams[b] {
+                Some(st) => {
+                    step_tokens[b] = st.last;
+                    step_pos[b] = st.pos as i32;
+                }
+                None => {
+                    step_tokens[b] = 0;
+                    step_pos[b] = -1;
+                }
+            }
+        }
+        let run = {
+            let mut feed = base_feed(&s.params, &s.masks)
+                .ints("tokens", &slot_shape, &step_tokens)
+                .ints("pos", &slot_shape, &step_pos);
+            for layer in 0..cache.n_layers() {
+                feed = feed
+                    .owned_key(format!("k::h{layer}"), &cache.k[layer])
+                    .owned_key(format!("v::h{layer}"), &cache.v[layer]);
+            }
+            s.rt.run(&cfg.name, "decode_step", &feed)
+        };
+        match run {
+            Err(e) => {
+                crate::warn!("decode_step failed: {e:#}");
+                for b in 0..slots {
+                    if streams[b].is_some() {
+                        streams[b] = None;
+                        cache.release(b);
+                    }
+                }
+            }
+            Ok(out) => {
+                metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+                for layer in 0..cache.n_layers() {
+                    let kn = out.get(&format!("knew::h{layer}"));
+                    let vn = out.get(&format!("vnew::h{layer}"));
+                    for b in 0..slots {
+                        if let Some(st) = &streams[b] {
+                            cache.write_new(b, st.pos, layer, kn, vn);
+                        }
+                    }
+                }
+                let logits = out.get("logits");
+                for b in 0..slots {
+                    let Some(st) = streams[b].as_mut() else { continue };
+                    st.pos += 1;
+                    let tok =
+                        sample(&logits.data()[b * vocab..(b + 1) * vocab], st.temperature, &mut rng);
+                    let before = st.out.len();
+                    let done = advance(st, tok, eos, min_tokens, seq);
+                    metrics
+                        .gen_tokens
+                        .fetch_add((st.out.len() - before) as u64, Ordering::Relaxed);
+                    if let Some(reason) = done {
+                        finish_stream(&mut streams, b, &mut cache, &s.tokenizer, reason, metrics);
+                    }
+                }
+            }
+        }
+    }
+    metrics.active.store(0, Ordering::Relaxed);
+    // pending replies drop here; blocked clients observe a closed channel
+}
+
+/// Accept one sampled token into the stream; `Some(reason)` ends it.
+fn advance(
+    st: &mut Stream,
+    tok: i32,
+    eos: i32,
+    min_tokens: usize,
+    seq: usize,
+) -> Option<&'static str> {
+    if tok == eos && st.out.len() >= min_tokens {
+        return Some("eos"); // the EOS token itself is not emitted
+    }
+    st.out.push(tok);
+    st.last = tok;
+    if st.out.len() >= st.max_new {
+        return Some("length");
+    }
+    if st.pos >= seq {
+        return Some("length"); // cache full — nowhere to write the next K/V
+    }
+    None
+}
+
+fn finish_stream(
+    streams: &mut [Option<Stream>],
+    slot: usize,
+    cache: &mut KvCache,
+    tokenizer: &Tokenizer,
+    reason: &'static str,
+    metrics: &EngineMetrics,
+) {
+    let st = streams[slot].take().expect("finishing an empty slot");
+    cache.release(slot);
+    metrics.completed.fetch_add(1, Ordering::Relaxed);
+    let completion = tokenizer.decode(&st.out);
+    let _ = st.reply.send(GenResult {
+        completion,
+        tokens: st.out,
+        prompt_tokens: st.prompt_tokens,
+        finish: reason,
+    });
+}
+
+/// Greedy argmax at temperature 0, softmax sampling otherwise.
+fn sample(row: &[f32], temperature: f32, rng: &mut Rng) -> i32 {
+    if temperature <= 0.0 {
+        return argmax(row);
+    }
+    let mx = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+    let exps: Vec<f32> = row.iter().map(|&x| ((x - mx) / temperature).exp()).collect();
+    let total: f32 = exps.iter().sum();
+    let mut target = rng.f32() * total;
+    for (i, &e) in exps.iter().enumerate() {
+        target -= e;
+        if target <= 0.0 {
+            return i as i32;
+        }
+    }
+    (row.len() - 1) as i32
+}
+
+/// First-maximum argmax — the greedy decode rule shared with the parity
+/// test's full-forward reference.
+pub fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in row.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// `/score`: mean next-token NLL of one text through the batched `score`
+/// executable (row 0 carries the text, the pad rows are masked out).
+fn score_text(s: &Session, text: &str) -> Result<ScoreResult> {
+    let mm = &s.mm;
+    let (b, sl) = (mm.cfg.eval_batch, mm.cfg.seq_len);
+    let ids = s.tokenizer.encode_prompt(text, sl);
+    if ids.len() < 2 {
+        bail!("text too short to score (needs at least one non-BOS token)");
+    }
+    let mut tokens = vec![PAD; b * sl];
+    tokens[..ids.len()].copy_from_slice(&ids);
+    let mut tmask = vec![0.0f32; b * sl];
+    for m in tmask.iter_mut().take(ids.len()).skip(1) {
+        *m = 1.0;
+    }
+    let shape = [b, sl];
+    let out = {
+        let feed = base_feed(&s.params, &s.masks)
+            .ints("tokens", &shape, &tokens)
+            .owned("tmask", Tensor::new(&[b, sl], tmask));
+        s.rt.run(&mm.cfg.name, "score", &feed)?
+    };
+    let sc = out.get("scores").data()[0] as f64;
+    let cnt = out.get("counts").data()[0] as f64;
+    let nll = if cnt > 0.0 { -sc / cnt } else { 0.0 };
+    Ok(ScoreResult { nll, ppl: nll.exp(), tokens: cnt as usize })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_takes_first_maximum() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, 1.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let mut rng = Rng::new(1);
+        assert_eq!(sample(&[0.1, 0.9, 0.5], 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn temperature_sampling_stays_in_range() {
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let t = sample(&[0.0, 1.0, 2.0, 3.0], 0.8, &mut rng);
+            assert!((0..4).contains(&t));
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! Minimal blocking HTTP/1.1 client — just enough to drive the serving
+//! endpoints from `repro bench-serve` and the integration tests.  One
+//! request per connection, mirroring the server's `Connection: close`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Generous ceiling: a `/generate` against a cold engine may sit behind a
+/// pretraining run on first boot.
+const READ_TIMEOUT: Duration = Duration::from_secs(600);
+
+pub fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let body = body.unwrap_or("");
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).context("reading response")?;
+    let text = String::from_utf8_lossy(&raw);
+    let Some((head, rest)) = text.split_once("\r\n\r\n") else {
+        bail!("malformed response (no header terminator)");
+    };
+    let status_line = head.lines().next().unwrap_or("");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("bad status line {status_line:?}"))?;
+    Ok((status, rest.to_string()))
+}
+
+pub fn get(addr: SocketAddr, path: &str) -> Result<(u16, String)> {
+    request(addr, "GET", path, None)
+}
+
+/// POST a JSON value and parse the JSON response body.
+pub fn post_json(addr: SocketAddr, path: &str, body: &Json) -> Result<(u16, Json)> {
+    let (status, text) = request(addr, "POST", path, Some(&body.to_string()))?;
+    let parsed = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("non-json response ({status}): {e} — body {text:?}"))?;
+    Ok((status, parsed))
+}

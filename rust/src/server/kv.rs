@@ -1,0 +1,146 @@
+//! Per-stream KV-cache slots for the serving layer.
+//!
+//! The cache owns one (slots, H, S, dh) K and V tensor per layer — exactly
+//! the `prefill` output / `decode_step` input planes — plus the slot
+//! allocator the dynamic batcher draws from.  `prefill` results are adopted
+//! wholesale (row `b` of the prefill batch is slot `b`); each `decode_step`
+//! returns only the new K/V rows, which are written in place here, so the
+//! backend itself stays stateless.
+
+use crate::runtime::ModelCfg;
+use crate::tensor::Tensor;
+
+pub struct KvCache {
+    /// Per-layer K planes, each (slots, H, S, dh).
+    pub k: Vec<Tensor>,
+    /// Per-layer V planes, same shape.
+    pub v: Vec<Tensor>,
+    pub slots: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub dh: usize,
+    free: Vec<usize>,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelCfg) -> KvCache {
+        let (slots, heads, seq, dh) = (cfg.serve_slots, cfg.n_heads, cfg.seq_len, cfg.d_head());
+        let shape = [slots, heads, seq, dh];
+        KvCache {
+            k: (0..cfg.n_layers).map(|_| Tensor::zeros(&shape)).collect(),
+            v: (0..cfg.n_layers).map(|_| Tensor::zeros(&shape)).collect(),
+            slots,
+            heads,
+            seq,
+            dh,
+            free: (0..slots).rev().collect(),
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.k.len()
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn alloc(&mut self) -> Option<usize> {
+        self.free.pop()
+    }
+
+    pub fn release(&mut self, slot: usize) {
+        debug_assert!(!self.free.contains(&slot), "double release of slot {slot}");
+        self.free.push(slot);
+    }
+
+    /// Adopt one stream's prefill result: copy slot row `slot` of the
+    /// (slots, H, S, dh) prefill output planes into this cache.
+    pub fn adopt_prefill(&mut self, slot: usize, layer: usize, k: &Tensor, v: &Tensor) {
+        let n = self.heads * self.seq * self.dh;
+        let span = slot * n..(slot + 1) * n;
+        self.k[layer].data_mut()[span.clone()].copy_from_slice(&k.data()[span.clone()]);
+        self.v[layer].data_mut()[span.clone()].copy_from_slice(&v.data()[span]);
+    }
+
+    /// Write one decode step's new K/V rows (the (slots, H, dh) `knew::`/
+    /// `vnew::` outputs) at position `pos` of stream `slot`.
+    pub fn write_new(&mut self, slot: usize, pos: usize, layer: usize, knew: &Tensor, vnew: &Tensor) {
+        debug_assert!(pos < self.seq, "cache overflow: pos {pos} >= seq {}", self.seq);
+        let (heads, seq, dh) = (self.heads, self.seq, self.dh);
+        for hd in 0..heads {
+            let src = slot * heads * dh + hd * dh;
+            let dst = slot * heads * seq * dh + hd * seq * dh + pos * dh;
+            self.k[layer].data_mut()[dst..dst + dh].copy_from_slice(&knew.data()[src..src + dh]);
+            self.v[layer].data_mut()[dst..dst + dh].copy_from_slice(&vnew.data()[src..src + dh]);
+        }
+    }
+
+    /// Resident cache size: layers × 2 (K and V) × slots × H × S × dh × 4 B.
+    pub fn bytes(&self) -> usize {
+        kv_bytes_for(self.n_layers(), self.slots, self.heads, self.seq, self.dh)
+    }
+}
+
+/// The KV-cache memory formula (documented in rust/README.md):
+/// `n_layers * 2 * slots * n_heads * seq_len * d_head * 4` bytes
+/// = `n_layers * 2 * slots * seq_len * d_model * 4` bytes.
+pub fn kv_bytes_for(layers: usize, slots: usize, heads: usize, seq: usize, dh: usize) -> usize {
+    layers * 2 * slots * heads * seq * dh * 4
+}
+
+/// Formula applied to a model config.
+pub fn kv_bytes(cfg: &ModelCfg) -> usize {
+    kv_bytes_for(cfg.n_layers, cfg.serve_slots, cfg.n_heads, cfg.seq_len, cfg.d_head())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModelCfg;
+
+    fn cache() -> KvCache {
+        KvCache::new(&ModelCfg::builtin("gpt-nano").unwrap())
+    }
+
+    #[test]
+    fn slot_allocator_roundtrips() {
+        let mut c = cache();
+        assert_eq!(c.free_slots(), c.slots);
+        let a = c.alloc().unwrap();
+        let b = c.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(c.free_slots(), c.slots - 2);
+        c.release(a);
+        assert_eq!(c.free_slots(), c.slots - 1);
+        for _ in 0..c.slots - 1 {
+            assert!(c.alloc().is_some());
+        }
+        assert!(c.alloc().is_none());
+    }
+
+    #[test]
+    fn writes_land_at_the_right_position() {
+        let mut c = cache();
+        let (slots, heads, seq, dh) = (c.slots, c.heads, c.seq, c.dh);
+        let mut knew = Tensor::zeros(&[slots, heads, dh]);
+        knew.data_mut()[2 * heads * dh] = 5.0; // slot 2, head 0, first lane
+        let vnew = knew.clone();
+        c.write_new(2, 3, 1, &knew, &vnew);
+        let idx = 2 * heads * seq * dh + 3 * dh;
+        assert_eq!(c.k[1].data()[idx], 5.0);
+        assert_eq!(c.v[1].data()[idx], 5.0);
+        // other layers and slots untouched
+        assert_eq!(c.k[0].data()[idx], 0.0);
+    }
+
+    #[test]
+    fn memory_formula_matches_planes() {
+        let c = cache();
+        let expect: usize =
+            c.k.iter().chain(c.v.iter()).map(|t| t.numel() * 4).sum();
+        assert_eq!(c.bytes(), expect);
+        let cfg = ModelCfg::builtin("gpt-nano").unwrap();
+        assert_eq!(kv_bytes(&cfg), expect);
+    }
+}

@@ -1,0 +1,226 @@
+//! `perp-serve`: the inference-serving subsystem.
+//!
+//! `repro serve` boots this stack: a hand-rolled HTTP/1.1 server over
+//! `std::net::TcpListener` (zero native deps, matching the rest of the
+//! crate) with a worker-thread pool, fronting one [`batcher`] engine thread
+//! per loaded model variant.  Engines own all model state — weights loaded
+//! through [`crate::coordinator::Session`], per-stream [`kv`] cache slots,
+//! and the backend — and decode concurrent `/generate` streams in lock-step
+//! through the `prefill`/`decode_step` executables.
+//!
+//! * [`ServeState`] — the variant registry.  Multiple checkpoints (dense,
+//!   pruned-at-sparsity-s, merged adapters) are hot-loadable behind one
+//!   process via `POST /models/load`.
+//! * [`Server`] — accept loop + worker pool; `run` blocks (the CLI path),
+//!   `spawn` returns a stoppable handle (tests and `repro bench-serve`).
+//! * [`client`] — the minimal HTTP client the load generator and the
+//!   integration tests drive the server with.
+
+pub mod batcher;
+pub mod client;
+pub mod kv;
+pub mod router;
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ExperimentConfig;
+
+pub use batcher::{BatchCfg, EngineHandle, EngineSpec, GenResult, ScoreResult};
+
+// ---------------------------------------------------------------------------
+// ServeState: the model-variant registry.
+// ---------------------------------------------------------------------------
+
+pub struct ServeState {
+    engines: Mutex<BTreeMap<String, Arc<EngineHandle>>>,
+    /// Variant `/generate` falls back to when the request names none.
+    pub default_model: String,
+    /// Template config for hot-loaded variants (model key overridable).
+    pub base_cfg: ExperimentConfig,
+    /// Dense-checkpoint cache directory for engines without `--from`.
+    pub cache_dir: PathBuf,
+    pub seed: u64,
+    pub started: Instant,
+    pub http_requests: AtomicU64,
+}
+
+impl ServeState {
+    pub fn new(
+        default_model: String,
+        base_cfg: ExperimentConfig,
+        cache_dir: PathBuf,
+        seed: u64,
+    ) -> ServeState {
+        ServeState {
+            engines: Mutex::new(BTreeMap::new()),
+            default_model,
+            base_cfg,
+            cache_dir,
+            seed,
+            started: Instant::now(),
+            http_requests: AtomicU64::new(0),
+        }
+    }
+
+    pub fn insert(&self, handle: Arc<EngineHandle>) -> Result<()> {
+        let mut g = self.engines.lock().unwrap();
+        if g.contains_key(&handle.name) {
+            bail!("variant {:?} already loaded", handle.name);
+        }
+        g.insert(handle.name.clone(), handle);
+        Ok(())
+    }
+
+    pub fn engine(&self, name: &str) -> Option<Arc<EngineHandle>> {
+        self.engines.lock().unwrap().get(name).cloned()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.engines.lock().unwrap().keys().cloned().collect()
+    }
+
+    pub fn engines_snapshot(&self) -> Vec<Arc<EngineHandle>> {
+        self.engines.lock().unwrap().values().cloned().collect()
+    }
+
+    /// Ask every engine thread to exit (pending work is abandoned).
+    pub fn shutdown(&self) {
+        for e in self.engines_snapshot() {
+            e.shutdown();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server: accept loop + worker pool.
+// ---------------------------------------------------------------------------
+
+pub struct Server {
+    listener: TcpListener,
+    pub addr: SocketAddr,
+    state: Arc<ServeState>,
+    workers: usize,
+}
+
+impl Server {
+    /// Bind (use port 0 for an ephemeral port) with `workers` HTTP threads.
+    pub fn bind(state: Arc<ServeState>, addr: &str, workers: usize) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let addr = listener.local_addr()?;
+        Ok(Server { listener, addr, state, workers: workers.max(1) })
+    }
+
+    /// Run the accept loop on the current thread.  Returns once `stop` is
+    /// set *and* a connection arrives to wake the loop (see
+    /// [`ServerHandle::stop`]); the CLI passes an always-false flag and
+    /// blocks forever.
+    pub fn run(self, stop: Arc<AtomicBool>) {
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut joins = Vec::with_capacity(self.workers);
+        for i in 0..self.workers {
+            let rx = rx.clone();
+            let state = self.state.clone();
+            let join = thread::Builder::new()
+                .name(format!("http-{i}"))
+                .spawn(move || loop {
+                    // hold the lock only while waiting for the next socket
+                    let conn = rx.lock().unwrap().recv();
+                    match conn {
+                        Ok(mut stream) => router::serve_connection(&state, &mut stream),
+                        Err(_) => break, // acceptor is gone
+                    }
+                })
+                .expect("spawning http worker");
+            joins.push(join);
+        }
+        for conn in self.listener.incoming() {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            match conn {
+                Ok(stream) => {
+                    let _ = tx.send(stream);
+                }
+                Err(e) => crate::warn!("accept error: {e}"),
+            }
+        }
+        drop(tx);
+        for j in joins {
+            let _ = j.join();
+        }
+    }
+
+    /// Run the accept loop on a background thread and return a stoppable
+    /// handle — the harness for tests and `repro bench-serve`.
+    pub fn spawn(self) -> ServerHandle {
+        let stop = Arc::new(AtomicBool::new(false));
+        let addr = self.addr;
+        let state = self.state.clone();
+        let stop2 = stop.clone();
+        let join = thread::spawn(move || self.run(stop2));
+        ServerHandle { addr, state, stop, join: Some(join) }
+    }
+}
+
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    pub state: Arc<ServeState>,
+    stop: Arc<AtomicBool>,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Stop the accept loop, join the workers and shut the engines down.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect(self.addr); // wake the blocking accept
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        self.state.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empty_state() -> Arc<ServeState> {
+        Arc::new(ServeState::new(
+            "gpt-nano".to_string(),
+            ExperimentConfig::quick("gpt-nano"),
+            std::env::temp_dir().join("perp_serve_state_test"),
+            0,
+        ))
+    }
+
+    #[test]
+    fn registry_rejects_duplicates_and_lists_names() {
+        let state = empty_state();
+        assert!(state.names().is_empty());
+        assert!(state.engine("nope").is_none());
+    }
+
+    #[test]
+    fn server_binds_ephemeral_port_and_stops() {
+        let state = empty_state();
+        let server = Server::bind(state, "127.0.0.1:0", 2).unwrap();
+        let addr = server.addr;
+        assert_ne!(addr.port(), 0);
+        let handle = server.spawn();
+        // a health check against an engine-less registry still routes
+        let (status, body) = client::get(addr, "/healthz").unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("\"status\":\"ok\""));
+        handle.stop();
+    }
+}

@@ -1,0 +1,391 @@
+//! Hand-rolled HTTP/1.1 codec and the endpoint routing table.
+//!
+//! Zero-dependency by design (std `TcpStream` only): one request per
+//! connection (`Connection: close`), bodies bounded by `Content-Length`,
+//! JSON in/out through [`crate::util::json::Json`].  Endpoints:
+//!
+//! | route              | verb | body                                        |
+//! |--------------------|------|---------------------------------------------|
+//! | `/healthz`         | GET  | status + loaded variants                    |
+//! | `/metrics`         | GET  | Prometheus text exposition                  |
+//! | `/models`          | GET  | per-variant detail (params, sparsity, KV)   |
+//! | `/models/load`     | POST | `{name, checkpoint[, model, max_active]}`   |
+//! | `/generate`        | POST | `{prompt[, model, max_tokens, temperature]}`|
+//! | `/score`           | POST | `{text[, model]}`                           |
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::batcher::{self, BatchCfg, EngineSpec};
+use super::ServeState;
+
+// ---------------------------------------------------------------------------
+// HTTP codec.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+const MAX_HEADER_BYTES: usize = 64 * 1024;
+const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+
+pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut tmp = [0u8; 4096];
+    let header_end = loop {
+        let n = stream.read(&mut tmp).context("reading request head")?;
+        if n == 0 {
+            bail!("connection closed mid-request");
+        }
+        buf.extend_from_slice(&tmp[..n]);
+        if let Some(pos) = find(&buf, b"\r\n\r\n") {
+            break pos;
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            bail!("request head too large");
+        }
+    };
+    let head = std::str::from_utf8(&buf[..header_end]).context("non-utf8 request head")?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().context("empty request")?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().context("missing method")?.to_ascii_uppercase();
+    let path = parts.next().context("missing path")?.to_string();
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        bail!("request body too large");
+    }
+    let body_start = header_end + 4;
+    while buf.len() < body_start + content_length {
+        let n = stream.read(&mut tmp).context("reading request body")?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    }
+    let body =
+        String::from_utf8_lossy(&buf[body_start..body_start + content_length]).into_owned();
+    Ok(Request { method, path, body })
+}
+
+fn find(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+pub fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())
+}
+
+/// One connection end-to-end: parse, route, respond.
+pub fn serve_connection(state: &ServeState, stream: &mut TcpStream) {
+    match read_request(stream) {
+        Ok(req) => {
+            state.http_requests.fetch_add(1, Ordering::Relaxed);
+            let (status, ctype, body) = route(state, &req);
+            let _ = respond(stream, status, ctype, &body);
+        }
+        Err(e) => {
+            let _ = respond(stream, 400, "application/json", &err_body(&format!("{e:#}")));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Routing.
+// ---------------------------------------------------------------------------
+
+const JSON: &str = "application/json";
+const TEXT: &str = "text/plain; version=0.0.4";
+
+fn err_body(msg: &str) -> String {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))]).to_string()
+}
+
+/// Prometheus label-value escaping (backslash, quote, newline).
+fn label_escape(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Variant names live in URLs, JSON and metric labels — keep them boring.
+fn valid_variant_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 64
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.' | ':' | '@'))
+}
+
+pub fn route(state: &ServeState, req: &Request) -> (u16, &'static str, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => (200, JSON, healthz(state)),
+        ("GET", "/metrics") => (200, TEXT, metrics(state)),
+        ("GET", "/models") => (200, JSON, models(state)),
+        ("POST", "/models/load") => {
+            let (status, body) = models_load(state, &req.body);
+            (status, JSON, body)
+        }
+        ("POST", "/generate") => {
+            let (status, body) = generate(state, &req.body);
+            (status, JSON, body)
+        }
+        ("POST", "/score") => {
+            let (status, body) = score(state, &req.body);
+            (status, JSON, body)
+        }
+        ("GET", _) | ("POST", _) => (404, JSON, err_body(&format!("no route {}", req.path))),
+        _ => (405, JSON, err_body(&format!("method {} not allowed", req.method))),
+    }
+}
+
+fn healthz(state: &ServeState) -> String {
+    Json::obj(vec![
+        ("status", Json::Str("ok".to_string())),
+        ("uptime_s", Json::Num(state.started.elapsed().as_secs_f64())),
+        (
+            "models",
+            Json::Arr(state.names().into_iter().map(Json::Str).collect()),
+        ),
+    ])
+    .to_string()
+}
+
+fn models(state: &ServeState) -> String {
+    let entries: Vec<Json> = state
+        .engines_snapshot()
+        .into_iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("name", Json::Str(e.name.clone())),
+                ("model", Json::Str(e.model.clone())),
+                ("params", Json::Num(e.info.total_params as f64)),
+                ("weight_sparsity", Json::Num(e.info.weight_sparsity)),
+                ("slots", Json::Num(e.info.slots as f64)),
+                ("max_active", Json::Num(e.info.max_active as f64)),
+                ("seq_len", Json::Num(e.info.seq_len as f64)),
+                ("kv_cache_bytes", Json::Num(e.info.kv_bytes as f64)),
+                (
+                    "checkpoint",
+                    e.info
+                        .checkpoint
+                        .clone()
+                        .map(Json::Str)
+                        .unwrap_or(Json::Null),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("models", Json::Arr(entries))]).to_string()
+}
+
+fn metrics(state: &ServeState) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "perp_serve_uptime_seconds {}\n",
+        state.started.elapsed().as_secs_f64()
+    ));
+    out.push_str(&format!(
+        "perp_serve_http_requests_total {}\n",
+        state.http_requests.load(Ordering::Relaxed)
+    ));
+    for e in state.engines_snapshot() {
+        let m = &e.metrics;
+        let tag = format!("{{model=\"{}\"}}", label_escape(&e.name));
+        let rows: [(&str, u64); 8] = [
+            ("requests_total", m.requests.load(Ordering::Relaxed)),
+            ("completed_total", m.completed.load(Ordering::Relaxed)),
+            ("generated_tokens_total", m.gen_tokens.load(Ordering::Relaxed)),
+            ("prefill_batches_total", m.prefills.load(Ordering::Relaxed)),
+            ("decode_steps_total", m.decode_steps.load(Ordering::Relaxed)),
+            ("queue_depth", m.queued.load(Ordering::Relaxed)),
+            ("active_streams", m.active.load(Ordering::Relaxed)),
+            ("peak_active_streams", m.peak_active.load(Ordering::Relaxed)),
+        ];
+        for (name, value) in rows {
+            out.push_str(&format!("perp_serve_{name}{tag} {value}\n"));
+        }
+        out.push_str(&format!(
+            "perp_serve_kv_cache_bytes{tag} {}\n",
+            e.info.kv_bytes
+        ));
+    }
+    out
+}
+
+fn generate(state: &ServeState, body: &str) -> (u16, String) {
+    let j = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return (400, err_body(&format!("bad json: {e}"))),
+    };
+    let Some(prompt) = j.get("prompt").and_then(Json::as_str) else {
+        return (400, err_body("\"prompt\" is required"));
+    };
+    let model = j.str_or("model", &state.default_model);
+    let max_new = j.get("max_tokens").and_then(Json::as_usize);
+    let temperature = j.get("temperature").and_then(Json::as_f64).unwrap_or(0.0) as f32;
+    let Some(engine) = state.engine(&model) else {
+        return (404, err_body(&format!("no model variant {model:?}")));
+    };
+    let t0 = Instant::now();
+    match engine.generate(prompt.to_string(), max_new, temperature) {
+        Ok(r) => (
+            200,
+            Json::obj(vec![
+                ("model", Json::Str(model)),
+                ("completion", Json::Str(r.completion)),
+                (
+                    "tokens",
+                    Json::Arr(r.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+                ),
+                ("prompt_tokens", Json::Num(r.prompt_tokens as f64)),
+                ("finish_reason", Json::Str(r.finish.to_string())),
+                ("latency_ms", Json::Num(t0.elapsed().as_secs_f64() * 1e3)),
+            ])
+            .to_string(),
+        ),
+        Err(e) => (500, err_body(&format!("{e:#}"))),
+    }
+}
+
+fn score(state: &ServeState, body: &str) -> (u16, String) {
+    let j = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return (400, err_body(&format!("bad json: {e}"))),
+    };
+    let Some(text) = j.get("text").and_then(Json::as_str) else {
+        return (400, err_body("\"text\" is required"));
+    };
+    let model = j.str_or("model", &state.default_model);
+    let Some(engine) = state.engine(&model) else {
+        return (404, err_body(&format!("no model variant {model:?}")));
+    };
+    match engine.score(text.to_string()) {
+        Ok(r) => (
+            200,
+            Json::obj(vec![
+                ("model", Json::Str(model)),
+                ("nll", Json::Num(r.nll)),
+                ("ppl", Json::Num(r.ppl)),
+                ("tokens", Json::Num(r.tokens as f64)),
+            ])
+            .to_string(),
+        ),
+        Err(e) => (400, err_body(&format!("{e:#}"))),
+    }
+}
+
+/// Hot-load another checkpoint variant behind the running process.
+fn models_load(state: &ServeState, body: &str) -> (u16, String) {
+    let j = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return (400, err_body(&format!("bad json: {e}"))),
+    };
+    let Some(name) = j.get("name").and_then(Json::as_str) else {
+        return (400, err_body("\"name\" is required"));
+    };
+    if !valid_variant_name(name) {
+        return (
+            400,
+            err_body("\"name\" must be 1-64 chars of [A-Za-z0-9._:@-]"),
+        );
+    }
+    let Some(ckpt) = j.get("checkpoint").and_then(Json::as_str) else {
+        return (400, err_body("\"checkpoint\" is required"));
+    };
+    if state.engine(name).is_some() {
+        return (409, err_body(&format!("variant {name:?} already loaded")));
+    }
+    let mut cfg = state.base_cfg.clone();
+    if let Some(m) = j.get("model").and_then(Json::as_str) {
+        cfg.model = m.to_string();
+    }
+    let mut batch = BatchCfg::default();
+    if let Some(a) = j.get("max_active").and_then(Json::as_usize) {
+        batch.max_active = a;
+    }
+    let spec = EngineSpec {
+        name: name.to_string(),
+        cfg,
+        seed: state.seed,
+        checkpoint: Some(PathBuf::from(ckpt)),
+        cache_dir: state.cache_dir.clone(),
+        batch,
+    };
+    match batcher::spawn(spec) {
+        Ok(handle) => match state.insert(handle) {
+            Ok(()) => (
+                200,
+                Json::obj(vec![("loaded", Json::Str(name.to_string()))]).to_string(),
+            ),
+            Err(e) => (409, err_body(&format!("{e:#}"))),
+        },
+        Err(e) => (400, err_body(&format!("{e:#}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subslice_finder() {
+        assert_eq!(find(b"abc\r\n\r\nxyz", b"\r\n\r\n"), Some(3));
+        assert_eq!(find(b"abc", b"\r\n\r\n"), None);
+    }
+
+    #[test]
+    fn error_bodies_are_json() {
+        let b = err_body("boom \"quoted\"");
+        let j = Json::parse(&b).unwrap();
+        assert_eq!(j.req("error").as_str().unwrap(), "boom \"quoted\"");
+    }
+
+    #[test]
+    fn variant_names_are_validated_and_labels_escaped() {
+        assert!(valid_variant_name("gpt-nano@0.5"));
+        assert!(valid_variant_name("dense_v1.2:a"));
+        assert!(!valid_variant_name(""));
+        assert!(!valid_variant_name("a\"} 1\nfake{x=\""));
+        assert!(!valid_variant_name(&"x".repeat(65)));
+        assert_eq!(label_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

@@ -16,7 +16,7 @@
 
 use rayon::prelude::*;
 
-use super::Tensor;
+use super::{pool, Tensor};
 
 /// Row-block size each rayon task owns.
 const BI: usize = 32;
@@ -32,7 +32,7 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (n, k) = (a.rows(), a.cols());
     let (k2, m) = (b.rows(), b.cols());
     assert_eq!(k, k2, "matmul inner-dim mismatch {k} vs {k2}");
-    let mut out = vec![0.0f32; n * m];
+    let mut out = pool::zeroed(n * m);
     let ad = a.data();
     let bd = b.data();
     out.par_chunks_mut(BI * m).enumerate().for_each(|(ci, chunk)| {
@@ -97,7 +97,7 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     let (n, k) = (a.rows(), a.cols());
     let (m, k2) = (b.rows(), b.cols());
     assert_eq!(k, k2, "matmul_nt inner-dim mismatch {k} vs {k2}");
-    let mut out = vec![0.0f32; n * m];
+    let mut out = pool::zeroed(n * m);
     let ad = a.data();
     let bd = b.data();
     out.par_chunks_mut(BI * m).enumerate().for_each(|(ci, chunk)| {
@@ -149,7 +149,7 @@ pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
     let (n, m) = (a.rows(), a.cols());
     let (n2, k) = (b.rows(), b.cols());
     assert_eq!(n, n2, "matmul_tn outer-dim mismatch {n} vs {n2}");
-    let mut out = vec![0.0f32; m * k];
+    let mut out = pool::zeroed(m * k);
     let ad = a.data();
     let bd = b.data();
     out.par_chunks_mut(BI * k).enumerate().for_each(|(ci, chunk)| {

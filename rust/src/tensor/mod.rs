@@ -5,10 +5,12 @@
 //! SparseGPT) run entirely on these tensors.  f32, row-major, contiguous.
 //!
 //! Submodules: [`linalg`] (blocked matmul, Cholesky toolchain for
-//! SparseGPT's OBS solver), [`io`] (checkpoint serialization).
+//! SparseGPT's OBS solver), [`io`] (checkpoint serialization), [`pool`]
+//! (thread-local buffer reuse for the native backend's per-step tapes).
 
 pub mod io;
 pub mod linalg;
+pub mod pool;
 
 use crate::util::rng::Rng;
 

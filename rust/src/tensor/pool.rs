@@ -1,0 +1,165 @@
+//! Thread-local f32 buffer pool — tape reuse across training/decode steps.
+//!
+//! Every native-backend step allocates the same set of large activation
+//! buffers (logits, attention probabilities, per-linear effective weights),
+//! uses them once, and frees them.  This pool recycles those allocations on
+//! the thread that made them: kernels request scratch via [`zeroed`], and
+//! the backend returns consumed tapes via [`recycle`]/[`give`] after each
+//! step.  Buffers are keyed by exact length, so a steady-state training or
+//! decode loop hits the pool for every allocation after the first step.
+//!
+//! The pool is best-effort and invisible to semantics: a buffer that is
+//! never recycled is simply freed by the allocator, and recycled buffers
+//! are re-zeroed before reuse.  `PERP_TAPE_POOL=0` (or
+//! [`set_enabled`]`(false)`) disables reuse — the A/B knob behind the
+//! `runtime_micro` allocator-churn comparison.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use super::Tensor;
+
+/// Recycled buffers kept per exact length.
+const PER_LEN_CAP: usize = 8;
+/// Total bytes the pool may hold per thread.
+const BYTES_CAP: usize = 1 << 28; // 256 MiB
+
+#[derive(Default)]
+struct Pool {
+    by_len: HashMap<usize, Vec<Vec<f32>>>,
+    bytes: usize,
+    hits: u64,
+    misses: u64,
+    /// Lazily resolved from `PERP_TAPE_POOL` (default on).
+    enabled: Option<bool>,
+}
+
+thread_local! {
+    static POOL: RefCell<Pool> = RefCell::new(Pool::default());
+}
+
+fn enabled(p: &mut Pool) -> bool {
+    *p.enabled.get_or_insert_with(|| {
+        !matches!(std::env::var("PERP_TAPE_POOL").as_deref(), Ok("0") | Ok("off"))
+    })
+}
+
+/// A zero-filled f32 buffer of exactly `len`, reusing a recycled allocation
+/// from this thread's pool when one is available.
+pub fn zeroed(len: usize) -> Vec<f32> {
+    if len == 0 {
+        return Vec::new();
+    }
+    POOL.with(|cell| {
+        let mut p = cell.borrow_mut();
+        let pm = &mut *p;
+        if enabled(pm) {
+            if let Some(mut v) = pm.by_len.get_mut(&len).and_then(|l| l.pop()) {
+                pm.bytes -= 4 * len;
+                pm.hits += 1;
+                v.iter_mut().for_each(|x| *x = 0.0);
+                return v;
+            }
+        }
+        pm.misses += 1;
+        vec![0.0; len]
+    })
+}
+
+/// Return a tensor's storage to this thread's pool.
+pub fn recycle(t: Tensor) {
+    give(t.into_data());
+}
+
+/// Return a raw buffer to this thread's pool (dropped when the pool is
+/// disabled, full, or already holds enough buffers of this length).
+pub fn give(v: Vec<f32>) {
+    let len = v.len();
+    if len == 0 {
+        return;
+    }
+    POOL.with(|cell| {
+        let mut p = cell.borrow_mut();
+        let pm = &mut *p;
+        if !enabled(pm) || pm.bytes + 4 * len > BYTES_CAP {
+            return;
+        }
+        let list = pm.by_len.entry(len).or_default();
+        if list.len() < PER_LEN_CAP {
+            list.push(v);
+            pm.bytes += 4 * len;
+        }
+    })
+}
+
+/// (hits, misses) counters for this thread — observability for benches and
+/// the reuse tests.
+pub fn stats() -> (u64, u64) {
+    POOL.with(|cell| {
+        let p = cell.borrow();
+        (p.hits, p.misses)
+    })
+}
+
+/// Force reuse on/off for this thread (benches/tests); returns the previous
+/// effective setting.  Disabling drops everything currently pooled.
+pub fn set_enabled(on: bool) -> bool {
+    POOL.with(|cell| {
+        let mut p = cell.borrow_mut();
+        let prev = enabled(&mut p);
+        p.enabled = Some(on);
+        if !on {
+            p.by_len.clear();
+            p.bytes = 0;
+        }
+        prev
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuse_returns_zeroed_buffers() {
+        set_enabled(true);
+        let (h0, _) = stats();
+        let mut v = zeroed(1024);
+        v.iter_mut().for_each(|x| *x = 7.0);
+        let ptr = v.as_ptr();
+        give(v);
+        let v2 = zeroed(1024);
+        let (h1, _) = stats();
+        assert_eq!(h1, h0 + 1, "second request should hit the pool");
+        assert_eq!(v2.as_ptr(), ptr, "allocation should be reused");
+        assert!(v2.iter().all(|&x| x == 0.0), "reused buffer must be re-zeroed");
+    }
+
+    #[test]
+    fn recycle_roundtrips_tensors() {
+        set_enabled(true);
+        let t = Tensor::ones(&[33, 7]);
+        recycle(t);
+        let v = zeroed(33 * 7);
+        assert_eq!(v.len(), 33 * 7);
+        assert!(v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn disabled_pool_never_reuses() {
+        set_enabled(false);
+        let v = zeroed(256);
+        let (h0, _) = stats();
+        give(v);
+        let _ = zeroed(256);
+        let (h1, _) = stats();
+        assert_eq!(h1, h0, "disabled pool must not hit");
+        set_enabled(true);
+    }
+
+    #[test]
+    fn zero_length_is_a_noop() {
+        assert!(zeroed(0).is_empty());
+        give(Vec::new());
+    }
+}

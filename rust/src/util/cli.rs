@@ -60,6 +60,13 @@ impl Args {
         self.opts.get(key).cloned()
     }
 
+    pub fn opt_usize(&self, key: &str) -> Option<usize> {
+        self.mark(key);
+        self.opts
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+    }
+
     pub fn usize(&self, key: &str, default: usize) -> usize {
         self.mark(key);
         self.opts
@@ -148,6 +155,14 @@ mod tests {
         let a = args("x");
         assert_eq!(a.str("missing", "d"), "d");
         assert_eq!(a.usize("n", 7), 7);
+    }
+
+    #[test]
+    fn opt_usize_present_and_absent() {
+        let a = args("serve --port 7070");
+        assert_eq!(a.opt_usize("port"), Some(7070));
+        assert_eq!(a.opt_usize("threads"), None);
+        a.finish().unwrap();
     }
 
     #[test]

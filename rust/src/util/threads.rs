@@ -1,0 +1,51 @@
+//! Kernel thread-pool sizing.
+//!
+//! The rayon global pool defaults to one thread per logical core — correct
+//! for batch experiments, but the serving layer also runs HTTP workers and
+//! per-model engine threads on the same host, and oversubscription turns
+//! into tail latency.  `--threads <n>` (or `PERP_THREADS=<n>`) pins the
+//! kernel pool size explicitly; call [`configure`] before the first rayon
+//! use (the CLI does this while parsing common flags).
+
+/// Size the global rayon pool: explicit argument wins, then
+/// `PERP_THREADS`, otherwise rayon's default.  Returns the effective
+/// thread count.  A second call (or a call after rayon was already used)
+/// cannot resize the pool — it warns and reports the existing size.
+pub fn configure(threads: Option<usize>) -> usize {
+    let requested = threads.or_else(from_env);
+    if let Some(n) = requested {
+        let n = n.max(1);
+        match rayon::ThreadPoolBuilder::new().num_threads(n).build_global() {
+            Ok(()) => crate::debug!("rayon pool sized to {n} threads"),
+            Err(e) => {
+                if rayon::current_num_threads() != n {
+                    crate::warn!(
+                        "rayon pool already initialised with {} threads ({e}); \
+                         --threads/PERP_THREADS ignored",
+                        rayon::current_num_threads()
+                    );
+                }
+            }
+        }
+    }
+    rayon::current_num_threads()
+}
+
+/// Parse `PERP_THREADS` (ignored when unset, empty or non-numeric).
+pub fn from_env() -> Option<usize> {
+    std::env::var("PERP_THREADS").ok().and_then(|v| v.trim().parse().ok())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn configure_reports_a_live_pool() {
+        // No explicit request: must not panic, and the pool has ≥ 1 thread.
+        assert!(configure(None) >= 1);
+        // A redundant explicit request after initialisation stays sane.
+        let n = rayon::current_num_threads();
+        assert_eq!(configure(Some(n)), n);
+    }
+}

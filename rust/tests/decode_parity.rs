@@ -1,0 +1,251 @@
+//! KV-cache decode correctness: greedy decoding through the serving
+//! executables (`prefill` + repeated `decode_step`) must produce
+//! token-identical output to re-running the growing context through the
+//! full forward pass — on gpt-nano, dense and at 50% unstructured
+//! sparsity, for single and batched (multi-slot) streams.
+//!
+//! The decode kernels mirror the forward pass' accumulation order exactly,
+//! so this holds bitwise, not just within tolerance.
+
+use std::collections::BTreeMap;
+
+use perp::model::init;
+use perp::pruning::{magnitude, Pattern};
+use perp::runtime::native::graph::{self, GraphIn, ModeKind};
+use perp::runtime::{Backend, Feed, ModelManifest, NativeBackend};
+use perp::server::batcher::argmax;
+use perp::server::kv::KvCache;
+use perp::tensor::Tensor;
+use perp::util::rng::Rng;
+
+struct Fixture {
+    be: NativeBackend,
+    mm: ModelManifest,
+    params: BTreeMap<String, Tensor>,
+    masks: BTreeMap<String, Tensor>,
+}
+
+fn fixture(sparsity: Option<f64>) -> Fixture {
+    let be = NativeBackend::new();
+    let mm = be.model("gpt-nano").unwrap().clone();
+    let mut rng = Rng::new(42);
+    let params: BTreeMap<String, Tensor> =
+        init::init_params(&mm, &mut rng).map().clone();
+    let masks: BTreeMap<String, Tensor> = match sparsity {
+        None => mm
+            .prunable
+            .iter()
+            .map(|n| (n.clone(), Tensor::ones(mm.param_shape(n))))
+            .collect(),
+        Some(f) => {
+            let weights: BTreeMap<String, &Tensor> =
+                mm.prunable.iter().map(|n| (n.clone(), &params[n])).collect();
+            magnitude::uniform(&weights, Pattern::Unstructured(f)).masks
+        }
+    };
+    Fixture { be, mm, params, masks }
+}
+
+impl Fixture {
+    fn graph_in<'a>(
+        &'a self,
+        params: &'a BTreeMap<String, &'a Tensor>,
+        masks: &'a BTreeMap<String, &'a Tensor>,
+    ) -> GraphIn<'a> {
+        GraphIn {
+            mm: &self.mm,
+            params,
+            masks,
+            adapters: None,
+            mode: ModeKind::Subset,
+        }
+    }
+
+    /// Reference: grow the sequence one token at a time, re-running the
+    /// full padded forward pass and taking argmax at the last position.
+    fn reference_greedy(&self, prompt: &[i32], steps: usize) -> Vec<i32> {
+        let s = self.mm.cfg.seq_len;
+        let vocab = self.mm.cfg.vocab;
+        let params: BTreeMap<String, &Tensor> =
+            self.params.iter().map(|(k, v)| (k.clone(), v)).collect();
+        let masks: BTreeMap<String, &Tensor> =
+            self.masks.iter().map(|(k, v)| (k.clone(), v)).collect();
+        let gi = self.graph_in(&params, &masks);
+        let mut seq = prompt.to_vec();
+        let mut out = Vec::new();
+        for _ in 0..steps {
+            if seq.len() >= s {
+                break;
+            }
+            let mut toks = vec![0i32; s];
+            toks[..seq.len()].copy_from_slice(&seq);
+            let tape = graph::forward(&gi, &toks, 1, s, None);
+            let row = &tape.logits.data()[(seq.len() - 1) * vocab..seq.len() * vocab];
+            let t = argmax(row);
+            out.push(t);
+            seq.push(t);
+        }
+        out
+    }
+
+    fn base_feed<'a>(&'a self, mut feed: Feed<'a>) -> Feed<'a> {
+        for (n, t) in &self.params {
+            feed = feed.owned_key(format!("p::{n}"), t);
+        }
+        for (n, t) in &self.masks {
+            feed = feed.owned_key(format!("m::{n}"), t);
+        }
+        feed
+    }
+
+    /// KV path: one prefill over all prompts (each in its own slot), then
+    /// lock-step `decode_step` until every stream has `steps` tokens.
+    fn kv_greedy(&self, prompts: &[Vec<i32>], steps: usize) -> Vec<Vec<i32>> {
+        let cfg = &self.mm.cfg;
+        let (slots, s, vocab) = (cfg.serve_slots, cfg.seq_len, cfg.vocab);
+        assert!(prompts.len() <= slots);
+        let mut cache = KvCache::new(cfg);
+        let assigned: Vec<usize> = prompts.iter().map(|_| cache.alloc().unwrap()).collect();
+
+        let mut ptoks = vec![0i32; slots * s];
+        let mut lens = vec![0i32; slots];
+        for (p, &slot) in prompts.iter().zip(&assigned) {
+            ptoks[slot * s..slot * s + p.len()].copy_from_slice(p);
+            lens[slot] = p.len() as i32;
+        }
+        let pshape = [slots, s];
+        let sshape = [slots];
+        let out = {
+            let feed = self
+                .base_feed(Feed::new())
+                .ints("tokens", &pshape, &ptoks)
+                .ints("lens", &sshape, &lens);
+            self.be.run("gpt-nano", "prefill", &feed).unwrap()
+        };
+        for layer in 0..cache.n_layers() {
+            let k = out.get(&format!("k::h{layer}"));
+            let v = out.get(&format!("v::h{layer}"));
+            for &slot in &assigned {
+                cache.adopt_prefill(slot, layer, k, v);
+            }
+        }
+        let mut pos: Vec<usize> = prompts.iter().map(Vec::len).collect();
+        let mut last: Vec<i32> = assigned
+            .iter()
+            .map(|&slot| argmax(&out.get("logits").data()[slot * vocab..(slot + 1) * vocab]))
+            .collect();
+        let mut results: Vec<Vec<i32>> = last.iter().map(|&t| vec![t]).collect();
+
+        loop {
+            let mut step_tokens = vec![0i32; slots];
+            let mut step_pos = vec![-1i32; slots];
+            let mut any = false;
+            for (r, &slot) in assigned.iter().enumerate() {
+                if results[r].len() < steps && pos[r] < s {
+                    step_tokens[slot] = last[r];
+                    step_pos[slot] = pos[r] as i32;
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+            let out = {
+                let mut feed = self
+                    .base_feed(Feed::new())
+                    .ints("tokens", &sshape, &step_tokens)
+                    .ints("pos", &sshape, &step_pos);
+                for layer in 0..cache.n_layers() {
+                    feed = feed
+                        .owned_key(format!("k::h{layer}"), &cache.k[layer])
+                        .owned_key(format!("v::h{layer}"), &cache.v[layer]);
+                }
+                self.be.run("gpt-nano", "decode_step", &feed).unwrap()
+            };
+            for (r, &slot) in assigned.iter().enumerate() {
+                if step_pos[slot] < 0 {
+                    continue;
+                }
+                for layer in 0..cache.n_layers() {
+                    let kn = out.get(&format!("knew::h{layer}"));
+                    let vn = out.get(&format!("vnew::h{layer}"));
+                    cache.write_new(slot, pos[r], layer, kn, vn);
+                }
+                pos[r] += 1;
+                let t =
+                    argmax(&out.get("logits").data()[slot * vocab..(slot + 1) * vocab]);
+                last[r] = t;
+                results[r].push(t);
+            }
+        }
+        results
+    }
+}
+
+fn check_parity(sparsity: Option<f64>) {
+    let fx = fixture(sparsity);
+    let prompts: Vec<Vec<i32>> = vec![
+        vec![2, 7, 19, 4],
+        vec![2, 33, 8],
+        vec![2, 5, 90, 17, 61, 3],
+    ];
+    let steps = 10;
+    let refs: Vec<Vec<i32>> =
+        prompts.iter().map(|p| fx.reference_greedy(p, steps)).collect();
+
+    // single-stream decode matches the full-forward reference...
+    let single = fx.kv_greedy(&prompts[..1], steps);
+    assert_eq!(single[0], refs[0], "single-stream KV decode diverged (sparsity {sparsity:?})");
+
+    // ...and batched multi-slot decode matches every per-prompt reference
+    let batched = fx.kv_greedy(&prompts, steps);
+    for (i, (got, want)) in batched.iter().zip(&refs).enumerate() {
+        assert_eq!(got, want, "stream {i} diverged under batching (sparsity {sparsity:?})");
+    }
+}
+
+#[test]
+fn greedy_kv_decode_matches_full_forward_dense() {
+    check_parity(None);
+}
+
+#[test]
+fn greedy_kv_decode_matches_full_forward_half_sparse() {
+    check_parity(Some(0.5));
+}
+
+#[test]
+fn prefill_logits_match_full_forward_bitwise() {
+    let fx = fixture(Some(0.5));
+    let cfg = &fx.mm.cfg;
+    let (slots, s, vocab) = (cfg.serve_slots, cfg.seq_len, cfg.vocab);
+    let prompt = vec![2i32, 11, 47, 5, 9];
+
+    // reference logits at the last prompt position (batch = 1)
+    let params: BTreeMap<String, &Tensor> =
+        fx.params.iter().map(|(k, v)| (k.clone(), v)).collect();
+    let masks: BTreeMap<String, &Tensor> =
+        fx.masks.iter().map(|(k, v)| (k.clone(), v)).collect();
+    let gi = fx.graph_in(&params, &masks);
+    let mut toks = vec![0i32; s];
+    toks[..prompt.len()].copy_from_slice(&prompt);
+    let tape = graph::forward(&gi, &toks, 1, s, None);
+    let want = &tape.logits.data()[(prompt.len() - 1) * vocab..prompt.len() * vocab];
+
+    // prefill logits for the same prompt in slot 0 of a full-width batch
+    let mut ptoks = vec![0i32; slots * s];
+    ptoks[..prompt.len()].copy_from_slice(&prompt);
+    let mut lens = vec![0i32; slots];
+    lens[0] = prompt.len() as i32;
+    let pshape = [slots, s];
+    let sshape = [slots];
+    let feed = fx
+        .base_feed(Feed::new())
+        .ints("tokens", &pshape, &ptoks)
+        .ints("lens", &sshape, &lens);
+    let out = fx.be.run("gpt-nano", "prefill", &feed).unwrap();
+    let got = &out.get("logits").data()[..vocab];
+    for (a, b) in got.iter().zip(want) {
+        assert_eq!(a.to_bits(), b.to_bits(), "prefill logits differ from forward");
+    }
+}

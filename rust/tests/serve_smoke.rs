@@ -1,0 +1,111 @@
+//! End-to-end serving smoke: boot a real engine (dense gpt-nano, cached
+//! pretrain), bind the HTTP server on an ephemeral port, and drive every
+//! endpoint through the real TCP stack — including 8 concurrent
+//! `/generate` streams through the dynamic batcher.
+
+use std::sync::Arc;
+
+use perp::config::ExperimentConfig;
+use perp::server::{batcher, client, BatchCfg, EngineSpec, ServeState, Server};
+use perp::util::json::Json;
+
+fn quick_cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::quick("gpt-nano");
+    c.pretrain_steps = 60;
+    c
+}
+
+#[test]
+fn serve_endpoints_and_concurrent_streams() {
+    let cache = std::env::temp_dir().join("perp_serve_smoke_cache");
+    let state =
+        Arc::new(ServeState::new("gpt-nano".to_string(), quick_cfg(), cache.clone(), 0));
+    let engine = batcher::spawn(EngineSpec {
+        name: "gpt-nano".to_string(),
+        cfg: quick_cfg(),
+        seed: 0,
+        checkpoint: None,
+        cache_dir: cache,
+        batch: BatchCfg::default(),
+    })
+    .unwrap();
+    state.insert(engine).unwrap();
+    let server = Server::bind(state, "127.0.0.1:0", 10).unwrap();
+    let addr = server.addr;
+    let handle = server.spawn();
+
+    // health
+    let (status, body) = client::get(addr, "/healthz").unwrap();
+    assert_eq!(status, 200);
+    assert!(body.contains("\"status\":\"ok\""), "{body}");
+    assert!(body.contains("gpt-nano"), "{body}");
+
+    // model registry detail carries the KV memory facts
+    let (status, body) = client::get(addr, "/models").unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    let m = &j.req("models").as_arr().unwrap()[0];
+    assert!(m.req("kv_cache_bytes").as_f64().unwrap() > 0.0);
+    assert!(m.req("slots").as_usize().unwrap() >= 8);
+
+    // 8 concurrent /generate streams through the dynamic batcher
+    let results: Vec<(u16, Json)> = std::thread::scope(|sc| {
+        let mut joins = Vec::new();
+        for i in 0..8 {
+            joins.push(sc.spawn(move || {
+                let body = Json::obj(vec![
+                    ("prompt", Json::Str(format!("the sample prompt number {i}"))),
+                    ("max_tokens", Json::Num(6.0)),
+                ]);
+                client::post_json(addr, "/generate", &body).unwrap()
+            }));
+        }
+        joins.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(results.len(), 8);
+    for (status, j) in &results {
+        assert_eq!(*status, 200, "{j}");
+        let completion = j.req("completion").as_str().unwrap();
+        assert!(!completion.is_empty(), "empty completion: {j}");
+        assert!(!j.req("tokens").as_arr().unwrap().is_empty());
+        assert_eq!(j.req("model").as_str().unwrap(), "gpt-nano");
+    }
+
+    // scoring returns a finite perplexity
+    let (status, j) = client::post_json(
+        addr,
+        "/score",
+        &Json::obj(vec![("text", Json::Str("the model the model the".to_string()))]),
+    )
+    .unwrap();
+    assert_eq!(status, 200, "{j}");
+    assert!(j.req("ppl").as_f64().unwrap() > 0.0);
+    assert!(j.req("tokens").as_usize().unwrap() > 0);
+
+    // metrics reflect the traffic we just generated
+    let (status, text) = client::get(addr, "/metrics").unwrap();
+    assert_eq!(status, 200);
+    assert!(text.contains("perp_serve_decode_steps_total"), "{text}");
+    assert!(
+        text.contains("perp_serve_completed_total{model=\"gpt-nano\"} 8"),
+        "{text}"
+    );
+
+    // error paths: unknown variant -> 404, bad json -> 400, no route -> 404
+    let (status, _) = client::post_json(
+        addr,
+        "/generate",
+        &Json::obj(vec![
+            ("prompt", Json::Str("x".to_string())),
+            ("model", Json::Str("nope".to_string())),
+        ]),
+    )
+    .unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = client::request(addr, "POST", "/generate", Some("{not json")).unwrap();
+    assert_eq!(status, 400);
+    let (status, _) = client::get(addr, "/nope").unwrap();
+    assert_eq!(status, 404);
+
+    handle.stop();
+}
