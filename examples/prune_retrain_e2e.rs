@@ -26,10 +26,10 @@ fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv).map_err(|e| anyhow::anyhow!(e))?;
     let model = args.str("model", "gpt-small");
-    let steps = args.u64("steps", 400);
-    let retrain_steps = args.u64("retrain-steps", 200);
+    let steps = args.u64("steps", 400)?;
+    let retrain_steps = args.u64("retrain-steps", 200)?;
     let pattern = Pattern::parse(&args.str("sparsity", "0.5")).map_err(|e| anyhow::anyhow!(e))?;
-    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    args.finish()?;
 
     let rt = open_default_backend()?;
     let mut cfg = ExperimentConfig::full(&model);

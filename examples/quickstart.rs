@@ -1,7 +1,8 @@
-//! Quickstart: the PERP story in one minute on gpt-nano.
+//! Quickstart: the PERP story in one minute on gpt-nano — written against
+//! the `perp::pipeline` builder API.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --offline --example quickstart
+//! cargo run --release --offline --example quickstart
 //! ```
 //!
 //! 1. pretrain (or load the cached) dense model;
@@ -9,12 +10,16 @@
 //! 3. retrain ONLY the biases (≈1% of params at this scale, 0.03% at OPT
 //!    scale) → most of the damage is gone;
 //! 4. retrain with MaskLoRA and merge losslessly → sparsity preserved.
+//!
+//! The four plans below share their `pretrain|prune` prefix, so the
+//! executor's content-addressed cache computes it once — watch the
+//! "cache hit" lines on every plan after the first (and on re-runs).
 
 use anyhow::Result;
 
 use perp::config::ExperimentConfig;
-use perp::coordinator::sweep::ExpContext;
 use perp::peft::Mode;
+use perp::pipeline::{Executor, Plan};
 use perp::pruning::{Criterion, Pattern};
 use perp::runtime::open_default_backend;
 
@@ -23,44 +28,65 @@ fn main() -> Result<()> {
     let mut cfg = ExperimentConfig::quick("gpt-nano");
     cfg.pretrain_steps = 3000;
     cfg.retrain_steps = 150;
-    let ctx = ExpContext::new(rt.as_ref(), cfg, "results/cache".into());
+    let ex = Executor::new(rt.as_ref(), cfg, "results/cache".into(), 0);
 
     println!("== 1. dense model ==");
-    let dense = ctx.dense_session(0)?;
-    let dense_ppl = dense.eval_ppl_test()?;
-    println!("dense test perplexity: {:.2}", dense_ppl.ppl);
+    let dense = ex.run(&Plan::new("quickstart-dense").pretrain().eval_ppl())?;
+    let dense_ppl = dense.last_metrics().expect("eval ran").ppl;
+    println!("dense test perplexity: {dense_ppl:.2}");
 
     println!("\n== 2. magnitude pruning @ 50% ==");
-    let (pruned, _) = ctx.pruned_session(0, Criterion::Magnitude, Pattern::Unstructured(0.5))?;
-    let pruned_ppl = pruned.eval_ppl_test()?;
+    let pruned = ex.run(
+        &Plan::new("quickstart-pruned")
+            .pretrain()
+            .prune(Criterion::Magnitude, Pattern::Unstructured(0.5))
+            .eval_ppl(),
+    )?;
+    let pm = pruned.last_metrics().expect("eval ran");
     println!(
         "pruned perplexity: {:.2}  (x{:.2} vs dense) — sparsity {:.1}%",
-        pruned_ppl.ppl,
-        pruned_ppl.ppl / dense_ppl.ppl,
-        100.0 * pruned.masks.sparsity()
+        pm.ppl,
+        pm.ppl / dense_ppl,
+        100.0 * pm.sparsity
     );
 
     println!("\n== 3. retrain ONLY the biases ==");
-    let (bias_cell, lr) = ctx.retrain_tuned(&pruned, Mode::Biases, 150, false)?;
+    let biases = ex.run(
+        &Plan::new("quickstart-biases")
+            .pretrain()
+            .prune(Criterion::Magnitude, Pattern::Unstructured(0.5))
+            .retrain(Mode::Biases, None, None)
+            .eval_ppl(),
+    )?;
+    let bias_ppl = biases.last_metrics().expect("eval ran").ppl;
+    let bias_pct = biases
+        .stages
+        .iter()
+        .find_map(|s| s.trainable_pct)
+        .unwrap_or(0.0);
     println!(
-        "biases retrained (lr {lr}): perplexity {:.2} — trainable {:.3}% of params",
-        bias_cell.ppl, bias_cell.trainable_pct
+        "biases retrained: perplexity {bias_ppl:.2} — trainable {bias_pct:.3}% of params"
     );
 
     println!("\n== 4. MaskLoRA: mergeable, sparsity-preserving ==");
-    let mut s = ctx.clone_session(&pruned)?;
-    s.retrain(Mode::MaskLora, 150, lr)?;
-    s.merge_adapters()?; // panics if any pruned weight were resurrected
-    let ml = s.eval_ppl_test()?;
+    let ml = ex.run(
+        &Plan::new("quickstart-masklora")
+            .pretrain()
+            .prune(Criterion::Magnitude, Pattern::Unstructured(0.5))
+            .retrain(Mode::MaskLora, None, None)
+            .merge() // panics if any pruned weight were resurrected
+            .eval_ppl(),
+    )?;
+    let mlm = ml.last_metrics().expect("eval ran");
     println!(
         "masklora retrained+merged: perplexity {:.2}; post-merge sparsity {:.1}%",
-        ml.ppl,
-        100.0 * s.params.weight_sparsity(&s.mm)
+        mlm.ppl,
+        100.0 * mlm.sparsity
     );
 
     println!(
         "\nsummary: dense {:.2} | pruned {:.2} | +biases {:.2} | +masklora {:.2}",
-        dense_ppl.ppl, pruned_ppl.ppl, bias_cell.ppl, ml.ppl
+        dense_ppl, pm.ppl, bias_ppl, mlm.ppl
     );
     Ok(())
 }

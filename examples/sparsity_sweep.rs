@@ -18,8 +18,8 @@ fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv).map_err(|e| anyhow::anyhow!(e))?;
     let model = args.str("model", "gpt-nano");
-    let steps = args.u64("steps", 100);
-    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    let steps = args.u64("steps", 100)?;
+    args.finish()?;
 
     let rt = open_default_backend()?;
     let mut cfg = ExperimentConfig::quick(&model);

@@ -62,9 +62,47 @@ fn matmul_speedups(out: &mut Vec<Table>) {
     out.push(t);
 }
 
+/// A/B: the old masked-forward path (materialise W⊙M, then `matmul_nt`)
+/// against the fused `matmul_nt_masked` (pruned weights skipped in the
+/// kernel, no scratch weight buffer per call).
+fn masked_matmul_ab(out: &mut Vec<Table>) {
+    let bench = Bench::quick();
+    let mut t = Table::new(
+        "masked forward: materialise W⊙M + matmul_nt vs fused matmul_nt_masked",
+        &["shape", "sparsity", "materialise", "fused", "speedup"],
+    );
+    let mut rng = Rng::new(43);
+    for (n, k, m) in [(256usize, 256usize, 256usize), (512, 512, 512)] {
+        let x = Tensor::randn(&[n, k], 1.0, &mut rng);
+        let w = Tensor::randn(&[m, k], 1.0, &mut rng);
+        // |N(0,1)| quantiles: 0.6745 prunes ~50%, 1.6449 prunes ~90%
+        for threshold in [0.6745f32, 1.6449] {
+            let mask = Tensor::randn(&[m, k], 1.0, &mut rng)
+                .map(|v| if v.abs() < threshold { 0.0 } else { 1.0 });
+            let a = bench.run(|| {
+                let wm = w.hadamard(&mask);
+                std::hint::black_box(linalg::matmul_nt(&x, &wm));
+            });
+            let b = bench.run(|| {
+                std::hint::black_box(linalg::matmul_nt_masked(&x, &w, &mask));
+            });
+            t.row(vec![
+                format!("{n}x{k} @ ({m}x{k})T"),
+                format!("{:.0}%", 100.0 * mask.zero_fraction()),
+                fmt_duration(a.mean),
+                fmt_duration(b.mean),
+                format!("{:.2}x", a.mean_secs() / b.mean_secs()),
+            ]);
+        }
+    }
+    t.print();
+    out.push(t);
+}
+
 fn main() {
     let mut tables = Vec::new();
     matmul_speedups(&mut tables);
+    masked_matmul_ab(&mut tables);
 
     let rt = open_default_backend().expect("opening backend");
     let model = common::bench_model();

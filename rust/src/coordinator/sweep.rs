@@ -16,7 +16,11 @@
 //! | memory   | §3.2 efficiency      | analytical 30B-on-one-A100 table          |
 //!
 //! Pretrained dense checkpoints are cached per (model, seed, steps) so every
-//! sweep shares one convergence run.
+//! sweep shares one convergence run.  `fig2` and `table22` go further: their
+//! cells are *plan generators* ([`fig2_plan`], [`table22_plan`]) executed
+//! through [`crate::pipeline::Executor`], so sweeps, `repro run` and the
+//! shim subcommands share one execution path and one content-addressed
+//! stage cache — re-running a sweep only computes cells whose plans changed.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -27,6 +31,7 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::reconstruct::{self, ReconMode};
 use crate::coordinator::Session;
 use crate::peft::Mode;
+use crate::pipeline::{Executor, Plan};
 use crate::pruning::{Criterion, Pattern};
 use crate::runtime::Backend;
 use crate::tensor::Tensor;
@@ -57,12 +62,20 @@ impl<'rt> ExpContext<'rt> {
         ExpContext { rt, cfg, cache_dir }
     }
 
-    /// A session holding converged dense weights (cached on disk).
+    /// A session holding converged dense weights (cached on disk).  The key
+    /// covers everything pretraining reads — model, seed, steps, lr, data
+    /// seed and backend — so a stale checkpoint can never satisfy a changed
+    /// config (the plan executor relies on this).
     pub fn dense_session(&self, seed: u64) -> Result<Session<'rt>> {
         let mut s = Session::new(self.rt, self.cfg.clone(), seed)?;
         let key = format!(
-            "{}-s{}-p{}-d{}.ptns",
-            self.cfg.model, seed, self.cfg.pretrain_steps, self.cfg.data_seed
+            "{}-s{}-p{}-lr{}-d{}-{}.ptns",
+            self.cfg.model,
+            seed,
+            self.cfg.pretrain_steps,
+            self.cfg.pretrain_lr,
+            self.cfg.data_seed,
+            self.cfg.backend,
         );
         let path = self.cache_dir.join(key);
         if path.exists() {
@@ -319,8 +332,24 @@ fn table2(ctx: &ExpContext) -> Result<Vec<Table>> {
     Ok(vec![t])
 }
 
+/// Plan generator for one Fig 2 cell: the sweep below and one-off
+/// `repro run` invocations share the executor path (and therefore the
+/// content-addressed stage cache — every cell at one sparsity reuses the
+/// same pruned artifact).
+pub fn fig2_plan(sparsity: f64, iters: u64, lr: f64) -> Plan {
+    let p = Plan::new(&format!("fig2-sp{sparsity}-it{iters}"))
+        .pretrain()
+        .prune(Criterion::Magnitude, Pattern::Unstructured(sparsity));
+    if iters == 0 {
+        p.eval_ppl()
+    } else {
+        p.retrain(Mode::MaskLora, Some(iters), Some(lr)).merge().eval_ppl()
+    }
+}
+
 fn fig2(ctx: &ExpContext) -> Result<Vec<Table>> {
     let seed = ctx.cfg.seeds[0];
+    let ex = Executor::new(ctx.rt, ctx.cfg.clone(), ctx.cache_dir.clone(), seed).quiet(true);
     let iters: Vec<u64> = [0u64, 5, 15, 50, 150, 300]
         .into_iter()
         .filter(|&i| i <= ctx.cfg.retrain_steps.max(30) * 3)
@@ -330,19 +359,10 @@ fn fig2(ctx: &ExpContext) -> Result<Vec<Table>> {
     let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
     let mut t = Table::new("Fig 2: MaskLoRA perplexity vs retraining iterations", &hdr);
     for sp in [0.4, 0.5, 0.6, 0.7] {
-        let (base, _) = ctx.pruned_session(seed, Criterion::Magnitude, Pattern::Unstructured(sp))?;
         let mut row = vec![format!("{:.0}%", sp * 100.0)];
         for &it in &iters {
-            let cell = if it == 0 {
-                let mut s = ctx.clone_session(&base)?;
-                ctx.evaluate(&mut s, false, None)?
-            } else {
-                let mut s = ctx.clone_session(&base)?;
-                s.retrain(Mode::MaskLora, it, ctx.cfg.lr_grid[0])?;
-                s.merge_adapters()?;
-                ctx.evaluate(&mut s, false, None)?
-            };
-            row.push(fmt_ppl(cell.ppl));
+            let rep = ex.run(&fig2_plan(sp, it, ctx.cfg.lr_grid[0]))?;
+            row.push(fmt_ppl(rep.last_metrics().map(|m| m.ppl).unwrap_or(f64::NAN)));
         }
         t.row(row);
     }
@@ -570,37 +590,38 @@ fn table20(ctx: &ExpContext) -> Result<Vec<Table>> {
     Ok(tables)
 }
 
+/// Plan generator for one Tables 22/23 cell (strategy × criterion ×
+/// sparsity).  The three strategies at one (criterion, sparsity) share the
+/// same `pretrain|prune` prefix, so they reuse one pruned artifact.
+pub fn table22_plan(strategy: &str, crit: Criterion, sparsity: f64) -> Plan {
+    let base = Plan::new(&format!("table22-{strategy}-{}-{sparsity}", crit.name()))
+        .pretrain()
+        .prune(crit, Pattern::Unstructured(sparsity));
+    match strategy {
+        "none" => base.eval_ppl(),
+        "reconstruct" => base.reconstruct(ReconMode::MaskLora, None, None).eval_ppl(),
+        "retrain" => base.retrain(Mode::MaskLora, None, None).merge().eval_ppl(),
+        other => panic!("unknown table22 strategy {other:?} (none|reconstruct|retrain)"),
+    }
+}
+
 fn table22(ctx: &ExpContext) -> Result<Vec<Table>> {
     let seed = ctx.cfg.seeds[0];
+    let ex = Executor::new(ctx.rt, ctx.cfg.clone(), ctx.cache_dir.clone(), seed).quiet(true);
     let hdr = ["Method", "Strategy", "50%", "60%", "70%", "80%"];
     let mut t = Table::new(
         "Tables 22/23: high-sparsity regime — reconstruction vs retraining (ppl)",
         &hdr,
     );
     for crit in [Criterion::Magnitude, Criterion::Wanda, Criterion::SparseGpt] {
-        let mut none_row = vec![crit.name().to_string(), "none".to_string()];
-        let mut recon_row = vec![crit.name().to_string(), "reconstruct".to_string()];
-        let mut retrain_row = vec![crit.name().to_string(), "retrain".to_string()];
-        for sp in [0.5, 0.6, 0.7, 0.8] {
-            let (base, dense) = ctx.pruned_session(seed, crit, Pattern::Unstructured(sp))?;
-            let c0 = {
-                let mut s = ctx.clone_session(&base)?;
-                ctx.evaluate(&mut s, false, None)?
-            };
-            none_row.push(fmt_ppl(c0.ppl));
-            let mut s = ctx.clone_session(&base)?;
-            let target = s.masks.clone();
-            reconstruct::reconstruct(
-                &mut s, &target, &dense, ReconMode::MaskLora,
-                ctx.cfg.recon_steps, ctx.cfg.recon_lr,
-            )?;
-            recon_row.push(fmt_ppl(ctx.evaluate(&mut s, false, None)?.ppl));
-            let (cell, _) = ctx.retrain_tuned(&base, Mode::MaskLora, ctx.cfg.retrain_steps, false)?;
-            retrain_row.push(fmt_ppl(cell.ppl));
+        for strategy in ["none", "reconstruct", "retrain"] {
+            let mut row = vec![crit.name().to_string(), strategy.to_string()];
+            for sp in [0.5, 0.6, 0.7, 0.8] {
+                let rep = ex.run(&table22_plan(strategy, crit, sp))?;
+                row.push(fmt_ppl(rep.last_metrics().map(|m| m.ppl).unwrap_or(f64::NAN)));
+            }
+            t.row(row);
         }
-        t.row(none_row);
-        t.row(recon_row);
-        t.row(retrain_row);
     }
     Ok(vec![t])
 }

@@ -33,6 +33,7 @@ pub mod metrics;
 pub mod model;
 pub mod optim;
 pub mod peft;
+pub mod pipeline;
 pub mod pruning;
 pub mod runtime;
 pub mod server;

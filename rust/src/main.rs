@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! repro info                                      # models, executables, memory table
+//! repro run --plan examples/plans/prune_retrain.json
+//! repro run --stages "prune(wanda,0.5)|retrain(masklora,100)|merge|eval"
 //! repro pretrain  --model gpt-nano --steps 200    # converge + cache dense weights
 //! repro prune     --model gpt-nano --criterion wanda --sparsity 0.5
 //! repro retrain   --model gpt-nano --mode masklora --steps 100
@@ -13,9 +15,12 @@
 //! repro tables    [--profile quick]               # regenerate everything
 //! ```
 //!
-//! All state flows through the cache directory (`--out`, default `results/`):
-//! pretrained checkpoints are reused across invocations, sweeps and the
-//! serving layer.
+//! Everything executes through `perp::pipeline`: `run` takes arbitrary plan
+//! files or inline stage specs, and the classic subcommands are thin shims
+//! that build small plans — so one-off runs, sweeps and plan files all share
+//! the same content-addressed stage cache under `--out` (default
+//! `results/`): re-running any plan (or its prefix) loads completed stages
+//! instead of recomputing them.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::AtomicBool;
@@ -25,14 +30,15 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use perp::config::ExperimentConfig;
-use perp::coordinator::reconstruct::{self, ReconMode};
+use perp::coordinator::reconstruct::ReconMode;
 use perp::coordinator::sweep::{self, ExpContext};
 use perp::coordinator::Session;
 use perp::peft::Mode;
+use perp::pipeline::{parse::parse_plan, Executor, Plan};
 use perp::pruning::{Criterion, Pattern};
 use perp::runtime::{default_artifacts_dir, open_backend, Backend, BackendKind};
 use perp::server::{batcher, client, BatchCfg, EngineSpec, ServeState, Server};
-use perp::util::cli::Args;
+use perp::util::cli::{ArgError, Args};
 use perp::util::json::Json;
 
 fn main() {
@@ -44,6 +50,12 @@ fn main() {
         }
     };
     if let Err(e) = dispatch(&args) {
+        // argument problems (bad values, unknown flags) exit 2, runtime
+        // failures exit 1
+        if let Some(ae) = e.downcast_ref::<ArgError>() {
+            eprintln!("argument error: {ae}");
+            std::process::exit(2);
+        }
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
@@ -57,6 +69,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         "info" => info(args),
+        "run" => run_cmd(args),
         "pretrain" => pretrain(args),
         "prune" => prune(args),
         "retrain" => retrain(args),
@@ -75,6 +88,7 @@ repro — PERP: Parameter-Efficient Retraining after Pruning (reproduction)
 
 subcommands:
   info          list models, executables and the analytical memory table
+  run           execute a pipeline plan (--plan <file.json> or --stages \"...\")
   pretrain      converge a dense model and cache the checkpoint
   prune         prune the cached dense model, report ppl collapse
   retrain       prune + retrain with a PERP mode, report recovery
@@ -100,6 +114,12 @@ common flags:
   --steps <n>          override step counts
   --exp <id>           fig1 fig2 table1 table2 table3 table4 table5
                        table19 table20 table22 memory
+
+run flags:
+  --plan <file.json>   plan file (see examples/plans/)
+  --stages <spec>      inline plan, e.g. \"prune(wanda,0.5)|retrain(masklora,100)|merge|eval\"
+                       (a leading pretrain stage is implied)
+  --force              ignore completed stage artifacts; recompute everything
 
 eval flags:
   --from <ckpt>        evaluate a saved .ptns checkpoint (pruned/retrained/
@@ -129,7 +149,7 @@ struct Env {
 
 fn common(args: &Args) -> Result<Env> {
     // size the kernel pool before the first rayon use anywhere
-    perp::util::threads::configure(args.opt_usize("threads"));
+    perp::util::threads::configure(args.opt_usize("threads")?);
     let artifacts = args
         .opt_str("artifacts")
         .map(PathBuf::from)
@@ -143,27 +163,32 @@ fn common(args: &Args) -> Result<Env> {
     if let Some(backend) = args.opt_str("backend") {
         cfg.backend = backend;
     }
-    if let Some(steps) = args.opt_str("steps") {
-        let steps: u64 = steps.parse().context("--steps")?;
+    if let Some(steps) = args.opt_u64("steps")? {
         cfg.retrain_steps = steps;
     }
-    if let Some(steps) = args.opt_str("pretrain-steps") {
-        cfg.pretrain_steps = steps.parse().context("--pretrain-steps")?;
+    if let Some(steps) = args.opt_u64("pretrain-steps")? {
+        cfg.pretrain_steps = steps;
     }
     let kind = BackendKind::parse(&cfg.backend).map_err(|e| anyhow::anyhow!(e))?;
     let rt = open_backend(kind, &artifacts)?;
     let out = PathBuf::from(args.str("out", "results"));
     std::fs::create_dir_all(&out).ok();
-    Ok(Env { rt, cfg, out, seed: args.u64("seed", 0) })
+    Ok(Env { rt, cfg, out, seed: args.u64("seed", 0)? })
 }
 
 fn ctx(env: &Env) -> ExpContext<'_> {
     ExpContext::new(env.rt.as_ref(), env.cfg.clone(), env.out.join("cache"))
 }
 
+/// Plan executor over this environment — shims run quiet so their output
+/// stays byte-compatible with the pre-plan subcommands.
+fn executor(env: &Env) -> Executor<'_> {
+    Executor::new(env.rt.as_ref(), env.cfg.clone(), env.out.join("cache"), env.seed)
+}
+
 fn info(args: &Args) -> Result<()> {
     let env = common(args)?;
-    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    args.finish()?;
     println!(
         "backend: {} (manifest: {:?})",
         env.rt.kind(),
@@ -194,11 +219,63 @@ fn info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Plans.
+// ---------------------------------------------------------------------------
+
+fn run_cmd(args: &Args) -> Result<()> {
+    let env = common(args)?;
+    let plan_file = args.opt_str("plan");
+    let stages = args.opt_str("stages");
+    let force = args.flag("force");
+    args.finish()?;
+    let plan = match (&plan_file, &stages) {
+        (Some(p), None) => Plan::from_file(Path::new(p))?,
+        (None, Some(s)) => parse_plan("inline", s).map_err(|e| anyhow::anyhow!(ArgError(e)))?,
+        _ => {
+            // a usage problem, not a runtime failure: exit 2 like other
+            // argument errors
+            return Err(anyhow::anyhow!(ArgError(
+                "run needs exactly one of --plan <file.json> or --stages \"<spec>\"".to_string()
+            )));
+        }
+    };
+    println!(
+        "running plan {:?} ({} stages) on {} [{}]",
+        plan.name,
+        plan.stages.len(),
+        env.cfg.model,
+        env.rt.kind()
+    );
+    let report = executor(&env).force(force).run(&plan)?;
+    println!("{}", report.summary());
+    if let Some(m) = report.last_metrics() {
+        if m.acc.is_nan() {
+            println!("final eval: test ppl {:.3} (sparsity {:.3})", m.ppl, m.sparsity);
+        } else {
+            println!(
+                "final eval: test ppl {:.3}, mean zero-shot acc {:.1}% (sparsity {:.3})",
+                m.ppl,
+                m.acc * 100.0,
+                m.sparsity
+            );
+            for (name, acc) in &m.per_task {
+                println!("  {:>6}: {:.1}%", name, acc * 100.0);
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Shim subcommands: each builds a small plan and prints the classic lines.
+// ---------------------------------------------------------------------------
+
 fn pretrain(args: &Args) -> Result<()> {
     let env = common(args)?;
-    args.finish().map_err(|e| anyhow::anyhow!(e))?;
-    let c = ctx(&env);
-    let s = c.dense_session(env.seed)?;
+    args.finish()?;
+    let plan = Plan::new("pretrain").pretrain();
+    let (_, s) = executor(&env).quiet(true).run_with_session(&plan)?;
     let ppl = s.eval_ppl_test()?;
     println!(
         "dense {}: test ppl {:.3} (loss {:.4}), last train tps {:.0}",
@@ -209,17 +286,18 @@ fn pretrain(args: &Args) -> Result<()> {
 
 fn parse_prune(args: &Args) -> Result<(Criterion, Pattern)> {
     let crit = Criterion::parse(&args.str("criterion", "magnitude"))
-        .map_err(|e| anyhow::anyhow!(e))?;
-    let pattern = Pattern::parse(&args.str("sparsity", "0.5")).map_err(|e| anyhow::anyhow!(e))?;
+        .map_err(|e| anyhow::anyhow!(ArgError(e)))?;
+    let pattern =
+        Pattern::parse(&args.str("sparsity", "0.5")).map_err(|e| anyhow::anyhow!(ArgError(e)))?;
     Ok((crit, pattern))
 }
 
 fn prune(args: &Args) -> Result<()> {
     let env = common(args)?;
     let (crit, pattern) = parse_prune(args)?;
-    args.finish().map_err(|e| anyhow::anyhow!(e))?;
-    let c = ctx(&env);
-    let (s, _) = c.pruned_session(env.seed, crit, pattern)?;
+    args.finish()?;
+    let plan = Plan::new("prune").pretrain().prune(crit, pattern);
+    let (_, s) = executor(&env).quiet(true).run_with_session(&plan)?;
     let ppl = s.eval_ppl_test()?;
     println!(
         "{} @ {} ({}): achieved sparsity {:.3}, test ppl {:.2}",
@@ -236,15 +314,41 @@ fn prune(args: &Args) -> Result<()> {
 fn retrain(args: &Args) -> Result<()> {
     let env = common(args)?;
     let (crit, pattern) = parse_prune(args)?;
-    let mode = Mode::parse(&args.str("mode", "masklora")).map_err(|e| anyhow::anyhow!(e))?;
-    args.finish().map_err(|e| anyhow::anyhow!(e))?;
-    let c = ctx(&env);
-    let (base, _) = c.pruned_session(env.seed, crit, pattern)?;
-    let before = {
-        let mut s = c.clone_session(&base)?;
-        c.evaluate(&mut s, false, None)?
-    };
-    let (cell, lr) = c.retrain_tuned(&base, mode, env.cfg.retrain_steps, true)?;
+    let mode =
+        Mode::parse(&args.str("mode", "masklora")).map_err(|e| anyhow::anyhow!(ArgError(e)))?;
+    args.finish()?;
+    let ex = executor(&env).quiet(true);
+    // pruned baseline; its stages are the prefix of the full plan below, so
+    // the second run loads them from the cache instead of pruning twice
+    let base_plan = Plan::new("retrain-base").pretrain().prune(crit, pattern);
+    let (_, pruned) = ex.run_with_session(&base_plan)?;
+    let before = pruned.eval_ppl_test()?;
+
+    let mut plan = Plan::new("retrain")
+        .pretrain()
+        .prune(crit, pattern)
+        .retrain(mode, None, None);
+    if mode.is_lora() && mode != Mode::Lora {
+        // standard LoRA stays unmerged (Table 2's "Mergeable: no")
+        plan = plan.merge();
+    }
+    let (report, s) = ex.run_with_session(&plan)?;
+    let after = s.eval_ppl_test()?;
+    let acc = perp::eval::mean_accuracy(&s.eval_tasks()?);
+    let tps = report.stages.iter().rev().find_map(|r| r.tps).unwrap_or(0.0);
+    let pct = report
+        .stages
+        .iter()
+        .rev()
+        .find_map(|r| r.trainable_pct)
+        .unwrap_or(0.0);
+    // the lr the stage actually used (grid-tuned when lr_grid has >1 entry)
+    let lr = report
+        .stages
+        .iter()
+        .rev()
+        .find_map(|r| r.lr)
+        .unwrap_or(env.cfg.lr_grid[0]);
     println!(
         "{} @ {} + {} ({} steps, lr {lr}): ppl {:.2} -> {:.2}, acc {:.1}%, tps {:.0}, trainable {:.3}%",
         crit.name(),
@@ -252,10 +356,10 @@ fn retrain(args: &Args) -> Result<()> {
         mode.name(),
         env.cfg.retrain_steps,
         before.ppl,
-        cell.ppl,
-        cell.acc * 100.0,
-        cell.tps,
-        cell.trainable_pct
+        after.ppl,
+        acc * 100.0,
+        tps,
+        pct
     );
     Ok(())
 }
@@ -266,34 +370,39 @@ fn reconstruct_cmd(args: &Args) -> Result<()> {
     let recon_mode = match args.str("recon-mode", "masklora").as_str() {
         "masklora" => ReconMode::MaskLora,
         "full" => ReconMode::FullFt,
-        other => bail!("unknown recon mode {other:?}"),
+        other => {
+            return Err(anyhow::anyhow!(ArgError(format!(
+                "--recon-mode expects masklora|full, got {other:?}"
+            ))))
+        }
     };
-    args.finish().map_err(|e| anyhow::anyhow!(e))?;
-    let c = ctx(&env);
-    let (base, dense) = c.pruned_session(env.seed, crit, pattern)?;
-    let before = {
-        let mut s = c.clone_session(&base)?;
-        c.evaluate(&mut s, false, None)?
-    };
-    let mut s = c.clone_session(&base)?;
-    let target = s.masks.clone();
-    let report = reconstruct::reconstruct(
-        &mut s,
-        &target,
-        &dense,
-        recon_mode,
-        env.cfg.recon_steps,
-        env.cfg.recon_lr,
-    )?;
-    let after = c.evaluate(&mut s, true, None)?;
+    args.finish()?;
+    let ex = executor(&env).quiet(true);
+    let base_plan = Plan::new("recon-base").pretrain().prune(crit, pattern);
+    let (_, pruned) = ex.run_with_session(&base_plan)?;
+    let before = pruned.eval_ppl_test()?;
+
+    let plan = Plan::new("reconstruct")
+        .pretrain()
+        .prune(crit, pattern)
+        .reconstruct(recon_mode, None, None);
+    let (report, s) = ex.run_with_session(&plan)?;
+    let after = s.eval_ppl_test()?;
+    let acc = perp::eval::mean_accuracy(&s.eval_tasks()?);
+    let mean_impr = report
+        .stages
+        .iter()
+        .rev()
+        .find_map(|r| r.mean_improvement)
+        .unwrap_or(0.0);
     println!(
         "{} @ {} + reconstruction: ppl {:.2} -> {:.2}, acc {:.1}%, mean layer-loss drop {:.4}",
         crit.name(),
         pattern.label(),
         before.ppl,
         after.ppl,
-        after.acc * 100.0,
-        report.mean_improvement()
+        acc * 100.0,
+        mean_impr
     );
     Ok(())
 }
@@ -301,13 +410,18 @@ fn reconstruct_cmd(args: &Args) -> Result<()> {
 fn eval_cmd(args: &Args) -> Result<()> {
     let env = common(args)?;
     let from = args.opt_str("from");
-    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    args.finish()?;
     let s = match &from {
         // evaluate a saved artifact (pruned / retrained / merged) directly
         Some(path) => {
             Session::from_checkpoint(env.rt.as_ref(), env.cfg.clone(), env.seed, Path::new(path))?
         }
-        None => ctx(&env).dense_session(env.seed)?,
+        None => {
+            executor(&env)
+                .quiet(true)
+                .run_with_session(&Plan::new("eval").pretrain())?
+                .1
+        }
     };
     let ppl = s.eval_ppl_test()?;
     let tasks = s.eval_tasks()?;
@@ -344,7 +458,7 @@ fn run_and_record(env: &Env, exp: &str) -> Result<()> {
 fn sweep_cmd(args: &Args) -> Result<()> {
     let env = common(args)?;
     let exp = args.str("exp", "");
-    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    args.finish()?;
     if exp.is_empty() {
         bail!("--exp required; one of {:?}", sweep::EXPERIMENTS);
     }
@@ -353,7 +467,7 @@ fn sweep_cmd(args: &Args) -> Result<()> {
 
 fn tables(args: &Args) -> Result<()> {
     let env = common(args)?;
-    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    args.finish()?;
     for exp in sweep::EXPERIMENTS {
         run_and_record(&env, exp)?;
     }
@@ -367,12 +481,12 @@ fn tables(args: &Args) -> Result<()> {
 fn serve(args: &Args) -> Result<()> {
     let env = common(args)?;
     let host = args.str("host", "127.0.0.1");
-    let port = args.usize("port", 7777);
-    let workers = args.opt_usize("workers");
-    let max_batch = args.opt_usize("max-batch");
+    let port = args.usize("port", 7777)?;
+    let workers = args.opt_usize("workers")?;
+    let max_batch = args.opt_usize("max-batch")?;
     let from = args.opt_str("from").map(PathBuf::from);
     let variants = args.opt_str("variants");
-    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    args.finish()?;
 
     let cache_dir = env.out.join("cache");
     let mut batch = BatchCfg::default();
@@ -499,11 +613,11 @@ fn bench_phase(
 
 fn bench_serve(args: &Args) -> Result<()> {
     let env = common(args)?;
-    let requests = args.usize("requests", 16).max(1);
-    let max_tokens = args.usize("max-tokens", 16).max(1);
-    let concurrency = args.usize("concurrency", 8).max(2);
+    let requests = args.usize("requests", 16)?.max(1);
+    let max_tokens = args.usize("max-tokens", 16)?.max(1);
+    let concurrency = args.usize("concurrency", 8)?.max(2);
     let from = args.opt_str("from").map(PathBuf::from);
-    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    args.finish()?;
 
     let cache_dir = env.out.join("cache");
     if from.is_none() {

@@ -1,0 +1,103 @@
+//! Content addressing for plan stages.
+//!
+//! A stage's key is an FNV-1a 64-bit chain over everything that determines
+//! its output: the model, the experiment config fields the stages read, the
+//! seed, the backend, and the canonical JSON of *every* stage up to and
+//! including this one.  Properties that fall out:
+//!
+//! * two plans sharing a prefix share that prefix's artifacts (a sweep over
+//!   retrain iterations reuses one pruned checkpoint);
+//! * editing any upstream stage, the config, or the seed changes every
+//!   downstream key — stale artifacts can never be picked up;
+//! * keys are stable across processes and platforms (pure integer math over
+//!   canonical strings).
+
+use crate::config::ExperimentConfig;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over a byte slice, continuing from `state`.
+pub fn fnv1a(state: u64, bytes: &[u8]) -> u64 {
+    let mut h = state;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// A chained content key.  `push` derives the next stage's key; the hex form
+/// names the artifact directory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Key(pub u64);
+
+impl Key {
+    pub fn push(self, s: &str) -> Key {
+        // separator byte keeps ("ab","c") distinct from ("a","bc")
+        Key(fnv1a(fnv1a(self.0, &[0x1f]), s.as_bytes()))
+    }
+
+    pub fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+}
+
+/// The chain root: every config field a stage can read, plus model, seed and
+/// backend.  Deliberately explicit (not `Debug`-derived) so adding unrelated
+/// config fields later does not invalidate existing caches by accident.
+pub fn base_key(cfg: &ExperimentConfig, seed: u64) -> Key {
+    let basis = format!(
+        "perp-plan-v1|{}|{}|seed={}|pre={}@{}|re={}|grid={:?}|calib={}|rc={}@{}|tasks={}|eb={}|ds={}",
+        cfg.model,
+        cfg.backend,
+        seed,
+        cfg.pretrain_steps,
+        cfg.pretrain_lr,
+        cfg.retrain_steps,
+        cfg.lr_grid,
+        cfg.calib_seqs,
+        cfg.recon_steps,
+        cfg.recon_lr,
+        cfg.items_per_task,
+        cfg.eval_batches,
+        cfg.data_seed,
+    );
+    Key(fnv1a(FNV_OFFSET, basis.as_bytes()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_reference_vectors() {
+        // standard FNV-1a 64 test vectors
+        assert_eq!(fnv1a(FNV_OFFSET, b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(FNV_OFFSET, b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(FNV_OFFSET, b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn chain_is_order_sensitive_and_separated() {
+        let k = Key(FNV_OFFSET);
+        assert_ne!(k.push("a").push("b"), k.push("b").push("a"));
+        assert_ne!(k.push("ab").push("c"), k.push("a").push("bc"));
+        assert_eq!(k.push("x"), k.push("x"));
+    }
+
+    #[test]
+    fn base_key_tracks_config_and_seed() {
+        let c = ExperimentConfig::quick("gpt-nano");
+        let k0 = base_key(&c, 0);
+        assert_ne!(k0, base_key(&c, 1));
+        let mut c2 = c.clone();
+        c2.retrain_steps += 1;
+        assert_ne!(k0, base_key(&c2, 0));
+        let mut c3 = c.clone();
+        c3.model = "gpt-tiny".to_string();
+        assert_ne!(k0, base_key(&c3, 0));
+        assert_eq!(k0, base_key(&ExperimentConfig::quick("gpt-nano"), 0));
+        assert_eq!(k0.hex().len(), 16);
+    }
+}

@@ -1,0 +1,551 @@
+//! The plan executor: drive a [`Plan`] over a [`Session`] with
+//! content-addressed artifact caching.
+//!
+//! Every stage writes its outputs under `<cache>/plan/<key>/` where `key` is
+//! the FNV chain of (model, config, seed, backend, all upstream stages):
+//!
+//! | stage       | artifacts                                         |
+//! |-------------|---------------------------------------------------|
+//! | pretrain    | `meta.json` (weights live in the shared dense checkpoint cache) |
+//! | prune       | `state.ptns`, `masks.ptns`, `meta.json` (sparsity) |
+//! | retrain     | `state.ptns`, `masks.ptns`, [`lora.ptns`], `meta.json` (tps, trainable%) |
+//! | reconstruct | `state.ptns`, `masks.ptns`, `meta.json` (mean layer-loss drop) |
+//! | merge       | `state.ptns`, `masks.ptns`, `meta.json`           |
+//! | eval        | `metrics.json` (ppl, acc, per-task, sparsity)     |
+//! | export      | none — always executes (side effect outside the cache) |
+//!
+//! `meta.json` / `metrics.json` are written last, so their presence marks a
+//! complete stage; `.ptns` writes are temp-file + rename (see
+//! [`crate::tensor::io`]), so a crashed run never leaves a half-artifact
+//! that passes the completeness check.  Re-running a plan therefore loads
+//! completed stages (zero training steps, zero backend executions) and only
+//! computes the suffix that changed.  `force` ignores the stage cache; the
+//! keyed dense pretrain checkpoint is still honoured because it is
+//! deterministic in exactly the inputs the key hashes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::reconstruct;
+use crate::coordinator::sweep::ExpContext;
+use crate::coordinator::Session;
+use crate::model::ParamStore;
+use crate::peft::{LoraState, Mode};
+use crate::pruning::MaskSet;
+use crate::runtime::{Backend, ModelManifest};
+use crate::tensor::{io, Tensor};
+use crate::util::json::Json;
+
+use super::cachekey::{base_key, Key};
+use super::plan::{Plan, Stage};
+
+/// What an `eval` stage measured.
+#[derive(Debug, Clone)]
+pub struct EvalMetrics {
+    pub ppl: f64,
+    pub loss: f64,
+    /// mean zero-shot accuracy; NaN when the stage ran perplexity-only
+    pub acc: f64,
+    pub per_task: Vec<(String, f64)>,
+    /// achieved weight sparsity at evaluation time
+    pub sparsity: f64,
+}
+
+/// Outcome of one stage.
+#[derive(Debug, Clone)]
+pub struct StageReport {
+    pub label: String,
+    /// 16-hex content address of this stage's artifacts
+    pub key: String,
+    pub cache_hit: bool,
+    pub wall_s: f64,
+    /// populated by `eval` stages
+    pub metrics: Option<EvalMetrics>,
+    /// populated by `prune` stages
+    pub sparsity: Option<f64>,
+    /// populated by `retrain` stages
+    pub tps: Option<f64>,
+    pub trainable_pct: Option<f64>,
+    /// learning rate the retrain stage actually used (grid-tuned when the
+    /// plan left it unpinned)
+    pub lr: Option<f64>,
+    /// populated by `reconstruct` stages
+    pub mean_improvement: Option<f64>,
+}
+
+impl StageReport {
+    fn new(label: String, key: &Key) -> StageReport {
+        StageReport {
+            label,
+            key: key.hex(),
+            cache_hit: false,
+            wall_s: 0.0,
+            metrics: None,
+            sparsity: None,
+            tps: None,
+            trainable_pct: None,
+            lr: None,
+            mean_improvement: None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub plan: String,
+    pub stages: Vec<StageReport>,
+}
+
+impl RunReport {
+    pub fn cache_hits(&self) -> usize {
+        self.stages.iter().filter(|s| s.cache_hit).count()
+    }
+
+    /// Metrics of the last `eval` stage, if any.
+    pub fn last_metrics(&self) -> Option<&EvalMetrics> {
+        self.stages.iter().rev().find_map(|s| s.metrics.as_ref())
+    }
+
+    /// All `eval` stage metrics in plan order.
+    pub fn metrics(&self) -> Vec<&EvalMetrics> {
+        self.stages.iter().filter_map(|s| s.metrics.as_ref()).collect()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "plan {}: {}/{} stages from cache",
+            self.plan,
+            self.cache_hits(),
+            self.stages.len()
+        )
+    }
+}
+
+/// Drives plans over sessions.  Construct once per (backend, config, seed);
+/// run as many plans as you like — shared prefixes share artifacts.
+pub struct Executor<'rt> {
+    rt: &'rt dyn Backend,
+    cfg: ExperimentConfig,
+    /// results cache root (also holds the dense checkpoint cache)
+    cache_dir: PathBuf,
+    seed: u64,
+    force: bool,
+    quiet: bool,
+}
+
+impl<'rt> Executor<'rt> {
+    pub fn new(
+        rt: &'rt dyn Backend,
+        cfg: ExperimentConfig,
+        cache_dir: PathBuf,
+        seed: u64,
+    ) -> Executor<'rt> {
+        Executor { rt, cfg, cache_dir, seed, force: false, quiet: false }
+    }
+
+    /// Ignore completed stage artifacts and recompute everything.
+    pub fn force(mut self, force: bool) -> Self {
+        self.force = force;
+        self
+    }
+
+    /// Suppress per-stage progress lines (sweeps drive many small plans).
+    pub fn quiet(mut self, quiet: bool) -> Self {
+        self.quiet = quiet;
+        self
+    }
+
+    pub fn run(&self, plan: &Plan) -> Result<RunReport> {
+        self.run_with_session(plan).map(|(report, _)| report)
+    }
+
+    /// Run a plan, returning the report plus the final session state (the
+    /// CLI shims print from it).
+    pub fn run_with_session(&self, plan: &Plan) -> Result<(RunReport, Session<'rt>)> {
+        plan.validate()
+            .map_err(|e| anyhow::anyhow!("invalid plan {:?}: {e}", plan.name))?;
+        let ctx = ExpContext::new(self.rt, self.cfg.clone(), self.cache_dir.clone());
+        let total = plan.stages.len();
+        let mut key = base_key(&self.cfg, self.seed);
+        let mut session: Option<Session<'rt>> = None;
+        // weights snapshotted just before the most recent prune — the
+        // reconstruction targets (Eq. 1's dense W_l).  Only kept when a
+        // later stage actually reconstructs; plans without one skip the copy
+        let last_recon = plan
+            .stages
+            .iter()
+            .rposition(|s| matches!(s, Stage::Reconstruct { .. }));
+        let mut pre_prune: Option<BTreeMap<String, Tensor>> = None;
+        let mut reports = Vec::with_capacity(total);
+
+        for (i, stage) in plan.stages.iter().enumerate() {
+            key = key.push(&stage.canonical());
+            let dir = self.cache_dir.join("plan").join(key.hex());
+            let t0 = Instant::now();
+            let mut rep = StageReport::new(stage.label(), &key);
+
+            match stage {
+                Stage::Pretrain => {
+                    rep.cache_hit = !self.force && dir.join("meta.json").is_file();
+                    // dense_session loads the shared checkpoint when present,
+                    // so even a cache-miss marker costs no training steps if
+                    // an earlier run (or sweep) already converged this config
+                    session = Some(ctx.dense_session(self.seed)?);
+                    if !rep.cache_hit {
+                        self.write_meta(&dir, stage, vec![])?;
+                    }
+                }
+                Stage::Prune { criterion, pattern } => {
+                    let mut s = session.take().expect("validated plan: session exists");
+                    // snapshot the reconstruction targets from the incoming
+                    // weights — correct on both the hit and miss path
+                    if last_recon.is_some_and(|r| r > i) {
+                        pre_prune = Some(
+                            s.mm.prunable
+                                .iter()
+                                .map(|n| (n.clone(), s.params.get(n).clone()))
+                                .collect(),
+                        );
+                    }
+                    if self.hit(&dir, &["state.ptns", "masks.ptns", "meta.json"]) {
+                        rep.cache_hit = true;
+                        self.load_state(&mut s, &dir)?;
+                        rep.sparsity = read_meta_num(&dir, "sparsity");
+                    } else {
+                        let grams = if criterion.needs_calibration() {
+                            Some(s.calibrate()?)
+                        } else {
+                            None
+                        };
+                        s.prune(*criterion, *pattern, grams.as_ref())?;
+                        let sparsity = s.masks.sparsity();
+                        rep.sparsity = Some(sparsity);
+                        self.save_state(&s, &dir)?;
+                        self.write_meta(&dir, stage, vec![("sparsity", Json::Num(sparsity))])?;
+                    }
+                    session = Some(s);
+                }
+                Stage::Retrain { mode, steps, lr } => {
+                    let steps = steps.unwrap_or(self.cfg.retrain_steps);
+                    let mut needs = vec!["state.ptns", "masks.ptns"];
+                    if mode.is_lora() {
+                        needs.push("lora.ptns");
+                    }
+                    needs.push("meta.json");
+                    if self.hit(&dir, &needs) {
+                        rep.cache_hit = true;
+                        let mut s = session.take().expect("validated plan: session exists");
+                        self.load_state(&mut s, &dir)?;
+                        s.lora = if mode.is_lora() {
+                            Some((*mode, load_lora(&s.mm, &dir.join("lora.ptns"))?))
+                        } else {
+                            None
+                        };
+                        s.last_tps = read_meta_num(&dir, "tps").unwrap_or(0.0);
+                        rep.tps = Some(s.last_tps);
+                        rep.trainable_pct = read_meta_num(&dir, "trainable_pct");
+                        rep.lr = read_meta_num(&dir, "lr");
+                        session = Some(s);
+                    } else {
+                        let base = session.take().expect("validated plan: session exists");
+                        // unpinned lr → the legacy grid tuning (no-op for the
+                        // single-entry grids the shipped profiles use)
+                        let lr = match lr {
+                            Some(l) => *l,
+                            None => self.tuned_lr(&ctx, &base, *mode, steps)?,
+                        };
+                        // fresh clone, exactly like the legacy retrain path
+                        let mut s = ctx.clone_session(&base)?;
+                        drop(base);
+                        s.retrain(*mode, steps, lr)?;
+                        let pct = 100.0 * s.mm.trainable_count(mode.trainable_key()) as f64
+                            / s.mm.total_params() as f64;
+                        rep.tps = Some(s.last_tps);
+                        rep.trainable_pct = Some(pct);
+                        rep.lr = Some(lr);
+                        self.save_state(&s, &dir)?;
+                        if let Some((_, lora)) = &s.lora {
+                            io::save(&dir.join("lora.ptns"), &lora.tensors)
+                                .context("saving adapters")?;
+                        }
+                        self.write_meta(
+                            &dir,
+                            stage,
+                            vec![
+                                ("tps", Json::Num(s.last_tps)),
+                                ("trainable_pct", Json::Num(pct)),
+                                ("lr", Json::Num(lr)),
+                            ],
+                        )?;
+                        session = Some(s);
+                    }
+                }
+                Stage::Reconstruct { mode, steps, lr } => {
+                    let steps = steps.unwrap_or(self.cfg.recon_steps);
+                    let lr = lr.unwrap_or(self.cfg.recon_lr);
+                    let mut s = session.take().expect("validated plan: session exists");
+                    if self.hit(&dir, &["state.ptns", "masks.ptns", "meta.json"]) {
+                        rep.cache_hit = true;
+                        self.load_state(&mut s, &dir)?;
+                        rep.mean_improvement = read_meta_num(&dir, "mean_improvement");
+                        session = Some(s);
+                    } else {
+                        let dense = pre_prune
+                            .as_ref()
+                            .expect("validated plan: reconstruct follows a prune");
+                        let mut r = ctx.clone_session(&s)?;
+                        drop(s);
+                        let target = r.masks.clone();
+                        let report =
+                            reconstruct::reconstruct(&mut r, &target, dense, *mode, steps, lr)?;
+                        rep.mean_improvement = Some(report.mean_improvement());
+                        self.save_state(&r, &dir)?;
+                        self.write_meta(
+                            &dir,
+                            stage,
+                            vec![("mean_improvement", Json::Num(report.mean_improvement()))],
+                        )?;
+                        session = Some(r);
+                    }
+                }
+                Stage::Merge => {
+                    let mut s = session.take().expect("validated plan: session exists");
+                    if self.hit(&dir, &["state.ptns", "masks.ptns", "meta.json"]) {
+                        rep.cache_hit = true;
+                        self.load_state(&mut s, &dir)?;
+                        s.lora = None;
+                    } else {
+                        s.merge_adapters()?;
+                        self.save_state(&s, &dir)?;
+                        self.write_meta(&dir, stage, vec![])?;
+                    }
+                    session = Some(s);
+                }
+                Stage::Eval { tasks } => {
+                    if self.hit(&dir, &["metrics.json"]) {
+                        rep.cache_hit = true;
+                        rep.metrics = Some(read_metrics(&dir.join("metrics.json"))?);
+                    } else {
+                        let s = session.as_mut().expect("validated plan: session exists");
+                        let ppl = s.eval_ppl_test()?;
+                        let (acc, per_task) = if *tasks {
+                            let tr = s.eval_tasks()?;
+                            (
+                                crate::eval::mean_accuracy(&tr),
+                                tr.into_iter()
+                                    .map(|t| (t.name, t.accuracy))
+                                    .collect::<Vec<_>>(),
+                            )
+                        } else {
+                            (f64::NAN, Vec::new())
+                        };
+                        let m = EvalMetrics {
+                            ppl: ppl.ppl,
+                            loss: ppl.loss,
+                            acc,
+                            per_task,
+                            sparsity: s.params.weight_sparsity(&s.mm),
+                        };
+                        write_metrics(&dir.join("metrics.json"), &m)?;
+                        rep.metrics = Some(m);
+                    }
+                }
+                Stage::Export { path } => {
+                    // side effect outside the cache: always executed
+                    let s = session.as_ref().expect("validated plan: session exists");
+                    s.save(Path::new(path))?;
+                }
+            }
+
+            rep.wall_s = t0.elapsed().as_secs_f64();
+            if !self.quiet {
+                let status = if rep.cache_hit {
+                    "cache hit".to_string()
+                } else {
+                    format!("done in {:.2}s", rep.wall_s)
+                };
+                println!(
+                    "[{}/{}] {:<28} {} (key {})",
+                    i + 1,
+                    total,
+                    rep.label,
+                    status,
+                    &rep.key[..10]
+                );
+            }
+            reports.push(rep);
+        }
+
+        let session = session.expect("validated plan: at least the pretrain stage ran");
+        Ok((RunReport { plan: plan.name.clone(), stages: reports }, session))
+    }
+
+    /// The legacy lr-grid scan (mirrors `ExpContext::retrain_tuned`): train
+    /// once per grid entry, evaluate test ppl merged (standard LoRA stays
+    /// unmerged), return the winning lr.  Single-entry grids — every shipped
+    /// profile — skip the scan, so `Retrain { lr: None }` costs nothing
+    /// extra there; multi-entry grids pay one extra retrain of the winner
+    /// (the stage then re-trains at that lr so its artifact is uniformly
+    /// *unmerged*, keeping the explicit `merge` stage meaningful).
+    fn tuned_lr(
+        &self,
+        ctx: &ExpContext<'rt>,
+        base: &Session<'rt>,
+        mode: Mode,
+        steps: u64,
+    ) -> Result<f64> {
+        if self.cfg.lr_grid.len() == 1 {
+            return Ok(self.cfg.lr_grid[0]);
+        }
+        let mut best: Option<(f64, f64)> = None; // (test ppl, lr)
+        for &lr in &self.cfg.lr_grid {
+            let mut s = ctx.clone_session(base)?;
+            s.retrain(mode, steps, lr)?;
+            if mode != Mode::Lora {
+                s.merge_adapters()?;
+            }
+            let ppl = s.eval_ppl_test()?.ppl;
+            if best.map(|(b, _)| ppl < b).unwrap_or(true) {
+                best = Some((ppl, lr));
+            }
+        }
+        Ok(best.expect("non-empty lr grid").1)
+    }
+
+    // ------------------------------------------------------------------
+    // Artifact plumbing.
+    // ------------------------------------------------------------------
+
+    fn hit(&self, dir: &Path, needs: &[&str]) -> bool {
+        !self.force && needs.iter().all(|f| dir.join(f).is_file())
+    }
+
+    fn save_state(&self, s: &Session, dir: &Path) -> Result<()> {
+        io::save(&dir.join("state.ptns"), s.params.map()).context("saving stage weights")?;
+        io::save(&dir.join("masks.ptns"), &s.masks.masks).context("saving stage masks")?;
+        Ok(())
+    }
+
+    fn load_state(&self, s: &mut Session, dir: &Path) -> Result<()> {
+        s.params = ParamStore::load(&s.mm, &dir.join("state.ptns"))?;
+        s.masks = load_masks(&s.mm, &dir.join("masks.ptns"))?;
+        Ok(())
+    }
+
+    /// Write `meta.json` — the completion marker, so it must come last.
+    fn write_meta(&self, dir: &Path, stage: &Stage, extra: Vec<(&str, Json)>) -> Result<()> {
+        let mut pairs = vec![("stage", stage.to_json())];
+        pairs.extend(extra);
+        write_json(&dir.join("meta.json"), &Json::obj(pairs))
+    }
+}
+
+fn load_masks(mm: &ModelManifest, path: &Path) -> Result<MaskSet> {
+    let loaded = io::load(path)?;
+    let mut ms = MaskSet::default();
+    for n in &mm.prunable {
+        let t = loaded
+            .get(n)
+            .with_context(|| format!("mask artifact {path:?} missing {n:?}"))?;
+        ms.set(n, t.clone());
+    }
+    Ok(ms)
+}
+
+fn load_lora(mm: &ModelManifest, path: &Path) -> Result<LoraState> {
+    let loaded = io::load(path)?;
+    let mut st = LoraState::default();
+    for (name, shape) in &mm.adapters {
+        let t = loaded
+            .get(name)
+            .with_context(|| format!("adapter artifact {path:?} missing {name:?}"))?;
+        anyhow::ensure!(
+            t.shape() == &shape[..],
+            "adapter {name:?} shape {:?} vs manifest {:?}",
+            t.shape(),
+            shape
+        );
+        st.tensors.insert(name.clone(), t.clone());
+    }
+    Ok(st)
+}
+
+/// NaN/inf-safe number: serialized as null, read back as the given default.
+fn num_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+fn write_metrics(path: &Path, m: &EvalMetrics) -> Result<()> {
+    let per_task = Json::Arr(
+        m.per_task
+            .iter()
+            .map(|(name, acc)| {
+                Json::obj(vec![("task", Json::Str(name.clone())), ("acc", num_or_null(*acc))])
+            })
+            .collect(),
+    );
+    write_json(
+        path,
+        &Json::obj(vec![
+            ("ppl", num_or_null(m.ppl)),
+            ("loss", num_or_null(m.loss)),
+            ("acc", num_or_null(m.acc)),
+            ("per_task", per_task),
+            ("sparsity", num_or_null(m.sparsity)),
+        ]),
+    )
+}
+
+fn read_metrics(path: &Path) -> Result<EvalMetrics> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+    let num = |key: &str, default: f64| j.get(key).and_then(Json::as_f64).unwrap_or(default);
+    let per_task = j
+        .get("per_task")
+        .and_then(Json::as_arr)
+        .map(|a| {
+            a.iter()
+                .filter_map(|e| {
+                    let name = e.get("task")?.as_str()?.to_string();
+                    let acc = e.get("acc").and_then(Json::as_f64).unwrap_or(f64::NAN);
+                    Some((name, acc))
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    Ok(EvalMetrics {
+        ppl: num("ppl", f64::INFINITY),
+        loss: num("loss", f64::INFINITY),
+        acc: num("acc", f64::NAN),
+        per_task,
+        sparsity: num("sparsity", 0.0),
+    })
+}
+
+fn read_meta_num(dir: &Path, key: &str) -> Option<f64> {
+    let text = std::fs::read_to_string(dir.join("meta.json")).ok()?;
+    Json::parse(&text).ok()?.get(key).and_then(Json::as_f64)
+}
+
+/// Atomic-enough JSON write: temp file in the target directory, then rename.
+/// The temp name is unique per (process, write) — like `io::save` — so
+/// concurrent executors racing on one stage key never truncate each other's
+/// in-flight marker.
+fn write_json(path: &Path, j: &Json) -> Result<()> {
+    let dir = path.parent().context("json path has no parent")?;
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let unique = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let tmp = path.with_extension(format!("tmp{}-{unique}", std::process::id()));
+    std::fs::write(&tmp, j.to_string()).with_context(|| format!("writing {tmp:?}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+    Ok(())
+}

@@ -1,0 +1,31 @@
+//! Declarative pipeline plans: compose PERP's verbs instead of hard-wiring
+//! one sequence per subcommand.
+//!
+//! * [`plan`] — the typed [`Stage`] enum and the [`Plan`] container with a
+//!   builder API, JSON (de)serialization over [`crate::util::json`] and
+//!   structural validation (`merge` needs a pending LoRA retrain, `retrain`
+//!   needs masks, ...).
+//! * [`parse`] — the inline `--stages` grammar:
+//!   `"prune(wanda,0.5)|retrain(masklora,100)|merge|eval"`.
+//! * [`cachekey`] — content addressing: every stage is keyed by an FNV-1a
+//!   chain over (model, experiment config, seed, all upstream stage specs),
+//!   so two plans sharing a prefix share its artifacts.
+//! * [`executor`] — drives a [`Plan`] over a [`crate::coordinator::Session`],
+//!   persisting per-stage artifacts (`state.ptns`, `masks.ptns`, adapters,
+//!   `meta.json`) under `<cache>/plan/<key>/`.  Re-running a plan loads
+//!   completed stages instead of recomputing them; `--force` ignores the
+//!   stage cache (the keyed dense pretrain checkpoint is still reused — it
+//!   is deterministic in the key inputs).
+//!
+//! The CLI subcommands (`repro pretrain/prune/retrain/reconstruct/eval`) are
+//! thin shims over 1–3 distinctive stages each, `repro run` executes
+//! arbitrary plan files, and the sweep registry generates plans for its
+//! cells — one execution path for everything.
+
+pub mod cachekey;
+pub mod executor;
+pub mod parse;
+pub mod plan;
+
+pub use executor::{EvalMetrics, Executor, RunReport, StageReport};
+pub use plan::{Plan, Stage};

@@ -1,0 +1,225 @@
+//! The inline `--stages` grammar.
+//!
+//! ```text
+//! spec    := stage ('|' stage)*
+//! stage   := name [ '(' arg (',' arg)* ')' ]
+//! name    := pretrain | prune | retrain | reconstruct | merge | eval | export
+//! ```
+//!
+//! Examples:
+//!
+//! ```text
+//! prune(wanda,0.5)|retrain(masklora,100)|merge|eval
+//! prune(magnitude,2:4)|reconstruct(full)|eval(ppl)|export(results/m.ptns)
+//! ```
+//!
+//! Positional args mirror the JSON fields: `prune(criterion,sparsity)`,
+//! `retrain(mode[,steps[,lr]])`, `reconstruct(mode[,steps[,lr]])`,
+//! `eval([ppl|tasks])`, `export(path)`.  A leading `pretrain` is implied
+//! when absent — every plan starts from the (cached) dense model.
+
+use crate::peft::Mode;
+use crate::pruning::{Criterion, Pattern};
+
+use super::plan::{recon_mode_parse, Plan, Stage};
+
+/// Parse one `|`-separated stage spec into stages (no implied pretrain).
+pub fn parse_stages(spec: &str) -> Result<Vec<Stage>, String> {
+    spec.split('|')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(parse_stage)
+        .collect()
+}
+
+/// Parse a spec into a runnable [`Plan`], prepending `pretrain` if absent.
+pub fn parse_plan(name: &str, spec: &str) -> Result<Plan, String> {
+    let mut stages = parse_stages(spec)?;
+    if stages.is_empty() {
+        return Err("empty stage spec".to_string());
+    }
+    if stages[0] != Stage::Pretrain {
+        stages.insert(0, Stage::Pretrain);
+    }
+    Ok(Plan { name: name.to_string(), stages })
+}
+
+fn parse_stage(s: &str) -> Result<Stage, String> {
+    let (name, args) = match s.find('(') {
+        None => (s, Vec::new()),
+        Some(open) => {
+            let Some(stripped) = s[open..].strip_prefix('(').and_then(|r| r.strip_suffix(')'))
+            else {
+                return Err(format!("malformed stage {s:?} (unbalanced parentheses)"));
+            };
+            let args: Vec<&str> = stripped
+                .split(',')
+                .map(str::trim)
+                .filter(|a| !a.is_empty())
+                .collect();
+            (&s[..open], args)
+        }
+    };
+    let argc = |max: usize| -> Result<(), String> {
+        if args.len() > max {
+            Err(format!("{name}: too many arguments in {s:?} (max {max})"))
+        } else {
+            Ok(())
+        }
+    };
+    match name {
+        "pretrain" => {
+            argc(0)?;
+            Ok(Stage::Pretrain)
+        }
+        "prune" => {
+            argc(2)?;
+            let criterion = Criterion::parse(args.first().copied().unwrap_or("magnitude"))?;
+            let pattern = Pattern::parse(args.get(1).copied().unwrap_or("0.5"))?;
+            Ok(Stage::Prune { criterion, pattern })
+        }
+        "retrain" => {
+            argc(3)?;
+            let mode = Mode::parse(
+                args.first()
+                    .copied()
+                    .ok_or_else(|| "retrain needs a mode, e.g. retrain(masklora)".to_string())?,
+            )?;
+            Ok(Stage::Retrain {
+                mode,
+                steps: parse_opt_u64(&args, 1, s)?,
+                lr: parse_opt_f64(&args, 2, s)?,
+            })
+        }
+        "reconstruct" => {
+            argc(3)?;
+            let mode = recon_mode_parse(args.first().copied().unwrap_or("masklora"))?;
+            Ok(Stage::Reconstruct {
+                mode,
+                steps: parse_opt_u64(&args, 1, s)?,
+                lr: parse_opt_f64(&args, 2, s)?,
+            })
+        }
+        "merge" => {
+            argc(0)?;
+            Ok(Stage::Merge)
+        }
+        "eval" => {
+            argc(1)?;
+            let tasks = match args.first().copied() {
+                None | Some("tasks") => true,
+                Some("ppl") => false,
+                Some(other) => return Err(format!("eval: unknown arg {other:?} (ppl|tasks)")),
+            };
+            Ok(Stage::Eval { tasks })
+        }
+        "export" => {
+            argc(1)?;
+            let path = args
+                .first()
+                .copied()
+                .ok_or_else(|| "export needs a path, e.g. export(results/m.ptns)".to_string())?;
+            Ok(Stage::Export { path: path.to_string() })
+        }
+        other => Err(format!(
+            "unknown stage {other:?} (pretrain|prune|retrain|reconstruct|merge|eval|export)"
+        )),
+    }
+}
+
+fn parse_opt_u64(args: &[&str], idx: usize, ctx: &str) -> Result<Option<u64>, String> {
+    match args.get(idx) {
+        None => Ok(None),
+        Some(v) => v
+            .parse::<u64>()
+            .map(Some)
+            .map_err(|_| format!("{ctx}: expected an integer, got {v:?}")),
+    }
+}
+
+fn parse_opt_f64(args: &[&str], idx: usize, ctx: &str) -> Result<Option<f64>, String> {
+    match args.get(idx) {
+        None => Ok(None),
+        Some(v) => v
+            .parse::<f64>()
+            .map(Some)
+            .map_err(|_| format!("{ctx}: expected a number, got {v:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn issue_example_parses() {
+        let p = parse_plan("inline", "prune(wanda,0.5)|retrain(masklora,100)|merge|eval").unwrap();
+        assert_eq!(
+            p.stages,
+            vec![
+                Stage::Pretrain,
+                Stage::Prune { criterion: Criterion::Wanda, pattern: Pattern::Unstructured(0.5) },
+                Stage::Retrain { mode: Mode::MaskLora, steps: Some(100), lr: None },
+                Stage::Merge,
+                Stage::Eval { tasks: true },
+            ]
+        );
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn defaults_and_explicit_pretrain() {
+        let p = parse_plan("x", "pretrain|prune|eval(ppl)").unwrap();
+        assert_eq!(p.stages.len(), 3);
+        assert_eq!(
+            p.stages[1],
+            Stage::Prune {
+                criterion: Criterion::Magnitude,
+                pattern: Pattern::Unstructured(0.5)
+            }
+        );
+        assert_eq!(p.stages[2], Stage::Eval { tasks: false });
+    }
+
+    #[test]
+    fn nm_patterns_reconstruct_and_export() {
+        let p = parse_plan(
+            "x",
+            "prune(sparsegpt,2:4)|reconstruct(full,20,0.002)|eval|export(out/m.ptns)",
+        )
+        .unwrap();
+        assert_eq!(
+            p.stages[1],
+            Stage::Prune {
+                criterion: Criterion::SparseGpt,
+                pattern: Pattern::SemiStructured { n: 2, m: 4 }
+            }
+        );
+        assert_eq!(
+            p.stages[2],
+            Stage::Reconstruct {
+                mode: crate::coordinator::reconstruct::ReconMode::FullFt,
+                steps: Some(20),
+                lr: Some(2e-3),
+            }
+        );
+        assert_eq!(p.stages[4], Stage::Export { path: "out/m.ptns".to_string() });
+    }
+
+    #[test]
+    fn errors_are_clean() {
+        assert!(parse_stages("prune(wanda,0.5").is_err());
+        assert!(parse_stages("retrain").is_err());
+        assert!(parse_stages("retrain(masklora,abc)").is_err());
+        assert!(parse_stages("fly(me)").is_err());
+        assert!(parse_stages("eval(everything)").is_err());
+        assert!(parse_plan("x", " | ").is_err());
+    }
+
+    #[test]
+    fn roundtrips_through_json() {
+        let p = parse_plan("x", "prune(wanda,0.7)|retrain(scalelora,5,0.01)|merge|eval").unwrap();
+        let p2 = Plan::from_text(&p.to_json().to_string()).unwrap();
+        assert_eq!(p, p2);
+    }
+}

@@ -1,0 +1,535 @@
+//! [`Stage`] / [`Plan`]: the typed pipeline vocabulary.
+//!
+//! A plan is an ordered list of stages over one model + experiment config.
+//! Stages deliberately mirror the [`crate::coordinator::Session`] verbs —
+//! the executor adds nothing semantically, it only sequences, caches and
+//! reports.  Optional knobs (`steps`, `lr`) default to the experiment
+//! config at execution time, so the same plan file runs under `--profile
+//! quick` and `--profile full` unchanged.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::reconstruct::ReconMode;
+use crate::peft::Mode;
+use crate::pruning::{Criterion, Pattern};
+use crate::util::json::Json;
+
+/// One pipeline step.  All variants are value types: a stage is fully
+/// described by its JSON object, which is also its cache-key contribution.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stage {
+    /// Converge (or load the cached) dense model.  Must come first.
+    Pretrain,
+    /// Prune the current weights; `pattern` carries the sparsity.
+    Prune { criterion: Criterion, pattern: Pattern },
+    /// PERP retraining.  `steps` defaults to the config's `retrain_steps`;
+    /// an unpinned `lr` is tuned over `lr_grid` on test perplexity like the
+    /// paper (single-entry grids resolve straight to `lr_grid[0]`).
+    Retrain { mode: Mode, steps: Option<u64>, lr: Option<f64> },
+    /// Layer-wise Eq. 1 reconstruction toward the current masks; targets are
+    /// the weights captured just before the preceding prune.
+    Reconstruct { mode: ReconMode, steps: Option<u64>, lr: Option<f64> },
+    /// Fold pending LoRA adapters back into the weights.
+    Merge,
+    /// Test perplexity (+ the zero-shot suite when `tasks`).
+    Eval { tasks: bool },
+    /// Save the current weights as a `.ptns` checkpoint (always executed).
+    Export { path: String },
+}
+
+impl Stage {
+    /// Short human label for progress lines and tables.
+    pub fn label(&self) -> String {
+        match self {
+            Stage::Pretrain => "pretrain".to_string(),
+            Stage::Prune { criterion, pattern } => {
+                format!("prune({},{})", criterion.name(), pattern.label())
+            }
+            Stage::Retrain { mode, steps, lr } => {
+                let mut s = format!("retrain({}", mode.name());
+                if let Some(n) = steps {
+                    s.push_str(&format!(",{n}"));
+                }
+                if let Some(l) = lr {
+                    s.push_str(&format!(",{l}"));
+                }
+                s.push(')');
+                s
+            }
+            Stage::Reconstruct { mode, steps, lr } => {
+                let mut s = format!("reconstruct({}", recon_mode_name(*mode));
+                if let Some(n) = steps {
+                    s.push_str(&format!(",{n}"));
+                }
+                if let Some(l) = lr {
+                    s.push_str(&format!(",{l}"));
+                }
+                s.push(')');
+                s
+            }
+            Stage::Merge => "merge".to_string(),
+            Stage::Eval { tasks: true } => "eval".to_string(),
+            Stage::Eval { tasks: false } => "eval(ppl)".to_string(),
+            Stage::Export { path } => format!("export({path})"),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Stage::Pretrain => Json::obj(vec![("stage", Json::Str("pretrain".into()))]),
+            Stage::Prune { criterion, pattern } => Json::obj(vec![
+                ("stage", Json::Str("prune".into())),
+                ("criterion", Json::Str(criterion.name().into())),
+                ("sparsity", pattern_to_json(pattern)),
+            ]),
+            Stage::Retrain { mode, steps, lr } => {
+                let mut pairs = vec![
+                    ("stage", Json::Str("retrain".into())),
+                    ("mode", Json::Str(mode.name().into())),
+                ];
+                if let Some(n) = steps {
+                    pairs.push(("steps", Json::Num(*n as f64)));
+                }
+                if let Some(l) = lr {
+                    pairs.push(("lr", Json::Num(*l)));
+                }
+                Json::obj(pairs)
+            }
+            Stage::Reconstruct { mode, steps, lr } => {
+                let mut pairs = vec![
+                    ("stage", Json::Str("reconstruct".into())),
+                    ("mode", Json::Str(recon_mode_name(*mode).into())),
+                ];
+                if let Some(n) = steps {
+                    pairs.push(("steps", Json::Num(*n as f64)));
+                }
+                if let Some(l) = lr {
+                    pairs.push(("lr", Json::Num(*l)));
+                }
+                Json::obj(pairs)
+            }
+            Stage::Merge => Json::obj(vec![("stage", Json::Str("merge".into()))]),
+            Stage::Eval { tasks } => Json::obj(vec![
+                ("stage", Json::Str("eval".into())),
+                ("tasks", Json::Bool(*tasks)),
+            ]),
+            Stage::Export { path } => Json::obj(vec![
+                ("stage", Json::Str("export".into())),
+                ("path", Json::Str(path.clone())),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Stage, String> {
+        let kind = j
+            .get("stage")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("stage object missing \"stage\" field: {j}"))?;
+        match kind {
+            "pretrain" => Ok(Stage::Pretrain),
+            "prune" => {
+                let criterion = Criterion::parse(
+                    j.get("criterion").and_then(Json::as_str).unwrap_or("magnitude"),
+                )?;
+                let pattern = match j.get("sparsity") {
+                    None => Pattern::Unstructured(0.5),
+                    Some(v) => pattern_from_json(v)?,
+                };
+                Ok(Stage::Prune { criterion, pattern })
+            }
+            "retrain" => {
+                let mode = Mode::parse(
+                    j.get("mode")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| "retrain stage needs \"mode\"".to_string())?,
+                )?;
+                Ok(Stage::Retrain {
+                    mode,
+                    steps: opt_steps(j)?,
+                    lr: j.get("lr").and_then(Json::as_f64),
+                })
+            }
+            "reconstruct" => {
+                let mode = recon_mode_parse(
+                    j.get("mode").and_then(Json::as_str).unwrap_or("masklora"),
+                )?;
+                Ok(Stage::Reconstruct {
+                    mode,
+                    steps: opt_steps(j)?,
+                    lr: j.get("lr").and_then(Json::as_f64),
+                })
+            }
+            "merge" => Ok(Stage::Merge),
+            "eval" => Ok(Stage::Eval {
+                tasks: j.get("tasks").and_then(Json::as_bool).unwrap_or(true),
+            }),
+            "export" => Ok(Stage::Export {
+                path: j
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| "export stage needs \"path\"".to_string())?
+                    .to_string(),
+            }),
+            other => Err(format!("unknown stage kind {other:?}")),
+        }
+    }
+
+    /// Canonical serialized form — the cache-key contribution of this stage
+    /// (object keys are sorted by construction, so the form is stable).
+    pub fn canonical(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+/// Optional `"steps"` field: must be a non-negative integer when present
+/// (the `as u64` cast would otherwise silently saturate/truncate, accepting
+/// plans the inline grammar rejects).
+fn opt_steps(j: &Json) -> Result<Option<u64>, String> {
+    match j.get("steps") {
+        None => Ok(None),
+        Some(v) => {
+            let f = v
+                .as_f64()
+                .ok_or_else(|| format!("\"steps\" must be a number, got {v}"))?;
+            if f < 0.0 || f.fract() != 0.0 || f > u64::MAX as f64 {
+                return Err(format!("\"steps\" must be a non-negative integer, got {v}"));
+            }
+            Ok(Some(f as u64))
+        }
+    }
+}
+
+fn pattern_to_json(p: &Pattern) -> Json {
+    match p {
+        Pattern::Unstructured(f) => Json::Num(*f),
+        Pattern::SemiStructured { n, m } => Json::Str(format!("{n}:{m}")),
+    }
+}
+
+fn pattern_from_json(j: &Json) -> Result<Pattern, String> {
+    match j {
+        Json::Num(f) => {
+            // accept 0.5 and 50 (percent), like the CLI
+            let f = if *f > 1.0 { *f / 100.0 } else { *f };
+            Ok(Pattern::Unstructured(f))
+        }
+        Json::Str(s) => Pattern::parse(s),
+        other => Err(format!("bad sparsity value {other}")),
+    }
+}
+
+pub(crate) fn recon_mode_name(m: ReconMode) -> &'static str {
+    match m {
+        ReconMode::MaskLora => "masklora",
+        ReconMode::FullFt => "full",
+    }
+}
+
+pub(crate) fn recon_mode_parse(s: &str) -> Result<ReconMode, String> {
+    match s {
+        "masklora" => Ok(ReconMode::MaskLora),
+        "full" | "full_ft" => Ok(ReconMode::FullFt),
+        other => Err(format!("unknown reconstruction mode {other:?} (masklora|full)")),
+    }
+}
+
+/// An ordered stage list plus a name (used in logs and reports only — the
+/// cache key depends on the stages, never on the name).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    pub name: String,
+    pub stages: Vec<Stage>,
+}
+
+impl Plan {
+    pub fn new(name: &str) -> Plan {
+        Plan { name: name.to_string(), stages: Vec::new() }
+    }
+
+    // ----- builder --------------------------------------------------------
+
+    pub fn stage(mut self, s: Stage) -> Plan {
+        self.stages.push(s);
+        self
+    }
+    pub fn pretrain(self) -> Plan {
+        self.stage(Stage::Pretrain)
+    }
+    pub fn prune(self, criterion: Criterion, pattern: Pattern) -> Plan {
+        self.stage(Stage::Prune { criterion, pattern })
+    }
+    /// Retrain with config-default steps/lr (pass `Some(..)` to pin them).
+    pub fn retrain(self, mode: Mode, steps: Option<u64>, lr: Option<f64>) -> Plan {
+        self.stage(Stage::Retrain { mode, steps, lr })
+    }
+    pub fn reconstruct(self, mode: ReconMode, steps: Option<u64>, lr: Option<f64>) -> Plan {
+        self.stage(Stage::Reconstruct { mode, steps, lr })
+    }
+    pub fn merge(self) -> Plan {
+        self.stage(Stage::Merge)
+    }
+    /// Perplexity + the zero-shot task suite.
+    pub fn eval(self) -> Plan {
+        self.stage(Stage::Eval { tasks: true })
+    }
+    /// Perplexity only.
+    pub fn eval_ppl(self) -> Plan {
+        self.stage(Stage::Eval { tasks: false })
+    }
+    pub fn export(self, path: &str) -> Plan {
+        self.stage(Stage::Export { path: path.to_string() })
+    }
+
+    // ----- (de)serialization ----------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("stages", Json::Arr(self.stages.iter().map(Stage::to_json).collect())),
+        ])
+    }
+
+    pub fn to_string_pretty(&self) -> String {
+        // one stage per line keeps plan files diffable
+        let mut out = String::new();
+        out.push_str(&format!("{{\"name\":{},\n \"stages\":[\n", Json::Str(self.name.clone())));
+        for (i, s) in self.stages.iter().enumerate() {
+            out.push_str("  ");
+            out.push_str(&s.to_json().to_string());
+            if i + 1 < self.stages.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("]}\n");
+        out
+    }
+
+    pub fn from_json(j: &Json) -> Result<Plan, String> {
+        let name = j.str_or("name", "plan");
+        let stages = j
+            .get("stages")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "plan needs a \"stages\" array".to_string())?
+            .iter()
+            .map(Stage::from_json)
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(Plan { name, stages })
+    }
+
+    pub fn from_text(s: &str) -> Result<Plan, String> {
+        let j = Json::parse(s).map_err(|e| e.to_string())?;
+        Plan::from_json(&j)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Plan> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading plan {path:?}"))?;
+        Plan::from_text(&text).map_err(|e| anyhow::anyhow!("parsing plan {path:?}: {e}"))
+    }
+
+    // ----- validation -----------------------------------------------------
+
+    /// Structural validation: stage order must make sense before anything
+    /// runs.  Tracks three facts — dense weights exist (pretrain), masks
+    /// exist (prune/reconstruct), and whether a LoRA retrain is pending an
+    /// explicit merge.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.stages.is_empty() {
+            return Err("plan has no stages".to_string());
+        }
+        let mut has_masks = false;
+        let mut pending_lora: Option<Mode> = None;
+        for (i, stage) in self.stages.iter().enumerate() {
+            let at = |msg: &str| Err(format!("stage {} ({}): {msg}", i + 1, stage.label()));
+            match stage {
+                Stage::Pretrain => {
+                    if i != 0 {
+                        return at("pretrain must be the first stage");
+                    }
+                }
+                _ if i == 0 => {
+                    return at("plans must start with a pretrain stage");
+                }
+                Stage::Prune { .. } => {
+                    if pending_lora.is_some() {
+                        return at("merge the pending LoRA retrain before pruning again");
+                    }
+                    has_masks = true;
+                }
+                Stage::Retrain { .. } | Stage::Reconstruct { .. } => {
+                    if !has_masks {
+                        return at("requires masks — add a prune stage first");
+                    }
+                    if pending_lora.is_some() {
+                        return at("merge the pending LoRA retrain first");
+                    }
+                    if let Stage::Retrain { mode, .. } = stage {
+                        if mode.is_lora() {
+                            pending_lora = Some(*mode);
+                        }
+                    }
+                }
+                Stage::Merge => {
+                    if pending_lora.take().is_none() {
+                        return at("merge requires a preceding LoRA-mode retrain");
+                    }
+                }
+                Stage::Eval { .. } => {
+                    // standard LoRA is the one variant evaluated unmerged
+                    if matches!(pending_lora, Some(m) if m != Mode::Lora) {
+                        return at("merge the pending LoRA retrain before evaluating");
+                    }
+                }
+                Stage::Export { .. } => {
+                    if pending_lora.is_some() {
+                        return at("merge before export (adapters are not saved)");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_plan() -> Plan {
+        Plan::new("demo")
+            .pretrain()
+            .prune(Criterion::Wanda, Pattern::Unstructured(0.5))
+            .retrain(Mode::MaskLora, Some(100), Some(1e-3))
+            .merge()
+            .eval()
+            .export("results/demo.ptns")
+    }
+
+    #[test]
+    fn builder_then_json_roundtrip() {
+        let p = demo_plan();
+        let text = p.to_json().to_string();
+        let p2 = Plan::from_text(&text).unwrap();
+        assert_eq!(p, p2);
+        // the pretty form parses to the same plan
+        let p3 = Plan::from_text(&p.to_string_pretty()).unwrap();
+        assert_eq!(p, p3);
+    }
+
+    #[test]
+    fn optional_fields_stay_optional() {
+        let p = Plan::new("d")
+            .pretrain()
+            .prune(Criterion::Magnitude, Pattern::SemiStructured { n: 2, m: 4 })
+            .retrain(Mode::Biases, None, None)
+            .eval_ppl();
+        let p2 = Plan::from_text(&p.to_json().to_string()).unwrap();
+        assert_eq!(p, p2);
+        match &p2.stages[2] {
+            Stage::Retrain { steps, lr, .. } => {
+                assert!(steps.is_none());
+                assert!(lr.is_none());
+            }
+            other => panic!("wrong stage {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sparsity_accepts_percent_and_nm() {
+        let j = Json::parse(r#"{"stage":"prune","criterion":"wanda","sparsity":50}"#).unwrap();
+        assert_eq!(
+            Stage::from_json(&j).unwrap(),
+            Stage::Prune { criterion: Criterion::Wanda, pattern: Pattern::Unstructured(0.5) }
+        );
+        let j = Json::parse(r#"{"stage":"prune","sparsity":"4:8"}"#).unwrap();
+        assert_eq!(
+            Stage::from_json(&j).unwrap(),
+            Stage::Prune {
+                criterion: Criterion::Magnitude,
+                pattern: Pattern::SemiStructured { n: 4, m: 8 }
+            }
+        );
+    }
+
+    #[test]
+    fn bad_steps_rejected_not_coerced() {
+        for steps in ["-1", "2.5", "1e99", "\"many\""] {
+            let text = format!(r#"{{"stage":"retrain","mode":"masklora","steps":{steps}}}"#);
+            let j = Json::parse(&text).unwrap();
+            let e = Stage::from_json(&j).unwrap_err();
+            assert!(e.contains("steps"), "{steps}: {e}");
+        }
+        let j = Json::parse(r#"{"stage":"reconstruct","steps":-3}"#).unwrap();
+        assert!(Stage::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn validation_accepts_good_plans() {
+        demo_plan().validate().unwrap();
+        // iterative prune→retrain cycle
+        Plan::new("iter")
+            .pretrain()
+            .prune(Criterion::Magnitude, Pattern::Unstructured(0.3))
+            .retrain(Mode::MaskLora, None, None)
+            .merge()
+            .prune(Criterion::Magnitude, Pattern::Unstructured(0.5))
+            .retrain(Mode::MaskLora, None, None)
+            .merge()
+            .eval()
+            .validate()
+            .unwrap();
+        // standard LoRA may evaluate unmerged
+        Plan::new("lora")
+            .pretrain()
+            .prune(Criterion::Magnitude, Pattern::Unstructured(0.5))
+            .retrain(Mode::Lora, None, None)
+            .eval()
+            .validate()
+            .unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_bad_plans() {
+        // merge without a lora retrain
+        let e = Plan::new("x").pretrain().merge().validate().unwrap_err();
+        assert!(e.contains("merge requires"), "{e}");
+        // retrain without masks
+        let e = Plan::new("x")
+            .pretrain()
+            .retrain(Mode::MaskLora, None, None)
+            .validate()
+            .unwrap_err();
+        assert!(e.contains("masks"), "{e}");
+        // pretrain not first
+        let e = Plan::new("x")
+            .pretrain()
+            .prune(Criterion::Magnitude, Pattern::Unstructured(0.5))
+            .pretrain()
+            .validate()
+            .unwrap_err();
+        assert!(e.contains("first"), "{e}");
+        // eval with a pending (non-standard) lora retrain
+        let e = Plan::new("x")
+            .pretrain()
+            .prune(Criterion::Magnitude, Pattern::Unstructured(0.5))
+            .retrain(Mode::MaskLora, None, None)
+            .eval()
+            .validate()
+            .unwrap_err();
+        assert!(e.contains("merge"), "{e}");
+        // subset merge is meaningless
+        let e = Plan::new("x")
+            .pretrain()
+            .prune(Criterion::Magnitude, Pattern::Unstructured(0.5))
+            .retrain(Mode::Biases, None, None)
+            .merge()
+            .validate()
+            .unwrap_err();
+        assert!(e.contains("merge requires"), "{e}");
+        // empty
+        assert!(Plan::new("x").validate().is_err());
+    }
+}

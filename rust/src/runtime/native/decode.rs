@@ -175,12 +175,11 @@ fn norm_apply(gi: &GraphIn, prefix: &str, x: &Tensor) -> Tensor {
 }
 
 /// Plain masked linear (the decode path always runs merged weights —
-/// adapters are folded before serving).
+/// adapters are folded before serving).  Fused: pruned weights are skipped
+/// in the kernel instead of materialising W⊙M per decode step.
 fn linear_apply(gi: &GraphIn, base: &str, x: &Tensor) -> Tensor {
     let wname = format!("{base}_w");
-    let wm = gi.p(&wname).hadamard(gi.m(&wname));
-    let mut y = linalg::matmul_nt(x, &wm);
-    pool::recycle(wm);
+    let mut y = linalg::matmul_nt_masked(x, gi.p(&wname), gi.m(&wname));
     if gi.mm.cfg.use_bias {
         ops::add_bias(&mut y, gi.p(&format!("{base}_b")));
     }

@@ -83,8 +83,9 @@ impl<'a> GraphIn<'a> {
 // ---------------------------------------------------------------------------
 
 struct LinTape {
-    /// W ⊙ M — the frozen-sparse operand.
-    wm: Tensor,
+    /// W ⊙ M materialised — only ScaleLoRA needs it (as the adapter gate);
+    /// the other modes read W and M through the fused masked kernels.
+    wm: Option<Tensor>,
     /// Effective weight for the z-parametrised modes (MaskLoRA / ScaleLoRA).
     z: Option<Tensor>,
     /// x Aᵀ intermediate of the standard-LoRA path.
@@ -93,7 +94,9 @@ struct LinTape {
 
 impl LinTape {
     fn recycle(self) {
-        pool::recycle(self.wm);
+        if let Some(wm) = self.wm {
+            pool::recycle(wm);
+        }
         if let Some(z) = self.z {
             pool::recycle(z);
         }
@@ -232,32 +235,35 @@ fn linear_fwd(gi: &GraphIn, base: &str, x: &Tensor) -> (Tensor, LinTape) {
     let wname = format!("{base}_w");
     let w = gi.p(&wname);
     let mask = gi.m(&wname);
-    let wm = w.hadamard(mask);
-    let (mut y, z, u) = match gi.mode {
-        ModeKind::Subset => (linalg::matmul_nt(x, &wm), None, None),
+    let (mut y, wm, z, u) = match gi.mode {
+        // fused masked forward: pruned weights are skipped in the kernel
+        // instead of materialising W⊙M every call (the forward hot path)
+        ModeKind::Subset => (linalg::matmul_nt_masked(x, w, mask), None, None, None),
         ModeKind::Lora => {
             let a = gi.adapter(&wname, "A");
             let bmat = gi.adapter(&wname, "B");
             let s = gi.scale();
             let u = linalg::matmul_nt(x, a); // (n, r)
             let low = linalg::matmul_nt(&u, bmat); // (n, out)
-            let y = linalg::matmul_nt(x, &wm).zip(&low, |p, q| p + s * q);
-            (y, None, Some(u))
+            let y = linalg::matmul_nt_masked(x, w, mask).zip(&low, |p, q| p + s * q);
+            (y, None, None, Some(u))
         }
         ModeKind::MaskLora => {
             let a = gi.adapter(&wname, "A");
             let bmat = gi.adapter(&wname, "B");
             let s = gi.scale();
             let ba = linalg::matmul(bmat, a); // (out, in)
-            let z = wm.zip(&ba.hadamard(mask), |p, q| p + s * q);
-            (linalg::matmul_nt(x, &z), Some(z), None)
+            // z = W⊙M + s·(BA)⊙M: materialised once, reused by the backward
+            let z = w.hadamard(mask).zip(&ba.hadamard(mask), |p, q| p + s * q);
+            (linalg::matmul_nt(x, &z), None, Some(z), None)
         }
         ModeKind::ScaleLora => {
             let a = gi.adapter(&wname, "A");
             let bmat = gi.adapter(&wname, "B");
             let ba = linalg::matmul(bmat, a);
+            let wm = w.hadamard(mask); // the adapter gate — backward needs it
             let z = ba.hadamard(&wm);
-            (linalg::matmul_nt(x, &z), Some(z), None)
+            (linalg::matmul_nt(x, &z), Some(wm), Some(z), None)
         }
     };
     if gi.mm.cfg.use_bias {
@@ -288,7 +294,8 @@ fn linear_bwd(
                 let dw = linalg::matmul_tn(dy, x).hadamard(gi.m(&wname));
                 grads.add(wname.clone(), dw);
             }
-            linalg::matmul(dy, &tape.wm)
+            // fused dx = dy @ (W⊙M), mask applied in the kernel
+            linalg::matmul_masked(dy, gi.p(&wname), gi.m(&wname))
         }
         ModeKind::Lora => {
             let a = gi.adapter(&wname, "A");
@@ -298,7 +305,8 @@ fn linear_bwd(
             let du = linalg::matmul(dy, bmat).scale(s); // (n, r)
             grads.add(format!("{wname}::B"), linalg::matmul_tn(dy, u).scale(s));
             grads.add(format!("{wname}::A"), linalg::matmul_tn(&du, x));
-            linalg::matmul(dy, &tape.wm).add(&linalg::matmul(&du, a))
+            linalg::matmul_masked(dy, gi.p(&wname), gi.m(&wname))
+                .add(&linalg::matmul(&du, a))
         }
         ModeKind::MaskLora => {
             let a = gi.adapter(&wname, "A");
@@ -314,8 +322,9 @@ fn linear_bwd(
             let a = gi.adapter(&wname, "A");
             let bmat = gi.adapter(&wname, "B");
             let z = tape.z.as_ref().expect("scalelora tape");
+            let wm = tape.wm.as_ref().expect("scalelora tape gate");
             let dz = linalg::matmul_tn(dy, x);
-            let (da, db) = ops::adapter_vjp(&dz, &tape.wm, a, bmat, 1.0);
+            let (da, db) = ops::adapter_vjp(&dz, wm, a, bmat, 1.0);
             grads.add(format!("{wname}::B"), db);
             grads.add(format!("{wname}::A"), da);
             linalg::matmul(dy, z)

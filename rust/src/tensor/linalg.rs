@@ -120,6 +120,83 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     Tensor::new(&[n, m], out)
 }
 
+/// a:(n,k) @ (b ⊙ mask):(m,k)ᵀ -> (n,m) **without materialising** b ⊙ mask —
+/// the masked-linear forward.  Pruned entries (mask == 0) are skipped inside
+/// the dot product, so sparsity pays at read time and no (m,k) scratch
+/// buffer is allocated/written per call (the old path built W⊙M first).
+/// `mask` must be binary and shaped like `b`.
+pub fn matmul_nt_masked(a: &Tensor, b: &Tensor, mask: &Tensor) -> Tensor {
+    let (n, k) = (a.rows(), a.cols());
+    let (m, k2) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul_nt_masked inner-dim mismatch {k} vs {k2}");
+    assert_eq!(mask.shape(), b.shape(), "mask must be shaped like b");
+    let mut out = pool::zeroed(n * m);
+    let ad = a.data();
+    let bd = b.data();
+    let md = mask.data();
+    out.par_chunks_mut(BI * m).enumerate().for_each(|(ci, chunk)| {
+        let i0 = ci * BI;
+        for j0 in (0..m).step_by(64) {
+            let j1 = (j0 + 64).min(m);
+            for (ii, orow) in chunk.chunks_mut(m).enumerate() {
+                let arow = &ad[(i0 + ii) * k..(i0 + ii + 1) * k];
+                for j in j0..j1 {
+                    let brow = &bd[j * k..(j + 1) * k];
+                    let mrow = &md[j * k..(j + 1) * k];
+                    let mut acc = 0.0f32;
+                    for kk in 0..k {
+                        if mrow[kk] == 0.0 {
+                            continue; // pruned weight: skipped, not multiplied
+                        }
+                        acc += arow[kk] * brow[kk];
+                    }
+                    orow[j] = acc;
+                }
+            }
+        }
+    });
+    Tensor::new(&[n, m], out)
+}
+
+/// a:(n,m) @ (b ⊙ mask):(m,k) -> (n,k) without materialising b ⊙ mask — the
+/// masked-linear backward dx.  Skips exact zeros of `a` (like [`matmul`])
+/// and gates each b-row element by the mask.
+pub fn matmul_masked(a: &Tensor, b: &Tensor, mask: &Tensor) -> Tensor {
+    let (n, k) = (a.rows(), a.cols());
+    let (k2, m) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul_masked inner-dim mismatch {k} vs {k2}");
+    assert_eq!(mask.shape(), b.shape(), "mask must be shaped like b");
+    let mut out = pool::zeroed(n * m);
+    let ad = a.data();
+    let bd = b.data();
+    let md = mask.data();
+    out.par_chunks_mut(BI * m).enumerate().for_each(|(ci, chunk)| {
+        let i0 = ci * BI;
+        for k0 in (0..k).step_by(BK) {
+            let k1 = (k0 + BK).min(k);
+            for j0 in (0..m).step_by(BJ) {
+                let j1 = (j0 + BJ).min(m);
+                for (ii, orow) in chunk.chunks_mut(m).enumerate() {
+                    let arow = &ad[(i0 + ii) * k..(i0 + ii + 1) * k];
+                    let otile = &mut orow[j0..j1];
+                    for kk in k0..k1 {
+                        let av = arow[kk];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let btile = &bd[kk * m + j0..kk * m + j1];
+                        let mtile = &md[kk * m + j0..kk * m + j1];
+                        for ((o, &bv), &mv) in otile.iter_mut().zip(btile).zip(mtile) {
+                            *o += av * bv * mv;
+                        }
+                    }
+                }
+            }
+        }
+    });
+    Tensor::new(&[n, m], out)
+}
+
 /// Single-thread reference of [`matmul_nt`] (bench baseline).
 pub fn matmul_nt_serial(a: &Tensor, b: &Tensor) -> Tensor {
     let (n, k) = (a.rows(), a.cols());
@@ -341,6 +418,38 @@ mod tests {
             assert!(matmul(&a, &b).allclose(&matmul_serial(&a, &b), 1e-4, 1e-4));
             assert!(matmul_nt(&a, &bt).allclose(&matmul_nt_serial(&a, &bt), 1e-4, 1e-4));
         }
+    }
+
+    #[test]
+    fn masked_kernels_match_materialised_reference() {
+        let mut rng = Rng::new(21);
+        for (n, k, m) in [(1usize, 1usize, 1usize), (33, 65, 31), (70, 130, 257)] {
+            let a = Tensor::randn(&[n, k], 1.0, &mut rng);
+            let w = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let mask = Tensor::randn(&[m, k], 1.0, &mut rng)
+                .map(|v| if v > 0.0 { 1.0 } else { 0.0 });
+            let wm = w.hadamard(&mask);
+            // fused forward == materialise-then-matmul_nt
+            let fused = matmul_nt_masked(&a, &w, &mask);
+            assert!(fused.allclose(&matmul_nt(&a, &wm), 1e-4, 1e-4), "{n}x{k}x{m}");
+            // fused backward dx == materialise-then-matmul (dy:(n,m) @ (m,k))
+            let dy = Tensor::randn(&[n, m], 1.0, &mut rng);
+            let fused_dx = matmul_masked(&dy, &w, &mask);
+            let ref_dx = matmul(&dy, &wm);
+            assert!(fused_dx.allclose(&ref_dx, 1e-4, 1e-4), "{n}x{k}x{m} dx");
+        }
+    }
+
+    #[test]
+    fn masked_kernels_dense_mask_is_identity() {
+        let mut rng = Rng::new(22);
+        let a = Tensor::randn(&[9, 17], 1.0, &mut rng);
+        let w = Tensor::randn(&[13, 17], 1.0, &mut rng);
+        let ones = Tensor::ones(&[13, 17]);
+        assert!(matmul_nt_masked(&a, &w, &ones).allclose(&matmul_nt(&a, &w), 1e-5, 1e-5));
+        let b = Tensor::randn(&[17, 13], 1.0, &mut rng);
+        let ones_b = Tensor::ones(&[17, 13]);
+        assert!(matmul_masked(&a, &b, &ones_b).allclose(&matmul(&a, &b), 1e-5, 1e-5));
     }
 
     #[test]

@@ -1,10 +1,23 @@
 //! Tiny CLI argument parser (clap replacement).
 //!
 //! Grammar: `repro <subcommand> [--key value]... [--flag]...`.
-//! Typed accessors with defaults; unknown-argument detection via
-//! [`Args::finish`].
+//! Typed accessors with defaults; malformed values surface as [`ArgError`]
+//! (the launcher prints them as `argument error: ...` and exits 2, never a
+//! panic backtrace); unknown-argument detection via [`Args::finish`].
 
 use std::collections::BTreeMap;
+
+/// A user-facing argument problem: bad value, unknown flag, stray
+/// positional.  Distinct from runtime errors so `main` can exit 2.
+#[derive(Debug, Clone, thiserror::Error)]
+#[error("{0}")]
+pub struct ArgError(pub String);
+
+impl ArgError {
+    fn bad(key: &str, want: &str, got: &str) -> ArgError {
+        ArgError(format!("--{key} expects {want}, got {got:?}"))
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct Args {
@@ -15,7 +28,7 @@ pub struct Args {
 }
 
 impl Args {
-    pub fn parse(argv: &[String]) -> Result<Args, String> {
+    pub fn parse(argv: &[String]) -> Result<Args, ArgError> {
         let mut subcommand = None;
         let mut opts = BTreeMap::new();
         let mut flags = Vec::new();
@@ -34,20 +47,29 @@ impl Args {
             } else if subcommand.is_none() {
                 subcommand = Some(a.clone());
             } else {
-                return Err(format!("unexpected positional argument {a:?}"));
+                return Err(ArgError(format!("unexpected positional argument {a:?}")));
             }
             i += 1;
         }
         Ok(Args { subcommand, opts, flags, consumed: Default::default() })
     }
 
-    pub fn from_env() -> Result<Args, String> {
+    pub fn from_env() -> Result<Args, ArgError> {
         let argv: Vec<String> = std::env::args().skip(1).collect();
         Args::parse(&argv)
     }
 
     fn mark(&self, key: &str) {
         self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// Parse-if-present core all the typed accessors share.
+    fn parsed<T: std::str::FromStr>(&self, key: &str, want: &str) -> Result<Option<T>, ArgError> {
+        self.mark(key);
+        match self.opts.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|_| ArgError::bad(key, want, v)),
+        }
     }
 
     pub fn str(&self, key: &str, default: &str) -> String {
@@ -60,35 +82,28 @@ impl Args {
         self.opts.get(key).cloned()
     }
 
-    pub fn opt_usize(&self, key: &str) -> Option<usize> {
-        self.mark(key);
-        self.opts
-            .get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+    pub fn opt_usize(&self, key: &str) -> Result<Option<usize>, ArgError> {
+        self.parsed(key, "an integer")
     }
 
-    pub fn usize(&self, key: &str, default: usize) -> usize {
-        self.mark(key);
-        self.opts
-            .get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize, ArgError> {
+        Ok(self.parsed(key, "an integer")?.unwrap_or(default))
     }
 
-    pub fn u64(&self, key: &str, default: u64) -> u64 {
-        self.mark(key);
-        self.opts
-            .get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+    pub fn opt_u64(&self, key: &str) -> Result<Option<u64>, ArgError> {
+        self.parsed(key, "an integer")
     }
 
-    pub fn f64(&self, key: &str, default: f64) -> f64 {
-        self.mark(key);
-        self.opts
-            .get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a float, got {v:?}")))
-            .unwrap_or(default)
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64, ArgError> {
+        Ok(self.parsed(key, "an integer")?.unwrap_or(default))
+    }
+
+    pub fn opt_f64(&self, key: &str) -> Result<Option<f64>, ArgError> {
+        self.parsed(key, "a number")
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64, ArgError> {
+        Ok(self.parsed(key, "a number")?.unwrap_or(default))
     }
 
     pub fn flag(&self, key: &str) -> bool {
@@ -106,11 +121,11 @@ impl Args {
     }
 
     /// Error on any option/flag that no accessor ever looked at.
-    pub fn finish(&self) -> Result<(), String> {
+    pub fn finish(&self) -> Result<(), ArgError> {
         let seen = self.consumed.borrow();
         for k in self.opts.keys().chain(self.flags.iter()) {
             if !seen.iter().any(|s| s == k) {
-                return Err(format!("unknown argument --{k}"));
+                return Err(ArgError(format!("unknown argument --{k}")));
             }
         }
         Ok(())
@@ -131,7 +146,7 @@ mod tests {
         let a = args("sweep --exp table1 --seed 3 --verbose");
         assert_eq!(a.subcommand.as_deref(), Some("sweep"));
         assert_eq!(a.str("exp", ""), "table1");
-        assert_eq!(a.u64("seed", 0), 3);
+        assert_eq!(a.u64("seed", 0).unwrap(), 3);
         assert!(a.flag("verbose"));
         assert!(!a.flag("quiet"));
         a.finish().unwrap();
@@ -140,8 +155,8 @@ mod tests {
     #[test]
     fn equals_syntax() {
         let a = args("run --lr=0.001 --steps=100");
-        assert_eq!(a.f64("lr", 0.0), 0.001);
-        assert_eq!(a.usize("steps", 0), 100);
+        assert_eq!(a.f64("lr", 0.0).unwrap(), 0.001);
+        assert_eq!(a.usize("steps", 0).unwrap(), 100);
     }
 
     #[test]
@@ -154,15 +169,31 @@ mod tests {
     fn defaults() {
         let a = args("x");
         assert_eq!(a.str("missing", "d"), "d");
-        assert_eq!(a.usize("n", 7), 7);
+        assert_eq!(a.usize("n", 7).unwrap(), 7);
+        assert_eq!(a.opt_u64("n").unwrap(), None);
+        assert_eq!(a.opt_f64("n").unwrap(), None);
     }
 
     #[test]
     fn opt_usize_present_and_absent() {
         let a = args("serve --port 7070");
-        assert_eq!(a.opt_usize("port"), Some(7070));
-        assert_eq!(a.opt_usize("threads"), None);
+        assert_eq!(a.opt_usize("port").unwrap(), Some(7070));
+        assert_eq!(a.opt_usize("threads").unwrap(), None);
         a.finish().unwrap();
+    }
+
+    #[test]
+    fn malformed_values_error_instead_of_panicking() {
+        let a = args("retrain --steps abc --lr fast --port 1.5");
+        let e = a.u64("steps", 0).unwrap_err();
+        assert!(e.to_string().contains("--steps"), "{e}");
+        assert!(e.to_string().contains("abc"), "{e}");
+        assert!(a.f64("lr", 0.0).is_err());
+        assert!(a.usize("port", 0).is_err());
+        assert!(a.opt_usize("port").is_err());
+        // well-formed values still parse on the same Args
+        let a = args("x --steps 12");
+        assert_eq!(a.u64("steps", 0).unwrap(), 12);
     }
 
     #[test]
