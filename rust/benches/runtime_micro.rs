@@ -13,7 +13,7 @@ use perp::coordinator::Session;
 use perp::eval::base_feed;
 use perp::optim::OptState;
 use perp::runtime::{open_default_backend, Backend};
-use perp::tensor::{linalg, pool, Tensor};
+use perp::tensor::{linalg, pool, sparse, Tensor};
 use perp::util::bench::{fmt_duration, Bench, Table};
 use perp::util::rng::Rng;
 
@@ -63,13 +63,14 @@ fn matmul_speedups(out: &mut Vec<Table>) {
 }
 
 /// A/B: the old masked-forward path (materialise W⊙M, then `matmul_nt`)
-/// against the fused `matmul_nt_masked` (pruned weights skipped in the
-/// kernel, no scratch weight buffer per call).
+/// against the fused `matmul_nt_masked` and the compressed CSR `spmm_nt`
+/// (only surviving weights loaded).  The full sparsity ladder with
+/// machine-readable output lives in `repro bench-kernels`.
 fn masked_matmul_ab(out: &mut Vec<Table>) {
     let bench = Bench::quick();
     let mut t = Table::new(
-        "masked forward: materialise W⊙M + matmul_nt vs fused matmul_nt_masked",
-        &["shape", "sparsity", "materialise", "fused", "speedup"],
+        "masked forward: materialise W⊙M vs fused matmul_nt_masked vs CSR spmm_nt",
+        &["shape", "sparsity", "materialise", "fused", "csr", "fused/mat", "csr/fused"],
     );
     let mut rng = Rng::new(43);
     for (n, k, m) in [(256usize, 256usize, 256usize), (512, 512, 512)] {
@@ -79,6 +80,7 @@ fn masked_matmul_ab(out: &mut Vec<Table>) {
         for threshold in [0.6745f32, 1.6449] {
             let mask = Tensor::randn(&[m, k], 1.0, &mut rng)
                 .map(|v| if v.abs() < threshold { 0.0 } else { 1.0 });
+            let csr = sparse::CsrMatrix::from_dense_masked(&w, &mask);
             let a = bench.run(|| {
                 let wm = w.hadamard(&mask);
                 std::hint::black_box(linalg::matmul_nt(&x, &wm));
@@ -86,12 +88,17 @@ fn masked_matmul_ab(out: &mut Vec<Table>) {
             let b = bench.run(|| {
                 std::hint::black_box(linalg::matmul_nt_masked(&x, &w, &mask));
             });
+            let c = bench.run(|| {
+                std::hint::black_box(sparse::spmm_nt(&x, &csr));
+            });
             t.row(vec![
                 format!("{n}x{k} @ ({m}x{k})T"),
                 format!("{:.0}%", 100.0 * mask.zero_fraction()),
                 fmt_duration(a.mean),
                 fmt_duration(b.mean),
+                fmt_duration(c.mean),
                 format!("{:.2}x", a.mean_secs() / b.mean_secs()),
+                format!("{:.2}x", b.mean_secs() / c.mean_secs()),
             ]);
         }
     }

@@ -15,6 +15,10 @@ pub struct ExperimentConfig {
     pub model: String,
     /// execution backend ("native" | "pjrt"); overridable with --backend
     pub backend: String,
+    /// sparse weight layout policy ("auto" | "dense" | "masked" | "csr");
+    /// overridable with --layout.  Auto compresses layers at or above the
+    /// measured crossover sparsity (PERP_CSR_CROSSOVER, default 0.75).
+    pub layout: String,
     /// pretraining steps to converge the dense model
     pub pretrain_steps: u64,
     pub pretrain_lr: f64,
@@ -41,6 +45,7 @@ impl ExperimentConfig {
         ExperimentConfig {
             model: model.to_string(),
             backend: "native".to_string(),
+            layout: "auto".to_string(),
             // gpt-nano converges around here; the pruning-collapse shape
             // (Fig 1) only appears on converged models
             pretrain_steps: 30_000,
@@ -92,6 +97,9 @@ impl ExperimentConfig {
         if let Some(v) = j.get("backend").and_then(Json::as_str) {
             self.backend = v.to_string();
         }
+        if let Some(v) = j.get("layout").and_then(Json::as_str) {
+            self.layout = v.to_string();
+        }
         if let Some(v) = j.get("pretrain_steps").and_then(Json::as_i64) {
             self.pretrain_steps = v as u64;
         }
@@ -131,6 +139,8 @@ impl ExperimentConfig {
 
     pub fn validate(&self) -> Result<()> {
         crate::runtime::BackendKind::parse(&self.backend).map_err(|e| anyhow::anyhow!(e))?;
+        crate::tensor::sparse::LayoutPolicy::parse(&self.layout)
+            .map_err(|e| anyhow::anyhow!(e))?;
         if self.lr_grid.is_empty() {
             bail!("lr_grid must not be empty");
         }
@@ -181,6 +191,24 @@ mod tests {
         let mut c = ExperimentConfig::quick("m");
         c.lr_grid.clear();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn layout_field_defaults_and_validates() {
+        let c = ExperimentConfig::quick("m");
+        assert_eq!(c.layout, "auto");
+        c.validate().unwrap();
+        let mut bad = ExperimentConfig::quick("m");
+        bad.layout = "coo".into();
+        assert!(bad.validate().is_err());
+
+        let dir = std::env::temp_dir().join("perp_cfg_layout_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"layout": "csr"}"#).unwrap();
+        let c = ExperimentConfig::quick("gpt-nano").with_file(&p).unwrap();
+        assert_eq!(c.layout, "csr");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -18,7 +18,6 @@ use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
-use crate::eval::base_feed;
 use crate::optim::OptState;
 use crate::pruning::MaskSet;
 use crate::runtime::{Backend, Feed};
@@ -86,10 +85,13 @@ pub fn reconstruct(
 
     // the capture prefix uses reconstructed blocks; unvisited blocks run
     // dense (the SparseGPT sequential convention)
-    session.reset_masks();
+    // restore dense weights *before* reset_masks so its sparse rebuild —
+    // kept in lockstep with the per-block mutations below — runs on the
+    // dense state once instead of compressing the stale pruned weights
     for n in &mm.prunable {
         session.params.set(n, dense_params[n].clone());
     }
+    session.reset_masks();
 
     let calib = session
         .train
@@ -110,8 +112,8 @@ pub fn reconstruct(
         // ---- capture X for this block over all calibration batches -----
         let mut xrows: BTreeMap<String, Vec<f32>> = BTreeMap::new();
         for tokens in &calib {
-            let feed =
-                base_feed(&session.params, &session.masks).ints("tokens", &shape, tokens);
+            // capture runs the pruned forward — CSR-routed layers apply here
+            let feed = session.feed().ints("tokens", &shape, tokens);
             let out = session.rt.run(&model, "capture_inputs", &feed)?;
             for (name, t) in out.values {
                 let key = name.strip_prefix("x::").unwrap_or(&name).to_string();
@@ -234,8 +236,12 @@ pub fn reconstruct(
             session.masks.set(lin, mask);
             report.layers.push((lin.clone(), first_loss, last_loss));
         }
+        // this block now runs pruned in later blocks' captures; only its
+        // own linears changed, so skip the full-model rescan
+        session.refresh_sparse_layers(&block_linears);
     }
     // force exact zeros everywhere
     session.params.apply_masks(&session.masks.masks);
+    session.refresh_sparse();
     Ok(report)
 }

@@ -13,7 +13,8 @@ use crate::model::{init, ParamStore};
 use crate::optim::{OptState, Schedule};
 use crate::peft::{merge, LoraState, Mode};
 use crate::pruning::{magnitude, sparsegpt, wanda, Criterion, MaskSet, Pattern};
-use crate::runtime::{Backend, ModelManifest};
+use crate::runtime::{Backend, Feed, ModelManifest};
+use crate::tensor::sparse::{LayoutPolicy, SparseStore};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -24,6 +25,12 @@ pub struct Session<'rt> {
     pub cfg: ExperimentConfig,
     pub params: ParamStore,
     pub masks: MaskSet,
+    /// Per-layer weight layouts + cached CSR forms, rebuilt whenever the
+    /// weights or masks change wholesale (prune / merge / load) so the
+    /// retraining and serving hot loops never re-compress.
+    pub sparse: SparseStore,
+    /// Layout selection policy (`--layout`, config `layout`).
+    pub layout: LayoutPolicy,
     pub lora: Option<(Mode, LoraState)>,
     pub corpus: Corpus,
     pub tokenizer: Tokenizer,
@@ -56,13 +63,16 @@ impl<'rt> Session<'rt> {
         let val = Batcher::new(&val_texts, &tokenizer, mm.cfg.seq_len);
         let test = Batcher::new(&test_texts, &tokenizer, mm.cfg.seq_len);
         let word_lut = eval::word_token_lut(&corpus, &tokenizer);
+        let layout = LayoutPolicy::parse(&cfg.layout).map_err(|e| anyhow::anyhow!(e))?;
 
-        Ok(Session {
+        let mut s = Session {
             rt,
             mm,
             cfg,
             params,
             masks,
+            sparse: SparseStore::default(),
+            layout,
             lora: None,
             corpus,
             tokenizer,
@@ -73,7 +83,46 @@ impl<'rt> Session<'rt> {
             rng,
             last_tps: 0.0,
             last_losses: Vec::new(),
-        })
+        };
+        s.refresh_sparse();
+        Ok(s)
+    }
+
+    // ------------------------------------------------------------------
+    // Sparse weight layout.
+    // ------------------------------------------------------------------
+
+    /// Re-resolve per-layer layouts and rebuild the CSR forms from the
+    /// current `weight ⊙ mask` state.  Called after every wholesale
+    /// weight/mask change (prune, merge, checkpoint load, full-FT
+    /// retraining) — never per step, so hot loops reuse the cached forms.
+    pub fn refresh_sparse(&mut self) {
+        let store = SparseStore::build(
+            self.layout,
+            self.mm
+                .prunable
+                .iter()
+                .map(|n| (n.clone(), self.params.get(n), self.masks.get(n))),
+        );
+        self.sparse = store;
+    }
+
+    /// Partial [`Session::refresh_sparse`]: re-resolve only `names`
+    /// (layer-wise reconstruction mutates one block at a time — rescanning
+    /// the whole model per block would be quadratic in depth).
+    pub fn refresh_sparse_layers(&mut self, names: &[String]) {
+        let mut store = std::mem::take(&mut self.sparse);
+        store.update(
+            self.layout,
+            names.iter().map(|n| (n.clone(), self.params.get(n), self.masks.get(n))),
+        );
+        self.sparse = store;
+    }
+
+    /// The base feed for any executable over this session's model state:
+    /// params + masks + the cached sparse-layout side channel.
+    pub fn feed(&self) -> Feed<'_> {
+        eval::base_feed(&self.params, &self.masks).sparse(&self.sparse)
     }
 
     // ------------------------------------------------------------------
@@ -135,6 +184,11 @@ impl<'rt> Session<'rt> {
         let mut meter = TpsMeter::new();
         let mut losses = Vec::with_capacity(steps as usize);
         let mut batch_rng = self.rng.fork(0xBA7C);
+        // the cached CSR forms hold weight *values*, so they are only valid
+        // while the prunable weights stay frozen — true for every PERP
+        // subset/adapter mode, false for full FT (which rebuilds them once,
+        // after the loop)
+        let trains_weights = leaf_names.iter().any(|n| self.mm.prunable.contains(n));
 
         for t in 1..=steps {
             let tokens = self.train.train_batch(b, &mut batch_rng);
@@ -144,6 +198,13 @@ impl<'rt> Session<'rt> {
                 .ints("tokens", &shape, &tokens)
                 .scalar("step", t as f32)
                 .scalar("lr", lr);
+            feed = if trains_weights {
+                // cached CSR values would go stale as the weights move;
+                // layouts alone keep an explicit --layout dense honoured
+                feed.weight_layouts(&self.sparse)
+            } else {
+                feed.sparse(&self.sparse)
+            };
             if let Some((_, lora)) = &self.lora {
                 for (name, tsr) in &lora.tensors {
                     // borrow, don't clone: adapters can be the largest leaf
@@ -176,6 +237,9 @@ impl<'rt> Session<'rt> {
         }
         self.last_tps = meter.tps();
         self.last_losses = losses;
+        if trains_weights {
+            self.refresh_sparse();
+        }
         Ok(())
     }
 
@@ -227,7 +291,7 @@ impl<'rt> Session<'rt> {
             .calibration(self.cfg.calib_seqs, b, self.cfg.data_seed);
         let mut tap_grams: BTreeMap<String, Tensor> = BTreeMap::new();
         for tokens in &batches {
-            let feed = eval::base_feed(&self.params, &self.masks).ints("tokens", &shape, tokens);
+            let feed = self.feed().ints("tokens", &shape, tokens);
             let out = self.rt.run(&self.mm.cfg.name, "calib_stats", &feed)?;
             for (name, g) in out.values {
                 let key = name.strip_prefix("gram::").unwrap_or(&name).to_string();
@@ -307,6 +371,8 @@ impl<'rt> Session<'rt> {
         }
         // pruned weights are forced to exact zero (footnote 1 of the paper)
         self.params.apply_masks(&self.masks.masks);
+        // compress once, here — retraining steps and serving reuse the forms
+        self.refresh_sparse();
         Ok(())
     }
 
@@ -340,6 +406,9 @@ impl<'rt> Session<'rt> {
             }
             self.params.set(n, merged);
         }
+        // merged weights replace the frozen ones the CSR forms were built
+        // from — recompress before eval/serve touch them
+        self.refresh_sparse();
         Ok(())
     }
 
@@ -358,14 +427,14 @@ impl<'rt> Session<'rt> {
     fn eval_ppl_with(&self, batcher: &Batcher) -> Result<PplResult> {
         match &self.lora {
             None => eval::perplexity(
-                self.rt, &self.mm, &self.params, &self.masks, batcher,
+                self.rt, &self.mm, &self.params, &self.masks, Some(&self.sparse), batcher,
                 self.cfg.eval_batches,
             ),
             // standard LoRA is the one variant evaluated UNMERGED (merging
             // would destroy sparsity — its extra inference cost is the
             // paper's argument against it)
             Some((Mode::Lora, lora)) => eval::perplexity_lora(
-                self.rt, &self.mm, &self.params, &self.masks, lora, batcher,
+                self.rt, &self.mm, &self.params, &self.masks, Some(&self.sparse), lora, batcher,
                 self.cfg.eval_batches,
             ),
             Some((mode, _)) => {
@@ -386,6 +455,7 @@ impl<'rt> Session<'rt> {
             &self.mm,
             &self.params,
             &self.masks,
+            Some(&self.sparse),
             lora,
             &suite,
             &self.word_lut,
@@ -418,6 +488,9 @@ impl<'rt> Session<'rt> {
 
     pub fn load(&mut self, path: &Path) -> Result<()> {
         self.params = ParamStore::load(&self.mm, path)?;
+        // pruned checkpoints carry zeros in the weights under all-ones
+        // masks; the rebuild measures W⊙M sparsity, so they still compress
+        self.refresh_sparse();
         Ok(())
     }
 
@@ -425,6 +498,7 @@ impl<'rt> Session<'rt> {
     pub fn reset_masks(&mut self) {
         let mm = &self.mm;
         self.masks = MaskSet::dense(&mm.prunable, |n| mm.param_shape(n).to_vec());
+        self.refresh_sparse();
     }
 }
 

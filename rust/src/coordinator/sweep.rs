@@ -147,6 +147,7 @@ impl<'rt> ExpContext<'rt> {
         let mut s = Session::new(self.rt, self.cfg.clone(), 0)?;
         s.params = base.params.clone();
         s.masks = base.masks.clone();
+        s.refresh_sparse();
         Ok(s)
     }
 

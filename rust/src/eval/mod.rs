@@ -13,6 +13,7 @@ use crate::model::ParamStore;
 use crate::peft::LoraState;
 use crate::pruning::MaskSet;
 use crate::runtime::{Backend, Feed, ModelManifest};
+use crate::tensor::sparse::SparseStore;
 use crate::tensor::Tensor;
 
 /// Build the base feed shared by every executable: all params + masks.
@@ -23,6 +24,20 @@ pub fn base_feed<'a>(ps: &'a ParamStore, masks: &'a MaskSet) -> Feed<'a> {
     }
     for (n, t) in &masks.masks {
         f = f.tensor(&format!("m::{n}"), t);
+    }
+    f
+}
+
+/// [`base_feed`] plus the cached sparse-layout side channel, when the
+/// caller has one (the coordinator's sessions always do).
+pub fn model_feed<'a>(
+    ps: &'a ParamStore,
+    masks: &'a MaskSet,
+    sparse: Option<&'a SparseStore>,
+) -> Feed<'a> {
+    let mut f = base_feed(ps, masks);
+    if let Some(sp) = sparse {
+        f = f.sparse(sp);
     }
     f
 }
@@ -49,6 +64,7 @@ pub fn perplexity(
     mm: &ModelManifest,
     ps: &ParamStore,
     masks: &MaskSet,
+    sparse: Option<&SparseStore>,
     batcher: &Batcher,
     max_batches: usize,
 ) -> Result<PplResult> {
@@ -59,7 +75,7 @@ pub fn perplexity(
     let (mut loss_sum, mut count) = (0.0f64, 0.0f64);
     for i in 0..n {
         let tokens = batcher.eval_batch(b, i);
-        let feed = base_feed(ps, masks).ints("tokens", &shape, &tokens);
+        let feed = model_feed(ps, masks, sparse).ints("tokens", &shape, &tokens);
         let out = rt.run(&mm.cfg.name, "eval_loss", &feed)?;
         loss_sum += out.scalar("loss_sum") as f64;
         count += out.scalar("count") as f64;
@@ -69,11 +85,13 @@ pub fn perplexity(
 }
 
 /// Perplexity with standard-LoRA adapters active (unmerged).
+#[allow(clippy::too_many_arguments)]
 pub fn perplexity_lora(
     rt: &dyn Backend,
     mm: &ModelManifest,
     ps: &ParamStore,
     masks: &MaskSet,
+    sparse: Option<&SparseStore>,
     lora: &LoraState,
     batcher: &Batcher,
     max_batches: usize,
@@ -85,7 +103,8 @@ pub fn perplexity_lora(
     let (mut loss_sum, mut count) = (0.0f64, 0.0f64);
     for i in 0..n {
         let tokens = batcher.eval_batch(b, i);
-        let feed = adapter_feed(base_feed(ps, masks), lora).ints("tokens", &shape, &tokens);
+        let feed =
+            adapter_feed(model_feed(ps, masks, sparse), lora).ints("tokens", &shape, &tokens);
         let out = rt.run(&mm.cfg.name, "eval_loss_lora", &feed)?;
         loss_sum += out.scalar("loss_sum") as f64;
         count += out.scalar("count") as f64;
@@ -119,11 +138,13 @@ pub fn word_token_lut(corpus: &Corpus, tok: &Tokenizer) -> Vec<i32> {
 
 /// Run the full zero-shot suite; per-task accuracy via length-normalised
 /// likelihood ranking, batched through the `score` executable.
+#[allow(clippy::too_many_arguments)]
 pub fn zero_shot(
     rt: &dyn Backend,
     mm: &ModelManifest,
     ps: &ParamStore,
     masks: &MaskSet,
+    sparse: Option<&SparseStore>,
     lora: Option<&LoraState>,
     tasks: &[Task],
     lut: &[i32],
@@ -163,7 +184,7 @@ pub fn zero_shot(
             let t = &rows_tokens[chunk * b * s..(chunk + 1) * b * s];
             let mvals = &rows_tmask[chunk * b * s..(chunk + 1) * b * s];
             let tmask = Tensor::new(&[b, s], mvals.to_vec());
-            let mut feed = base_feed(ps, masks)
+            let mut feed = model_feed(ps, masks, sparse)
                 .ints("tokens", &shape, t)
                 .owned("tmask", tmask);
             if let Some(l) = lora {

@@ -77,6 +77,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "eval" => eval_cmd(args),
         "serve" => serve(args),
         "bench-serve" => bench_serve(args),
+        "bench-kernels" => bench_kernels(args),
         "sweep" => sweep_cmd(args),
         "tables" => tables(args),
         other => bail!("unknown subcommand {other:?}\n{HELP}"),
@@ -96,6 +97,7 @@ subcommands:
   eval          evaluate the cached dense model, or --from <ckpt> (ppl + zero-shot)
   serve         HTTP inference server with KV-cache decoding + dynamic batching
   bench-serve   load-generate against the batcher; write results/bench_serve.json
+  bench-kernels dense/masked/CSR matmul A/B; write results/bench_kernels.json
   sweep         regenerate one paper table/figure (--exp <id>)
   tables        regenerate every table/figure
 
@@ -107,6 +109,9 @@ common flags:
   --out <dir>          results + checkpoint cache                    [./results]
   --seed <n>           experiment seed                               [0]
   --threads <n>        rayon kernel threads (or PERP_THREADS)        [all cores]
+  --layout <l>         sparse weight layout: auto | dense | masked | csr  [auto]
+                       (auto compresses layers at/above the crossover
+                       sparsity; PERP_CSR_CROSSOVER overrides, default 0.75)
   --criterion <c>      magnitude | magnitude-global | wanda | sparsegpt
   --sparsity <s>       0.5 | 50 | 2:4 | 4:8
   --mode <m>           full | biases | ln | biases_ln | head | embed |
@@ -138,6 +143,11 @@ bench-serve flags:
   --max-tokens <n>     new tokens per request                [16]
   --concurrency <n>    concurrent clients (batched phase)    [8]
   --from <ckpt>        checkpoint to serve                   [cached dense]
+
+bench-kernels flags:
+  --shapes <list>      NxKxM GEMM shapes     [256x256x256,512x512x512,1024x256x1024]
+  --sparsities <list>  fractions pruned      [0.5,0.7,0.9,0.95,0.99]
+  --out <dir>          JSON output directory [./results]
 ";
 
 struct Env {
@@ -162,6 +172,11 @@ fn common(args: &Args) -> Result<Env> {
     }
     if let Some(backend) = args.opt_str("backend") {
         cfg.backend = backend;
+    }
+    if let Some(layout) = args.opt_str("layout") {
+        perp::tensor::sparse::LayoutPolicy::parse(&layout)
+            .map_err(|e| anyhow::anyhow!(ArgError(e)))?;
+        cfg.layout = layout;
     }
     if let Some(steps) = args.opt_u64("steps")? {
         cfg.retrain_steps = steps;
@@ -609,6 +624,172 @@ fn bench_phase(
         p50_ms: pct(0.50),
         p95_ms: pct(0.95),
     })
+}
+
+// ---------------------------------------------------------------------------
+// Kernel benchmarks: dense vs masked vs CSR.
+// ---------------------------------------------------------------------------
+
+struct KernelRow {
+    op: &'static str,
+    shape: String,
+    sparsity: f64,
+    dense_ns: f64,
+    masked_ns: f64,
+    csr_ns: f64,
+}
+
+impl KernelRow {
+    fn vs_masked(&self) -> f64 {
+        self.masked_ns / self.csr_ns.max(1e-9)
+    }
+    fn vs_dense(&self) -> f64 {
+        self.dense_ns / self.csr_ns.max(1e-9)
+    }
+}
+
+/// `repro bench-kernels` — A/B the three weight layouts over the
+/// runtime_micro GEMM shapes at pinned sparsity levels and record the
+/// machine-readable trajectory in `results/bench_kernels.json`, so the
+/// perf claims are tracked across PRs instead of eyeballed.
+fn bench_kernels(args: &Args) -> Result<()> {
+    use perp::tensor::sparse::{self, CsrMatrix};
+    use perp::tensor::{linalg, Tensor};
+    use perp::util::bench::{fmt_duration, Bench, Table};
+    use perp::util::rng::Rng;
+    use std::time::Duration;
+
+    perp::util::threads::configure(args.opt_usize("threads")?);
+    let out_dir = PathBuf::from(args.str("out", "results"));
+    let shapes: Vec<(usize, usize, usize)> = args
+        .list("shapes", "256x256x256,512x512x512,1024x256x1024")
+        .iter()
+        .map(|s| {
+            let dims: Vec<usize> = s.split('x').filter_map(|d| d.parse().ok()).collect();
+            match dims[..] {
+                [n, k, m] if n * k * m > 0 => Ok((n, k, m)),
+                _ => Err(ArgError(format!("--shapes expects NxKxM entries, got {s:?}"))),
+            }
+        })
+        .collect::<Result<_, _>>()?;
+    let sparsities: Vec<f64> = args
+        .list("sparsities", "0.5,0.7,0.9,0.95,0.99")
+        .iter()
+        .map(|s| {
+            s.parse::<f64>().ok().filter(|f| (0.0..=1.0).contains(f)).ok_or_else(|| {
+                ArgError(format!("--sparsities expects fractions in [0,1], got {s:?}"))
+            })
+        })
+        .collect::<Result<_, _>>()?;
+    args.finish()?;
+
+    let bench = Bench::quick();
+    let ns = |d: Duration| d.as_secs_f64() * 1e9;
+    let mut rows: Vec<KernelRow> = Vec::new();
+    let mut rng = Rng::new(42);
+    for &(n, k, m) in &shapes {
+        let x = Tensor::randn(&[n, k], 1.0, &mut rng);
+        let dy = Tensor::randn(&[n, m], 1.0, &mut rng);
+        let w_nt = Tensor::randn(&[m, k], 1.0, &mut rng); // forward layout (out, in)
+        let w_nn = Tensor::randn(&[m, k], 1.0, &mut rng); // backward-dx operand (m, k)
+        for &s in &sparsities {
+            let mask = sparse::random_mask(&[m, k], s, &mut rng);
+            let shape_fwd = format!("{n}x{k} @ ({m}x{k})T");
+            let shape_bwd = format!("{n}x{m} @ {m}x{k}");
+
+            // forward: x @ (W⊙M)ᵀ
+            let wm = w_nt.hadamard(&mask);
+            let csr = CsrMatrix::from_dense_masked(&w_nt, &mask);
+            let d = bench.run(|| {
+                std::hint::black_box(linalg::matmul_nt(&x, &wm));
+            });
+            let mk = bench.run(|| {
+                std::hint::black_box(linalg::matmul_nt_masked(&x, &w_nt, &mask));
+            });
+            let c = bench.run(|| {
+                std::hint::black_box(sparse::spmm_nt(&x, &csr));
+            });
+            rows.push(KernelRow {
+                op: "forward",
+                shape: shape_fwd,
+                sparsity: s,
+                dense_ns: ns(d.mean),
+                masked_ns: ns(mk.mean),
+                csr_ns: ns(c.mean),
+            });
+
+            // backward dx: dy @ (W⊙M)
+            let wm_b = w_nn.hadamard(&mask);
+            let csr_b = CsrMatrix::from_dense_masked(&w_nn, &mask);
+            let d = bench.run(|| {
+                std::hint::black_box(linalg::matmul(&dy, &wm_b));
+            });
+            let mk = bench.run(|| {
+                std::hint::black_box(linalg::matmul_masked(&dy, &w_nn, &mask));
+            });
+            let c = bench.run(|| {
+                std::hint::black_box(sparse::spmm(&dy, &csr_b));
+            });
+            rows.push(KernelRow {
+                op: "backward_dx",
+                shape: shape_bwd,
+                sparsity: s,
+                dense_ns: ns(d.mean),
+                masked_ns: ns(mk.mean),
+                csr_ns: ns(c.mean),
+            });
+        }
+    }
+
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut t = Table::new(
+        &format!("matmul layouts: dense vs masked vs CSR ({cores} cores)"),
+        &["op", "shape", "sparsity", "dense", "masked", "csr", "csr/masked", "csr/dense"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.op.to_string(),
+            r.shape.clone(),
+            format!("{:.0}%", r.sparsity * 100.0),
+            fmt_duration(Duration::from_nanos(r.dense_ns as u64)),
+            fmt_duration(Duration::from_nanos(r.masked_ns as u64)),
+            fmt_duration(Duration::from_nanos(r.csr_ns as u64)),
+            format!("{:.2}x", r.vs_masked()),
+            format!("{:.2}x", r.vs_dense()),
+        ]);
+    }
+    t.print();
+
+    let results = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("op", Json::Str(r.op.to_string())),
+                    ("shape", Json::Str(r.shape.clone())),
+                    ("sparsity", Json::Num(r.sparsity)),
+                    ("dense_ns", Json::Num(r.dense_ns)),
+                    ("masked_ns", Json::Num(r.masked_ns)),
+                    ("csr_ns", Json::Num(r.csr_ns)),
+                    ("csr_speedup_vs_masked", Json::Num(r.vs_masked())),
+                    ("csr_speedup_vs_dense", Json::Num(r.vs_dense())),
+                ])
+            })
+            .collect(),
+    );
+    let report = Json::obj(vec![
+        ("bench", Json::Str("kernels".to_string())),
+        ("cores", Json::Num(cores as f64)),
+        (
+            "csr_crossover",
+            Json::Num(perp::tensor::sparse::LayoutPolicy::csr_crossover()),
+        ),
+        ("results", results),
+    ]);
+    std::fs::create_dir_all(&out_dir).ok();
+    let path = out_dir.join("bench_kernels.json");
+    std::fs::write(&path, report.to_string()).with_context(|| format!("writing {path:?}"))?;
+    println!("wrote {path:?}");
+    Ok(())
 }
 
 fn bench_serve(args: &Args) -> Result<()> {

@@ -433,6 +433,8 @@ impl<'rt> Executor<'rt> {
     fn load_state(&self, s: &mut Session, dir: &Path) -> Result<()> {
         s.params = ParamStore::load(&s.mm, &dir.join("state.ptns"))?;
         s.masks = load_masks(&s.mm, &dir.join("masks.ptns"))?;
+        // cached stage artifacts bypass prune()/merge(): recompress here
+        s.refresh_sparse();
         Ok(())
     }
 

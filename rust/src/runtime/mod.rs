@@ -34,6 +34,7 @@ pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 
+use crate::tensor::sparse::{CsrMatrix, SparseStore, WeightLayout};
 use crate::tensor::Tensor;
 
 // ---------------------------------------------------------------------------
@@ -45,12 +46,20 @@ use crate::tensor::Tensor;
 /// The coordinator layers register providers by prefix (`p::`, `m::`, ...)
 /// through [`Feed::provider`]; one-off tensors (tokens, scalars) go in via
 /// [`Feed::tensor`] / [`Feed::ints`] / [`Feed::scalar`].
+///
+/// Compressed weight forms travel on a dedicated side channel
+/// ([`Feed::csr`] / [`Feed::weight_layout`], usually attached wholesale via
+/// [`Feed::sparse`]): they are execution *hints* outside the manifest's
+/// `ExecSpec` contract — backends that cannot exploit them (PJRT) simply
+/// ignore them, and the dense params/masks are always fed alongside.
 #[derive(Default)]
 pub struct Feed<'a> {
     tensors: HashMap<String, &'a Tensor>,
     owned: HashMap<String, Tensor>,
     ints: HashMap<String, (&'a [usize], &'a [i32])>,
     providers: Vec<&'a dyn Fn(&str) -> Option<&'a Tensor>>,
+    csrs: HashMap<String, &'a CsrMatrix>,
+    layouts: HashMap<String, WeightLayout>,
 }
 
 impl<'a> Feed<'a> {
@@ -98,6 +107,46 @@ impl<'a> Feed<'a> {
     /// Resolve an i32 input by name.
     pub fn get_ints(&self, name: &str) -> Option<(&[usize], &[i32])> {
         self.ints.get(name).map(|(s, d)| (*s, *d))
+    }
+
+    /// Attach one weight's compressed form (keyed by the weight name).
+    pub fn csr(mut self, name: &str, m: &'a CsrMatrix) -> Self {
+        self.csrs.insert(name.to_string(), m);
+        self
+    }
+
+    /// Pin one weight's resolved execution layout.
+    pub fn weight_layout(mut self, name: &str, l: WeightLayout) -> Self {
+        self.layouts.insert(name.to_string(), l);
+        self
+    }
+
+    /// Attach a whole [`SparseStore`]: every resolved layout plus every
+    /// cached CSR form — the one-liner the coordinator hot loops use.
+    pub fn sparse(mut self, store: &'a SparseStore) -> Self {
+        for (n, c) in &store.csr {
+            self.csrs.insert(n.clone(), c);
+        }
+        self.weight_layouts(store)
+    }
+
+    /// Attach only the resolved layouts, not the CSR forms — for loops
+    /// whose cached weight *values* would be stale (full-FT training).
+    /// Dense/Masked routing needs no values, so it stays honoured; a
+    /// `Csr`-routed layer without its form falls back to Masked.
+    pub fn weight_layouts(mut self, store: &SparseStore) -> Self {
+        for (n, l) in &store.layouts {
+            self.layouts.insert(n.clone(), *l);
+        }
+        self
+    }
+
+    pub fn get_csr(&self, name: &str) -> Option<&'a CsrMatrix> {
+        self.csrs.get(name).copied()
+    }
+
+    pub fn get_weight_layout(&self, name: &str) -> Option<WeightLayout> {
+        self.layouts.get(name).copied()
     }
 }
 

@@ -25,21 +25,29 @@ use crate::runtime::manifest::ModelManifest;
 use crate::runtime::Outputs;
 use crate::tensor::{linalg, pool, Tensor};
 
-use super::graph::{self, GraphIn, ModeKind};
+use super::graph::{self, GraphIn, ModeKind, SparseView};
 use super::ops;
 
 pub(super) fn prefill(
     mm: &ModelManifest,
     f32s: &BTreeMap<&str, &Tensor>,
     i32s: &BTreeMap<&str, (&[usize], &[i32])>,
+    sparse: SparseView,
 ) -> Result<Outputs> {
     let (params, masks) = super::gather_params(mm, f32s);
-    let gi = GraphIn { mm, params: &params, masks: &masks, adapters: None, mode: ModeKind::Subset };
+    let gi = GraphIn {
+        mm,
+        params: &params,
+        masks: &masks,
+        adapters: None,
+        mode: ModeKind::Subset,
+        sparse,
+    };
     let (slots, s, toks) = super::tokens_in(i32s);
     let (_, lens) = i32s["lens"];
     let vocab = mm.cfg.vocab;
 
-    let tape = graph::forward(&gi, toks, slots, s, None);
+    let tape = graph::forward(&gi, toks, slots, s);
     let (full_logits, kv) = tape.into_logits_and_kv();
     let mut lg = pool::zeroed(slots * vocab);
     for (b, &len) in lens.iter().enumerate() {
@@ -64,12 +72,20 @@ pub(super) fn decode_step(
     mm: &ModelManifest,
     f32s: &BTreeMap<&str, &Tensor>,
     i32s: &BTreeMap<&str, (&[usize], &[i32])>,
+    sparse: SparseView,
 ) -> Result<Outputs> {
     let cfg = &mm.cfg;
     let (nh, dh, d) = (cfg.n_heads, cfg.d_head(), cfg.d_model);
     let (slots, seq, vocab) = (cfg.serve_slots, cfg.seq_len, cfg.vocab);
     let (params, masks) = super::gather_params(mm, f32s);
-    let gi = GraphIn { mm, params: &params, masks: &masks, adapters: None, mode: ModeKind::Subset };
+    let gi = GraphIn {
+        mm,
+        params: &params,
+        masks: &masks,
+        adapters: None,
+        mode: ModeKind::Subset,
+        sparse,
+    };
     let (_, toks) = i32s["tokens"];
     let (_, pos) = i32s["pos"];
 
@@ -175,11 +191,12 @@ fn norm_apply(gi: &GraphIn, prefix: &str, x: &Tensor) -> Tensor {
 }
 
 /// Plain masked linear (the decode path always runs merged weights —
-/// adapters are folded before serving).  Fused: pruned weights are skipped
-/// in the kernel instead of materialising W⊙M per decode step.
+/// adapters are folded before serving), routed through the layout seam: at
+/// serve-time sparsities the CSR form reads only surviving weights, which
+/// is where the decode path's memory-traffic reduction comes from.
 fn linear_apply(gi: &GraphIn, base: &str, x: &Tensor) -> Tensor {
     let wname = format!("{base}_w");
-    let mut y = linalg::matmul_nt_masked(x, gi.p(&wname), gi.m(&wname));
+    let mut y = graph::masked_fwd(gi, &wname, x);
     if gi.mm.cfg.use_bias {
         ops::add_bias(&mut y, gi.p(&format!("{base}_b")));
     }

@@ -13,9 +13,13 @@
 use std::collections::{BTreeMap, HashSet};
 
 use crate::runtime::manifest::ModelManifest;
-use crate::tensor::{linalg, pool, Tensor};
+use crate::tensor::{linalg, pool, sparse, Tensor};
 
 use super::ops;
+
+// The per-linear dispatch seam: every masked contraction below routes
+// through [`masked_fwd`]/[`masked_bwd_dx`] on the weight's resolved layout.
+pub use crate::tensor::sparse::{SparseView, WeightLayout};
 
 /// How the six per-block linears are parametrised (mirrors model.py modes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -50,6 +54,9 @@ pub struct GraphIn<'a> {
     /// Adapter tensors keyed `<linear>::A` / `<linear>::B` (LoRA modes only).
     pub adapters: Option<&'a BTreeMap<String, &'a Tensor>>,
     pub mode: ModeKind,
+    /// Per-weight execution layouts + cached CSR forms.  Empty = fused
+    /// masked kernels everywhere (the default path).
+    pub sparse: SparseView<'a>,
 }
 
 impl<'a> GraphIn<'a> {
@@ -188,6 +195,53 @@ impl Tape {
             pool::recycle(v);
         }
     }
+
+    /// Consume the tape into the calibration/reconstruction capture list:
+    /// `(tap_param_name, X)` pairs in forward order (the layout
+    /// `builtin_tap_names` describes).  The captured activations are
+    /// *moved* out of the tape — the old capture path cloned each of them
+    /// mid-forward — and every other buffer is recycled.
+    pub fn into_captures(self) -> Vec<(String, Tensor)> {
+        let Tape { blocks, fln, h_final, logits, .. } = self;
+        let mut cap = Vec::with_capacity(blocks.len() * 4);
+        for (i, bt) in blocks.into_iter().enumerate() {
+            let BlockTape {
+                ln1,
+                h1,
+                q,
+                k,
+                v,
+                qh,
+                kh,
+                vh,
+                probs,
+                attn_merged,
+                o,
+                ln2,
+                h2,
+                fc,
+                fc_pre,
+                gelu_out,
+                proj,
+            } = bt;
+            ln1.recycle();
+            ln2.recycle();
+            for lt in [q, k, v, o, fc, proj] {
+                lt.recycle();
+            }
+            for t in [qh, kh, vh, probs, fc_pre] {
+                pool::recycle(t);
+            }
+            cap.push((format!("h{i}_attn_q_w"), h1));
+            cap.push((format!("h{i}_attn_o_w"), attn_merged));
+            cap.push((format!("h{i}_mlp_fc_w"), h2));
+            cap.push((format!("h{i}_mlp_proj_w"), gelu_out));
+        }
+        fln.recycle();
+        pool::recycle(h_final);
+        pool::recycle(logits);
+        cap
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -231,24 +285,61 @@ fn norm_bwd(
     }
 }
 
+/// `x @ (W⊙M)ᵀ` through the weight's resolved [`WeightLayout`] — the
+/// forward/decode dispatch seam.  CSR touches only surviving weights;
+/// Masked reads W and M fused; Dense materialises `W⊙M` (the pre-fusion
+/// baseline, kept for A/B benches and `--layout dense`).
+pub(crate) fn masked_fwd(gi: &GraphIn, wname: &str, x: &Tensor) -> Tensor {
+    match gi.sparse.layout_of(wname) {
+        WeightLayout::Csr => {
+            sparse::spmm_nt(x, gi.sparse.get_csr(wname).expect("csr layout implies a cached form"))
+        }
+        WeightLayout::Masked => linalg::matmul_nt_masked(x, gi.p(wname), gi.m(wname)),
+        WeightLayout::Dense => {
+            let wm = gi.p(wname).hadamard(gi.m(wname));
+            let y = linalg::matmul_nt(x, &wm);
+            pool::recycle(wm);
+            y
+        }
+    }
+}
+
+/// `dy @ (W⊙M)` through the weight's resolved layout — the backward-dx
+/// seam.  Weight-gradient accumulation stays dense in all layouts: masks
+/// freeze pruned coordinates, so only the dx contraction profits from
+/// compression.
+pub(crate) fn masked_bwd_dx(gi: &GraphIn, wname: &str, dy: &Tensor) -> Tensor {
+    match gi.sparse.layout_of(wname) {
+        WeightLayout::Csr => {
+            sparse::spmm(dy, gi.sparse.get_csr(wname).expect("csr layout implies a cached form"))
+        }
+        WeightLayout::Masked => linalg::matmul_masked(dy, gi.p(wname), gi.m(wname)),
+        WeightLayout::Dense => {
+            let wm = gi.p(wname).hadamard(gi.m(wname));
+            let dx = linalg::matmul(dy, &wm);
+            pool::recycle(wm);
+            dx
+        }
+    }
+}
+
 fn linear_fwd(gi: &GraphIn, base: &str, x: &Tensor) -> (Tensor, LinTape) {
     let wname = format!("{base}_w");
-    let w = gi.p(&wname);
-    let mask = gi.m(&wname);
     let (mut y, wm, z, u) = match gi.mode {
-        // fused masked forward: pruned weights are skipped in the kernel
-        // instead of materialising W⊙M every call (the forward hot path)
-        ModeKind::Subset => (linalg::matmul_nt_masked(x, w, mask), None, None, None),
+        // layout-dispatched masked forward: pruned weights are skipped in
+        // the kernel (Masked) or never even loaded (Csr)
+        ModeKind::Subset => (masked_fwd(gi, &wname, x), None, None, None),
         ModeKind::Lora => {
             let a = gi.adapter(&wname, "A");
             let bmat = gi.adapter(&wname, "B");
             let s = gi.scale();
             let u = linalg::matmul_nt(x, a); // (n, r)
             let low = linalg::matmul_nt(&u, bmat); // (n, out)
-            let y = linalg::matmul_nt_masked(x, w, mask).zip(&low, |p, q| p + s * q);
+            let y = masked_fwd(gi, &wname, x).zip(&low, |p, q| p + s * q);
             (y, None, None, Some(u))
         }
         ModeKind::MaskLora => {
+            let (w, mask) = (gi.p(&wname), gi.m(&wname));
             let a = gi.adapter(&wname, "A");
             let bmat = gi.adapter(&wname, "B");
             let s = gi.scale();
@@ -258,6 +349,7 @@ fn linear_fwd(gi: &GraphIn, base: &str, x: &Tensor) -> (Tensor, LinTape) {
             (linalg::matmul_nt(x, &z), None, Some(z), None)
         }
         ModeKind::ScaleLora => {
+            let (w, mask) = (gi.p(&wname), gi.m(&wname));
             let a = gi.adapter(&wname, "A");
             let bmat = gi.adapter(&wname, "B");
             let ba = linalg::matmul(bmat, a);
@@ -294,8 +386,8 @@ fn linear_bwd(
                 let dw = linalg::matmul_tn(dy, x).hadamard(gi.m(&wname));
                 grads.add(wname.clone(), dw);
             }
-            // fused dx = dy @ (W⊙M), mask applied in the kernel
-            linalg::matmul_masked(dy, gi.p(&wname), gi.m(&wname))
+            // dx = dy @ (W⊙M) through the layout seam
+            masked_bwd_dx(gi, &wname, dy)
         }
         ModeKind::Lora => {
             let a = gi.adapter(&wname, "A");
@@ -305,8 +397,7 @@ fn linear_bwd(
             let du = linalg::matmul(dy, bmat).scale(s); // (n, r)
             grads.add(format!("{wname}::B"), linalg::matmul_tn(dy, u).scale(s));
             grads.add(format!("{wname}::A"), linalg::matmul_tn(&du, x));
-            linalg::matmul_masked(dy, gi.p(&wname), gi.m(&wname))
-                .add(&linalg::matmul(&du, a))
+            masked_bwd_dx(gi, &wname, dy).add(&linalg::matmul(&du, a))
         }
         ModeKind::MaskLora => {
             let a = gi.adapter(&wname, "A");
@@ -332,16 +423,11 @@ fn linear_bwd(
     }
 }
 
-/// Token ids (B, S) -> logits, recording the tape for [`backward`].  When
-/// `capture` is given it receives `(tap_param_name, X)` pairs for every
-/// capture point, in forward order (the calibration/reconstruction taps).
-pub fn forward(
-    gi: &GraphIn,
-    tokens: &[i32],
-    b: usize,
-    s: usize,
-    mut capture: Option<&mut Vec<(String, Tensor)>>,
-) -> Tape {
+/// Token ids (B, S) -> logits, recording the tape for [`backward`].  The
+/// calibration/reconstruction capture points (ln1/attn-merged/ln2/gelu
+/// activations) live on the tape — consume it with
+/// [`Tape::into_captures`] instead of cloning mid-forward.
+pub fn forward(gi: &GraphIn, tokens: &[i32], b: usize, s: usize) -> Tape {
     let cfg = &gi.mm.cfg;
     let (h, dh) = (cfg.n_heads, cfg.d_head());
     let mut cur = ops::embed_fwd(tokens, b, s, gi.p("embed_tokens"), gi.p("embed_pos"));
@@ -349,9 +435,6 @@ pub fn forward(
     for i in 0..cfg.n_layers {
         let p = format!("h{i}_");
         let (h1, ln1) = norm_fwd(gi, &format!("{p}ln1"), &cur);
-        if let Some(cap) = capture.as_deref_mut() {
-            cap.push((format!("{p}attn_q_w"), h1.clone()));
-        }
         let (q2, qt) = linear_fwd(gi, &format!("{p}attn_q"), &h1);
         let (k2, kt) = linear_fwd(gi, &format!("{p}attn_k"), &h1);
         let (v2, vt) = linear_fwd(gi, &format!("{p}attn_v"), &h1);
@@ -360,20 +443,11 @@ pub fn forward(
         let vh = ops::split_heads(&v2, b, s, h, dh);
         let (oh, probs) = ops::attention_fwd(&qh, &kh, &vh);
         let attn_merged = ops::merge_heads(&oh, b, s, h, dh);
-        if let Some(cap) = capture.as_deref_mut() {
-            cap.push((format!("{p}attn_o_w"), attn_merged.clone()));
-        }
         let (o2, ot) = linear_fwd(gi, &format!("{p}attn_o"), &attn_merged);
         let res_mid = cur.add(&o2);
         let (h2, ln2) = norm_fwd(gi, &format!("{p}ln2"), &res_mid);
-        if let Some(cap) = capture.as_deref_mut() {
-            cap.push((format!("{p}mlp_fc_w"), h2.clone()));
-        }
         let (fc_pre, fct) = linear_fwd(gi, &format!("{p}mlp_fc"), &h2);
         let gelu_out = ops::gelu(&fc_pre);
-        if let Some(cap) = capture.as_deref_mut() {
-            cap.push((format!("{p}mlp_proj_w"), gelu_out.clone()));
-        }
         let (proj2, pt) = linear_fwd(gi, &format!("{p}mlp_proj"), &gelu_out);
         cur = res_mid.add(&proj2);
         blocks.push(BlockTape {
@@ -572,10 +646,11 @@ mod tests {
             masks: &masks,
             adapters: if mode == ModeKind::Subset { None } else { Some(&adapters) },
             mode,
+            sparse: SparseView::default(),
         };
         let b = mm.cfg.train_batch;
         let s = mm.cfg.seq_len;
-        let tape = forward(&gi, &st.tokens, b, s, None);
+        let tape = forward(&gi, &st.tokens, b, s);
         let (loss, _) = ops::ce_grad(&tape.logits, &st.tokens, b, s);
         loss
     }
@@ -598,10 +673,11 @@ mod tests {
             masks: &masks,
             adapters: if mode == ModeKind::Subset { None } else { Some(&adapters) },
             mode,
+            sparse: SparseView::default(),
         };
         let b = mm.cfg.train_batch;
         let s = mm.cfg.seq_len;
-        let tape = forward(&gi, &st.tokens, b, s, None);
+        let tape = forward(&gi, &st.tokens, b, s);
         let (_, dlogits) = ops::ce_grad(&tape.logits, &st.tokens, b, s);
         let wants: HashSet<String> = wants.iter().map(|s| s.to_string()).collect();
         backward(&gi, &tape, &st.tokens, &dlogits, wants)
@@ -658,7 +734,7 @@ mod tests {
         assert_eq!(grads.len(), leaves.len());
         let mut rng = Rng::new(7);
         for leaf in leaves {
-            let g = grads[leaf].clone();
+            let g = &grads[leaf];
             // pick the largest-|grad| coordinate plus a random one
             let (mut best, mut bv) = (0usize, 0.0f32);
             for (i, &v) in g.data().iter().enumerate() {
@@ -696,7 +772,7 @@ mod tests {
         let grads = grads_of(&mm, &st, ModeKind::Subset, &leaves);
         let mut rng = Rng::new(11);
         for leaf in leaves {
-            let g = grads[leaf].clone();
+            let g = &grads[leaf];
             let idx = rng.below(g.numel() as u64) as usize;
             check_grad(&mm, &mut st, ModeKind::Subset, leaf, idx, g.data()[idx]);
         }
@@ -711,7 +787,7 @@ mod tests {
             let grads = grads_of(&mm, &st, mode, &leaves);
             let mut rng = Rng::new(13);
             for leaf in leaves {
-                let g = grads[leaf].clone();
+                let g = &grads[leaf];
                 let idx = rng.below(g.numel() as u64) as usize;
                 check_grad(&mm, &mut st, mode, leaf, idx, g.data()[idx]);
             }
@@ -727,17 +803,62 @@ mod tests {
             st.params.iter().map(|(k, v)| (k.clone(), v)).collect();
         let masks: BTreeMap<String, &Tensor> =
             st.masks.iter().map(|(k, v)| (k.clone(), v)).collect();
-        let gi = GraphIn { mm, params: &params, masks: &masks, adapters: None, mode: ModeKind::Subset };
+        let gi = GraphIn {
+            mm,
+            params: &params,
+            masks: &masks,
+            adapters: None,
+            mode: ModeKind::Subset,
+            sparse: SparseView::default(),
+        };
         let b = mm.cfg.eval_batch;
         let s = mm.cfg.seq_len;
         let tokens: Vec<i32> = vec![1; b * s];
-        let mut cap = Vec::new();
-        forward(&gi, &tokens, b, s, Some(&mut cap));
+        let cap = forward(&gi, &tokens, b, s).into_captures();
         let names: Vec<String> = cap.iter().map(|(n, _)| n.clone()).collect();
         let expect = crate::runtime::manifest::builtin_tap_names(&mm.cfg);
         assert_eq!(names, expect);
         for (n, x) in &cap {
             assert_eq!(x.shape(), &[b * s, mm.param_shape(n)[1]], "{n}");
         }
+    }
+
+    #[test]
+    fn csr_layout_forward_and_dx_match_masked() {
+        use crate::tensor::sparse::{LayoutPolicy, SparseStore};
+        let mm = micro("layernorm", true);
+        let st = random_state(&mm, 6);
+        let params: BTreeMap<String, &Tensor> =
+            st.params.iter().map(|(k, v)| (k.clone(), v)).collect();
+        let masks: BTreeMap<String, &Tensor> =
+            st.masks.iter().map(|(k, v)| (k.clone(), v)).collect();
+        let store = SparseStore::build(
+            LayoutPolicy::Fixed(WeightLayout::Csr),
+            mm.prunable.iter().map(|n| (n.clone(), &st.params[n.as_str()], &st.masks[n.as_str()])),
+        );
+        assert_eq!(store.csr.len(), mm.prunable.len());
+        let b = mm.cfg.train_batch;
+        let s = mm.cfg.seq_len;
+        let base = GraphIn {
+            mm: &mm,
+            params: &params,
+            masks: &masks,
+            adapters: None,
+            mode: ModeKind::Subset,
+            sparse: SparseView::default(),
+        };
+        let csr = GraphIn { sparse: store.view(), ..base };
+        let t_masked = forward(&base, &st.tokens, b, s);
+        let t_csr = forward(&csr, &st.tokens, b, s);
+        assert!(
+            t_csr.logits.allclose(&t_masked.logits, 1e-6, 1e-6),
+            "csr forward diverged from masked"
+        );
+        // backward dx path: gradients of a below-the-linears leaf agree
+        let (_, dl) = ops::ce_grad(&t_masked.logits, &st.tokens, b, s);
+        let wants: HashSet<String> = ["embed_tokens".to_string()].into();
+        let gm = backward(&base, &t_masked, &st.tokens, &dl, wants.clone());
+        let gc = backward(&csr, &t_csr, &st.tokens, &dl, wants);
+        assert!(gc["embed_tokens"].allclose(&gm["embed_tokens"], 1e-6, 1e-5));
     }
 }

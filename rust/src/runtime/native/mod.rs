@@ -29,7 +29,7 @@ use crate::runtime::manifest::{is_lora_mode, split_adapter_name, DType, Manifest
 use crate::runtime::{Backend, Feed, Outputs};
 use crate::tensor::{linalg, pool, Tensor};
 
-use graph::{GraphIn, ModeKind};
+use graph::{GraphIn, ModeKind, SparseView};
 
 pub struct NativeBackend {
     manifest: Manifest,
@@ -122,15 +122,18 @@ impl Backend for NativeBackend {
         self.exec_count.set(self.exec_count.get() + 1);
 
         // ---- dispatch ----------------------------------------------------
+        let sv = gather_sparse(mm, feed);
         match exec {
-            "eval_loss" | "eval_loss_lora" => eval_loss(mm, &f32s, &i32s, exec.ends_with("_lora")),
-            "score" | "score_lora" => score(mm, &f32s, &i32s, exec.ends_with("_lora")),
-            "calib_stats" => capture(mm, &f32s, &i32s, true),
-            "capture_inputs" => capture(mm, &f32s, &i32s, false),
-            "prefill" => decode::prefill(mm, &f32s, &i32s),
-            "decode_step" => decode::decode_step(mm, &f32s, &i32s),
+            "eval_loss" | "eval_loss_lora" => {
+                eval_loss(mm, &f32s, &i32s, sv, exec.ends_with("_lora"))
+            }
+            "score" | "score_lora" => score(mm, &f32s, &i32s, sv, exec.ends_with("_lora")),
+            "calib_stats" => capture(mm, &f32s, &i32s, sv, true),
+            "capture_inputs" => capture(mm, &f32s, &i32s, sv, false),
+            "prefill" => decode::prefill(mm, &f32s, &i32s, sv),
+            "decode_step" => decode::decode_step(mm, &f32s, &i32s, sv),
             e if e.starts_with("train_") => {
-                train(mm, &f32s, &i32s, e.strip_prefix("train_").unwrap())
+                train(mm, &f32s, &i32s, sv, e.strip_prefix("train_").unwrap())
             }
             e if e.starts_with("linear_fwd_") => {
                 let y0 = linalg::matmul_nt(f32s["x"], f32s["w"]);
@@ -172,6 +175,22 @@ fn gather_params<'a>(
     (params, masks)
 }
 
+/// Collect the feed's compressed-layout side channel for this model's
+/// prunable weights.  Empty when the caller attached nothing — every
+/// linear then runs the fused masked kernels.
+fn gather_sparse<'a>(mm: &ModelManifest, feed: &Feed<'a>) -> SparseView<'a> {
+    let mut sv = SparseView::default();
+    for n in &mm.prunable {
+        if let Some(l) = feed.get_weight_layout(n) {
+            sv.layouts.insert(n.clone(), l);
+        }
+        if let Some(c) = feed.get_csr(n) {
+            sv.csr.insert(n.clone(), c);
+        }
+    }
+    sv
+}
+
 fn gather_adapters<'a>(
     mm: &ModelManifest,
     f32s: &BTreeMap<&str, &'a Tensor>,
@@ -202,6 +221,7 @@ fn eval_loss(
     mm: &ModelManifest,
     f32s: &BTreeMap<&str, &Tensor>,
     i32s: &BTreeMap<&str, (&[usize], &[i32])>,
+    sparse: SparseView,
     lora: bool,
 ) -> Result<Outputs> {
     let (params, masks) = gather_params(mm, f32s);
@@ -212,9 +232,10 @@ fn eval_loss(
         masks: &masks,
         adapters: adapters.as_ref(),
         mode: if lora { ModeKind::Lora } else { ModeKind::Subset },
+        sparse,
     };
     let (b, s, toks) = tokens_in(i32s);
-    let tape = graph::forward(&gi, toks, b, s, None);
+    let tape = graph::forward(&gi, toks, b, s);
     let (sum, count) = ops::ce_sums(&tape.logits, toks, b, s);
     tape.recycle();
     Ok(Outputs {
@@ -229,6 +250,7 @@ fn score(
     mm: &ModelManifest,
     f32s: &BTreeMap<&str, &Tensor>,
     i32s: &BTreeMap<&str, (&[usize], &[i32])>,
+    sparse: SparseView,
     lora: bool,
 ) -> Result<Outputs> {
     let (params, masks) = gather_params(mm, f32s);
@@ -239,9 +261,10 @@ fn score(
         masks: &masks,
         adapters: adapters.as_ref(),
         mode: if lora { ModeKind::Lora } else { ModeKind::Subset },
+        sparse,
     };
     let (b, s, toks) = tokens_in(i32s);
-    let tape = graph::forward(&gi, toks, b, s, None);
+    let tape = graph::forward(&gi, toks, b, s);
     let (scores, counts) = ops::sequence_scores(&tape.logits, toks, f32s["tmask"], b, s);
     tape.recycle();
     Ok(Outputs {
@@ -253,23 +276,33 @@ fn score(
 }
 
 /// `calib_stats` (grams = true) and `capture_inputs` (grams = false) share
-/// one captured forward pass in plain masked mode.
+/// one captured forward pass in plain masked mode.  The captured
+/// activations are moved off the tape, not cloned mid-forward.
 fn capture(
     mm: &ModelManifest,
     f32s: &BTreeMap<&str, &Tensor>,
     i32s: &BTreeMap<&str, (&[usize], &[i32])>,
+    sparse: SparseView,
     grams: bool,
 ) -> Result<Outputs> {
     let (params, masks) = gather_params(mm, f32s);
-    let gi = GraphIn { mm, params: &params, masks: &masks, adapters: None, mode: ModeKind::Subset };
+    let gi = GraphIn {
+        mm,
+        params: &params,
+        masks: &masks,
+        adapters: None,
+        mode: ModeKind::Subset,
+        sparse,
+    };
     let (b, s, toks) = tokens_in(i32s);
-    let mut cap = Vec::new();
-    graph::forward(&gi, toks, b, s, Some(&mut cap)).recycle();
+    let cap = graph::forward(&gi, toks, b, s).into_captures();
     let values = cap
         .into_iter()
         .map(|(tap, x)| {
             if grams {
-                (format!("gram::{tap}"), linalg::matmul_tn(&x, &x))
+                let g = linalg::matmul_tn(&x, &x);
+                pool::recycle(x);
+                (format!("gram::{tap}"), g)
             } else {
                 (format!("x::{tap}"), x)
             }
@@ -282,6 +315,7 @@ fn train(
     mm: &ModelManifest,
     f32s: &BTreeMap<&str, &Tensor>,
     i32s: &BTreeMap<&str, (&[usize], &[i32])>,
+    sparse: SparseView,
     mode_key: &str,
 ) -> Result<Outputs> {
     let trainable = mm
@@ -301,12 +335,13 @@ fn train(
         masks: &masks,
         adapters: adapters.as_ref(),
         mode: ModeKind::from_key(mode_key),
+        sparse,
     };
     let (b, s, toks) = tokens_in(i32s);
     let step = scalar_in(f32s, "step");
     let lr = scalar_in(f32s, "lr");
 
-    let tape = graph::forward(&gi, toks, b, s, None);
+    let tape = graph::forward(&gi, toks, b, s);
     let (loss, dlogits) = ops::ce_grad(&tape.logits, toks, b, s);
     let wants: HashSet<String> = leaves.iter().cloned().collect();
     let mut grads = graph::backward(&gi, &tape, toks, &dlogits, wants);

@@ -32,7 +32,6 @@ use crate::coordinator::sweep::ExpContext;
 use crate::coordinator::Session;
 use crate::data::tokenizer::PAD;
 use crate::data::Tokenizer;
-use crate::eval::base_feed;
 use crate::runtime::{default_artifacts_dir, open_backend, BackendKind};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -120,6 +119,8 @@ pub struct EngineInfo {
     pub max_active: usize,
     pub seq_len: usize,
     pub kv_bytes: usize,
+    /// Compressed weight bytes across CSR-routed layers (0 = none routed).
+    pub csr_bytes: usize,
     pub checkpoint: Option<String>,
 }
 
@@ -246,6 +247,7 @@ fn engine_main(
         max_active,
         seq_len: cfg.seq_len,
         kv_bytes: kv::kv_bytes(cfg),
+        csr_bytes: s.sparse.csr_bytes(),
         checkpoint: spec.checkpoint.as_ref().map(|p| p.display().to_string()),
     };
     if ready.send(Ok(info)).is_err() {
@@ -356,7 +358,8 @@ fn run_loop(
             }
             metrics.prefills.fetch_add(1, Ordering::Relaxed);
             let run = {
-                let feed = base_feed(&s.params, &s.masks)
+                let feed = s
+                    .feed()
                     .ints("tokens", &prefill_shape, &ptoks)
                     .ints("lens", &slot_shape, &lens);
                 s.rt.run(&cfg.name, "prefill", &feed)
@@ -423,7 +426,8 @@ fn run_loop(
             }
         }
         let run = {
-            let mut feed = base_feed(&s.params, &s.masks)
+            let mut feed = s
+                .feed()
                 .ints("tokens", &slot_shape, &step_tokens)
                 .ints("pos", &slot_shape, &step_pos);
             for layer in 0..cache.n_layers() {
@@ -567,7 +571,8 @@ fn score_text(s: &Session, text: &str) -> Result<ScoreResult> {
     }
     let shape = [b, sl];
     let out = {
-        let feed = base_feed(&s.params, &s.masks)
+        let feed = s
+            .feed()
             .ints("tokens", &shape, &tokens)
             .owned("tmask", Tensor::new(&[b, sl], tmask));
         s.rt.run(&mm.cfg.name, "score", &feed)?

@@ -203,6 +203,7 @@ fn models(state: &ServeState) -> String {
                 ("max_active", Json::Num(e.info.max_active as f64)),
                 ("seq_len", Json::Num(e.info.seq_len as f64)),
                 ("kv_cache_bytes", Json::Num(e.info.kv_bytes as f64)),
+                ("csr_weight_bytes", Json::Num(e.info.csr_bytes as f64)),
                 (
                     "checkpoint",
                     e.info
@@ -246,6 +247,10 @@ fn metrics(state: &ServeState) -> String {
         out.push_str(&format!(
             "perp_serve_kv_cache_bytes{tag} {}\n",
             e.info.kv_bytes
+        ));
+        out.push_str(&format!(
+            "perp_serve_csr_weight_bytes{tag} {}\n",
+            e.info.csr_bytes
         ));
     }
     out

@@ -5,12 +5,14 @@
 //! SparseGPT) run entirely on these tensors.  f32, row-major, contiguous.
 //!
 //! Submodules: [`linalg`] (blocked matmul, Cholesky toolchain for
-//! SparseGPT's OBS solver), [`io`] (checkpoint serialization), [`pool`]
-//! (thread-local buffer reuse for the native backend's per-step tapes).
+//! SparseGPT's OBS solver), [`sparse`] (CSR weight layout + SpMM kernels),
+//! [`io`] (checkpoint serialization), [`pool`] (thread-local buffer reuse
+//! for the native backend's per-step tapes).
 
 pub mod io;
 pub mod linalg;
 pub mod pool;
+pub mod sparse;
 
 use crate::util::rng::Rng;
 

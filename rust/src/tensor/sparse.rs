@@ -1,0 +1,577 @@
+//! Index-compressed sparse weight layout (CSR) and its SpMM kernels.
+//!
+//! PERP keeps pruned networks pruned, but the masked kernels
+//! (`linalg::matmul_nt_masked` / `matmul_masked`) still stream the full
+//! dense `(m, k)` weight *and* mask buffers and branch per element — a
+//! 90%-sparse layer pays almost the same memory traffic as a dense one.
+//! [`CsrMatrix`] stores only the surviving weights
+//! (row-ptr / col-idx / values, `nnz × 8 B + (m+1) × 4 B` vs the dense
+//! `m·k × 4 B`), so the SpMM kernels touch exactly the kept entries:
+//!
+//! * [`spmm_nt`] — `a:(n,k) @ Wᵀ` with `W:(m,k)` compressed: the forward /
+//!   serve-decode contraction;
+//! * [`spmm`]    — `a:(n,m) @ W`  with `W:(m,k)` compressed: the
+//!   backward-dx contraction.
+//!
+//! Both mirror the masked kernels' per-element accumulation order
+//! (ascending inner index), so switching layouts never changes results
+//! beyond dropped exact-zero products — greedy decode stays bit-identical
+//! within a layout (pinned by `tests/decode_parity.rs`).
+//!
+//! Layout *selection* lives here too: [`WeightLayout`] names the three
+//! execution strategies and [`LayoutPolicy`] resolves one per layer from
+//! its measured sparsity ([`LayoutPolicy::Auto`] compresses layers at or
+//! above the crossover sparsity, `PERP_CSR_CROSSOVER`, default 0.75 —
+//! measured with `repro bench-kernels`).  [`SparseStore`] is the cached,
+//! named collection the coordinator builds once at prune / merge /
+//! load-checkpoint time and feeds to every subsequent execution.
+
+use std::collections::BTreeMap;
+
+use rayon::prelude::*;
+
+use super::{pool, Tensor};
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Layout selection.
+// ---------------------------------------------------------------------------
+
+/// How a masked linear's `x @ (W⊙M)ᵀ` contraction is executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightLayout {
+    /// Materialise `W⊙M` and run the dense kernel (the pre-fusion baseline).
+    Dense,
+    /// Fused masked kernels: read W and M, skip pruned entries per element.
+    Masked,
+    /// Compressed rows: touch only surviving weights ([`spmm_nt`]/[`spmm`]).
+    Csr,
+}
+
+impl WeightLayout {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WeightLayout::Dense => "dense",
+            WeightLayout::Masked => "masked",
+            WeightLayout::Csr => "csr",
+        }
+    }
+}
+
+/// Per-layer layout choice: forced, or resolved from measured sparsity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayoutPolicy {
+    /// Pick per layer: CSR at or above the crossover sparsity, fused masked
+    /// kernels below it (they never lose to the materialising dense path).
+    Auto,
+    /// One layout for every layer (`--layout dense|masked|csr`).
+    Fixed(WeightLayout),
+}
+
+impl LayoutPolicy {
+    pub fn parse(s: &str) -> Result<LayoutPolicy, String> {
+        match s {
+            "auto" => Ok(LayoutPolicy::Auto),
+            "dense" => Ok(LayoutPolicy::Fixed(WeightLayout::Dense)),
+            "masked" => Ok(LayoutPolicy::Fixed(WeightLayout::Masked)),
+            "csr" => Ok(LayoutPolicy::Fixed(WeightLayout::Csr)),
+            other => Err(format!("unknown layout {other:?} (auto|dense|masked|csr)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayoutPolicy::Auto => "auto",
+            LayoutPolicy::Fixed(l) => l.name(),
+        }
+    }
+
+    /// Sparsity at which CSR overtakes the fused masked kernel.  The default
+    /// comes from `repro bench-kernels` on the runtime_micro GEMM shapes;
+    /// `PERP_CSR_CROSSOVER` overrides it for other machines.
+    pub fn csr_crossover() -> f64 {
+        std::env::var("PERP_CSR_CROSSOVER")
+            .ok()
+            .and_then(|v| v.parse::<f64>().ok())
+            .filter(|v| (0.0..=1.0).contains(v))
+            .unwrap_or(0.75)
+    }
+
+    /// Resolve the layout for one layer from its measured sparsity.
+    pub fn resolve(&self, sparsity: f64) -> WeightLayout {
+        match self {
+            LayoutPolicy::Fixed(l) => *l,
+            LayoutPolicy::Auto => {
+                if sparsity >= Self::csr_crossover() {
+                    WeightLayout::Csr
+                } else {
+                    WeightLayout::Masked
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CSR matrix.
+// ---------------------------------------------------------------------------
+
+/// Compressed-sparse-row form of a 2-D weight matrix, built once from
+/// `W ⊙ M`.  Entries are the coordinates where the product is non-zero, in
+/// row-major / ascending-column order — the same traversal order as the
+/// masked kernels, which keeps cross-layout results aligned.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    /// `rows + 1` offsets into `col_idx`/`values`.
+    row_ptr: Vec<u32>,
+    col_idx: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Compress the non-zeros of `w ⊙ mask` (an all-ones mask therefore
+    /// compresses the non-zeros of `w` itself — the checkpoint-serving case,
+    /// where pruned weights carry their zeros in the values).
+    pub fn from_dense_masked(w: &Tensor, mask: &Tensor) -> CsrMatrix {
+        assert_eq!(w.shape(), mask.shape(), "mask must be shaped like w");
+        let (m, k) = (w.rows(), w.cols());
+        // row_ptr stores nnz as u32 and nnz <= m·k, so bound the product
+        assert!(m * k <= u32::MAX as usize, "matrix too large for u32 CSR offsets");
+        let (wd, md) = (w.data(), mask.data());
+        let mut row_ptr = Vec::with_capacity(m + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0u32);
+        for i in 0..m {
+            for j in 0..k {
+                let v = wd[i * k + j] * md[i * k + j];
+                if v != 0.0 {
+                    col_idx.push(j as u32);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        CsrMatrix { rows: m, cols: k, row_ptr, col_idx, values }
+    }
+
+    /// Decompress back to a dense `(rows, cols)` tensor (dropped entries
+    /// come back as exact 0.0).
+    pub fn to_dense(&self) -> Tensor {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                out[i * self.cols + c as usize] = v;
+            }
+        }
+        Tensor::new(&[self.rows, self.cols], out)
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let lo = self.row_ptr[i] as usize;
+        let hi = self.row_ptr[i + 1] as usize;
+        (&self.col_idx[lo..hi], &self.values[lo..hi])
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fraction of entries *not* stored.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / (self.rows * self.cols).max(1) as f64
+    }
+
+    /// Compressed footprint: `nnz × 8 B + (rows + 1) × 4 B` (values +
+    /// col-idx per entry, plus the row-pointer array).
+    pub fn mem_bytes(&self) -> usize {
+        self.nnz() * 8 + self.row_ptr.len() * 4
+    }
+
+    /// Dense footprint of the same matrix (`rows · cols × 4 B`).
+    pub fn dense_bytes(&self) -> usize {
+        self.rows * self.cols * 4
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SpMM kernels.
+// ---------------------------------------------------------------------------
+
+/// Rows of `a` each rayon task owns in the tall-activation strategy.
+const ROWS_PER_TASK: usize = 4;
+/// Output columns per task in the single-row (decode) strategy.
+const COLS_PER_TASK: usize = 64;
+
+#[inline]
+fn csr_dot(arow: &[f32], cols: &[u32], vals: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (&c, &v) in cols.iter().zip(vals) {
+        acc += arow[c as usize] * v;
+    }
+    acc
+}
+
+/// `a:(n,k) @ W:(m,k)ᵀ -> (n,m)` with `W` compressed — the forward /
+/// decode contraction.  Only the `nnz` surviving weights are read, so the
+/// weight-side memory traffic shrinks by `1 / (1 - sparsity)`.  Per output
+/// element the accumulation order is ascending column index — identical to
+/// `matmul_nt_masked`, so the two layouts agree bit-for-bit wherever no
+/// stored weight is exactly zero.
+pub fn spmm_nt(a: &Tensor, w: &CsrMatrix) -> Tensor {
+    let (n, k) = (a.rows(), a.cols());
+    assert_eq!(k, w.cols, "spmm_nt inner-dim mismatch {k} vs {}", w.cols);
+    let m = w.rows;
+    let mut out = pool::zeroed(n * m);
+    let ad = a.data();
+    if n == 1 {
+        // one activation row (serve decode): parallelise over W rows instead
+        out.par_chunks_mut(COLS_PER_TASK).enumerate().for_each(|(cj, chunk)| {
+            let j0 = cj * COLS_PER_TASK;
+            for (jj, o) in chunk.iter_mut().enumerate() {
+                let (cols, vals) = w.row(j0 + jj);
+                *o = csr_dot(ad, cols, vals);
+            }
+        });
+    } else {
+        out.par_chunks_mut(ROWS_PER_TASK * m).enumerate().for_each(|(ci, chunk)| {
+            let i0 = ci * ROWS_PER_TASK;
+            for (ii, orow) in chunk.chunks_mut(m).enumerate() {
+                let arow = &ad[(i0 + ii) * k..(i0 + ii + 1) * k];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    let (cols, vals) = w.row(j);
+                    *o = csr_dot(arow, cols, vals);
+                }
+            }
+        });
+    }
+    Tensor::new(&[n, m], out)
+}
+
+/// `a:(n,m) @ W:(m,k) -> (n,k)` with `W` compressed — the backward-dx
+/// contraction.  Exact zeros of `a` are skipped (like `matmul`), and each
+/// consumed `a` element scatters one compressed row; per output element
+/// contributions arrive in ascending inner index, matching
+/// `matmul_masked`'s order.
+pub fn spmm(a: &Tensor, w: &CsrMatrix) -> Tensor {
+    let (n, m) = (a.rows(), a.cols());
+    assert_eq!(m, w.rows, "spmm inner-dim mismatch {m} vs {}", w.rows);
+    let k = w.cols;
+    let mut out = pool::zeroed(n * k);
+    let ad = a.data();
+    out.par_chunks_mut(ROWS_PER_TASK * k).enumerate().for_each(|(ci, chunk)| {
+        let i0 = ci * ROWS_PER_TASK;
+        for (ii, orow) in chunk.chunks_mut(k).enumerate() {
+            let arow = &ad[(i0 + ii) * m..(i0 + ii + 1) * m];
+            for (j, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let (cols, vals) = w.row(j);
+                for (&c, &v) in cols.iter().zip(vals) {
+                    orow[c as usize] += av * v;
+                }
+            }
+        }
+    });
+    Tensor::new(&[n, k], out)
+}
+
+// ---------------------------------------------------------------------------
+// Named collections: the coordinator-side cache and its borrowed view.
+// ---------------------------------------------------------------------------
+
+/// Cached sparse state for a model's prunable linears: one resolved
+/// [`WeightLayout`] per weight, plus the [`CsrMatrix`] forms for the
+/// CSR-routed ones.  Built once per weight/mask change (prune, merge,
+/// checkpoint load) so steady-state train/serve loops never re-compress.
+#[derive(Debug, Clone, Default)]
+pub struct SparseStore {
+    pub layouts: BTreeMap<String, WeightLayout>,
+    pub csr: BTreeMap<String, CsrMatrix>,
+}
+
+impl SparseStore {
+    /// Resolve a layout per layer from its measured `W⊙M` sparsity and
+    /// compress the CSR-routed layers.
+    pub fn build<'a>(
+        policy: LayoutPolicy,
+        layers: impl Iterator<Item = (String, &'a Tensor, &'a Tensor)>,
+    ) -> SparseStore {
+        let mut store = SparseStore::default();
+        store.update(policy, layers);
+        store
+    }
+
+    /// Re-resolve and recompress a subset of layers in place — the cheap
+    /// path when only one block's weights/masks changed (layer-wise
+    /// reconstruction); [`SparseStore::build`] is `update` over everything.
+    pub fn update<'a>(
+        &mut self,
+        policy: LayoutPolicy,
+        layers: impl Iterator<Item = (String, &'a Tensor, &'a Tensor)>,
+    ) {
+        for (name, w, mask) in layers {
+            let layout = match policy {
+                // fixed policies never read the sparsity — skip the scan
+                LayoutPolicy::Fixed(l) => l,
+                LayoutPolicy::Auto => {
+                    let nnz = w
+                        .data()
+                        .iter()
+                        .zip(mask.data())
+                        .filter(|(&wv, &mv)| wv * mv != 0.0)
+                        .count();
+                    policy.resolve(1.0 - nnz as f64 / w.numel().max(1) as f64)
+                }
+            };
+            if layout == WeightLayout::Csr {
+                self.csr.insert(name.clone(), CsrMatrix::from_dense_masked(w, mask));
+            } else {
+                self.csr.remove(&name);
+            }
+            self.layouts.insert(name, layout);
+        }
+    }
+
+    /// No layer deviates from the default fused-masked path.
+    pub fn is_empty(&self) -> bool {
+        self.layouts.values().all(|l| *l == WeightLayout::Masked)
+    }
+
+    pub fn has_csr(&self, name: &str) -> bool {
+        self.csr.contains_key(name)
+    }
+
+    /// Total compressed bytes across layers (exported by the serve layer
+    /// as the `perp_serve_csr_weight_bytes` gauge).
+    pub fn csr_bytes(&self) -> usize {
+        self.csr.values().map(CsrMatrix::mem_bytes).sum()
+    }
+
+    pub fn view(&self) -> SparseView<'_> {
+        SparseView {
+            layouts: self.layouts.clone(),
+            csr: self.csr.iter().map(|(n, c)| (n.clone(), c)).collect(),
+        }
+    }
+}
+
+/// Borrowed per-execution view — what [`crate::runtime::Feed`] transports
+/// and the native graph dispatches on.  An empty view means every linear
+/// runs the fused masked kernels (the status quo).
+#[derive(Debug, Default)]
+pub struct SparseView<'a> {
+    pub layouts: BTreeMap<String, WeightLayout>,
+    pub csr: BTreeMap<String, &'a CsrMatrix>,
+}
+
+impl<'a> SparseView<'a> {
+    /// Resolved layout for one weight; CSR only when the compressed form is
+    /// actually present, so a stale routing can never panic the kernels.
+    pub fn layout_of(&self, wname: &str) -> WeightLayout {
+        if self.csr.contains_key(wname) {
+            return WeightLayout::Csr;
+        }
+        match self.layouts.get(wname) {
+            Some(WeightLayout::Dense) => WeightLayout::Dense,
+            _ => WeightLayout::Masked,
+        }
+    }
+
+    pub fn get_csr(&self, wname: &str) -> Option<&'a CsrMatrix> {
+        self.csr.get(wname).copied()
+    }
+}
+
+/// A binary mask with an exact number of zeros — benches and tests need
+/// pinned sparsity levels, which thresholded gaussians only approximate.
+pub fn random_mask(shape: &[usize], sparsity: f64, rng: &mut Rng) -> Tensor {
+    let n: usize = shape.iter().product();
+    let zeros = ((n as f64) * sparsity).round() as usize;
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut idx);
+    let mut data = vec![1.0f32; n];
+    for &i in &idx[..zeros.min(n)] {
+        data[i as usize] = 0.0;
+    }
+    Tensor::new(shape, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::linalg;
+
+    fn random_case(m: usize, k: usize, sparsity: f64, seed: u64) -> (Tensor, Tensor) {
+        let mut rng = Rng::new(seed);
+        let w = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let mask = random_mask(&[m, k], sparsity, &mut rng);
+        (w, mask)
+    }
+
+    #[test]
+    fn roundtrip_matches_masked_product() {
+        for (m, k, s) in [(1usize, 1usize, 0.0), (7, 13, 0.5), (33, 65, 0.99), (8, 8, 1.0)] {
+            let (w, mask) = random_case(m, k, s, 3);
+            let csr = CsrMatrix::from_dense_masked(&w, &mask);
+            assert_eq!(csr.to_dense(), w.hadamard(&mask), "{m}x{k}@{s}");
+            assert_eq!(csr.sparsity(), 1.0 - csr.nnz() as f64 / (m * k) as f64);
+        }
+    }
+
+    #[test]
+    fn all_ones_mask_compresses_weight_zeros() {
+        // checkpoint serving: zeros live in the weights, the mask is dense
+        let w = Tensor::new(&[2, 3], vec![1.0, 0.0, 2.0, 0.0, 0.0, 3.0]);
+        let ones = Tensor::ones(&[2, 3]);
+        let csr = CsrMatrix::from_dense_masked(&w, &ones);
+        assert_eq!(csr.nnz(), 3);
+        assert_eq!(csr.to_dense(), w);
+    }
+
+    #[test]
+    fn memory_formula() {
+        let (w, mask) = random_case(16, 32, 0.9, 5);
+        let csr = CsrMatrix::from_dense_masked(&w, &mask);
+        assert_eq!(csr.mem_bytes(), csr.nnz() * 8 + (16 + 1) * 4);
+        assert_eq!(csr.dense_bytes(), 16 * 32 * 4);
+        assert!(csr.mem_bytes() < csr.dense_bytes());
+    }
+
+    #[test]
+    fn spmm_nt_bitwise_matches_masked_kernel() {
+        let mut rng = Rng::new(11);
+        for (n, k, m, s) in
+            [(1usize, 33usize, 17usize, 0.9), (5, 64, 31, 0.5), (9, 17, 65, 0.0), (4, 8, 8, 1.0)]
+        {
+            let a = Tensor::randn(&[n, k], 1.0, &mut rng);
+            let w = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let mask = random_mask(&[m, k], s, &mut rng);
+            let csr = CsrMatrix::from_dense_masked(&w, &mask);
+            let got = spmm_nt(&a, &csr);
+            let want = linalg::matmul_nt_masked(&a, &w, &mask);
+            assert_eq!(got.shape(), want.shape());
+            for (x, y) in got.data().iter().zip(want.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{n}x{k}x{m}@{s}");
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_matches_masked_backward() {
+        let mut rng = Rng::new(13);
+        for (n, m, k, s) in [(1usize, 17usize, 33usize, 0.9), (6, 31, 64, 0.5), (3, 8, 8, 1.0)] {
+            let dy = Tensor::randn(&[n, m], 1.0, &mut rng);
+            let w = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let mask = random_mask(&[m, k], s, &mut rng);
+            let csr = CsrMatrix::from_dense_masked(&w, &mask);
+            let got = spmm(&dy, &csr);
+            let want = linalg::matmul_masked(&dy, &w, &mask);
+            assert!(got.allclose(&want, 1e-6, 1e-6), "{n}x{m}x{k}@{s}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_rows() {
+        // row 0 fully pruned, single-row matrix, fully pruned matrix
+        let w = Tensor::new(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let mask = Tensor::new(&[2, 3], vec![0.0, 0.0, 0.0, 1.0, 0.0, 1.0]);
+        let csr = CsrMatrix::from_dense_masked(&w, &mask);
+        let a = Tensor::new(&[1, 3], vec![1.0, 1.0, 1.0]);
+        assert_eq!(spmm_nt(&a, &csr).data(), &[0.0, 10.0]);
+
+        let single = CsrMatrix::from_dense_masked(
+            &Tensor::new(&[1, 3], vec![2.0, 0.0, 4.0]),
+            &Tensor::ones(&[1, 3]),
+        );
+        assert_eq!(spmm_nt(&a, &single).data(), &[6.0]);
+        assert_eq!(single.row(0).0, &[0, 2]);
+
+        let dead = CsrMatrix::from_dense_masked(&w, &Tensor::zeros(&[2, 3]));
+        assert_eq!(dead.nnz(), 0);
+        assert_eq!(spmm_nt(&a, &dead).data(), &[0.0, 0.0]);
+        assert_eq!(spmm(&Tensor::ones(&[2, 2]), &dead).data(), &[0.0; 6]);
+    }
+
+    #[test]
+    fn policy_parse_and_resolve() {
+        assert_eq!(LayoutPolicy::parse("auto").unwrap(), LayoutPolicy::Auto);
+        assert_eq!(
+            LayoutPolicy::parse("csr").unwrap(),
+            LayoutPolicy::Fixed(WeightLayout::Csr)
+        );
+        assert!(LayoutPolicy::parse("coo").is_err());
+        assert_eq!(LayoutPolicy::Auto.resolve(0.99), WeightLayout::Csr);
+        assert_eq!(LayoutPolicy::Auto.resolve(0.0), WeightLayout::Masked);
+        assert_eq!(
+            LayoutPolicy::Fixed(WeightLayout::Dense).resolve(0.99),
+            WeightLayout::Dense
+        );
+    }
+
+    #[test]
+    fn store_builds_csr_only_where_routed() {
+        let mut rng = Rng::new(17);
+        let dense_w = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let sparse_w = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let ones = Tensor::ones(&[8, 8]);
+        let mask = random_mask(&[8, 8], 0.9, &mut rng);
+        let layers = vec![
+            ("a_w".to_string(), &dense_w, &ones),
+            ("b_w".to_string(), &sparse_w, &mask),
+        ];
+        let store = SparseStore::build(LayoutPolicy::Auto, layers.into_iter());
+        assert_eq!(store.layouts["a_w"], WeightLayout::Masked);
+        assert_eq!(store.layouts["b_w"], WeightLayout::Csr);
+        assert!(store.has_csr("b_w") && !store.has_csr("a_w"));
+        assert!(!store.is_empty());
+        assert!(store.csr_bytes() > 0);
+        let view = store.view();
+        assert_eq!(view.layout_of("a_w"), WeightLayout::Masked);
+        assert_eq!(view.layout_of("b_w"), WeightLayout::Csr);
+        assert_eq!(view.layout_of("unknown_w"), WeightLayout::Masked);
+        assert!(view.get_csr("b_w").is_some());
+    }
+
+    #[test]
+    fn store_update_rescans_only_named_layers_and_drops_stale_csr() {
+        let mut rng = Rng::new(23);
+        let w = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let sparse_mask = random_mask(&[8, 8], 0.9, &mut rng);
+        let ones = Tensor::ones(&[8, 8]);
+        let mut store = SparseStore::build(
+            LayoutPolicy::Auto,
+            vec![("a_w".to_string(), &w, &sparse_mask)].into_iter(),
+        );
+        assert!(store.has_csr("a_w"));
+        // the layer went dense (e.g. reconstruction reset): CSR must go away
+        store.update(LayoutPolicy::Auto, vec![("a_w".to_string(), &w, &ones)].into_iter());
+        assert!(!store.has_csr("a_w"));
+        assert_eq!(store.layouts["a_w"], WeightLayout::Masked);
+        // and back to pruned: recompressed, other entries untouched
+        store.update(
+            LayoutPolicy::Auto,
+            vec![("a_w".to_string(), &w, &sparse_mask)].into_iter(),
+        );
+        assert!(store.has_csr("a_w"));
+        assert_eq!(store.csr["a_w"].to_dense(), w.hadamard(&sparse_mask));
+    }
+
+    #[test]
+    fn random_mask_hits_exact_sparsity() {
+        let mut rng = Rng::new(19);
+        let m = random_mask(&[40, 50], 0.95, &mut rng);
+        assert_eq!(m.count(|x| x == 0.0), 1900);
+    }
+}

@@ -2,10 +2,12 @@
 //! executables (`prefill` + repeated `decode_step`) must produce
 //! token-identical output to re-running the growing context through the
 //! full forward pass — on gpt-nano, dense and at 50% unstructured
-//! sparsity, for single and batched (multi-slot) streams.
+//! sparsity, for single and batched (multi-slot) streams, and under the
+//! compressed CSR weight layout at 90% sparsity.
 //!
-//! The decode kernels mirror the forward pass' accumulation order exactly,
-//! so this holds bitwise, not just within tolerance.
+//! The decode kernels mirror the forward pass' accumulation order exactly
+//! (the CSR SpMM kernels mirror the masked kernels' order in turn), so
+//! this holds bitwise within a layout, not just within tolerance.
 
 use std::collections::BTreeMap;
 
@@ -15,6 +17,7 @@ use perp::runtime::native::graph::{self, GraphIn, ModeKind};
 use perp::runtime::{Backend, Feed, ModelManifest, NativeBackend};
 use perp::server::batcher::argmax;
 use perp::server::kv::KvCache;
+use perp::tensor::sparse::{LayoutPolicy, SparseStore, WeightLayout};
 use perp::tensor::Tensor;
 use perp::util::rng::Rng;
 
@@ -23,9 +26,15 @@ struct Fixture {
     mm: ModelManifest,
     params: BTreeMap<String, Tensor>,
     masks: BTreeMap<String, Tensor>,
+    /// Cached CSR forms under the fixture's layout (empty for Masked).
+    sparse: SparseStore,
 }
 
 fn fixture(sparsity: Option<f64>) -> Fixture {
+    fixture_with_layout(sparsity, LayoutPolicy::Fixed(WeightLayout::Masked))
+}
+
+fn fixture_with_layout(sparsity: Option<f64>, layout: LayoutPolicy) -> Fixture {
     let be = NativeBackend::new();
     let mm = be.model("gpt-nano").unwrap().clone();
     let mut rng = Rng::new(42);
@@ -43,7 +52,11 @@ fn fixture(sparsity: Option<f64>) -> Fixture {
             magnitude::uniform(&weights, Pattern::Unstructured(f)).masks
         }
     };
-    Fixture { be, mm, params, masks }
+    let sparse = SparseStore::build(
+        layout,
+        mm.prunable.iter().map(|n| (n.clone(), &params[n], &masks[n])),
+    );
+    Fixture { be, mm, params, masks, sparse }
 }
 
 impl Fixture {
@@ -58,6 +71,7 @@ impl Fixture {
             masks,
             adapters: None,
             mode: ModeKind::Subset,
+            sparse: self.sparse.view(),
         }
     }
 
@@ -79,7 +93,7 @@ impl Fixture {
             }
             let mut toks = vec![0i32; s];
             toks[..seq.len()].copy_from_slice(&seq);
-            let tape = graph::forward(&gi, &toks, 1, s, None);
+            let tape = graph::forward(&gi, &toks, 1, s);
             let row = &tape.logits.data()[(seq.len() - 1) * vocab..seq.len() * vocab];
             let t = argmax(row);
             out.push(t);
@@ -95,7 +109,7 @@ impl Fixture {
         for (n, t) in &self.masks {
             feed = feed.owned_key(format!("m::{n}"), t);
         }
-        feed
+        feed.sparse(&self.sparse)
     }
 
     /// KV path: one prefill over all prompts (each in its own slot), then
@@ -182,8 +196,7 @@ impl Fixture {
     }
 }
 
-fn check_parity(sparsity: Option<f64>) {
-    let fx = fixture(sparsity);
+fn check_parity_with(fx: &Fixture, label: &str) {
     let prompts: Vec<Vec<i32>> = vec![
         vec![2, 7, 19, 4],
         vec![2, 33, 8],
@@ -195,13 +208,18 @@ fn check_parity(sparsity: Option<f64>) {
 
     // single-stream decode matches the full-forward reference...
     let single = fx.kv_greedy(&prompts[..1], steps);
-    assert_eq!(single[0], refs[0], "single-stream KV decode diverged (sparsity {sparsity:?})");
+    assert_eq!(single[0], refs[0], "single-stream KV decode diverged ({label})");
 
     // ...and batched multi-slot decode matches every per-prompt reference
     let batched = fx.kv_greedy(&prompts, steps);
     for (i, (got, want)) in batched.iter().zip(&refs).enumerate() {
-        assert_eq!(got, want, "stream {i} diverged under batching (sparsity {sparsity:?})");
+        assert_eq!(got, want, "stream {i} diverged under batching ({label})");
     }
+}
+
+fn check_parity(sparsity: Option<f64>) {
+    let fx = fixture(sparsity);
+    check_parity_with(&fx, &format!("sparsity {sparsity:?}"));
 }
 
 #[test]
@@ -215,8 +233,35 @@ fn greedy_kv_decode_matches_full_forward_half_sparse() {
 }
 
 #[test]
+fn greedy_kv_decode_matches_full_forward_csr_layout() {
+    // the --layout csr serving path: every prunable linear compressed
+    let fx = fixture_with_layout(Some(0.9), LayoutPolicy::Fixed(WeightLayout::Csr));
+    assert_eq!(fx.sparse.csr.len(), fx.mm.prunable.len(), "all linears should be compressed");
+    check_parity_with(&fx, "layout csr @ 90%");
+}
+
+#[test]
+fn greedy_kv_decode_matches_full_forward_auto_layout() {
+    // auto routes 90%-sparse layers to CSR (0.9 >= default crossover 0.75)
+    let fx = fixture_with_layout(Some(0.9), LayoutPolicy::Auto);
+    assert!(!fx.sparse.csr.is_empty(), "auto should compress 90%-sparse layers");
+    check_parity_with(&fx, "layout auto @ 90%");
+}
+
+#[test]
+fn prefill_logits_match_full_forward_bitwise_csr() {
+    // same bitwise pin as the masked-layout test below, under CSR
+    let fx = fixture_with_layout(Some(0.9), LayoutPolicy::Fixed(WeightLayout::Csr));
+    prefill_bitwise_check(&fx);
+}
+
+#[test]
 fn prefill_logits_match_full_forward_bitwise() {
     let fx = fixture(Some(0.5));
+    prefill_bitwise_check(&fx);
+}
+
+fn prefill_bitwise_check(fx: &Fixture) {
     let cfg = &fx.mm.cfg;
     let (slots, s, vocab) = (cfg.serve_slots, cfg.seq_len, cfg.vocab);
     let prompt = vec![2i32, 11, 47, 5, 9];
@@ -229,7 +274,7 @@ fn prefill_logits_match_full_forward_bitwise() {
     let gi = fx.graph_in(&params, &masks);
     let mut toks = vec![0i32; s];
     toks[..prompt.len()].copy_from_slice(&prompt);
-    let tape = graph::forward(&gi, &toks, 1, s, None);
+    let tape = graph::forward(&gi, &toks, 1, s);
     let want = &tape.logits.data()[(prompt.len() - 1) * vocab..prompt.len() * vocab];
 
     // prefill logits for the same prompt in slot 0 of a full-width batch
