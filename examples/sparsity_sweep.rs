@@ -1,15 +1,23 @@
 //! Sparsity sweep (Fig 1 shape): perplexity vs sparsity for every retrained
-//! parameter subset, printed as an aligned series.
+//! parameter subset, printed as an aligned series — written against the
+//! `perp::pipeline` graph API.
 //!
 //! ```bash
 //! cargo run --release --offline --example sparsity_sweep -- [--model gpt-nano]
 //! ```
+//!
+//! The whole sweep is ONE plan graph: a single pretrain root, one prune
+//! node per sparsity, and one retrain branch per method under each prune.
+//! The executor walks it depth-first, snapshotting the session at every
+//! fork — so the dense model converges once and each sparsity prunes once,
+//! no matter how many methods fan out below.  Re-running the example loads
+//! every node from the content-addressed cache.
 
 use anyhow::Result;
 
 use perp::config::ExperimentConfig;
-use perp::coordinator::sweep::ExpContext;
 use perp::peft::Mode;
+use perp::pipeline::{Executor, PlanGraph, Stage};
 use perp::pruning::{Criterion, Pattern};
 use perp::runtime::open_default_backend;
 use perp::util::cli::Args;
@@ -24,7 +32,6 @@ fn main() -> Result<()> {
     let rt = open_default_backend()?;
     let mut cfg = ExperimentConfig::quick(&model);
     cfg.pretrain_steps = 3000;
-    let ctx = ExpContext::new(rt.as_ref(), cfg.clone(), "results/cache".into());
 
     let sparsities = [0.3, 0.4, 0.5, 0.6, 0.7];
     let methods: Vec<(&str, Option<Mode>)> = vec![
@@ -37,26 +44,52 @@ fn main() -> Result<()> {
         ("full ft", Some(Mode::Full)),
     ];
 
+    // one graph, one shared prefix per sparsity
+    let mut g = PlanGraph::new("sparsity-sweep");
+    g.stage_node("pre", None, Stage::Pretrain);
+    for sp in sparsities {
+        let prune = format!("prune@{sp}");
+        g.stage_node(&prune, Some("pre"), Stage::Prune {
+            criterion: Criterion::Magnitude,
+            pattern: Pattern::Unstructured(sp),
+        });
+        for (label, mode) in &methods {
+            let mut tail = prune.clone();
+            if let Some(m) = mode {
+                let retrain = format!("{label}@{sp}:retrain");
+                g.stage_node(&retrain, Some(&tail), Stage::Retrain {
+                    mode: *m,
+                    steps: Some(steps),
+                    lr: Some(cfg.lr_grid[0]),
+                });
+                tail = retrain;
+                if m.is_lora() && *m != Mode::Lora {
+                    let merge = format!("{label}@{sp}:merge");
+                    g.stage_node(&merge, Some(&tail), Stage::Merge);
+                    tail = merge;
+                }
+            }
+            g.stage_node(&format!("{label}@{sp}:eval"), Some(&tail), Stage::Eval { tasks: false });
+        }
+    }
+
+    let ex = Executor::new(rt.as_ref(), cfg, "results/cache".into(), 0).quiet(true);
+    let report = ex.run_graph(&g)?;
+    eprintln!("{}", report.summary());
+
     print!("{:<16}", "method");
     for sp in sparsities {
         print!(" {:>8.0}%", sp * 100.0);
     }
     println!();
 
-    for (label, mode) in methods {
+    for (label, _) in &methods {
         print!("{label:<16}");
         for sp in sparsities {
-            let (base, _) =
-                ctx.pruned_session(0, Criterion::Magnitude, Pattern::Unstructured(sp))?;
-            let ppl = match mode {
-                None => base.eval_ppl_test()?.ppl,
-                Some(m) => {
-                    let mut s = ctx.clone_session(&base)?;
-                    s.retrain(m, steps, cfg.lr_grid[0])?;
-                    s.merge_adapters()?;
-                    s.eval_ppl_test()?.ppl
-                }
-            };
+            let ppl = report
+                .metrics(&format!("{label}@{sp}:eval"))
+                .map(|m| m.ppl)
+                .unwrap_or(f64::NAN);
             print!(" {ppl:>9.2}");
         }
         println!();

@@ -1,5 +1,6 @@
-//! Experiment registry: every paper table/figure as a sweep over the
-//! pipeline verbs, emitting markdown tables (EXPERIMENTS.md records them).
+//! Experiment registry: every paper table/figure as a [`PlanGraph`]
+//! generator over the shared pipeline executor, emitting markdown tables
+//! (EXPERIMENTS.md records them).
 //!
 //! | exp id   | paper artifact       | shape reproduced                          |
 //! |----------|----------------------|-------------------------------------------|
@@ -15,23 +16,38 @@
 //! | table22  | Tables 22/23         | high-sparsity recon vs retrain            |
 //! | memory   | §3.2 efficiency      | analytical 30B-on-one-A100 table          |
 //!
-//! Pretrained dense checkpoints are cached per (model, seed, steps) so every
-//! sweep shares one convergence run.  `fig2` and `table22` go further: their
-//! cells are *plan generators* ([`fig2_plan`], [`table22_plan`]) executed
-//! through [`crate::pipeline::Executor`], so sweeps, `repro run` and the
-//! shim subcommands share one execution path and one content-addressed
-//! stage cache — re-running a sweep only computes cells whose plans changed.
+//! Every cell is a named node in one graph per table, executed through
+//! [`crate::pipeline::Executor::run_graph`].  Consequences:
+//!
+//! * shared prefixes execute **once per run** — one pretrain per table, one
+//!   prune per (criterion, sparsity) regardless of how many retrain modes
+//!   or strategies hang off it (the old bespoke `pruned_session` +
+//!   `clone_session` plumbing per table is gone);
+//! * every cell is content-addressed, so re-running a sweep only computes
+//!   cells whose chains changed, and one-off `repro run` invocations hit
+//!   the very same artifacts;
+//! * `table22` aggregates mean±std across `cfg.seeds` when the profile
+//!   carries more than one seed (seed-replicated subgraphs + `Aggregate`
+//!   nodes).
+//!
+//! [`ExpContext`] remains the session-level toolkit (dense checkpoint
+//! cache, cloning, evaluation) used by the executor itself, the examples
+//! and the integration tests.  Two deliberate exceptions stay on the
+//! session path: `table4` times its retrains live (throughput is a
+//! measurement, not a cacheable artifact — only its pretrain|prune prefix
+//! goes through the executor), and `table20`'s optional `combo_*`
+//! executables are not part of the [`Stage`] vocabulary.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::reconstruct::{self, ReconMode};
+use crate::coordinator::reconstruct::ReconMode;
 use crate::coordinator::Session;
 use crate::peft::Mode;
-use crate::pipeline::{Executor, Plan};
+use crate::pipeline::{Executor, GraphReport, Plan, PlanGraph, Stage};
 use crate::pruning::{Criterion, Pattern};
 use crate::runtime::Backend;
 use crate::tensor::Tensor;
@@ -94,7 +110,9 @@ impl<'rt> ExpContext<'rt> {
     }
 
     /// Dense → calibrate (if needed) → prune.  Returns the session plus the
-    /// dense weight snapshot (reconstruction targets).
+    /// dense weight snapshot (reconstruction targets).  The sweeps now fork
+    /// graphs instead, but the examples and integration tests still build
+    /// one-off pruned sessions with this.
     pub fn pruned_session(
         &self,
         seed: u64,
@@ -181,6 +199,18 @@ impl<'rt> ExpContext<'rt> {
             trainable_pct,
         })
     }
+
+    /// The graph executor every table runs through (quiet — tables narrate
+    /// through their rows, not per-stage progress lines).
+    fn executor(&self) -> Executor<'rt> {
+        Executor::new(
+            self.rt,
+            self.cfg.clone(),
+            self.cache_dir.clone(),
+            self.cfg.seeds[0],
+        )
+        .quiet(true)
+    }
 }
 
 fn fmt_ppl(p: f64) -> String {
@@ -199,6 +229,53 @@ fn fmt_acc(a: f64) -> String {
     } else {
         format!("{:.1}%", a * 100.0)
     }
+}
+
+// ---------------------------------------------------------------------------
+// Graph-building vocabulary shared by the tables.
+// ---------------------------------------------------------------------------
+
+fn prune_stage(criterion: Criterion, pattern: Pattern) -> Stage {
+    Stage::Prune { criterion, pattern }
+}
+
+fn eval_stage(tasks: bool) -> Stage {
+    Stage::Eval { tasks }
+}
+
+/// Attach `retrain [→ merge] → eval` under `parent`; returns the names of
+/// the (retrain, eval) nodes.  Standard LoRA evaluates unmerged (Table 2's
+/// "Mergeable: no"); every other LoRA variant merges first.
+fn retrain_cell(
+    g: &mut PlanGraph,
+    parent: &str,
+    cell: &str,
+    mode: Mode,
+    steps: Option<u64>,
+    lr: Option<f64>,
+    tasks: bool,
+) -> (String, String) {
+    let retrain = format!("{cell}:retrain");
+    g.stage_node(&retrain, Some(parent), Stage::Retrain { mode, steps, lr });
+    let mut tail = retrain.clone();
+    if mode.is_lora() && mode != Mode::Lora {
+        let merge = format!("{cell}:merge");
+        g.stage_node(&merge, Some(&tail), Stage::Merge);
+        tail = merge;
+    }
+    let eval = format!("{cell}:eval");
+    g.stage_node(&eval, Some(&tail), eval_stage(tasks));
+    (retrain, eval)
+}
+
+/// Metrics accessor with a uniform error for cells that went missing.
+fn cell_metrics<'a>(
+    report: &'a GraphReport,
+    name: &str,
+) -> Result<&'a crate::pipeline::EvalMetrics> {
+    report
+        .metrics(name)
+        .with_context(|| format!("sweep graph produced no metrics for cell {name:?}"))
 }
 
 /// Entry point: run one experiment id, return its tables.
@@ -221,14 +298,35 @@ pub fn run(ctx: &ExpContext, exp: &str) -> Result<Vec<Table>> {
 
 const SPARSITIES: [f64; 5] = [0.3, 0.4, 0.5, 0.6, 0.7];
 
-/// Fig 1/3/4 + Table 1 share this engine: subsets (+ optionally MaskLoRA +
-/// full FT) across sparsities, reporting ppl and accuracy.
+/// Fig 1/3/4 + Table 1 share this engine: one graph with a single pretrain
+/// root, one prune node per sparsity, and one retrain branch per mode under
+/// each prune — the fan the paper's figures sweep.
 fn subset_sweep(ctx: &ExpContext, modes: &[Option<Mode>], title: &str) -> Result<Vec<Table>> {
-    let seed = ctx.cfg.seeds[0];
-    let dense = {
-        let mut s = ctx.dense_session(seed)?;
-        ctx.evaluate(&mut s, true, None)?
-    };
+    let mut g = PlanGraph::new("subset-sweep");
+    g.stage_node("pre", None, Stage::Pretrain);
+    g.stage_node("dense:eval", Some("pre"), eval_stage(true));
+    for &sp in &SPARSITIES {
+        let prune = format!("prune@{sp}");
+        g.stage_node(
+            &prune,
+            Some("pre"),
+            prune_stage(Criterion::Magnitude, Pattern::Unstructured(sp)),
+        );
+        for mode in modes {
+            match mode {
+                None => {
+                    g.stage_node(&format!("none@{sp}:eval"), Some(&prune), eval_stage(true));
+                }
+                Some(m) => {
+                    let cell = format!("{}@{sp}", m.name());
+                    retrain_cell(&mut g, &prune, &cell, *m, None, None, true);
+                }
+            }
+        }
+    }
+    let report = ctx.executor().run_graph(&g)?;
+
+    let dense = cell_metrics(&report, "dense:eval")?;
     let mut headers = vec!["Method".to_string(), "% trainable".to_string()];
     headers.extend(SPARSITIES.iter().map(|s| format!("{:.0}%", s * 100.0)));
     let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
@@ -236,23 +334,21 @@ fn subset_sweep(ctx: &ExpContext, modes: &[Option<Mode>], title: &str) -> Result
     let mut acc_t = Table::new(&format!("{title} — zero-shot acc (dense {})", fmt_acc(dense.acc)), &hdr);
 
     for mode in modes {
+        let name = mode.map(|m| m.name().to_string()).unwrap_or("none".into());
         let mut ppl_row = Vec::new();
         let mut acc_row = Vec::new();
         let mut pct = 0.0;
         for &sp in &SPARSITIES {
-            let (base, _) = ctx.pruned_session(seed, Criterion::Magnitude, Pattern::Unstructured(sp))?;
-            let cell = match mode {
-                None => {
-                    let mut s = ctx.clone_session(&base)?;
-                    ctx.evaluate(&mut s, true, None)?
-                }
-                Some(m) => ctx.retrain_tuned(&base, *m, ctx.cfg.retrain_steps, true)?.0,
-            };
-            pct = cell.trainable_pct;
-            ppl_row.push(fmt_ppl(cell.ppl));
-            acc_row.push(fmt_acc(cell.acc));
+            let m = cell_metrics(&report, &format!("{name}@{sp}:eval"))?;
+            if let Some(mode) = mode {
+                pct = report
+                    .node(&format!("{}@{sp}:retrain", mode.name()))
+                    .and_then(|r| r.trainable_pct)
+                    .unwrap_or(pct);
+            }
+            ppl_row.push(fmt_ppl(m.ppl));
+            acc_row.push(fmt_acc(m.acc));
         }
-        let name = mode.map(|m| m.name().to_string()).unwrap_or("none".into());
         let mut r1 = vec![name.clone(), format!("{pct:.3}%")];
         r1.extend(ppl_row);
         ppl_t.row(r1);
@@ -302,20 +398,35 @@ fn patterns_for_table2() -> Vec<Pattern> {
 }
 
 fn table2(ctx: &ExpContext) -> Result<Vec<Table>> {
-    let seed = ctx.cfg.seeds[0];
+    let mut g = PlanGraph::new("table2");
+    g.stage_node("pre", None, Stage::Pretrain);
+    g.stage_node("dense:eval", Some("pre"), eval_stage(true));
+    for pattern in patterns_for_table2() {
+        let prune = format!("prune@{}", pattern.label());
+        g.stage_node(&prune, Some("pre"), prune_stage(Criterion::Magnitude, pattern));
+        for mode in Mode::ALL_LORA {
+            retrain_cell(
+                &mut g,
+                &prune,
+                &format!("{}@{}", mode.name(), pattern.label()),
+                mode,
+                None,
+                None,
+                true,
+            );
+        }
+    }
+    let report = ctx.executor().run_graph(&g)?;
+
     let hdr = ["Method", "Mergeable", "Sparsity", "Perplexity", "Accuracy"];
     let mut t = Table::new("Table 2/9-14: LoRA variants (magnitude pruning)", &hdr);
-    {
-        let mut s = ctx.dense_session(seed)?;
-        let d = ctx.evaluate(&mut s, true, None)?;
-        t.row(vec![
-            "baseline".into(), "-".into(), "0%".into(), fmt_ppl(d.ppl), fmt_acc(d.acc),
-        ]);
-    }
+    let d = cell_metrics(&report, "dense:eval")?;
+    t.row(vec![
+        "baseline".into(), "-".into(), "0%".into(), fmt_ppl(d.ppl), fmt_acc(d.acc),
+    ]);
     for pattern in patterns_for_table2() {
         for mode in Mode::ALL_LORA {
-            let (base, _) = ctx.pruned_session(seed, Criterion::Magnitude, pattern)?;
-            let (cell, _lr) = ctx.retrain_tuned(&base, mode, ctx.cfg.retrain_steps, true)?;
+            let m = cell_metrics(&report, &format!("{}@{}:eval", mode.name(), pattern.label()))?;
             let mergeable = match mode.mergeable_sparsity_preserving() {
                 Some(true) => "yes",
                 Some(false) => "no",
@@ -325,45 +436,58 @@ fn table2(ctx: &ExpContext) -> Result<Vec<Table>> {
                 mode.name().into(),
                 mergeable.into(),
                 pattern.label(),
-                fmt_ppl(cell.ppl),
-                fmt_acc(cell.acc),
+                fmt_ppl(m.ppl),
+                fmt_acc(m.acc),
             ]);
         }
     }
     Ok(vec![t])
 }
 
-/// Plan generator for one Fig 2 cell: the sweep below and one-off
-/// `repro run` invocations share the executor path (and therefore the
-/// content-addressed stage cache — every cell at one sparsity reuses the
-/// same pruned artifact).
-pub fn fig2_plan(sparsity: f64, iters: u64, lr: f64) -> Plan {
-    let p = Plan::new(&format!("fig2-sp{sparsity}-it{iters}"))
-        .pretrain()
-        .prune(Criterion::Magnitude, Pattern::Unstructured(sparsity));
-    if iters == 0 {
-        p.eval_ppl()
-    } else {
-        p.retrain(Mode::MaskLora, Some(iters), Some(lr)).merge().eval_ppl()
-    }
-}
-
 fn fig2(ctx: &ExpContext) -> Result<Vec<Table>> {
-    let seed = ctx.cfg.seeds[0];
-    let ex = Executor::new(ctx.rt, ctx.cfg.clone(), ctx.cache_dir.clone(), seed).quiet(true);
     let iters: Vec<u64> = [0u64, 5, 15, 50, 150, 300]
         .into_iter()
         .filter(|&i| i <= ctx.cfg.retrain_steps.max(30) * 3)
         .collect();
+    let sparsities = [0.4, 0.5, 0.6, 0.7];
+    let lr = ctx.cfg.lr_grid[0];
+
+    let mut g = PlanGraph::new("fig2");
+    g.stage_node("pre", None, Stage::Pretrain);
+    for &sp in &sparsities {
+        let prune = format!("prune@{sp}");
+        g.stage_node(
+            &prune,
+            Some("pre"),
+            prune_stage(Criterion::Magnitude, Pattern::Unstructured(sp)),
+        );
+        for &it in &iters {
+            if it == 0 {
+                g.stage_node(&format!("it0@{sp}:eval"), Some(&prune), eval_stage(false));
+            } else {
+                retrain_cell(
+                    &mut g,
+                    &prune,
+                    &format!("it{it}@{sp}"),
+                    Mode::MaskLora,
+                    Some(it),
+                    Some(lr),
+                    false,
+                );
+            }
+        }
+    }
+    let report = ctx.executor().run_graph(&g)?;
+
     let mut headers = vec!["Sparsity".to_string()];
     headers.extend(iters.iter().map(|i| format!("it {i}")));
     let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
     let mut t = Table::new("Fig 2: MaskLoRA perplexity vs retraining iterations", &hdr);
-    for sp in [0.4, 0.5, 0.6, 0.7] {
+    for &sp in &sparsities {
         let mut row = vec![format!("{:.0}%", sp * 100.0)];
         for &it in &iters {
-            let rep = ex.run(&fig2_plan(sp, it, ctx.cfg.lr_grid[0]))?;
-            row.push(fmt_ppl(rep.last_metrics().map(|m| m.ppl).unwrap_or(f64::NAN)));
+            let m = cell_metrics(&report, &format!("it{it}@{sp}:eval"))?;
+            row.push(fmt_ppl(m.ppl));
         }
         t.row(row);
     }
@@ -371,7 +495,32 @@ fn fig2(ctx: &ExpContext) -> Result<Vec<Table>> {
 }
 
 fn table3(ctx: &ExpContext) -> Result<Vec<Table>> {
-    let seed = ctx.cfg.seeds[0];
+    let sparsities = [0.5, 0.6, 0.7];
+    let criteria = [Criterion::Magnitude, Criterion::Wanda, Criterion::SparseGpt];
+
+    // the DAG advantage in miniature: each (criterion, sparsity) prune is
+    // evaluated twice — raw, and after retraining — off one shared node
+    let mut g = PlanGraph::new("table3");
+    g.stage_node("pre", None, Stage::Pretrain);
+    for &sp in &sparsities {
+        for crit in criteria {
+            let cell = format!("{}@{sp}", crit.name());
+            let prune = format!("{cell}:prune");
+            g.stage_node(&prune, Some("pre"), prune_stage(crit, Pattern::Unstructured(sp)));
+            g.stage_node(&format!("{cell}:before"), Some(&prune), eval_stage(true));
+            let retrain = format!("{cell}:retrain");
+            g.stage_node(&retrain, Some(&prune), Stage::Retrain {
+                mode: Mode::MaskLora,
+                steps: None,
+                lr: None,
+            });
+            let merge = format!("{cell}:merge");
+            g.stage_node(&merge, Some(&retrain), Stage::Merge);
+            g.stage_node(&format!("{cell}:after"), Some(&merge), eval_stage(true));
+        }
+    }
+    let report = ctx.executor().run_graph(&g)?;
+
     let mut headers = vec!["Method".to_string(), "Sparsity".to_string()];
     headers.extend(crate::data::tasks::TASK_NAMES.iter().map(|s| s.to_string()));
     headers.push("Average".to_string());
@@ -380,14 +529,11 @@ fn table3(ctx: &ExpContext) -> Result<Vec<Table>> {
         "Table 3/24: Δ zero-shot accuracy from MaskLoRA retraining",
         &hdr,
     );
-    for sp in [0.5, 0.6, 0.7] {
-        for crit in [Criterion::Magnitude, Criterion::Wanda, Criterion::SparseGpt] {
-            let (base, _) = ctx.pruned_session(seed, crit, Pattern::Unstructured(sp))?;
-            let before = {
-                let mut s = ctx.clone_session(&base)?;
-                ctx.evaluate(&mut s, true, None)?
-            };
-            let (after, _) = ctx.retrain_tuned(&base, Mode::MaskLora, ctx.cfg.retrain_steps, true)?;
+    for &sp in &sparsities {
+        for crit in criteria {
+            let cell = format!("{}@{sp}", crit.name());
+            let before = cell_metrics(&report, &format!("{cell}:before"))?;
+            let after = cell_metrics(&report, &format!("{cell}:after"))?;
             let mut row = vec![crit.name().to_string(), format!("{:.0}%", sp * 100.0)];
             let b: BTreeMap<_, _> = before.per_task.iter().cloned().collect();
             let mut deltas = Vec::new();
@@ -405,20 +551,28 @@ fn table3(ctx: &ExpContext) -> Result<Vec<Table>> {
 }
 
 fn table4(ctx: &ExpContext) -> Result<Vec<Table>> {
-    let seed = ctx.cfg.seeds[0];
-    let hdr = ["Method", "% trainable", "tokens/s", "relative"];
-    let mut t = Table::new("Table 4: retraining throughput", &hdr);
     let steps = ctx.cfg.retrain_steps.min(30).max(10);
-    let (base, _) = ctx.pruned_session(seed, Criterion::Magnitude, Pattern::Unstructured(0.5))?;
-    let mut rows: Vec<(String, f64, f64)> = Vec::new();
-    for mode in [
+    let modes = [
         Mode::Full,
         Mode::Lora,
         Mode::ScaleLora,
         Mode::MaskLoraStd,
         Mode::MaskLora,
         Mode::BiasesLn,
-    ] {
+    ];
+    // throughput is a *measurement*, not a cacheable artifact: the shared
+    // pretrain|prune prefix runs through the executor (and its cache), but
+    // each mode is timed live on a fresh clone so the reported tokens/s is
+    // never a stale cached number
+    let prefix = Plan::new("table4-prefix")
+        .pretrain()
+        .prune(Criterion::Magnitude, Pattern::Unstructured(0.5));
+    let (_, base) = ctx.executor().run_with_session(&prefix)?;
+
+    let hdr = ["Method", "% trainable", "tokens/s", "relative"];
+    let mut t = Table::new("Table 4: retraining throughput", &hdr);
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+    for mode in modes {
         let mut s = ctx.clone_session(&base)?;
         // warmup pass: compiles the executable + faults in caches so the
         // measured pass is steady-state (paper reports steady-state tps)
@@ -439,7 +593,7 @@ fn table4(ctx: &ExpContext) -> Result<Vec<Table>> {
             name,
             format!("{pct:.3}%"),
             format!("{tps:.0}"),
-            format!("{:.2}x", tps / full_tps),
+            format!("{:.2}x", tps / full_tps.max(1e-9)),
         ]);
     }
     Ok(vec![t])
@@ -451,41 +605,48 @@ fn recon_sweep(
     criteria: &[Criterion],
     title: &str,
 ) -> Result<Table> {
-    let seed = ctx.cfg.seeds[0];
-    let hdr = ["Method", "Reconstruction", "Sparsity", "Perplexity", "Accuracy"];
-    let mut t = Table::new(title, &hdr);
-    {
-        let mut s = ctx.dense_session(seed)?;
-        let d = ctx.evaluate(&mut s, true, None)?;
-        t.row(vec![
-            "baseline".into(), "-".into(), "0%".into(), fmt_ppl(d.ppl), fmt_acc(d.acc),
-        ]);
-    }
+    let mut g = PlanGraph::new("recon-sweep");
+    g.stage_node("pre", None, Stage::Pretrain);
+    g.stage_node("dense:eval", Some("pre"), eval_stage(true));
     for &pattern in patterns {
         for &crit in criteria {
-            let (base, dense) = ctx.pruned_session(seed, crit, pattern)?;
+            let cell = format!("{}@{}", crit.name(), pattern.label());
+            let prune = format!("{cell}:prune");
+            g.stage_node(&prune, Some("pre"), prune_stage(crit, pattern));
             // without reconstruction
-            let cell0 = {
-                let mut s = ctx.clone_session(&base)?;
-                ctx.evaluate(&mut s, true, None)?
-            };
-            t.row(vec![
-                crit.name().into(), "no".into(), pattern.label(),
-                fmt_ppl(cell0.ppl), fmt_acc(cell0.acc),
-            ]);
+            g.stage_node(&format!("{cell}:raw"), Some(&prune), eval_stage(true));
             // with MaskLoRA reconstruction.  SparseGPT's own update IS its
             // reconstruction starting point, so targets stay the original
             // dense weights while the walk starts from the pruned state.
-            let mut s = ctx.clone_session(&base)?;
-            let target = s.masks.clone();
-            reconstruct::reconstruct(
-                &mut s, &target, &dense, ReconMode::MaskLora,
-                ctx.cfg.recon_steps, ctx.cfg.recon_lr,
-            )?;
-            let cell1 = ctx.evaluate(&mut s, true, None)?;
+            let recon = format!("{cell}:recon");
+            g.stage_node(&recon, Some(&prune), Stage::Reconstruct {
+                mode: ReconMode::MaskLora,
+                steps: None,
+                lr: None,
+            });
+            g.stage_node(&format!("{cell}:recon-eval"), Some(&recon), eval_stage(true));
+        }
+    }
+    let report = ctx.executor().run_graph(&g)?;
+
+    let hdr = ["Method", "Reconstruction", "Sparsity", "Perplexity", "Accuracy"];
+    let mut t = Table::new(title, &hdr);
+    let d = cell_metrics(&report, "dense:eval")?;
+    t.row(vec![
+        "baseline".into(), "-".into(), "0%".into(), fmt_ppl(d.ppl), fmt_acc(d.acc),
+    ]);
+    for &pattern in patterns {
+        for &crit in criteria {
+            let cell = format!("{}@{}", crit.name(), pattern.label());
+            let raw = cell_metrics(&report, &format!("{cell}:raw"))?;
+            t.row(vec![
+                crit.name().into(), "no".into(), pattern.label(),
+                fmt_ppl(raw.ppl), fmt_acc(raw.acc),
+            ]);
+            let rec = cell_metrics(&report, &format!("{cell}:recon-eval"))?;
             t.row(vec![
                 crit.name().into(), "yes".into(), pattern.label(),
-                fmt_ppl(cell1.ppl), fmt_acc(cell1.acc),
+                fmt_ppl(rec.ppl), fmt_acc(rec.acc),
             ]);
         }
     }
@@ -503,29 +664,41 @@ fn table5(ctx: &ExpContext) -> Result<Vec<Table>> {
 }
 
 fn table19(ctx: &ExpContext) -> Result<Vec<Table>> {
-    let seed = ctx.cfg.seeds[0];
+    let sparsities = [0.4, 0.5, 0.6, 0.7];
+    let recon_modes = [("full_ft", ReconMode::FullFt), ("masklora", ReconMode::MaskLora)];
+
+    let mut g = PlanGraph::new("table19");
+    g.stage_node("pre", None, Stage::Pretrain);
+    for &sp in &sparsities {
+        let prune = format!("prune@{sp}");
+        g.stage_node(
+            &prune,
+            Some("pre"),
+            prune_stage(Criterion::Magnitude, Pattern::Unstructured(sp)),
+        );
+        for (label, mode) in recon_modes {
+            let recon = format!("{label}@{sp}:recon");
+            g.stage_node(&recon, Some(&prune), Stage::Reconstruct {
+                mode,
+                steps: None,
+                lr: None,
+            });
+            g.stage_node(&format!("{label}@{sp}:eval"), Some(&recon), eval_stage(true));
+        }
+    }
+    let report = ctx.executor().run_graph(&g)?;
+
     let hdr = ["Method", "40%", "50%", "60%", "70%"];
     let mut t = Table::new(
         "Table 19: MaskLoRA vs Full-FT reconstruction (zero-shot acc)",
         &hdr,
     );
-    let mut rows: BTreeMap<&str, Vec<String>> = BTreeMap::new();
-    for sp in [0.4, 0.5, 0.6, 0.7] {
-        let (base, dense) =
-            ctx.pruned_session(seed, Criterion::Magnitude, Pattern::Unstructured(sp))?;
-        for (label, mode) in [("full_ft", ReconMode::FullFt), ("masklora", ReconMode::MaskLora)] {
-            let mut s = ctx.clone_session(&base)?;
-            let target = s.masks.clone();
-            reconstruct::reconstruct(
-                &mut s, &target, &dense, mode, ctx.cfg.recon_steps, ctx.cfg.recon_lr,
-            )?;
-            let cell = ctx.evaluate(&mut s, true, None)?;
-            rows.entry(label).or_default().push(fmt_acc(cell.acc));
-        }
-    }
-    for (label, cells) in rows {
+    for (label, _) in recon_modes {
         let mut row = vec![label.to_string()];
-        row.extend(cells);
+        for &sp in &sparsities {
+            let m = cell_metrics(&report, &format!("{label}@{sp}:eval"))?;
+            row.push(fmt_acc(m.acc));
+        }
         t.row(row);
     }
     Ok(vec![t])
@@ -533,93 +706,203 @@ fn table19(ctx: &ExpContext) -> Result<Vec<Table>> {
 
 fn table20(ctx: &ExpContext) -> Result<Vec<Table>> {
     // subset-combination ablation over the modes we lower; the full 32-combo
-    // grid needs the --ablation artifact set (combo_* executables).
-    let seed = ctx.cfg.seeds[0];
+    // grid needs the --ablation artifact set (combo_* executables), which
+    // stays on the session path below — combo subsets are not Stage modes.
     let mm = ctx.rt.model(&ctx.cfg.model)?;
-    let mut combos: Vec<(String, Option<Mode>)> = vec![
-        ("none".into(), None),
-        ("biases".into(), Some(Mode::Biases)),
-        ("ln".into(), Some(Mode::Ln)),
-        ("head".into(), Some(Mode::Head)),
-        ("embed".into(), Some(Mode::Embed)),
-        ("biases+ln".into(), Some(Mode::BiasesLn)),
-        ("masklora(+biases+ln)".into(), Some(Mode::MaskLora)),
+    let mode_combos: Vec<(String, Mode)> = vec![
+        ("biases".into(), Mode::Biases),
+        ("ln".into(), Mode::Ln),
+        ("head".into(), Mode::Head),
+        ("embed".into(), Mode::Embed),
+        ("biases+ln".into(), Mode::BiasesLn),
+        ("masklora(+biases+ln)".into(), Mode::MaskLora),
     ];
-    // combo executables present? (aot --ablation)
     let combo_modes: Vec<String> = mm
         .executables
         .keys()
         .filter_map(|k| k.strip_prefix("train_combo_").map(|s| s.to_string()))
         .collect();
-    for c in &combo_modes {
-        combos.push((c.replace('_', "+"), None)); // handled specially below
+    let sparsities = [0.5, 0.7];
+
+    let mut g = PlanGraph::new("table20");
+    g.stage_node("pre", None, Stage::Pretrain);
+    for &sp in &sparsities {
+        let prune = format!("prune@{sp}");
+        g.stage_node(
+            &prune,
+            Some("pre"),
+            prune_stage(Criterion::Magnitude, Pattern::Unstructured(sp)),
+        );
+        g.stage_node(&format!("none@{sp}:eval"), Some(&prune), eval_stage(false));
+        for (label, mode) in &mode_combos {
+            retrain_cell(&mut g, &prune, &format!("{label}@{sp}"), *mode, None, None, false);
+        }
     }
+    let report = ctx.executor().run_graph(&g)?;
 
     let mut tables = Vec::new();
-    for sp in [0.5, 0.7] {
+    for &sp in &sparsities {
         let hdr = ["Combination", "% trainable", "Perplexity"];
         let mut t = Table::new(
             &format!("Table 20/21: parameter-group ablation at {:.0}%", sp * 100.0),
             &hdr,
         );
-        let (base, _) = ctx.pruned_session(seed, Criterion::Magnitude, Pattern::Unstructured(sp))?;
-        for (label, mode) in &combos {
-            let (ppl, pct) = match (label.as_str(), mode) {
-                ("none", None) => {
-                    let mut s = ctx.clone_session(&base)?;
-                    (ctx.evaluate(&mut s, false, None)?.ppl, 0.0)
-                }
-                (_, Some(m)) => {
-                    let (cell, _) = ctx.retrain_tuned(&base, *m, ctx.cfg.retrain_steps, false)?;
-                    (cell.ppl, cell.trainable_pct)
-                }
-                (combo, None) => {
-                    // generic combo executable path
-                    let mode_key = format!("combo_{}", combo.replace('+', "_"));
-                    let mut s = ctx.clone_session(&base)?;
-                    s.retrain_custom(&mode_key, ctx.cfg.retrain_steps, ctx.cfg.lr_grid[0])?;
-                    let cell = ctx.evaluate(&mut s, false, None)?;
-                    let pct = 100.0 * s.mm.trainable_count(&mode_key) as f64
-                        / s.mm.total_params() as f64;
-                    (cell.ppl, pct)
-                }
-            };
-            t.row(vec![label.clone(), format!("{pct:.3}%"), fmt_ppl(ppl)]);
+        let none = cell_metrics(&report, &format!("none@{sp}:eval"))?;
+        t.row(vec!["none".into(), "0.000%".into(), fmt_ppl(none.ppl)]);
+        for (label, _) in &mode_combos {
+            let m = cell_metrics(&report, &format!("{label}@{sp}:eval"))?;
+            let pct = report
+                .node(&format!("{label}@{sp}:retrain"))
+                .and_then(|r| r.trainable_pct)
+                .unwrap_or(0.0);
+            t.row(vec![label.clone(), format!("{pct:.3}%"), fmt_ppl(m.ppl)]);
+        }
+        // generic combo executables (aot --ablation): session path
+        if !combo_modes.is_empty() {
+            let (base, _) = ctx.pruned_session(
+                ctx.cfg.seeds[0],
+                Criterion::Magnitude,
+                Pattern::Unstructured(sp),
+            )?;
+            for combo in &combo_modes {
+                let mode_key = format!("combo_{combo}");
+                let mut s = ctx.clone_session(&base)?;
+                s.retrain_custom(&mode_key, ctx.cfg.retrain_steps, ctx.cfg.lr_grid[0])?;
+                let cell = ctx.evaluate(&mut s, false, None)?;
+                let pct =
+                    100.0 * s.mm.trainable_count(&mode_key) as f64 / s.mm.total_params() as f64;
+                t.row(vec![combo.replace('_', "+"), format!("{pct:.3}%"), fmt_ppl(cell.ppl)]);
+            }
         }
         tables.push(t);
     }
     Ok(tables)
 }
 
-/// Plan generator for one Tables 22/23 cell (strategy × criterion ×
-/// sparsity).  The three strategies at one (criterion, sparsity) share the
-/// same `pretrain|prune` prefix, so they reuse one pruned artifact.
-pub fn table22_plan(strategy: &str, crit: Criterion, sparsity: f64) -> Plan {
-    let base = Plan::new(&format!("table22-{strategy}-{}-{sparsity}", crit.name()))
-        .pretrain()
-        .prune(crit, Pattern::Unstructured(sparsity));
+/// Build one Tables 22/23 cell chain (strategy × criterion × sparsity ×
+/// seed offset) under the given per-seed pretrain root; returns the eval
+/// leaf name.  The three strategies at one (criterion, sparsity, seed)
+/// share the same prune node — within a single run, not just via the cache.
+fn table22_cell(
+    g: &mut PlanGraph,
+    root: &str,
+    strategy: &str,
+    crit: Criterion,
+    sp: f64,
+    offset: u64,
+) -> String {
+    let suffix = if offset == 0 { String::new() } else { format!("@s{offset}") };
+    let prune = format!("{}@{sp}:prune{suffix}", crit.name());
+    if g.get(&prune).is_none() {
+        g.stage_node_at(
+            &prune,
+            Some(root),
+            prune_stage(crit, Pattern::Unstructured(sp)),
+            offset,
+        );
+    }
+    let cell = format!("{strategy}-{}@{sp}", crit.name());
+    let eval = format!("{cell}:eval{suffix}");
     match strategy {
-        "none" => base.eval_ppl(),
-        "reconstruct" => base.reconstruct(ReconMode::MaskLora, None, None).eval_ppl(),
-        "retrain" => base.retrain(Mode::MaskLora, None, None).merge().eval_ppl(),
+        "none" => {
+            g.stage_node_at(&eval, Some(&prune), eval_stage(false), offset);
+        }
+        "reconstruct" => {
+            let recon = format!("{cell}:recon{suffix}");
+            g.stage_node_at(&recon, Some(&prune), Stage::Reconstruct {
+                mode: ReconMode::MaskLora,
+                steps: None,
+                lr: None,
+            }, offset);
+            g.stage_node_at(&eval, Some(&recon), eval_stage(false), offset);
+        }
+        "retrain" => {
+            let retrain = format!("{cell}:retrain{suffix}");
+            g.stage_node_at(&retrain, Some(&prune), Stage::Retrain {
+                mode: Mode::MaskLora,
+                steps: None,
+                lr: None,
+            }, offset);
+            let merge = format!("{cell}:merge{suffix}");
+            g.stage_node_at(&merge, Some(&retrain), Stage::Merge, offset);
+            g.stage_node_at(&eval, Some(&merge), eval_stage(false), offset);
+        }
         other => panic!("unknown table22 strategy {other:?} (none|reconstruct|retrain)"),
     }
+    eval
 }
 
 fn table22(ctx: &ExpContext) -> Result<Vec<Table>> {
-    let seed = ctx.cfg.seeds[0];
-    let ex = Executor::new(ctx.rt, ctx.cfg.clone(), ctx.cache_dir.clone(), seed).quiet(true);
+    let criteria = [Criterion::Magnitude, Criterion::Wanda, Criterion::SparseGpt];
+    let strategies = ["none", "reconstruct", "retrain"];
+    let sparsities = [0.5, 0.6, 0.7, 0.8];
+    // mean±std across the profile's seeds: each seed in cfg.seeds becomes a
+    // replicated subgraph at offset seeds[i] − seeds[0] over the executor's
+    // base seed (= seeds[0]), so the effective seeds are EXACTLY the
+    // configured list — [5, 50] runs seeds {5, 50}, not {5, 6}.  An
+    // Aggregate node reduces the per-seed eval leaves (quick profile: one
+    // seed, plain cells; multi-seed profiles report m±s)
+    let seeds = &ctx.cfg.seeds;
+    let offsets: Vec<u64> = seeds.iter().map(|s| s.wrapping_sub(seeds[0])).collect();
+    let n_seeds = offsets.len();
+
+    let mut g = PlanGraph::new("table22");
+    for &offset in &offsets {
+        let root = if offset == 0 { "pre".to_string() } else { format!("pre@s{offset}") };
+        g.stage_node_at(&root, None, Stage::Pretrain, offset);
+        for crit in criteria {
+            for strategy in strategies {
+                for sp in sparsities {
+                    table22_cell(&mut g, &root, strategy, crit, sp, offset);
+                }
+            }
+        }
+    }
+    if n_seeds > 1 {
+        for crit in criteria {
+            for strategy in strategies {
+                for sp in sparsities {
+                    let cell = format!("{strategy}-{}@{sp}", crit.name());
+                    let over: Vec<String> = offsets
+                        .iter()
+                        .map(|&o| {
+                            if o == 0 {
+                                format!("{cell}:eval")
+                            } else {
+                                format!("{cell}:eval@s{o}")
+                            }
+                        })
+                        .collect();
+                    g.aggregate_node(&format!("{cell}:agg"), over);
+                }
+            }
+        }
+    }
+    let report = ctx.executor().run_graph(&g)?;
+
     let hdr = ["Method", "Strategy", "50%", "60%", "70%", "80%"];
-    let mut t = Table::new(
-        "Tables 22/23: high-sparsity regime — reconstruction vs retraining (ppl)",
-        &hdr,
-    );
-    for crit in [Criterion::Magnitude, Criterion::Wanda, Criterion::SparseGpt] {
-        for strategy in ["none", "reconstruct", "retrain"] {
+    let title = if n_seeds > 1 {
+        format!(
+            "Tables 22/23: high-sparsity regime — reconstruction vs retraining (ppl, mean±std over {n_seeds} seeds)"
+        )
+    } else {
+        "Tables 22/23: high-sparsity regime — reconstruction vs retraining (ppl)".to_string()
+    };
+    let mut t = Table::new(&title, &hdr);
+    for crit in criteria {
+        for strategy in strategies {
             let mut row = vec![crit.name().to_string(), strategy.to_string()];
-            for sp in [0.5, 0.6, 0.7, 0.8] {
-                let rep = ex.run(&table22_plan(strategy, crit, sp))?;
-                row.push(fmt_ppl(rep.last_metrics().map(|m| m.ppl).unwrap_or(f64::NAN)));
+            for sp in sparsities {
+                let cell = format!("{strategy}-{}@{sp}", crit.name());
+                if n_seeds > 1 {
+                    let agg = report
+                        .aggregate(&format!("{cell}:agg"))
+                        .with_context(|| format!("no aggregate for cell {cell:?}"))?;
+                    row.push(agg.ppl.display(2));
+                } else {
+                    let m = cell_metrics(&report, &format!("{cell}:eval"))?;
+                    row.push(fmt_ppl(m.ppl));
+                }
             }
             t.row(row);
         }

@@ -113,6 +113,55 @@ pub fn perplexity_lora(
     Ok(PplResult { loss, ppl: loss.exp(), tokens: count })
 }
 
+/// Mean ± sample standard deviation over `n` observations — the multi-seed
+/// aggregation unit (plan-graph `Aggregate` nodes reduce leaf eval metrics
+/// into these; sweep tables print them as `m±s` cells).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MeanStd {
+    pub mean: f64,
+    /// sample std (n−1 denominator); 0 when n < 2.  NaN inputs propagate —
+    /// a ppl-only eval's NaN accuracy stays visibly NaN instead of being
+    /// silently dropped from the average.
+    pub std: f64,
+    pub n: usize,
+}
+
+impl MeanStd {
+    /// `12.34±0.56`, collapsing to the bare mean for single observations
+    /// and `-` for NaN (matching the sweep tables' missing-cell marker).
+    pub fn display(&self, decimals: usize) -> String {
+        if self.mean.is_nan() {
+            return "-".to_string();
+        }
+        if self.n < 2 {
+            format!("{:.*}", decimals, self.mean)
+        } else {
+            format!("{:.*}±{:.*}", decimals, self.mean, decimals, self.std)
+        }
+    }
+}
+
+impl std::fmt::Display for MeanStd {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.display(2))
+    }
+}
+
+pub fn mean_std(xs: &[f64]) -> MeanStd {
+    let n = xs.len();
+    if n == 0 {
+        return MeanStd { mean: f64::NAN, std: f64::NAN, n: 0 };
+    }
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let std = if n < 2 {
+        0.0
+    } else {
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64;
+        var.sqrt()
+    };
+    MeanStd { mean, std, n }
+}
+
 #[derive(Debug, Clone)]
 pub struct TaskResult {
     pub name: String,
@@ -286,5 +335,23 @@ mod tests {
             TaskResult { name: "b".into(), accuracy: 1.0, items: 10 },
         ];
         assert_eq!(mean_accuracy(&rs), 0.75);
+    }
+
+    #[test]
+    fn mean_std_math_and_display() {
+        let m = mean_std(&[1.0, 2.0, 3.0]);
+        assert_eq!(m.mean, 2.0);
+        assert!((m.std - 1.0).abs() < 1e-12);
+        assert_eq!(m.n, 3);
+        assert_eq!(m.display(2), "2.00±1.00");
+
+        let single = mean_std(&[4.25]);
+        assert_eq!(single.std, 0.0);
+        assert_eq!(single.display(2), "4.25");
+
+        assert!(mean_std(&[]).mean.is_nan());
+        assert_eq!(mean_std(&[]).display(2), "-");
+        // NaN propagates instead of being dropped
+        assert!(mean_std(&[1.0, f64::NAN]).mean.is_nan());
     }
 }

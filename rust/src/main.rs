@@ -34,7 +34,9 @@ use perp::coordinator::reconstruct::ReconMode;
 use perp::coordinator::sweep::{self, ExpContext};
 use perp::coordinator::Session;
 use perp::peft::Mode;
-use perp::pipeline::{parse::parse_plan, Executor, Plan};
+use perp::pipeline::executor::{stage_complete, stage_dir};
+use perp::pipeline::parse::{parse_graph, parse_plan, spec_is_graph};
+use perp::pipeline::{Executor, Plan, PlanOrGraph};
 use perp::pruning::{Criterion, Pattern};
 use perp::runtime::{default_artifacts_dir, open_backend, Backend, BackendKind};
 use perp::server::{batcher, client, BatchCfg, EngineSpec, ServeState, Server};
@@ -70,6 +72,8 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         "info" => info(args),
         "run" => run_cmd(args),
+        "plan" => plan_cmd(args),
+        "gc" => gc_cmd(args),
         "pretrain" => pretrain(args),
         "prune" => prune(args),
         "retrain" => retrain(args),
@@ -89,7 +93,11 @@ repro — PERP: Parameter-Efficient Retraining after Pruning (reproduction)
 
 subcommands:
   info          list models, executables and the analytical memory table
-  run           execute a pipeline plan (--plan <file.json> or --stages \"...\")
+  run           execute a pipeline plan or plan graph (--plan <file.json> or --stages \"...\")
+  plan          inspect a plan: plan show <file> [--dot] — ASCII tree or
+                Graphviz DOT with per-node cache-hit status
+  gc            reclaim stage artifacts unreachable from any plan file
+                (--dry-run by default; --force deletes)
   pretrain      converge a dense model and cache the checkpoint
   prune         prune the cached dense model, report ppl collapse
   retrain       prune + retrain with a PERP mode, report recovery
@@ -121,10 +129,19 @@ common flags:
                        table19 table20 table22 memory
 
 run flags:
-  --plan <file.json>   plan file (see examples/plans/)
+  --plan <file.json>   plan or plan-graph file (see examples/plans/)
   --stages <spec>      inline plan, e.g. \"prune(wanda,0.5)|retrain(masklora,100)|merge|eval\"
-                       (a leading pretrain stage is implied)
+                       (a leading pretrain stage is implied).  Fan-out forms
+                       build a graph: fork[a|b;c|d] runs each ;-branch off
+                       the current leaves, seeds(n) replicates the path over
+                       n consecutive seeds, agg reduces eval leaves to
+                       mean±std
   --force              ignore completed stage artifacts; recompute everything
+
+gc flags:
+  --plans <dir>        plan/graph files defining reachability  [examples/plans]
+  --keep <f1,f2>       extra plan files whose artifacts must survive
+  --force              actually delete unreachable stage dirs (default: dry run)
 
 eval flags:
   --from <ckpt>        evaluate a saved .ptns checkpoint (pruned/retrained/
@@ -244,9 +261,14 @@ fn run_cmd(args: &Args) -> Result<()> {
     let stages = args.opt_str("stages");
     let force = args.flag("force");
     args.finish()?;
-    let plan = match (&plan_file, &stages) {
-        (Some(p), None) => Plan::from_file(Path::new(p))?,
-        (None, Some(s)) => parse_plan("inline", s).map_err(|e| anyhow::anyhow!(ArgError(e)))?,
+    let loaded = match (&plan_file, &stages) {
+        (Some(p), None) => PlanOrGraph::from_file(Path::new(p))?,
+        (None, Some(s)) if spec_is_graph(s) => PlanOrGraph::Graph(
+            parse_graph("inline", s).map_err(|e| anyhow::anyhow!(ArgError(e)))?,
+        ),
+        (None, Some(s)) => PlanOrGraph::Linear(
+            parse_plan("inline", s).map_err(|e| anyhow::anyhow!(ArgError(e)))?,
+        ),
         _ => {
             // a usage problem, not a runtime failure: exit 2 like other
             // argument errors
@@ -255,29 +277,254 @@ fn run_cmd(args: &Args) -> Result<()> {
             )));
         }
     };
-    println!(
-        "running plan {:?} ({} stages) on {} [{}]",
-        plan.name,
-        plan.stages.len(),
-        env.cfg.model,
-        env.rt.kind()
-    );
-    let report = executor(&env).force(force).run(&plan)?;
-    println!("{}", report.summary());
-    if let Some(m) = report.last_metrics() {
-        if m.acc.is_nan() {
-            println!("final eval: test ppl {:.3} (sparsity {:.3})", m.ppl, m.sparsity);
-        } else {
+    let execs_before = env.rt.exec_count();
+    match loaded {
+        PlanOrGraph::Linear(plan) => {
             println!(
-                "final eval: test ppl {:.3}, mean zero-shot acc {:.1}% (sparsity {:.3})",
-                m.ppl,
-                m.acc * 100.0,
-                m.sparsity
+                "running plan {:?} ({} stages) on {} [{}]",
+                plan.name,
+                plan.stages.len(),
+                env.cfg.model,
+                env.rt.kind()
             );
-            for (name, acc) in &m.per_task {
-                println!("  {:>6}: {:.1}%", name, acc * 100.0);
+            let report = executor(&env).force(force).run(&plan)?;
+            println!("{}", report.summary());
+            if let Some(m) = report.last_metrics() {
+                if m.acc.is_nan() {
+                    println!("final eval: test ppl {:.3} (sparsity {:.3})", m.ppl, m.sparsity);
+                } else {
+                    println!(
+                        "final eval: test ppl {:.3}, mean zero-shot acc {:.1}% (sparsity {:.3})",
+                        m.ppl,
+                        m.acc * 100.0,
+                        m.sparsity
+                    );
+                    for (name, acc) in &m.per_task {
+                        println!("  {:>6}: {:.1}%", name, acc * 100.0);
+                    }
+                }
             }
         }
+        PlanOrGraph::Graph(g) => {
+            println!(
+                "running plan graph {:?} ({} nodes, {} roots) on {} [{}]",
+                g.name,
+                g.stage_count(),
+                g.roots().len(),
+                env.cfg.model,
+                env.rt.kind()
+            );
+            let report = executor(&env).force(force).run_graph(&g)?;
+            println!("{}", report.summary());
+            for node in &report.nodes {
+                if let Some(m) = &node.rep.metrics {
+                    println!(
+                        "  {:<32} ppl {:.3} (sparsity {:.3}, seed {})",
+                        node.name, m.ppl, m.sparsity, node.seed
+                    );
+                }
+            }
+            for agg in &report.aggregates {
+                println!(
+                    "aggregate {}: ppl {}  acc {}  sparsity {} (over {} leaves)",
+                    agg.name,
+                    agg.ppl.display(3),
+                    agg.acc.display(3),
+                    agg.sparsity.display(3),
+                    agg.over.len()
+                );
+            }
+        }
+    }
+    println!("backend executions: {}", env.rt.exec_count() - execs_before);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Plan inspection + cache garbage collection.
+// ---------------------------------------------------------------------------
+
+fn plan_cmd(args: &Args) -> Result<()> {
+    match args.pos(0) {
+        Some("show") => plan_show(args),
+        other => Err(anyhow::anyhow!(ArgError(format!(
+            "plan expects the 'show' action (repro plan show <file> [--dot]), got {other:?}"
+        )))),
+    }
+}
+
+fn plan_show(args: &Args) -> Result<()> {
+    let env = common(args)?;
+    let file = args.pos(1).map(str::to_string).ok_or_else(|| {
+        anyhow::anyhow!(ArgError("plan show needs a file: repro plan show <file> [--dot]".into()))
+    })?;
+    let dot = args.flag("dot");
+    args.finish()?;
+
+    let g = PlanOrGraph::from_file(Path::new(&file))?.graph();
+    g.validate()
+        .map_err(|e| anyhow::anyhow!("invalid plan {file:?}: {e}"))?;
+    let keys = g
+        .node_keys(&env.cfg, env.seed)
+        .map_err(|e| anyhow::anyhow!("keying plan {file:?}: {e}"))?;
+    let cache = env.out.join("cache");
+    // per-node cache status under the current (model, profile, seed): what a
+    // re-run would load vs actually execute
+    let annotate = |n: &perp::pipeline::Node| -> String {
+        match n.stage() {
+            None => String::new(),
+            Some(stage) => {
+                let key = keys[&n.name];
+                let status = if stage_complete(&stage_dir(&cache, &key), stage) {
+                    "cached"
+                } else {
+                    "pending"
+                };
+                format!("[{status} {}]", &key.hex()[..10])
+            }
+        }
+    };
+    if dot {
+        print!("{}", g.render_dot(&annotate));
+    } else {
+        let cached = g
+            .nodes
+            .iter()
+            .filter(|n| {
+                n.stage().is_some_and(|s| stage_complete(&stage_dir(&cache, &keys[&n.name]), s))
+            })
+            .count();
+        println!(
+            "plan {:?}: {} stage nodes ({} cached under {:?}), {} roots",
+            g.name,
+            g.stage_count(),
+            cached,
+            cache,
+            g.roots().len()
+        );
+        print!("{}", g.render_tree(&annotate));
+    }
+    Ok(())
+}
+
+/// Recursive directory size in bytes.
+fn dir_size(path: &Path) -> u64 {
+    let Ok(entries) = std::fs::read_dir(path) else {
+        return 0;
+    };
+    entries
+        .flatten()
+        .map(|e| {
+            let p = e.path();
+            match e.metadata() {
+                Ok(md) if md.is_dir() => dir_size(&p),
+                Ok(md) => md.len(),
+                Err(_) => 0,
+            }
+        })
+        .sum()
+}
+
+fn fmt_bytes(b: u64) -> String {
+    if b >= 1 << 30 {
+        format!("{:.2} GiB", b as f64 / (1u64 << 30) as f64)
+    } else if b >= 1 << 20 {
+        format!("{:.2} MiB", b as f64 / (1u64 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.1} KiB", b as f64 / (1u64 << 10) as f64)
+    } else {
+        format!("{b} bytes")
+    }
+}
+
+/// `repro gc` — reclaim stage artifacts unreachable from any plan/graph
+/// file.  Reachability is computed for the *current* (model, profile,
+/// backend) over every seed in the profile plus --seed, so run it with the
+/// same flags as the runs whose artifacts you want kept.  Dry-run by
+/// default; `--force` deletes.
+fn gc_cmd(args: &Args) -> Result<()> {
+    let env = common(args)?;
+    let plans_dir = PathBuf::from(args.str("plans", "examples/plans"));
+    let keep: Vec<String> = args.list("keep", "");
+    let delete = args.flag("force");
+    args.finish()?;
+
+    // collect every plan/graph file that pins artifacts
+    let mut files: Vec<PathBuf> = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(&plans_dir) {
+        for e in entries.flatten() {
+            let p = e.path();
+            if p.extension().is_some_and(|x| x == "json") {
+                files.push(p);
+            }
+        }
+    }
+    files.sort();
+    files.extend(keep.iter().map(PathBuf::from));
+
+    // reachable = every node key of every file, across the profile's seeds
+    // and the CLI seed (graphs add their own seed offsets on top)
+    let mut seeds: Vec<u64> = env.cfg.seeds.clone();
+    if !seeds.contains(&env.seed) {
+        seeds.push(env.seed);
+    }
+    let mut reachable: std::collections::BTreeSet<String> = Default::default();
+    for file in &files {
+        let g = PlanOrGraph::from_file(file)
+            .with_context(|| format!("gc: unreadable plan file {file:?}"))?
+            .graph();
+        g.validate()
+            .map_err(|e| anyhow::anyhow!("gc: invalid plan {file:?}: {e}"))?;
+        for &seed in &seeds {
+            let keys = g
+                .node_keys(&env.cfg, seed)
+                .map_err(|e| anyhow::anyhow!("gc: keying {file:?}: {e}"))?;
+            reachable.extend(keys.values().map(|k| k.hex()));
+        }
+    }
+
+    let plan_cache = env.out.join("cache").join("plan");
+    let mut unreachable: Vec<(PathBuf, u64)> = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(&plan_cache) {
+        for e in entries.flatten() {
+            let p = e.path();
+            let name = e.file_name().to_string_lossy().to_string();
+            // stage dirs are 16-hex keys; leave anything else alone
+            let is_key = name.len() == 16 && name.chars().all(|c| c.is_ascii_hexdigit());
+            if p.is_dir() && is_key && !reachable.contains(&name) {
+                let size = dir_size(&p);
+                unreachable.push((p, size));
+            }
+        }
+    }
+    unreachable.sort();
+
+    let total: u64 = unreachable.iter().map(|(_, s)| s).sum();
+    println!(
+        "gc: {} plan files pin {} stage keys under {:?} (seeds {:?})",
+        files.len(),
+        reachable.len(),
+        plan_cache,
+        seeds
+    );
+    for (p, size) in &unreachable {
+        println!("  unreachable {:?} ({})", p.file_name().unwrap_or_default(), fmt_bytes(*size));
+    }
+    if delete {
+        for (p, _) in &unreachable {
+            std::fs::remove_dir_all(p).with_context(|| format!("gc: deleting {p:?}"))?;
+        }
+        println!(
+            "gc: {} unreachable stage dirs deleted, {} reclaimed",
+            unreachable.len(),
+            fmt_bytes(total)
+        );
+    } else {
+        println!(
+            "gc: {} unreachable stage dirs, {} reclaimable (dry run — pass --force to delete)",
+            unreachable.len(),
+            fmt_bytes(total)
+        );
     }
     Ok(())
 }

@@ -27,6 +27,12 @@ pub fn fnv1a(state: u64, bytes: &[u8]) -> u64 {
     h
 }
 
+/// One-shot FNV-1a over a byte slice, hex-rendered — the content fingerprint
+/// `Export` stages record so byte-identical checkpoints can be skipped.
+pub fn fnv1a_hex(bytes: &[u8]) -> String {
+    format!("{:016x}", fnv1a(FNV_OFFSET, bytes))
+}
+
 /// A chained content key.  `push` derives the next stage's key; the hex form
 /// names the artifact directory.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

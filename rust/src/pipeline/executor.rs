@@ -1,8 +1,10 @@
-//! The plan executor: drive a [`Plan`] over a [`Session`] with
+//! The plan executor: a topological scheduler that drives a [`PlanGraph`]
+//! (or a linear [`Plan`] — a single-path graph) over [`Session`]s with
 //! content-addressed artifact caching.
 //!
-//! Every stage writes its outputs under `<cache>/plan/<key>/` where `key` is
-//! the FNV chain of (model, config, seed, backend, all upstream stages):
+//! Every stage node writes its outputs under `<cache>/plan/<key>/` where
+//! `key` is the FNV chain of (model, config, seed + node seed-offset,
+//! backend, all root-path stages):
 //!
 //! | stage       | artifacts                                         |
 //! |-------------|---------------------------------------------------|
@@ -12,19 +14,33 @@
 //! | reconstruct | `state.ptns`, `masks.ptns`, `meta.json` (mean layer-loss drop) |
 //! | merge       | `state.ptns`, `masks.ptns`, `meta.json`           |
 //! | eval        | `metrics.json` (ppl, acc, per-task, sparsity)     |
-//! | export      | none — always executes (side effect outside the cache) |
+//! | export      | `meta.json` (content fingerprint of the written checkpoint) |
+//!
+//! **Fan-out.**  The scheduler walks each root's subtree depth-first.  A
+//! node with several children executes once; before descending into each
+//! child but the last, the branch state (session weights/masks/adapters +
+//! pending reconstruction targets) is snapshotted via
+//! [`ExpContext::clone_session`] — so a fork over `{0.5, 0.7, 0.9}`
+//! sparsities prunes three times but pretrains exactly once per run.
+//! Across runs the content-addressed cache takes over: subtrees whose every
+//! node is already complete are reported from their artifacts without even
+//! materialising a session (zero backend executions on resume).
+//!
+//! **Export idempotence.**  `export` records the FNV fingerprint of the
+//! bytes it wrote; when the same node would write the identical checkpoint
+//! over an unchanged file it skips the write and reports a cache hit.
+//! Deleting or editing the target file (or `--force`) re-exports.
 //!
 //! `meta.json` / `metrics.json` are written last, so their presence marks a
 //! complete stage; `.ptns` writes are temp-file + rename (see
 //! [`crate::tensor::io`]), so a crashed run never leaves a half-artifact
-//! that passes the completeness check.  Re-running a plan therefore loads
-//! completed stages (zero training steps, zero backend executions) and only
-//! computes the suffix that changed.  `force` ignores the stage cache; the
-//! keyed dense pretrain checkpoint is still honoured because it is
+//! that passes the completeness check.  `force` ignores the stage cache;
+//! the keyed dense pretrain checkpoint is still honoured because it is
 //! deterministic in exactly the inputs the key hashes.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -33,6 +49,7 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::reconstruct;
 use crate::coordinator::sweep::ExpContext;
 use crate::coordinator::Session;
+use crate::eval::{mean_std, MeanStd};
 use crate::model::ParamStore;
 use crate::peft::{LoraState, Mode};
 use crate::pruning::MaskSet;
@@ -40,7 +57,8 @@ use crate::runtime::{Backend, ModelManifest};
 use crate::tensor::{io, Tensor};
 use crate::util::json::Json;
 
-use super::cachekey::{base_key, Key};
+use super::cachekey::{fnv1a_hex, Key};
+use super::graph::{Node, NodeKind, PlanGraph};
 use super::plan::{Plan, Stage};
 
 /// What an `eval` stage measured.
@@ -55,7 +73,7 @@ pub struct EvalMetrics {
     pub sparsity: f64,
 }
 
-/// Outcome of one stage.
+/// Outcome of one stage node.
 #[derive(Debug, Clone)]
 pub struct StageReport {
     pub label: String,
@@ -94,6 +112,79 @@ impl StageReport {
     }
 }
 
+/// One executed (or cache-resumed) graph node.
+#[derive(Debug, Clone)]
+pub struct NodeReport {
+    pub name: String,
+    pub parent: Option<String>,
+    /// effective seed (executor seed + node seed offset)
+    pub seed: u64,
+    pub rep: StageReport,
+}
+
+/// One aggregate node's mean±std reduction over its leaf eval metrics.
+#[derive(Debug, Clone)]
+pub struct AggregateRow {
+    pub name: String,
+    pub over: Vec<String>,
+    pub ppl: MeanStd,
+    pub acc: MeanStd,
+    pub sparsity: MeanStd,
+}
+
+/// Outcome of a graph run: every stage node in execution order plus the
+/// aggregate reductions.
+#[derive(Debug, Clone)]
+pub struct GraphReport {
+    pub graph: String,
+    pub nodes: Vec<NodeReport>,
+    pub aggregates: Vec<AggregateRow>,
+}
+
+impl GraphReport {
+    pub fn node(&self, name: &str) -> Option<&StageReport> {
+        self.nodes.iter().find(|n| n.name == name).map(|n| &n.rep)
+    }
+
+    /// Metrics of the named eval node, if it ran.
+    pub fn metrics(&self, name: &str) -> Option<&EvalMetrics> {
+        self.node(name).and_then(|r| r.metrics.as_ref())
+    }
+
+    pub fn aggregate(&self, name: &str) -> Option<&AggregateRow> {
+        self.aggregates.iter().find(|a| a.name == name)
+    }
+
+    pub fn cache_hits(&self) -> usize {
+        self.nodes.iter().filter(|n| n.rep.cache_hit).count()
+    }
+
+    /// Nodes that actually computed (no cache hit) — the per-run exec
+    /// counts the shared-prefix tests assert on.
+    pub fn computed(&self) -> usize {
+        self.nodes.len() - self.cache_hits()
+    }
+
+    /// Computed nodes whose stage label starts with `prefix` (e.g.
+    /// `computed_labeled("pretrain")` must be ≤ 1 per seed within a run).
+    pub fn computed_labeled(&self, prefix: &str) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| !n.rep.cache_hit && n.rep.label.starts_with(prefix))
+            .count()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "graph {}: {}/{} nodes from cache",
+            self.graph,
+            self.cache_hits(),
+            self.nodes.len()
+        )
+    }
+}
+
+/// Outcome of a linear plan run (a single-path graph, reported flat).
 #[derive(Debug, Clone)]
 pub struct RunReport {
     pub plan: String,
@@ -125,8 +216,71 @@ impl RunReport {
     }
 }
 
-/// Drives plans over sessions.  Construct once per (backend, config, seed);
-/// run as many plans as you like — shared prefixes share artifacts.
+/// A stage node's artifact directory under the results cache.
+pub fn stage_dir(cache_dir: &Path, key: &Key) -> PathBuf {
+    cache_dir.join("plan").join(key.hex())
+}
+
+/// Is this stage's artifact set complete on disk?  The static form of the
+/// executor's per-stage hit check, shared with `repro plan show` (cache
+/// status) and the cached-subtree fast path.  For `export` the "artifact"
+/// is the target file itself: complete only when its bytes still match the
+/// fingerprint recorded at export time.
+pub fn stage_complete(dir: &Path, stage: &Stage) -> bool {
+    match stage {
+        Stage::Pretrain => dir.join("meta.json").is_file(),
+        Stage::Export { path } => read_meta_str(dir, "content_fnv")
+            .is_some_and(|h| file_fnv(Path::new(path)).as_deref() == Some(h.as_str())),
+        Stage::Eval { .. } => dir.join("metrics.json").is_file(),
+        Stage::Retrain { mode, .. } => {
+            let mut needs = vec!["state.ptns", "masks.ptns", "meta.json"];
+            if mode.is_lora() {
+                needs.push("lora.ptns");
+            }
+            needs.iter().all(|f| dir.join(f).is_file())
+        }
+        Stage::Prune { .. } | Stage::Reconstruct { .. } | Stage::Merge => {
+            ["state.ptns", "masks.ptns", "meta.json"]
+                .iter()
+                .all(|f| dir.join(f).is_file())
+        }
+    }
+}
+
+/// FNV-1a fingerprint of a file's bytes (None when unreadable/absent).
+pub fn file_fnv(path: &Path) -> Option<String> {
+    std::fs::read(path).ok().map(|b| fnv1a_hex(&b))
+}
+
+/// Everything one branch of the walk owns: the live session plus the dense
+/// weights snapshotted at the most recent prune (Eq. 1 reconstruction
+/// targets — `Rc` so forking a branch shares rather than copies them).
+struct Branch<'rt> {
+    session: Session<'rt>,
+    pre_prune: Option<Rc<BTreeMap<String, Tensor>>>,
+}
+
+/// Per-run bookkeeping threaded through the walk.
+struct GraphRun<'a, 'rt> {
+    g: &'a PlanGraph,
+    keys: BTreeMap<String, Key>,
+    /// node name → whole-subtree-complete, scanned once at run start (an
+    /// `Export` completeness check hashes its target file, so re-deriving
+    /// this per walk step would re-read checkpoints O(depth) times)
+    complete: BTreeMap<String, bool>,
+    total: usize,
+    reports: Vec<NodeReport>,
+    /// leaf node whose final session the caller wants back (linear shims);
+    /// set ⇒ the cached-subtree fast path is disabled so the session always
+    /// materialises
+    capture: Option<String>,
+    captured: Option<Session<'rt>>,
+}
+
+/// Drives plans and plan graphs over sessions.  Construct once per
+/// (backend, config, base seed); run as many plans as you like — shared
+/// prefixes share artifacts, and within one graph run they share live
+/// session snapshots.
 pub struct Executor<'rt> {
     rt: &'rt dyn Backend,
     cfg: ExperimentConfig,
@@ -159,229 +313,477 @@ impl<'rt> Executor<'rt> {
         self
     }
 
+    // ------------------------------------------------------------------
+    // Linear plans: thin wrappers over the graph scheduler.
+    // ------------------------------------------------------------------
+
     pub fn run(&self, plan: &Plan) -> Result<RunReport> {
-        self.run_with_session(plan).map(|(report, _)| report)
+        self.run_linear(plan, false).map(|(report, _)| report)
     }
 
     /// Run a plan, returning the report plus the final session state (the
     /// CLI shims print from it).
     pub fn run_with_session(&self, plan: &Plan) -> Result<(RunReport, Session<'rt>)> {
+        let (report, session) = self.run_linear(plan, true)?;
+        Ok((report, session.expect("capture requested: session materialised")))
+    }
+
+    fn run_linear(&self, plan: &Plan, capture: bool) -> Result<(RunReport, Option<Session<'rt>>)> {
         plan.validate()
             .map_err(|e| anyhow::anyhow!("invalid plan {:?}: {e}", plan.name))?;
+        let g = plan.to_graph();
+        let leaf = format!("s{}", plan.stages.len());
+        let (graph_report, session) = self.run_graph_inner(&g, capture.then_some(leaf))?;
+        let stages = graph_report.nodes.into_iter().map(|n| n.rep).collect();
+        Ok((RunReport { plan: plan.name.clone(), stages }, session))
+    }
+
+    // ------------------------------------------------------------------
+    // Graph scheduling.
+    // ------------------------------------------------------------------
+
+    pub fn run_graph(&self, g: &PlanGraph) -> Result<GraphReport> {
+        self.run_graph_inner(g, None).map(|(report, _)| report)
+    }
+
+    fn run_graph_inner(
+        &self,
+        g: &PlanGraph,
+        capture: Option<String>,
+    ) -> Result<(GraphReport, Option<Session<'rt>>)> {
+        g.validate()
+            .map_err(|e| anyhow::anyhow!("invalid plan graph {:?}: {e}", g.name))?;
+        let keys = g
+            .node_keys(&self.cfg, self.seed)
+            .map_err(|e| anyhow::anyhow!("keying plan graph {:?}: {e}", g.name))?;
         let ctx = ExpContext::new(self.rt, self.cfg.clone(), self.cache_dir.clone());
-        let total = plan.stages.len();
-        let mut key = base_key(&self.cfg, self.seed);
-        let mut session: Option<Session<'rt>> = None;
-        // weights snapshotted just before the most recent prune — the
-        // reconstruction targets (Eq. 1's dense W_l).  Only kept when a
-        // later stage actually reconstructs; plans without one skip the copy
-        let last_recon = plan
-            .stages
-            .iter()
-            .rposition(|s| matches!(s, Stage::Reconstruct { .. }));
-        let mut pre_prune: Option<BTreeMap<String, Tensor>> = None;
-        let mut reports = Vec::with_capacity(total);
-
-        for (i, stage) in plan.stages.iter().enumerate() {
-            key = key.push(&stage.canonical());
-            let dir = self.cache_dir.join("plan").join(key.hex());
-            let t0 = Instant::now();
-            let mut rep = StageReport::new(stage.label(), &key);
-
-            match stage {
-                Stage::Pretrain => {
-                    rep.cache_hit = !self.force && dir.join("meta.json").is_file();
-                    // dense_session loads the shared checkpoint when present,
-                    // so even a cache-miss marker costs no training steps if
-                    // an earlier run (or sweep) already converged this config
-                    session = Some(ctx.dense_session(self.seed)?);
-                    if !rep.cache_hit {
-                        self.write_meta(&dir, stage, vec![])?;
-                    }
-                }
-                Stage::Prune { criterion, pattern } => {
-                    let mut s = session.take().expect("validated plan: session exists");
-                    // snapshot the reconstruction targets from the incoming
-                    // weights — correct on both the hit and miss path
-                    if last_recon.is_some_and(|r| r > i) {
-                        pre_prune = Some(
-                            s.mm.prunable
-                                .iter()
-                                .map(|n| (n.clone(), s.params.get(n).clone()))
-                                .collect(),
-                        );
-                    }
-                    if self.hit(&dir, &["state.ptns", "masks.ptns", "meta.json"]) {
-                        rep.cache_hit = true;
-                        self.load_state(&mut s, &dir)?;
-                        rep.sparsity = read_meta_num(&dir, "sparsity");
-                    } else {
-                        let grams = if criterion.needs_calibration() {
-                            Some(s.calibrate()?)
-                        } else {
-                            None
-                        };
-                        s.prune(*criterion, *pattern, grams.as_ref())?;
-                        let sparsity = s.masks.sparsity();
-                        rep.sparsity = Some(sparsity);
-                        self.save_state(&s, &dir)?;
-                        self.write_meta(&dir, stage, vec![("sparsity", Json::Num(sparsity))])?;
-                    }
-                    session = Some(s);
-                }
-                Stage::Retrain { mode, steps, lr } => {
-                    let steps = steps.unwrap_or(self.cfg.retrain_steps);
-                    let mut needs = vec!["state.ptns", "masks.ptns"];
-                    if mode.is_lora() {
-                        needs.push("lora.ptns");
-                    }
-                    needs.push("meta.json");
-                    if self.hit(&dir, &needs) {
-                        rep.cache_hit = true;
-                        let mut s = session.take().expect("validated plan: session exists");
-                        self.load_state(&mut s, &dir)?;
-                        s.lora = if mode.is_lora() {
-                            Some((*mode, load_lora(&s.mm, &dir.join("lora.ptns"))?))
-                        } else {
-                            None
-                        };
-                        s.last_tps = read_meta_num(&dir, "tps").unwrap_or(0.0);
-                        rep.tps = Some(s.last_tps);
-                        rep.trainable_pct = read_meta_num(&dir, "trainable_pct");
-                        rep.lr = read_meta_num(&dir, "lr");
-                        session = Some(s);
-                    } else {
-                        let base = session.take().expect("validated plan: session exists");
-                        // unpinned lr → the legacy grid tuning (no-op for the
-                        // single-entry grids the shipped profiles use)
-                        let lr = match lr {
-                            Some(l) => *l,
-                            None => self.tuned_lr(&ctx, &base, *mode, steps)?,
-                        };
-                        // fresh clone, exactly like the legacy retrain path
-                        let mut s = ctx.clone_session(&base)?;
-                        drop(base);
-                        s.retrain(*mode, steps, lr)?;
-                        let pct = 100.0 * s.mm.trainable_count(mode.trainable_key()) as f64
-                            / s.mm.total_params() as f64;
-                        rep.tps = Some(s.last_tps);
-                        rep.trainable_pct = Some(pct);
-                        rep.lr = Some(lr);
-                        self.save_state(&s, &dir)?;
-                        if let Some((_, lora)) = &s.lora {
-                            io::save(&dir.join("lora.ptns"), &lora.tensors)
-                                .context("saving adapters")?;
-                        }
-                        self.write_meta(
-                            &dir,
-                            stage,
-                            vec![
-                                ("tps", Json::Num(s.last_tps)),
-                                ("trainable_pct", Json::Num(pct)),
-                                ("lr", Json::Num(lr)),
-                            ],
-                        )?;
-                        session = Some(s);
-                    }
-                }
-                Stage::Reconstruct { mode, steps, lr } => {
-                    let steps = steps.unwrap_or(self.cfg.recon_steps);
-                    let lr = lr.unwrap_or(self.cfg.recon_lr);
-                    let mut s = session.take().expect("validated plan: session exists");
-                    if self.hit(&dir, &["state.ptns", "masks.ptns", "meta.json"]) {
-                        rep.cache_hit = true;
-                        self.load_state(&mut s, &dir)?;
-                        rep.mean_improvement = read_meta_num(&dir, "mean_improvement");
-                        session = Some(s);
-                    } else {
-                        let dense = pre_prune
-                            .as_ref()
-                            .expect("validated plan: reconstruct follows a prune");
-                        let mut r = ctx.clone_session(&s)?;
-                        drop(s);
-                        let target = r.masks.clone();
-                        let report =
-                            reconstruct::reconstruct(&mut r, &target, dense, *mode, steps, lr)?;
-                        rep.mean_improvement = Some(report.mean_improvement());
-                        self.save_state(&r, &dir)?;
-                        self.write_meta(
-                            &dir,
-                            stage,
-                            vec![("mean_improvement", Json::Num(report.mean_improvement()))],
-                        )?;
-                        session = Some(r);
-                    }
-                }
-                Stage::Merge => {
-                    let mut s = session.take().expect("validated plan: session exists");
-                    if self.hit(&dir, &["state.ptns", "masks.ptns", "meta.json"]) {
-                        rep.cache_hit = true;
-                        self.load_state(&mut s, &dir)?;
-                        s.lora = None;
-                    } else {
-                        s.merge_adapters()?;
-                        self.save_state(&s, &dir)?;
-                        self.write_meta(&dir, stage, vec![])?;
-                    }
-                    session = Some(s);
-                }
-                Stage::Eval { tasks } => {
-                    if self.hit(&dir, &["metrics.json"]) {
-                        rep.cache_hit = true;
-                        rep.metrics = Some(read_metrics(&dir.join("metrics.json"))?);
-                    } else {
-                        let s = session.as_mut().expect("validated plan: session exists");
-                        let ppl = s.eval_ppl_test()?;
-                        let (acc, per_task) = if *tasks {
-                            let tr = s.eval_tasks()?;
-                            (
-                                crate::eval::mean_accuracy(&tr),
-                                tr.into_iter()
-                                    .map(|t| (t.name, t.accuracy))
-                                    .collect::<Vec<_>>(),
-                            )
-                        } else {
-                            (f64::NAN, Vec::new())
-                        };
-                        let m = EvalMetrics {
-                            ppl: ppl.ppl,
-                            loss: ppl.loss,
-                            acc,
-                            per_task,
-                            sparsity: s.params.weight_sparsity(&s.mm),
-                        };
-                        write_metrics(&dir.join("metrics.json"), &m)?;
-                        rep.metrics = Some(m);
-                    }
-                }
-                Stage::Export { path } => {
-                    // side effect outside the cache: always executed
-                    let s = session.as_ref().expect("validated plan: session exists");
-                    s.save(Path::new(path))?;
-                }
+        // pre-scan completeness only when the fast path can fire at all:
+        // --force walks everything, and a capture run must materialise
+        // sessions regardless
+        let mut complete = BTreeMap::new();
+        if capture.is_none() && !self.force {
+            for root in g.roots() {
+                self.scan_complete(g, &keys, root, &mut complete);
             }
-
-            rep.wall_s = t0.elapsed().as_secs_f64();
-            if !self.quiet {
-                let status = if rep.cache_hit {
-                    "cache hit".to_string()
-                } else {
-                    format!("done in {:.2}s", rep.wall_s)
-                };
-                println!(
-                    "[{}/{}] {:<28} {} (key {})",
-                    i + 1,
-                    total,
-                    rep.label,
-                    status,
-                    &rep.key[..10]
-                );
-            }
-            reports.push(rep);
         }
+        let mut run = GraphRun {
+            g,
+            keys,
+            complete,
+            total: g.stage_count(),
+            reports: Vec::with_capacity(g.stage_count()),
+            capture,
+            captured: None,
+        };
+        for root in g.roots() {
+            if self.subtree_complete(&run, root) {
+                self.emit_cached_subtree(&mut run, root)?;
+            } else {
+                self.walk(&ctx, &mut run, root, None)?;
+            }
+        }
+        let aggregates = self.reduce_aggregates(g, &run.reports)?;
+        let report = GraphReport { graph: g.name.clone(), nodes: run.reports, aggregates };
+        Ok((report, run.captured))
+    }
 
-        let session = session.expect("validated plan: at least the pretrain stage ran");
-        Ok((RunReport { plan: plan.name.clone(), stages: reports }, session))
+    /// Execute `node`, then descend into its children, snapshotting the
+    /// branch before every child but the last (the last inherits it).
+    fn walk(
+        &self,
+        ctx: &ExpContext<'rt>,
+        run: &mut GraphRun<'_, 'rt>,
+        node: &Node,
+        incoming: Option<Branch<'rt>>,
+    ) -> Result<()> {
+        let branch = self.exec_node(ctx, run, node, incoming)?;
+        let g = run.g;
+        // fully-cached child subtrees are reported from their artifacts
+        // without a session — no snapshot, no backend work
+        let mut live: Vec<&Node> = Vec::new();
+        for child in g.children(&node.name) {
+            if self.subtree_complete(run, child) {
+                self.emit_cached_subtree(run, child)?;
+            } else {
+                live.push(child);
+            }
+        }
+        if live.is_empty() {
+            if run.capture.as_deref() == Some(node.name.as_str()) {
+                run.captured = Some(branch.session);
+            }
+            return Ok(());
+        }
+        let mut branch = Some(branch);
+        let n_live = live.len();
+        for (i, child) in live.into_iter().enumerate() {
+            let b = if i + 1 < n_live {
+                self.snapshot(ctx, branch.as_ref().expect("branch moves only at the last child"))?
+            } else {
+                branch.take().expect("last child takes the branch")
+            };
+            self.walk(ctx, run, child, Some(b))?;
+        }
+        Ok(())
+    }
+
+    /// Clone a branch at a fork point: weights, masks and any pending
+    /// adapters are copied; reconstruction targets are shared by `Rc`.
+    fn snapshot(&self, ctx: &ExpContext<'rt>, branch: &Branch<'rt>) -> Result<Branch<'rt>> {
+        let mut s = ctx.clone_session(&branch.session)?;
+        s.lora = branch.session.lora.clone();
+        Ok(Branch { session: s, pre_prune: branch.pre_prune.clone() })
+    }
+
+    /// One-pass disk scan: memoize whether every stage in each node's
+    /// subtree is complete.  Runs before the walk, so later stage writes
+    /// never flip a verdict mid-run (re-checks at exec time go through
+    /// `hit()` anyway).
+    fn scan_complete(
+        &self,
+        g: &PlanGraph,
+        keys: &BTreeMap<String, Key>,
+        node: &Node,
+        memo: &mut BTreeMap<String, bool>,
+    ) -> bool {
+        if let Some(&v) = memo.get(&node.name) {
+            return v;
+        }
+        let dir = stage_dir(&self.cache_dir, &keys[&node.name]);
+        let own = stage_complete(&dir, node.stage().expect("stage subtree"));
+        // scan children unconditionally so every node is memoized — a
+        // complete subtree under an incomplete parent still fast-paths
+        let kids = g
+            .children(&node.name)
+            .into_iter()
+            .map(|child| self.scan_complete(g, keys, child, memo))
+            .collect::<Vec<_>>();
+        let v = own && kids.into_iter().all(|c| c);
+        memo.insert(node.name.clone(), v);
+        v
+    }
+
+    /// Is every stage in `node`'s subtree complete on disk (as of the
+    /// run-start scan)?  Empty map — `--force` or a capture run — means
+    /// "walk everything".
+    fn subtree_complete(&self, run: &GraphRun<'_, 'rt>, node: &Node) -> bool {
+        run.complete.get(&node.name).copied().unwrap_or(false)
+    }
+
+    /// Report a fully-cached subtree from its artifacts alone.
+    fn emit_cached_subtree(&self, run: &mut GraphRun<'_, 'rt>, node: &Node) -> Result<()> {
+        let key = run.keys[&node.name];
+        let stage = node.stage().expect("stage subtree");
+        let rep = self.cached_report(stage, &key)?;
+        self.progress(run.reports.len() + 1, run.total, &rep);
+        run.reports.push(NodeReport {
+            name: node.name.clone(),
+            parent: node.parent.clone(),
+            seed: self.seed.wrapping_add(node.seed_offset),
+            rep,
+        });
+        let g = run.g;
+        for child in g.children(&node.name) {
+            self.emit_cached_subtree(run, child)?;
+        }
+        Ok(())
+    }
+
+    /// A cache-hit [`StageReport`] assembled purely from disk artifacts.
+    fn cached_report(&self, stage: &Stage, key: &Key) -> Result<StageReport> {
+        let dir = stage_dir(&self.cache_dir, key);
+        let mut rep = StageReport::new(stage.label(), key);
+        rep.cache_hit = true;
+        match stage {
+            Stage::Prune { .. } => rep.sparsity = read_meta_num(&dir, "sparsity"),
+            Stage::Retrain { .. } => {
+                rep.tps = read_meta_num(&dir, "tps");
+                rep.trainable_pct = read_meta_num(&dir, "trainable_pct");
+                rep.lr = read_meta_num(&dir, "lr");
+            }
+            Stage::Reconstruct { .. } => {
+                rep.mean_improvement = read_meta_num(&dir, "mean_improvement")
+            }
+            Stage::Eval { .. } => rep.metrics = Some(read_metrics(&dir.join("metrics.json"))?),
+            Stage::Pretrain | Stage::Merge | Stage::Export { .. } => {}
+        }
+        Ok(rep)
+    }
+
+    /// Execute one stage node over its branch, honouring the stage cache.
+    fn exec_node(
+        &self,
+        ctx: &ExpContext<'rt>,
+        run: &mut GraphRun<'_, 'rt>,
+        node: &Node,
+        incoming: Option<Branch<'rt>>,
+    ) -> Result<Branch<'rt>> {
+        let stage = node.stage().expect("walk only visits stage nodes");
+        let key = run.keys[&node.name];
+        let dir = stage_dir(&self.cache_dir, &key);
+        let eff_seed = self.seed.wrapping_add(node.seed_offset);
+        let t0 = Instant::now();
+        let mut rep = StageReport::new(stage.label(), &key);
+
+        let branch = match stage {
+            Stage::Pretrain => {
+                rep.cache_hit = !self.force && dir.join("meta.json").is_file();
+                // dense_session loads the shared checkpoint when present,
+                // so even a cache-miss marker costs no training steps if
+                // an earlier run (or sweep) already converged this config
+                let session = ctx.dense_session(eff_seed)?;
+                if !rep.cache_hit {
+                    self.write_meta(&dir, stage, vec![])?;
+                }
+                Branch { session, pre_prune: None }
+            }
+            _ => {
+                let mut branch =
+                    incoming.expect("validated graph: non-root stages inherit a session");
+                match stage {
+                    Stage::Pretrain => unreachable!("handled above"),
+                    Stage::Prune { criterion, pattern } => {
+                        let s = &mut branch.session;
+                        // snapshot the reconstruction targets from the
+                        // incoming weights — correct on both the hit and
+                        // miss path, and only when a descendant needs them
+                        if run.g.subtree_reconstructs(&node.name) {
+                            branch.pre_prune = Some(Rc::new(
+                                s.mm.prunable
+                                    .iter()
+                                    .map(|n| (n.clone(), s.params.get(n).clone()))
+                                    .collect(),
+                            ));
+                        }
+                        if self.hit(&dir, &["state.ptns", "masks.ptns", "meta.json"]) {
+                            rep.cache_hit = true;
+                            self.load_state(s, &dir)?;
+                            rep.sparsity = read_meta_num(&dir, "sparsity");
+                        } else {
+                            let grams = if criterion.needs_calibration() {
+                                Some(s.calibrate()?)
+                            } else {
+                                None
+                            };
+                            s.prune(*criterion, *pattern, grams.as_ref())?;
+                            let sparsity = s.masks.sparsity();
+                            rep.sparsity = Some(sparsity);
+                            self.save_state(s, &dir)?;
+                            self.write_meta(&dir, stage, vec![("sparsity", Json::Num(sparsity))])?;
+                        }
+                    }
+                    Stage::Retrain { mode, steps, lr } => {
+                        let steps = steps.unwrap_or(self.cfg.retrain_steps);
+                        let mut needs = vec!["state.ptns", "masks.ptns"];
+                        if mode.is_lora() {
+                            needs.push("lora.ptns");
+                        }
+                        needs.push("meta.json");
+                        if self.hit(&dir, &needs) {
+                            rep.cache_hit = true;
+                            let s = &mut branch.session;
+                            self.load_state(s, &dir)?;
+                            s.lora = if mode.is_lora() {
+                                Some((*mode, load_lora(&s.mm, &dir.join("lora.ptns"))?))
+                            } else {
+                                None
+                            };
+                            s.last_tps = read_meta_num(&dir, "tps").unwrap_or(0.0);
+                            rep.tps = Some(s.last_tps);
+                            rep.trainable_pct = read_meta_num(&dir, "trainable_pct");
+                            rep.lr = read_meta_num(&dir, "lr");
+                        } else {
+                            // unpinned lr → the legacy grid tuning (no-op for
+                            // the single-entry grids the shipped profiles use)
+                            let lr = match lr {
+                                Some(l) => *l,
+                                None => self.tuned_lr(ctx, &branch.session, *mode, steps)?,
+                            };
+                            // fresh clone, exactly like the legacy retrain
+                            // path; the incoming session drops at assignment
+                            branch.session = ctx.clone_session(&branch.session)?;
+                            let s = &mut branch.session;
+                            s.retrain(*mode, steps, lr)?;
+                            let pct = 100.0 * s.mm.trainable_count(mode.trainable_key()) as f64
+                                / s.mm.total_params() as f64;
+                            rep.tps = Some(s.last_tps);
+                            rep.trainable_pct = Some(pct);
+                            rep.lr = Some(lr);
+                            self.save_state(s, &dir)?;
+                            if let Some((_, lora)) = &s.lora {
+                                io::save(&dir.join("lora.ptns"), &lora.tensors)
+                                    .context("saving adapters")?;
+                            }
+                            self.write_meta(
+                                &dir,
+                                stage,
+                                vec![
+                                    ("tps", Json::Num(s.last_tps)),
+                                    ("trainable_pct", Json::Num(pct)),
+                                    ("lr", Json::Num(lr)),
+                                ],
+                            )?;
+                        }
+                    }
+                    Stage::Reconstruct { mode, steps, lr } => {
+                        let steps = steps.unwrap_or(self.cfg.recon_steps);
+                        let lr = lr.unwrap_or(self.cfg.recon_lr);
+                        if self.hit(&dir, &["state.ptns", "masks.ptns", "meta.json"]) {
+                            rep.cache_hit = true;
+                            self.load_state(&mut branch.session, &dir)?;
+                            rep.mean_improvement = read_meta_num(&dir, "mean_improvement");
+                        } else {
+                            let dense = branch
+                                .pre_prune
+                                .clone()
+                                .expect("validated graph: reconstruct follows a prune");
+                            branch.session = ctx.clone_session(&branch.session)?;
+                            let s = &mut branch.session;
+                            let target = s.masks.clone();
+                            let report =
+                                reconstruct::reconstruct(s, &target, &dense, *mode, steps, lr)?;
+                            rep.mean_improvement = Some(report.mean_improvement());
+                            self.save_state(s, &dir)?;
+                            self.write_meta(
+                                &dir,
+                                stage,
+                                vec![("mean_improvement", Json::Num(report.mean_improvement()))],
+                            )?;
+                        }
+                    }
+                    Stage::Merge => {
+                        let s = &mut branch.session;
+                        if self.hit(&dir, &["state.ptns", "masks.ptns", "meta.json"]) {
+                            rep.cache_hit = true;
+                            self.load_state(s, &dir)?;
+                            s.lora = None;
+                        } else {
+                            s.merge_adapters()?;
+                            self.save_state(s, &dir)?;
+                            self.write_meta(&dir, stage, vec![])?;
+                        }
+                    }
+                    Stage::Eval { tasks } => {
+                        if self.hit(&dir, &["metrics.json"]) {
+                            rep.cache_hit = true;
+                            rep.metrics = Some(read_metrics(&dir.join("metrics.json"))?);
+                        } else {
+                            let s = &mut branch.session;
+                            let ppl = s.eval_ppl_test()?;
+                            let (acc, per_task) = if *tasks {
+                                let tr = s.eval_tasks()?;
+                                (
+                                    crate::eval::mean_accuracy(&tr),
+                                    tr.into_iter()
+                                        .map(|t| (t.name, t.accuracy))
+                                        .collect::<Vec<_>>(),
+                                )
+                            } else {
+                                (f64::NAN, Vec::new())
+                            };
+                            let m = EvalMetrics {
+                                ppl: ppl.ppl,
+                                loss: ppl.loss,
+                                acc,
+                                per_task,
+                                sparsity: s.params.weight_sparsity(&s.mm),
+                            };
+                            write_metrics(&dir.join("metrics.json"), &m)?;
+                            rep.metrics = Some(m);
+                        }
+                    }
+                    Stage::Export { path } => {
+                        let target = Path::new(path);
+                        let recorded = read_meta_str(&dir, "content_fnv");
+                        if !self.force
+                            && recorded.is_some()
+                            && recorded == file_fnv(target)
+                        {
+                            // byte-identical checkpoint already on disk —
+                            // idempotent skip, reported as a cache hit
+                            rep.cache_hit = true;
+                        } else {
+                            branch.session.save(target)?;
+                            let fingerprint =
+                                file_fnv(target).context("hashing exported checkpoint")?;
+                            self.write_meta(
+                                &dir,
+                                stage,
+                                vec![("content_fnv", Json::Str(fingerprint))],
+                            )?;
+                        }
+                    }
+                }
+                branch
+            }
+        };
+
+        rep.wall_s = t0.elapsed().as_secs_f64();
+        self.progress(run.reports.len() + 1, run.total, &rep);
+        run.reports.push(NodeReport {
+            name: node.name.clone(),
+            parent: node.parent.clone(),
+            seed: eff_seed,
+            rep,
+        });
+        Ok(branch)
+    }
+
+    fn progress(&self, idx: usize, total: usize, rep: &StageReport) {
+        if self.quiet {
+            return;
+        }
+        let status = if rep.cache_hit {
+            "cache hit".to_string()
+        } else {
+            format!("done in {:.2}s", rep.wall_s)
+        };
+        println!(
+            "[{}/{}] {:<28} {} (key {})",
+            idx,
+            total,
+            rep.label,
+            status,
+            &rep.key[..10]
+        );
+    }
+
+    /// Reduce every aggregate node over the eval metrics its targets
+    /// produced this run.
+    fn reduce_aggregates(
+        &self,
+        g: &PlanGraph,
+        reports: &[NodeReport],
+    ) -> Result<Vec<AggregateRow>> {
+        let mut rows = Vec::new();
+        for node in &g.nodes {
+            let NodeKind::Aggregate { over } = &node.kind else {
+                continue;
+            };
+            let mut ppls = Vec::with_capacity(over.len());
+            let mut accs = Vec::with_capacity(over.len());
+            let mut sparsities = Vec::with_capacity(over.len());
+            for target in over {
+                let metrics = reports
+                    .iter()
+                    .find(|r| &r.name == target)
+                    .and_then(|r| r.rep.metrics.as_ref())
+                    .with_context(|| {
+                        format!("aggregate {:?}: no eval metrics for node {target:?}", node.name)
+                    })?;
+                ppls.push(metrics.ppl);
+                accs.push(metrics.acc);
+                sparsities.push(metrics.sparsity);
+            }
+            rows.push(AggregateRow {
+                name: node.name.clone(),
+                over: over.clone(),
+                ppl: mean_std(&ppls),
+                acc: mean_std(&accs),
+                sparsity: mean_std(&sparsities),
+            });
+        }
+        Ok(rows)
     }
 
     /// The legacy lr-grid scan (mirrors `ExpContext::retrain_tuned`): train
@@ -535,6 +937,15 @@ fn read_metrics(path: &Path) -> Result<EvalMetrics> {
 fn read_meta_num(dir: &Path, key: &str) -> Option<f64> {
     let text = std::fs::read_to_string(dir.join("meta.json")).ok()?;
     Json::parse(&text).ok()?.get(key).and_then(Json::as_f64)
+}
+
+fn read_meta_str(dir: &Path, key: &str) -> Option<String> {
+    let text = std::fs::read_to_string(dir.join("meta.json")).ok()?;
+    Json::parse(&text)
+        .ok()?
+        .get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
 }
 
 /// Atomic-enough JSON write: temp file in the target directory, then rename.

@@ -1,0 +1,949 @@
+//! [`PlanGraph`]: fan-out pipeline plans as a DAG of named stage nodes.
+//!
+//! PERP's headline results are grids — sparsity × criterion × mode × seed
+//! cells that share an expensive common prefix (pretrain → prune) and differ
+//! only in a cheap suffix.  A linear [`Plan`] cannot express that sharing
+//! *within one run*; a `PlanGraph` can: each node holds one [`Stage`] plus a
+//! parent edge, so a prefix with several children executes once and forks
+//! via a session snapshot.
+//!
+//! * **Nodes** are named (names appear in reports, `repro plan show`, and
+//!   [`Aggregate`](NodeKind::Aggregate) references — never in cache keys).
+//! * **Keys** are the root-path canonicalisation: a node's FNV-1a chain is
+//!   `base_key(cfg, seed + seed_offset)` pushed with every stage from its
+//!   root down to itself — exactly the linear-plan chain, so existing
+//!   linear-plan cache entries stay valid and a linear [`Plan`] is just a
+//!   single-path graph ([`Plan::to_graph`]).
+//! * **Seed replication** clones a whole root path per seed offset
+//!   (`replicate_seeds(n)`); replicas are bitwise-identical to running the
+//!   same linear plan under `--seed base+i`.
+//! * **Aggregate nodes** reduce a set of leaf `Eval` nodes into mean±std
+//!   rows ([`crate::eval::mean_std`]); they execute after every stage node
+//!   and never touch the cache.
+//!
+//! The [`GraphBuilder`] offers fluent fan-out combinators (`fork_over`,
+//! `fork_sparsities`, `grid`, `replicate_seeds`, `aggregate`) over a
+//! moving *frontier* of leaves; the low-level [`PlanGraph::stage_node`] /
+//! [`PlanGraph::aggregate_node`] API is what the sweep generators use when
+//! they need explicit cell names.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::reconstruct::ReconMode;
+use crate::peft::Mode;
+use crate::pruning::{Criterion, Pattern};
+use crate::util::json::Json;
+
+use super::cachekey::{base_key, Key};
+use super::plan::{Plan, Stage};
+
+/// What a graph node does.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NodeKind {
+    /// One pipeline stage, executed over the session inherited from
+    /// `parent` (roots create the session — they must be `Pretrain`).
+    Stage(Stage),
+    /// Reduce the eval metrics of the named nodes into mean±std rows.
+    Aggregate { over: Vec<String> },
+}
+
+/// One named node.  `parent` applies to stage nodes only (aggregates
+/// reference their inputs through `over`); `seed_offset` shifts the
+/// executor's base seed for seed-replicated paths.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub name: String,
+    pub kind: NodeKind,
+    pub parent: Option<String>,
+    pub seed_offset: u64,
+}
+
+impl Node {
+    /// Short human label (stage label, or `agg(n)` for aggregates).
+    pub fn label(&self) -> String {
+        match &self.kind {
+            NodeKind::Stage(s) => s.label(),
+            NodeKind::Aggregate { over } => format!("agg({})", over.len()),
+        }
+    }
+
+    pub fn stage(&self) -> Option<&Stage> {
+        match &self.kind {
+            NodeKind::Stage(s) => Some(s),
+            NodeKind::Aggregate { .. } => None,
+        }
+    }
+}
+
+/// A named DAG of stage nodes plus aggregate reducers.  Node order is
+/// insertion order; the executor walks roots depth-first with children in
+/// insertion order, so execution is deterministic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanGraph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+}
+
+impl PlanGraph {
+    pub fn new(name: &str) -> PlanGraph {
+        PlanGraph { name: name.to_string(), nodes: Vec::new() }
+    }
+
+    // ----- low-level construction (sweep generators) ----------------------
+
+    /// Append a stage node.  `parent: None` declares a root (must be
+    /// `Pretrain` — enforced by [`PlanGraph::validate`]).
+    pub fn stage_node(&mut self, name: &str, parent: Option<&str>, stage: Stage) -> &mut Self {
+        self.stage_node_at(name, parent, stage, self.seed_offset_of(parent))
+    }
+
+    /// [`PlanGraph::stage_node`] with an explicit seed offset (seed-replica
+    /// paths).
+    pub fn stage_node_at(
+        &mut self,
+        name: &str,
+        parent: Option<&str>,
+        stage: Stage,
+        seed_offset: u64,
+    ) -> &mut Self {
+        self.nodes.push(Node {
+            name: name.to_string(),
+            kind: NodeKind::Stage(stage),
+            parent: parent.map(str::to_string),
+            seed_offset,
+        });
+        self
+    }
+
+    /// Append an aggregate node over the named eval nodes.
+    pub fn aggregate_node(&mut self, name: &str, over: Vec<String>) -> &mut Self {
+        self.nodes.push(Node {
+            name: name.to_string(),
+            kind: NodeKind::Aggregate { over },
+            parent: None,
+            seed_offset: 0,
+        });
+        self
+    }
+
+    fn seed_offset_of(&self, parent: Option<&str>) -> u64 {
+        parent
+            .and_then(|p| self.get(p))
+            .map(|n| n.seed_offset)
+            .unwrap_or(0)
+    }
+
+    // ----- lookups --------------------------------------------------------
+
+    pub fn get(&self, name: &str) -> Option<&Node> {
+        self.nodes.iter().find(|n| n.name == name)
+    }
+
+    /// Stage-node roots (parent = None), in insertion order.
+    pub fn roots(&self) -> Vec<&Node> {
+        self.nodes
+            .iter()
+            .filter(|n| n.parent.is_none() && n.stage().is_some())
+            .collect()
+    }
+
+    /// Stage children of `name`, in insertion order.
+    pub fn children(&self, name: &str) -> Vec<&Node> {
+        self.nodes
+            .iter()
+            .filter(|n| n.parent.as_deref() == Some(name) && n.stage().is_some())
+            .collect()
+    }
+
+    /// Stage nodes with no stage children (the graph's leaves).
+    pub fn leaves(&self) -> Vec<&Node> {
+        self.nodes
+            .iter()
+            .filter(|n| n.stage().is_some() && self.children(&n.name).is_empty())
+            .collect()
+    }
+
+    pub fn stage_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.stage().is_some()).count()
+    }
+
+    /// Root→node chain of node names (inclusive).  Errors on orphan parents
+    /// and parent cycles — the primitive every validation walk reuses.
+    pub fn path(&self, name: &str) -> Result<Vec<&Node>, String> {
+        let mut chain = Vec::new();
+        let mut cur = self
+            .get(name)
+            .ok_or_else(|| format!("unknown node {name:?}"))?;
+        loop {
+            chain.push(cur);
+            if chain.len() > self.nodes.len() {
+                return Err(format!("cycle in parent edges through node {name:?}"));
+            }
+            match &cur.parent {
+                None => break,
+                Some(p) => {
+                    cur = self.get(p).ok_or_else(|| {
+                        format!("node {:?} references unknown parent {p:?} (orphan)", cur.name)
+                    })?;
+                }
+            }
+        }
+        chain.reverse();
+        Ok(chain)
+    }
+
+    /// The stage labels along a node's root path — `pretrain → prune(...) →
+    /// ...` — for human-facing rows.
+    pub fn path_labels(&self, name: &str) -> Vec<String> {
+        self.path(name)
+            .map(|p| p.iter().map(|n| n.label()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Does any strict descendant of `name` hold a `Reconstruct` stage?
+    /// (The executor snapshots reconstruction targets at prune nodes only
+    /// when one does.)
+    pub fn subtree_reconstructs(&self, name: &str) -> bool {
+        self.children(name).iter().any(|c| {
+            matches!(c.stage(), Some(Stage::Reconstruct { .. }))
+                || self.subtree_reconstructs(&c.name)
+        })
+    }
+
+    /// Content keys for every stage node: `base_key(cfg, seed+offset)`
+    /// pushed with each stage canonical along the root path.  Single source
+    /// of truth shared by the executor (artifact directories), `repro plan
+    /// show` (cache-hit status) and `repro gc` (reachability).
+    pub fn node_keys(
+        &self,
+        cfg: &ExperimentConfig,
+        seed: u64,
+    ) -> Result<BTreeMap<String, Key>, String> {
+        let mut keys = BTreeMap::new();
+        for node in &self.nodes {
+            if node.stage().is_none() {
+                continue;
+            }
+            let mut key = base_key(cfg, seed.wrapping_add(node.seed_offset));
+            for step in self.path(&node.name)? {
+                let stage = step
+                    .stage()
+                    .ok_or_else(|| format!("{:?} has an aggregate ancestor", node.name))?;
+                key = key.push(&stage.canonical());
+            }
+            keys.insert(node.name.clone(), key);
+        }
+        Ok(keys)
+    }
+
+    // ----- validation -----------------------------------------------------
+
+    /// Structural validation: duplicate names, orphan parents, parent
+    /// cycles, non-`Pretrain` roots (and mid-path `Pretrain`s), seed-offset
+    /// breaks along edges, aggregate references, and the linear stage-order
+    /// rules of [`Plan::validate`] applied to every root→leaf path.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.stage_count() == 0 {
+            return Err("graph has no stage nodes".to_string());
+        }
+        let mut seen = BTreeSet::new();
+        for n in &self.nodes {
+            if !seen.insert(n.name.as_str()) {
+                return Err(format!("duplicate node name {:?}", n.name));
+            }
+        }
+        for n in &self.nodes {
+            match &n.kind {
+                NodeKind::Stage(stage) => {
+                    // orphans + cycles surface through path()
+                    self.path(&n.name)?;
+                    if n.parent.is_none() && !matches!(stage, Stage::Pretrain) {
+                        return Err(format!(
+                            "root node {:?} must be a pretrain stage, got {}",
+                            n.name,
+                            stage.label()
+                        ));
+                    }
+                    if let Some(p) = &n.parent {
+                        let parent = self.get(p).expect("path() checked the parent");
+                        if parent.stage().is_none() {
+                            return Err(format!(
+                                "node {:?} cannot descend from aggregate {p:?}",
+                                n.name
+                            ));
+                        }
+                        if parent.seed_offset != n.seed_offset {
+                            return Err(format!(
+                                "node {:?} changes seed offset mid-path ({} -> {}); replicas \
+                                 must clone their whole root path",
+                                n.name, parent.seed_offset, n.seed_offset
+                            ));
+                        }
+                    }
+                }
+                NodeKind::Aggregate { over } => {
+                    if over.is_empty() {
+                        return Err(format!("aggregate {:?} reduces nothing", n.name));
+                    }
+                    for target in over {
+                        match self.get(target) {
+                            None => {
+                                return Err(format!(
+                                    "aggregate {:?} references unknown node {target:?}",
+                                    n.name
+                                ))
+                            }
+                            Some(t) if !matches!(t.stage(), Some(Stage::Eval { .. })) => {
+                                return Err(format!(
+                                    "aggregate {:?} must reduce eval nodes, {target:?} is {}",
+                                    n.name,
+                                    t.label()
+                                ))
+                            }
+                            Some(_) => {}
+                        }
+                    }
+                }
+            }
+        }
+        // every root→leaf path must be a valid linear plan
+        for leaf in self.leaves() {
+            let stages: Vec<Stage> = self
+                .path(&leaf.name)?
+                .iter()
+                .filter_map(|n| n.stage().cloned())
+                .collect();
+            Plan { name: format!("{}:{}", self.name, leaf.name), stages }
+                .validate()
+                .map_err(|e| format!("path to {:?}: {e}", leaf.name))?;
+        }
+        Ok(())
+    }
+
+    // ----- (de)serialization ----------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let nodes = self
+            .nodes
+            .iter()
+            .map(|n| {
+                let mut pairs = vec![("name", Json::Str(n.name.clone()))];
+                match &n.kind {
+                    NodeKind::Stage(s) => {
+                        if let Some(p) = &n.parent {
+                            pairs.push(("parent", Json::Str(p.clone())));
+                        }
+                        if n.seed_offset != 0 {
+                            pairs.push(("seed_offset", Json::Num(n.seed_offset as f64)));
+                        }
+                        pairs.push(("stage", s.to_json()));
+                    }
+                    NodeKind::Aggregate { over } => {
+                        pairs.push((
+                            "aggregate",
+                            Json::Arr(over.iter().map(|s| Json::Str(s.clone())).collect()),
+                        ));
+                    }
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("nodes", Json::Arr(nodes)),
+        ])
+    }
+
+    pub fn to_string_pretty(&self) -> String {
+        // one node per line keeps graph files diffable, like Plan files
+        let mut out = String::new();
+        out.push_str(&format!("{{\"name\":{},\n \"nodes\":[\n", Json::Str(self.name.clone())));
+        let j = self.to_json();
+        let arr = j.get("nodes").and_then(Json::as_arr).expect("just built");
+        for (i, nj) in arr.iter().enumerate() {
+            out.push_str("  ");
+            out.push_str(&nj.to_string());
+            if i + 1 < arr.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("]}\n");
+        out
+    }
+
+    pub fn from_json(j: &Json) -> Result<PlanGraph, String> {
+        let name = j.str_or("name", "graph");
+        let nodes = j
+            .get("nodes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "plan graph needs a \"nodes\" array".to_string())?;
+        let mut g = PlanGraph::new(&name);
+        for nj in nodes {
+            let nname = nj
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("graph node missing \"name\": {nj}"))?
+                .to_string();
+            if let Some(over) = nj.get("aggregate") {
+                let over = over
+                    .as_arr()
+                    .ok_or_else(|| format!("node {nname:?}: \"aggregate\" must be an array"))?
+                    .iter()
+                    .map(|v| {
+                        v.as_str()
+                            .map(str::to_string)
+                            .ok_or_else(|| format!("node {nname:?}: aggregate entries are names"))
+                    })
+                    .collect::<Result<Vec<_>, String>>()?;
+                g.aggregate_node(&nname, over);
+            } else {
+                let stage = Stage::from_json(
+                    nj.get("stage")
+                        .ok_or_else(|| format!("node {nname:?} needs \"stage\" or \"aggregate\""))?,
+                )?;
+                let parent = nj.get("parent").and_then(Json::as_str).map(str::to_string);
+                let seed_offset = match nj.get("seed_offset") {
+                    None => 0,
+                    Some(v) => {
+                        let f = v
+                            .as_f64()
+                            .filter(|f| *f >= 0.0 && f.fract() == 0.0)
+                            .ok_or_else(|| {
+                                format!("node {nname:?}: bad \"seed_offset\" {v}")
+                            })?;
+                        f as u64
+                    }
+                };
+                g.stage_node_at(&nname, parent.as_deref(), stage, seed_offset);
+            }
+        }
+        Ok(g)
+    }
+
+    pub fn from_text(s: &str) -> Result<PlanGraph, String> {
+        let j = Json::parse(s).map_err(|e| e.to_string())?;
+        PlanGraph::from_json(&j)
+    }
+
+    pub fn from_file(path: &Path) -> Result<PlanGraph> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading graph {path:?}"))?;
+        PlanGraph::from_text(&text).map_err(|e| anyhow::anyhow!("parsing graph {path:?}: {e}"))
+    }
+
+    // ----- rendering ------------------------------------------------------
+
+    /// ASCII tree of the stage forest plus aggregate rows; `annotate`
+    /// supplies a per-node suffix (`repro plan show` injects cache status).
+    pub fn render_tree(&self, annotate: &dyn Fn(&Node) -> String) -> String {
+        let mut out = String::new();
+        let roots = self.roots();
+        for (i, root) in roots.iter().enumerate() {
+            self.render_subtree(root, "", i + 1 == roots.len(), annotate, &mut out);
+        }
+        for n in self.nodes.iter().filter(|n| n.stage().is_none()) {
+            if let NodeKind::Aggregate { over } = &n.kind {
+                out.push_str(&format!("◇ {}  over {} {}\n", n.name, over.len(), annotate(n)));
+            }
+        }
+        out
+    }
+
+    fn render_subtree(
+        &self,
+        node: &Node,
+        prefix: &str,
+        last: bool,
+        annotate: &dyn Fn(&Node) -> String,
+        out: &mut String,
+    ) {
+        let tee = if last { "└─ " } else { "├─ " };
+        out.push_str(&format!(
+            "{prefix}{tee}{} [{}] {}\n",
+            node.name,
+            node.label(),
+            annotate(node)
+        ));
+        let child_prefix = format!("{prefix}{}", if last { "   " } else { "│  " });
+        let kids = self.children(&node.name);
+        for (i, kid) in kids.iter().enumerate() {
+            self.render_subtree(kid, &child_prefix, i + 1 == kids.len(), annotate, out);
+        }
+    }
+
+    /// Graphviz DOT of the full graph (aggregate edges dashed).
+    pub fn render_dot(&self, annotate: &dyn Fn(&Node) -> String) -> String {
+        let quote = |s: &str| format!("\"{}\"", s.replace('"', "\\\""));
+        let mut out = format!(
+            "digraph {} {{\n  rankdir=TB;\n  node [shape=box];\n",
+            quote(&self.name)
+        );
+        for n in &self.nodes {
+            let note = annotate(n);
+            let label = if note.is_empty() {
+                format!("{}\\n{}", n.name, n.label())
+            } else {
+                format!("{}\\n{} {}", n.name, n.label(), note)
+            };
+            let shape = if n.stage().is_none() { ", shape=diamond" } else { "" };
+            out.push_str(&format!("  {} [label={}{shape}];\n", quote(&n.name), quote(&label)));
+        }
+        for n in &self.nodes {
+            match &n.kind {
+                NodeKind::Stage(_) => {
+                    if let Some(p) = &n.parent {
+                        out.push_str(&format!("  {} -> {};\n", quote(p), quote(&n.name)));
+                    }
+                }
+                NodeKind::Aggregate { over } => {
+                    for target in over {
+                        out.push_str(&format!(
+                            "  {} -> {} [style=dashed];\n",
+                            quote(target),
+                            quote(&n.name)
+                        ));
+                    }
+                }
+            }
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+/// A plan or a plan graph, as loaded from disk — `repro run --plan` accepts
+/// both (`"stages"` ⇒ linear, `"nodes"` ⇒ graph).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanOrGraph {
+    Linear(Plan),
+    Graph(PlanGraph),
+}
+
+impl PlanOrGraph {
+    pub fn from_file(path: &Path) -> Result<PlanOrGraph> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading plan {path:?}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing plan {path:?}: {e}"))?;
+        if j.get("nodes").is_some() {
+            PlanGraph::from_json(&j)
+                .map(PlanOrGraph::Graph)
+                .map_err(|e| anyhow::anyhow!("parsing graph {path:?}: {e}"))
+        } else {
+            Plan::from_json(&j)
+                .map(PlanOrGraph::Linear)
+                .map_err(|e| anyhow::anyhow!("parsing plan {path:?}: {e}"))
+        }
+    }
+
+    /// The graph to execute or key, whichever form was loaded.
+    pub fn graph(&self) -> PlanGraph {
+        match self {
+            PlanOrGraph::Linear(p) => p.to_graph(),
+            PlanOrGraph::Graph(g) => g.clone(),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        match self {
+            PlanOrGraph::Linear(p) => &p.name,
+            PlanOrGraph::Graph(g) => &g.name,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fluent builder.
+// ---------------------------------------------------------------------------
+
+/// Builds a [`PlanGraph`] by extending a *frontier* of current leaves: each
+/// combinator attaches to every frontier node, so a `stage` after a fork
+/// extends all branches, and nested forks form grids.
+#[derive(Debug, Clone)]
+pub struct GraphBuilder {
+    g: PlanGraph,
+    frontier: Vec<String>,
+    counter: usize,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str) -> GraphBuilder {
+        GraphBuilder { g: PlanGraph::new(name), frontier: Vec::new(), counter: 0 }
+    }
+
+    /// Deterministic auto-name: `n<counter>-<label>` (names never feed cache
+    /// keys, but determinism keeps parsed specs round-trippable).
+    fn auto_name(&mut self, label: &str) -> String {
+        self.counter += 1;
+        let slug: String = label
+            .chars()
+            .map(|c| if c.is_alphanumeric() || c == ':' || c == '.' || c == '%' { c } else { '-' })
+            .collect();
+        format!("n{}-{slug}", self.counter)
+    }
+
+    /// Current frontier leaves (the parse layer recurses through forks).
+    pub fn frontier(&self) -> Vec<String> {
+        self.frontier.clone()
+    }
+
+    pub fn set_frontier(&mut self, frontier: Vec<String>) {
+        self.frontier = frontier;
+    }
+
+    /// Append `stage` to every frontier leaf (or as the root when the graph
+    /// is empty).  Returns the new frontier implicitly.
+    pub fn stage(mut self, stage: Stage) -> GraphBuilder {
+        self.push_stage(&stage);
+        self
+    }
+
+    fn push_stage(&mut self, stage: &Stage) {
+        let parents: Vec<Option<String>> = if self.frontier.is_empty() {
+            vec![None]
+        } else {
+            self.frontier.iter().cloned().map(Some).collect()
+        };
+        let mut next = Vec::with_capacity(parents.len());
+        for parent in parents {
+            let name = self.auto_name(&stage.label());
+            self.g.stage_node(&name, parent.as_deref(), stage.clone());
+            next.push(name);
+        }
+        self.frontier = next;
+    }
+
+    // Plan-builder mirrors, so linear chains read the same in both APIs.
+
+    pub fn pretrain(self) -> GraphBuilder {
+        self.stage(Stage::Pretrain)
+    }
+    pub fn prune(self, criterion: Criterion, pattern: Pattern) -> GraphBuilder {
+        self.stage(Stage::Prune { criterion, pattern })
+    }
+    pub fn retrain(self, mode: Mode, steps: Option<u64>, lr: Option<f64>) -> GraphBuilder {
+        self.stage(Stage::Retrain { mode, steps, lr })
+    }
+    pub fn reconstruct(self, mode: ReconMode, steps: Option<u64>, lr: Option<f64>) -> GraphBuilder {
+        self.stage(Stage::Reconstruct { mode, steps, lr })
+    }
+    pub fn merge(self) -> GraphBuilder {
+        self.stage(Stage::Merge)
+    }
+    pub fn eval(self) -> GraphBuilder {
+        self.stage(Stage::Eval { tasks: true })
+    }
+    pub fn eval_ppl(self) -> GraphBuilder {
+        self.stage(Stage::Eval { tasks: false })
+    }
+    pub fn export(self, path: &str) -> GraphBuilder {
+        self.stage(Stage::Export { path: path.to_string() })
+    }
+
+    /// Fan out: attach each branch (a chain of stages) to every frontier
+    /// leaf; the new frontier is every branch's last node.
+    pub fn fork(mut self, branches: Vec<Vec<Stage>>) -> GraphBuilder {
+        assert!(!branches.is_empty(), "fork needs at least one branch");
+        let base = self.frontier.clone();
+        let mut next = Vec::new();
+        for branch in &branches {
+            assert!(!branch.is_empty(), "fork branches cannot be empty");
+            self.frontier = base.clone();
+            for stage in branch {
+                self.push_stage(stage);
+            }
+            next.extend(self.frontier.drain(..));
+        }
+        self.frontier = next;
+        self
+    }
+
+    /// Fan out over single stages: one branch per stage.
+    pub fn fork_over(self, stages: Vec<Stage>) -> GraphBuilder {
+        self.fork(stages.into_iter().map(|s| vec![s]).collect())
+    }
+
+    /// Fan out over unstructured sparsities with one prune criterion — the
+    /// PERP sweep staple (`fork_over(sparsities)` in the paper's shape).
+    pub fn fork_sparsities(self, criterion: Criterion, sparsities: &[f64]) -> GraphBuilder {
+        self.fork_over(
+            sparsities
+                .iter()
+                .map(|&f| Stage::Prune { criterion, pattern: Pattern::Unstructured(f) })
+                .collect(),
+        )
+    }
+
+    /// The criterion × mode grid: for each criterion a shared prune node,
+    /// under it one retrain branch per mode (+ a merge for the merging LoRA
+    /// variants).  Frontier becomes every cell's last node.
+    pub fn grid(mut self, criteria: &[(Criterion, Pattern)], modes: &[Mode]) -> GraphBuilder {
+        assert!(!criteria.is_empty() && !modes.is_empty(), "grid needs both axes");
+        let base = self.frontier.clone();
+        let mut next = Vec::new();
+        for &(criterion, pattern) in criteria {
+            self.frontier = base.clone();
+            self.push_stage(&Stage::Prune { criterion, pattern });
+            let pruned = self.frontier.clone();
+            for &mode in modes {
+                self.frontier = pruned.clone();
+                self.push_stage(&Stage::Retrain { mode, steps: None, lr: None });
+                if mode.is_lora() && mode != Mode::Lora {
+                    self.push_stage(&Stage::Merge);
+                }
+                next.extend(self.frontier.drain(..));
+            }
+        }
+        self.frontier = next;
+        self
+    }
+
+    /// Replicate every frontier leaf's whole root path once per extra seed
+    /// offset `1..n` (offset 0 keeps the original path).  Replica nodes are
+    /// suffixed `@s<i>`; shared prefixes are deduplicated, so two leaves
+    /// over one prefix still share their replicated prefix per seed.
+    pub fn replicate_seeds(self, n: u64) -> GraphBuilder {
+        self.try_replicate_seeds(n).expect("replicate_seeds")
+    }
+
+    /// Fallible [`GraphBuilder::replicate_seeds`] (the `--stages` parser
+    /// reports instead of panicking).
+    pub fn try_replicate_seeds(mut self, n: u64) -> Result<GraphBuilder, String> {
+        if n == 0 {
+            return Err("seeds(n) needs n >= 1".to_string());
+        }
+        let mut next = self.frontier.clone();
+        for leaf in self.frontier.clone() {
+            let chain: Vec<(String, Stage, u64)> = self
+                .g
+                .path(&leaf)?
+                .iter()
+                .map(|node| {
+                    (
+                        node.name.clone(),
+                        node.stage().cloned().expect("stage path"),
+                        node.seed_offset,
+                    )
+                })
+                .collect();
+            if chain.iter().any(|(_, _, off)| *off != 0) {
+                return Err("nested seeds(n) replication is not supported".to_string());
+            }
+            for i in 1..n {
+                let mut parent: Option<String> = None;
+                for (orig, stage, _) in &chain {
+                    let clone_name = format!("{orig}@s{i}");
+                    if self.g.get(&clone_name).is_none() {
+                        self.g
+                            .stage_node_at(&clone_name, parent.as_deref(), stage.clone(), i);
+                    }
+                    parent = Some(clone_name);
+                }
+                next.push(parent.expect("non-empty path"));
+            }
+        }
+        self.frontier = next;
+        Ok(self)
+    }
+
+    /// Aggregate the current frontier (which must be eval leaves) into one
+    /// mean±std row.  The frontier is left untouched — aggregates are
+    /// terminal reducers, not pipeline stages.
+    pub fn aggregate(mut self, name: &str) -> GraphBuilder {
+        let over = self.frontier.clone();
+        self.g.aggregate_node(name, over);
+        self
+    }
+
+    pub fn build(self) -> PlanGraph {
+        self.g
+    }
+}
+
+impl Plan {
+    /// A linear plan *is* a single-path graph: chain the stages under
+    /// auto-names.  Keys are unchanged — they never depend on node names.
+    pub fn to_graph(&self) -> PlanGraph {
+        let mut g = PlanGraph::new(&self.name);
+        let mut parent: Option<String> = None;
+        for (i, stage) in self.stages.iter().enumerate() {
+            let name = format!("s{}", i + 1);
+            g.stage_node(&name, parent.as_deref(), stage.clone());
+            parent = Some(name);
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fan() -> PlanGraph {
+        GraphBuilder::new("fan")
+            .pretrain()
+            .fork_sparsities(Criterion::Magnitude, &[0.5, 0.7, 0.9])
+            .eval_ppl()
+            .aggregate("mean")
+            .build()
+    }
+
+    #[test]
+    fn builder_fans_out_and_shares_the_root() {
+        let g = fan();
+        g.validate().unwrap();
+        assert_eq!(g.roots().len(), 1);
+        assert_eq!(g.stage_count(), 1 + 3 + 3);
+        assert_eq!(g.leaves().len(), 3);
+        let agg = g.get("mean").unwrap();
+        assert_eq!(
+            agg.kind,
+            NodeKind::Aggregate {
+                over: g.leaves().iter().map(|n| n.name.clone()).collect()
+            }
+        );
+        // all prunes hang off the single pretrain root
+        let root = g.roots()[0].name.clone();
+        assert_eq!(g.children(&root).len(), 3);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let g = fan();
+        let g2 = PlanGraph::from_text(&g.to_json().to_string()).unwrap();
+        assert_eq!(g, g2);
+        let g3 = PlanGraph::from_text(&g.to_string_pretty()).unwrap();
+        assert_eq!(g, g3);
+    }
+
+    #[test]
+    fn seed_replication_clones_whole_paths() {
+        let g = GraphBuilder::new("seeds")
+            .pretrain()
+            .prune(Criterion::Magnitude, Pattern::Unstructured(0.5))
+            .eval_ppl()
+            .replicate_seeds(3)
+            .aggregate("mean")
+            .build();
+        g.validate().unwrap();
+        // 3 seeds × (pretrain + prune + eval)
+        assert_eq!(g.stage_count(), 9);
+        assert_eq!(g.roots().len(), 3);
+        let offsets: BTreeSet<u64> = g.roots().iter().map(|r| r.seed_offset).collect();
+        assert_eq!(offsets, BTreeSet::from([0, 1, 2]));
+        // replicas keep the linear chain keys of their own seed
+        let cfg = ExperimentConfig::quick("gpt-nano");
+        let keys = g.node_keys(&cfg, 0).unwrap();
+        let linear = Plan::new("lin")
+            .pretrain()
+            .prune(Criterion::Magnitude, Pattern::Unstructured(0.5))
+            .eval_ppl();
+        for (leaf, seed) in g.leaves().iter().zip([0u64, 1, 2]) {
+            let mut k = base_key(&cfg, seed);
+            for s in &linear.stages {
+                k = k.push(&s.canonical());
+            }
+            assert_eq!(keys[&leaf.name], k, "leaf {} seed {seed}", leaf.name);
+        }
+    }
+
+    #[test]
+    fn linear_plan_keys_survive_graph_conversion() {
+        let plan = Plan::new("lin")
+            .pretrain()
+            .prune(Criterion::Wanda, Pattern::Unstructured(0.5))
+            .retrain(Mode::MaskLora, Some(10), None)
+            .merge()
+            .eval();
+        let g = plan.to_graph();
+        g.validate().unwrap();
+        let cfg = ExperimentConfig::quick("gpt-nano");
+        let keys = g.node_keys(&cfg, 7).unwrap();
+        let mut k = base_key(&cfg, 7);
+        for (i, s) in plan.stages.iter().enumerate() {
+            k = k.push(&s.canonical());
+            assert_eq!(keys[&format!("s{}", i + 1)], k, "stage {i}");
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_graphs() {
+        // cycle (hand-built: a → b → a)
+        let mut g = PlanGraph::new("cycle");
+        g.stage_node("a", Some("b"), Stage::Pretrain);
+        g.stage_node("b", Some("a"), Stage::Merge);
+        assert!(g.validate().unwrap_err().contains("cycle"));
+
+        // orphan parent
+        let mut g = PlanGraph::new("orphan");
+        g.stage_node("root", None, Stage::Pretrain);
+        g.stage_node("child", Some("ghost"), Stage::Eval { tasks: false });
+        assert!(g.validate().unwrap_err().contains("orphan"));
+
+        // duplicate name
+        let mut g = PlanGraph::new("dup");
+        g.stage_node("x", None, Stage::Pretrain);
+        g.stage_node("x", None, Stage::Pretrain);
+        assert!(g.validate().unwrap_err().contains("duplicate"));
+
+        // root must be pretrain
+        let mut g = PlanGraph::new("root");
+        g.stage_node(
+            "p",
+            None,
+            Stage::Prune { criterion: Criterion::Magnitude, pattern: Pattern::Unstructured(0.5) },
+        );
+        assert!(g.validate().unwrap_err().contains("pretrain"));
+
+        // mid-path pretrain (linear rules per path)
+        let mut g = PlanGraph::new("mid");
+        g.stage_node("a", None, Stage::Pretrain);
+        g.stage_node("b", Some("a"), Stage::Pretrain);
+        assert!(g.validate().unwrap_err().contains("first"));
+
+        // aggregate over a non-eval node
+        let mut g = PlanGraph::new("agg");
+        g.stage_node("a", None, Stage::Pretrain);
+        g.aggregate_node("m", vec!["a".into()]);
+        assert!(g.validate().unwrap_err().contains("eval"));
+
+        // aggregate over a missing node
+        let mut g = PlanGraph::new("agg2");
+        g.stage_node("a", None, Stage::Pretrain);
+        g.aggregate_node("m", vec!["nope".into()]);
+        assert!(g.validate().unwrap_err().contains("unknown"));
+
+        // seed offset breaks mid-path
+        let mut g = PlanGraph::new("seed");
+        g.stage_node_at("a", None, Stage::Pretrain, 0);
+        g.stage_node_at("b", Some("a"), Stage::Eval { tasks: false }, 1);
+        assert!(g.validate().unwrap_err().contains("seed offset"));
+    }
+
+    #[test]
+    fn grid_shares_prunes_across_modes() {
+        let g = GraphBuilder::new("grid")
+            .pretrain()
+            .grid(
+                &[
+                    (Criterion::Magnitude, Pattern::Unstructured(0.5)),
+                    (Criterion::Wanda, Pattern::Unstructured(0.5)),
+                ],
+                &[Mode::Biases, Mode::MaskLora],
+            )
+            .eval_ppl()
+            .build();
+        g.validate().unwrap();
+        // 1 pretrain + 2 prunes + 2×(biases retrain) + 2×(masklora retrain+merge) + 4 evals
+        assert_eq!(g.stage_count(), 1 + 2 + 2 + 4 + 4);
+        let root = g.roots()[0].name.clone();
+        assert_eq!(g.children(&root).len(), 2, "one prune per criterion");
+        for prune in g.children(&root) {
+            assert_eq!(g.children(&prune.name).len(), 2, "one retrain per mode");
+        }
+    }
+}

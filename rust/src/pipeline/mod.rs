@@ -1,31 +1,46 @@
 //! Declarative pipeline plans: compose PERP's verbs instead of hard-wiring
-//! one sequence per subcommand.
+//! one sequence per subcommand — and fan them out as DAGs when cells share
+//! a prefix.
 //!
-//! * [`plan`] — the typed [`Stage`] enum and the [`Plan`] container with a
-//!   builder API, JSON (de)serialization over [`crate::util::json`] and
-//!   structural validation (`merge` needs a pending LoRA retrain, `retrain`
-//!   needs masks, ...).
+//! * [`plan`] — the typed [`Stage`] enum and the linear [`Plan`] container
+//!   with a builder API, JSON (de)serialization over [`crate::util::json`]
+//!   and structural validation (`merge` needs a pending LoRA retrain,
+//!   `retrain` needs masks, ...).
+//! * [`graph`] — [`PlanGraph`]: named stage nodes with parent edges, fluent
+//!   fan-out combinators ([`GraphBuilder`]: `fork_over`, `fork_sparsities`,
+//!   `grid`, `replicate_seeds`) and [`Aggregate`](graph::NodeKind::Aggregate)
+//!   nodes reducing leaf evals into mean±std rows.  A linear `Plan` is a
+//!   single-path graph ([`Plan::to_graph`]); keys are root-path chains, so
+//!   both forms share one cache.
 //! * [`parse`] — the inline `--stages` grammar:
-//!   `"prune(wanda,0.5)|retrain(masklora,100)|merge|eval"`.
+//!   `"prune(wanda,0.5)|retrain(masklora,100)|merge|eval"`, plus the
+//!   fan-out forms `fork[a|b;c|d]`, `seeds(n)` and `agg`.
 //! * [`cachekey`] — content addressing: every stage is keyed by an FNV-1a
 //!   chain over (model, experiment config, seed, all upstream stage specs),
 //!   so two plans sharing a prefix share its artifacts.
-//! * [`executor`] — drives a [`Plan`] over a [`crate::coordinator::Session`],
-//!   persisting per-stage artifacts (`state.ptns`, `masks.ptns`, adapters,
-//!   `meta.json`) under `<cache>/plan/<key>/`.  Re-running a plan loads
-//!   completed stages instead of recomputing them; `--force` ignores the
-//!   stage cache (the keyed dense pretrain checkpoint is still reused — it
-//!   is deterministic in the key inputs).
+//! * [`executor`] — the topological scheduler: walks a [`PlanGraph`] over
+//!   [`crate::coordinator::Session`]s, executing every shared prefix once
+//!   per run (session snapshots at fork points) and persisting per-stage
+//!   artifacts (`state.ptns`, `masks.ptns`, adapters, `meta.json`) under
+//!   `<cache>/plan/<key>/`.  Re-running a plan loads completed stages
+//!   instead of recomputing them — fully-cached subtrees never even
+//!   materialise a session; `--force` ignores the stage cache (the keyed
+//!   dense pretrain checkpoint is still reused — it is deterministic in the
+//!   key inputs).
 //!
 //! The CLI subcommands (`repro pretrain/prune/retrain/reconstruct/eval`) are
 //! thin shims over 1–3 distinctive stages each, `repro run` executes
-//! arbitrary plan files, and the sweep registry generates plans for its
-//! cells — one execution path for everything.
+//! arbitrary plan or graph files, and the sweep registry generates plan
+//! graphs for its tables — one execution path for everything.
 
 pub mod cachekey;
 pub mod executor;
+pub mod graph;
 pub mod parse;
 pub mod plan;
 
-pub use executor::{EvalMetrics, Executor, RunReport, StageReport};
+pub use executor::{
+    AggregateRow, EvalMetrics, Executor, GraphReport, NodeReport, RunReport, StageReport,
+};
+pub use graph::{GraphBuilder, Node, NodeKind, PlanGraph, PlanOrGraph};
 pub use plan::{Plan, Stage};

@@ -1,9 +1,13 @@
 //! The inline `--stages` grammar.
 //!
 //! ```text
-//! spec    := stage ('|' stage)*
+//! spec    := elem ('|' elem)*
+//! elem    := stage | fork | seeds | agg
 //! stage   := name [ '(' arg (',' arg)* ')' ]
 //! name    := pretrain | prune | retrain | reconstruct | merge | eval | export
+//! fork    := 'fork[' spec (';' spec)* ']'
+//! seeds   := 'seeds(' n ')'
+//! agg     := 'agg' [ '(' name ')' ]
 //! ```
 //!
 //! Examples:
@@ -11,25 +15,65 @@
 //! ```text
 //! prune(wanda,0.5)|retrain(masklora,100)|merge|eval
 //! prune(magnitude,2:4)|reconstruct(full)|eval(ppl)|export(results/m.ptns)
+//! fork[prune(magnitude,0.5);prune(magnitude,0.7)]|retrain(masklora)|merge|eval(ppl)
+//! prune(magnitude,0.5)|eval(ppl)|seeds(3)|agg
 //! ```
 //!
 //! Positional args mirror the JSON fields: `prune(criterion,sparsity)`,
 //! `retrain(mode[,steps[,lr]])`, `reconstruct(mode[,steps[,lr]])`,
 //! `eval([ppl|tasks])`, `export(path)`.  A leading `pretrain` is implied
 //! when absent — every plan starts from the (cached) dense model.
+//!
+//! **Fan-out forms** build a [`PlanGraph`] instead of a linear [`Plan`]:
+//! `fork[...]` runs each `;`-separated branch off the current leaves (every
+//! stage after the `]` extends *all* branches — nesting forks forms grids),
+//! `seeds(n)` replicates the whole path so far across `n` consecutive
+//! seeds, and `agg` reduces the current eval leaves into one mean±std row.
+//! [`spec_is_graph`] tells the CLI which parser applies.
 
 use crate::peft::Mode;
 use crate::pruning::{Criterion, Pattern};
 
+use super::graph::{GraphBuilder, PlanGraph};
 use super::plan::{recon_mode_parse, Plan, Stage};
+
+/// Split on `sep` at bracket depth zero (`[]` and `()` both nest), so fork
+/// branches and stage arguments never leak separators.
+fn split_top(s: &str, sep: char) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '[' | '(' => depth += 1,
+            ']' | ')' => depth = depth.saturating_sub(1),
+            c if c == sep && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts.into_iter().map(str::trim).filter(|p| !p.is_empty()).collect()
+}
+
+/// Does this spec use the fan-out forms (`fork[...]`, `seeds(n)`, `agg`)?
+/// If so it parses with [`parse_graph`]; otherwise [`parse_plan`] keeps the
+/// exact linear behaviour (and output) of the original grammar.
+pub fn spec_is_graph(spec: &str) -> bool {
+    split_top(spec, '|')
+        .iter()
+        .any(|e| is_agg_elem(e) || e.starts_with("fork[") || e.starts_with("seeds("))
+}
+
+fn is_agg_elem(e: &str) -> bool {
+    e == "agg" || e == "aggregate" || e.starts_with("agg(") || e.starts_with("aggregate(")
+}
 
 /// Parse one `|`-separated stage spec into stages (no implied pretrain).
 pub fn parse_stages(spec: &str) -> Result<Vec<Stage>, String> {
-    spec.split('|')
-        .map(str::trim)
-        .filter(|s| !s.is_empty())
-        .map(parse_stage)
-        .collect()
+    split_top(spec, '|').into_iter().map(parse_stage).collect()
 }
 
 /// Parse a spec into a runnable [`Plan`], prepending `pretrain` if absent.
@@ -42,6 +86,70 @@ pub fn parse_plan(name: &str, spec: &str) -> Result<Plan, String> {
         stages.insert(0, Stage::Pretrain);
     }
     Ok(Plan { name: name.to_string(), stages })
+}
+
+/// Parse a fan-out spec into a [`PlanGraph`], prepending `pretrain` if the
+/// first element isn't one.  Works for linear specs too (a single-path
+/// graph), but the CLI routes those through [`parse_plan`] for byte-stable
+/// linear reports.
+pub fn parse_graph(name: &str, spec: &str) -> Result<PlanGraph, String> {
+    let elems = split_top(spec, '|');
+    if elems.is_empty() {
+        return Err("empty stage spec".to_string());
+    }
+    let mut b = GraphBuilder::new(name);
+    if elems[0] != "pretrain" {
+        b = b.stage(Stage::Pretrain);
+    }
+    b = apply_seq(b, &elems)?;
+    Ok(b.build())
+}
+
+/// Apply a `|`-sequence of elements to the builder's current frontier.
+fn apply_seq(mut b: GraphBuilder, elems: &[&str]) -> Result<GraphBuilder, String> {
+    for elem in elems {
+        if let Some(body) = elem.strip_prefix("fork[") {
+            let body = body
+                .strip_suffix(']')
+                .ok_or_else(|| format!("malformed fork {elem:?} (missing closing bracket)"))?;
+            let branches = split_top(body, ';');
+            if branches.is_empty() {
+                return Err(format!("fork {elem:?} has no branches"));
+            }
+            let base = b.frontier();
+            let mut next = Vec::new();
+            for branch in branches {
+                b.set_frontier(base.clone());
+                b = apply_seq(b, &split_top(branch, '|'))?;
+                next.extend(b.frontier());
+            }
+            b.set_frontier(next);
+        } else if let Some(body) = elem.strip_prefix("seeds(") {
+            let n: u64 = body
+                .strip_suffix(')')
+                .and_then(|v| v.trim().parse().ok())
+                .ok_or_else(|| format!("seeds expects an integer, got {elem:?}"))?;
+            b = b.try_replicate_seeds(n)?;
+        } else if is_agg_elem(elem) {
+            let body = elem
+                .strip_prefix("aggregate(")
+                .or_else(|| elem.strip_prefix("agg("))
+                .and_then(|r| r.strip_suffix(')'));
+            let name = match body {
+                Some(n) if !n.trim().is_empty() => n.trim().to_string(),
+                // auto-name from the first leaf it reduces — frontiers are
+                // unique node sets, so distinct aggs never collide
+                _ => format!(
+                    "agg:{}",
+                    b.frontier().first().cloned().unwrap_or_default()
+                ),
+            };
+            b = b.aggregate(&name);
+        } else {
+            b = b.stage(parse_stage(elem)?);
+        }
+    }
+    Ok(b)
 }
 
 fn parse_stage(s: &str) -> Result<Stage, String> {
@@ -221,5 +329,91 @@ mod tests {
         let p = parse_plan("x", "prune(wanda,0.7)|retrain(scalelora,5,0.01)|merge|eval").unwrap();
         let p2 = Plan::from_text(&p.to_json().to_string()).unwrap();
         assert_eq!(p, p2);
+    }
+
+    #[test]
+    fn graph_detection_is_precise() {
+        assert!(!spec_is_graph("prune(wanda,0.5)|retrain(masklora)|merge|eval"));
+        assert!(spec_is_graph("fork[prune(magnitude,0.5);prune(magnitude,0.7)]|eval(ppl)"));
+        assert!(spec_is_graph("prune|eval(ppl)|seeds(3)"));
+        assert!(spec_is_graph("prune|eval(ppl)|agg"));
+        assert!(spec_is_graph("prune|eval(ppl)|agg(mean)"));
+        assert!(spec_is_graph("prune|eval(ppl)|aggregate(mean)"));
+        // a path argument containing the words is NOT a graph form
+        assert!(!spec_is_graph("prune|eval(ppl)|export(out/fork[x].ptns)"));
+    }
+
+    #[test]
+    fn fork_spec_builds_a_fan() {
+        let g = parse_graph(
+            "fan",
+            "fork[prune(magnitude,0.5);prune(magnitude,0.7);prune(magnitude,0.9)]|eval(ppl)",
+        )
+        .unwrap();
+        g.validate().unwrap();
+        assert_eq!(g.roots().len(), 1, "one shared pretrain root");
+        assert_eq!(g.stage_count(), 1 + 3 + 3);
+        let root = g.roots()[0].name.clone();
+        assert_eq!(g.children(&root).len(), 3);
+        // each prune gets its own eval leaf
+        assert_eq!(g.leaves().len(), 3);
+        for leaf in g.leaves() {
+            assert_eq!(leaf.label(), "eval(ppl)");
+        }
+    }
+
+    #[test]
+    fn fork_branches_may_be_chains_and_nest() {
+        let g = parse_graph(
+            "grid",
+            "prune(magnitude,0.5)|fork[retrain(biases)|eval(ppl);retrain(masklora)|merge|eval(ppl)]",
+        )
+        .unwrap();
+        g.validate().unwrap();
+        // pretrain + prune + (retrain,eval) + (retrain,merge,eval)
+        assert_eq!(g.stage_count(), 1 + 1 + 2 + 3);
+        assert_eq!(g.leaves().len(), 2);
+
+        // nested fork: 2 prunes × 2 modes = 4 leaves
+        let g = parse_graph(
+            "nested",
+            "fork[prune(magnitude,0.5);prune(magnitude,0.7)]|fork[retrain(biases);retrain(ln)]|eval(ppl)",
+        )
+        .unwrap();
+        g.validate().unwrap();
+        assert_eq!(g.leaves().len(), 4);
+    }
+
+    #[test]
+    fn seeds_and_agg_forms_parse_and_roundtrip() {
+        let g = parse_graph("seeded", "prune(magnitude,0.5)|eval(ppl)|seeds(3)|agg(mean)").unwrap();
+        g.validate().unwrap();
+        assert_eq!(g.stage_count(), 3 * 3, "3 seeds × (pretrain|prune|eval)");
+        assert_eq!(g.roots().len(), 3);
+        let agg = g.get("mean").expect("named aggregate");
+        match &agg.kind {
+            crate::pipeline::NodeKind::Aggregate { over } => assert_eq!(over.len(), 3),
+            other => panic!("expected aggregate, got {other:?}"),
+        }
+        // the long form names an aggregate too
+        let g_long =
+            parse_graph("seeded", "prune(magnitude,0.5)|eval(ppl)|seeds(3)|aggregate(mean)")
+                .unwrap();
+        assert_eq!(g, g_long);
+        // graph JSON round-trip preserves the parsed structure exactly
+        let g2 = PlanGraph::from_text(&g.to_json().to_string()).unwrap();
+        assert_eq!(g, g2);
+        let g3 = PlanGraph::from_text(&g.to_string_pretty()).unwrap();
+        assert_eq!(g, g3);
+    }
+
+    #[test]
+    fn graph_spec_errors_are_clean() {
+        assert!(parse_graph("x", "fork[prune(magnitude,0.5)|eval(ppl)").is_err());
+        assert!(parse_graph("x", "prune|eval(ppl)|seeds(zero)").is_err());
+        assert!(parse_graph("x", "prune|eval(ppl)|seeds(0)").is_err());
+        assert!(parse_graph("x", "fork[]|eval(ppl)").is_err());
+        // nested seeds replication is rejected, not silently mangled
+        assert!(parse_graph("x", "prune|eval(ppl)|seeds(2)|seeds(2)").is_err());
     }
 }

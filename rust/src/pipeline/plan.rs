@@ -35,7 +35,10 @@ pub enum Stage {
     Merge,
     /// Test perplexity (+ the zero-shot suite when `tasks`).
     Eval { tasks: bool },
-    /// Save the current weights as a `.ptns` checkpoint (always executed).
+    /// Save the current weights as a `.ptns` checkpoint.  Idempotent: when
+    /// the target file already holds the exact bytes this node last wrote
+    /// (recorded as a content fingerprint), the write is skipped and
+    /// reported as a cache hit.
     Export { path: String },
 }
 

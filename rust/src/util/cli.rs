@@ -22,14 +22,19 @@ impl ArgError {
 #[derive(Debug, Clone)]
 pub struct Args {
     pub subcommand: Option<String>,
+    /// positionals after the subcommand (`repro plan show <file>`); any the
+    /// dispatcher never reads surface as errors in [`Args::finish`]
+    positionals: Vec<String>,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
     consumed: std::cell::RefCell<Vec<String>>,
+    consumed_pos: std::cell::Cell<usize>,
 }
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args, ArgError> {
         let mut subcommand = None;
+        let mut positionals = Vec::new();
         let mut opts = BTreeMap::new();
         let mut flags = Vec::new();
         let mut i = 0;
@@ -47,11 +52,18 @@ impl Args {
             } else if subcommand.is_none() {
                 subcommand = Some(a.clone());
             } else {
-                return Err(ArgError(format!("unexpected positional argument {a:?}")));
+                positionals.push(a.clone());
             }
             i += 1;
         }
-        Ok(Args { subcommand, opts, flags, consumed: Default::default() })
+        Ok(Args {
+            subcommand,
+            positionals,
+            opts,
+            flags,
+            consumed: Default::default(),
+            consumed_pos: Default::default(),
+        })
     }
 
     pub fn from_env() -> Result<Args, ArgError> {
@@ -120,13 +132,26 @@ impl Args {
             .collect()
     }
 
-    /// Error on any option/flag that no accessor ever looked at.
+    /// The `i`-th positional after the subcommand, if present.  Reading
+    /// index `i` marks positions `0..=i` as consumed for [`Args::finish`].
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.consumed_pos.set(self.consumed_pos.get().max(i + 1));
+        self.positionals.get(i).map(String::as_str)
+    }
+
+    /// Error on any option/flag/positional that no accessor ever looked at.
     pub fn finish(&self) -> Result<(), ArgError> {
         let seen = self.consumed.borrow();
         for k in self.opts.keys().chain(self.flags.iter()) {
             if !seen.iter().any(|s| s == k) {
                 return Err(ArgError(format!("unknown argument --{k}")));
             }
+        }
+        if self.positionals.len() > self.consumed_pos.get() {
+            return Err(ArgError(format!(
+                "unexpected positional argument {:?}",
+                self.positionals[self.consumed_pos.get()]
+            )));
         }
         Ok(())
     }
@@ -204,8 +229,17 @@ mod tests {
     }
 
     #[test]
-    fn rejects_extra_positional() {
-        let v: Vec<String> = ["a", "b"].iter().map(|s| s.to_string()).collect();
-        assert!(Args::parse(&v).is_err());
+    fn positionals_consumed_or_rejected() {
+        // unread positionals surface at finish(), like unknown options
+        let a = args("a b");
+        assert!(a.finish().is_err());
+        // read positionals are fine, and --flags around them still parse
+        let a = args("plan show examples/plans/x.json --dot");
+        assert_eq!(a.subcommand.as_deref(), Some("plan"));
+        assert_eq!(a.pos(0), Some("show"));
+        assert_eq!(a.pos(1), Some("examples/plans/x.json"));
+        assert_eq!(a.pos(2), None);
+        assert!(a.flag("dot"));
+        a.finish().unwrap();
     }
 }

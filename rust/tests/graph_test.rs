@@ -1,0 +1,256 @@
+//! Integration tests for plan graphs: fork fan-out shares its prefix within
+//! one run (asserted via executor exec counts), resumed graphs execute
+//! nothing, seed replication is bitwise-identical to manual single-seed
+//! runs, and the fork grammar round-trips through JSON.
+//!
+//! Shares the on-disk dense checkpoint cache with `pipeline_test.rs` /
+//! `plan_test.rs` (same model / pretrain steps / data seed); each test
+//! varies `retrain_steps` slightly so its *plan* stage keys never collide
+//! with a concurrently running test.
+
+use perp::config::ExperimentConfig;
+use perp::pipeline::parse::parse_graph;
+use perp::pipeline::{Executor, GraphBuilder, Plan};
+use perp::pruning::{Criterion, Pattern};
+use perp::runtime::{Backend, NativeBackend};
+
+fn rt() -> NativeBackend {
+    NativeBackend::new()
+}
+
+/// Same pretraining shape as pipeline_test.rs (shared dense checkpoint);
+/// `retrain_steps` doubles as a per-test cache namespace.
+fn cfg(retrain_steps: u64) -> ExperimentConfig {
+    let mut c = ExperimentConfig::quick("gpt-nano");
+    c.pretrain_steps = 400;
+    c.retrain_steps = retrain_steps;
+    c.recon_steps = 6;
+    c.calib_seqs = 8;
+    c.items_per_task = 6;
+    c.eval_batches = 2;
+    c
+}
+
+fn cache_dir() -> std::path::PathBuf {
+    std::env::temp_dir().join("perp_itest_cache")
+}
+
+#[test]
+fn fork_executes_the_shared_prefix_once_per_run() {
+    let rt = rt();
+    let dir = cache_dir();
+    let ex = Executor::new(&rt, cfg(21), dir.clone(), 0).quiet(true);
+    let sparsities = [0.5, 0.7, 0.9];
+    let g = GraphBuilder::new("fan")
+        .pretrain()
+        .fork_sparsities(Criterion::Magnitude, &sparsities)
+        .eval_ppl()
+        .build();
+
+    // wipe this graph's exact stage dirs so the run is a full compute
+    let probe = ex.run_graph(&g).unwrap();
+    for nr in &probe.nodes {
+        std::fs::remove_dir_all(dir.join("plan").join(&nr.rep.key)).ok();
+    }
+
+    let first = ex.run_graph(&g).unwrap();
+    assert_eq!(first.nodes.len(), 1 + 3 + 3, "pretrain + 3 prunes + 3 evals");
+    assert_eq!(first.computed(), 7, "wiped graph recomputes everything");
+    // the fork's whole point: the shared pretrain prefix runs exactly once
+    // even though three branches hang off it
+    assert_eq!(first.computed_labeled("pretrain"), 1);
+    assert_eq!(first.computed_labeled("prune"), 3);
+    assert_eq!(first.computed_labeled("eval"), 3);
+
+    // per-branch metrics exist and differ across sparsities
+    let evals: Vec<f64> = first
+        .nodes
+        .iter()
+        .filter_map(|n| n.rep.metrics.as_ref().map(|m| m.ppl))
+        .collect();
+    assert_eq!(evals.len(), 3);
+    assert!(evals.iter().all(|p| p.is_finite()));
+
+    // resume: zero computed nodes AND zero backend executions
+    let execs_before = rt.exec_count();
+    let second = ex.run_graph(&g).unwrap();
+    assert_eq!(second.computed(), 0, "resumed graph loads every node");
+    assert_eq!(
+        rt.exec_count(),
+        execs_before,
+        "a resumed graph must not execute any backend graph"
+    );
+    for (a, b) in first.nodes.iter().zip(&second.nodes) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.rep.key, b.rep.key);
+    }
+
+    // key compatibility both ways: the equivalent linear plans hit the
+    // graph-written cache entries unchanged (PR 3 chains == graph chains)
+    for &sp in &sparsities {
+        let plan = Plan::new("lin")
+            .pretrain()
+            .prune(Criterion::Magnitude, Pattern::Unstructured(sp))
+            .eval_ppl();
+        let rep = ex.run(&plan).unwrap();
+        assert!(
+            rep.stages.iter().all(|s| s.cache_hit),
+            "linear plan at sparsity {sp} must hit the graph's cache: {rep:?}"
+        );
+    }
+}
+
+#[test]
+fn seed_replication_matches_manual_single_seed_runs_bitwise() {
+    let rt = rt();
+    // fresh cache dirs: the graph must COMPUTE its replicas and the manual
+    // runs must compute theirs — shared dirs would make the comparison a
+    // trivial cache read-back
+    let graph_dir = std::env::temp_dir().join("perp_graph_seed_test_graph");
+    let manual_dir = std::env::temp_dir().join("perp_graph_seed_test_manual");
+    std::fs::remove_dir_all(&graph_dir).ok();
+    std::fs::remove_dir_all(&manual_dir).ok();
+
+    let mut c = cfg(22);
+    c.pretrain_steps = 120; // three pretrains below — keep the test cheap
+    let g = GraphBuilder::new("seeded")
+        .pretrain()
+        .prune(Criterion::Magnitude, Pattern::Unstructured(0.6))
+        .eval_ppl()
+        .replicate_seeds(2)
+        .aggregate("mean")
+        .build();
+    let ex = Executor::new(&rt, c.clone(), graph_dir.clone(), 0).quiet(true);
+    let report = ex.run_graph(&g).unwrap();
+    assert_eq!(report.nodes.len(), 6, "2 seeds × (pretrain|prune|eval)");
+
+    // replica leaves in seed order
+    let mut replica_ppl: Vec<(u64, f64)> = report
+        .nodes
+        .iter()
+        .filter_map(|n| n.rep.metrics.as_ref().map(|m| (n.seed, m.ppl)))
+        .collect();
+    replica_ppl.sort_by_key(|(seed, _)| *seed);
+    assert_eq!(replica_ppl.len(), 2);
+    assert_eq!(replica_ppl[0].0, 0);
+    assert_eq!(replica_ppl[1].0, 1);
+    assert_ne!(
+        replica_ppl[0].1, replica_ppl[1].1,
+        "different seeds pretrain different weights"
+    );
+
+    // each replica is bitwise-identical to a manual single-seed linear run
+    let plan = Plan::new("manual")
+        .pretrain()
+        .prune(Criterion::Magnitude, Pattern::Unstructured(0.6))
+        .eval_ppl();
+    for &(seed, graph_ppl) in &replica_ppl {
+        let manual = Executor::new(&rt, c.clone(), manual_dir.clone(), seed)
+            .quiet(true)
+            .run(&plan)
+            .unwrap();
+        let manual_ppl = manual.last_metrics().expect("eval ran").ppl;
+        assert!(
+            graph_ppl == manual_ppl,
+            "seed {seed}: replica ppl {graph_ppl} != manual ppl {manual_ppl}"
+        );
+    }
+
+    // the aggregate row is the exact mean±std of the replica metrics
+    let agg = report.aggregate("mean").expect("aggregate row");
+    let want_mean = (replica_ppl[0].1 + replica_ppl[1].1) / 2.0;
+    assert!((agg.ppl.mean - want_mean).abs() < 1e-12, "{} vs {want_mean}", agg.ppl.mean);
+    assert_eq!(agg.ppl.n, 2);
+    assert!(agg.ppl.std > 0.0);
+
+    std::fs::remove_dir_all(&graph_dir).ok();
+    std::fs::remove_dir_all(&manual_dir).ok();
+}
+
+#[test]
+fn forked_branches_match_their_linear_equivalents() {
+    // a fork after prune must produce the same metrics as running each
+    // branch as its own linear plan — the snapshot at the fork point leaks
+    // nothing between branches
+    let rt = rt();
+    let dir = cache_dir();
+    let c = cfg(23);
+    let ex = Executor::new(&rt, c.clone(), dir.clone(), 0).quiet(true);
+    let g = parse_graph(
+        "branchy",
+        "prune(magnitude,0.5)|fork[eval(ppl);retrain(biases,9,0.001)|eval(ppl)]",
+    )
+    .unwrap();
+
+    let probe = ex.run_graph(&g).unwrap();
+    for nr in &probe.nodes {
+        std::fs::remove_dir_all(dir.join("plan").join(&nr.rep.key)).ok();
+    }
+    let report = ex.run_graph(&g).unwrap();
+    assert_eq!(report.computed_labeled("prune"), 1, "one prune feeds both branches");
+
+    // fresh-dir linear equivalents
+    let lin_dir = std::env::temp_dir().join("perp_graph_branch_test");
+    std::fs::remove_dir_all(&lin_dir).ok();
+    let lex = Executor::new(&rt, c, lin_dir.clone(), 0).quiet(true);
+    let raw = lex
+        .run(&Plan::new("raw")
+            .pretrain()
+            .prune(Criterion::Magnitude, Pattern::Unstructured(0.5))
+            .eval_ppl())
+        .unwrap();
+    let retrained = lex
+        .run(&Plan::new("rt")
+            .pretrain()
+            .prune(Criterion::Magnitude, Pattern::Unstructured(0.5))
+            .retrain(perp::peft::Mode::Biases, Some(9), Some(0.001))
+            .eval_ppl())
+        .unwrap();
+
+    let graph_ppls: Vec<f64> = report
+        .nodes
+        .iter()
+        .filter_map(|n| n.rep.metrics.as_ref().map(|m| m.ppl))
+        .collect();
+    let raw_ppl = raw.last_metrics().unwrap().ppl;
+    let rt_ppl = retrained.last_metrics().unwrap().ppl;
+    assert!(
+        graph_ppls.contains(&raw_ppl),
+        "raw branch {graph_ppls:?} must contain linear {raw_ppl}"
+    );
+    assert!(
+        graph_ppls.contains(&rt_ppl),
+        "retrained branch {graph_ppls:?} must contain linear {rt_ppl}"
+    );
+    std::fs::remove_dir_all(&lin_dir).ok();
+}
+
+#[test]
+fn fork_grammar_roundtrips_and_validates() {
+    let g = parse_graph(
+        "rt",
+        "fork[prune(magnitude,0.5);prune(wanda,0.7)]|retrain(masklora,5)|merge|eval(ppl)|seeds(2)|agg",
+    )
+    .unwrap();
+    g.validate().unwrap();
+    // 2 seeds × (pretrain + 2×(prune+retrain+merge+eval))
+    assert_eq!(g.stage_count(), 2 * (1 + 2 * 4));
+    assert_eq!(g.roots().len(), 2);
+    assert_eq!(g.leaves().len(), 4);
+
+    let text = g.to_string_pretty();
+    let g2 = perp::pipeline::PlanGraph::from_text(&text).unwrap();
+    assert_eq!(g, g2, "graph JSON round-trip must be lossless");
+    g2.validate().unwrap();
+
+    // the aggregate reduces all four seed-replicated eval leaves
+    let agg = g
+        .nodes
+        .iter()
+        .find_map(|n| match &n.kind {
+            perp::pipeline::NodeKind::Aggregate { over } => Some(over.clone()),
+            _ => None,
+        })
+        .expect("aggregate node");
+    assert_eq!(agg.len(), 4);
+}
