@@ -62,6 +62,9 @@ pub struct ExpContext<'rt> {
     pub rt: &'rt dyn Backend,
     pub cfg: ExperimentConfig,
     pub cache_dir: PathBuf,
+    /// concurrent plan-graph nodes for every sweep this context drives
+    /// (`--jobs`/`PERP_JOBS`; 1 = serial walk)
+    pub jobs: usize,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -75,7 +78,14 @@ pub struct CellResult {
 
 impl<'rt> ExpContext<'rt> {
     pub fn new(rt: &'rt dyn Backend, cfg: ExperimentConfig, cache_dir: PathBuf) -> Self {
-        ExpContext { rt, cfg, cache_dir }
+        ExpContext { rt, cfg, cache_dir, jobs: 1 }
+    }
+
+    /// Set the plan-graph worker count for every sweep run through this
+    /// context (builder-style, like the executor's own `jobs`).
+    pub fn jobs(mut self, jobs: usize) -> Self {
+        self.jobs = jobs.max(1);
+        self
     }
 
     /// A session holding converged dense weights (cached on disk).  The key
@@ -210,6 +220,7 @@ impl<'rt> ExpContext<'rt> {
             self.cfg.seeds[0],
         )
         .quiet(true)
+        .jobs(self.jobs)
     }
 }
 

@@ -82,6 +82,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "serve" => serve(args),
         "bench-serve" => bench_serve(args),
         "bench-kernels" => bench_kernels(args),
+        "bench-graph" => bench_graph(args),
         "sweep" => sweep_cmd(args),
         "tables" => tables(args),
         other => bail!("unknown subcommand {other:?}\n{HELP}"),
@@ -106,6 +107,7 @@ subcommands:
   serve         HTTP inference server with KV-cache decoding + dynamic batching
   bench-serve   load-generate against the batcher; write results/bench_serve.json
   bench-kernels dense/masked/CSR matmul A/B; write results/bench_kernels.json
+  bench-graph   serial vs parallel plan-graph A/B; write results/bench_graph.json
   sweep         regenerate one paper table/figure (--exp <id>)
   tables        regenerate every table/figure
 
@@ -117,6 +119,8 @@ common flags:
   --out <dir>          results + checkpoint cache                    [./results]
   --seed <n>           experiment seed                               [0]
   --threads <n>        rayon kernel threads (or PERP_THREADS)        [all cores]
+  --jobs <j>           auto | K — concurrent plan-graph nodes; N in-flight
+                       nodes split the kernel thread budget (or PERP_JOBS) [1]
   --layout <l>         sparse weight layout: auto | dense | masked | csr  [auto]
                        (auto compresses layers at/above the crossover
                        sparsity; PERP_CSR_CROSSOVER overrides, default 0.75)
@@ -165,6 +169,11 @@ bench-kernels flags:
   --shapes <list>      NxKxM GEMM shapes     [256x256x256,512x512x512,1024x256x1024]
   --sparsities <list>  fractions pruned      [0.5,0.7,0.9,0.95,0.99]
   --out <dir>          JSON output directory [./results]
+
+bench-graph flags:
+  --jobs <j>           worker count for the parallel phase  [auto, min 2]
+  (plus the common model/profile/backend/out flags; the timed sweeps run
+   in a scratch cache under --out and are removed afterwards)
 ";
 
 struct Env {
@@ -172,6 +181,8 @@ struct Env {
     cfg: ExperimentConfig,
     out: PathBuf,
     seed: u64,
+    /// concurrent plan-graph nodes (`--jobs`/`PERP_JOBS`; 1 = serial walk)
+    jobs: usize,
 }
 
 fn common(args: &Args) -> Result<Env> {
@@ -205,17 +216,23 @@ fn common(args: &Args) -> Result<Env> {
     let rt = open_backend(kind, &artifacts)?;
     let out = PathBuf::from(args.str("out", "results"));
     std::fs::create_dir_all(&out).ok();
-    Ok(Env { rt, cfg, out, seed: args.u64("seed", 0)? })
+    // --jobs wins over PERP_JOBS; `auto` sizes to the kernel thread budget
+    let jobs = match args.opt_jobs()? {
+        Some(j) => j.resolve(),
+        None => perp::util::threads::jobs_from_env().map_or(1, |j| j.resolve()),
+    };
+    Ok(Env { rt, cfg, out, seed: args.u64("seed", 0)?, jobs })
 }
 
 fn ctx(env: &Env) -> ExpContext<'_> {
-    ExpContext::new(env.rt.as_ref(), env.cfg.clone(), env.out.join("cache"))
+    ExpContext::new(env.rt.as_ref(), env.cfg.clone(), env.out.join("cache")).jobs(env.jobs)
 }
 
 /// Plan executor over this environment — shims run quiet so their output
 /// stays byte-compatible with the pre-plan subcommands.
 fn executor(env: &Env) -> Executor<'_> {
     Executor::new(env.rt.as_ref(), env.cfg.clone(), env.out.join("cache"), env.seed)
+        .jobs(env.jobs)
 }
 
 fn info(args: &Args) -> Result<()> {
@@ -489,9 +506,13 @@ fn gc_cmd(args: &Args) -> Result<()> {
         for e in entries.flatten() {
             let p = e.path();
             let name = e.file_name().to_string_lossy().to_string();
-            // stage dirs are 16-hex keys; leave anything else alone
+            // stage dirs are 16-hex keys; `.tmp-*` staging dirs are
+            // leftovers from killed runs (a live run renames its staging
+            // dir away before finishing) — both are reclaimable, anything
+            // else is left alone
             let is_key = name.len() == 16 && name.chars().all(|c| c.is_ascii_hexdigit());
-            if p.is_dir() && is_key && !reachable.contains(&name) {
+            let is_stale_tmp = name.starts_with(".tmp-");
+            if p.is_dir() && (is_stale_tmp || (is_key && !reachable.contains(&name))) {
                 let size = dir_size(&p);
                 unreachable.push((p, size));
             }
@@ -1034,6 +1055,138 @@ fn bench_kernels(args: &Args) -> Result<()> {
     ]);
     std::fs::create_dir_all(&out_dir).ok();
     let path = out_dir.join("bench_kernels.json");
+    std::fs::write(&path, report.to_string()).with_context(|| format!("writing {path:?}"))?;
+    println!("wrote {path:?}");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Plan-graph scheduler benchmark: serial vs parallel wall-clock.
+// ---------------------------------------------------------------------------
+
+/// `repro bench-graph` — time representative multi-fork sweep graphs with
+/// `--jobs 1` vs `--jobs N` on a scratch stage cache and record the
+/// trajectory in `results/bench_graph.json`, so the scheduler win is a
+/// tracked number across PRs instead of eyeballed.  Dense checkpoints are
+/// warmed untimed (both phases share the keyed dense cache); every timed
+/// run starts from a wiped plan cache so it computes all nodes.
+fn bench_graph(args: &Args) -> Result<()> {
+    use perp::pipeline::GraphBuilder;
+    use perp::util::bench::Table;
+
+    let env = common(args)?;
+    args.finish()?;
+    let budget = perp::util::threads::budget();
+    // a meaningful A/B needs ≥ 2 workers: --jobs/PERP_JOBS wins, otherwise
+    // one worker per budget thread (min 2 even on a single-core box)
+    let jobs = if env.jobs > 1 { env.jobs } else { budget.max(2) };
+
+    let sweeps: Vec<(&str, perp::pipeline::PlanGraph)> = vec![
+        (
+            "sparsity_fan",
+            GraphBuilder::new("sparsity_fan")
+                .pretrain()
+                .fork_sparsities(Criterion::Magnitude, &[0.5, 0.7, 0.9])
+                .eval_ppl()
+                .build(),
+        ),
+        (
+            "seeded_prune",
+            GraphBuilder::new("seeded_prune")
+                .pretrain()
+                .prune(Criterion::Magnitude, Pattern::Unstructured(0.6))
+                .eval_ppl()
+                .replicate_seeds(2)
+                .aggregate("mean")
+                .build(),
+        ),
+    ];
+
+    let cache = env.out.join("cache-bench-graph");
+    let plan_cache = cache.join("plan");
+    let warm = ExpContext::new(env.rt.as_ref(), env.cfg.clone(), cache.clone());
+    for seed in [env.seed, env.seed.wrapping_add(1)] {
+        warm.dense_session(seed)?;
+    }
+
+    struct Row {
+        sweep: String,
+        nodes: usize,
+        serial_s: f64,
+        parallel_s: f64,
+    }
+    impl Row {
+        fn speedup(&self) -> f64 {
+            self.serial_s / self.parallel_s.max(1e-9)
+        }
+    }
+    let mut rows: Vec<Row> = Vec::new();
+    for (name, g) in &sweeps {
+        let time_run = |jobs: usize| -> Result<f64> {
+            std::fs::remove_dir_all(&plan_cache).ok();
+            let ex = Executor::new(env.rt.as_ref(), env.cfg.clone(), cache.clone(), env.seed)
+                .quiet(true)
+                .jobs(jobs);
+            let t0 = Instant::now();
+            let report = ex.run_graph(g)?;
+            anyhow::ensure!(
+                report.computed() == g.stage_count(),
+                "bench run must compute every node ({} of {} computed)",
+                report.computed(),
+                g.stage_count()
+            );
+            Ok(t0.elapsed().as_secs_f64())
+        };
+        let serial_s = time_run(1)?;
+        let parallel_s = time_run(jobs)?;
+        println!(
+            "[bench-graph] {name}: serial {serial_s:.2}s, parallel {parallel_s:.2}s ({jobs} jobs)"
+        );
+        rows.push(Row {
+            sweep: name.to_string(),
+            nodes: g.stage_count(),
+            serial_s,
+            parallel_s,
+        });
+    }
+    std::fs::remove_dir_all(&cache).ok();
+
+    let mut t = Table::new(
+        &format!("plan-graph scheduler: serial vs {jobs} jobs ({budget} kernel threads)"),
+        &["sweep", "nodes", "serial", "parallel", "speedup"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.sweep.clone(),
+            format!("{}", r.nodes),
+            format!("{:.2}s", r.serial_s),
+            format!("{:.2}s", r.parallel_s),
+            format!("{:.2}x", r.speedup()),
+        ]);
+    }
+    t.print();
+
+    let results = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("sweep", Json::Str(r.sweep.clone())),
+                    ("nodes", Json::Num(r.nodes as f64)),
+                    ("serial_s", Json::Num(r.serial_s)),
+                    ("parallel_s", Json::Num(r.parallel_s)),
+                    ("speedup", Json::Num(r.speedup())),
+                ])
+            })
+            .collect(),
+    );
+    let report = Json::obj(vec![
+        ("bench", Json::Str("graph".to_string())),
+        ("model", Json::Str(env.cfg.model.clone())),
+        ("jobs", Json::Num(jobs as f64)),
+        ("threads_budget", Json::Num(budget as f64)),
+        ("results", results),
+    ]);
+    let path = env.out.join("bench_graph.json");
     std::fs::write(&path, report.to_string()).with_context(|| format!("writing {path:?}"))?;
     println!("wrote {path:?}");
     Ok(())

@@ -1,6 +1,6 @@
-//! The plan executor: a topological scheduler that drives a [`PlanGraph`]
+//! The plan executor: a ready-set scheduler that drives a [`PlanGraph`]
 //! (or a linear [`Plan`] — a single-path graph) over [`Session`]s with
-//! content-addressed artifact caching.
+//! content-addressed artifact caching, serially or across a worker pool.
 //!
 //! Every stage node writes its outputs under `<cache>/plan/<key>/` where
 //! `key` is the FNV chain of (model, config, seed + node seed-offset,
@@ -16,8 +16,7 @@
 //! | eval        | `metrics.json` (ppl, acc, per-task, sparsity)     |
 //! | export      | `meta.json` (content fingerprint of the written checkpoint) |
 //!
-//! **Fan-out.**  The scheduler walks each root's subtree depth-first.  A
-//! node with several children executes once; before descending into each
+//! **Fan-out.**  A node with several children executes once; before each
 //! child but the last, the branch state (session weights/masks/adapters +
 //! pending reconstruction targets) is snapshotted via
 //! [`ExpContext::clone_session`] — so a fork over `{0.5, 0.7, 0.9}`
@@ -26,21 +25,37 @@
 //! node is already complete are reported from their artifacts without even
 //! materialising a session (zero backend executions on resume).
 //!
+//! **Parallelism.**  With `jobs > 1` the walk becomes a ready-set
+//! scheduler: a frontier of nodes whose parents are complete is drained by
+//! `jobs` scoped worker threads ([`std::thread::scope`]); each worker runs
+//! a chain depth-first (queueing all but one live child at every fork) so
+//! sibling subtrees execute concurrently.  Every in-flight node claims a
+//! slice of the kernel thread budget ([`threads::acquire_share`]), so N
+//! concurrent nodes split the rayon/CSR parallelism instead of
+//! oversubscribing N×`PERP_THREADS`.  Concurrency never breaks the cache:
+//! duplicate in-flight stage keys are serialized behind a per-key lock
+//! (the second branch waits, then reads the artifacts as a hit), stage
+//! dirs land via temp-dir + atomic rename (a killed run never leaves a
+//! partial dir that later scans as complete), and [`GraphReport`] nodes
+//! are ordered by the canonical depth-first topological order — not
+//! completion order — so resumes, `computed_labeled` counts, and sweep
+//! tables are byte-stable whatever `--jobs` was.  Capture runs (linear
+//! shims that need the final session back) always walk serially.
+//!
 //! **Export idempotence.**  `export` records the FNV fingerprint of the
 //! bytes it wrote; when the same node would write the identical checkpoint
 //! over an unchanged file it skips the write and reports a cache hit.
 //! Deleting or editing the target file (or `--force`) re-exports.
 //!
 //! `meta.json` / `metrics.json` are written last, so their presence marks a
-//! complete stage; `.ptns` writes are temp-file + rename (see
-//! [`crate::tensor::io`]), so a crashed run never leaves a half-artifact
-//! that passes the completeness check.  `force` ignores the stage cache;
-//! the keyed dense pretrain checkpoint is still honoured because it is
-//! deterministic in exactly the inputs the key hashes.
+//! complete stage within the staging dir; the whole dir then renames into
+//! its content-addressed path in one step.  `force` ignores the stage
+//! cache; the keyed dense pretrain checkpoint is still honoured because it
+//! is deterministic in exactly the inputs the key hashes.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -56,6 +71,7 @@ use crate::pruning::MaskSet;
 use crate::runtime::{Backend, ModelManifest};
 use crate::tensor::{io, Tensor};
 use crate::util::json::Json;
+use crate::util::threads;
 
 use super::cachekey::{fnv1a_hex, Key};
 use super::graph::{Node, NodeKind, PlanGraph};
@@ -132,8 +148,9 @@ pub struct AggregateRow {
     pub sparsity: MeanStd,
 }
 
-/// Outcome of a graph run: every stage node in execution order plus the
-/// aggregate reductions.
+/// Outcome of a graph run: every stage node in canonical topological
+/// (depth-first) order — never completion order, so parallel and serial
+/// runs report identically — plus the aggregate reductions.
 #[derive(Debug, Clone)]
 pub struct GraphReport {
     pub graph: String,
@@ -254,21 +271,72 @@ pub fn file_fnv(path: &Path) -> Option<String> {
 
 /// Everything one branch of the walk owns: the live session plus the dense
 /// weights snapshotted at the most recent prune (Eq. 1 reconstruction
-/// targets — `Rc` so forking a branch shares rather than copies them).
+/// targets — `Arc` so forking a branch shares rather than copies them,
+/// across worker threads).
 struct Branch<'rt> {
     session: Session<'rt>,
-    pre_prune: Option<Rc<BTreeMap<String, Tensor>>>,
+    pre_prune: Option<Arc<BTreeMap<String, Tensor>>>,
 }
 
-/// Per-run bookkeeping threaded through the walk.
+/// A unit of scheduler work: a stage node plus the branch state flowing
+/// into it (roots start from none).
+type Task<'rt> = (String, Option<Branch<'rt>>);
+
+/// Shared frontier of the parallel walk, behind one mutex: ready tasks
+/// plus the count of tasks claimed-or-queued but not yet finished.
+struct SchedState<'rt> {
+    queue: VecDeque<Task<'rt>>,
+    /// tasks queued or in flight; 0 ⇒ the run has drained, workers exit
+    outstanding: usize,
+    abort: bool,
+}
+
+/// Serialized progress sink: node completions (from any worker) go through
+/// one lock, so lines never interleave mid-row and the `[done/total]`
+/// counter is consistent.  `--quiet` drops everything.
+struct Progress {
+    quiet: bool,
+    total: usize,
+    done: Mutex<usize>,
+}
+
+impl Progress {
+    fn new(total: usize, quiet: bool) -> Progress {
+        Progress { quiet, total, done: Mutex::new(0) }
+    }
+
+    fn emit(&self, node: &str, rep: &StageReport) {
+        if self.quiet {
+            return;
+        }
+        let mut done = self.done.lock().unwrap_or_else(|p| p.into_inner());
+        *done += 1;
+        let status = if rep.cache_hit {
+            "cache hit".to_string()
+        } else {
+            format!("done in {:.2}s", rep.wall_s)
+        };
+        println!(
+            "[{}/{}] {:<14} {:<28} {} (key {})",
+            *done,
+            self.total,
+            node,
+            rep.label,
+            status,
+            &rep.key[..10]
+        );
+    }
+}
+
+/// Per-run bookkeeping threaded through the serial walk.
 struct GraphRun<'a, 'rt> {
     g: &'a PlanGraph,
-    keys: BTreeMap<String, Key>,
+    keys: &'a BTreeMap<String, Key>,
     /// node name → whole-subtree-complete, scanned once at run start (an
     /// `Export` completeness check hashes its target file, so re-deriving
     /// this per walk step would re-read checkpoints O(depth) times)
-    complete: BTreeMap<String, bool>,
-    total: usize,
+    complete: &'a BTreeMap<String, bool>,
+    progress: &'a Progress,
     reports: Vec<NodeReport>,
     /// leaf node whose final session the caller wants back (linear shims);
     /// set ⇒ the cached-subtree fast path is disabled so the session always
@@ -289,6 +357,11 @@ pub struct Executor<'rt> {
     seed: u64,
     force: bool,
     quiet: bool,
+    /// worker threads for concurrent graph nodes (1 = the serial DFS walk)
+    jobs: usize,
+    /// per-stage-key execution locks: two branches needing the same node
+    /// key execute it once — the second waits, then reads a cache hit
+    key_locks: Mutex<BTreeMap<String, Arc<Mutex<()>>>>,
 }
 
 impl<'rt> Executor<'rt> {
@@ -298,7 +371,16 @@ impl<'rt> Executor<'rt> {
         cache_dir: PathBuf,
         seed: u64,
     ) -> Executor<'rt> {
-        Executor { rt, cfg, cache_dir, seed, force: false, quiet: false }
+        Executor {
+            rt,
+            cfg,
+            cache_dir,
+            seed,
+            force: false,
+            quiet: false,
+            jobs: 1,
+            key_locks: Mutex::new(BTreeMap::new()),
+        }
     }
 
     /// Ignore completed stage artifacts and recompute everything.
@@ -310,6 +392,15 @@ impl<'rt> Executor<'rt> {
     /// Suppress per-stage progress lines (sweeps drive many small plans).
     pub fn quiet(mut self, quiet: bool) -> Self {
         self.quiet = quiet;
+        self
+    }
+
+    /// Concurrent graph nodes (`--jobs`).  1 keeps the serial depth-first
+    /// walk; N > 1 schedules ready subtrees over N workers which split the
+    /// kernel thread budget between them.  Reports, artifacts and metrics
+    /// are bitwise-identical either way.
+    pub fn jobs(mut self, jobs: usize) -> Self {
+        self.jobs = jobs.max(1);
         self
     }
 
@@ -366,29 +457,40 @@ impl<'rt> Executor<'rt> {
                 self.scan_complete(g, &keys, root, &mut complete);
             }
         }
-        let mut run = GraphRun {
-            g,
-            keys,
-            complete,
-            total: g.stage_count(),
-            reports: Vec::with_capacity(g.stage_count()),
-            capture,
-            captured: None,
-        };
-        for root in g.roots() {
-            if self.subtree_complete(&run, root) {
-                self.emit_cached_subtree(&mut run, root)?;
-            } else {
-                self.walk(&ctx, &mut run, root, None)?;
+        let progress = Progress::new(g.stage_count(), self.quiet);
+        let (mut reports, captured) = if self.jobs > 1 && capture.is_none() {
+            (self.parallel_walk(&ctx, g, &keys, &complete, &progress)?, None)
+        } else {
+            let mut run = GraphRun {
+                g,
+                keys: &keys,
+                complete: &complete,
+                progress: &progress,
+                reports: Vec::with_capacity(g.stage_count()),
+                capture,
+                captured: None,
+            };
+            for root in g.roots() {
+                if self.subtree_complete(run.complete, root) {
+                    self.emit_cached_subtree(g, &keys, &progress, root, &mut run.reports)?;
+                } else {
+                    self.walk(&ctx, &mut run, root, None)?;
+                }
             }
-        }
-        let aggregates = self.reduce_aggregates(g, &run.reports)?;
-        let report = GraphReport { graph: g.name.clone(), nodes: run.reports, aggregates };
-        Ok((report, run.captured))
+            (run.reports, run.captured)
+        };
+        // canonical topological order regardless of completion order, so
+        // serial and parallel runs (and resumes) report byte-identically
+        let order = dfs_order(g);
+        reports.sort_by_key(|r| order.get(&r.name).copied().unwrap_or(usize::MAX));
+        let aggregates = self.reduce_aggregates(g, &reports)?;
+        let report = GraphReport { graph: g.name.clone(), nodes: reports, aggregates };
+        Ok((report, captured))
     }
 
-    /// Execute `node`, then descend into its children, snapshotting the
-    /// branch before every child but the last (the last inherits it).
+    /// Serial walk: execute `node`, then descend into its children,
+    /// snapshotting the branch before every child but the last (the last
+    /// inherits it).
     fn walk(
         &self,
         ctx: &ExpContext<'rt>,
@@ -396,14 +498,16 @@ impl<'rt> Executor<'rt> {
         node: &Node,
         incoming: Option<Branch<'rt>>,
     ) -> Result<()> {
-        let branch = self.exec_node(ctx, run, node, incoming)?;
+        let (nrep, branch) = self.exec_node(ctx, run.g, run.keys, node, incoming)?;
+        run.progress.emit(&nrep.name, &nrep.rep);
+        run.reports.push(nrep);
         let g = run.g;
         // fully-cached child subtrees are reported from their artifacts
         // without a session — no snapshot, no backend work
         let mut live: Vec<&Node> = Vec::new();
         for child in g.children(&node.name) {
-            if self.subtree_complete(run, child) {
-                self.emit_cached_subtree(run, child)?;
+            if self.subtree_complete(run.complete, child) {
+                self.emit_cached_subtree(g, run.keys, run.progress, child, &mut run.reports)?;
             } else {
                 live.push(child);
             }
@@ -427,8 +531,168 @@ impl<'rt> Executor<'rt> {
         Ok(())
     }
 
+    /// Parallel walk: a ready-set scheduler.  Roots seed the frontier;
+    /// `jobs` scoped workers drain it, each running a chain depth-first
+    /// and queueing the other live children of every fork.
+    fn parallel_walk(
+        &self,
+        ctx: &ExpContext<'rt>,
+        g: &PlanGraph,
+        keys: &BTreeMap<String, Key>,
+        complete: &BTreeMap<String, bool>,
+        progress: &Progress,
+    ) -> Result<Vec<NodeReport>> {
+        let roots = g.roots();
+        let state = SchedState {
+            queue: roots.iter().map(|r| (r.name.clone(), None)).collect(),
+            outstanding: roots.len(),
+            abort: false,
+        };
+        let sched = (Mutex::new(state), Condvar::new());
+        let reports: Mutex<Vec<NodeReport>> = Mutex::new(Vec::with_capacity(g.stage_count()));
+        let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let workers = self.jobs.min(g.stage_count().max(1));
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| {
+                    self.worker(ctx, g, keys, complete, progress, &sched, &reports, &failure)
+                });
+            }
+        });
+        if let Some(e) = failure.into_inner().unwrap_or_else(|p| p.into_inner()) {
+            return Err(e);
+        }
+        Ok(reports.into_inner().unwrap_or_else(|p| p.into_inner()))
+    }
+
+    /// One scheduler worker: claim a ready task, run its chain depth-first
+    /// (queueing the other live children at forks), repeat until the run
+    /// drains or aborts.
+    #[allow(clippy::too_many_arguments)]
+    fn worker(
+        &self,
+        ctx: &ExpContext<'rt>,
+        g: &PlanGraph,
+        keys: &BTreeMap<String, Key>,
+        complete: &BTreeMap<String, bool>,
+        progress: &Progress,
+        sched: &(Mutex<SchedState<'rt>>, Condvar),
+        reports: &Mutex<Vec<NodeReport>>,
+        failure: &Mutex<Option<anyhow::Error>>,
+    ) {
+        let (lock, cv) = sched;
+        'outer: loop {
+            // claim the next ready task, or exit once the run has drained
+            let task = {
+                let mut st = lock.lock().unwrap_or_else(|p| p.into_inner());
+                loop {
+                    if st.abort || st.outstanding == 0 {
+                        break 'outer;
+                    }
+                    if let Some(t) = st.queue.pop_front() {
+                        break t;
+                    }
+                    st = cv.wait(st).unwrap_or_else(|p| p.into_inner());
+                }
+            };
+            let mut cur = Some(task);
+            while let Some((name, incoming)) = cur.take() {
+                if lock.lock().unwrap_or_else(|p| p.into_inner()).abort {
+                    break; // a sibling failed: drop this chain
+                }
+                let node = g.get(&name).expect("scheduler only queues known nodes");
+                match self.step(ctx, g, keys, complete, progress, node, incoming, reports) {
+                    Ok(mut children) => {
+                        let next = children.pop();
+                        let added = children.len();
+                        let mut st = lock.lock().unwrap_or_else(|p| p.into_inner());
+                        st.outstanding += added + usize::from(next.is_some());
+                        st.outstanding -= 1;
+                        st.queue.extend(children);
+                        if added > 0 || st.outstanding == 0 {
+                            cv.notify_all();
+                        }
+                        drop(st);
+                        cur = next;
+                    }
+                    Err(e) => {
+                        let mut f = failure.lock().unwrap_or_else(|p| p.into_inner());
+                        if f.is_none() {
+                            *f = Some(e);
+                        }
+                        drop(f);
+                        let mut st = lock.lock().unwrap_or_else(|p| p.into_inner());
+                        st.abort = true;
+                        st.queue.clear();
+                        cv.notify_all();
+                        break 'outer;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Process one scheduled node: either report its fully-cached subtree,
+    /// or execute it inside a kernel-budget share and hand back the live
+    /// children (each with its branch snapshot) for scheduling.
+    #[allow(clippy::too_many_arguments)]
+    fn step(
+        &self,
+        ctx: &ExpContext<'rt>,
+        g: &PlanGraph,
+        keys: &BTreeMap<String, Key>,
+        complete: &BTreeMap<String, bool>,
+        progress: &Progress,
+        node: &Node,
+        incoming: Option<Branch<'rt>>,
+        reports: &Mutex<Vec<NodeReport>>,
+    ) -> Result<Vec<Task<'rt>>> {
+        if self.subtree_complete(complete, node) {
+            let mut batch = Vec::new();
+            self.emit_cached_subtree(g, keys, progress, node, &mut batch)?;
+            reports.lock().unwrap_or_else(|p| p.into_inner()).extend(batch);
+            return Ok(Vec::new());
+        }
+        // N in-flight nodes split the kernel budget instead of each fanning
+        // over the whole global pool
+        let share = threads::acquire_share();
+        let (nrep, branch) = share.run(|| self.exec_node(ctx, g, keys, node, incoming))?;
+        progress.emit(&nrep.name, &nrep.rep);
+        reports.lock().unwrap_or_else(|p| p.into_inner()).push(nrep);
+
+        let mut cached = Vec::new();
+        let mut live: Vec<&Node> = Vec::new();
+        for child in g.children(&node.name) {
+            if self.subtree_complete(complete, child) {
+                self.emit_cached_subtree(g, keys, progress, child, &mut cached)?;
+            } else {
+                live.push(child);
+            }
+        }
+        if !cached.is_empty() {
+            reports.lock().unwrap_or_else(|p| p.into_inner()).extend(cached);
+        }
+        let n_live = live.len();
+        let mut branch = Some(branch);
+        let mut tasks: Vec<Task<'rt>> = Vec::with_capacity(n_live);
+        for (i, child) in live.into_iter().enumerate() {
+            let b = if i + 1 < n_live {
+                share.run(|| {
+                    self.snapshot(
+                        ctx,
+                        branch.as_ref().expect("branch moves only at the last child"),
+                    )
+                })?
+            } else {
+                branch.take().expect("last child takes the branch")
+            };
+            tasks.push((child.name.clone(), Some(b)));
+        }
+        Ok(tasks)
+    }
+
     /// Clone a branch at a fork point: weights, masks and any pending
-    /// adapters are copied; reconstruction targets are shared by `Rc`.
+    /// adapters are copied; reconstruction targets are shared by `Arc`.
     fn snapshot(&self, ctx: &ExpContext<'rt>, branch: &Branch<'rt>) -> Result<Branch<'rt>> {
         let mut s = ctx.clone_session(&branch.session)?;
         s.lora = branch.session.lora.clone();
@@ -466,25 +730,31 @@ impl<'rt> Executor<'rt> {
     /// Is every stage in `node`'s subtree complete on disk (as of the
     /// run-start scan)?  Empty map — `--force` or a capture run — means
     /// "walk everything".
-    fn subtree_complete(&self, run: &GraphRun<'_, 'rt>, node: &Node) -> bool {
-        run.complete.get(&node.name).copied().unwrap_or(false)
+    fn subtree_complete(&self, complete: &BTreeMap<String, bool>, node: &Node) -> bool {
+        complete.get(&node.name).copied().unwrap_or(false)
     }
 
     /// Report a fully-cached subtree from its artifacts alone.
-    fn emit_cached_subtree(&self, run: &mut GraphRun<'_, 'rt>, node: &Node) -> Result<()> {
-        let key = run.keys[&node.name];
+    fn emit_cached_subtree(
+        &self,
+        g: &PlanGraph,
+        keys: &BTreeMap<String, Key>,
+        progress: &Progress,
+        node: &Node,
+        out: &mut Vec<NodeReport>,
+    ) -> Result<()> {
+        let key = keys[&node.name];
         let stage = node.stage().expect("stage subtree");
         let rep = self.cached_report(stage, &key)?;
-        self.progress(run.reports.len() + 1, run.total, &rep);
-        run.reports.push(NodeReport {
+        progress.emit(&node.name, &rep);
+        out.push(NodeReport {
             name: node.name.clone(),
             parent: node.parent.clone(),
             seed: self.seed.wrapping_add(node.seed_offset),
             rep,
         });
-        let g = run.g;
         for child in g.children(&node.name) {
-            self.emit_cached_subtree(run, child)?;
+            self.emit_cached_subtree(g, keys, progress, child, out)?;
         }
         Ok(())
     }
@@ -510,20 +780,37 @@ impl<'rt> Executor<'rt> {
         Ok(rep)
     }
 
+    /// The per-run lock for one stage key.  Two nodes sharing a key (same
+    /// chain reached through different branches) serialize here: the first
+    /// computes and commits, the second's `hit()` then reads the artifacts.
+    fn key_lock(&self, key: &Key) -> Arc<Mutex<()>> {
+        let mut map = self.key_locks.lock().unwrap_or_else(|p| p.into_inner());
+        map.entry(key.hex()).or_default().clone()
+    }
+
     /// Execute one stage node over its branch, honouring the stage cache.
     fn exec_node(
         &self,
         ctx: &ExpContext<'rt>,
-        run: &mut GraphRun<'_, 'rt>,
+        g: &PlanGraph,
+        keys: &BTreeMap<String, Key>,
         node: &Node,
         incoming: Option<Branch<'rt>>,
-    ) -> Result<Branch<'rt>> {
+    ) -> Result<(NodeReport, Branch<'rt>)> {
         let stage = node.stage().expect("walk only visits stage nodes");
-        let key = run.keys[&node.name];
+        let key = keys[&node.name];
         let dir = stage_dir(&self.cache_dir, &key);
         let eff_seed = self.seed.wrapping_add(node.seed_offset);
+        // in-flight key dedup: a concurrent branch computing the same key
+        // finishes (and commits) before this hit-check runs
+        let key_lock = self.key_lock(&key);
+        let _key_guard = key_lock.lock().unwrap_or_else(|p| p.into_inner());
         let t0 = Instant::now();
         let mut rep = StageReport::new(stage.label(), &key);
+        // cache-miss artifacts stream into a private staging dir and land
+        // via one atomic rename — a killed or racing run never leaves a
+        // partial dir that later scans as complete
+        let tmp = tmp_stage_dir(&self.cache_dir, &key);
 
         let branch = match stage {
             Stage::Pretrain => {
@@ -533,7 +820,7 @@ impl<'rt> Executor<'rt> {
                 // an earlier run (or sweep) already converged this config
                 let session = ctx.dense_session(eff_seed)?;
                 if !rep.cache_hit {
-                    self.write_meta(&dir, stage, vec![])?;
+                    self.write_meta(&tmp, stage, vec![])?;
                 }
                 Branch { session, pre_prune: None }
             }
@@ -547,8 +834,8 @@ impl<'rt> Executor<'rt> {
                         // snapshot the reconstruction targets from the
                         // incoming weights — correct on both the hit and
                         // miss path, and only when a descendant needs them
-                        if run.g.subtree_reconstructs(&node.name) {
-                            branch.pre_prune = Some(Rc::new(
+                        if g.subtree_reconstructs(&node.name) {
+                            branch.pre_prune = Some(Arc::new(
                                 s.mm.prunable
                                     .iter()
                                     .map(|n| (n.clone(), s.params.get(n).clone()))
@@ -568,8 +855,8 @@ impl<'rt> Executor<'rt> {
                             s.prune(*criterion, *pattern, grams.as_ref())?;
                             let sparsity = s.masks.sparsity();
                             rep.sparsity = Some(sparsity);
-                            self.save_state(s, &dir)?;
-                            self.write_meta(&dir, stage, vec![("sparsity", Json::Num(sparsity))])?;
+                            self.save_state(s, &tmp)?;
+                            self.write_meta(&tmp, stage, vec![("sparsity", Json::Num(sparsity))])?;
                         }
                     }
                     Stage::Retrain { mode, steps, lr } => {
@@ -609,13 +896,13 @@ impl<'rt> Executor<'rt> {
                             rep.tps = Some(s.last_tps);
                             rep.trainable_pct = Some(pct);
                             rep.lr = Some(lr);
-                            self.save_state(s, &dir)?;
+                            self.save_state(s, &tmp)?;
                             if let Some((_, lora)) = &s.lora {
-                                io::save(&dir.join("lora.ptns"), &lora.tensors)
+                                io::save(&tmp.join("lora.ptns"), &lora.tensors)
                                     .context("saving adapters")?;
                             }
                             self.write_meta(
-                                &dir,
+                                &tmp,
                                 stage,
                                 vec![
                                     ("tps", Json::Num(s.last_tps)),
@@ -643,9 +930,9 @@ impl<'rt> Executor<'rt> {
                             let report =
                                 reconstruct::reconstruct(s, &target, &dense, *mode, steps, lr)?;
                             rep.mean_improvement = Some(report.mean_improvement());
-                            self.save_state(s, &dir)?;
+                            self.save_state(s, &tmp)?;
                             self.write_meta(
-                                &dir,
+                                &tmp,
                                 stage,
                                 vec![("mean_improvement", Json::Num(report.mean_improvement()))],
                             )?;
@@ -659,8 +946,8 @@ impl<'rt> Executor<'rt> {
                             s.lora = None;
                         } else {
                             s.merge_adapters()?;
-                            self.save_state(s, &dir)?;
-                            self.write_meta(&dir, stage, vec![])?;
+                            self.save_state(s, &tmp)?;
+                            self.write_meta(&tmp, stage, vec![])?;
                         }
                     }
                     Stage::Eval { tasks } => {
@@ -688,7 +975,7 @@ impl<'rt> Executor<'rt> {
                                 per_task,
                                 sparsity: s.params.weight_sparsity(&s.mm),
                             };
-                            write_metrics(&dir.join("metrics.json"), &m)?;
+                            write_metrics(&tmp.join("metrics.json"), &m)?;
                             rep.metrics = Some(m);
                         }
                     }
@@ -707,7 +994,7 @@ impl<'rt> Executor<'rt> {
                             let fingerprint =
                                 file_fnv(target).context("hashing exported checkpoint")?;
                             self.write_meta(
-                                &dir,
+                                &tmp,
                                 stage,
                                 vec![("content_fnv", Json::Str(fingerprint))],
                             )?;
@@ -718,34 +1005,17 @@ impl<'rt> Executor<'rt> {
             }
         };
 
+        if !rep.cache_hit {
+            commit_stage_dir(&tmp, &dir)?;
+        }
         rep.wall_s = t0.elapsed().as_secs_f64();
-        self.progress(run.reports.len() + 1, run.total, &rep);
-        run.reports.push(NodeReport {
+        let nrep = NodeReport {
             name: node.name.clone(),
             parent: node.parent.clone(),
             seed: eff_seed,
             rep,
-        });
-        Ok(branch)
-    }
-
-    fn progress(&self, idx: usize, total: usize, rep: &StageReport) {
-        if self.quiet {
-            return;
-        }
-        let status = if rep.cache_hit {
-            "cache hit".to_string()
-        } else {
-            format!("done in {:.2}s", rep.wall_s)
         };
-        println!(
-            "[{}/{}] {:<28} {} (key {})",
-            idx,
-            total,
-            rep.label,
-            status,
-            &rep.key[..10]
-        );
+        Ok((nrep, branch))
     }
 
     /// Reduce every aggregate node over the eval metrics its targets
@@ -840,11 +1110,66 @@ impl<'rt> Executor<'rt> {
         Ok(())
     }
 
-    /// Write `meta.json` — the completion marker, so it must come last.
+    /// Write `meta.json` — the completion marker, so it must come last
+    /// within the staging dir (the dir itself then lands atomically).
     fn write_meta(&self, dir: &Path, stage: &Stage, extra: Vec<(&str, Json)>) -> Result<()> {
         let mut pairs = vec![("stage", stage.to_json())];
         pairs.extend(extra);
         write_json(&dir.join("meta.json"), &Json::obj(pairs))
+    }
+}
+
+/// Canonical topological order of the stage nodes: roots in declaration
+/// order, children depth-first in insertion order.  This is the report
+/// order whatever schedule actually executed the nodes.
+fn dfs_order(g: &PlanGraph) -> BTreeMap<String, usize> {
+    fn visit(g: &PlanGraph, node: &Node, out: &mut BTreeMap<String, usize>) {
+        let idx = out.len();
+        out.insert(node.name.clone(), idx);
+        for child in g.children(&node.name) {
+            visit(g, child, out);
+        }
+    }
+    let mut out = BTreeMap::new();
+    for root in g.roots() {
+        visit(g, root, &mut out);
+    }
+    out
+}
+
+/// A private staging dir for one stage execution, unique per (process,
+/// attempt) so concurrent writers never collide: `plan/.tmp-<key>-<pid>-<n>`.
+fn tmp_stage_dir(cache_dir: &Path, key: &Key) -> PathBuf {
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let unique = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    cache_dir
+        .join("plan")
+        .join(format!(".tmp-{}-{}-{unique}", key.hex(), std::process::id()))
+}
+
+/// Land a completed staging dir at its content-addressed path in one
+/// rename.  A pre-existing dir (stale partial, `--force` recompute) is
+/// cleared first; losing a cross-process race is fine — the winner wrote
+/// the same content-addressed artifacts, so the loser's copy is dropped.
+fn commit_stage_dir(tmp: &Path, dst: &Path) -> Result<()> {
+    if !tmp.is_dir() {
+        // stage produced no local artifacts (defensive: meta is always
+        // written, so this should not happen)
+        return Ok(());
+    }
+    if dst.is_dir() {
+        std::fs::remove_dir_all(dst)
+            .with_context(|| format!("clearing stale stage dir {dst:?}"))?;
+    }
+    match std::fs::rename(tmp, dst) {
+        Ok(()) => Ok(()),
+        Err(_) if dst.is_dir() => {
+            std::fs::remove_dir_all(tmp).ok();
+            Ok(())
+        }
+        Err(e) => {
+            Err(e).with_context(|| format!("committing stage dir {tmp:?} -> {dst:?}"))
+        }
     }
 }
 

@@ -18,15 +18,18 @@
 //! * [`cachekey`] — content addressing: every stage is keyed by an FNV-1a
 //!   chain over (model, experiment config, seed, all upstream stage specs),
 //!   so two plans sharing a prefix share its artifacts.
-//! * [`executor`] — the topological scheduler: walks a [`PlanGraph`] over
+//! * [`executor`] — the ready-set scheduler: walks a [`PlanGraph`] over
 //!   [`crate::coordinator::Session`]s, executing every shared prefix once
 //!   per run (session snapshots at fork points) and persisting per-stage
 //!   artifacts (`state.ptns`, `masks.ptns`, adapters, `meta.json`) under
-//!   `<cache>/plan/<key>/`.  Re-running a plan loads completed stages
-//!   instead of recomputing them — fully-cached subtrees never even
-//!   materialise a session; `--force` ignores the stage cache (the keyed
-//!   dense pretrain checkpoint is still reused — it is deterministic in the
-//!   key inputs).
+//!   `<cache>/plan/<key>/` via temp-dir + atomic rename.  With `--jobs N`
+//!   independent subtrees execute concurrently on a worker pool that
+//!   splits the kernel thread budget (see [`crate::util::threads`]) —
+//!   reports, artifacts and metrics stay bitwise-identical to the serial
+//!   walk.  Re-running a plan loads completed stages instead of
+//!   recomputing them — fully-cached subtrees never even materialise a
+//!   session; `--force` ignores the stage cache (the keyed dense pretrain
+//!   checkpoint is still reused — it is deterministic in the key inputs).
 //!
 //! The CLI subcommands (`repro pretrain/prune/retrain/reconstruct/eval`) are
 //! thin shims over 1–3 distinctive stages each, `repro run` executes

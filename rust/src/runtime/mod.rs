@@ -203,8 +203,11 @@ impl Outputs {
 ///
 /// Implementations cache per-(model, executable) compiled state — reported by
 /// [`Backend::compiled_count`] — and count executions for the metrics layer.
-/// Object-safe on purpose: the coordinator holds `&dyn Backend`.
-pub trait Backend {
+/// Object-safe on purpose: the coordinator holds `&dyn Backend`.  `Send +
+/// Sync` because the plan-graph scheduler executes independent subtrees on
+/// worker threads sharing one backend reference — implementations keep
+/// their execution counters and compile caches behind atomics/locks.
+pub trait Backend: Send + Sync {
     /// Short identifier ("native" / "pjrt") for logs and tables.
     fn kind(&self) -> &'static str;
 

@@ -20,8 +20,9 @@ pub mod decode;
 pub mod graph;
 pub mod ops;
 
-use std::cell::{Cell, RefCell};
 use std::collections::{BTreeMap, BTreeSet, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
@@ -33,8 +34,8 @@ use graph::{GraphIn, ModeKind, SparseView};
 
 pub struct NativeBackend {
     manifest: Manifest,
-    exec_count: Cell<u64>,
-    prepared: RefCell<BTreeSet<(String, String)>>,
+    exec_count: AtomicU64,
+    prepared: Mutex<BTreeSet<(String, String)>>,
 }
 
 impl NativeBackend {
@@ -47,8 +48,8 @@ impl NativeBackend {
     pub fn with_manifest(manifest: Manifest) -> NativeBackend {
         NativeBackend {
             manifest,
-            exec_count: Cell::new(0),
-            prepared: RefCell::new(BTreeSet::new()),
+            exec_count: AtomicU64::new(0),
+            prepared: Mutex::new(BTreeSet::new()),
         }
     }
 }
@@ -71,7 +72,7 @@ impl Backend for NativeBackend {
     fn prepare(&self, model: &str, exec: &str) -> Result<()> {
         let mm = self.manifest.model(model)?;
         mm.exec(exec)?;
-        self.prepared.borrow_mut().insert((model.to_string(), exec.to_string()));
+        self.prepared.lock().unwrap().insert((model.to_string(), exec.to_string()));
         Ok(())
     }
 
@@ -117,9 +118,10 @@ impl Backend for NativeBackend {
             }
         }
         self.prepared
-            .borrow_mut()
+            .lock()
+            .unwrap()
             .insert((model.to_string(), exec.to_string()));
-        self.exec_count.set(self.exec_count.get() + 1);
+        self.exec_count.fetch_add(1, Ordering::Relaxed);
 
         // ---- dispatch ----------------------------------------------------
         let sv = gather_sparse(mm, feed);
@@ -146,11 +148,11 @@ impl Backend for NativeBackend {
     }
 
     fn exec_count(&self) -> u64 {
-        self.exec_count.get()
+        self.exec_count.load(Ordering::Relaxed)
     }
 
     fn compiled_count(&self) -> usize {
-        self.prepared.borrow().len()
+        self.prepared.lock().unwrap().len()
     }
 }
 

@@ -451,7 +451,10 @@ pub fn embed_pos_bwd(dx: &Tensor, b: usize, s: usize) -> Tensor {
 pub fn ce_sums(logits: &Tensor, tokens: &[i32], b: usize, s: usize) -> (f64, f64) {
     let v = logits.cols();
     let ld = logits.data();
-    let loss_sum: f64 = (0..b * s)
+    // position-indexed partials + serial reduction: a rayon `sum()` combines
+    // in steal order, so the float result would vary with pool size — the
+    // loss must be bitwise-stable under any `--threads`/`--jobs` split
+    let partials: Vec<f64> = (0..b * s)
         .into_par_iter()
         .map(|bs| {
             let si = bs % s;
@@ -464,8 +467,8 @@ pub fn ce_sums(logits: &Tensor, tokens: &[i32], b: usize, s: usize) -> (f64, f64
             let lse: f32 = row.iter().map(|&x| (x - mx).exp()).sum::<f32>().ln() + mx;
             (lse - row[tgt]) as f64
         })
-        .sum();
-    (loss_sum, (b * (s - 1)) as f64)
+        .collect();
+    (partials.iter().sum(), (b * (s - 1)) as f64)
 }
 
 /// Mean next-token NLL and its logits gradient (the train-step head).
@@ -474,7 +477,9 @@ pub fn ce_grad(logits: &Tensor, tokens: &[i32], b: usize, s: usize) -> (f32, Ten
     let count = (b * (s - 1)) as f32;
     let ld = logits.data();
     let mut dl = pool::zeroed(b * s * v);
-    let loss_sum: f64 = dl
+    // indexed partials, serial sum: keeps the reported loss bitwise-stable
+    // across kernel-pool sizes (grad rows are per-chunk writes, already so)
+    let partials: Vec<f64> = dl
         .par_chunks_mut(v)
         .enumerate()
         .map(|(bs, drow)| {
@@ -496,7 +501,8 @@ pub fn ce_grad(logits: &Tensor, tokens: &[i32], b: usize, s: usize) -> (f32, Ten
             drow[tgt] -= 1.0 / count;
             ((denom.ln() + mx) - row[tgt]) as f64
         })
-        .sum();
+        .collect();
+    let loss_sum: f64 = partials.iter().sum();
     (
         (loss_sum / count as f64) as f32,
         Tensor::new(&[b * s, v], dl),

@@ -14,9 +14,9 @@
 //! (`rust/xla-stub`), which type-checks this module and fails at runtime
 //! with a pointer to `--backend native`.
 
-use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
@@ -136,8 +136,8 @@ impl Executable {
 pub struct PjrtBackend {
     manifest: Manifest,
     client: xla::PjRtClient,
-    cache: RefCell<HashMap<(String, String), Rc<Executable>>>,
-    exec_count: Cell<u64>,
+    cache: Mutex<HashMap<(String, String), Arc<Executable>>>,
+    exec_count: AtomicU64,
 }
 
 impl PjrtBackend {
@@ -148,15 +148,15 @@ impl PjrtBackend {
         Ok(PjrtBackend {
             manifest,
             client,
-            cache: RefCell::new(HashMap::new()),
-            exec_count: Cell::new(0),
+            cache: Mutex::new(HashMap::new()),
+            exec_count: AtomicU64::new(0),
         })
     }
 
     /// Compile (or fetch from cache) one executable of one model.
-    pub fn load(&self, model: &str, exec: &str) -> Result<Rc<Executable>> {
+    pub fn load(&self, model: &str, exec: &str) -> Result<Arc<Executable>> {
         let key = (model.to_string(), exec.to_string());
-        if let Some(e) = self.cache.borrow().get(&key) {
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
             return Ok(e.clone());
         }
         let mm = self.manifest.model(model)?;
@@ -169,8 +169,8 @@ impl PjrtBackend {
             .client
             .compile(&comp)
             .map_err(|e| anyhow::anyhow!("compiling {exec:?}: {e:?}"))?;
-        let wrapped = Rc::new(Executable { spec, exe });
-        self.cache.borrow_mut().insert(key, wrapped.clone());
+        let wrapped = Arc::new(Executable { spec, exe });
+        self.cache.lock().unwrap().insert(key, wrapped.clone());
         Ok(wrapped)
     }
 }
@@ -189,15 +189,15 @@ impl Backend for PjrtBackend {
     }
 
     fn run(&self, model: &str, exec: &str, feed: &Feed) -> Result<Outputs> {
-        self.exec_count.set(self.exec_count.get() + 1);
+        self.exec_count.fetch_add(1, Ordering::Relaxed);
         self.load(model, exec)?.run(feed)
     }
 
     fn exec_count(&self) -> u64 {
-        self.exec_count.get()
+        self.exec_count.load(Ordering::Relaxed)
     }
 
     fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.lock().unwrap().len()
     }
 }

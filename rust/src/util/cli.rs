@@ -118,6 +118,12 @@ impl Args {
         Ok(self.parsed(key, "a number")?.unwrap_or(default))
     }
 
+    /// `--jobs {auto|K}`: concurrent plan-graph workers.  `auto` resolves
+    /// to the kernel thread budget; K must be a positive integer.
+    pub fn opt_jobs(&self) -> Result<Option<crate::util::threads::Jobs>, ArgError> {
+        self.parsed("jobs", "\"auto\" or a positive integer")
+    }
+
     pub fn flag(&self, key: &str) -> bool {
         self.mark(key);
         self.flags.iter().any(|f| f == key)
@@ -219,6 +225,24 @@ mod tests {
         // well-formed values still parse on the same Args
         let a = args("x --steps 12");
         assert_eq!(a.u64("steps", 0).unwrap(), 12);
+    }
+
+    #[test]
+    fn jobs_accessor_is_typed() {
+        use crate::util::threads::Jobs;
+        let a = args("run --jobs auto");
+        assert_eq!(a.opt_jobs().unwrap(), Some(Jobs::Auto));
+        a.finish().unwrap();
+        let a = args("run --jobs 4");
+        assert_eq!(a.opt_jobs().unwrap(), Some(Jobs::Fixed(4)));
+        let a = args("run");
+        assert_eq!(a.opt_jobs().unwrap(), None);
+        // zero, negatives and words surface as ArgError (exit 2), no panic
+        for bad in ["run --jobs 0", "run --jobs -3", "run --jobs fast"] {
+            let a = args(bad);
+            let e = a.opt_jobs().unwrap_err();
+            assert!(e.to_string().contains("--jobs"), "{e}");
+        }
     }
 
     #[test]

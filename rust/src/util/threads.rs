@@ -1,4 +1,4 @@
-//! Kernel thread-pool sizing.
+//! Kernel thread-pool sizing and the shared thread budget.
 //!
 //! The rayon global pool defaults to one thread per logical core — correct
 //! for batch experiments, but the serving layer also runs HTTP workers and
@@ -6,6 +6,18 @@
 //! into tail latency.  `--threads <n>` (or `PERP_THREADS=<n>`) pins the
 //! kernel pool size explicitly; call [`configure`] before the first rayon
 //! use (the CLI does this while parsing common flags).
+//!
+//! The parallel plan-graph scheduler adds a second axis: `--jobs {auto,K}`
+//! (or `PERP_JOBS`) runs up to K graph nodes concurrently.  Left alone, N
+//! concurrent nodes would each fan their kernels over the whole global
+//! pool — N×budget threads on budget cores.  Instead every in-flight node
+//! [`acquire_share`]s a slice of the budget: with N nodes live it gets
+//! `max(1, budget / N)` threads as a scoped rayon pool its kernels run
+//! inside, and as nodes retire, later acquisitions see a smaller N and get
+//! proportionally more.  A node that is alone (or a serial run) skips the
+//! scoped pool entirely and uses the global one — zero overhead.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Size the global rayon pool: explicit argument wins, then
 /// `PERP_THREADS`, otherwise rayon's default.  Returns the effective
@@ -36,6 +48,104 @@ pub fn from_env() -> Option<usize> {
     std::env::var("PERP_THREADS").ok().and_then(|v| v.trim().parse().ok())
 }
 
+/// Total kernel-thread budget: the global rayon pool size (after
+/// [`configure`], that is `--threads`/`PERP_THREADS` or all cores).
+pub fn budget() -> usize {
+    rayon::current_num_threads().max(1)
+}
+
+/// `--jobs {auto,K}` — how many plan-graph nodes may execute concurrently.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Jobs {
+    /// Size the worker count to the kernel thread budget.
+    Auto,
+    /// Exactly K concurrent nodes (K ≥ 1; 1 = the serial DFS walk).
+    Fixed(usize),
+}
+
+impl Jobs {
+    /// Resolve to a concrete worker count.  `auto` means one worker per
+    /// budget thread: each in-flight node then runs its kernels on ~1
+    /// thread, which maximises cross-node concurrency for the
+    /// embarrassingly-parallel sweep grids.
+    pub fn resolve(self) -> usize {
+        match self {
+            Jobs::Auto => budget(),
+            Jobs::Fixed(n) => n.max(1),
+        }
+    }
+}
+
+impl std::str::FromStr for Jobs {
+    type Err = ();
+
+    fn from_str(s: &str) -> Result<Jobs, ()> {
+        if s.trim() == "auto" {
+            return Ok(Jobs::Auto);
+        }
+        match s.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(Jobs::Fixed(n)),
+            _ => Err(()),
+        }
+    }
+}
+
+/// Parse `PERP_JOBS` (`auto` or a positive integer; ignored when unset,
+/// empty or malformed).
+pub fn jobs_from_env() -> Option<Jobs> {
+    std::env::var("PERP_JOBS").ok().and_then(|v| v.parse().ok())
+}
+
+/// Graph nodes currently holding a budget share.
+static IN_FLIGHT: AtomicUsize = AtomicUsize::new(0);
+
+/// RAII slice of the kernel-thread budget held by one in-flight graph
+/// node.  Dropping it returns the slice to the pool of later acquirers.
+pub struct BudgetShare {
+    threads: usize,
+    /// scoped pool the node's kernels run inside; `None` = global pool
+    pool: Option<rayon::ThreadPool>,
+}
+
+/// Claim a slice of the kernel budget for one node.  With N nodes live
+/// the slice is `max(1, budget / N)` threads; a node that is alone keeps
+/// the whole budget on the global pool (no scoped pool is built).
+pub fn acquire_share() -> BudgetShare {
+    let live = IN_FLIGHT.fetch_add(1, Ordering::SeqCst) + 1;
+    let total = budget();
+    let slice = (total / live).max(1);
+    let pool = if slice < total {
+        rayon::ThreadPoolBuilder::new().num_threads(slice).build().ok()
+    } else {
+        None
+    };
+    let threads = if pool.is_some() { slice } else { total };
+    BudgetShare { threads, pool }
+}
+
+impl BudgetShare {
+    /// Kernel threads this share runs on.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f` with this share installed: rayon `par_*` calls inside use
+    /// the share's scoped pool (or the global pool for a whole-budget
+    /// share).
+    pub fn run<R: Send>(&self, f: impl FnOnce() -> R + Send) -> R {
+        match &self.pool {
+            Some(pool) => pool.install(f),
+            None => f(),
+        }
+    }
+}
+
+impl Drop for BudgetShare {
+    fn drop(&mut self) {
+        IN_FLIGHT.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -47,5 +157,35 @@ mod tests {
         // A redundant explicit request after initialisation stays sane.
         let n = rayon::current_num_threads();
         assert_eq!(configure(Some(n)), n);
+    }
+
+    #[test]
+    fn jobs_parse_and_resolve() {
+        assert_eq!("auto".parse::<Jobs>(), Ok(Jobs::Auto));
+        assert_eq!("4".parse::<Jobs>(), Ok(Jobs::Fixed(4)));
+        assert!("0".parse::<Jobs>().is_err());
+        assert!("-2".parse::<Jobs>().is_err());
+        assert!("many".parse::<Jobs>().is_err());
+        assert!(Jobs::Auto.resolve() >= 1);
+        assert_eq!(Jobs::Fixed(3).resolve(), 3);
+    }
+
+    #[test]
+    fn budget_shares_split_and_rebalance() {
+        let total = budget();
+        // a lone node keeps the whole budget (global pool, no scoped pool)
+        let a = acquire_share();
+        assert_eq!(a.threads(), total);
+        assert_eq!(a.run(|| 40 + 2), 42);
+        // a second concurrent node gets at most half, never zero
+        let b = acquire_share();
+        assert!(b.threads() >= 1);
+        assert!(b.threads() <= (total / 2).max(1));
+        assert_eq!(b.run(|| rayon::current_num_threads()), b.threads());
+        drop(b);
+        drop(a);
+        // after everyone retires, a fresh share sees the full budget again
+        let c = acquire_share();
+        assert_eq!(c.threads(), total);
     }
 }

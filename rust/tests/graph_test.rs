@@ -225,6 +225,159 @@ fn forked_branches_match_their_linear_equivalents() {
     std::fs::remove_dir_all(&lin_dir).ok();
 }
 
+/// Every artifact file under two stage dirs is byte-identical.
+fn assert_dir_bitwise_eq(a: &std::path::Path, b: &std::path::Path) {
+    let names = |d: &std::path::Path| -> Vec<String> {
+        let mut v: Vec<String> = std::fs::read_dir(d)
+            .unwrap_or_else(|e| panic!("reading {d:?}: {e}"))
+            .map(|e| e.unwrap().file_name().to_string_lossy().to_string())
+            .collect();
+        v.sort();
+        v
+    };
+    let (na, nb) = (names(a), names(b));
+    assert_eq!(na, nb, "artifact sets differ: {a:?} vs {b:?}");
+    for n in &na {
+        let fa = std::fs::read(a.join(n)).unwrap();
+        let fb = std::fs::read(b.join(n)).unwrap();
+        assert!(fa == fb, "artifact {n} differs between {a:?} and {b:?}");
+    }
+}
+
+#[test]
+fn parallel_run_matches_serial_bitwise_and_resumes_clean() {
+    let rt = rt();
+    // fresh separate caches: both the serial and the parallel run must
+    // COMPUTE every node, or the comparison is a trivial cache read-back
+    let ser_dir = std::env::temp_dir().join("perp_graph_par_test_serial");
+    let par_dir = std::env::temp_dir().join("perp_graph_par_test_parallel");
+    std::fs::remove_dir_all(&ser_dir).ok();
+    std::fs::remove_dir_all(&par_dir).ok();
+
+    let mut c = cfg(25);
+    c.pretrain_steps = 120; // 2 seeds × 2 dirs = 4 pretrains — keep it cheap
+    let g = GraphBuilder::new("par_fan")
+        .pretrain()
+        .fork_sparsities(Criterion::Magnitude, &[0.5, 0.8])
+        .eval_ppl()
+        .replicate_seeds(2)
+        .aggregate("mean")
+        .build();
+
+    let serial = Executor::new(&rt, c.clone(), ser_dir.clone(), 0)
+        .quiet(true)
+        .jobs(1)
+        .run_graph(&g)
+        .unwrap();
+    let parallel = Executor::new(&rt, c.clone(), par_dir.clone(), 0)
+        .quiet(true)
+        .jobs(4)
+        .run_graph(&g)
+        .unwrap();
+
+    // both runs computed everything, sharing each seed's prefix once
+    assert_eq!(serial.computed(), 2 * (1 + 2 + 2));
+    assert_eq!(parallel.computed(), 2 * (1 + 2 + 2));
+    assert_eq!(parallel.computed_labeled("pretrain"), 2, "one pretrain per seed");
+    assert_eq!(parallel.computed_labeled("prune"), 4);
+
+    // report order, keys and metrics are bitwise-identical to the serial
+    // walk — completion order must never leak into the report
+    assert_eq!(serial.nodes.len(), parallel.nodes.len());
+    for (s, p) in serial.nodes.iter().zip(&parallel.nodes) {
+        assert_eq!(s.name, p.name, "node order differs");
+        assert_eq!(s.rep.key, p.rep.key);
+        assert_eq!(s.seed, p.seed);
+        match (&s.rep.metrics, &p.rep.metrics) {
+            (Some(a), Some(b)) => {
+                assert!(a.ppl == b.ppl, "{}: ppl {} != {}", s.name, a.ppl, b.ppl);
+                assert!(a.loss == b.loss, "{}: loss differs", s.name);
+                assert!(a.sparsity == b.sparsity, "{}: sparsity differs", s.name);
+            }
+            (None, None) => {}
+            _ => panic!("{}: metrics presence differs", s.name),
+        }
+        // the artifacts themselves are byte-identical
+        assert_dir_bitwise_eq(
+            &ser_dir.join("plan").join(&s.rep.key),
+            &par_dir.join("plan").join(&p.rep.key),
+        );
+    }
+
+    // aggregate mean±std reduce identically
+    let (sa, pa) = (
+        serial.aggregate("mean").expect("serial aggregate"),
+        parallel.aggregate("mean").expect("parallel aggregate"),
+    );
+    assert!(sa.ppl.mean == pa.ppl.mean && sa.ppl.std == pa.ppl.std);
+    assert_eq!(sa.ppl.n, pa.ppl.n);
+    assert!(sa.sparsity.mean == pa.sparsity.mean);
+
+    // no staging leftovers: every .tmp-* dir was renamed into place
+    for d in [&ser_dir, &par_dir] {
+        let leftovers: Vec<String> = std::fs::read_dir(d.join("plan"))
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().to_string())
+            .filter(|n| n.starts_with(".tmp-"))
+            .collect();
+        assert!(leftovers.is_empty(), "staging dirs left behind in {d:?}: {leftovers:?}");
+    }
+
+    // resume after the parallel run: zero computed nodes, zero backend
+    // executions, byte-stable report
+    let execs_before = rt.exec_count();
+    let resumed = Executor::new(&rt, c, par_dir.clone(), 0)
+        .quiet(true)
+        .jobs(4)
+        .run_graph(&g)
+        .unwrap();
+    assert_eq!(resumed.computed(), 0, "resumed parallel graph loads every node");
+    assert_eq!(rt.exec_count(), execs_before, "resume must not execute any backend graph");
+    for (p, r) in parallel.nodes.iter().zip(&resumed.nodes) {
+        assert_eq!(p.name, r.name);
+        assert_eq!(p.rep.key, r.rep.key);
+    }
+
+    std::fs::remove_dir_all(&ser_dir).ok();
+    std::fs::remove_dir_all(&par_dir).ok();
+}
+
+#[test]
+fn branches_sharing_a_stage_key_execute_it_once_under_parallelism() {
+    // two fork branches with IDENTICAL chains: their nodes are distinct but
+    // content-address to the same keys, so the in-flight dedup must run
+    // each stage once — the second branch waits, then reads a cache hit
+    let rt = rt();
+    let dir = cache_dir();
+    let ex = Executor::new(&rt, cfg(24), dir.clone(), 0).quiet(true).jobs(2);
+    let g = parse_graph(
+        "dup",
+        "fork[prune(magnitude,0.5)|eval(ppl);prune(magnitude,0.5)|eval(ppl)]",
+    )
+    .unwrap();
+
+    // wipe this graph's exact stage dirs so the run is a full compute
+    let probe = ex.run_graph(&g).unwrap();
+    for nr in &probe.nodes {
+        std::fs::remove_dir_all(dir.join("plan").join(&nr.rep.key)).ok();
+    }
+
+    let report = ex.run_graph(&g).unwrap();
+    assert_eq!(report.nodes.len(), 5, "pretrain + 2 prunes + 2 evals");
+    assert_eq!(report.computed_labeled("pretrain"), 1);
+    assert_eq!(report.computed_labeled("prune"), 1, "duplicate chains share one prune");
+    assert_eq!(report.computed_labeled("eval"), 1, "duplicate chains share one eval");
+    // the twin branches carry the same keys and the same metrics
+    let evals: Vec<(&str, f64)> = report
+        .nodes
+        .iter()
+        .filter_map(|n| n.rep.metrics.as_ref().map(|m| (n.rep.key.as_str(), m.ppl)))
+        .collect();
+    assert_eq!(evals.len(), 2);
+    assert_eq!(evals[0].0, evals[1].0);
+    assert!(evals[0].1 == evals[1].1);
+}
+
 #[test]
 fn fork_grammar_roundtrips_and_validates() {
     let g = parse_graph(

@@ -149,6 +149,68 @@ fn executor_cache_resume_skips_all_training() {
 }
 
 #[test]
+fn partial_or_staged_stage_dirs_are_never_cache_hits() {
+    // stage artifacts are written into `plan/.tmp-*` staging dirs and land
+    // via one atomic rename, so a killed run leaves either a complete stage
+    // dir or an ignorable staging dir — never a partial dir that later
+    // scans as a hit.  Simulate both failure shapes and re-run.
+    let rt = rt();
+    let dir = cache_dir();
+    let ex = Executor::new(&rt, cfg(15), dir.clone(), 0).quiet(true);
+    let plan = Plan::new("atomic")
+        .pretrain()
+        .prune(Criterion::Magnitude, Pattern::Unstructured(0.55))
+        .eval_ppl();
+
+    let probe = ex.run(&plan).unwrap();
+    for sr in &probe.stages {
+        std::fs::remove_dir_all(dir.join("plan").join(&sr.key)).ok();
+    }
+    let first = ex.run(&plan).unwrap();
+    assert!(first.stages.iter().all(|s| !s.cache_hit));
+    let ppl1 = first.last_metrics().unwrap().ppl;
+
+    // failure shape 1: a stale staging dir from a "killed" writer.  It must
+    // never satisfy a completeness scan (it is not at any key path) and
+    // must not disturb a resumed run.
+    let stale = dir.join("plan").join(".tmp-deadbeefdeadbeef-0-0");
+    std::fs::create_dir_all(&stale).unwrap();
+    std::fs::write(stale.join("meta.json"), b"{\"stage\":\"prune\"}").unwrap();
+
+    // failure shape 2: a stage dir stripped of its completion marker —
+    // state.ptns survives but meta.json is gone (the pre-atomic-commit
+    // hazard).  The stage must recompute, not load the partial artifacts.
+    let prune_dir = dir.join("plan").join(&first.stages[1].key);
+    std::fs::remove_file(prune_dir.join("meta.json")).unwrap();
+    assert!(prune_dir.join("state.ptns").is_file(), "partial artifacts remain");
+
+    let second = ex.run(&plan).unwrap();
+    assert!(second.stages[0].cache_hit, "pretrain untouched — still cached");
+    assert!(!second.stages[1].cache_hit, "markerless prune dir must recompute");
+    assert!(second.stages[2].cache_hit, "eval artifacts untouched — still cached");
+    assert!(prune_dir.join("meta.json").is_file(), "recompute restores the marker");
+    assert_eq!(second.last_metrics().unwrap().ppl, ppl1);
+
+    // the recompute replaced the partial dir atomically: no staging dirs
+    // for THIS plan's keys linger (concurrent tests may hold their own
+    // in-flight staging dirs in the shared cache, so scope the scan)
+    let tmps: Vec<String> = std::fs::read_dir(dir.join("plan"))
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().to_string())
+        .filter(|n| {
+            first.stages.iter().any(|s| n.starts_with(&format!(".tmp-{}", s.key)))
+        })
+        .collect();
+    assert!(tmps.is_empty(), "staging dirs left behind: {tmps:?}");
+    assert!(stale.is_dir(), "stale staging dirs are ignored, not adopted");
+    std::fs::remove_dir_all(&stale).ok();
+
+    // fully-resumed run stays all-hits after the repair
+    let third = ex.run(&plan).unwrap();
+    assert!(third.stages.iter().all(|s| s.cache_hit), "{third:?}");
+}
+
+#[test]
 fn retrain_plan_matches_legacy_sequence() {
     // the pre-redesign path: pruned_session -> retrain_tuned (clone, retrain,
     // merge, eval test ppl)
