@@ -174,6 +174,7 @@ impl<'rt> Session<'rt> {
         steps: u64,
         schedule: Schedule,
     ) -> Result<()> {
+        let _sp = crate::span!("session", "train {exec}").arg("steps", steps);
         let mut opt = OptState::zeros(leaf_names.iter().map(|n| {
             let shape = self.leaf_shape(n);
             (n.as_str(), shape)
@@ -283,6 +284,7 @@ impl<'rt> Session<'rt> {
     /// Accumulate per-prunable-linear Grams G = ΣXᵀX over the shared
     /// calibration set.
     pub fn calibrate(&mut self) -> Result<BTreeMap<String, Tensor>> {
+        let _sp = crate::span!("session", "calibrate").arg("seqs", self.cfg.calib_seqs);
         let b = self.mm.cfg.eval_batch;
         let s = self.mm.cfg.seq_len;
         let shape = [b, s];
@@ -321,6 +323,7 @@ impl<'rt> Session<'rt> {
         pattern: Pattern,
         grams: Option<&BTreeMap<String, Tensor>>,
     ) -> Result<()> {
+        let _sp = crate::span!("session", "prune {criterion:?}");
         match criterion {
             Criterion::Magnitude => {
                 let weights: BTreeMap<String, &Tensor> = self
@@ -386,6 +389,7 @@ impl<'rt> Session<'rt> {
         let Some((mode, lora)) = self.lora.take() else {
             return Ok(()); // nothing to merge (subset modes)
         };
+        let _sp = crate::span!("session", "merge {mode:?}");
         let scale = self.mm.cfg.lora_scale as f32;
         for n in &self.mm.prunable.clone() {
             let w = self.params.get(n);
@@ -425,6 +429,7 @@ impl<'rt> Session<'rt> {
     }
 
     fn eval_ppl_with(&self, batcher: &Batcher) -> Result<PplResult> {
+        let _sp = crate::span!("session", "eval.ppl").arg("batches", self.cfg.eval_batches);
         match &self.lora {
             None => eval::perplexity(
                 self.rt, &self.mm, &self.params, &self.masks, Some(&self.sparse), batcher,
@@ -444,6 +449,7 @@ impl<'rt> Session<'rt> {
     }
 
     pub fn eval_tasks(&self) -> Result<Vec<TaskResult>> {
+        let _sp = crate::span!("session", "eval.tasks");
         let lora = match &self.lora {
             None => None,
             Some((Mode::Lora, lora)) => Some(lora),

@@ -291,6 +291,7 @@ fn cell_metrics<'a>(
 
 /// Entry point: run one experiment id, return its tables.
 pub fn run(ctx: &ExpContext, exp: &str) -> Result<Vec<Table>> {
+    let _sp = crate::span!("sweep", "exp {exp}").arg("jobs", ctx.jobs);
     match exp {
         "fig1" => fig1(ctx),
         "table1" => table1(ctx),

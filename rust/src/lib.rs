@@ -31,6 +31,7 @@ pub mod data;
 pub mod eval;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod optim;
 pub mod peft;
 pub mod pipeline;

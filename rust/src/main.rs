@@ -34,7 +34,7 @@ use perp::coordinator::reconstruct::ReconMode;
 use perp::coordinator::sweep::{self, ExpContext};
 use perp::coordinator::Session;
 use perp::peft::Mode;
-use perp::pipeline::executor::{stage_complete, stage_dir};
+use perp::pipeline::executor::{recorded_profile, stage_complete, stage_dir};
 use perp::pipeline::parse::{parse_graph, parse_plan, spec_is_graph};
 use perp::pipeline::{Executor, Plan, PlanOrGraph};
 use perp::pruning::{Criterion, Pattern};
@@ -51,7 +51,15 @@ fn main() {
             std::process::exit(2);
         }
     };
-    if let Err(e) = dispatch(&args) {
+    let result = dispatch(&args);
+    // one process, one trace: flush whatever the command recorded (no-op
+    // unless --trace/PERP_TRACE enabled tracing), even when it failed
+    match perp::obs::trace::flush(None) {
+        Ok(Some((path, spans))) => eprintln!("trace: {spans} spans -> {}", path.display()),
+        Ok(None) => {}
+        Err(e) => eprintln!("trace flush failed: {e}"),
+    }
+    if let Err(e) = result {
         // argument problems (bad values, unknown flags) exit 2, runtime
         // failures exit 1
         if let Some(ae) = e.downcast_ref::<ArgError>() {
@@ -72,6 +80,7 @@ fn dispatch(args: &Args) -> Result<()> {
         }
         "info" => info(args),
         "run" => run_cmd(args),
+        "profile" => profile_cmd(args),
         "plan" => plan_cmd(args),
         "gc" => gc_cmd(args),
         "pretrain" => pretrain(args),
@@ -95,8 +104,11 @@ repro — PERP: Parameter-Efficient Retraining after Pruning (reproduction)
 subcommands:
   info          list models, executables and the analytical memory table
   run           execute a pipeline plan or plan graph (--plan <file.json> or --stages \"...\")
-  plan          inspect a plan: plan show <file> [--dot] — ASCII tree or
-                Graphviz DOT with per-node cache-hit status
+  profile       run a plan and print per-stage wall clock + counter deltas;
+                write results/profile.json
+  plan          inspect a plan: plan show <file> [--dot] [--timings] — ASCII
+                tree or Graphviz DOT with per-node cache-hit status (and
+                recorded wall clock / counters with --timings)
   gc            reclaim stage artifacts unreachable from any plan file
                 (--dry-run by default; --force deletes)
   pretrain      converge a dense model and cache the checkpoint
@@ -131,6 +143,11 @@ common flags:
   --steps <n>          override step counts
   --exp <id>           fig1 fig2 table1 table2 table3 table4 table5
                        table19 table20 table22 memory
+  --trace              record hierarchical spans; written as Chrome
+                       trace-events (+ .jsonl twin) to <out>/trace.json on
+                       exit.  PERP_TRACE=1|<path> does the same from the
+                       environment; PERP_LOG=debug|info|warn|off sets log
+                       verbosity (off also silences progress lines)
 
 run flags:
   --plan <file.json>   plan or plan-graph file (see examples/plans/)
@@ -141,6 +158,12 @@ run flags:
                        n consecutive seeds, agg reduces eval leaves to
                        mean±std
   --force              ignore completed stage artifacts; recompute everything
+
+profile flags:
+  --plan | --stages | --force   as for run; prints one row per stage node
+                       (status, wall clock, counter deltas — recorded at
+                       compute time and replayed for cache hits) and writes
+                       <out>/profile.json
 
 gc flags:
   --plans <dir>        plan/graph files defining reachability  [examples/plans]
@@ -221,6 +244,13 @@ fn common(args: &Args) -> Result<Env> {
         Some(j) => j.resolve(),
         None => perp::util::threads::jobs_from_env().map_or(1, |j| j.resolve()),
     };
+    // --trace or PERP_TRACE=1|<path> turns span recording on; the sink
+    // defaults to <out>/trace.json and main() flushes it after dispatch
+    let trace_env = perp::obs::trace::env_request();
+    if args.flag("trace") || trace_env.is_some() {
+        let sink = trace_env.flatten().unwrap_or_else(|| out.join("trace.json"));
+        perp::obs::trace::configure(true, Some(sink));
+    }
     Ok(Env { rt, cfg, out, seed: args.u64("seed", 0)?, jobs })
 }
 
@@ -357,6 +387,116 @@ fn run_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro profile` — run a plan (cold or cache-warm) and report per-stage
+/// wall clock and counter deltas.  Cache hits replay the observations
+/// recorded when the stage was first computed (the `plan/<key>.prof.json`
+/// sidecars), so profiling an already-built cache is instant.
+fn profile_cmd(args: &Args) -> Result<()> {
+    use perp::obs::counters::Registry;
+    use perp::util::bench::Table;
+
+    let env = common(args)?;
+    let plan_file = args.opt_str("plan");
+    let stages = args.opt_str("stages");
+    let force = args.flag("force");
+    args.finish()?;
+    let loaded = match (&plan_file, &stages) {
+        (Some(p), None) => PlanOrGraph::from_file(Path::new(p))?,
+        (None, Some(s)) if spec_is_graph(s) => PlanOrGraph::Graph(
+            parse_graph("inline", s).map_err(|e| anyhow::anyhow!(ArgError(e)))?,
+        ),
+        (None, Some(s)) => PlanOrGraph::Linear(
+            parse_plan("inline", s).map_err(|e| anyhow::anyhow!(ArgError(e)))?,
+        ),
+        _ => {
+            return Err(anyhow::anyhow!(ArgError(
+                "profile needs exactly one of --plan <file.json> or --stages \"<spec>\""
+                    .to_string()
+            )));
+        }
+    };
+    let g = loaded.graph();
+
+    let snap0 = Registry::global().snapshot();
+    let t0 = Instant::now();
+    let report = executor(&env).force(force).quiet(true).run_graph(&g)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    let run_deltas = Registry::global().snapshot().since(&snap0);
+
+    let mut t = Table::new(
+        &format!("profile: {} on {} ({} jobs)", g.name, env.cfg.model, env.jobs),
+        &["node", "stage", "status", "wall", "counters"],
+    );
+    for n in &report.nodes {
+        let status = if n.rep.cache_hit { "cached" } else { "computed" };
+        // a hit's wall_s is just lookup time; prefer the recorded compute wall
+        let wall = n.rep.computed_wall_s.unwrap_or(n.rep.wall_s);
+        t.row(vec![
+            n.name.clone(),
+            n.rep.label.clone(),
+            status.to_string(),
+            format!("{wall:.2}s"),
+            fmt_counter_deltas(&n.rep.counters, 3),
+        ]);
+    }
+    t.print();
+    println!(
+        "run: {wall_s:.2}s wall, {} of {} nodes computed",
+        report.computed(),
+        g.stage_count()
+    );
+    if !run_deltas.counters.is_empty() {
+        println!(
+            "process counters this run: {}",
+            fmt_counter_deltas(&run_deltas.counters, 6)
+        );
+    }
+
+    let counters_json = |c: &std::collections::BTreeMap<String, u64>| {
+        Json::obj(c.iter().map(|(k, &v)| (k.as_str(), Json::Num(v as f64))).collect())
+    };
+    let nodes = Json::Arr(
+        report
+            .nodes
+            .iter()
+            .map(|n| {
+                Json::obj(vec![
+                    ("node", Json::Str(n.name.clone())),
+                    ("stage", Json::Str(n.rep.label.clone())),
+                    ("seed", Json::Num(n.seed as f64)),
+                    ("cache_hit", Json::Bool(n.rep.cache_hit)),
+                    ("wall_s", Json::Num(n.rep.computed_wall_s.unwrap_or(n.rep.wall_s))),
+                    ("counters", counters_json(&n.rep.counters)),
+                ])
+            })
+            .collect(),
+    );
+    let j = Json::obj(vec![
+        ("graph", Json::Str(g.name.clone())),
+        ("model", Json::Str(env.cfg.model.clone())),
+        ("jobs", Json::Num(env.jobs as f64)),
+        ("wall_s", Json::Num(wall_s)),
+        ("nodes", nodes),
+        ("counters", counters_json(&run_deltas.counters)),
+    ]);
+    let path = env.out.join("profile.json");
+    std::fs::write(&path, j.to_string()).with_context(|| format!("writing {path:?}"))?;
+    println!("wrote {path:?}");
+    Ok(())
+}
+
+/// The `k` largest counter deltas as space-joined `name=v` pairs (`-` when
+/// there are none; ties break alphabetically for stable output).
+fn fmt_counter_deltas(counters: &std::collections::BTreeMap<String, u64>, k: usize) -> String {
+    if counters.is_empty() {
+        return "-".to_string();
+    }
+    let mut pairs: Vec<(&String, &u64)> = counters.iter().collect();
+    pairs.sort_by(|a, b| b.1.cmp(a.1).then_with(|| a.0.cmp(b.0)));
+    pairs.truncate(k);
+    pairs.iter().map(|(n, v)| format!("{n}={v}")).collect::<Vec<_>>().join(" ")
+}
+
 // ---------------------------------------------------------------------------
 // Plan inspection + cache garbage collection.
 // ---------------------------------------------------------------------------
@@ -376,6 +516,7 @@ fn plan_show(args: &Args) -> Result<()> {
         anyhow::anyhow!(ArgError("plan show needs a file: repro plan show <file> [--dot]".into()))
     })?;
     let dot = args.flag("dot");
+    let timings = args.flag("timings");
     args.finish()?;
 
     let g = PlanOrGraph::from_file(Path::new(&file))?.graph();
@@ -386,7 +527,8 @@ fn plan_show(args: &Args) -> Result<()> {
         .map_err(|e| anyhow::anyhow!("keying plan {file:?}: {e}"))?;
     let cache = env.out.join("cache");
     // per-node cache status under the current (model, profile, seed): what a
-    // re-run would load vs actually execute
+    // re-run would load vs actually execute; --timings appends the wall
+    // clock and busiest counters recorded when the stage was computed
     let annotate = |n: &perp::pipeline::Node| -> String {
         match n.stage() {
             None => String::new(),
@@ -397,7 +539,18 @@ fn plan_show(args: &Args) -> Result<()> {
                 } else {
                     "pending"
                 };
-                format!("[{status} {}]", &key.hex()[..10])
+                let mut tag = format!("[{status} {}]", &key.hex()[..10]);
+                if timings {
+                    if let Some((wall, counters)) = recorded_profile(&cache, &key) {
+                        if let Some(w) = wall {
+                            tag.push_str(&format!(" {w:.2}s"));
+                        }
+                        if !counters.is_empty() {
+                            tag.push_str(&format!(" ({})", fmt_counter_deltas(&counters, 2)));
+                        }
+                    }
+                }
+                tag
             }
         }
     };
@@ -734,7 +887,10 @@ fn run_and_record(env: &Env, exp: &str) -> Result<()> {
         t.print();
         t.append_to(&path)?;
     }
-    println!("[{exp}] done in {:.1}s -> {:?}", t0.elapsed().as_secs_f64(), path);
+    perp::util::logging::progress(&format!(
+        "[{exp}] done in {:.1}s -> {path:?}",
+        t0.elapsed().as_secs_f64()
+    ));
     Ok(())
 }
 
@@ -883,14 +1039,18 @@ fn bench_phase(
     let tokens: u64 = samples.iter().map(|&(_, t)| t).sum();
     let mut lats: Vec<f64> = samples.iter().map(|&(l, _)| l).collect();
     lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| lats[((lats.len() as f64 * p) as usize).min(lats.len() - 1)];
+    // latencies also feed the obs registry so `/metrics`-style snapshots of
+    // a bench process carry the same distribution the table reports
+    for &l in &lats {
+        perp::obs::counters::Registry::global().observe("bench.latency_ms", l);
+    }
     Ok(PhaseStats {
         tokens,
         wall_s,
         tps: tokens as f64 / wall_s.max(1e-9),
         mean_ms: lats.iter().sum::<f64>() / lats.len().max(1) as f64,
-        p50_ms: pct(0.50),
-        p95_ms: pct(0.95),
+        p50_ms: perp::obs::counters::percentile(&lats, 0.50),
+        p95_ms: perp::obs::counters::percentile(&lats, 0.95),
     })
 }
 
@@ -1139,9 +1299,9 @@ fn bench_graph(args: &Args) -> Result<()> {
         };
         let serial_s = time_run(1)?;
         let parallel_s = time_run(jobs)?;
-        println!(
+        perp::util::logging::progress(&format!(
             "[bench-graph] {name}: serial {serial_s:.2}s, parallel {parallel_s:.2}s ({jobs} jobs)"
-        );
+        ));
         rows.push(Row {
             sweep: name.to_string(),
             nodes: g.stage_count(),

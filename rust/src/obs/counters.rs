@@ -1,0 +1,396 @@
+//! Global registry of named counters and fixed-bucket histograms.
+//!
+//! Counters are monotonic `u64`s; histograms bucket `f64` observations
+//! into a fixed upper-bound ladder (plus an implicit `+Inf` overflow
+//! bucket) and track an exact running sum and count.  Both are lock-free
+//! on the hot path: callers hold an `Arc` handle and bump it with relaxed
+//! atomics — the registry mutex is only taken on first lookup, snapshot
+//! and render.  The [`crate::count!`] macro caches the handle in a
+//! per-call-site `OnceLock` so a warm bump is a single `fetch_add`.
+//!
+//! Naming convention: dotted lower-case paths, e.g. `backend.exec.score`,
+//! `spmm.csr`, `plan.cache.hit`, `serve.queue.wait_ms`.  The full catalog
+//! lives in the README's Observability section.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Default bucket ladder — wide enough to cover milliseconds, counts and
+/// fractions without per-metric tuning (an implicit `+Inf` bucket catches
+/// the rest).
+pub const DEFAULT_BUCKETS: [f64; 14] = [
+    0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0, 10.0, 50.0, 100.0, 500.0, 1000.0, 5000.0,
+];
+
+// ---------------------------------------------------------------------------
+// Histogram.
+// ---------------------------------------------------------------------------
+
+/// Fixed-bucket histogram: per-bucket counts plus exact sum/count.
+pub struct Histogram {
+    /// Ascending upper bounds; observations land in the first bucket with
+    /// `v <= bound`, or the overflow slot past the end.
+    bounds: Vec<f64>,
+    /// `bounds.len() + 1` slots (last = `+Inf` overflow).
+    counts: Vec<AtomicU64>,
+    total: AtomicU64,
+    /// Running sum as f64 bits, accumulated with a CAS loop.
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        let mut bounds = bounds.to_vec();
+        bounds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        bounds.dedup();
+        let counts = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Histogram { bounds, counts, total: AtomicU64::new(0), sum_bits: AtomicU64::new(0) }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self
+                .sum_bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn snapshot(&self) -> HistSnap {
+        HistSnap {
+            bounds: self.bounds.clone(),
+            counts: self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            count: self.count(),
+            sum: self.sum(),
+        }
+    }
+}
+
+/// Point-in-time copy of one histogram.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistSnap {
+    pub bounds: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts; last slot is `+Inf`.
+    pub counts: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl HistSnap {
+    /// Mean of all observations (NaN when empty).
+    pub fn mean(&self) -> f64 {
+        self.sum / self.count as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry.
+// ---------------------------------------------------------------------------
+
+/// Named counters + histograms.  One process-wide instance lives behind
+/// [`Registry::global`]; subsystems that need isolated counts (e.g. the
+/// native backend's per-instance execution ledger) own their own.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn global() -> &'static Registry {
+        static GLOBAL: OnceLock<Registry> = OnceLock::new();
+        GLOBAL.get_or_init(Registry::new)
+    }
+
+    /// Handle for a named counter (created zeroed on first use).  Hold the
+    /// `Arc` across calls on hot paths — see [`crate::count!`].
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        let mut m = self.counters.lock().unwrap_or_else(|e| e.into_inner());
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Bump a named counter by `n` (one map lookup; fine off the hot path).
+    pub fn add(&self, name: &str, n: u64) {
+        self.counter(name).fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Handle for a named histogram with the default bucket ladder.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.histogram_with(name, &DEFAULT_BUCKETS)
+    }
+
+    /// Handle for a named histogram; `bounds` only applies on first
+    /// creation (later callers get the existing ladder).
+    pub fn histogram_with(&self, name: &str, bounds: &[f64]) -> Arc<Histogram> {
+        let mut m = self.hists.lock().unwrap_or_else(|e| e.into_inner());
+        m.entry(name.to_string())
+            .or_insert_with(|| Arc::new(Histogram::new(bounds)))
+            .clone()
+    }
+
+    /// One observation into a named histogram (map lookup per call).
+    pub fn observe(&self, name: &str, v: f64) {
+        self.histogram(name).observe(v);
+    }
+
+    /// Sum of every counter whose name starts with `prefix`.
+    pub fn sum_prefixed(&self, prefix: &str) -> u64 {
+        let m = self.counters.lock().unwrap_or_else(|e| e.into_inner());
+        m.iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(_, v)| v.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Point-in-time copy of every counter and histogram.
+    pub fn snapshot(&self) -> Snapshot {
+        let counters = {
+            let m = self.counters.lock().unwrap_or_else(|e| e.into_inner());
+            m.iter()
+                .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+                .collect()
+        };
+        let hists = {
+            let m = self.hists.lock().unwrap_or_else(|e| e.into_inner());
+            m.iter().map(|(k, v)| (k.clone(), v.snapshot())).collect()
+        };
+        Snapshot { counters, hists }
+    }
+
+    /// Prometheus text exposition of the whole registry under two generic
+    /// families: `perp_obs_counter_total{name="..."}` and
+    /// `perp_obs_histogram_{bucket,sum,count}{name="..."}` (buckets
+    /// cumulative, per convention).
+    pub fn render_prometheus(&self) -> String {
+        let snap = self.snapshot();
+        let mut out = String::new();
+        if !snap.counters.is_empty() {
+            out.push_str("# TYPE perp_obs_counter_total counter\n");
+            for (name, v) in &snap.counters {
+                out.push_str(&format!(
+                    "perp_obs_counter_total{{name=\"{}\"}} {v}\n",
+                    metric_escape(name)
+                ));
+            }
+        }
+        if !snap.hists.is_empty() {
+            out.push_str("# TYPE perp_obs_histogram histogram\n");
+            for (name, h) in &snap.hists {
+                let name = metric_escape(name);
+                let mut cum = 0u64;
+                for (i, c) in h.counts.iter().enumerate() {
+                    cum += c;
+                    let le = match h.bounds.get(i) {
+                        Some(b) => format!("{b}"),
+                        None => "+Inf".to_string(),
+                    };
+                    out.push_str(&format!(
+                        "perp_obs_histogram_bucket{{name=\"{name}\",le=\"{le}\"}} {cum}\n"
+                    ));
+                }
+                out.push_str(&format!("perp_obs_histogram_sum{{name=\"{name}\"}} {}\n", h.sum));
+                out.push_str(&format!(
+                    "perp_obs_histogram_count{{name=\"{name}\"}} {}\n",
+                    h.count
+                ));
+            }
+        }
+        out
+    }
+}
+
+fn metric_escape(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+// ---------------------------------------------------------------------------
+// Snapshots + diffs.
+// ---------------------------------------------------------------------------
+
+/// Point-in-time copy of a [`Registry`]; subtract two to get the work a
+/// region performed ([`Snapshot::since`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub hists: BTreeMap<String, HistSnap>,
+}
+
+impl Snapshot {
+    /// Counter/histogram deltas accumulated since `earlier` (zero-delta
+    /// entries are dropped; counters are monotonic so saturating-sub
+    /// guards against mixed-up argument order).
+    pub fn since(&self, earlier: &Snapshot) -> Snapshot {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, v)| {
+                let before = earlier.counters.get(k).copied().unwrap_or(0);
+                (k.clone(), v.saturating_sub(before))
+            })
+            .filter(|(_, d)| *d > 0)
+            .collect();
+        let hists = self
+            .hists
+            .iter()
+            .filter_map(|(k, h)| {
+                let mut d = h.clone();
+                if let Some(b) = earlier.hists.get(k) {
+                    if b.bounds == d.bounds {
+                        for (dc, bc) in d.counts.iter_mut().zip(&b.counts) {
+                            *dc = dc.saturating_sub(*bc);
+                        }
+                        d.count = d.count.saturating_sub(b.count);
+                        d.sum -= b.sum;
+                    }
+                }
+                (d.count > 0).then_some((k.clone(), d))
+            })
+            .collect();
+        Snapshot { counters, hists }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Percentiles.
+// ---------------------------------------------------------------------------
+
+/// Exact percentile over **sorted** samples using the bench-serve
+/// convention `sorted[min(floor(len * p), len - 1)]` — shared so every
+/// latency report picks the same sample.  Returns NaN on empty input.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    sorted[((sorted.len() as f64 * p) as usize).min(sorted.len() - 1)]
+}
+
+/// Bump a named counter on the global registry.  The handle is cached in
+/// a per-call-site `OnceLock`, so a warm call is one relaxed `fetch_add`
+/// — safe on hot paths.  Requires a string-literal name.
+#[macro_export]
+macro_rules! count {
+    ($name:expr) => {
+        $crate::count!($name, 1u64)
+    };
+    ($name:expr, $n:expr) => {{
+        static HANDLE: std::sync::OnceLock<
+            std::sync::Arc<std::sync::atomic::AtomicU64>,
+        > = std::sync::OnceLock::new();
+        HANDLE
+            .get_or_init(|| $crate::obs::counters::Registry::global().counter($name))
+            .fetch_add($n as u64, std::sync::atomic::Ordering::Relaxed);
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_snapshot() {
+        let r = Registry::new();
+        r.add("a.x", 2);
+        r.add("a.y", 1);
+        let h = r.counter("a.x");
+        h.fetch_add(3, Ordering::Relaxed);
+        let s = r.snapshot();
+        assert_eq!(s.counters["a.x"], 5);
+        assert_eq!(s.counters["a.y"], 1);
+        assert_eq!(r.sum_prefixed("a."), 6);
+        assert_eq!(r.sum_prefixed("b."), 0);
+    }
+
+    #[test]
+    fn snapshot_diff_arithmetic() {
+        let r = Registry::new();
+        r.add("n.runs", 4);
+        r.observe("lat", 0.3);
+        let before = r.snapshot();
+        r.add("n.runs", 3);
+        r.add("n.other", 1);
+        r.observe("lat", 7.0);
+        r.observe("lat", 0.4);
+        let delta = r.snapshot().since(&before);
+        assert_eq!(delta.counters["n.runs"], 3);
+        assert_eq!(delta.counters["n.other"], 1);
+        assert_eq!(delta.counters.len(), 2, "zero deltas must be dropped");
+        let lat = &delta.hists["lat"];
+        assert_eq!(lat.count, 2);
+        assert!((lat.sum - 7.4).abs() < 1e-9);
+        assert_eq!(lat.counts.iter().sum::<u64>(), 2);
+        // diff of identical snapshots is empty
+        let s = r.snapshot();
+        assert_eq!(s.since(&s), Snapshot::default());
+    }
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        let h = Histogram::new(&[1.0, 10.0]);
+        for v in [0.5, 1.0, 2.0, 100.0] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.counts, vec![2, 1, 1]); // <=1, <=10, +Inf
+        assert_eq!(s.count, 4);
+        assert!((s.sum - 103.5).abs() < 1e-9);
+        assert!((s.mean() - 25.875).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_matches_sort_convention() {
+        let lats = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+        // the bespoke formula this replaces
+        let pct = |p: f64| lats[((lats.len() as f64 * p) as usize).min(lats.len() - 1)];
+        for p in [0.0, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            assert_eq!(percentile(&lats, p), pct(p), "p={p}");
+        }
+        assert_eq!(percentile(&[42.0], 0.5), 42.0);
+        assert!(percentile(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn prometheus_rendering() {
+        let r = Registry::new();
+        r.add("plan.cache.hit", 2);
+        r.histogram_with("wait_ms", &[1.0, 5.0]).observe(3.0);
+        let text = r.render_prometheus();
+        assert!(text.contains("perp_obs_counter_total{name=\"plan.cache.hit\"} 2"));
+        assert!(text.contains("perp_obs_histogram_bucket{name=\"wait_ms\",le=\"5\"} 1"));
+        assert!(text.contains("perp_obs_histogram_bucket{name=\"wait_ms\",le=\"+Inf\"} 1"));
+        assert!(text.contains("perp_obs_histogram_count{name=\"wait_ms\"} 1"));
+    }
+
+    #[test]
+    fn count_macro_hits_global_registry() {
+        let before = Registry::global().snapshot();
+        crate::count!("test.macro.bump");
+        crate::count!("test.macro.bump", 2);
+        let delta = Registry::global().snapshot().since(&before);
+        assert_eq!(delta.counters["test.macro.bump"], 3);
+    }
+}

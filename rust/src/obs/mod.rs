@@ -1,0 +1,27 @@
+//! Observability: hierarchical tracing, counters and histograms — the
+//! measurement substrate behind `--trace`, `repro profile`, `plan show
+//! --timings` and the serve `/metrics` registry re-emission.
+//!
+//! PERP's claim is *cheap* retraining, so this repo must be able to show
+//! where wall-clock and backend work actually go.  Two pieces:
+//!
+//! * [`trace`] — RAII spans with thread/worker attribution.  Disabled
+//!   (the default) a span is one relaxed atomic load and no allocation;
+//!   enabled (`PERP_TRACE=1` / `--trace`) spans land in an in-memory ring
+//!   buffer that [`trace::flush`] writes as Chrome trace-event JSON
+//!   (loadable in Perfetto / `chrome://tracing`) plus a line-per-span
+//!   JSONL twin.  The plan executor, thread-budget shares, native backend
+//!   executions and the serve batcher all emit spans, so `--jobs K` worker
+//!   occupancy, frontier stalls and per-key run-lock waits become visible
+//!   timelines.
+//! * [`counters`] — a global [`counters::Registry`] of named monotonic
+//!   counters and fixed-bucket histograms with snapshot/diff support.
+//!   Always on (a counter bump is one relaxed `fetch_add`); surfaced by
+//!   serve `/metrics` in Prometheus text exposition and diffed around
+//!   every plan node to annotate reports with per-stage counter deltas.
+//!
+//! Everything is hand-rolled over std (no tracing/metrics crates), like
+//! the rest of [`crate::util`].
+
+pub mod counters;
+pub mod trace;

@@ -1,0 +1,391 @@
+//! Hierarchical spans with thread attribution, flushed as Chrome
+//! trace-event JSON (Perfetto / `chrome://tracing`) plus a JSONL twin.
+//!
+//! Disabled (the default) the whole module costs one relaxed atomic load
+//! per span site and performs **no allocation** — the [`crate::span!`]
+//! macro checks [`enabled`] before touching its format arguments.
+//! Enabled via `PERP_TRACE=1` (or `=path/to/trace.json`) or the CLI
+//! `--trace` flag, every [`Span`] records (name, category, thread,
+//! nesting depth, start, duration, args) into a bounded in-memory ring
+//! buffer; [`flush`] writes the buffer out at process exit.
+//!
+//! Threads are attributed by a process-local id assigned on first use;
+//! worker threads named at spawn (`plan-worker-0`, ...) become named
+//! tracks in the Chrome viewer via `thread_name` metadata events.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Ring-buffer capacity; the oldest spans are dropped past this (the
+/// drop count is reported in the flushed file's metadata).
+const RING_CAP: usize = 1 << 18;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// Hot-path gate: a single relaxed load.  Every recording entry point
+/// (and the [`crate::span!`] macro) checks this first, so with tracing
+/// off no names are formatted and nothing allocates.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+struct State {
+    events: VecDeque<SpanEvent>,
+    /// tid -> thread name, registered on each thread's first span.
+    threads: BTreeMap<u64, String>,
+    /// flush target (Chrome JSON path; the JSONL twin derives from it).
+    out: Option<PathBuf>,
+}
+
+fn state() -> &'static Mutex<State> {
+    static STATE: OnceLock<Mutex<State>> = OnceLock::new();
+    STATE.get_or_init(|| {
+        Mutex::new(State { events: VecDeque::new(), threads: BTreeMap::new(), out: None })
+    })
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Turn tracing on/off and set the flush target.  The CLI calls this
+/// while parsing common flags: `--trace` (or `PERP_TRACE=1`) targets
+/// `<out>/trace.json`, `PERP_TRACE=<path>` overrides the path.
+pub fn configure(on: bool, out: Option<PathBuf>) {
+    let _ = epoch(); // pin t=0 before any span
+    {
+        let mut st = state().lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(p) = out {
+            st.out = Some(p);
+        }
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Resolve the `PERP_TRACE` env knob: `Some(path_override)` nested in an
+/// on/off decision.  `""`/`"0"`/`"false"` = off, `"1"`/`"true"` = on with
+/// the default path, anything else = on, writing to that path.
+pub fn env_request() -> Option<Option<PathBuf>> {
+    match std::env::var("PERP_TRACE") {
+        Err(_) => None,
+        Ok(v) => match v.trim() {
+            "" | "0" | "false" => None,
+            "1" | "true" => Some(None),
+            path => Some(Some(PathBuf::from(path))),
+        },
+    }
+}
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    static DEPTH: std::cell::Cell<u32> = const { std::cell::Cell::new(0) };
+}
+
+fn register_thread(st: &mut State, tid: u64) {
+    st.threads.entry(tid).or_insert_with(|| {
+        std::thread::current()
+            .name()
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("thread-{tid}"))
+    });
+}
+
+/// One completed span (Chrome "X" complete event).
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    pub name: String,
+    pub cat: &'static str,
+    pub tid: u64,
+    /// Nesting depth on this thread at entry (0 = top level).
+    pub depth: u32,
+    /// Microseconds since the trace epoch.
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub args: Vec<(&'static str, String)>,
+}
+
+/// RAII span: records itself into the ring buffer on drop.  Construct
+/// through [`crate::span!`] (zero-cost when disabled) or [`Span::start`].
+pub struct Span {
+    inner: Option<SpanInner>,
+}
+
+struct SpanInner {
+    name: String,
+    cat: &'static str,
+    tid: u64,
+    depth: u32,
+    start: Instant,
+    args: Vec<(&'static str, String)>,
+}
+
+impl Span {
+    /// The no-op span handed out while tracing is disabled.
+    #[inline]
+    pub fn off() -> Span {
+        Span { inner: None }
+    }
+
+    /// Open a span now.  Callers with pre-formatted names can use this
+    /// directly; prefer [`crate::span!`] so name formatting is skipped
+    /// when tracing is off.
+    pub fn start(cat: &'static str, name: impl Into<String>) -> Span {
+        if !enabled() {
+            return Span::off();
+        }
+        let tid = TID.with(|t| *t);
+        let depth = DEPTH.with(|d| {
+            let v = d.get();
+            d.set(v + 1);
+            v
+        });
+        Span {
+            inner: Some(SpanInner {
+                name: name.into(),
+                cat,
+                tid,
+                depth,
+                start: Instant::now(),
+                args: Vec::new(),
+            }),
+        }
+    }
+
+    /// Attach a key/value argument (shown in the trace viewer).  The
+    /// value is only formatted when the span is live.
+    pub fn arg(mut self, key: &'static str, value: impl std::fmt::Display) -> Span {
+        if let Some(inner) = &mut self.inner {
+            inner.args.push((key, value.to_string()));
+        }
+        self
+    }
+
+    /// Whether this span is actually recording.
+    pub fn is_recording(&self) -> bool {
+        self.inner.is_some()
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(inner) = self.inner.take() else { return };
+        DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
+        let ep = epoch();
+        let ts_us = inner.start.duration_since(ep).as_micros() as u64;
+        let dur_us = inner.start.elapsed().as_micros() as u64;
+        let ev = SpanEvent {
+            name: inner.name,
+            cat: inner.cat,
+            tid: inner.tid,
+            depth: inner.depth,
+            ts_us,
+            dur_us,
+            args: inner.args,
+        };
+        let mut st = state().lock().unwrap_or_else(|e| e.into_inner());
+        register_thread(&mut st, ev.tid);
+        if st.events.len() >= RING_CAP {
+            st.events.pop_front();
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        }
+        st.events.push_back(ev);
+    }
+}
+
+/// Spans dropped to ring-buffer overflow so far.
+pub fn dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Number of spans currently buffered.
+pub fn buffered() -> usize {
+    state().lock().unwrap_or_else(|e| e.into_inner()).events.len()
+}
+
+/// Drain and return all buffered spans (test/introspection hook; flush
+/// uses it internally).
+pub fn drain() -> Vec<SpanEvent> {
+    let mut st = state().lock().unwrap_or_else(|e| e.into_inner());
+    st.events.drain(..).collect()
+}
+
+fn event_json(ev: &SpanEvent) -> Json {
+    let mut args = vec![("depth", Json::Num(ev.depth as f64))];
+    for (k, v) in &ev.args {
+        args.push((*k, Json::Str(v.clone())));
+    }
+    Json::obj(vec![
+        ("ph", Json::Str("X".to_string())),
+        ("pid", Json::Num(1.0)),
+        ("tid", Json::Num(ev.tid as f64)),
+        ("name", Json::Str(ev.name.clone())),
+        ("cat", Json::Str(ev.cat.to_string())),
+        ("ts", Json::Num(ev.ts_us as f64)),
+        ("dur", Json::Num(ev.dur_us as f64)),
+        ("args", Json::obj(args)),
+    ])
+}
+
+fn thread_meta_json(tid: u64, name: &str) -> Json {
+    Json::obj(vec![
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(1.0)),
+        ("tid", Json::Num(tid as f64)),
+        ("name", Json::Str("thread_name".to_string())),
+        (
+            "args",
+            Json::obj(vec![("name", Json::Str(name.to_string()))]),
+        ),
+    ])
+}
+
+/// Write the buffered spans to `path` (Chrome trace-event JSON array)
+/// and `<path with .jsonl>` (one span object per line), draining the
+/// buffer.  No-op returning `None` when tracing never recorded anything;
+/// uses the configured output path when `path` is `None`.
+pub fn flush(path: Option<&Path>) -> std::io::Result<Option<(PathBuf, usize)>> {
+    let (events, threads, configured) = {
+        let mut st = state().lock().unwrap_or_else(|e| e.into_inner());
+        let events: Vec<SpanEvent> = st.events.drain(..).collect();
+        (events, st.threads.clone(), st.out.clone())
+    };
+    let Some(path) = path.map(Path::to_path_buf).or(configured) else {
+        return Ok(None);
+    };
+    if events.is_empty() {
+        return Ok(None);
+    }
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut arr: Vec<Json> = threads
+        .iter()
+        .map(|(tid, name)| thread_meta_json(*tid, name))
+        .collect();
+    arr.extend(events.iter().map(event_json));
+    let doc = Json::obj(vec![
+        ("traceEvents", Json::Arr(arr)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        ("droppedSpans", Json::Num(dropped() as f64)),
+    ]);
+    std::fs::write(&path, doc.to_string())?;
+    let jsonl = path.with_extension("jsonl");
+    let mut lines = String::new();
+    for ev in &events {
+        let mut obj = vec![
+            ("name", Json::Str(ev.name.clone())),
+            ("cat", Json::Str(ev.cat.to_string())),
+            ("tid", Json::Num(ev.tid as f64)),
+            ("depth", Json::Num(ev.depth as f64)),
+            ("ts_us", Json::Num(ev.ts_us as f64)),
+            ("dur_us", Json::Num(ev.dur_us as f64)),
+        ];
+        if let Some(name) = threads.get(&ev.tid) {
+            obj.push(("thread", Json::Str(name.clone())));
+        }
+        for (k, v) in &ev.args {
+            obj.push((k, Json::Str(v.clone())));
+        }
+        lines.push_str(&Json::obj(obj).to_string());
+        lines.push('\n');
+    }
+    std::fs::write(&jsonl, lines)?;
+    Ok(Some((path, events.len())))
+}
+
+/// Open a trace span.  `span!("cat", "name {}", args...)` returns an RAII
+/// guard; bind it (`let _sp = span!(...)`) so it covers the scope.  When
+/// tracing is disabled this is one atomic load — the format arguments
+/// are **not** evaluated.
+#[macro_export]
+macro_rules! span {
+    ($cat:expr, $($fmt:tt)*) => {
+        if $crate::obs::trace::enabled() {
+            $crate::obs::trace::Span::start($cat, format!($($fmt)*))
+        } else {
+            $crate::obs::trace::Span::off()
+        }
+    };
+}
+
+/// Unit tests touching the process-global trace/log state serialize
+/// through this lock (logging's tests share it).
+#[cfg(test)]
+pub(crate) static TEST_GATE: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use super::TEST_GATE as GATE;
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        configure(false, None);
+        let before = buffered();
+        {
+            let sp = span!("test", "never-{}", "formatted");
+            assert!(!sp.is_recording());
+        }
+        assert_eq!(buffered(), before, "disabled span must not record");
+    }
+
+    #[test]
+    fn spans_nest_and_record_depth() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        configure(true, None);
+        drain();
+        {
+            let _outer = Span::start("test", "outer").arg("k", 7);
+            let _inner = Span::start("test", "inner");
+        }
+        configure(false, None);
+        let evs = drain();
+        let outer = evs.iter().find(|e| e.name == "outer").unwrap();
+        let inner = evs.iter().find(|e| e.name == "inner").unwrap();
+        assert_eq!(outer.depth, 0);
+        assert_eq!(inner.depth, 1);
+        assert_eq!(outer.tid, inner.tid);
+        assert_eq!(outer.args, vec![("k", "7".to_string())]);
+        // inner closes first -> recorded first; both within the outer window
+        assert!(inner.ts_us >= outer.ts_us);
+        assert!(inner.ts_us + inner.dur_us <= outer.ts_us + outer.dur_us + 1);
+    }
+
+    #[test]
+    fn flush_writes_chrome_and_jsonl() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        configure(true, None);
+        drain();
+        drop(Span::start("test", "flushed"));
+        configure(false, None);
+        let dir = std::env::temp_dir().join(format!("perp-trace-{}", std::process::id()));
+        let path = dir.join("trace.json");
+        let (out, n) = flush(Some(&path)).unwrap().unwrap();
+        assert!(n >= 1);
+        let doc = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        let evs = doc.req("traceEvents").as_arr().unwrap();
+        assert!(evs.iter().any(|e| e.req("ph").as_str() == Some("M")));
+        assert!(evs
+            .iter()
+            .any(|e| e.req("ph").as_str() == Some("X")
+                && e.req("name").as_str() == Some("flushed")));
+        let jsonl = std::fs::read_to_string(out.with_extension("jsonl")).unwrap();
+        assert!(jsonl.lines().count() >= 1);
+        for line in jsonl.lines() {
+            Json::parse(line).unwrap();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+}

@@ -62,6 +62,7 @@ use anyhow::{Context, Result};
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::reconstruct;
+use crate::obs::counters::Registry;
 use crate::coordinator::sweep::ExpContext;
 use crate::coordinator::Session;
 use crate::eval::{mean_std, MeanStd};
@@ -109,6 +110,14 @@ pub struct StageReport {
     pub lr: Option<f64>,
     /// populated by `reconstruct` stages
     pub mean_improvement: Option<f64>,
+    /// global-registry counter deltas attributed to this node's execution
+    /// (exact at `--jobs 1`; under parallelism concurrent nodes overlap).
+    /// Loaded from the profile sidecar on cache hits; empty when the stage
+    /// predates profiling.
+    pub counters: BTreeMap<String, u64>,
+    /// wall-clock of the *original* computation — `wall_s` on a miss, the
+    /// sidecar-recorded value on a hit (where `wall_s` is just lookup time)
+    pub computed_wall_s: Option<f64>,
 }
 
 impl StageReport {
@@ -124,6 +133,8 @@ impl StageReport {
             trainable_pct: None,
             lr: None,
             mean_improvement: None,
+            counters: BTreeMap::new(),
+            computed_wall_s: None,
         }
     }
 }
@@ -316,7 +327,7 @@ impl Progress {
         } else {
             format!("done in {:.2}s", rep.wall_s)
         };
-        println!(
+        crate::util::logging::progress(&format!(
             "[{}/{}] {:<14} {:<28} {} (key {})",
             *done,
             self.total,
@@ -324,7 +335,7 @@ impl Progress {
             rep.label,
             status,
             &rep.key[..10]
-        );
+        ));
     }
 }
 
@@ -444,6 +455,9 @@ impl<'rt> Executor<'rt> {
     ) -> Result<(GraphReport, Option<Session<'rt>>)> {
         g.validate()
             .map_err(|e| anyhow::anyhow!("invalid plan graph {:?}: {e}", g.name))?;
+        let _run_span = crate::span!("plan", "graph {}", g.name)
+            .arg("jobs", self.jobs)
+            .arg("nodes", g.stage_count());
         let keys = g
             .node_keys(&self.cfg, self.seed)
             .map_err(|e| anyhow::anyhow!("keying plan graph {:?}: {e}", g.name))?;
@@ -553,10 +567,15 @@ impl<'rt> Executor<'rt> {
         let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
         let workers = self.jobs.min(g.stage_count().max(1));
         std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| {
-                    self.worker(ctx, g, keys, complete, progress, &sched, &reports, &failure)
-                });
+            for i in 0..workers {
+                // named threads give trace spans (and thread dumps) stable
+                // per-worker tracks instead of anonymous tids
+                std::thread::Builder::new()
+                    .name(format!("plan-worker-{i}"))
+                    .spawn_scoped(scope, || {
+                        self.worker(ctx, g, keys, complete, progress, &sched, &reports, &failure)
+                    })
+                    .expect("spawning plan worker thread");
             }
         });
         if let Some(e) = failure.into_inner().unwrap_or_else(|p| p.into_inner()) {
@@ -592,6 +611,9 @@ impl<'rt> Executor<'rt> {
                     if let Some(t) = st.queue.pop_front() {
                         break t;
                     }
+                    // frontier stall: no ready node for this worker — the
+                    // span makes scheduler starvation visible in the trace
+                    let _stall = crate::span!("sched", "frontier.wait");
                     st = cv.wait(st).unwrap_or_else(|p| p.into_inner());
                 }
             };
@@ -777,6 +799,7 @@ impl<'rt> Executor<'rt> {
             Stage::Eval { .. } => rep.metrics = Some(read_metrics(&dir.join("metrics.json"))?),
             Stage::Pretrain | Stage::Merge | Stage::Export { .. } => {}
         }
+        load_profile(&profile_path(&self.cache_dir, key), &mut rep);
         Ok(rep)
     }
 
@@ -804,8 +827,15 @@ impl<'rt> Executor<'rt> {
         // in-flight key dedup: a concurrent branch computing the same key
         // finishes (and commits) before this hit-check runs
         let key_lock = self.key_lock(&key);
-        let _key_guard = key_lock.lock().unwrap_or_else(|p| p.into_inner());
+        let _key_guard = {
+            let _wait = crate::span!("lock", "key.wait {}", &key.hex()[..10]);
+            key_lock.lock().unwrap_or_else(|p| p.into_inner())
+        };
+        let _node_span = crate::span!("node", "{}", node.name)
+            .arg("stage", stage.label())
+            .arg("key", &key.hex()[..10]);
         let t0 = Instant::now();
+        let snap0 = Registry::global().snapshot();
         let mut rep = StageReport::new(stage.label(), &key);
         // cache-miss artifacts stream into a private staging dir and land
         // via one atomic rename — a killed or racing run never leaves a
@@ -1009,6 +1039,15 @@ impl<'rt> Executor<'rt> {
             commit_stage_dir(&tmp, &dir)?;
         }
         rep.wall_s = t0.elapsed().as_secs_f64();
+        if rep.cache_hit {
+            crate::count!("plan.cache.hit");
+            load_profile(&profile_path(&self.cache_dir, &key), &mut rep);
+        } else {
+            crate::count!("plan.cache.miss");
+            rep.counters = Registry::global().snapshot().since(&snap0).counters;
+            rep.computed_wall_s = Some(rep.wall_s);
+            write_profile(&profile_path(&self.cache_dir, &key), &rep);
+        }
         let nrep = NodeReport {
             name: node.name.clone(),
             parent: node.parent.clone(),
@@ -1257,6 +1296,63 @@ fn read_metrics(path: &Path) -> Result<EvalMetrics> {
         per_task,
         sparsity: num("sparsity", 0.0),
     })
+}
+
+/// Profile sidecar path for one stage key: `plan/<key>.prof.json`, a file
+/// *next to* — never inside — the stage dir.  Stage dirs must stay
+/// bitwise-identical across runs and schedules (pinned by the graph parity
+/// tests), so volatile observations (wall clock, counter deltas) live in
+/// this sidecar instead.  `gc` only considers directories, so sidecars are
+/// never mistaken for unreachable stage dirs.
+fn profile_path(cache_dir: &Path, key: &Key) -> PathBuf {
+    cache_dir.join("plan").join(format!("{}.prof.json", key.hex()))
+}
+
+/// Record a freshly computed node's wall clock + counter deltas.  Best
+/// effort: profile data is observability, never semantics, so write errors
+/// are swallowed.
+fn write_profile(path: &Path, rep: &StageReport) {
+    let counters: Vec<(&str, Json)> =
+        rep.counters.iter().map(|(k, &v)| (k.as_str(), Json::Num(v as f64))).collect();
+    let j = Json::obj(vec![
+        ("stage", Json::Str(rep.label.clone())),
+        ("wall_s", num_or_null(rep.wall_s)),
+        ("counters", Json::obj(counters)),
+    ]);
+    let _ = write_json(path, &j);
+}
+
+/// Load recorded wall clock + counters into a cache-hit report (no-op when
+/// the stage predates profiling or the sidecar is unreadable).
+fn load_profile(path: &Path, rep: &mut StageReport) {
+    if let Some((wall_s, counters)) = parse_profile(path) {
+        rep.computed_wall_s = wall_s;
+        rep.counters = counters;
+    }
+}
+
+/// Recorded `(wall_s, counter deltas)` for one stage key, if a profile
+/// sidecar exists — `plan show --timings` reads these without re-running.
+pub fn recorded_profile(
+    cache_dir: &Path,
+    key: &Key,
+) -> Option<(Option<f64>, BTreeMap<String, u64>)> {
+    parse_profile(&profile_path(cache_dir, key))
+}
+
+fn parse_profile(path: &Path) -> Option<(Option<f64>, BTreeMap<String, u64>)> {
+    let j = Json::parse(&std::fs::read_to_string(path).ok()?).ok()?;
+    let wall_s = j.get("wall_s").and_then(Json::as_f64);
+    let counters = j
+        .get("counters")
+        .and_then(Json::as_obj)
+        .map(|map| {
+            map.iter()
+                .filter_map(|(k, v)| v.as_f64().map(|n| (k.clone(), n as u64)))
+                .collect()
+        })
+        .unwrap_or_default();
+    Some((wall_s, counters))
 }
 
 fn read_meta_num(dir: &Path, key: &str) -> Option<f64> {

@@ -46,6 +46,7 @@ pub(super) fn prefill(
     let (slots, s, toks) = super::tokens_in(i32s);
     let (_, lens) = i32s["lens"];
     let vocab = mm.cfg.vocab;
+    crate::count!("decode.prefills");
 
     let tape = graph::forward(&gi, toks, slots, s);
     let (full_logits, kv) = tape.into_logits_and_kv();
@@ -93,6 +94,8 @@ pub(super) fn decode_step(
     // to stream `active[r]`, so idle slots cost nothing
     let active: Vec<usize> =
         (0..slots).filter(|&b| pos[b] >= 0 && (pos[b] as usize) < seq).collect();
+    crate::count!("decode.steps");
+    crate::count!("decode.active_rows", active.len() as u64);
 
     let mut out_logits = pool::zeroed(slots * vocab);
     let mut knew: Vec<Vec<f32>> =

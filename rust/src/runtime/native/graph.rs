@@ -292,10 +292,15 @@ fn norm_bwd(
 pub(crate) fn masked_fwd(gi: &GraphIn, wname: &str, x: &Tensor) -> Tensor {
     match gi.sparse.layout_of(wname) {
         WeightLayout::Csr => {
+            crate::count!("spmm.csr");
             sparse::spmm_nt(x, gi.sparse.get_csr(wname).expect("csr layout implies a cached form"))
         }
-        WeightLayout::Masked => linalg::matmul_nt_masked(x, gi.p(wname), gi.m(wname)),
+        WeightLayout::Masked => {
+            crate::count!("spmm.masked");
+            linalg::matmul_nt_masked(x, gi.p(wname), gi.m(wname))
+        }
         WeightLayout::Dense => {
+            crate::count!("spmm.dense");
             let wm = gi.p(wname).hadamard(gi.m(wname));
             let y = linalg::matmul_nt(x, &wm);
             pool::recycle(wm);
@@ -311,10 +316,15 @@ pub(crate) fn masked_fwd(gi: &GraphIn, wname: &str, x: &Tensor) -> Tensor {
 pub(crate) fn masked_bwd_dx(gi: &GraphIn, wname: &str, dy: &Tensor) -> Tensor {
     match gi.sparse.layout_of(wname) {
         WeightLayout::Csr => {
+            crate::count!("spmm.csr");
             sparse::spmm(dy, gi.sparse.get_csr(wname).expect("csr layout implies a cached form"))
         }
-        WeightLayout::Masked => linalg::matmul_masked(dy, gi.p(wname), gi.m(wname)),
+        WeightLayout::Masked => {
+            crate::count!("spmm.masked");
+            linalg::matmul_masked(dy, gi.p(wname), gi.m(wname))
+        }
         WeightLayout::Dense => {
+            crate::count!("spmm.dense");
             let wm = gi.p(wname).hadamard(gi.m(wname));
             let dx = linalg::matmul(dy, &wm);
             pool::recycle(wm);

@@ -21,11 +21,11 @@ pub mod graph;
 pub mod ops;
 
 use std::collections::{BTreeMap, BTreeSet, HashSet};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
+use crate::obs::counters::Registry;
 use crate::runtime::manifest::{is_lora_mode, split_adapter_name, DType, Manifest, ModelManifest};
 use crate::runtime::{Backend, Feed, Outputs};
 use crate::tensor::{linalg, pool, Tensor};
@@ -34,7 +34,11 @@ use graph::{GraphIn, ModeKind, SparseView};
 
 pub struct NativeBackend {
     manifest: Manifest,
-    exec_count: AtomicU64,
+    /// Per-instance execution ledger — one `exec.<name>` counter per
+    /// executable, summed by [`Backend::exec_count`].  The global
+    /// [`Registry`] additionally sees `backend.exec.<name>` so `/metrics`
+    /// and `repro profile` report per-executable breakdowns.
+    execs: Registry,
     prepared: Mutex<BTreeSet<(String, String)>>,
 }
 
@@ -48,7 +52,7 @@ impl NativeBackend {
     pub fn with_manifest(manifest: Manifest) -> NativeBackend {
         NativeBackend {
             manifest,
-            exec_count: AtomicU64::new(0),
+            execs: Registry::new(),
             prepared: Mutex::new(BTreeSet::new()),
         }
     }
@@ -121,7 +125,9 @@ impl Backend for NativeBackend {
             .lock()
             .unwrap()
             .insert((model.to_string(), exec.to_string()));
-        self.exec_count.fetch_add(1, Ordering::Relaxed);
+        self.execs.add(&format!("exec.{exec}"), 1);
+        Registry::global().add(&format!("backend.exec.{exec}"), 1);
+        let _sp = crate::span!("backend", "{exec}").arg("model", model);
 
         // ---- dispatch ----------------------------------------------------
         let sv = gather_sparse(mm, feed);
@@ -148,7 +154,7 @@ impl Backend for NativeBackend {
     }
 
     fn exec_count(&self) -> u64 {
-        self.exec_count.load(Ordering::Relaxed)
+        self.execs.sum_prefixed("exec.")
     }
 
     fn compiled_count(&self) -> usize {

@@ -268,6 +268,7 @@ pub fn merge_heads(x: &Tensor, b: usize, s: usize, h: usize, dh: usize) -> Tenso
 
 /// q, k, v: (B, H, S, dh).  Returns (output (B, H, S, dh), probs (B, H, S, S)).
 pub fn attention_fwd(q: &Tensor, k: &Tensor, v: &Tensor) -> (Tensor, Tensor) {
+    crate::count!("ops.attention_fwd");
     let (b, h, s, dh) = dims4(q);
     assert_eq!(k.shape(), q.shape());
     assert_eq!(v.shape(), q.shape());
@@ -578,6 +579,7 @@ pub fn adamw(
     step: f32,
     lr: f32,
 ) -> (Tensor, Tensor, Tensor) {
+    crate::count!("ops.adamw");
     assert_eq!(p.shape(), g.shape());
     let bc1 = 1.0 - ADAM_BETA1.powf(step);
     let bc2 = 1.0 - ADAM_BETA2.powf(step);

@@ -48,6 +48,9 @@ pub struct GenRequest {
     pub max_new: Option<usize>,
     /// 0 = greedy argmax; > 0 = softmax sampling at this temperature.
     pub temperature: f32,
+    /// Submission time — the `serve.queue.wait_ms` histogram measures from
+    /// here to KV-slot admission.
+    pub enqueued: std::time::Instant,
     pub reply: Sender<GenResult>,
 }
 
@@ -164,7 +167,13 @@ impl EngineHandle {
         let (tx, rx) = mpsc::channel();
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         self.metrics.queued.fetch_add(1, Ordering::Relaxed);
-        self.submit(Work::Gen(GenRequest { prompt, max_new, temperature, reply: tx }))?;
+        self.submit(Work::Gen(GenRequest {
+            prompt,
+            max_new,
+            temperature,
+            enqueued: std::time::Instant::now(),
+            reply: tx,
+        }))?;
         rx.recv().map_err(|_| anyhow!("engine dropped the request"))
     }
 
@@ -337,6 +346,8 @@ fn run_loop(
             while admitted.len() < headroom {
                 let Some(req) = pending.pop_front() else { break };
                 metrics.queued.fetch_sub(1, Ordering::Relaxed);
+                crate::obs::counters::Registry::global()
+                    .observe("serve.queue.wait_ms", req.enqueued.elapsed().as_secs_f64() * 1e3);
                 let slot = cache.alloc().expect("headroom implies a free slot");
                 // leave at least one position for generation
                 let ids = s.tokenizer.encode_prompt(&req.prompt, seq - 1);
@@ -358,6 +369,7 @@ fn run_loop(
             }
             metrics.prefills.fetch_add(1, Ordering::Relaxed);
             let run = {
+                let _sp = crate::span!("serve", "prefill").arg("admitted", admitted.len());
                 let feed = s
                     .feed()
                     .ints("tokens", &prefill_shape, &ptoks)
@@ -425,7 +437,15 @@ fn run_loop(
                 }
             }
         }
+        {
+            // per-step occupancy distributions: batch fill (decoding
+            // streams) and resident KV slots, for `/metrics` histograms
+            let reg = crate::obs::counters::Registry::global();
+            reg.observe("serve.batch.fill", active as f64);
+            reg.observe("serve.kv.occupied", cache.occupied() as f64);
+        }
         let run = {
+            let _sp = crate::span!("serve", "decode_step").arg("active", active);
             let mut feed = s
                 .feed()
                 .ints("tokens", &slot_shape, &step_tokens)

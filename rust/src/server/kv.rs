@@ -45,6 +45,12 @@ impl KvCache {
         self.free.len()
     }
 
+    /// Slots currently held by live streams (the occupancy `/metrics` and
+    /// the `serve.kv.occupied` histogram report).
+    pub fn occupied(&self) -> usize {
+        self.slots - self.free.len()
+    }
+
     pub fn alloc(&mut self) -> Option<usize> {
         self.free.pop()
     }

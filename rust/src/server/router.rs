@@ -253,6 +253,9 @@ fn metrics(state: &ServeState) -> String {
             e.info.csr_bytes
         ));
     }
+    // process-wide obs registry: backend exec counts, SpMM layout dispatch,
+    // tape-pool reuse, queue-wait / batch-fill / KV-occupancy histograms
+    out.push_str(&crate::obs::counters::Registry::global().render_prometheus());
     out
 }
 

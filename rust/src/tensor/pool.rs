@@ -57,11 +57,13 @@ pub fn zeroed(len: usize) -> Vec<f32> {
             if let Some(mut v) = pm.by_len.get_mut(&len).and_then(|l| l.pop()) {
                 pm.bytes -= 4 * len;
                 pm.hits += 1;
+                crate::count!("pool.tape.hit");
                 v.iter_mut().for_each(|x| *x = 0.0);
                 return v;
             }
         }
         pm.misses += 1;
+        crate::count!("pool.tape.miss");
         vec![0.0; len]
     })
 }

@@ -1,8 +1,12 @@
-//! Leveled stderr logging + wall-clock scoped timers.
+//! Leveled stderr logging, the serialized stdout progress sink, and
+//! wall-clock scoped timers.
 //!
-//! `PERP_LOG=debug|info|warn` controls verbosity (default info).
+//! `PERP_LOG=debug|info|warn|off` controls verbosity (default info;
+//! `off` silences everything including progress lines — handy for
+//! benches).
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 #[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
@@ -10,6 +14,8 @@ pub enum Level {
     Debug = 0,
     Info = 1,
     Warn = 2,
+    /// Threshold-only level: nothing logs at or above it.
+    Off = 3,
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(255);
@@ -22,6 +28,7 @@ fn level() -> u8 {
     let parsed = match std::env::var("PERP_LOG").as_deref() {
         Ok("debug") => 0,
         Ok("warn") => 2,
+        Ok("off") => 3,
         _ => 1,
     };
     LEVEL.store(parsed, Ordering::Relaxed);
@@ -33,7 +40,7 @@ pub fn set_level(l: Level) {
 }
 
 pub fn enabled(l: Level) -> bool {
-    l as u8 >= level()
+    l != Level::Off && l as u8 >= level()
 }
 
 pub fn log(l: Level, msg: &str) {
@@ -42,8 +49,23 @@ pub fn log(l: Level, msg: &str) {
             Level::Debug => "DBG",
             Level::Info => "INF",
             Level::Warn => "WRN",
+            Level::Off => return,
         };
         eprintln!("[{tag}] {msg}");
+    }
+}
+
+/// One process-wide lock so concurrent workers emit whole progress lines
+/// (the parallel plan executor shares it through this sink).
+static PROGRESS: Mutex<()> = Mutex::new(());
+
+/// Progress lines go to **stdout** (they are part of the command's
+/// conversational output and CI greps them there), serialized under one
+/// lock and gated at info level — `PERP_LOG=off` runs silent.
+pub fn progress(msg: &str) {
+    if enabled(Level::Info) {
+        let _guard = PROGRESS.lock().unwrap_or_else(|e| e.into_inner());
+        println!("{msg}");
     }
 }
 
@@ -60,16 +82,43 @@ macro_rules! warn {
     ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, &format!($($arg)*)) };
 }
 
-/// RAII scope timer: logs `<name>: <elapsed>` at info level on drop.
+/// RAII scope timer: logs `<name>: <elapsed>` at info level on drop and
+/// doubles as an `obs::trace` span when tracing is on.  When *neither*
+/// sink is live the timer holds no name at all — creating and dropping it
+/// never formats or allocates (construct via [`crate::scope_timer!`]).
 pub struct ScopeTimer {
-    name: String,
+    name: Option<String>,
     start: Instant,
+    _span: crate::obs::trace::Span,
 }
 
 impl ScopeTimer {
     pub fn new(name: &str) -> Self {
-        ScopeTimer { name: name.to_string(), start: Instant::now() }
+        let span = if crate::obs::trace::enabled() {
+            crate::obs::trace::Span::start("timer", name)
+        } else {
+            crate::obs::trace::Span::off()
+        };
+        ScopeTimer {
+            name: enabled(Level::Info).then(|| name.to_string()),
+            start: Instant::now(),
+            _span: span,
+        }
     }
+
+    /// Macro back-end: `name` is `None` when both logging and tracing are
+    /// disabled, so no string was ever formatted.
+    pub fn from_parts(name: Option<String>) -> Self {
+        match name {
+            Some(n) => ScopeTimer::new(&n),
+            None => ScopeTimer {
+                name: None,
+                start: Instant::now(),
+                _span: crate::obs::trace::Span::off(),
+            },
+        }
+    }
+
     pub fn elapsed_secs(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
@@ -77,21 +126,49 @@ impl ScopeTimer {
 
 impl Drop for ScopeTimer {
     fn drop(&mut self) {
-        log(Level::Info, &format!("{}: {:.2}s", self.name, self.elapsed_secs()));
+        if let Some(name) = self.name.take() {
+            log(Level::Info, &format!("{}: {:.2}s", name, self.elapsed_secs()));
+        }
     }
+}
+
+/// `span!`-style scoped timing: `let _t = scope_timer!("prune {}", m);`
+/// logs the elapsed time on drop and opens an `obs::trace` span while
+/// tracing is on.  Format arguments are not evaluated when both logging
+/// and tracing are disabled.
+#[macro_export]
+macro_rules! scope_timer {
+    ($($fmt:tt)*) => {
+        $crate::util::logging::ScopeTimer::from_parts(
+            if $crate::util::logging::enabled($crate::util::logging::Level::Info)
+                || $crate::obs::trace::enabled()
+            {
+                Some(format!($($fmt)*))
+            } else {
+                None
+            },
+        )
+    };
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    use crate::obs::trace::TEST_GATE as GATE;
+
     #[test]
     fn level_gating() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
         set_level(Level::Warn);
         assert!(!enabled(Level::Info));
         assert!(enabled(Level::Warn));
+        set_level(Level::Off);
+        assert!(!enabled(Level::Warn));
+        assert!(!enabled(Level::Off), "Off is a threshold, never a log level");
         set_level(Level::Debug);
         assert!(enabled(Level::Info));
+        set_level(Level::Warn);
     }
 
     #[test]
@@ -99,6 +176,16 @@ mod tests {
         let t = ScopeTimer::new("test");
         std::thread::sleep(std::time::Duration::from_millis(5));
         assert!(t.elapsed_secs() >= 0.004);
-        set_level(Level::Warn); // silence the drop log in test output
+    }
+
+    #[test]
+    fn disabled_timer_skips_formatting() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = if enabled(Level::Info) { Level::Info } else { Level::Warn };
+        set_level(Level::Off);
+        let t = crate::scope_timer!("never-{}", "formatted");
+        assert!(t.name.is_none(), "no name may be formatted while off");
+        drop(t);
+        set_level(prev);
     }
 }

@@ -105,6 +105,9 @@ pub struct BudgetShare {
     threads: usize,
     /// scoped pool the node's kernels run inside; `None` = global pool
     pool: Option<rayon::ThreadPool>,
+    /// covers the share's hold window so budget rebalancing shows up as a
+    /// timeline when tracing is on
+    _span: crate::obs::trace::Span,
 }
 
 /// Claim a slice of the kernel budget for one node.  With N nodes live
@@ -120,7 +123,10 @@ pub fn acquire_share() -> BudgetShare {
         None
     };
     let threads = if pool.is_some() { slice } else { total };
-    BudgetShare { threads, pool }
+    let span = crate::span!("threads", "budget.share")
+        .arg("threads", threads)
+        .arg("live", live);
+    BudgetShare { threads, pool, _span: span }
 }
 
 impl BudgetShare {

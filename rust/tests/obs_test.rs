@@ -1,0 +1,220 @@
+//! Integration tests for the `perp::obs` layer: the disabled path records
+//! (and allocates) nothing, a parallel graph run traces one span per
+//! executed node on named worker tracks, counter snapshot/diff arithmetic
+//! holds, and — the load-bearing invariant — stage artifacts are
+//! bitwise-identical whether tracing is on or off.
+//!
+//! Tracing/logging state is process-global, so every test that flips it
+//! serializes through one lock (other test files run as separate
+//! binaries and are unaffected).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use perp::config::ExperimentConfig;
+use perp::obs::counters::Registry;
+use perp::obs::trace;
+use perp::pipeline::{Executor, GraphBuilder, Plan};
+use perp::pruning::{Criterion, Pattern};
+use perp::runtime::NativeBackend;
+use perp::util::json::Json;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn cfg(retrain_steps: u64) -> ExperimentConfig {
+    let mut c = ExperimentConfig::quick("gpt-nano");
+    c.pretrain_steps = 120;
+    c.retrain_steps = retrain_steps;
+    c.recon_steps = 6;
+    c.calib_seqs = 8;
+    c.items_per_task = 6;
+    c.eval_batches = 2;
+    c
+}
+
+#[test]
+fn disabled_tracing_buffers_nothing() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    trace::configure(false, None);
+    let before = trace::buffered();
+    for _ in 0..100 {
+        let sp = perp::span!("test", "disabled {}", "span");
+        assert!(!sp.is_recording());
+    }
+    assert_eq!(
+        trace::buffered(),
+        before,
+        "spans created while tracing is off must never reach the ring buffer"
+    );
+}
+
+#[test]
+fn parallel_graph_run_traces_every_node_on_named_worker_tracks() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let rt = NativeBackend::new();
+    let dir = std::env::temp_dir().join("perp_obs_test_traced");
+    std::fs::remove_dir_all(&dir).ok();
+
+    let g = GraphBuilder::new("traced_fan")
+        .pretrain()
+        .fork_sparsities(Criterion::Magnitude, &[0.5, 0.7, 0.9])
+        .eval_ppl()
+        .build();
+
+    trace::configure(true, None);
+    trace::drain();
+    let report = Executor::new(&rt, cfg(31), dir.clone(), 0)
+        .quiet(true)
+        .jobs(4)
+        .run_graph(&g)
+        .unwrap();
+    trace::configure(false, None);
+    assert_eq!(report.computed(), g.stage_count(), "fresh cache computes all");
+
+    let out = dir.join("trace.json");
+    let (path, spans) = trace::flush(Some(&out)).unwrap().expect("traced run must flush spans");
+    assert!(spans >= g.stage_count());
+
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let events = doc.req("traceEvents").as_arr().unwrap();
+
+    fn field(e: &Json, k: &str) -> Option<String> {
+        e.get(k).and_then(Json::as_str).map(str::to_string)
+    }
+    // one "node" span per executed graph node, names matching exactly
+    let node_spans: Vec<String> = events
+        .iter()
+        .filter(|e| {
+            field(e, "ph").as_deref() == Some("X") && field(e, "cat").as_deref() == Some("node")
+        })
+        .filter_map(|e| field(e, "name"))
+        .collect();
+    let expected: std::collections::BTreeSet<String> = g
+        .nodes
+        .iter()
+        .filter(|n| n.stage().is_some())
+        .map(|n| n.name.clone())
+        .collect();
+    let got: std::collections::BTreeSet<String> = node_spans.iter().cloned().collect();
+    assert_eq!(got, expected, "every stage node gets exactly one node span");
+    assert_eq!(node_spans.len(), expected.len(), "no duplicate node spans");
+
+    // `--jobs 4` workers are spawned with stable names that become
+    // thread_name metadata tracks in the Chrome viewer
+    let worker_tracks = events
+        .iter()
+        .filter(|e| field(e, "ph").as_deref() == Some("M"))
+        .filter_map(|e| e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str))
+        .filter(|n| n.starts_with("plan-worker-"))
+        .count();
+    assert!(worker_tracks >= 1, "node spans must land on named worker tracks");
+
+    // every complete event is well-formed (non-negative timestamps and
+    // durations; the JSONL twin parses line by line)
+    for e in events.iter().filter(|e| field(e, "ph").as_deref() == Some("X")) {
+        assert!(e.req("ts").as_f64().unwrap() >= 0.0);
+        assert!(e.req("dur").as_f64().unwrap() >= 0.0);
+    }
+    let jsonl = std::fs::read_to_string(path.with_extension("jsonl")).unwrap();
+    assert!(jsonl.lines().count() >= g.stage_count());
+    for line in jsonl.lines() {
+        Json::parse(line).unwrap();
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn counter_snapshots_diff_exactly() {
+    let reg = Registry::new();
+    reg.add("a", 5);
+    reg.add("b", 2);
+    reg.observe("lat", 3.0);
+    let s0 = reg.snapshot();
+    reg.add("a", 7);
+    reg.add("c", 1);
+    reg.observe("lat", 4.0);
+    let delta = reg.snapshot().since(&s0);
+    let want: BTreeMap<String, u64> =
+        [("a".to_string(), 7), ("c".to_string(), 1)].into_iter().collect();
+    assert_eq!(delta.counters, want, "unchanged counters drop out of the diff");
+    let lat = &delta.hists["lat"];
+    assert_eq!(lat.count, 1, "one new histogram observation since the snapshot");
+    assert!((lat.sum - 4.0).abs() < 1e-12);
+
+    // the count! macro feeds the global registry through a cached handle
+    let g0 = Registry::global().snapshot();
+    perp::count!("obs_test.macro");
+    perp::count!("obs_test.macro", 4);
+    let gd = Registry::global().snapshot().since(&g0);
+    assert_eq!(gd.counters.get("obs_test.macro"), Some(&5));
+}
+
+/// Recursively collect relative-path -> bytes for every file under `dir`.
+fn dir_bytes(dir: &Path, base: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+    for e in std::fs::read_dir(dir).unwrap().flatten() {
+        let p = e.path();
+        if p.is_dir() {
+            dir_bytes(&p, base, out);
+        } else {
+            let rel = p.strip_prefix(base).unwrap().to_string_lossy().into_owned();
+            out.insert(rel, std::fs::read(&p).unwrap());
+        }
+    }
+}
+
+#[test]
+fn stage_artifacts_are_bitwise_identical_with_tracing_on_and_off() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let rt = NativeBackend::new();
+    let dir_on = std::env::temp_dir().join("perp_obs_test_art_on");
+    let dir_off = std::env::temp_dir().join("perp_obs_test_art_off");
+    std::fs::remove_dir_all(&dir_on).ok();
+    std::fs::remove_dir_all(&dir_off).ok();
+
+    let plan = Plan::new("obs_art")
+        .pretrain()
+        .prune(Criterion::Magnitude, Pattern::Unstructured(0.6))
+        .eval_ppl();
+
+    trace::configure(true, None);
+    trace::drain();
+    let traced =
+        Executor::new(&rt, cfg(32), dir_on.clone(), 0).quiet(true).run(&plan).unwrap();
+    trace::configure(false, None);
+    trace::drain();
+    let plain =
+        Executor::new(&rt, cfg(32), dir_off.clone(), 0).quiet(true).run(&plan).unwrap();
+
+    assert_eq!(traced.stages.len(), plain.stages.len());
+    for (a, b) in traced.stages.iter().zip(&plain.stages) {
+        assert_eq!(a.key, b.key, "tracing must not perturb stage keys");
+        // compare the stage dirs byte for byte: observability writes its
+        // volatile data (wall clock, counters) to sidecars *outside* these
+        // dirs, so their contents must not differ by a single bit
+        let (mut on, mut off) = (BTreeMap::new(), BTreeMap::new());
+        let da = dir_on.join("plan").join(&a.key);
+        let db = dir_off.join("plan").join(&b.key);
+        dir_bytes(&da, &da, &mut on);
+        dir_bytes(&db, &db, &mut off);
+        assert!(!on.is_empty(), "stage {} wrote no artifacts", a.label);
+        assert_eq!(
+            on.keys().collect::<Vec<_>>(),
+            off.keys().collect::<Vec<_>>(),
+            "stage {} file sets differ",
+            a.label
+        );
+        for (rel, bytes) in &on {
+            assert_eq!(
+                Some(bytes),
+                off.get(rel),
+                "stage {} file {rel} differs between traced and untraced runs",
+                a.label
+            );
+        }
+    }
+
+    std::fs::remove_dir_all(&dir_on).ok();
+    std::fs::remove_dir_all(&dir_off).ok();
+}
