@@ -88,9 +88,18 @@ impl ExperimentConfig {
     }
 
     /// Apply overrides from a JSON file (fields optional).
-    pub fn with_file(mut self, path: &Path) -> Result<ExperimentConfig> {
+    pub fn with_file(self, path: &Path) -> Result<ExperimentConfig> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
         let j = Json::parse(&text).context("parsing config")?;
+        self.with_json(&j)
+    }
+
+    /// Apply overrides from a parsed JSON object (fields optional).  The
+    /// inverse of [`ExperimentConfig::to_json`]: a resolved config persisted
+    /// by the job store round-trips to an identical config — and therefore
+    /// identical cache keys — because Rust's f64 `Display` emits the
+    /// shortest round-trip representation.
+    pub fn with_json(mut self, j: &Json) -> Result<ExperimentConfig> {
         if let Some(v) = j.get("model").and_then(Json::as_str) {
             self.model = v.to_string();
         }
@@ -135,6 +144,28 @@ impl ExperimentConfig {
         }
         self.validate()?;
         Ok(self)
+    }
+
+    /// Serialize every field (the exact basis of `base_key` plus the seeds
+    /// list and layout) so a job record can persist its *resolved* config:
+    /// `ExperimentConfig::quick(m).with_json(&c.to_json()) == c`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("backend", Json::Str(self.backend.clone())),
+            ("layout", Json::Str(self.layout.clone())),
+            ("pretrain_steps", Json::Num(self.pretrain_steps as f64)),
+            ("pretrain_lr", Json::Num(self.pretrain_lr)),
+            ("retrain_steps", Json::Num(self.retrain_steps as f64)),
+            ("lr_grid", Json::Arr(self.lr_grid.iter().map(|&v| Json::Num(v)).collect())),
+            ("calib_seqs", Json::Num(self.calib_seqs as f64)),
+            ("recon_steps", Json::Num(self.recon_steps as f64)),
+            ("recon_lr", Json::Num(self.recon_lr)),
+            ("items_per_task", Json::Num(self.items_per_task as f64)),
+            ("eval_batches", Json::Num(self.eval_batches as f64)),
+            ("seeds", Json::Arr(self.seeds.iter().map(|&s| Json::Num(s as f64)).collect())),
+            ("data_seed", Json::Num(self.data_seed as f64)),
+        ])
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -184,6 +215,20 @@ mod tests {
         assert_eq!(c.lr_grid, vec![0.5]);
         assert_eq!(c.seeds, vec![9]);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let mut c = ExperimentConfig::full("gpt-small");
+        c.lr_grid = vec![5e-6, 1e-3, 0.30000000000000004];
+        c.pretrain_lr = 0.1 + 0.2; // not representable as a short decimal
+        c.seeds = vec![0, 7, u32::MAX as u64];
+        // serialize, re-parse from text, apply over an unrelated base: every
+        // field (and thus every cache key) must round-trip bit-exactly
+        let text = c.to_json().to_string();
+        let j = Json::parse(&text).unwrap();
+        let back = ExperimentConfig::quick("gpt-nano").with_json(&j).unwrap();
+        assert_eq!(back, c);
     }
 
     #[test]

@@ -1,0 +1,152 @@
+//! Request/response shapes for the `/jobs` endpoints: parse a submit body
+//! into a validated [`JobSpec`], and render [`JobRecord`]s as summary /
+//! detail JSON.
+//!
+//! A submit body carries the graph either inline (`"plan"`: a plan-graph
+//! JSON object, same schema as `repro run` files) or as a `"stages"`
+//! string in the `--stages` grammar, plus optional knobs:
+//!
+//! ```json
+//! {
+//!   "stages": "prune(magnitude,0.5)|eval(ppl)",
+//!   "name": "halfsparse",            // default: graph name
+//!   "profile": "quick",              // re-resolve from a named profile
+//!   "config": { "retrain_steps": 50 }, // field-level overrides
+//!   "model": "gpt-nano",             // shorthand for config.model
+//!   "layout": "csr",                 // shorthand for config.layout
+//!   "seed": 0,
+//!   "jobs": 2                        // executor workers for this graph
+//! }
+//! ```
+//!
+//! Validation (graph shape, config fields, cache-key derivation) happens
+//! here, before anything is persisted — a bad submit is a 400, never a
+//! failed job.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::pipeline::{parse::parse_graph, PlanGraph};
+use crate::util::json::Json;
+
+use super::store::{JobRecord, JobSpec};
+
+/// Parse + validate a `POST /jobs` body.  `base` is the daemon's resolved
+/// config (its profile/model flags); `default_seed` its `--seed`.
+pub fn parse_submit(j: &Json, base: &ExperimentConfig, default_seed: u64) -> Result<JobSpec> {
+    let graph = match (j.get("plan"), j.get("stages")) {
+        (Some(_), Some(_)) => bail!("submit body has both \"plan\" and \"stages\"; pick one"),
+        (Some(p), None) => {
+            PlanGraph::from_json(p).map_err(|e| anyhow::anyhow!("parsing \"plan\": {e}"))?
+        }
+        (None, Some(s)) => {
+            let spec = s.as_str().context("\"stages\" must be a string")?;
+            let name = j.str_or("name", "job");
+            parse_graph(&name, spec).map_err(|e| anyhow::anyhow!("parsing \"stages\": {e}"))?
+        }
+        (None, None) => bail!("submit body needs a \"plan\" object or a \"stages\" string"),
+    };
+    let mut cfg = match j.get("profile").and_then(Json::as_str) {
+        Some(p) => {
+            let model = j.get("model").and_then(Json::as_str).unwrap_or(&base.model);
+            ExperimentConfig::profile(p, model)?
+        }
+        None => base.clone(),
+    };
+    if let Some(c) = j.get("config") {
+        cfg = cfg.with_json(c).context("applying \"config\" overrides")?;
+    }
+    if let Some(m) = j.get("model").and_then(Json::as_str) {
+        cfg.model = m.to_string();
+    }
+    if let Some(l) = j.get("layout").and_then(Json::as_str) {
+        cfg.layout = l.to_string();
+    }
+    cfg.validate()?;
+    let seed = j.get("seed").and_then(Json::as_i64).map(|v| v as u64).unwrap_or(default_seed);
+    let jobs = j.get("jobs").and_then(Json::as_usize).unwrap_or(1).max(1);
+    graph.validate().map_err(|e| anyhow::anyhow!("invalid graph: {e}"))?;
+    graph
+        .node_keys(&cfg, seed)
+        .map_err(|e| anyhow::anyhow!("keying graph: {e}"))?;
+    let name = j.str_or("name", &graph.name);
+    Ok(JobSpec { name, graph, cfg, seed, jobs })
+}
+
+/// One-line listing entry (`GET /jobs`).
+pub fn job_summary(rec: &JobRecord) -> Json {
+    Json::obj(vec![
+        ("id", Json::Str(rec.id.clone())),
+        ("name", Json::Str(rec.spec.name.clone())),
+        ("status", Json::Str(rec.status.as_str().to_string())),
+        ("nodes_done", Json::Num(rec.nodes_done() as f64)),
+        ("nodes_total", Json::Num(rec.nodes.len() as f64)),
+        ("attempts", Json::Num(rec.attempts as f64)),
+        ("created_unix", Json::Num(rec.created_unix as f64)),
+    ])
+}
+
+/// Full record (`GET /jobs/<id>`): the persisted `job.json` verbatim —
+/// per-node status, warnings, aggregates, everything.
+pub fn job_detail(rec: &JobRecord) -> Json {
+    rec.to_json()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> ExperimentConfig {
+        ExperimentConfig::quick("gpt-nano")
+    }
+
+    #[test]
+    fn submit_from_stages_string() {
+        let j = Json::parse(
+            r#"{"stages": "prune(magnitude,0.5)|eval(ppl)", "name": "half", "jobs": 3, "seed": 9}"#,
+        )
+        .unwrap();
+        let spec = parse_submit(&j, &base(), 0).unwrap();
+        assert_eq!(spec.name, "half");
+        assert_eq!(spec.seed, 9);
+        assert_eq!(spec.jobs, 3);
+        assert_eq!(spec.graph.stage_count(), 3, "pretrain prepended");
+    }
+
+    #[test]
+    fn submit_from_inline_plan_object() {
+        let g = parse_graph("inline", "prune(magnitude,0.7)|eval(ppl)").unwrap();
+        let body = Json::obj(vec![("plan", g.to_json())]);
+        let spec = parse_submit(&body, &base(), 5).unwrap();
+        assert_eq!(spec.name, "inline");
+        assert_eq!(spec.seed, 5, "daemon default seed");
+        assert_eq!(spec.graph, g);
+    }
+
+    #[test]
+    fn submit_applies_config_overrides() {
+        let j = Json::parse(
+            r#"{"stages": "prune(magnitude,0.5)|eval(ppl)",
+                "config": {"retrain_steps": 11}, "layout": "csr"}"#,
+        )
+        .unwrap();
+        let spec = parse_submit(&j, &base(), 0).unwrap();
+        assert_eq!(spec.cfg.retrain_steps, 11);
+        assert_eq!(spec.cfg.layout, "csr");
+    }
+
+    #[test]
+    fn submit_rejects_garbage() {
+        let no_graph = Json::parse(r#"{"name": "x"}"#).unwrap();
+        assert!(parse_submit(&no_graph, &base(), 0).is_err());
+        let both = Json::parse(r#"{"stages": "eval", "plan": {"nodes": []}}"#).unwrap();
+        assert!(parse_submit(&both, &base(), 0).is_err());
+        let bad_stage = Json::parse(r#"{"stages": "explode(now)"}"#).unwrap();
+        assert!(parse_submit(&bad_stage, &base(), 0).is_err());
+        let bad_cfg = Json::parse(
+            r#"{"stages": "prune(magnitude,0.5)|eval(ppl)", "layout": "coo"}"#,
+        )
+        .unwrap();
+        assert!(parse_submit(&bad_cfg, &base(), 0).is_err());
+    }
+}

@@ -1,0 +1,38 @@
+//! Durable experiment jobs: a persistent queue of plan-graph runs served
+//! by `repro daemon`.
+//!
+//! PERP experimentation is many graphs over days — criteria × sparsities ×
+//! retrain budgets — not one foreground `repro run`.  This subsystem turns
+//! the repro into a small experiment service:
+//!
+//! * [`store`] — the durable truth: one `job.json` per job under
+//!   `<out>/jobs/<id>/`, holding the submitted graph, the *resolved*
+//!   [`ExperimentConfig`](crate::config::ExperimentConfig) (bit-exact JSON
+//!   round-trip ⇒ bit-identical cache keys on resume), per-node status
+//!   keyed by the executor's FNV stage keys, and final aggregate rows.
+//! * [`queue`] — [`queue::JobManager`]: the rebuildable in-memory view.
+//!   Boot rescans the store, requeues every non-terminal job (interrupted
+//!   `running` jobs reset their running nodes and resume through the stage
+//!   cache), then mediates submit/dequeue/cancel under one mutex+condvar.
+//! * [`worker`] — [`worker::JobRunner`]: dequeue → execute with the
+//!   plan-graph [`Executor`](crate::pipeline::Executor), wired to the
+//!   job's cancel flag and a node hook that persists per-node progress on
+//!   every event.  Serial jobs hold one kernel-budget share so concurrent
+//!   jobs split threads instead of oversubscribing.
+//! * [`api`] — HTTP shapes: submit-body parsing/validation and
+//!   summary/detail rendering for the `/jobs` endpoints.
+//!
+//! Durability contract: a `SIGKILL` at any moment loses no submitted work.
+//! Committed stage dirs re-report as cache hits, the interrupted job is
+//! requeued on the next boot, and a fully-cached job completes with zero
+//! backend executions and aggregates bitwise-identical to an uninterrupted
+//! `repro run` of the same graph (asserted by `tests/jobs_test.rs`).
+
+pub mod api;
+pub mod queue;
+pub mod store;
+pub mod worker;
+
+pub use queue::JobManager;
+pub use store::{JobRecord, JobSpec, JobStatus, JobStore, NodeState, NodeStatus};
+pub use worker::JobRunner;

@@ -1,0 +1,274 @@
+//! [`JobManager`]: the daemon's in-memory queue over the durable
+//! [`JobStore`](super::store::JobStore).
+//!
+//! The store is the source of truth; the manager is a rebuildable view:
+//! [`JobManager::open`] rescans `job.json` records on boot, requeues
+//! everything non-terminal (a job found `running` was interrupted by a
+//! crash or kill — its running nodes reset to `pending` and it resumes
+//! through the stage cache), and from then on mediates
+//! submit/dequeue/cancel between the HTTP handlers and the worker pool.
+//!
+//! Metrics (all in the global [`Registry`]): gauges `jobs.queued` /
+//! `jobs.running` track live depths; counters `jobs.submitted`,
+//! `jobs.done`, `jobs.failed`, `jobs.cancelled`, `jobs.resumed`
+//! accumulate transitions; histogram `jobs.queue_wait_s` observes
+//! dequeue latency.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::obs::counters::Registry;
+
+use super::store::{now_unix, JobRecord, JobSpec, JobStatus, JobStore};
+
+struct Inner {
+    queue: VecDeque<String>,
+    /// per-running-job cancel flags (shared with the executing runner)
+    running: BTreeMap<String, Arc<AtomicBool>>,
+    /// running jobs whose flag was set by an explicit cancel (vs shutdown)
+    cancelled: BTreeSet<String>,
+    shutting_down: bool,
+}
+
+/// Thread-safe job queue + store facade shared by the HTTP handlers and
+/// the worker pool.
+pub struct JobManager {
+    store: JobStore,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl JobManager {
+    /// Open (or create) the store at `root` and rebuild the queue from it.
+    pub fn open(root: &std::path::Path) -> Result<JobManager> {
+        let store = JobStore::open(root)?;
+        let mut queue = VecDeque::new();
+        for mut rec in store.list()? {
+            match rec.status {
+                JobStatus::Running => {
+                    // interrupted by a crash/kill mid-run: resume from the
+                    // stage cache on this boot
+                    rec.reset_running_nodes();
+                    rec.status = JobStatus::Queued;
+                    rec.queued_unix = now_unix();
+                    rec.warnings.push(format!(
+                        "requeued on daemon boot after interrupted attempt {}",
+                        rec.attempts
+                    ));
+                    store.save(&rec)?;
+                    crate::count!("jobs.resumed");
+                    queue.push_back(rec.id);
+                }
+                JobStatus::Queued => queue.push_back(rec.id),
+                _ => {}
+            }
+        }
+        let mgr = JobManager {
+            store,
+            inner: Mutex::new(Inner {
+                queue,
+                running: BTreeMap::new(),
+                cancelled: BTreeSet::new(),
+                shutting_down: false,
+            }),
+            cv: Condvar::new(),
+        };
+        mgr.sync_gauges(&mgr.lock());
+        Ok(mgr)
+    }
+
+    pub fn store(&self) -> &JobStore {
+        &self.store
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn sync_gauges(&self, inner: &Inner) {
+        let reg = Registry::global();
+        reg.set_gauge("jobs.queued", inner.queue.len() as u64);
+        reg.set_gauge("jobs.running", inner.running.len() as u64);
+    }
+
+    /// Persist a new queued job and wake a worker.  Fails (without
+    /// persisting anything) on invalid graphs/configs and during shutdown.
+    pub fn submit(&self, spec: JobSpec) -> Result<String> {
+        let id = self.store.allocate_id()?;
+        let rec = JobRecord::new(&id, spec, now_unix())?;
+        let mut inner = self.lock();
+        if inner.shutting_down {
+            bail!("daemon is shutting down; not accepting jobs");
+        }
+        self.store.save(&rec)?;
+        inner.queue.push_back(id.clone());
+        crate::count!("jobs.submitted");
+        self.sync_gauges(&inner);
+        drop(inner);
+        self.cv.notify_one();
+        Ok(id)
+    }
+
+    /// Block until a job is ready (or shutdown begins — then `None`).
+    /// Returns the job id plus its fresh cancel flag.
+    pub fn dequeue(&self) -> Option<(String, Arc<AtomicBool>)> {
+        let mut inner = self.lock();
+        loop {
+            if inner.shutting_down {
+                return None;
+            }
+            if let Some(id) = inner.queue.pop_front() {
+                let flag = Arc::new(AtomicBool::new(false));
+                inner.running.insert(id.clone(), flag.clone());
+                self.sync_gauges(&inner);
+                return Some((id, flag));
+            }
+            inner = self.cv.wait(inner).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// A runner finished (or abandoned) a job: drop its flag bookkeeping.
+    pub fn finish(&self, id: &str) {
+        let mut inner = self.lock();
+        inner.running.remove(id);
+        inner.cancelled.remove(id);
+        self.sync_gauges(&inner);
+    }
+
+    /// Was this running job's flag set by an explicit cancel request (vs a
+    /// daemon shutdown)?  Decides `cancelled` vs `queued` on interrupt.
+    pub fn was_cancelled(&self, id: &str) -> bool {
+        self.lock().cancelled.contains(id)
+    }
+
+    pub fn is_shutting_down(&self) -> bool {
+        self.lock().shutting_down
+    }
+
+    /// Cancel a job.  Queued jobs become `cancelled` immediately; running
+    /// jobs get their flag set and finish their in-flight nodes first.
+    /// Returns a short status word for the HTTP response.
+    pub fn cancel(&self, id: &str) -> Result<&'static str> {
+        let mut inner = self.lock();
+        if let Some(flag) = inner.running.get(id) {
+            flag.store(true, Ordering::Relaxed);
+            inner.cancelled.insert(id.to_string());
+            return Ok("cancelling");
+        }
+        if let Some(pos) = inner.queue.iter().position(|q| q == id) {
+            inner.queue.remove(pos);
+            let mut rec = self.store.load(id)?;
+            rec.status = JobStatus::Cancelled;
+            rec.finished_unix = Some(now_unix());
+            self.store.save(&rec)?;
+            crate::count!("jobs.cancelled");
+            self.sync_gauges(&inner);
+            return Ok("cancelled");
+        }
+        let rec = self.store.load(id).with_context(|| format!("no such job {id:?}"))?;
+        bail!("job {id} is {} — nothing to cancel", rec.status.as_str());
+    }
+
+    /// Begin graceful shutdown: stop dequeuing, set every running job's
+    /// flag (WITHOUT marking them cancelled — they requeue for resume),
+    /// wake all blocked workers so they observe the state and exit.
+    pub fn begin_shutdown(&self) {
+        let mut inner = self.lock();
+        inner.shutting_down = true;
+        for flag in inner.running.values() {
+            flag.store(true, Ordering::Relaxed);
+        }
+        drop(inner);
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::jobs::store::NodeStatus;
+    use crate::pipeline::parse::parse_graph;
+
+    fn spec(name: &str) -> JobSpec {
+        JobSpec {
+            name: name.to_string(),
+            graph: parse_graph(name, "prune(magnitude,0.5)|eval(ppl)").unwrap(),
+            cfg: ExperimentConfig::quick("gpt-nano"),
+            seed: 0,
+            jobs: 1,
+        }
+    }
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("perp_jobq_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    #[test]
+    fn submit_dequeue_cancel_lifecycle() {
+        let root = tmp("lifecycle");
+        let mgr = JobManager::open(&root).unwrap();
+        let a = mgr.submit(spec("a")).unwrap();
+        let b = mgr.submit(spec("b")).unwrap();
+        assert_eq!((a.as_str(), b.as_str()), ("j0001", "j0002"));
+        // cancel while queued → terminal immediately
+        assert_eq!(mgr.cancel(&b).unwrap(), "cancelled");
+        assert_eq!(mgr.store().load(&b).unwrap().status, JobStatus::Cancelled);
+        // dequeue hands out the remaining job with an unset flag
+        let (id, flag) = mgr.dequeue().unwrap();
+        assert_eq!(id, a);
+        assert!(!flag.load(Ordering::Relaxed));
+        // cancel while running → flag set, remembered as explicit
+        assert_eq!(mgr.cancel(&a).unwrap(), "cancelling");
+        assert!(flag.load(Ordering::Relaxed));
+        assert!(mgr.was_cancelled(&a));
+        mgr.finish(&a);
+        // terminal cancel is an error
+        assert!(mgr.cancel(&b).is_err());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn boot_rescan_requeues_interrupted_jobs() {
+        let root = tmp("rescan");
+        {
+            let mgr = JobManager::open(&root).unwrap();
+            let id = mgr.submit(spec("a")).unwrap();
+            // simulate a crash mid-run: persist as running, drop the manager
+            let mut rec = mgr.store().load(&id).unwrap();
+            rec.status = JobStatus::Running;
+            rec.attempts = 1;
+            let node = rec.nodes.keys().next().unwrap().clone();
+            rec.nodes.get_mut(&node).unwrap().status = NodeStatus::Running;
+            mgr.store().save(&rec).unwrap();
+        }
+        let mgr = JobManager::open(&root).unwrap();
+        let rec = mgr.store().load("j0001").unwrap();
+        assert_eq!(rec.status, JobStatus::Queued);
+        assert!(rec.warnings.iter().any(|w| w.contains("requeued on daemon boot")));
+        assert!(rec.nodes.values().all(|n| n.status == NodeStatus::Pending));
+        // and it is actually dequeueable
+        let (id, _) = mgr.dequeue().unwrap();
+        assert_eq!(id, "j0001");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn shutdown_stops_dequeue_and_flags_running() {
+        let root = tmp("shutdown");
+        let mgr = JobManager::open(&root).unwrap();
+        let a = mgr.submit(spec("a")).unwrap();
+        let (_, flag) = mgr.dequeue().unwrap();
+        mgr.begin_shutdown();
+        assert!(flag.load(Ordering::Relaxed), "running flag set on shutdown");
+        assert!(!mgr.was_cancelled(&a), "shutdown is not an explicit cancel");
+        assert!(mgr.dequeue().is_none(), "no dequeue during shutdown");
+        assert!(mgr.submit(spec("b")).is_err(), "no submit during shutdown");
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

@@ -1,0 +1,577 @@
+//! The on-disk job store: one directory per job under `<out>/jobs/`,
+//! holding a single `job.json` with the job's spec (graph + resolved
+//! config + knobs), lifecycle status, per-node state and final aggregate
+//! rows.
+//!
+//! The record is the durable source of truth — the daemon's in-memory
+//! queue is rebuilt from it on every boot ([`super::queue::JobManager::open`]),
+//! so a kill at any point loses at most the progress since the last node
+//! event (and even that is recovered for free through the stage cache:
+//! committed nodes re-report as hits).  Writes go through the same
+//! temp-file + rename discipline as stage artifacts, so a torn `job.json`
+//! is never observed.
+//!
+//! The per-node `key` fields are the executor's 16-hex FNV stage keys,
+//! computed once at submit time from the *resolved* config — `repro gc`
+//! reads them back to pin a paused job's cache dirs as reachable roots.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::eval::MeanStd;
+use crate::pipeline::{GraphReport, PlanGraph};
+use crate::util::json::Json;
+
+/// Job lifecycle.  `Queued → Running → {Done, Failed, Cancelled}`, with the
+/// extra edge `Running → Queued` when a shutdown interrupts a job (it
+/// resumes on the next boot through the stage cache).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobStatus {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Done => "done",
+            JobStatus::Failed => "failed",
+            JobStatus::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<JobStatus> {
+        Ok(match s {
+            "queued" => JobStatus::Queued,
+            "running" => JobStatus::Running,
+            "done" => JobStatus::Done,
+            "failed" => JobStatus::Failed,
+            "cancelled" => JobStatus::Cancelled,
+            other => bail!("unknown job status {other:?}"),
+        })
+    }
+
+    /// Terminal states never re-enter the queue.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobStatus::Done | JobStatus::Failed | JobStatus::Cancelled)
+    }
+}
+
+/// Per-node lifecycle within a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeStatus {
+    Pending,
+    Running,
+    Done,
+    Failed,
+}
+
+impl NodeStatus {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            NodeStatus::Pending => "pending",
+            NodeStatus::Running => "running",
+            NodeStatus::Done => "done",
+            NodeStatus::Failed => "failed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<NodeStatus> {
+        Ok(match s {
+            "pending" => NodeStatus::Pending,
+            "running" => NodeStatus::Running,
+            "done" => NodeStatus::Done,
+            "failed" => NodeStatus::Failed,
+            other => bail!("unknown node status {other:?}"),
+        })
+    }
+}
+
+/// One stage node's durable state: its content-address key (stable across
+/// restarts — gc reachability roots), current status, and — once finished —
+/// whether it came from cache and how long it took.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeState {
+    pub status: NodeStatus,
+    /// 16-hex FNV stage key (fixed at submit time from the resolved config)
+    pub key: String,
+    /// human stage label, e.g. `prune(magnitude,0.5)`
+    pub label: String,
+    pub cache_hit: bool,
+    pub wall_s: Option<f64>,
+}
+
+/// What was submitted: the graph plus every knob the executor needs,
+/// fully resolved (profile/model/layout overrides already applied) so a
+/// restart re-derives bit-identical cache keys.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub name: String,
+    pub graph: PlanGraph,
+    pub cfg: ExperimentConfig,
+    pub seed: u64,
+    /// executor worker threads for this job's graph (`--jobs`)
+    pub jobs: usize,
+}
+
+/// One aggregate node's reduced row, persisted so `GET /jobs/<id>` can
+/// serve final tables without re-walking the graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AggregateSummary {
+    pub name: String,
+    pub over: Vec<String>,
+    pub ppl: MeanStd,
+    pub acc: MeanStd,
+    pub sparsity: MeanStd,
+}
+
+/// The durable job record — everything `job.json` holds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRecord {
+    pub id: String,
+    pub spec: JobSpec,
+    pub status: JobStatus,
+    pub created_unix: u64,
+    /// last time the job (re-)entered the queue — queue-wait is measured
+    /// from here, and it advances on every shutdown-requeue
+    pub queued_unix: u64,
+    pub started_unix: Option<u64>,
+    pub finished_unix: Option<u64>,
+    pub error: Option<String>,
+    /// non-fatal history (restart resumes, shutdown interrupts)
+    pub warnings: Vec<String>,
+    /// execution attempts (resumes increment)
+    pub attempts: u64,
+    /// backend executions attributed to this job's attempts (exact when
+    /// jobs run one at a time; concurrent jobs on one backend overlap)
+    pub backend_execs: u64,
+    /// seconds the most recent attempt waited in the queue
+    pub queue_wait_s: Option<f64>,
+    /// wall clock of the finishing attempt
+    pub wall_s: Option<f64>,
+    pub nodes: BTreeMap<String, NodeState>,
+    pub aggregates: Vec<AggregateSummary>,
+}
+
+impl JobRecord {
+    /// Fresh queued record; node states initialised `pending` with their
+    /// submit-time stage keys.
+    pub fn new(id: &str, spec: JobSpec, now: u64) -> Result<JobRecord> {
+        spec.graph.validate().map_err(|e| anyhow::anyhow!("invalid graph: {e}"))?;
+        let keys = spec
+            .graph
+            .node_keys(&spec.cfg, spec.seed)
+            .map_err(|e| anyhow::anyhow!("keying graph: {e}"))?;
+        let nodes = spec
+            .graph
+            .nodes
+            .iter()
+            .filter(|n| n.stage().is_some())
+            .map(|n| {
+                let st = NodeState {
+                    status: NodeStatus::Pending,
+                    key: keys[&n.name].hex(),
+                    label: n.label(),
+                    cache_hit: false,
+                    wall_s: None,
+                };
+                (n.name.clone(), st)
+            })
+            .collect();
+        Ok(JobRecord {
+            id: id.to_string(),
+            spec,
+            status: JobStatus::Queued,
+            created_unix: now,
+            queued_unix: now,
+            started_unix: None,
+            finished_unix: None,
+            error: None,
+            warnings: Vec::new(),
+            attempts: 0,
+            backend_execs: 0,
+            queue_wait_s: None,
+            wall_s: None,
+            nodes: BTreeMap::new(),
+            aggregates: Vec::new(),
+        }
+        .with_nodes(nodes))
+    }
+
+    fn with_nodes(mut self, nodes: BTreeMap<String, NodeState>) -> JobRecord {
+        self.nodes = nodes;
+        self
+    }
+
+    /// Reset every `running` node back to `pending` (crash/shutdown
+    /// recovery: the next attempt re-checks them against the stage cache).
+    pub fn reset_running_nodes(&mut self) {
+        for n in self.nodes.values_mut() {
+            if n.status == NodeStatus::Running {
+                n.status = NodeStatus::Pending;
+            }
+        }
+    }
+
+    /// Fold a finished run's reports + aggregates into the node map.
+    pub fn absorb_report(&mut self, report: &GraphReport) {
+        for nr in &report.nodes {
+            if let Some(st) = self.nodes.get_mut(&nr.name) {
+                st.status = NodeStatus::Done;
+                st.cache_hit = nr.rep.cache_hit;
+                st.wall_s = Some(nr.rep.wall_s);
+                st.key = nr.rep.key.clone();
+            }
+        }
+        self.aggregates = report
+            .aggregates
+            .iter()
+            .map(|a| AggregateSummary {
+                name: a.name.clone(),
+                over: a.over.clone(),
+                ppl: a.ppl,
+                acc: a.acc,
+                sparsity: a.sparsity,
+            })
+            .collect();
+    }
+
+    pub fn nodes_done(&self) -> usize {
+        self.nodes.values().filter(|n| n.status == NodeStatus::Done).count()
+    }
+
+    // ----- JSON (de)serialization ----------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let nodes = self
+            .nodes
+            .iter()
+            .map(|(name, st)| {
+                (
+                    name.as_str(),
+                    Json::obj(vec![
+                        ("status", Json::Str(st.status.as_str().to_string())),
+                        ("key", Json::Str(st.key.clone())),
+                        ("label", Json::Str(st.label.clone())),
+                        ("cache_hit", Json::Bool(st.cache_hit)),
+                        ("wall_s", opt_num(st.wall_s)),
+                    ]),
+                )
+            })
+            .collect::<Vec<_>>();
+        let aggregates = self
+            .aggregates
+            .iter()
+            .map(|a| {
+                Json::obj(vec![
+                    ("name", Json::Str(a.name.clone())),
+                    (
+                        "over",
+                        Json::Arr(a.over.iter().map(|s| Json::Str(s.clone())).collect()),
+                    ),
+                    ("ppl", mean_std_json(&a.ppl)),
+                    ("acc", mean_std_json(&a.acc)),
+                    ("sparsity", mean_std_json(&a.sparsity)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("id", Json::Str(self.id.clone())),
+            ("name", Json::Str(self.spec.name.clone())),
+            ("status", Json::Str(self.status.as_str().to_string())),
+            ("graph", self.spec.graph.to_json()),
+            ("config", self.spec.cfg.to_json()),
+            ("seed", Json::Num(self.spec.seed as f64)),
+            ("jobs", Json::Num(self.spec.jobs as f64)),
+            ("created_unix", Json::Num(self.created_unix as f64)),
+            ("queued_unix", Json::Num(self.queued_unix as f64)),
+            ("started_unix", opt_num(self.started_unix.map(|v| v as f64))),
+            ("finished_unix", opt_num(self.finished_unix.map(|v| v as f64))),
+            (
+                "error",
+                self.error.clone().map(Json::Str).unwrap_or(Json::Null),
+            ),
+            (
+                "warnings",
+                Json::Arr(self.warnings.iter().map(|w| Json::Str(w.clone())).collect()),
+            ),
+            ("attempts", Json::Num(self.attempts as f64)),
+            ("backend_execs", Json::Num(self.backend_execs as f64)),
+            ("queue_wait_s", opt_num(self.queue_wait_s)),
+            ("wall_s", opt_num(self.wall_s)),
+            ("nodes", Json::obj(nodes)),
+            ("aggregates", Json::Arr(aggregates)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobRecord> {
+        let id = j
+            .get("id")
+            .and_then(Json::as_str)
+            .context("job record missing string \"id\"")?
+            .to_string();
+        let graph = PlanGraph::from_json(j.get("graph").context("job record missing \"graph\"")?)
+            .map_err(|e| anyhow::anyhow!("job {id}: graph: {e}"))?;
+        // the stored config is complete (to_json emits every field), so any
+        // base works; quick() keeps this cheap
+        let cfg = ExperimentConfig::quick("gpt-nano")
+            .with_json(j.get("config").context("job record missing \"config\"")?)?;
+        let spec = JobSpec {
+            name: j.str_or("name", &graph.name),
+            graph,
+            cfg,
+            seed: j.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
+            jobs: j.get("jobs").and_then(Json::as_usize).unwrap_or(1).max(1),
+        };
+        let status = JobStatus::parse(
+            j.get("status").and_then(Json::as_str).context("job record missing \"status\"")?,
+        )?;
+        let nodes = j
+            .get("nodes")
+            .and_then(Json::as_obj)
+            .map(|m| {
+                m.iter()
+                    .map(|(name, nj)| {
+                        let st = NodeState {
+                            status: NodeStatus::parse(&nj.str_or("status", "pending"))?,
+                            key: nj.str_or("key", ""),
+                            label: nj.str_or("label", ""),
+                            cache_hit: nj
+                                .get("cache_hit")
+                                .and_then(Json::as_bool)
+                                .unwrap_or(false),
+                            wall_s: nj.get("wall_s").and_then(Json::as_f64),
+                        };
+                        Ok((name.clone(), st))
+                    })
+                    .collect::<Result<BTreeMap<_, _>>>()
+            })
+            .transpose()?
+            .unwrap_or_default();
+        let aggregates = j
+            .get("aggregates")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .map(|aj| AggregateSummary {
+                        name: aj.str_or("name", ""),
+                        over: aj
+                            .get("over")
+                            .and_then(Json::as_arr)
+                            .map(|o| {
+                                o.iter().filter_map(Json::as_str).map(str::to_string).collect()
+                            })
+                            .unwrap_or_default(),
+                        ppl: mean_std_from(aj.get("ppl")),
+                        acc: mean_std_from(aj.get("acc")),
+                        sparsity: mean_std_from(aj.get("sparsity")),
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(JobRecord {
+            id,
+            spec,
+            status,
+            created_unix: j.get("created_unix").and_then(Json::as_i64).unwrap_or(0) as u64,
+            queued_unix: j.get("queued_unix").and_then(Json::as_i64).unwrap_or(0) as u64,
+            started_unix: j.get("started_unix").and_then(Json::as_i64).map(|v| v as u64),
+            finished_unix: j.get("finished_unix").and_then(Json::as_i64).map(|v| v as u64),
+            error: j.get("error").and_then(Json::as_str).map(str::to_string),
+            warnings: j
+                .get("warnings")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_str).map(str::to_string).collect())
+                .unwrap_or_default(),
+            attempts: j.get("attempts").and_then(Json::as_i64).unwrap_or(0) as u64,
+            backend_execs: j.get("backend_execs").and_then(Json::as_i64).unwrap_or(0) as u64,
+            queue_wait_s: j.get("queue_wait_s").and_then(Json::as_f64),
+            wall_s: j.get("wall_s").and_then(Json::as_f64),
+            nodes,
+            aggregates,
+        })
+    }
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    match v {
+        Some(v) if v.is_finite() => Json::Num(v),
+        _ => Json::Null,
+    }
+}
+
+fn mean_std_json(m: &MeanStd) -> Json {
+    Json::obj(vec![
+        ("mean", opt_num(Some(m.mean))),
+        ("std", opt_num(Some(m.std))),
+        ("n", Json::Num(m.n as f64)),
+    ])
+}
+
+fn mean_std_from(j: Option<&Json>) -> MeanStd {
+    let num = |key: &str| {
+        j.and_then(|j| j.get(key)).and_then(Json::as_f64).unwrap_or(f64::NAN)
+    };
+    MeanStd {
+        mean: num("mean"),
+        std: num("std"),
+        n: j.and_then(|j| j.get("n")).and_then(Json::as_usize).unwrap_or(0),
+    }
+}
+
+/// Unix seconds now (0 if the clock is before the epoch).
+pub fn now_unix() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Directory-per-job store rooted at `<out>/jobs/`.  Cheap to clone —
+/// it is just the root path; all state lives on disk.
+#[derive(Debug, Clone)]
+pub struct JobStore {
+    root: PathBuf,
+}
+
+impl JobStore {
+    pub fn open(root: &Path) -> Result<JobStore> {
+        std::fs::create_dir_all(root).with_context(|| format!("creating job store {root:?}"))?;
+        Ok(JobStore { root: root.to_path_buf() })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn job_dir(&self, id: &str) -> PathBuf {
+        self.root.join(id)
+    }
+
+    /// Next job id: `j0001`, `j0002`, ... (max existing numeric suffix + 1,
+    /// so ids never recycle within one store).
+    pub fn allocate_id(&self) -> Result<String> {
+        let max = self
+            .ids()?
+            .iter()
+            .filter_map(|id| id.strip_prefix('j').and_then(|n| n.parse::<u64>().ok()))
+            .max()
+            .unwrap_or(0);
+        Ok(format!("j{:04}", max + 1))
+    }
+
+    /// Every job id present on disk, sorted (zero-padded ids sort by age).
+    pub fn ids(&self) -> Result<Vec<String>> {
+        let mut ids = Vec::new();
+        let entries = std::fs::read_dir(&self.root)
+            .with_context(|| format!("scanning job store {:?}", self.root))?;
+        for e in entries {
+            let e = e?;
+            if e.path().join("job.json").is_file() {
+                ids.push(e.file_name().to_string_lossy().to_string());
+            }
+        }
+        ids.sort();
+        Ok(ids)
+    }
+
+    pub fn save(&self, rec: &JobRecord) -> Result<()> {
+        let dir = self.job_dir(&rec.id);
+        std::fs::create_dir_all(&dir).with_context(|| format!("creating {dir:?}"))?;
+        let path = dir.join("job.json");
+        // same torn-write discipline as stage artifacts: unique temp name,
+        // then one rename
+        static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let unique = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let tmp = dir.join(format!(".job.json.tmp-{}-{unique}", std::process::id()));
+        std::fs::write(&tmp, rec.to_json().to_string())
+            .with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, &path).with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+        Ok(())
+    }
+
+    pub fn load(&self, id: &str) -> Result<JobRecord> {
+        let path = self.job_dir(id).join("job.json");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        JobRecord::from_json(&j)
+    }
+
+    /// All records, sorted by id.
+    pub fn list(&self) -> Result<Vec<JobRecord>> {
+        self.ids()?.iter().map(|id| self.load(id)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::parse::parse_graph;
+
+    fn spec() -> JobSpec {
+        let graph = parse_graph("t", "prune(magnitude,0.5)|eval(ppl)").unwrap();
+        JobSpec {
+            name: "t".to_string(),
+            graph,
+            cfg: ExperimentConfig::quick("gpt-nano"),
+            seed: 7,
+            jobs: 2,
+        }
+    }
+
+    #[test]
+    fn record_roundtrips_through_disk() {
+        let dir = std::env::temp_dir().join(format!("perp_jobstore_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let store = JobStore::open(&dir).unwrap();
+        let id = store.allocate_id().unwrap();
+        assert_eq!(id, "j0001");
+        let mut rec = JobRecord::new(&id, spec(), 1_000).unwrap();
+        rec.status = JobStatus::Running;
+        rec.started_unix = Some(1_010);
+        rec.attempts = 2;
+        rec.warnings.push("resumed after restart".to_string());
+        let some_node = rec.nodes.keys().next().unwrap().clone();
+        rec.nodes.get_mut(&some_node).unwrap().status = NodeStatus::Running;
+        store.save(&rec).unwrap();
+        let back = store.load(&id).unwrap();
+        assert_eq!(back, rec);
+        // ids never recycle
+        assert_eq!(store.allocate_id().unwrap(), "j0002");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn node_states_initialised_pending_with_keys() {
+        let rec = JobRecord::new("j0001", spec(), 0).unwrap();
+        // parse_graph prepends pretrain: 3 stage nodes
+        assert_eq!(rec.nodes.len(), 3);
+        for st in rec.nodes.values() {
+            assert_eq!(st.status, NodeStatus::Pending);
+            assert_eq!(st.key.len(), 16, "FNV keys are 16 hex chars");
+        }
+        let keys = rec.spec.graph.node_keys(&rec.spec.cfg, rec.spec.seed).unwrap();
+        for (name, st) in &rec.nodes {
+            assert_eq!(st.key, keys[name].hex());
+        }
+    }
+
+    #[test]
+    fn reset_running_nodes_for_resume() {
+        let mut rec = JobRecord::new("j0001", spec(), 0).unwrap();
+        let names: Vec<String> = rec.nodes.keys().cloned().collect();
+        rec.nodes.get_mut(&names[0]).unwrap().status = NodeStatus::Running;
+        rec.nodes.get_mut(&names[1]).unwrap().status = NodeStatus::Done;
+        rec.reset_running_nodes();
+        assert_eq!(rec.nodes[&names[0]].status, NodeStatus::Pending);
+        assert_eq!(rec.nodes[&names[1]].status, NodeStatus::Done);
+    }
+}

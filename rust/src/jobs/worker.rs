@@ -1,0 +1,164 @@
+//! [`JobRunner`]: one daemon worker — an endless dequeue → execute loop
+//! over a shared [`JobManager`].
+//!
+//! Each job runs through the ordinary plan-graph [`Executor`] with two
+//! daemon-specific attachments: the manager's per-job cancel flag (so
+//! shutdown and `POST /jobs/<id>/cancel` stop the walk after in-flight
+//! nodes commit) and a node hook that persists per-node status to
+//! `job.json` on every `Started`/`Finished` event — `GET /jobs/<id>` shows
+//! live progress, and a kill at any point loses at most one event.
+//!
+//! Thread budget: a job with `jobs > 1` already splits the kernel budget
+//! per in-flight node ([`crate::util::threads::acquire_share`] inside the
+//! parallel walk); a serial (`jobs == 1`) job would otherwise fan every
+//! kernel over the whole global pool, so the runner wraps its entire walk
+//! in one budget share — N concurrent serial jobs split the budget N ways
+//! instead of oversubscribing it.
+
+use std::path::PathBuf;
+use std::sync::atomic::AtomicBool;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::obs::counters::Registry;
+use crate::pipeline::{Executor, Interrupted, NodeEvent, NodeHook};
+use crate::runtime::Backend;
+use crate::util::threads;
+
+use super::queue::JobManager;
+use super::store::{now_unix, JobStatus, NodeStatus};
+
+/// One worker thread's context: backend + cache root + the shared queue.
+pub struct JobRunner<'rt> {
+    rt: &'rt dyn Backend,
+    cache_dir: PathBuf,
+    manager: Arc<JobManager>,
+}
+
+impl<'rt> JobRunner<'rt> {
+    pub fn new(rt: &'rt dyn Backend, cache_dir: PathBuf, manager: Arc<JobManager>) -> Self {
+        JobRunner { rt, cache_dir, manager }
+    }
+
+    /// Dequeue and execute jobs until shutdown drains the queue.
+    pub fn run(&self) {
+        while let Some((id, cancel)) = self.manager.dequeue() {
+            if let Err(e) = self.execute(&id, &cancel) {
+                crate::util::logging::progress(&format!("job {id}: runner error: {e:#}"));
+            }
+            self.manager.finish(&id);
+        }
+    }
+
+    /// Run one job to a terminal (or requeued-for-resume) state.
+    fn execute(&self, id: &str, cancel: &Arc<AtomicBool>) -> Result<()> {
+        let store = self.manager.store().clone();
+        let mut rec = store.load(id)?;
+        if rec.status.is_terminal() {
+            return Ok(()); // cancelled after dequeue but before execution
+        }
+        let now = now_unix();
+        let wait = now.saturating_sub(rec.queued_unix) as f64;
+        Registry::global().observe("jobs.queue_wait_s", wait);
+        rec.queue_wait_s = Some(wait);
+        rec.status = JobStatus::Running;
+        rec.started_unix = Some(now);
+        rec.attempts += 1;
+        rec.reset_running_nodes();
+        store.save(&rec)?;
+
+        // the node hook owns a shared copy of the record and persists it on
+        // every event; save errors are swallowed (observability, not
+        // semantics — the post-run save below is authoritative)
+        let shared = Arc::new(Mutex::new(rec));
+        let hook: NodeHook = {
+            let shared = Arc::clone(&shared);
+            let store = store.clone();
+            Arc::new(move |ev: NodeEvent<'_>| {
+                let mut r = shared.lock().unwrap_or_else(|p| p.into_inner());
+                match ev {
+                    NodeEvent::Started { name, .. } => {
+                        if let Some(n) = r.nodes.get_mut(name) {
+                            n.status = NodeStatus::Running;
+                        }
+                    }
+                    NodeEvent::Finished(nrep) => {
+                        if let Some(n) = r.nodes.get_mut(&nrep.name) {
+                            n.status = NodeStatus::Done;
+                            n.cache_hit = nrep.rep.cache_hit;
+                            n.wall_s = Some(nrep.rep.wall_s);
+                            n.key = nrep.rep.key.clone();
+                        }
+                    }
+                }
+                let _ = store.save(&r);
+            })
+        };
+
+        let (spec_cfg, seed, exec_jobs) = {
+            let r = shared.lock().unwrap_or_else(|p| p.into_inner());
+            (r.spec.cfg.clone(), r.spec.seed, r.spec.jobs)
+        };
+        let exec = Executor::new(self.rt, spec_cfg, self.cache_dir.clone(), seed)
+            .jobs(exec_jobs)
+            .quiet(true)
+            .cancel_flag(Arc::clone(cancel))
+            .on_node(hook);
+        let graph = shared.lock().unwrap_or_else(|p| p.into_inner()).spec.graph.clone();
+        let execs0 = self.rt.exec_count();
+        let t0 = Instant::now();
+        let result = if exec_jobs <= 1 {
+            // serial walk: hold one budget share for the whole job so
+            // concurrent serial jobs split the kernel pool between them
+            let share = threads::acquire_share();
+            share.run(|| exec.run_graph(&graph))
+        } else {
+            exec.run_graph(&graph)
+        };
+
+        let mut rec = shared.lock().unwrap_or_else(|p| p.into_inner()).clone();
+        rec.backend_execs += self.rt.exec_count().saturating_sub(execs0);
+        rec.wall_s = Some(t0.elapsed().as_secs_f64());
+        match result {
+            Ok(report) => {
+                rec.absorb_report(&report);
+                rec.status = JobStatus::Done;
+                rec.finished_unix = Some(now_unix());
+                rec.error = None;
+                crate::count!("jobs.done");
+            }
+            Err(e) if e.downcast_ref::<Interrupted>().is_some() => {
+                rec.reset_running_nodes();
+                if self.manager.was_cancelled(&rec.id) {
+                    rec.status = JobStatus::Cancelled;
+                    rec.finished_unix = Some(now_unix());
+                    rec.error = Some(format!("{e:#}"));
+                    crate::count!("jobs.cancelled");
+                } else {
+                    // daemon shutdown: back to the queue for the next boot
+                    rec.status = JobStatus::Queued;
+                    rec.queued_unix = now_unix();
+                    rec.warnings.push(format!(
+                        "attempt {} interrupted by daemon shutdown; requeued for resume",
+                        rec.attempts
+                    ));
+                }
+            }
+            Err(e) => {
+                for n in rec.nodes.values_mut() {
+                    if n.status == NodeStatus::Running {
+                        n.status = NodeStatus::Failed;
+                    }
+                }
+                rec.status = JobStatus::Failed;
+                rec.finished_unix = Some(now_unix());
+                rec.error = Some(format!("{e:#}"));
+                crate::count!("jobs.failed");
+            }
+        }
+        store.save(&rec)?;
+        Ok(())
+    }
+}

@@ -29,6 +29,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod jobs;
 pub mod metrics;
 pub mod model;
 pub mod obs;

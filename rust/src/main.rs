@@ -10,6 +10,8 @@
 //! repro reconstruct --model gpt-nano --criterion magnitude --sparsity 0.5
 //! repro eval      --model gpt-nano [--from pruned.ptns]
 //! repro serve     --model gpt-nano [--from pruned.ptns] [--port 7777]
+//! repro daemon    --model gpt-nano [--port 7766]  # durable job queue + HTTP API
+//! repro jobs      submit --stages "prune(wanda,0.5)|eval" [--watch]
 //! repro bench-serve --model gpt-nano              # batched vs sequential decode
 //! repro sweep     --exp table1 [--model gpt-small] [--profile quick|full]
 //! repro tables    [--profile quick]               # regenerate everything
@@ -23,9 +25,9 @@
 //! instead of recomputing them.
 
 use std::path::{Path, PathBuf};
-use std::sync::atomic::AtomicBool;
+use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -33,6 +35,7 @@ use perp::config::ExperimentConfig;
 use perp::coordinator::reconstruct::ReconMode;
 use perp::coordinator::sweep::{self, ExpContext};
 use perp::coordinator::Session;
+use perp::jobs::{JobManager, JobRunner, JobStore};
 use perp::peft::Mode;
 use perp::pipeline::executor::{recorded_profile, stage_complete, stage_dir};
 use perp::pipeline::parse::{parse_graph, parse_plan, spec_is_graph};
@@ -89,6 +92,8 @@ fn dispatch(args: &Args) -> Result<()> {
         "reconstruct" => reconstruct_cmd(args),
         "eval" => eval_cmd(args),
         "serve" => serve(args),
+        "daemon" => daemon(args),
+        "jobs" => jobs_cmd(args),
         "bench-serve" => bench_serve(args),
         "bench-kernels" => bench_kernels(args),
         "bench-graph" => bench_graph(args),
@@ -117,6 +122,13 @@ subcommands:
   reconstruct   prune + layer-wise reconstruction (Eq. 1)
   eval          evaluate the cached dense model, or --from <ckpt> (ppl + zero-shot)
   serve         HTTP inference server with KV-cache decoding + dynamic batching
+  daemon        durable experiment daemon: persistent plan-graph job queue
+                under <out>/jobs/ with an HTTP API; survives restarts (jobs
+                resume through the stage cache) and SIGINT/SIGTERM drains
+                gracefully
+  jobs          client for a running daemon:
+                repro jobs submit --stages \"...\" | --plan <file> [--watch]
+                repro jobs list | status <id> | cancel <id> | watch <id>
   bench-serve   load-generate against the batcher; write results/bench_serve.json
   bench-kernels dense/masked/CSR matmul A/B; write results/bench_kernels.json
   bench-graph   serial vs parallel plan-graph A/B; write results/bench_graph.json
@@ -181,6 +193,19 @@ serve flags:
   --port <p>           bind port                      [7777]
   --workers <n>        HTTP worker threads            [serve_slots + 2]
   --max-batch <n>      concurrent decode streams      [model serve_slots]
+
+daemon flags:
+  --host <h>           bind address                   [127.0.0.1]
+  --port <p>           bind port                      [7766]
+  --workers <n>        HTTP worker threads            [8]
+  --job-workers <n>    concurrent job runners (each holds one kernel-budget
+                       share, so parallel jobs split threads)        [2]
+
+jobs flags:
+  --host <h> --port <p>  daemon address                [127.0.0.1:7766]
+  submit: --stages <spec> | --plan <file.json>, plus optional
+          --name --model --profile --layout --seed --jobs <k> --watch
+          (--watch polls until the job reaches a terminal state)
 
 bench-serve flags:
   --requests <n>       total /generate requests per phase    [16]
@@ -653,6 +678,21 @@ fn gc_cmd(args: &Args) -> Result<()> {
         }
     }
 
+    // the job store pins artifacts too: a queued/interrupted job must find
+    // its completed stages in the cache when the daemon resumes it, so every
+    // node key of every non-terminal job is a root
+    let mut job_pins = 0usize;
+    let jobs_root = env.out.join("jobs");
+    if jobs_root.is_dir() {
+        for rec in JobStore::open(&jobs_root)?.list().context("gc: reading job store")? {
+            if rec.status.is_terminal() {
+                continue;
+            }
+            job_pins += 1;
+            reachable.extend(rec.nodes.values().map(|n| n.key.clone()));
+        }
+    }
+
     let plan_cache = env.out.join("cache").join("plan");
     let mut unreachable: Vec<(PathBuf, u64)> = Vec::new();
     if let Ok(entries) = std::fs::read_dir(&plan_cache) {
@@ -675,8 +715,9 @@ fn gc_cmd(args: &Args) -> Result<()> {
 
     let total: u64 = unreachable.iter().map(|(_, s)| s).sum();
     println!(
-        "gc: {} plan files pin {} stage keys under {:?} (seeds {:?})",
+        "gc: {} plan files + {} live jobs pin {} stage keys under {:?} (seeds {:?})",
         files.len(),
+        job_pins,
         reachable.len(),
         plan_cache,
         seeds
@@ -969,12 +1010,334 @@ fn serve(args: &Args) -> Result<()> {
     // be at least as wide as the decode batch or the batcher can never fill
     let slots = env.rt.model(&env.cfg.model)?.cfg.serve_slots;
     let workers = workers.unwrap_or(slots.max(8) + 2);
-    let server = Server::bind(state, &format!("{host}:{port}"), workers)?;
+    let server = Server::bind(state.clone(), &format!("{host}:{port}"), workers)?;
     println!("perp-serve listening on http://{}", server.addr);
     println!("  GET  /healthz /metrics /models");
-    println!("  POST /generate /score /models/load");
-    server.run(Arc::new(AtomicBool::new(false)));
+    println!("  POST /generate /score /models/load /shutdown");
+    server.run();
+    state.shutdown();
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// The experiment daemon + its CLI client.
+// ---------------------------------------------------------------------------
+
+/// POSIX signal plumbing without a libc dependency: `signal(2)` installs a
+/// handler that does nothing but set one atomic flag (the only
+/// async-signal-safe thing worth doing).  glibc's `signal()` semantics are
+/// `SA_RESTART`, so a blocking accept is *not* interrupted — the daemon
+/// polls the flag from a watchdog thread instead.
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static STOP: AtomicBool = AtomicBool::new(false);
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    extern "C" fn on_signal(_sig: i32) {
+        STOP.store(true, Ordering::SeqCst);
+    }
+
+    /// Install SIGINT/SIGTERM handlers that set the stop flag.
+    pub fn install() {
+        unsafe {
+            signal(SIGINT, on_signal);
+            signal(SIGTERM, on_signal);
+        }
+    }
+
+    pub fn stop_requested() -> bool {
+        STOP.load(Ordering::SeqCst)
+    }
+}
+
+/// `repro daemon` — boot the durable job queue and serve the `/jobs` API.
+/// Jobs run on `--job-workers` runner threads that share the kernel-thread
+/// budget with each other.  SIGINT/SIGTERM (or `POST /shutdown`) drains
+/// gracefully: dequeuing stops, in-flight nodes finish, and interrupted
+/// jobs requeue themselves for the next boot, where they resume through
+/// the content-addressed stage cache.
+fn daemon(args: &Args) -> Result<()> {
+    let env = common(args)?;
+    let host = args.str("host", "127.0.0.1");
+    let port = args.usize("port", 7766)?;
+    let http_workers = args.usize("workers", 8)?.max(1);
+    let job_workers = args.usize("job-workers", 2)?.max(1);
+    args.finish()?;
+
+    let cache_dir = env.out.join("cache");
+    let manager = Arc::new(JobManager::open(&env.out.join("jobs"))?);
+    let state = Arc::new(ServeState::new(
+        env.cfg.model.clone(),
+        env.cfg.clone(),
+        cache_dir.clone(),
+        env.seed,
+    ));
+    state.set_jobs(manager.clone());
+    let server = Server::bind(state.clone(), &format!("{host}:{port}"), http_workers)?;
+    sig::install();
+    println!("perp-daemon listening on http://{}", server.addr);
+    println!("  GET  /healthz /metrics /jobs /jobs/<id>");
+    println!("  POST /jobs /jobs/<id>/cancel /shutdown");
+    println!(
+        "  job store {:?}, {job_workers} job workers, model {} [{}]",
+        manager.store().root(),
+        env.cfg.model,
+        env.rt.kind()
+    );
+
+    std::thread::scope(|scope| {
+        for i in 0..job_workers {
+            let runner = JobRunner::new(env.rt.as_ref(), cache_dir.clone(), manager.clone());
+            std::thread::Builder::new()
+                .name(format!("job-worker-{i}"))
+                .spawn_scoped(scope, move || runner.run())
+                .expect("spawning job worker");
+        }
+        // signal watchdog: the handlers only set sig::STOP (async-signal-
+        // safe); this thread turns that into a full request_shutdown, which
+        // stops the queue and wakes the blocking accept loop
+        let wd_state = state.clone();
+        scope.spawn(move || {
+            while !wd_state.stop.load(Ordering::Relaxed) {
+                if sig::stop_requested() {
+                    perp::server::request_shutdown(&wd_state);
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        });
+        server.run();
+        // run() also exits on POST /shutdown — make sure the queue stopped
+        // either way so the runner threads drain and the scope can close
+        perp::server::request_shutdown(&state);
+    });
+    state.shutdown();
+    println!("perp-daemon stopped (in-flight nodes finished; interrupted jobs requeued)");
+    Ok(())
+}
+
+/// `repro jobs` — thin HTTP client for a running daemon.
+fn jobs_cmd(args: &Args) -> Result<()> {
+    let action = args.pos(0).unwrap_or("").to_string();
+    let host = args.str("host", "127.0.0.1");
+    let port = args.usize("port", 7766)?;
+    let addr = resolve_addr(&host, port)?;
+    match action.as_str() {
+        "submit" => jobs_submit(args, addr),
+        "list" => {
+            args.finish()?;
+            jobs_list(addr)
+        }
+        "status" | "cancel" | "watch" => {
+            let id = args.pos(1).map(str::to_string).ok_or_else(|| {
+                anyhow::anyhow!(ArgError(format!("jobs {action} needs a job id")))
+            })?;
+            args.finish()?;
+            match action.as_str() {
+                "status" => jobs_status(addr, &id),
+                "cancel" => jobs_cancel(addr, &id),
+                _ => jobs_watch(addr, &id),
+            }
+        }
+        other => Err(anyhow::anyhow!(ArgError(format!(
+            "jobs expects an action (submit|list|status|cancel|watch), got {other:?}"
+        )))),
+    }
+}
+
+fn resolve_addr(host: &str, port: usize) -> Result<std::net::SocketAddr> {
+    use std::net::ToSocketAddrs;
+    format!("{host}:{port}")
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {host}:{port}"))?
+        .next()
+        .with_context(|| format!("no address for {host}:{port}"))
+}
+
+fn jobs_submit(args: &Args, addr: std::net::SocketAddr) -> Result<()> {
+    let mut fields: Vec<(&str, Json)> = Vec::new();
+    match (args.opt_str("plan"), args.opt_str("stages")) {
+        (Some(p), None) => {
+            // normalise linear plan files to graphs client-side, like run
+            let g = PlanOrGraph::from_file(Path::new(&p))?.graph();
+            fields.push(("plan", g.to_json()));
+        }
+        (None, Some(s)) => fields.push(("stages", Json::Str(s))),
+        _ => {
+            return Err(anyhow::anyhow!(ArgError(
+                "jobs submit needs exactly one of --plan <file.json> or --stages \"<spec>\""
+                    .to_string()
+            )))
+        }
+    }
+    for key in ["name", "model", "profile", "layout"] {
+        if let Some(v) = args.opt_str(key) {
+            fields.push((key, Json::Str(v)));
+        }
+    }
+    if let Some(seed) = args.opt_u64("seed")? {
+        fields.push(("seed", Json::Num(seed as f64)));
+    }
+    if let Some(jobs) = args.opt_usize("jobs")? {
+        fields.push(("jobs", Json::Num(jobs as f64)));
+    }
+    let watch = args.flag("watch");
+    args.finish()?;
+    let (status, resp) = client::post_json(addr, "/jobs", &Json::obj(fields))?;
+    if status != 200 {
+        bail!("submit rejected ({status}): {resp}");
+    }
+    let id = resp
+        .get("id")
+        .and_then(Json::as_str)
+        .context("daemon response missing \"id\"")?
+        .to_string();
+    println!("submitted {id}");
+    if watch {
+        jobs_watch(addr, &id)?;
+    }
+    Ok(())
+}
+
+fn jobs_list(addr: std::net::SocketAddr) -> Result<()> {
+    let (status, body) = client::get(addr, "/jobs")?;
+    if status != 200 {
+        bail!("GET /jobs failed ({status}): {body}");
+    }
+    let j = Json::parse(&body).map_err(|e| anyhow::anyhow!("parsing response: {e}"))?;
+    let jobs = j.get("jobs").and_then(Json::as_arr).context("response missing \"jobs\"")?;
+    if jobs.is_empty() {
+        println!("no jobs");
+        return Ok(());
+    }
+    println!("{:<8} {:<10} {:>7} {:>8}  name", "id", "status", "nodes", "attempts");
+    for job in jobs {
+        println!(
+            "{:<8} {:<10} {:>3}/{:<3} {:>8}  {}",
+            job.str_or("id", "?"),
+            job.str_or("status", "?"),
+            job.get("nodes_done").and_then(Json::as_i64).unwrap_or(0),
+            job.get("nodes_total").and_then(Json::as_i64).unwrap_or(0),
+            job.get("attempts").and_then(Json::as_i64).unwrap_or(0),
+            job.str_or("name", "?"),
+        );
+    }
+    Ok(())
+}
+
+fn fetch_job(addr: std::net::SocketAddr, id: &str) -> Result<Json> {
+    let (status, body) = client::get(addr, &format!("/jobs/{id}"))?;
+    if status != 200 {
+        bail!("GET /jobs/{id} failed ({status}): {body}");
+    }
+    Json::parse(&body).map_err(|e| anyhow::anyhow!("parsing response: {e}"))
+}
+
+/// `(done, total)` stage-node counts out of a job-detail body.
+fn job_progress(j: &Json) -> (usize, usize) {
+    let nodes = j.get("nodes").and_then(Json::as_obj);
+    let total = nodes.map_or(0, |m| m.len());
+    let done = nodes.map_or(0, |m| {
+        m.values()
+            .filter(|n| n.get("status").and_then(Json::as_str) == Some("done"))
+            .count()
+    });
+    (done, total)
+}
+
+fn jobs_status(addr: std::net::SocketAddr, id: &str) -> Result<()> {
+    let j = fetch_job(addr, id)?;
+    let (done, total) = job_progress(&j);
+    println!(
+        "{} ({}): {} — {done}/{total} nodes, {} attempts",
+        j.str_or("id", "?"),
+        j.str_or("name", "?"),
+        j.str_or("status", "?"),
+        j.get("attempts").and_then(Json::as_i64).unwrap_or(0)
+    );
+    if let Some(nodes) = j.get("nodes").and_then(Json::as_obj) {
+        for (name, n) in nodes {
+            let wall = n
+                .get("wall_s")
+                .and_then(Json::as_f64)
+                .map(|w| format!(" {w:.2}s"))
+                .unwrap_or_default();
+            let hit = if n.get("cache_hit").and_then(Json::as_bool).unwrap_or(false) {
+                " (cached)"
+            } else {
+                ""
+            };
+            println!(
+                "  {:<28} {:<8} {}{wall}{hit}",
+                name,
+                n.str_or("status", "?"),
+                n.str_or("label", "")
+            );
+        }
+    }
+    if let Some(aggs) = j.get("aggregates").and_then(Json::as_arr) {
+        for a in aggs {
+            let mean = |k: &str| {
+                a.get(k)
+                    .and_then(|v| v.get("mean"))
+                    .and_then(Json::as_f64)
+                    .map(|v| format!("{v:.3}"))
+                    .unwrap_or_else(|| "-".to_string())
+            };
+            println!(
+                "  aggregate {}: ppl {} acc {} sparsity {}",
+                a.str_or("name", "?"),
+                mean("ppl"),
+                mean("acc"),
+                mean("sparsity")
+            );
+        }
+    }
+    if let Some(err) = j.get("error").and_then(Json::as_str) {
+        println!("  error: {err}");
+    }
+    if let Some(warnings) = j.get("warnings").and_then(Json::as_arr) {
+        for w in warnings.iter().filter_map(Json::as_str) {
+            println!("  warning: {w}");
+        }
+    }
+    Ok(())
+}
+
+fn jobs_cancel(addr: std::net::SocketAddr, id: &str) -> Result<()> {
+    let (status, resp) =
+        client::post_json(addr, &format!("/jobs/{id}/cancel"), &Json::obj(vec![]))?;
+    if status != 200 {
+        bail!("cancel failed ({status}): {resp}");
+    }
+    println!("{id}: {}", resp.str_or("result", "cancelled"));
+    Ok(())
+}
+
+/// Poll every 2s until the job reaches a terminal state; nonzero exit
+/// unless that state is `done`.
+fn jobs_watch(addr: std::net::SocketAddr, id: &str) -> Result<()> {
+    loop {
+        let j = fetch_job(addr, id)?;
+        let status = j.str_or("status", "?");
+        let (done, total) = job_progress(&j);
+        println!("{id}: {status} ({done}/{total} nodes)");
+        match status.as_str() {
+            "done" => return Ok(()),
+            "failed" | "cancelled" => match j.get("error").and_then(Json::as_str) {
+                Some(err) => bail!("job {id} {status}: {err}"),
+                None => bail!("job {id} {status}"),
+            },
+            _ => std::thread::sleep(Duration::from_secs(2)),
+        }
+    }
 }
 
 struct PhaseStats {

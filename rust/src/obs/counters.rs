@@ -115,6 +115,10 @@ impl HistSnap {
 pub struct Registry {
     counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
     hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
+    /// set-value metrics (queue depths, running-job counts) — same storage
+    /// as counters but rendered as a gauge family and overwritten, never
+    /// accumulated
+    gauges: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
 }
 
 impl Registry {
@@ -137,6 +141,22 @@ impl Registry {
     /// Bump a named counter by `n` (one map lookup; fine off the hot path).
     pub fn add(&self, name: &str, n: u64) {
         self.counter(name).fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Handle for a named gauge (created zeroed on first use).
+    pub fn gauge(&self, name: &str) -> Arc<AtomicU64> {
+        let mut m = self.gauges.lock().unwrap_or_else(|e| e.into_inner());
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Set a named gauge to `v` (last write wins).
+    pub fn set_gauge(&self, name: &str, v: u64) {
+        self.gauge(name).store(v, Ordering::Relaxed);
+    }
+
+    /// Current value of a named gauge (0 if never set).
+    pub fn gauge_value(&self, name: &str) -> u64 {
+        self.gauge(name).load(Ordering::Relaxed)
     }
 
     /// Handle for a named histogram with the default bucket ladder.
@@ -196,6 +216,16 @@ impl Registry {
                     "perp_obs_counter_total{{name=\"{}\"}} {v}\n",
                     metric_escape(name)
                 ));
+            }
+        }
+        let gauges: Vec<(String, u64)> = {
+            let m = self.gauges.lock().unwrap_or_else(|e| e.into_inner());
+            m.iter().map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed))).collect()
+        };
+        if !gauges.is_empty() {
+            out.push_str("# TYPE perp_obs_gauge gauge\n");
+            for (name, v) in &gauges {
+                out.push_str(&format!("perp_obs_gauge{{name=\"{}\"}} {v}\n", metric_escape(name)));
             }
         }
         if !snap.hists.is_empty() {
@@ -371,6 +401,17 @@ mod tests {
         }
         assert_eq!(percentile(&[42.0], 0.5), 42.0);
         assert!(percentile(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn gauges_overwrite_instead_of_accumulating() {
+        let r = Registry::new();
+        r.set_gauge("jobs.queued", 3);
+        r.set_gauge("jobs.queued", 1);
+        assert_eq!(r.gauge_value("jobs.queued"), 1);
+        assert_eq!(r.gauge_value("jobs.never_set"), 0);
+        let text = r.render_prometheus();
+        assert!(text.contains("perp_obs_gauge{name=\"jobs.queued\"} 1"), "{text}");
     }
 
     #[test]

@@ -55,6 +55,7 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
@@ -77,6 +78,33 @@ use crate::util::threads;
 use super::cachekey::{fnv1a_hex, Key};
 use super::graph::{Node, NodeKind, PlanGraph};
 use super::plan::{Plan, Stage};
+
+/// A graph run stopped early because its cancel flag flipped on (daemon
+/// shutdown, job cancellation).  In-flight nodes finish and commit their
+/// artifacts before the walk returns, so a later run resumes them as cache
+/// hits — downcast with `err.downcast_ref::<Interrupted>()` to tell an
+/// interruption from a real failure.
+#[derive(Debug, Clone, thiserror::Error)]
+#[error("plan graph run interrupted before node {node:?}")]
+pub struct Interrupted {
+    /// the node the walk was about to execute when it noticed the flag
+    pub node: String,
+}
+
+/// Per-node lifecycle events delivered to an [`Executor::on_node`] hook.
+/// `Started` fires when a node is claimed for execution (before the cache
+/// hit-check); `Finished` fires once per node with its final report, on
+/// both the compute and the cached-subtree paths.  Hooks run on executor
+/// worker threads and must be cheap and non-blocking-ish (the job daemon
+/// persists per-node status from here).
+#[derive(Debug)]
+pub enum NodeEvent<'a> {
+    Started { name: &'a str, key: &'a str },
+    Finished(&'a NodeReport),
+}
+
+/// Shared observer for [`NodeEvent`]s (`Arc` so parallel workers clone it).
+pub type NodeHook = Arc<dyn Fn(NodeEvent<'_>) + Send + Sync>;
 
 /// What an `eval` stage measured.
 #[derive(Debug, Clone)]
@@ -373,6 +401,11 @@ pub struct Executor<'rt> {
     /// per-stage-key execution locks: two branches needing the same node
     /// key execute it once — the second waits, then reads a cache hit
     key_locks: Mutex<BTreeMap<String, Arc<Mutex<()>>>>,
+    /// external cancellation: checked before every node claim; when set the
+    /// walk stops scheduling and `run_graph` returns [`Interrupted`]
+    cancel: Option<Arc<AtomicBool>>,
+    /// per-node lifecycle observer (the job daemon's progress persister)
+    hook: Option<NodeHook>,
 }
 
 impl<'rt> Executor<'rt> {
@@ -391,6 +424,8 @@ impl<'rt> Executor<'rt> {
             quiet: false,
             jobs: 1,
             key_locks: Mutex::new(BTreeMap::new()),
+            cancel: None,
+            hook: None,
         }
     }
 
@@ -413,6 +448,32 @@ impl<'rt> Executor<'rt> {
     pub fn jobs(mut self, jobs: usize) -> Self {
         self.jobs = jobs.max(1);
         self
+    }
+
+    /// Cooperative cancellation: when `flag` flips on mid-run, the walk
+    /// stops claiming new nodes (in-flight nodes finish and commit) and
+    /// `run_graph` returns an [`Interrupted`] error.
+    pub fn cancel_flag(mut self, flag: Arc<AtomicBool>) -> Self {
+        self.cancel = Some(flag);
+        self
+    }
+
+    /// Observe per-node lifecycle events (see [`NodeEvent`]).
+    pub fn on_node(mut self, hook: NodeHook) -> Self {
+        self.hook = Some(hook);
+        self
+    }
+
+    fn cancelled(&self) -> bool {
+        self.cancel.as_ref().is_some_and(|c| c.load(Ordering::Relaxed))
+    }
+
+    /// One node finished (computed or cache-reported): progress line + hook.
+    fn notify_done(&self, progress: &Progress, nrep: &NodeReport) {
+        progress.emit(&nrep.name, &nrep.rep);
+        if let Some(h) = &self.hook {
+            h(NodeEvent::Finished(nrep));
+        }
     }
 
     // ------------------------------------------------------------------
@@ -512,8 +573,11 @@ impl<'rt> Executor<'rt> {
         node: &Node,
         incoming: Option<Branch<'rt>>,
     ) -> Result<()> {
+        if self.cancelled() {
+            return Err(Interrupted { node: node.name.clone() }.into());
+        }
         let (nrep, branch) = self.exec_node(ctx, run.g, run.keys, node, incoming)?;
-        run.progress.emit(&nrep.name, &nrep.rep);
+        self.notify_done(run.progress, &nrep);
         run.reports.push(nrep);
         let g = run.g;
         // fully-cached child subtrees are reported from their artifacts
@@ -608,6 +672,11 @@ impl<'rt> Executor<'rt> {
                     if st.abort || st.outstanding == 0 {
                         break 'outer;
                     }
+                    if self.cancelled() {
+                        let next = st.queue.front().map(|(n, _)| n.clone()).unwrap_or_default();
+                        self.record_interrupt(&mut st, cv, failure, next);
+                        break 'outer;
+                    }
                     if let Some(t) = st.queue.pop_front() {
                         break t;
                     }
@@ -621,6 +690,11 @@ impl<'rt> Executor<'rt> {
             while let Some((name, incoming)) = cur.take() {
                 if lock.lock().unwrap_or_else(|p| p.into_inner()).abort {
                     break; // a sibling failed: drop this chain
+                }
+                if self.cancelled() {
+                    let mut st = lock.lock().unwrap_or_else(|p| p.into_inner());
+                    self.record_interrupt(&mut st, cv, failure, name);
+                    break 'outer;
                 }
                 let node = g.get(&name).expect("scheduler only queues known nodes");
                 match self.step(ctx, g, keys, complete, progress, node, incoming, reports) {
@@ -654,6 +728,26 @@ impl<'rt> Executor<'rt> {
         }
     }
 
+    /// The cancel flag flipped mid-run: record [`Interrupted`] as the run's
+    /// failure (unless a real error already claimed the slot) and abort the
+    /// scheduler so every worker drains out.
+    fn record_interrupt(
+        &self,
+        st: &mut SchedState<'rt>,
+        cv: &Condvar,
+        failure: &Mutex<Option<anyhow::Error>>,
+        node: String,
+    ) {
+        let mut f = failure.lock().unwrap_or_else(|p| p.into_inner());
+        if f.is_none() {
+            *f = Some(Interrupted { node }.into());
+        }
+        drop(f);
+        st.abort = true;
+        st.queue.clear();
+        cv.notify_all();
+    }
+
     /// Process one scheduled node: either report its fully-cached subtree,
     /// or execute it inside a kernel-budget share and hand back the live
     /// children (each with its branch snapshot) for scheduling.
@@ -679,7 +773,7 @@ impl<'rt> Executor<'rt> {
         // over the whole global pool
         let share = threads::acquire_share();
         let (nrep, branch) = share.run(|| self.exec_node(ctx, g, keys, node, incoming))?;
-        progress.emit(&nrep.name, &nrep.rep);
+        self.notify_done(progress, &nrep);
         reports.lock().unwrap_or_else(|p| p.into_inner()).push(nrep);
 
         let mut cached = Vec::new();
@@ -768,13 +862,14 @@ impl<'rt> Executor<'rt> {
         let key = keys[&node.name];
         let stage = node.stage().expect("stage subtree");
         let rep = self.cached_report(stage, &key)?;
-        progress.emit(&node.name, &rep);
-        out.push(NodeReport {
+        let nrep = NodeReport {
             name: node.name.clone(),
             parent: node.parent.clone(),
             seed: self.seed.wrapping_add(node.seed_offset),
             rep,
-        });
+        };
+        self.notify_done(progress, &nrep);
+        out.push(nrep);
         for child in g.children(&node.name) {
             self.emit_cached_subtree(g, keys, progress, child, out)?;
         }
@@ -824,6 +919,9 @@ impl<'rt> Executor<'rt> {
         let key = keys[&node.name];
         let dir = stage_dir(&self.cache_dir, &key);
         let eff_seed = self.seed.wrapping_add(node.seed_offset);
+        if let Some(h) = &self.hook {
+            h(NodeEvent::Started { name: &node.name, key: &key.hex() });
+        }
         // in-flight key dedup: a concurrent branch computing the same key
         // finishes (and commits) before this hit-check runs
         let key_lock = self.key_lock(&key);

@@ -43,7 +43,8 @@ pub mod parse;
 pub mod plan;
 
 pub use executor::{
-    AggregateRow, EvalMetrics, Executor, GraphReport, NodeReport, RunReport, StageReport,
+    AggregateRow, EvalMetrics, Executor, GraphReport, Interrupted, NodeEvent, NodeHook,
+    NodeReport, RunReport, StageReport,
 };
 pub use graph::{GraphBuilder, Node, NodeKind, PlanGraph, PlanOrGraph};
 pub use plan::{Plan, Stage};

@@ -25,13 +25,14 @@ use std::collections::BTreeMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::thread;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::ExperimentConfig;
+use crate::jobs::JobManager;
 
 pub use batcher::{BatchCfg, EngineHandle, EngineSpec, GenResult, ScoreResult};
 
@@ -50,6 +51,16 @@ pub struct ServeState {
     pub seed: u64,
     pub started: Instant,
     pub http_requests: AtomicU64,
+    /// Job queue behind the `/jobs` endpoints — set by `repro daemon`,
+    /// absent under plain `repro serve` (those routes then answer 503).
+    jobs: OnceLock<Arc<JobManager>>,
+    /// The process-wide stop flag: the accept loop polls it, and
+    /// [`request_shutdown`] (signal handlers, `POST /shutdown`,
+    /// [`ServerHandle::stop`]) sets it.
+    pub stop: Arc<AtomicBool>,
+    /// Bound listen address, set by [`Server::bind`] — lets
+    /// [`request_shutdown`] self-connect to wake the blocking accept.
+    bound: OnceLock<SocketAddr>,
 }
 
 impl ServeState {
@@ -67,7 +78,19 @@ impl ServeState {
             seed,
             started: Instant::now(),
             http_requests: AtomicU64::new(0),
+            jobs: OnceLock::new(),
+            stop: Arc::new(AtomicBool::new(false)),
+            bound: OnceLock::new(),
         }
+    }
+
+    /// Attach the daemon's job queue (once, before serving).
+    pub fn set_jobs(&self, mgr: Arc<JobManager>) {
+        let _ = self.jobs.set(mgr);
+    }
+
+    pub fn jobs(&self) -> Option<&Arc<JobManager>> {
+        self.jobs.get()
     }
 
     pub fn insert(&self, handle: Arc<EngineHandle>) -> Result<()> {
@@ -99,6 +122,23 @@ impl ServeState {
     }
 }
 
+/// Begin graceful shutdown: idempotently set the stop flag, stop the job
+/// queue from dequeuing (running jobs get their cancel flags set and
+/// requeue themselves for the next boot), and self-connect the listener so
+/// the blocking accept loop observes the flag.  Safe from any thread —
+/// signal watchdogs, HTTP workers (`POST /shutdown`), test harnesses.
+pub fn request_shutdown(state: &ServeState) {
+    if state.stop.swap(true, Ordering::SeqCst) {
+        return; // already shutting down
+    }
+    if let Some(jobs) = state.jobs() {
+        jobs.begin_shutdown();
+    }
+    if let Some(addr) = state.bound.get() {
+        let _ = TcpStream::connect(addr); // wake the accept loop
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Server: accept loop + worker pool.
 // ---------------------------------------------------------------------------
@@ -115,14 +155,15 @@ impl Server {
     pub fn bind(state: Arc<ServeState>, addr: &str, workers: usize) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let addr = listener.local_addr()?;
+        let _ = state.bound.set(addr);
         Ok(Server { listener, addr, state, workers: workers.max(1) })
     }
 
-    /// Run the accept loop on the current thread.  Returns once `stop` is
-    /// set *and* a connection arrives to wake the loop (see
-    /// [`ServerHandle::stop`]); the CLI passes an always-false flag and
-    /// blocks forever.
-    pub fn run(self, stop: Arc<AtomicBool>) {
+    /// Run the accept loop on the current thread.  Returns once the
+    /// state's stop flag is set *and* a connection arrives to wake the
+    /// loop — [`request_shutdown`] does both.
+    pub fn run(self) {
+        let stop = self.state.stop.clone();
         let (tx, rx) = mpsc::channel::<TcpStream>();
         let rx = Arc::new(Mutex::new(rx));
         let mut joins = Vec::with_capacity(self.workers);
@@ -162,27 +203,32 @@ impl Server {
     /// Run the accept loop on a background thread and return a stoppable
     /// handle — the harness for tests and `repro bench-serve`.
     pub fn spawn(self) -> ServerHandle {
-        let stop = Arc::new(AtomicBool::new(false));
         let addr = self.addr;
         let state = self.state.clone();
-        let stop2 = stop.clone();
-        let join = thread::spawn(move || self.run(stop2));
-        ServerHandle { addr, state, stop, join: Some(join) }
+        let join = thread::spawn(move || self.run());
+        ServerHandle { addr, state, join: Some(join) }
     }
 }
 
 pub struct ServerHandle {
     pub addr: SocketAddr,
     pub state: Arc<ServeState>,
-    stop: Arc<AtomicBool>,
     join: Option<thread::JoinHandle<()>>,
 }
 
 impl ServerHandle {
     /// Stop the accept loop, join the workers and shut the engines down.
     pub fn stop(mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        let _ = TcpStream::connect(self.addr); // wake the blocking accept
+        request_shutdown(&self.state);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        self.state.shutdown();
+    }
+
+    /// Wait for the accept loop to exit on its own (e.g. after a
+    /// `POST /shutdown`), then shut the engines down.
+    pub fn join(mut self) {
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }

@@ -4,14 +4,22 @@
 //! connection (`Connection: close`), bodies bounded by `Content-Length`,
 //! JSON in/out through [`crate::util::json::Json`].  Endpoints:
 //!
-//! | route              | verb | body                                        |
-//! |--------------------|------|---------------------------------------------|
-//! | `/healthz`         | GET  | status + loaded variants                    |
-//! | `/metrics`         | GET  | Prometheus text exposition                  |
-//! | `/models`          | GET  | per-variant detail (params, sparsity, KV)   |
-//! | `/models/load`     | POST | `{name, checkpoint[, model, max_active]}`   |
-//! | `/generate`        | POST | `{prompt[, model, max_tokens, temperature]}`|
-//! | `/score`           | POST | `{text[, model]}`                           |
+//! | route               | verb | body                                        |
+//! |---------------------|------|---------------------------------------------|
+//! | `/healthz`          | GET  | status + loaded variants                    |
+//! | `/metrics`          | GET  | Prometheus text exposition                  |
+//! | `/models`           | GET  | per-variant detail (params, sparsity, KV)   |
+//! | `/models/load`      | POST | `{name, checkpoint[, model, max_active]}`   |
+//! | `/generate`         | POST | `{prompt[, model, max_tokens, temperature]}`|
+//! | `/score`            | POST | `{text[, model]}`                           |
+//! | `/jobs`             | POST | submit a plan graph (see [`crate::jobs::api`]) |
+//! | `/jobs`             | GET  | job summaries                               |
+//! | `/jobs/<id>`        | GET  | full job record (per-node status, aggregates) |
+//! | `/jobs/<id>/cancel` | POST | cancel queued/running job                   |
+//! | `/shutdown`         | POST | graceful shutdown (daemon requeues jobs)    |
+//!
+//! Errors are uniform JSON: `{"error": <short>, "detail": <specifics>,
+//! "status": <code>}` with the code mirrored in the HTTP status line.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -125,7 +133,8 @@ pub fn serve_connection(state: &ServeState, stream: &mut TcpStream) {
             let _ = respond(stream, status, ctype, &body);
         }
         Err(e) => {
-            let _ = respond(stream, 400, "application/json", &err_body(&format!("{e:#}")));
+            let body = err_body(400, "bad request", &format!("{e:#}"));
+            let _ = respond(stream, 400, "application/json", &body);
         }
     }
 }
@@ -137,8 +146,20 @@ pub fn serve_connection(state: &ServeState, stream: &mut TcpStream) {
 const JSON: &str = "application/json";
 const TEXT: &str = "text/plain; version=0.0.4";
 
-fn err_body(msg: &str) -> String {
-    Json::obj(vec![("error", Json::Str(msg.to_string()))]).to_string()
+/// Structured error body: a short machine-matchable `error`, the human
+/// `detail`, and the HTTP `status` echoed for clients that drop headers.
+fn err_body(status: u16, error: &str, detail: &str) -> String {
+    Json::obj(vec![
+        ("error", Json::Str(error.to_string())),
+        ("detail", Json::Str(detail.to_string())),
+        ("status", Json::Num(status as f64)),
+    ])
+    .to_string()
+}
+
+/// `(status, body)` error pair — every handler's failure path.
+fn err(status: u16, error: &str, detail: &str) -> (u16, String) {
+    (status, err_body(status, error, detail))
 }
 
 /// Prometheus label-value escaping (backslash, quote, newline).
@@ -156,24 +177,20 @@ fn valid_variant_name(name: &str) -> bool {
 }
 
 pub fn route(state: &ServeState, req: &Request) -> (u16, &'static str, String) {
+    let json = |(status, body): (u16, String)| (status, JSON, body);
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => (200, JSON, healthz(state)),
         ("GET", "/metrics") => (200, TEXT, metrics(state)),
         ("GET", "/models") => (200, JSON, models(state)),
-        ("POST", "/models/load") => {
-            let (status, body) = models_load(state, &req.body);
-            (status, JSON, body)
-        }
-        ("POST", "/generate") => {
-            let (status, body) = generate(state, &req.body);
-            (status, JSON, body)
-        }
-        ("POST", "/score") => {
-            let (status, body) = score(state, &req.body);
-            (status, JSON, body)
-        }
-        ("GET", _) | ("POST", _) => (404, JSON, err_body(&format!("no route {}", req.path))),
-        _ => (405, JSON, err_body(&format!("method {} not allowed", req.method))),
+        ("POST", "/models/load") => json(models_load(state, &req.body)),
+        ("POST", "/generate") => json(generate(state, &req.body)),
+        ("POST", "/score") => json(score(state, &req.body)),
+        ("POST", "/jobs") => json(jobs_submit(state, &req.body)),
+        ("GET", "/jobs") => json(jobs_list(state)),
+        ("POST", "/shutdown") => json(shutdown(state)),
+        (method, path) if path.starts_with("/jobs/") => json(jobs_entry(state, method, path)),
+        ("GET", _) | ("POST", _) => json(err(404, "not found", &format!("no route {}", req.path))),
+        _ => json(err(405, "method not allowed", &format!("method {} not allowed", req.method))),
     }
 }
 
@@ -262,16 +279,16 @@ fn metrics(state: &ServeState) -> String {
 fn generate(state: &ServeState, body: &str) -> (u16, String) {
     let j = match Json::parse(body) {
         Ok(j) => j,
-        Err(e) => return (400, err_body(&format!("bad json: {e}"))),
+        Err(e) => return err(400, "bad json", &e.to_string()),
     };
     let Some(prompt) = j.get("prompt").and_then(Json::as_str) else {
-        return (400, err_body("\"prompt\" is required"));
+        return err(400, "missing field", "\"prompt\" is required");
     };
     let model = j.str_or("model", &state.default_model);
     let max_new = j.get("max_tokens").and_then(Json::as_usize);
     let temperature = j.get("temperature").and_then(Json::as_f64).unwrap_or(0.0) as f32;
     let Some(engine) = state.engine(&model) else {
-        return (404, err_body(&format!("no model variant {model:?}")));
+        return err(404, "unknown model", &format!("no model variant {model:?}"));
     };
     let t0 = Instant::now();
     match engine.generate(prompt.to_string(), max_new, temperature) {
@@ -290,21 +307,21 @@ fn generate(state: &ServeState, body: &str) -> (u16, String) {
             ])
             .to_string(),
         ),
-        Err(e) => (500, err_body(&format!("{e:#}"))),
+        Err(e) => err(500, "generation failed", &format!("{e:#}")),
     }
 }
 
 fn score(state: &ServeState, body: &str) -> (u16, String) {
     let j = match Json::parse(body) {
         Ok(j) => j,
-        Err(e) => return (400, err_body(&format!("bad json: {e}"))),
+        Err(e) => return err(400, "bad json", &e.to_string()),
     };
     let Some(text) = j.get("text").and_then(Json::as_str) else {
-        return (400, err_body("\"text\" is required"));
+        return err(400, "missing field", "\"text\" is required");
     };
     let model = j.str_or("model", &state.default_model);
     let Some(engine) = state.engine(&model) else {
-        return (404, err_body(&format!("no model variant {model:?}")));
+        return err(404, "unknown model", &format!("no model variant {model:?}"));
     };
     match engine.score(text.to_string()) {
         Ok(r) => (
@@ -317,7 +334,7 @@ fn score(state: &ServeState, body: &str) -> (u16, String) {
             ])
             .to_string(),
         ),
-        Err(e) => (400, err_body(&format!("{e:#}"))),
+        Err(e) => err(400, "scoring failed", &format!("{e:#}")),
     }
 }
 
@@ -325,22 +342,23 @@ fn score(state: &ServeState, body: &str) -> (u16, String) {
 fn models_load(state: &ServeState, body: &str) -> (u16, String) {
     let j = match Json::parse(body) {
         Ok(j) => j,
-        Err(e) => return (400, err_body(&format!("bad json: {e}"))),
+        Err(e) => return err(400, "bad json", &e.to_string()),
     };
     let Some(name) = j.get("name").and_then(Json::as_str) else {
-        return (400, err_body("\"name\" is required"));
+        return err(400, "missing field", "\"name\" is required");
     };
     if !valid_variant_name(name) {
-        return (
+        return err(
             400,
-            err_body("\"name\" must be 1-64 chars of [A-Za-z0-9._:@-]"),
+            "invalid name",
+            "\"name\" must be 1-64 chars of [A-Za-z0-9._:@-]",
         );
     }
     let Some(ckpt) = j.get("checkpoint").and_then(Json::as_str) else {
-        return (400, err_body("\"checkpoint\" is required"));
+        return err(400, "missing field", "\"checkpoint\" is required");
     };
     if state.engine(name).is_some() {
-        return (409, err_body(&format!("variant {name:?} already loaded")));
+        return err(409, "conflict", &format!("variant {name:?} already loaded"));
     }
     let mut cfg = state.base_cfg.clone();
     if let Some(m) = j.get("model").and_then(Json::as_str) {
@@ -364,10 +382,119 @@ fn models_load(state: &ServeState, body: &str) -> (u16, String) {
                 200,
                 Json::obj(vec![("loaded", Json::Str(name.to_string()))]).to_string(),
             ),
-            Err(e) => (409, err_body(&format!("{e:#}"))),
+            Err(e) => err(409, "conflict", &format!("{e:#}")),
         },
-        Err(e) => (400, err_body(&format!("{e:#}"))),
+        Err(e) => err(400, "load failed", &format!("{e:#}")),
     }
+}
+
+// ---------------------------------------------------------------------------
+// Job queue endpoints (daemon mode).
+// ---------------------------------------------------------------------------
+
+/// The daemon's queue, or a 503 for plain `repro serve`.
+fn jobs_manager(
+    state: &ServeState,
+) -> Result<&std::sync::Arc<crate::jobs::JobManager>, (u16, String)> {
+    state.jobs().ok_or_else(|| {
+        err(
+            503,
+            "no job queue",
+            "this server has no job queue; start one with `repro daemon`",
+        )
+    })
+}
+
+fn jobs_submit(state: &ServeState, body: &str) -> (u16, String) {
+    let mgr = match jobs_manager(state) {
+        Ok(m) => m,
+        Err(e) => return e,
+    };
+    let j = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return err(400, "bad json", &e.to_string()),
+    };
+    let spec = match crate::jobs::api::parse_submit(&j, &state.base_cfg, state.seed) {
+        Ok(s) => s,
+        Err(e) => return err(400, "invalid job", &format!("{e:#}")),
+    };
+    match mgr.submit(spec) {
+        Ok(id) => (
+            200,
+            Json::obj(vec![
+                ("id", Json::Str(id)),
+                ("status", Json::Str("queued".to_string())),
+            ])
+            .to_string(),
+        ),
+        Err(e) => err(503, "submit failed", &format!("{e:#}")),
+    }
+}
+
+fn jobs_list(state: &ServeState) -> (u16, String) {
+    let mgr = match jobs_manager(state) {
+        Ok(m) => m,
+        Err(e) => return e,
+    };
+    match mgr.store().list() {
+        Ok(recs) => (
+            200,
+            Json::obj(vec![(
+                "jobs",
+                Json::Arr(recs.iter().map(crate::jobs::api::job_summary).collect()),
+            )])
+            .to_string(),
+        ),
+        Err(e) => err(500, "store error", &format!("{e:#}")),
+    }
+}
+
+/// `/jobs/<id>` and `/jobs/<id>/cancel`.
+fn jobs_entry(state: &ServeState, method: &str, path: &str) -> (u16, String) {
+    let mgr = match jobs_manager(state) {
+        Ok(m) => m,
+        Err(e) => return e,
+    };
+    let rest = path.trim_start_matches("/jobs/");
+    let (id, action) = match rest.split_once('/') {
+        None => (rest, None),
+        Some((id, act)) => (id, Some(act)),
+    };
+    if id.is_empty() || !id.chars().all(|c| c.is_ascii_alphanumeric()) {
+        return err(400, "invalid job id", &format!("malformed job id {id:?}"));
+    }
+    let rec = match mgr.store().load(id) {
+        Ok(r) => r,
+        Err(_) => return err(404, "no such job", &format!("job {id:?} not found")),
+    };
+    match (method, action) {
+        ("GET", None) => (200, crate::jobs::api::job_detail(&rec).to_string()),
+        ("POST", Some("cancel")) => match mgr.cancel(id) {
+            Ok(outcome) => (
+                200,
+                Json::obj(vec![
+                    ("id", Json::Str(id.to_string())),
+                    ("result", Json::Str(outcome.to_string())),
+                ])
+                .to_string(),
+            ),
+            Err(e) => err(409, "cannot cancel", &format!("{e:#}")),
+        },
+        ("GET", Some(a)) | ("POST", Some(a)) => {
+            err(404, "not found", &format!("no job action {a:?}"))
+        }
+        _ => err(405, "method not allowed", &format!("{method} {path}")),
+    }
+}
+
+/// Graceful process shutdown over HTTP (the daemon's counterpart to
+/// SIGINT/SIGTERM): stop dequeuing, requeue in-flight jobs, stop serving.
+fn shutdown(state: &ServeState) -> (u16, String) {
+    super::request_shutdown(state);
+    (
+        200,
+        Json::obj(vec![("status", Json::Str("shutting down".to_string()))]).to_string(),
+    )
 }
 
 #[cfg(test)]
@@ -381,10 +508,15 @@ mod tests {
     }
 
     #[test]
-    fn error_bodies_are_json() {
-        let b = err_body("boom \"quoted\"");
+    fn error_bodies_are_structured_json() {
+        let b = err_body(404, "no such job", "boom \"quoted\"");
         let j = Json::parse(&b).unwrap();
-        assert_eq!(j.req("error").as_str().unwrap(), "boom \"quoted\"");
+        assert_eq!(j.req("error").as_str().unwrap(), "no such job");
+        assert_eq!(j.req("detail").as_str().unwrap(), "boom \"quoted\"");
+        assert_eq!(j.req("status").as_i64().unwrap(), 404);
+        let (status, body) = err(405, "method not allowed", "PATCH /jobs");
+        assert_eq!(status, 405);
+        assert!(body.contains("\"status\": 405") || body.contains("\"status\":405"), "{body}");
     }
 
     #[test]

@@ -1,0 +1,276 @@
+//! Integration tests for the durable experiment daemon: a submitted plan
+//! graph survives a shutdown mid-run, resumes on the next boot through the
+//! content-addressed stage cache, and a fully-cached resubmission completes
+//! with ZERO backend executions and aggregates bitwise-identical to a
+//! direct uninterrupted `Executor::run_graph` of the same graph.  A second
+//! test drives the whole `/jobs` HTTP surface end-to-end over real TCP.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use perp::config::ExperimentConfig;
+use perp::jobs::{JobManager, JobRecord, JobRunner, JobSpec, JobStatus, JobStore, NodeStatus};
+use perp::pipeline::parse::parse_graph;
+use perp::pipeline::Executor;
+use perp::runtime::{Backend, NativeBackend};
+use perp::server::{client, ServeState, Server};
+use perp::util::json::Json;
+
+/// Leaked so runner threads are `'static`: a failed assertion then simply
+/// fails the test instead of deadlocking a `thread::scope` against a
+/// runner parked on the queue condvar.
+fn rt() -> &'static NativeBackend {
+    Box::leak(Box::new(NativeBackend::new()))
+}
+
+/// Same dense shape family as graph_test.rs; a distinct `retrain_steps`
+/// value namespaces this binary's stage keys away from other test binaries
+/// sharing the temp cache naming scheme.
+fn cfg(retrain_steps: u64) -> ExperimentConfig {
+    let mut c = ExperimentConfig::quick("gpt-nano");
+    c.pretrain_steps = 120;
+    c.retrain_steps = retrain_steps;
+    c.recon_steps = 6;
+    c.calib_seqs = 8;
+    c.items_per_task = 6;
+    c.eval_batches = 2;
+    c
+}
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn spec(stages: &str, cfg: &ExperimentConfig) -> JobSpec {
+    JobSpec {
+        name: "jobs-test".to_string(),
+        graph: parse_graph("jobs-test", stages).unwrap(),
+        cfg: cfg.clone(),
+        seed: 0,
+        jobs: 1,
+    }
+}
+
+/// One daemon "boot": run a single `JobRunner` until `until(record)` holds
+/// (polled from the durable store every 25ms), then begin graceful
+/// shutdown and join the runner.
+fn run_until(
+    rt: &'static NativeBackend,
+    cache: &std::path::Path,
+    mgr: &Arc<JobManager>,
+    id: &str,
+    until: impl Fn(&JobRecord) -> bool,
+) {
+    let runner = JobRunner::new(rt, cache.to_path_buf(), mgr.clone());
+    let h = std::thread::spawn(move || runner.run());
+    let deadline = Instant::now() + Duration::from_secs(600);
+    let mut timed_out = false;
+    loop {
+        if let Ok(rec) = mgr.store().load(id) {
+            if until(&rec) {
+                break;
+            }
+        }
+        if Instant::now() >= deadline {
+            timed_out = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    mgr.begin_shutdown();
+    h.join().unwrap();
+    assert!(!timed_out, "timed out waiting on job {id}");
+}
+
+#[test]
+fn job_survives_interrupt_resumes_and_replays_from_cache() {
+    let rt = rt();
+    let out = tmp("perp_jobs_resume");
+    let jobs_root = out.join("jobs");
+    let cache = out.join("cache");
+    let c = cfg(31);
+    let stages = "prune(magnitude,0.55)|eval(ppl)|seeds(2)|agg";
+
+    // boot 1: submit, let at least one node commit, then shut down mid-run
+    let id = {
+        let mgr = Arc::new(JobManager::open(&jobs_root).unwrap());
+        let id = mgr.submit(spec(stages, &c)).unwrap();
+        run_until(rt, &cache, &mgr, &id, |r| r.nodes_done() >= 1);
+        id
+    };
+    let store = JobStore::open(&jobs_root).unwrap();
+    let rec = store.load(&id).unwrap();
+    assert_eq!(rec.status, JobStatus::Queued, "interrupted job requeues itself");
+    assert_eq!(rec.attempts, 1);
+    assert!(
+        rec.warnings.iter().any(|w| w.contains("interrupted by daemon shutdown")),
+        "{:?}",
+        rec.warnings
+    );
+    assert!(rec.nodes_done() >= 1, "progress persisted before the interrupt");
+    assert!(
+        rec.nodes.values().all(|n| n.status != NodeStatus::Running),
+        "running nodes reset to pending for the next attempt"
+    );
+    assert!(rec.backend_execs > 0, "attempt 1 did real work");
+    assert!(rec.queue_wait_s.is_some());
+
+    // boot 2: rescan requeues the job; it resumes and completes
+    {
+        let mgr = Arc::new(JobManager::open(&jobs_root).unwrap());
+        run_until(rt, &cache, &mgr, &id, |r| r.status.is_terminal());
+    }
+    let rec = store.load(&id).unwrap();
+    assert_eq!(rec.status, JobStatus::Done, "resume failed: {:?}", rec.error);
+    assert_eq!(rec.attempts, 2);
+    assert_eq!(rec.nodes.len(), 6, "2 seeds x (pretrain|prune|eval)");
+    assert_eq!(rec.nodes_done(), 6);
+    assert!(
+        rec.nodes.values().any(|n| n.cache_hit),
+        "nodes computed before the interrupt re-report as cache hits"
+    );
+    assert_eq!(rec.aggregates.len(), 1);
+    let resumed_agg = rec.aggregates[0].clone();
+
+    // boot 3: an identical resubmission replays fully from cache — zero
+    // backend executions, every node a hit
+    let execs_before = rt.exec_count();
+    let id2 = {
+        let mgr = Arc::new(JobManager::open(&jobs_root).unwrap());
+        let id2 = mgr.submit(spec(stages, &c)).unwrap();
+        run_until(rt, &cache, &mgr, &id2, |r| r.status.is_terminal());
+        id2
+    };
+    assert_eq!(rt.exec_count(), execs_before, "a cached job must execute no backend graph");
+    let rec2 = store.load(&id2).unwrap();
+    assert_eq!(rec2.status, JobStatus::Done, "{:?}", rec2.error);
+    assert_eq!(rec2.backend_execs, 0);
+    assert!(rec2.nodes.values().all(|n| n.cache_hit && n.status == NodeStatus::Done));
+
+    // aggregates (both the resumed job's and the replayed job's, which
+    // round-tripped through job.json) are bitwise-identical to a direct
+    // uninterrupted run of the same graph in a FRESH cache
+    let direct_dir = tmp("perp_jobs_direct");
+    let g = parse_graph("jobs-test", stages).unwrap();
+    let direct = Executor::new(rt, c.clone(), direct_dir.clone(), 0)
+        .quiet(true)
+        .run_graph(&g)
+        .unwrap();
+    assert_eq!(direct.aggregates.len(), 1);
+    let da = &direct.aggregates[0];
+    for agg in [&resumed_agg, &rec2.aggregates[0]] {
+        assert_eq!(agg.ppl.mean.to_bits(), da.ppl.mean.to_bits(), "ppl mean differs");
+        assert_eq!(agg.ppl.std.to_bits(), da.ppl.std.to_bits(), "ppl std differs");
+        assert_eq!(agg.ppl.n, da.ppl.n);
+        assert_eq!(agg.sparsity.mean.to_bits(), da.sparsity.mean.to_bits());
+        assert_eq!(agg.acc.mean.is_nan(), da.acc.mean.is_nan());
+        if !da.acc.mean.is_nan() {
+            assert_eq!(agg.acc.mean.to_bits(), da.acc.mean.to_bits());
+        }
+    }
+
+    std::fs::remove_dir_all(&out).ok();
+    std::fs::remove_dir_all(&direct_dir).ok();
+}
+
+#[test]
+fn http_api_submits_executes_cancels_and_shuts_down() {
+    let rt = rt();
+    let out = tmp("perp_jobs_http");
+    let jobs_root = out.join("jobs");
+    let cache = out.join("cache");
+    let c = cfg(32);
+
+    let mgr = Arc::new(JobManager::open(&jobs_root).unwrap());
+    let state = Arc::new(ServeState::new("gpt-nano".to_string(), c, cache.clone(), 0));
+    state.set_jobs(mgr.clone());
+    let server = Server::bind(state, "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr;
+    let handle = server.spawn();
+    let runner = JobRunner::new(rt, cache.clone(), mgr.clone());
+    let h = std::thread::spawn(move || runner.run());
+
+    // structured errors carry error/detail/status
+    let (code, body) = client::get(addr, "/jobs/j9999").unwrap();
+    assert_eq!(code, 404);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("error").and_then(Json::as_str), Some("no such job"));
+    assert!(j.get("detail").and_then(Json::as_str).is_some());
+    assert_eq!(j.get("status").and_then(Json::as_i64), Some(404));
+
+    // a bad submit is a 400, never a persisted job
+    let bad = Json::parse(r#"{"stages": "explode(now)"}"#).unwrap();
+    let (code, resp) = client::post_json(addr, "/jobs", &bad).unwrap();
+    assert_eq!(code, 400);
+    assert_eq!(resp.get("error").and_then(Json::as_str), Some("invalid job"));
+
+    // submit a tiny graph (pretrain + eval) against the daemon config
+    let body = Json::obj(vec![
+        ("stages", Json::Str("eval(ppl)".to_string())),
+        ("name", Json::Str("smoke".to_string())),
+    ]);
+    let (code, resp) = client::post_json(addr, "/jobs", &body).unwrap();
+    assert_eq!(code, 200, "{resp}");
+    assert_eq!(resp.get("status").and_then(Json::as_str), Some("queued"));
+    let id = resp.get("id").and_then(Json::as_str).unwrap().to_string();
+
+    // a second job can be cancelled through the API while the first
+    // occupies the single runner
+    let doomed = Json::obj(vec![("stages", Json::Str("eval(ppl)|seeds(2)".to_string()))]);
+    let (code, resp) = client::post_json(addr, "/jobs", &doomed).unwrap();
+    assert_eq!(code, 200, "{resp}");
+    let doomed_id = resp.get("id").and_then(Json::as_str).unwrap().to_string();
+    let (code, resp) =
+        client::post_json(addr, &format!("/jobs/{doomed_id}/cancel"), &Json::obj(vec![])).unwrap();
+    assert_eq!(code, 200, "{resp}");
+    let result = resp.get("result").and_then(Json::as_str).unwrap();
+    assert!(result == "cancelled" || result == "cancelling", "{result}");
+
+    // the listing shows both
+    let (code, body) = client::get(addr, "/jobs").unwrap();
+    assert_eq!(code, 200);
+    assert!(body.contains(&id) && body.contains(&doomed_id), "{body}");
+
+    // poll the detail endpoint until the first job completes
+    let deadline = Instant::now() + Duration::from_secs(600);
+    loop {
+        let (code, body) = client::get(addr, &format!("/jobs/{id}")).unwrap();
+        assert_eq!(code, 200);
+        let j = Json::parse(&body).unwrap();
+        match j.get("status").and_then(Json::as_str) {
+            Some("done") => {
+                let nodes = j.get("nodes").and_then(Json::as_obj).unwrap();
+                assert_eq!(nodes.len(), 2, "pretrain + eval");
+                assert!(nodes
+                    .values()
+                    .all(|n| n.get("status").and_then(Json::as_str) == Some("done")));
+                break;
+            }
+            Some("failed") | Some("cancelled") => panic!("job ended badly: {body}"),
+            _ => std::thread::sleep(Duration::from_millis(50)),
+        }
+        assert!(Instant::now() < deadline, "job did not finish in time");
+    }
+
+    // /metrics exposes the job families next to the serve metrics
+    let (code, metrics) = client::get(addr, "/metrics").unwrap();
+    assert_eq!(code, 200);
+    for family in [
+        "perp_obs_counter_total{name=\"jobs.submitted\"}",
+        "perp_obs_gauge{name=\"jobs.queued\"}",
+        "perp_obs_gauge{name=\"jobs.running\"}",
+        "perp_obs_histogram_count{name=\"jobs.queue_wait_s\"}",
+    ] {
+        assert!(metrics.contains(family), "missing {family} in:\n{metrics}");
+    }
+
+    // graceful stop over HTTP: the accept loop exits and the runner drains
+    // (any still-running job requeues itself for the next boot)
+    let (code, resp) = client::post_json(addr, "/shutdown", &Json::obj(vec![])).unwrap();
+    assert_eq!(code, 200, "{resp}");
+    h.join().unwrap();
+    handle.join();
+    std::fs::remove_dir_all(&out).ok();
+}
