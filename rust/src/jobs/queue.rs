@@ -5,8 +5,12 @@
 //! [`JobManager::open`] rescans `job.json` records on boot, requeues
 //! everything non-terminal (a job found `running` was interrupted by a
 //! crash or kill — its running nodes reset to `pending` and it resumes
-//! through the stage cache), and from then on mediates
-//! submit/dequeue/cancel between the HTTP handlers and the worker pool.
+//! through the stage cache) unless a durable cancel marker says the job
+//! was cancelled before the kill (then it goes terminal instead), and
+//! from then on mediates submit/dequeue/cancel between the HTTP handlers
+//! and the worker pool.  Job ids come from a counter inside the mutex
+//! (seeded from the store once at open), so concurrent submits are
+//! collision-free by construction.
 //!
 //! Metrics (all in the global [`Registry`]): gauges `jobs.queued` /
 //! `jobs.running` track live depths; counters `jobs.submitted`,
@@ -30,6 +34,9 @@ struct Inner {
     running: BTreeMap<String, Arc<AtomicBool>>,
     /// running jobs whose flag was set by an explicit cancel (vs shutdown)
     cancelled: BTreeSet<String>,
+    /// next job id number — seeded from the store at open and only ever
+    /// read/bumped under this mutex, so concurrent submits can't collide
+    next_id: u64,
     shutting_down: bool,
 }
 
@@ -45,24 +52,42 @@ impl JobManager {
     /// Open (or create) the store at `root` and rebuild the queue from it.
     pub fn open(root: &std::path::Path) -> Result<JobManager> {
         let store = JobStore::open(root)?;
+        let next_id = store.next_id_num()?;
         let mut queue = VecDeque::new();
         for mut rec in store.list()? {
             match rec.status {
-                JobStatus::Running => {
-                    // interrupted by a crash/kill mid-run: resume from the
-                    // stage cache on this boot
-                    rec.reset_running_nodes();
-                    rec.status = JobStatus::Queued;
-                    rec.queued_unix = now_unix();
-                    rec.warnings.push(format!(
-                        "requeued on daemon boot after interrupted attempt {}",
-                        rec.attempts
-                    ));
-                    store.save(&rec)?;
-                    crate::count!("jobs.resumed");
-                    queue.push_back(rec.id);
+                JobStatus::Running | JobStatus::Queued => {
+                    // a cancel acknowledged before the kill wins over resume:
+                    // the marker survives on disk even when the final
+                    // `job.json` save never happened
+                    if store.cancel_requested(&rec.id) {
+                        rec.reset_running_nodes();
+                        rec.status = JobStatus::Cancelled;
+                        rec.finished_unix = Some(now_unix());
+                        rec.warnings.push(
+                            "cancelled on daemon boot (cancel acknowledged before shutdown)"
+                                .to_string(),
+                        );
+                        store.save(&rec)?;
+                        store.clear_cancel(&rec.id);
+                        crate::count!("jobs.cancelled");
+                    } else if rec.status == JobStatus::Running {
+                        // interrupted by a crash/kill mid-run: resume from
+                        // the stage cache on this boot
+                        rec.reset_running_nodes();
+                        rec.status = JobStatus::Queued;
+                        rec.queued_unix = now_unix();
+                        rec.warnings.push(format!(
+                            "requeued on daemon boot after interrupted attempt {}",
+                            rec.attempts
+                        ));
+                        store.save(&rec)?;
+                        crate::count!("jobs.resumed");
+                        queue.push_back(rec.id);
+                    } else {
+                        queue.push_back(rec.id);
+                    }
                 }
-                JobStatus::Queued => queue.push_back(rec.id),
                 _ => {}
             }
         }
@@ -72,6 +97,7 @@ impl JobManager {
                 queue,
                 running: BTreeMap::new(),
                 cancelled: BTreeSet::new(),
+                next_id,
                 shutting_down: false,
             }),
             cv: Condvar::new(),
@@ -95,15 +121,19 @@ impl JobManager {
     }
 
     /// Persist a new queued job and wake a worker.  Fails (without
-    /// persisting anything) on invalid graphs/configs and during shutdown.
+    /// persisting anything or consuming an id) on invalid graphs/configs
+    /// and during shutdown.  The id is allocated from the serialized
+    /// counter while the lock is held — concurrent submits can never hand
+    /// two clients the same id or overwrite each other's `job.json`.
     pub fn submit(&self, spec: JobSpec) -> Result<String> {
-        let id = self.store.allocate_id()?;
-        let rec = JobRecord::new(&id, spec, now_unix())?;
         let mut inner = self.lock();
         if inner.shutting_down {
             bail!("daemon is shutting down; not accepting jobs");
         }
+        let id = JobStore::format_id(inner.next_id);
+        let rec = JobRecord::new(&id, spec, now_unix())?;
         self.store.save(&rec)?;
+        inner.next_id += 1;
         inner.queue.push_back(id.clone());
         crate::count!("jobs.submitted");
         self.sync_gauges(&inner);
@@ -148,12 +178,22 @@ impl JobManager {
         self.lock().shutting_down
     }
 
+    /// Current queue depth (jobs waiting, not running).
+    pub fn queued_len(&self) -> usize {
+        self.lock().queue.len()
+    }
+
     /// Cancel a job.  Queued jobs become `cancelled` immediately; running
-    /// jobs get their flag set and finish their in-flight nodes first.
-    /// Returns a short status word for the HTTP response.
+    /// jobs get a durable cancel marker (so the acknowledgement survives a
+    /// daemon kill — boot rescan cancels instead of resuming) plus their
+    /// in-memory flag, and finish their in-flight nodes first.  Returns a
+    /// short status word for the HTTP response.
     pub fn cancel(&self, id: &str) -> Result<&'static str> {
         let mut inner = self.lock();
         if let Some(flag) = inner.running.get(id) {
+            // persist before acknowledging: if this fails the client gets
+            // an error and no half-cancelled state was recorded anywhere
+            self.store.request_cancel(id)?;
             flag.store(true, Ordering::Relaxed);
             inner.cancelled.insert(id.to_string());
             return Ok("cancelling");
@@ -255,6 +295,50 @@ mod tests {
         // and it is actually dequeueable
         let (id, _) = mgr.dequeue().unwrap();
         assert_eq!(id, "j0001");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn concurrent_submits_get_unique_ids() {
+        let root = tmp("concurrent");
+        let mgr = Arc::new(JobManager::open(&root).unwrap());
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let mgr = Arc::clone(&mgr);
+            handles.push(std::thread::spawn(move || {
+                (0..4).map(|i| mgr.submit(spec(&format!("t{t}_{i}"))).unwrap()).collect::<Vec<_>>()
+            }));
+        }
+        let mut ids: Vec<String> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 32, "every submit must get a distinct id");
+        // and every id's record survived on disk (nothing overwritten)
+        assert_eq!(mgr.store().ids().unwrap().len(), 32);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn running_cancel_is_durable_across_boot() {
+        let root = tmp("durable_cancel");
+        {
+            let mgr = JobManager::open(&root).unwrap();
+            let id = mgr.submit(spec("a")).unwrap();
+            let (got, _flag) = mgr.dequeue().unwrap();
+            assert_eq!(got, id);
+            // simulate the worker having persisted `running`, then a cancel
+            // acknowledged, then SIGKILL before the worker's final save
+            let mut rec = mgr.store().load(&id).unwrap();
+            rec.status = JobStatus::Running;
+            mgr.store().save(&rec).unwrap();
+            assert_eq!(mgr.cancel(&id).unwrap(), "cancelling");
+            assert!(mgr.store().cancel_requested(&id), "ack must be durable");
+        }
+        let mgr = JobManager::open(&root).unwrap();
+        let rec = mgr.store().load("j0001").unwrap();
+        assert_eq!(rec.status, JobStatus::Cancelled, "boot honors the acknowledged cancel");
+        assert!(!mgr.store().cancel_requested("j0001"), "marker consumed");
+        assert_eq!(mgr.queued_len(), 0, "cancelled job must not requeue");
         std::fs::remove_dir_all(&root).ok();
     }
 

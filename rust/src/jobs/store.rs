@@ -427,6 +427,11 @@ fn mean_std_from(j: Option<&Json>) -> MeanStd {
     }
 }
 
+/// Numeric suffix of a `jNNNN` job id (`None` for foreign names).
+fn id_num(id: &str) -> Option<u64> {
+    id.strip_prefix('j').and_then(|n| n.parse::<u64>().ok())
+}
+
 /// Unix seconds now (0 if the clock is before the epoch).
 pub fn now_unix() -> u64 {
     std::time::SystemTime::now()
@@ -456,19 +461,30 @@ impl JobStore {
         self.root.join(id)
     }
 
-    /// Next job id: `j0001`, `j0002`, ... (max existing numeric suffix + 1,
-    /// so ids never recycle within one store).
-    pub fn allocate_id(&self) -> Result<String> {
-        let max = self
-            .ids()?
-            .iter()
-            .filter_map(|id| id.strip_prefix('j').and_then(|n| n.parse::<u64>().ok()))
-            .max()
-            .unwrap_or(0);
-        Ok(format!("j{:04}", max + 1))
+    /// Render job id number `n` as `j0001`-style.  The padding is cosmetic:
+    /// ordering everywhere goes through [`id_num`], not lexical sort.
+    pub fn format_id(n: u64) -> String {
+        format!("j{n:04}")
     }
 
-    /// Every job id present on disk, sorted (zero-padded ids sort by age).
+    /// First unused job id number (max existing numeric suffix + 1, so ids
+    /// never recycle within one store).  [`super::queue::JobManager`] seeds
+    /// its serialized counter from this once at open — allocation itself
+    /// must happen under the manager's lock, not by rescanning here, or two
+    /// concurrent submits race to the same id.
+    pub fn next_id_num(&self) -> Result<u64> {
+        Ok(self.ids()?.iter().filter_map(|id| id_num(id.as_str())).max().unwrap_or(0) + 1)
+    }
+
+    /// Next job id as a string; see [`Self::next_id_num`] for the caveat
+    /// that concurrent callers must serialize externally.
+    pub fn allocate_id(&self) -> Result<String> {
+        Ok(Self::format_id(self.next_id_num()?))
+    }
+
+    /// Every job id present on disk, oldest first.  Sorted by the parsed
+    /// numeric suffix (not lexically — `j10000` must come after `j9999`),
+    /// with any foreign names last.
     pub fn ids(&self) -> Result<Vec<String>> {
         let mut ids = Vec::new();
         let entries = std::fs::read_dir(&self.root)
@@ -479,8 +495,40 @@ impl JobStore {
                 ids.push(e.file_name().to_string_lossy().to_string());
             }
         }
-        ids.sort();
+        ids.sort_by(|a, b| match (id_num(a), id_num(b)) {
+            (Some(x), Some(y)) => x.cmp(&y),
+            (Some(_), None) => std::cmp::Ordering::Less,
+            (None, Some(_)) => std::cmp::Ordering::Greater,
+            (None, None) => a.cmp(b),
+        });
         Ok(ids)
+    }
+
+    // ----- cancel marker -------------------------------------------------
+    //
+    // An acknowledged cancel of a *running* job must survive a daemon kill
+    // that lands before the worker's final save.  It can't live inside
+    // `job.json`: the worker's node hook keeps overwriting that file from
+    // its own in-memory copy, which would clobber a concurrently-written
+    // field.  A separate marker file is immune to those overwrites; boot
+    // rescan honors it and the worker clears it on any terminal save.
+
+    fn cancel_marker(&self, id: &str) -> PathBuf {
+        self.job_dir(id).join("cancel_requested")
+    }
+
+    /// Durably record that a cancel was acknowledged for this job.
+    pub fn request_cancel(&self, id: &str) -> Result<()> {
+        let path = self.cancel_marker(id);
+        std::fs::write(&path, b"1").with_context(|| format!("writing {path:?}"))
+    }
+
+    pub fn cancel_requested(&self, id: &str) -> bool {
+        self.cancel_marker(id).is_file()
+    }
+
+    pub fn clear_cancel(&self, id: &str) {
+        let _ = std::fs::remove_file(self.cancel_marker(id));
     }
 
     pub fn save(&self, rec: &JobRecord) -> Result<()> {
@@ -562,6 +610,36 @@ mod tests {
         for (name, st) in &rec.nodes {
             assert_eq!(st.key, keys[name].hex());
         }
+    }
+
+    #[test]
+    fn ids_sort_numerically_past_padding_width() {
+        let dir = std::env::temp_dir().join(format!("perp_jobstore_pad_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let store = JobStore::open(&dir).unwrap();
+        for n in [9999u64, 123, 10000, 1] {
+            let rec = JobRecord::new(&JobStore::format_id(n), spec(), 0).unwrap();
+            store.save(&rec).unwrap();
+        }
+        // lexically "j10000" < "j9999"; FIFO ordering must be numeric
+        assert_eq!(store.ids().unwrap(), ["j0001", "j0123", "j9999", "j10000"]);
+        assert_eq!(store.allocate_id().unwrap(), "j10001");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cancel_marker_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("perp_jobstore_cm_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let store = JobStore::open(&dir).unwrap();
+        let rec = JobRecord::new("j0001", spec(), 0).unwrap();
+        store.save(&rec).unwrap();
+        assert!(!store.cancel_requested("j0001"));
+        store.request_cancel("j0001").unwrap();
+        assert!(store.cancel_requested("j0001"));
+        store.clear_cancel("j0001");
+        assert!(!store.cancel_requested("j0001"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

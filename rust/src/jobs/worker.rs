@@ -47,8 +47,33 @@ impl<'rt> JobRunner<'rt> {
         while let Some((id, cancel)) = self.manager.dequeue() {
             if let Err(e) = self.execute(&id, &cancel) {
                 crate::util::logging::progress(&format!("job {id}: runner error: {e:#}"));
+                self.fail_job(&id, &e);
             }
             self.manager.finish(&id);
+        }
+    }
+
+    /// Best-effort terminal state for a job whose runner errored outside
+    /// the graph walk (store I/O around execute()).  Without this the
+    /// record stays `running` on disk with no worker attached, invisible
+    /// to everything until a restart's boot rescan.
+    fn fail_job(&self, id: &str, err: &anyhow::Error) {
+        let store = self.manager.store();
+        let Ok(mut rec) = store.load(id) else { return };
+        if rec.status.is_terminal() {
+            return;
+        }
+        for n in rec.nodes.values_mut() {
+            if n.status == NodeStatus::Running {
+                n.status = NodeStatus::Failed;
+            }
+        }
+        rec.status = JobStatus::Failed;
+        rec.finished_unix = Some(now_unix());
+        rec.error = Some(format!("runner error: {err:#}"));
+        if store.save(&rec).is_ok() {
+            store.clear_cancel(id);
+            crate::count!("jobs.failed");
         }
     }
 
@@ -159,6 +184,12 @@ impl<'rt> JobRunner<'rt> {
             }
         }
         store.save(&rec)?;
+        if rec.status.is_terminal() {
+            // the durable cancel marker (if any) has served its purpose —
+            // terminal records never resume, so boot rescan ignores it;
+            // just don't leave the stale file behind
+            store.clear_cancel(&rec.id);
+        }
         Ok(())
     }
 }

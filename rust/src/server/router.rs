@@ -16,7 +16,7 @@
 //! | `/jobs`             | GET  | job summaries                               |
 //! | `/jobs/<id>`        | GET  | full job record (per-node status, aggregates) |
 //! | `/jobs/<id>/cancel` | POST | cancel queued/running job                   |
-//! | `/shutdown`         | POST | graceful shutdown (daemon requeues jobs)    |
+//! | `/shutdown`         | POST | graceful shutdown (daemon requeues jobs; loopback peers only) |
 //!
 //! Errors are uniform JSON: `{"error": <short>, "detail": <specifics>,
 //! "status": <code>}` with the code mirrored in the HTTP status line.
@@ -43,6 +43,10 @@ pub struct Request {
     pub method: String,
     pub path: String,
     pub body: String,
+    /// Did this connection come from a loopback address?  Process-control
+    /// endpoints (`POST /shutdown`) are restricted to local peers so a
+    /// `--host 0.0.0.0` bind doesn't hand remote clients a process kill.
+    pub peer_loopback: bool,
 }
 
 const MAX_HEADER_BYTES: usize = 64 * 1024;
@@ -92,7 +96,8 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
     }
     let body =
         String::from_utf8_lossy(&buf[body_start..body_start + content_length]).into_owned();
-    Ok(Request { method, path, body })
+    let peer_loopback = stream.peer_addr().map(|a| a.ip().is_loopback()).unwrap_or(false);
+    Ok(Request { method, path, body, peer_loopback })
 }
 
 fn find(haystack: &[u8], needle: &[u8]) -> Option<usize> {
@@ -108,6 +113,7 @@ pub fn respond(
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
+        403 => "Forbidden",
         404 => "Not Found",
         405 => "Method Not Allowed",
         409 => "Conflict",
@@ -187,7 +193,7 @@ pub fn route(state: &ServeState, req: &Request) -> (u16, &'static str, String) {
         ("POST", "/score") => json(score(state, &req.body)),
         ("POST", "/jobs") => json(jobs_submit(state, &req.body)),
         ("GET", "/jobs") => json(jobs_list(state)),
-        ("POST", "/shutdown") => json(shutdown(state)),
+        ("POST", "/shutdown") => json(shutdown(state, req)),
         (method, path) if path.starts_with("/jobs/") => json(jobs_entry(state, method, path)),
         ("GET", _) | ("POST", _) => json(err(404, "not found", &format!("no route {}", req.path))),
         _ => json(err(405, "method not allowed", &format!("method {} not allowed", req.method))),
@@ -489,7 +495,16 @@ fn jobs_entry(state: &ServeState, method: &str, path: &str) -> (u16, String) {
 
 /// Graceful process shutdown over HTTP (the daemon's counterpart to
 /// SIGINT/SIGTERM): stop dequeuing, requeue in-flight jobs, stop serving.
-fn shutdown(state: &ServeState) -> (u16, String) {
+/// Loopback-only — a wide `--host` bind must not expose remote process
+/// kill; remote operators use signals on the daemon host instead.
+fn shutdown(state: &ServeState, req: &Request) -> (u16, String) {
+    if !req.peer_loopback {
+        return err(
+            403,
+            "forbidden",
+            "POST /shutdown is restricted to loopback peers; signal the daemon process instead",
+        );
+    }
     super::request_shutdown(state);
     (
         200,
@@ -517,6 +532,28 @@ mod tests {
         let (status, body) = err(405, "method not allowed", "PATCH /jobs");
         assert_eq!(status, 405);
         assert!(body.contains("\"status\": 405") || body.contains("\"status\":405"), "{body}");
+    }
+
+    #[test]
+    fn shutdown_is_loopback_only() {
+        let state = ServeState::new(
+            "gpt-nano".to_string(),
+            crate::config::ExperimentConfig::quick("gpt-nano"),
+            std::env::temp_dir().join("perp_router_shutdown_test"),
+            0,
+        );
+        let req = |loopback: bool| Request {
+            method: "POST".to_string(),
+            path: "/shutdown".to_string(),
+            body: String::new(),
+            peer_loopback: loopback,
+        };
+        let (status, _, body) = route(&state, &req(false));
+        assert_eq!(status, 403, "{body}");
+        assert!(!state.stop.load(Ordering::Relaxed), "remote peer must not stop the server");
+        let (status, _, _) = route(&state, &req(true));
+        assert_eq!(status, 200);
+        assert!(state.stop.load(Ordering::Relaxed));
     }
 
     #[test]
