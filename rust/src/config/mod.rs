@@ -15,9 +15,13 @@ pub struct ExperimentConfig {
     pub model: String,
     /// execution backend ("native" | "pjrt"); overridable with --backend
     pub backend: String,
-    /// sparse weight layout policy ("auto" | "dense" | "masked" | "csr");
-    /// overridable with --layout.  Auto compresses layers at or above the
-    /// measured crossover sparsity (PERP_CSR_CROSSOVER, default 0.75).
+    /// sparse weight layout policy ("auto" | "auto-q" | "dense" | "masked" |
+    /// "csr" | "bsr" | "csr-f16" | "csr-q8" | "bsr-f16" | "bsr-q8");
+    /// overridable with --layout.  Auto picks a bitwise-exact layout per
+    /// layer from the measured crossover table (PERP_CROSSOVER_TABLE, or the
+    /// PERP_CSR_CROSSOVER single-threshold fallback, default 0.75); auto-q
+    /// and the explicit *-f16/*-q8 layouts are approximate and eval/decode
+    /// only.
     pub layout: String,
     /// pretraining steps to converge the dense model
     pub pretrain_steps: u64,

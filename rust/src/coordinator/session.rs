@@ -25,7 +25,8 @@ pub struct Session<'rt> {
     pub cfg: ExperimentConfig,
     pub params: ParamStore,
     pub masks: MaskSet,
-    /// Per-layer weight layouts + cached CSR forms, rebuilt whenever the
+    /// Per-layer weight layouts + cached compressed forms (CSR/BSR, exact
+    /// or quantised), rebuilt whenever the
     /// weights or masks change wholesale (prune / merge / load) so the
     /// retraining and serving hot loops never re-compress.
     pub sparse: SparseStore,
@@ -92,7 +93,7 @@ impl<'rt> Session<'rt> {
     // Sparse weight layout.
     // ------------------------------------------------------------------
 
-    /// Re-resolve per-layer layouts and rebuild the CSR forms from the
+    /// Re-resolve per-layer layouts and rebuild the compressed forms from the
     /// current `weight ⊙ mask` state.  Called after every wholesale
     /// weight/mask change (prune, merge, checkpoint load, full-FT
     /// retraining) — never per step, so hot loops reuse the cached forms.
@@ -185,11 +186,15 @@ impl<'rt> Session<'rt> {
         let mut meter = TpsMeter::new();
         let mut losses = Vec::with_capacity(steps as usize);
         let mut batch_rng = self.rng.fork(0xBA7C);
-        // the cached CSR forms hold weight *values*, so they are only valid
-        // while the prunable weights stay frozen — true for every PERP
+        // the cached compressed forms hold weight *values*, so they are only
+        // valid while the prunable weights stay frozen — true for every PERP
         // subset/adapter mode, false for full FT (which rebuilds them once,
         // after the loop)
         let trains_weights = leaf_names.iter().any(|n| self.mm.prunable.contains(n));
+        // quantised forms are approximate and therefore eval/decode-only:
+        // a training forward must never read them, even when the weights
+        // stay frozen, or the loss trace silently drifts off the masked path
+        let forms_exact = !self.layout.may_quantise();
 
         for t in 1..=steps {
             let tokens = self.train.train_batch(b, &mut batch_rng);
@@ -199,9 +204,10 @@ impl<'rt> Session<'rt> {
                 .ints("tokens", &shape, &tokens)
                 .scalar("step", t as f32)
                 .scalar("lr", lr);
-            feed = if trains_weights {
-                // cached CSR values would go stale as the weights move;
-                // layouts alone keep an explicit --layout dense honoured
+            feed = if trains_weights || !forms_exact {
+                // cached values would go stale as the weights move (or are
+                // quantised and must not feed a training forward); layouts
+                // alone keep an explicit --layout dense honoured
                 feed.weight_layouts(&self.sparse)
             } else {
                 feed.sparse(&self.sparse)
@@ -410,7 +416,7 @@ impl<'rt> Session<'rt> {
             }
             self.params.set(n, merged);
         }
-        // merged weights replace the frozen ones the CSR forms were built
+        // merged weights replace the frozen ones the compressed forms were built
         // from — recompress before eval/serve touch them
         self.refresh_sparse();
         Ok(())

@@ -130,7 +130,8 @@ subcommands:
                 repro jobs submit --stages \"...\" | --plan <file> [--watch]
                 repro jobs list | status <id> | cancel <id> | watch <id>
   bench-serve   load-generate against the batcher; write results/bench_serve.json
-  bench-kernels dense/masked/CSR matmul A/B; write results/bench_kernels.json
+  bench-kernels dense/masked/CSR/BSR/quantised matmul A/B + the crossover
+                table --layout auto consumes; write results/bench_kernels.json
   bench-graph   serial vs parallel plan-graph A/B; write results/bench_graph.json
   sweep         regenerate one paper table/figure (--exp <id>)
   tables        regenerate every table/figure
@@ -145,9 +146,15 @@ common flags:
   --threads <n>        rayon kernel threads (or PERP_THREADS)        [all cores]
   --jobs <j>           auto | K — concurrent plan-graph nodes; N in-flight
                        nodes split the kernel thread budget (or PERP_JOBS) [1]
-  --layout <l>         sparse weight layout: auto | dense | masked | csr  [auto]
-                       (auto compresses layers at/above the crossover
-                       sparsity; PERP_CSR_CROSSOVER overrides, default 0.75)
+  --layout <l>         sparse weight layout: auto | auto-q | dense | masked |
+                       csr | bsr | csr-f16 | csr-q8 | bsr-f16 | bsr-q8  [auto]
+                       (auto picks an exact layout per layer from the measured
+                       crossover table in <out>/bench_kernels.json when present
+                       — regenerate with `repro bench-kernels`; fallback
+                       heuristic: bsr for 2:4 masks, csr at/above the
+                       PERP_CSR_CROSSOVER sparsity, default 0.75.  auto-q may
+                       also pick quantised layouts: approximate, eval/decode
+                       only.  PERP_CROSSOVER_TABLE points at a table file)
   --criterion <c>      magnitude | magnitude-global | wanda | sparsegpt
   --sparsity <s>       0.5 | 50 | 2:4 | 4:8
   --mode <m>           full | biases | ln | biases_ln | head | embed |
@@ -249,10 +256,8 @@ fn common(args: &Args) -> Result<Env> {
     if let Some(backend) = args.opt_str("backend") {
         cfg.backend = backend;
     }
-    if let Some(layout) = args.opt_str("layout") {
-        perp::tensor::sparse::LayoutPolicy::parse(&layout)
-            .map_err(|e| anyhow::anyhow!(ArgError(e)))?;
-        cfg.layout = layout;
+    if let Some(policy) = args.opt_layout()? {
+        cfg.layout = policy.name().to_string();
     }
     if let Some(steps) = args.opt_u64("steps")? {
         cfg.retrain_steps = steps;
@@ -264,6 +269,13 @@ fn common(args: &Args) -> Result<Env> {
     let rt = open_backend(kind, &artifacts)?;
     let out = PathBuf::from(args.str("out", "results"));
     std::fs::create_dir_all(&out).ok();
+    // advertise the measured crossover table (written by `repro
+    // bench-kernels`) to the layout dispatcher; an explicit
+    // PERP_CROSSOVER_TABLE always wins
+    let table = out.join("bench_kernels.json");
+    if std::env::var_os("PERP_CROSSOVER_TABLE").is_none() && table.is_file() {
+        std::env::set_var("PERP_CROSSOVER_TABLE", &table);
+    }
     // --jobs wins over PERP_JOBS; `auto` sizes to the kernel thread budget
     let jobs = match args.opt_jobs()? {
         Some(j) => j.resolve(),
@@ -1177,10 +1189,14 @@ fn jobs_submit(args: &Args, addr: std::net::SocketAddr) -> Result<()> {
             )))
         }
     }
-    for key in ["name", "model", "profile", "layout"] {
+    for key in ["name", "model", "profile"] {
         if let Some(v) = args.opt_str(key) {
             fields.push((key, Json::Str(v)));
         }
+    }
+    // validate client-side so a typo exits 2 here, not as a failed job
+    if let Some(policy) = args.opt_layout()? {
+        fields.push(("layout", Json::Str(policy.name().to_string())));
     }
     if let Some(seed) = args.opt_u64("seed")? {
         fields.push(("seed", Json::Num(seed as f64)));
@@ -1424,10 +1440,28 @@ fn bench_phase(
 struct KernelRow {
     op: &'static str,
     shape: String,
+    /// Mask structure: "unstructured" or "2:4".
+    pattern: &'static str,
     sparsity: f64,
     dense_ns: f64,
     masked_ns: f64,
     csr_ns: f64,
+    bsr_ns: f64,
+    /// Quantised forward variants (`None` on backward rows — quantised
+    /// layouts have no backward).
+    csr_f16_ns: Option<f64>,
+    csr_q8_ns: Option<f64>,
+    bsr_f16_ns: Option<f64>,
+    bsr_q8_ns: Option<f64>,
+    /// Resident value bytes per compressed layout (forward rows only).
+    bytes: Option<ValueBytes>,
+}
+
+struct ValueBytes {
+    csr: usize,
+    bsr: usize,
+    csr_q8: usize,
+    bsr_q8: usize,
 }
 
 impl KernelRow {
@@ -1437,6 +1471,81 @@ impl KernelRow {
     fn vs_dense(&self) -> f64 {
         self.dense_ns / self.csr_ns.max(1e-9)
     }
+    fn bsr_vs_csr(&self) -> f64 {
+        self.csr_ns / self.bsr_ns.max(1e-9)
+    }
+}
+
+/// Nearest ancestor of the cwd holding `file` — how the bench finds the
+/// committed `BENCH_kernels.json` baseline whether it runs from the repo
+/// root or from `rust/`.
+fn baseline_path(file: &str) -> Option<PathBuf> {
+    let cwd = std::env::current_dir().ok()?;
+    cwd.ancestors().map(|d| d.join(file)).find(|p| p.is_file())
+}
+
+/// Print the geomean current/committed ratio per layout column against the
+/// committed baseline snapshot (rows matched on op+shape+pattern+sparsity).
+fn print_baseline_delta(rows: &[KernelRow]) {
+    let Some(path) = baseline_path("BENCH_kernels.json") else {
+        println!("baseline: no committed BENCH_kernels.json found (delta skipped)");
+        return;
+    };
+    let parsed = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok());
+    let Some(doc) = parsed else {
+        println!("baseline: {} is unreadable (delta skipped)", path.display());
+        return;
+    };
+    let mut base: std::collections::BTreeMap<String, Vec<(&str, f64)>> = Default::default();
+    for row in doc.get("results").and_then(Json::as_arr).map(Vec::as_slice).unwrap_or(&[]) {
+        let key = |f: &str| row.get(f).and_then(Json::as_str).unwrap_or("").to_string();
+        let id = format!(
+            "{}|{}|{}|{:.4}",
+            key("op"),
+            key("shape"),
+            row.get("pattern").and_then(Json::as_str).unwrap_or("unstructured"),
+            row.get("sparsity").and_then(Json::as_f64).unwrap_or(-1.0),
+        );
+        let mut cols = Vec::new();
+        for c in ["dense_ns", "masked_ns", "csr_ns", "bsr_ns"] {
+            if let Some(v) = row.get(c).and_then(Json::as_f64) {
+                cols.push((c, v));
+            }
+        }
+        base.insert(id, cols);
+    }
+    let mut ratios: std::collections::BTreeMap<&str, Vec<f64>> = Default::default();
+    for r in rows {
+        let id = format!("{}|{}|{}|{:.4}", r.op, r.shape, r.pattern, r.sparsity);
+        let Some(cols) = base.get(&id) else { continue };
+        for &(c, b) in cols {
+            let cur = match c {
+                "dense_ns" => r.dense_ns,
+                "masked_ns" => r.masked_ns,
+                "csr_ns" => r.csr_ns,
+                _ => r.bsr_ns,
+            };
+            if b > 0.0 && cur > 0.0 {
+                ratios.entry(c).or_default().push(cur / b);
+            }
+        }
+    }
+    if ratios.is_empty() {
+        println!("baseline: no comparable rows in {} (delta skipped)", path.display());
+        return;
+    }
+    let geomean = |v: &[f64]| (v.iter().map(|x| x.ln()).sum::<f64>() / v.len() as f64).exp();
+    let deltas: Vec<String> = ratios
+        .iter()
+        .map(|(c, v)| format!("{} {:.2}x", c.trim_end_matches("_ns"), geomean(v)))
+        .collect();
+    println!(
+        "baseline delta vs {} (current/committed, geomean; <1.00 is faster): {}",
+        path.display(),
+        deltas.join(", ")
+    );
 }
 
 /// `repro bench-kernels` — A/B the three weight layouts over the
@@ -1444,7 +1553,7 @@ impl KernelRow {
 /// machine-readable trajectory in `results/bench_kernels.json`, so the
 /// perf claims are tracked across PRs instead of eyeballed.
 fn bench_kernels(args: &Args) -> Result<()> {
-    use perp::tensor::sparse::{self, CsrMatrix};
+    use perp::tensor::sparse::{self, BsrMatrix, CsrMatrix, QuantBsr, QuantCsr, QuantKind};
     use perp::tensor::{linalg, Tensor};
     use perp::util::bench::{fmt_duration, Bench, Table};
     use perp::util::rng::Rng;
@@ -1483,90 +1592,239 @@ fn bench_kernels(args: &Args) -> Result<()> {
         let dy = Tensor::randn(&[n, m], 1.0, &mut rng);
         let w_nt = Tensor::randn(&[m, k], 1.0, &mut rng); // forward layout (out, in)
         let w_nn = Tensor::randn(&[m, k], 1.0, &mut rng); // backward-dx operand (m, k)
-        for &s in &sparsities {
-            let mask = sparse::random_mask(&[m, k], s, &mut rng);
+
+        // unstructured masks at every requested sparsity, plus the 2:4
+        // semi-structured point (50%) whenever the inner dim allows it —
+        // that row is where BSR's dense 1x4 tiles must beat CSR
+        let mut cases: Vec<(&'static str, f64, Tensor)> = sparsities
+            .iter()
+            .map(|&s| ("unstructured", s, sparse::random_mask(&[m, k], s, &mut rng)))
+            .collect();
+        if k % 4 == 0 {
+            cases.push(("2:4", 0.5, perp::pruning::semistructured::nm_mask(&w_nt, 2, 4)));
+        }
+        for (pattern, s, mask) in &cases {
+            let (pattern, s) = (*pattern, *s);
+            let structured = pattern == "2:4";
+            let (br, bc) = BsrMatrix::native_block(structured);
             let shape_fwd = format!("{n}x{k} @ ({m}x{k})T");
             let shape_bwd = format!("{n}x{m} @ {m}x{k}");
 
             // forward: x @ (W⊙M)ᵀ
-            let wm = w_nt.hadamard(&mask);
-            let csr = CsrMatrix::from_dense_masked(&w_nt, &mask);
+            let wm = w_nt.hadamard(mask);
+            let csr = CsrMatrix::from_dense_masked(&w_nt, mask);
+            let bsr = BsrMatrix::from_dense_masked(&w_nt, mask, br, bc);
+            let qc16 = QuantCsr::from_csr(&csr, QuantKind::F16);
+            let qc8 = QuantCsr::from_csr(&csr, QuantKind::I8);
+            let qb16 = QuantBsr::from_bsr(&bsr, QuantKind::F16);
+            let qb8 = QuantBsr::from_bsr(&bsr, QuantKind::I8);
             let d = bench.run(|| {
                 std::hint::black_box(linalg::matmul_nt(&x, &wm));
             });
             let mk = bench.run(|| {
-                std::hint::black_box(linalg::matmul_nt_masked(&x, &w_nt, &mask));
+                std::hint::black_box(linalg::matmul_nt_masked(&x, &w_nt, mask));
             });
             let c = bench.run(|| {
                 std::hint::black_box(sparse::spmm_nt(&x, &csr));
             });
+            let b = bench.run(|| {
+                std::hint::black_box(bsr.spmm_nt(&x));
+            });
+            let c16 = bench.run(|| {
+                std::hint::black_box(qc16.spmm_nt(&x));
+            });
+            let c8 = bench.run(|| {
+                std::hint::black_box(qc8.spmm_nt(&x));
+            });
+            let b16 = bench.run(|| {
+                std::hint::black_box(qb16.spmm_nt(&x));
+            });
+            let b8 = bench.run(|| {
+                std::hint::black_box(qb8.spmm_nt(&x));
+            });
             rows.push(KernelRow {
                 op: "forward",
                 shape: shape_fwd,
+                pattern,
                 sparsity: s,
                 dense_ns: ns(d.mean),
                 masked_ns: ns(mk.mean),
                 csr_ns: ns(c.mean),
+                bsr_ns: ns(b.mean),
+                csr_f16_ns: Some(ns(c16.mean)),
+                csr_q8_ns: Some(ns(c8.mean)),
+                bsr_f16_ns: Some(ns(b16.mean)),
+                bsr_q8_ns: Some(ns(b8.mean)),
+                bytes: Some(ValueBytes {
+                    csr: csr.value_bytes(),
+                    bsr: bsr.value_bytes(),
+                    csr_q8: qc8.value_bytes(),
+                    bsr_q8: qb8.value_bytes(),
+                }),
             });
 
-            // backward dx: dy @ (W⊙M)
-            let wm_b = w_nn.hadamard(&mask);
-            let csr_b = CsrMatrix::from_dense_masked(&w_nn, &mask);
+            // backward dx: dy @ (W⊙M) — exact layouts only (no quantised
+            // backward by design)
+            let wm_b = w_nn.hadamard(mask);
+            let csr_b = CsrMatrix::from_dense_masked(&w_nn, mask);
+            let bsr_b = BsrMatrix::from_dense_masked(&w_nn, mask, br, bc);
             let d = bench.run(|| {
                 std::hint::black_box(linalg::matmul(&dy, &wm_b));
             });
             let mk = bench.run(|| {
-                std::hint::black_box(linalg::matmul_masked(&dy, &w_nn, &mask));
+                std::hint::black_box(linalg::matmul_masked(&dy, &w_nn, mask));
             });
             let c = bench.run(|| {
                 std::hint::black_box(sparse::spmm(&dy, &csr_b));
             });
+            let b = bench.run(|| {
+                std::hint::black_box(bsr_b.spmm(&dy));
+            });
             rows.push(KernelRow {
                 op: "backward_dx",
                 shape: shape_bwd,
+                pattern,
                 sparsity: s,
                 dense_ns: ns(d.mean),
                 masked_ns: ns(mk.mean),
                 csr_ns: ns(c.mean),
+                bsr_ns: ns(b.mean),
+                csr_f16_ns: None,
+                csr_q8_ns: None,
+                bsr_f16_ns: None,
+                bsr_q8_ns: None,
+                bytes: None,
             });
         }
     }
 
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let mut t = Table::new(
-        &format!("matmul layouts: dense vs masked vs CSR ({cores} cores)"),
-        &["op", "shape", "sparsity", "dense", "masked", "csr", "csr/masked", "csr/dense"],
+        &format!("matmul layouts: dense vs masked vs CSR vs BSR vs quantised ({cores} cores)"),
+        &[
+            "op", "shape", "pattern", "sparsity", "dense", "masked", "csr", "bsr", "csr-q8",
+            "bsr/csr", "csr/masked",
+        ],
     );
     for r in &rows {
         t.row(vec![
             r.op.to_string(),
             r.shape.clone(),
+            r.pattern.to_string(),
             format!("{:.0}%", r.sparsity * 100.0),
             fmt_duration(Duration::from_nanos(r.dense_ns as u64)),
             fmt_duration(Duration::from_nanos(r.masked_ns as u64)),
             fmt_duration(Duration::from_nanos(r.csr_ns as u64)),
+            fmt_duration(Duration::from_nanos(r.bsr_ns as u64)),
+            r.csr_q8_ns
+                .map(|v| fmt_duration(Duration::from_nanos(v as u64)))
+                .unwrap_or_else(|| "-".to_string()),
+            format!("{:.2}x", r.bsr_vs_csr()),
             format!("{:.2}x", r.vs_masked()),
-            format!("{:.2}x", r.vs_dense()),
         ]);
     }
     t.print();
+    print_baseline_delta(&rows);
 
     let results = Json::Arr(
         rows.iter()
             .map(|r| {
-                Json::obj(vec![
+                let mut fields = vec![
                     ("op", Json::Str(r.op.to_string())),
                     ("shape", Json::Str(r.shape.clone())),
+                    ("pattern", Json::Str(r.pattern.to_string())),
                     ("sparsity", Json::Num(r.sparsity)),
                     ("dense_ns", Json::Num(r.dense_ns)),
                     ("masked_ns", Json::Num(r.masked_ns)),
                     ("csr_ns", Json::Num(r.csr_ns)),
+                    ("bsr_ns", Json::Num(r.bsr_ns)),
                     ("csr_speedup_vs_masked", Json::Num(r.vs_masked())),
                     ("csr_speedup_vs_dense", Json::Num(r.vs_dense())),
-                ])
+                    ("bsr_speedup_vs_csr", Json::Num(r.bsr_vs_csr())),
+                ];
+                for (name, v) in [
+                    ("csr_f16_ns", r.csr_f16_ns),
+                    ("csr_q8_ns", r.csr_q8_ns),
+                    ("bsr_f16_ns", r.bsr_f16_ns),
+                    ("bsr_q8_ns", r.bsr_q8_ns),
+                ] {
+                    if let Some(v) = v {
+                        fields.push((name, Json::Num(v)));
+                    }
+                }
+                if let Some(vb) = &r.bytes {
+                    fields.push(("csr_value_bytes", Json::Num(vb.csr as f64)));
+                    fields.push(("bsr_value_bytes", Json::Num(vb.bsr as f64)));
+                    fields.push(("csr_q8_value_bytes", Json::Num(vb.csr_q8 as f64)));
+                    fields.push(("bsr_q8_value_bytes", Json::Num(vb.bsr_q8 as f64)));
+                    fields.push((
+                        "csr_q8_value_byte_ratio",
+                        Json::Num(vb.csr_q8 as f64 / (vb.csr as f64).max(1.0)),
+                    ));
+                }
+                Json::obj(fields)
             })
             .collect(),
     );
+
+    // measured crossover table: per (pattern, sparsity), which layout had
+    // the lowest summed time across shapes.  best_exact ranks the bitwise
+    // layouts on forward+backward (the training path); best_any ranks all
+    // layouts on forward only (the decode/eval path where quantised forms
+    // are admissible).  `--layout auto` consumes this via
+    // PERP_CROSSOVER_TABLE (set by `common()` when the file exists).
+    #[derive(Default)]
+    struct CrossAgg {
+        fwd: std::collections::BTreeMap<&'static str, f64>,
+        bwd: std::collections::BTreeMap<&'static str, f64>,
+    }
+    let mut agg: std::collections::BTreeMap<(&'static str, u64), CrossAgg> = Default::default();
+    for r in &rows {
+        let e = agg.entry((r.pattern, r.sparsity.to_bits())).or_default();
+        let tgt = if r.op == "forward" { &mut e.fwd } else { &mut e.bwd };
+        *tgt.entry("dense").or_default() += r.dense_ns;
+        *tgt.entry("masked").or_default() += r.masked_ns;
+        *tgt.entry("csr").or_default() += r.csr_ns;
+        *tgt.entry("bsr").or_default() += r.bsr_ns;
+        for (name, v) in [
+            ("csr-f16", r.csr_f16_ns),
+            ("csr-q8", r.csr_q8_ns),
+            ("bsr-f16", r.bsr_f16_ns),
+            ("bsr-q8", r.bsr_q8_ns),
+        ] {
+            if let Some(v) = v {
+                *tgt.entry(name).or_default() += v;
+            }
+        }
+    }
+    const EXACT: [&str; 4] = ["dense", "masked", "csr", "bsr"];
+    const ALL: [&str; 8] = [
+        "dense", "masked", "csr", "bsr", "csr-f16", "csr-q8", "bsr-f16", "bsr-q8",
+    ];
+    let crossover: Vec<Json> = agg
+        .iter()
+        .map(|((pattern, sbits), a)| {
+            let total = |l: &str| {
+                a.fwd.get(l).copied().unwrap_or(f64::INFINITY)
+                    + a.bwd.get(l).copied().unwrap_or(0.0)
+            };
+            let fwd_only = |l: &str| a.fwd.get(l).copied().unwrap_or(f64::INFINITY);
+            let argmin = |cands: &[&'static str], f: &dyn Fn(&str) -> f64| {
+                cands
+                    .iter()
+                    .copied()
+                    .min_by(|x, y| f(x).partial_cmp(&f(y)).unwrap())
+                    .unwrap()
+            };
+            Json::obj(vec![
+                ("sparsity", Json::Num(f64::from_bits(*sbits))),
+                ("pattern", Json::Str(pattern.to_string())),
+                ("best_exact", Json::Str(argmin(&EXACT, &total).to_string())),
+                ("best_any", Json::Str(argmin(&ALL, &fwd_only).to_string())),
+            ])
+        })
+        .collect();
+
     let report = Json::obj(vec![
         ("bench", Json::Str("kernels".to_string())),
         ("cores", Json::Num(cores as f64)),
@@ -1574,6 +1832,7 @@ fn bench_kernels(args: &Args) -> Result<()> {
             "csr_crossover",
             Json::Num(perp::tensor::sparse::LayoutPolicy::csr_crossover()),
         ),
+        ("crossover", Json::Arr(crossover)),
         ("results", results),
     ]);
     std::fs::create_dir_all(&out_dir).ok();
@@ -1753,7 +2012,10 @@ fn bench_serve(args: &Args) -> Result<()> {
     let addr = server.addr;
     let handle = server.spawn();
 
-    println!("bench-serve: {} requests x {} tokens on {addr}", requests, max_tokens);
+    println!(
+        "bench-serve: {} requests x {} tokens on {addr} (layout {})",
+        requests, max_tokens, env.cfg.layout
+    );
     let seq = bench_phase(addr, "seq", requests, 1, max_tokens)?;
     let bat = bench_phase(addr, "batched", requests, concurrency, max_tokens)?;
     handle.stop();
@@ -1790,6 +2052,7 @@ fn bench_serve(args: &Args) -> Result<()> {
     let report = Json::obj(vec![
         ("bench", Json::Str("serve".to_string())),
         ("model", Json::Str(env.cfg.model.clone())),
+        ("layout", Json::Str(env.cfg.layout.clone())),
         ("requests", Json::Num(requests as f64)),
         ("max_tokens", Json::Num(max_tokens as f64)),
         ("concurrency", Json::Num(concurrency as f64)),

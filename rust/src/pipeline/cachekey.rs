@@ -69,7 +69,14 @@ pub fn base_key(cfg: &ExperimentConfig, seed: u64) -> Key {
         cfg.eval_batches,
         cfg.data_seed,
     );
-    Key(fnv1a(FNV_OFFSET, basis.as_bytes()))
+    let key = Key(fnv1a(FNV_OFFSET, basis.as_bytes()));
+    // Exact layouts (dense/masked/csr/bsr/auto) are bitwise-identical, so
+    // they share one artifact space — switching them must not invalidate
+    // caches.  Quantised policies change eval outputs and key separately.
+    match crate::tensor::sparse::LayoutPolicy::parse(&cfg.layout) {
+        Ok(p) if p.may_quantise() => key.push(&format!("layout={}", p.name())),
+        _ => key,
+    }
 }
 
 #[cfg(test)]
@@ -90,6 +97,23 @@ mod tests {
         assert_ne!(k.push("a").push("b"), k.push("b").push("a"));
         assert_ne!(k.push("ab").push("c"), k.push("a").push("bc"));
         assert_eq!(k.push("x"), k.push("x"));
+    }
+
+    #[test]
+    fn exact_layouts_share_keys_quantised_segregate() {
+        let mut c = ExperimentConfig::quick("gpt-nano");
+        let k_auto = base_key(&c, 0);
+        for exact in ["dense", "masked", "csr", "bsr"] {
+            c.layout = exact.to_string();
+            assert_eq!(k_auto, base_key(&c, 0), "exact layout {exact} must share artifacts");
+        }
+        let mut seen = vec![k_auto];
+        for quant in ["auto-q", "csr-q8", "bsr-f16"] {
+            c.layout = quant.to_string();
+            let k = base_key(&c, 0);
+            assert!(!seen.contains(&k), "quantised layout {quant} must key separately");
+            seen.push(k);
+        }
     }
 
     #[test]

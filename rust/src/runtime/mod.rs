@@ -34,7 +34,7 @@ pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 
-use crate::tensor::sparse::{CsrMatrix, SparseStore, WeightLayout};
+use crate::tensor::sparse::{SparseForm, SparseStore, WeightLayout};
 use crate::tensor::Tensor;
 
 // ---------------------------------------------------------------------------
@@ -48,7 +48,7 @@ use crate::tensor::Tensor;
 /// [`Feed::tensor`] / [`Feed::ints`] / [`Feed::scalar`].
 ///
 /// Compressed weight forms travel on a dedicated side channel
-/// ([`Feed::csr`] / [`Feed::weight_layout`], usually attached wholesale via
+/// ([`Feed::form`] / [`Feed::weight_layout`], usually attached wholesale via
 /// [`Feed::sparse`]): they are execution *hints* outside the manifest's
 /// `ExecSpec` contract — backends that cannot exploit them (PJRT) simply
 /// ignore them, and the dense params/masks are always fed alongside.
@@ -58,7 +58,7 @@ pub struct Feed<'a> {
     owned: HashMap<String, Tensor>,
     ints: HashMap<String, (&'a [usize], &'a [i32])>,
     providers: Vec<&'a dyn Fn(&str) -> Option<&'a Tensor>>,
-    csrs: HashMap<String, &'a CsrMatrix>,
+    forms: HashMap<String, &'a SparseForm>,
     layouts: HashMap<String, WeightLayout>,
 }
 
@@ -110,8 +110,8 @@ impl<'a> Feed<'a> {
     }
 
     /// Attach one weight's compressed form (keyed by the weight name).
-    pub fn csr(mut self, name: &str, m: &'a CsrMatrix) -> Self {
-        self.csrs.insert(name.to_string(), m);
+    pub fn form(mut self, name: &str, m: &'a SparseForm) -> Self {
+        self.forms.insert(name.to_string(), m);
         self
     }
 
@@ -122,18 +122,20 @@ impl<'a> Feed<'a> {
     }
 
     /// Attach a whole [`SparseStore`]: every resolved layout plus every
-    /// cached CSR form — the one-liner the coordinator hot loops use.
+    /// cached compressed form — the one-liner the coordinator hot loops use.
     pub fn sparse(mut self, store: &'a SparseStore) -> Self {
-        for (n, c) in &store.csr {
-            self.csrs.insert(n.clone(), c);
+        for (n, f) in &store.forms {
+            self.forms.insert(n.clone(), f);
         }
         self.weight_layouts(store)
     }
 
-    /// Attach only the resolved layouts, not the CSR forms — for loops
-    /// whose cached weight *values* would be stale (full-FT training).
-    /// Dense/Masked routing needs no values, so it stays honoured; a
-    /// `Csr`-routed layer without its form falls back to Masked.
+    /// Attach only the resolved layouts, not the compressed forms — for
+    /// loops whose cached weight *values* would be stale (full-FT training)
+    /// or whose routed layout is approximate (quantised policies during
+    /// training).  Dense/Masked routing needs no values, so it stays
+    /// honoured; a compressed-routed layer without its form falls back to
+    /// the exact Masked kernels.
     pub fn weight_layouts(mut self, store: &SparseStore) -> Self {
         for (n, l) in &store.layouts {
             self.layouts.insert(n.clone(), *l);
@@ -141,8 +143,8 @@ impl<'a> Feed<'a> {
         self
     }
 
-    pub fn get_csr(&self, name: &str) -> Option<&'a CsrMatrix> {
-        self.csrs.get(name).copied()
+    pub fn get_form(&self, name: &str) -> Option<&'a SparseForm> {
+        self.forms.get(name).copied()
     }
 
     pub fn get_weight_layout(&self, name: &str) -> Option<WeightLayout> {

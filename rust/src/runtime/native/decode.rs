@@ -6,7 +6,8 @@
 //! prompt position.  `decode_step` advances the active streams by exactly
 //! one token: it embeds the freshly sampled token at its stream position,
 //! runs the per-layer linears over the *compacted* active rows (so a
-//! batch=1 stream pays batch=1 cost), attends each stream's single query
+//! batch=1 stream pays batch=1 cost) — the q/k/v projections fused into
+//! one sparse-aware kernel call per layer — attends each stream's single query
 //! against its cache rows plus the new K/V, and emits the next-token
 //! logits together with the new K/V rows.  The server owns the cache
 //! tensors and writes those rows in place — the backend stays stateless.
@@ -23,6 +24,7 @@ use rayon::prelude::*;
 
 use crate::runtime::manifest::ModelManifest;
 use crate::runtime::Outputs;
+use crate::tensor::sparse::{SparseForm, WeightLayout};
 use crate::tensor::{linalg, pool, Tensor};
 
 use super::graph::{self, GraphIn, ModeKind, SparseView};
@@ -123,9 +125,14 @@ pub(super) fn decode_step(
         for i in 0..cfg.n_layers {
             let pfx = format!("h{i}_");
             let h1 = norm_apply(&gi, &format!("{pfx}ln1"), &cur);
-            let q = linear_apply(&gi, &format!("{pfx}attn_q"), &h1);
-            let k = linear_apply(&gi, &format!("{pfx}attn_k"), &h1);
-            let v = linear_apply(&gi, &format!("{pfx}attn_v"), &h1);
+            let (q, k, v) = match fused_qkv(&gi, &pfx, &h1) {
+                Some(heads) => heads,
+                None => (
+                    linear_apply(&gi, &format!("{pfx}attn_q"), &h1),
+                    linear_apply(&gi, &format!("{pfx}attn_k"), &h1),
+                    linear_apply(&gi, &format!("{pfx}attn_v"), &h1),
+                ),
+            };
             pool::recycle(h1);
             // the new K/V rows, head-major — both the cache-delta outputs
             // and this step's self-attention contribution
@@ -204,6 +211,143 @@ fn linear_apply(gi: &GraphIn, base: &str, x: &Tensor) -> Tensor {
         ops::add_bias(&mut y, gi.p(&format!("{base}_b")));
     }
     y
+}
+
+/// Output-column batch for the single-stream fused q/k/v dispatch — matches
+/// the sparse kernels' own task granularity so one decode step still spreads
+/// across the rayon pool.
+const QKV_COLS_PER_TASK: usize = 64;
+
+/// One head's column kernel inside the fused q/k/v pass: either a cached
+/// compressed form or the inline masked dot, both producing the exact
+/// per-output-element accumulation order of `linalg::matmul_nt_masked` /
+/// `SparseForm::spmm_nt` so fusing never changes a bit.
+enum HeadKernel<'a> {
+    Form(&'a SparseForm),
+    Masked { w: &'a [f32], m: &'a [f32] },
+}
+
+impl HeadKernel<'_> {
+    fn dots_range(&self, arow: &[f32], j0: usize, out: &mut [f32]) {
+        match self {
+            HeadKernel::Form(f) => f.dots_range(arow, j0, out),
+            HeadKernel::Masked { w, m } => {
+                let k = arow.len();
+                for (jj, o) in out.iter_mut().enumerate() {
+                    let j = j0 + jj;
+                    let wrow = &w[j * k..(j + 1) * k];
+                    let mrow = &m[j * k..(j + 1) * k];
+                    let mut acc = 0.0f32;
+                    for kk in 0..k {
+                        if mrow[kk] == 0.0 {
+                            continue; // pruned weight: skipped, not multiplied
+                        }
+                        acc += arow[kk] * wrow[kk];
+                    }
+                    *o = acc;
+                }
+            }
+        }
+    }
+}
+
+/// Walk a span of the combined `[q|k|v]` output row, dispatching each
+/// maximal single-head run to that head's kernel.  `c0` is the span's start
+/// in combined-column coordinates; `offs` are the head boundaries.
+fn qkv_run_heads(
+    kernels: &[HeadKernel; 3],
+    offs: &[usize; 4],
+    arow: &[f32],
+    c0: usize,
+    out: &mut [f32],
+) {
+    let mut done = 0;
+    while done < out.len() {
+        let c = c0 + done;
+        let h = if c < offs[1] {
+            0
+        } else if c < offs[2] {
+            1
+        } else {
+            2
+        };
+        let run = (offs[h + 1] - c).min(out.len() - done);
+        kernels[h].dots_range(arow, c - offs[h], &mut out[done..done + run]);
+        done += run;
+    }
+}
+
+/// Fused q/k/v projection: one kernel call computes all three attention
+/// heads' outputs in a single pass over each activation row, instead of the
+/// three independent SpMM dispatches `linear_apply` would make.  With one
+/// active stream (the common decode case) the combined `[q|k|v]` output row
+/// is split across the rayon pool by column chunk; with several streams the
+/// pass parallelises over rows, each task reading its activation row once
+/// while filling all three head segments.  Returns `None` when any head is
+/// routed `Dense` — that path wants the BLAS-shaped dense matmul, not a
+/// per-column loop.  Bitwise-identical to the unfused path because every
+/// head run reuses the same per-output-element kernels (`dots_range` /
+/// the masked inner loop) the separate calls would hit.
+fn fused_qkv(gi: &GraphIn, pfx: &str, x: &Tensor) -> Option<(Tensor, Tensor, Tensor)> {
+    let names = [
+        format!("{pfx}attn_q_w"),
+        format!("{pfx}attn_k_w"),
+        format!("{pfx}attn_v_w"),
+    ];
+    let layouts = [
+        gi.sparse.layout_of(&names[0]),
+        gi.sparse.layout_of(&names[1]),
+        gi.sparse.layout_of(&names[2]),
+    ];
+    if layouts.contains(&WeightLayout::Dense) {
+        return None;
+    }
+    let kernels: [HeadKernel; 3] = [0usize, 1, 2].map(|i| match gi.sparse.get_form(&names[i]) {
+        Some(f) => HeadKernel::Form(f),
+        None => HeadKernel::Masked { w: gi.p(&names[i]).data(), m: gi.m(&names[i]).data() },
+    });
+    for l in layouts {
+        graph::count_spmm(l);
+    }
+    crate::count!("decode.qkv_fused");
+
+    let (na, d) = (x.rows(), x.cols());
+    let (d0, d1, d2) = (
+        gi.p(&names[0]).rows(),
+        gi.p(&names[1]).rows(),
+        gi.p(&names[2]).rows(),
+    );
+    let dtot = d0 + d1 + d2;
+    let offs = [0, d0, d0 + d1, dtot];
+    let xd = x.data();
+    let mut out = pool::zeroed(na * dtot);
+    if na == 1 {
+        out.par_chunks_mut(QKV_COLS_PER_TASK).enumerate().for_each(|(ci, chunk)| {
+            qkv_run_heads(&kernels, &offs, xd, ci * QKV_COLS_PER_TASK, chunk);
+        });
+    } else {
+        out.par_chunks_mut(dtot).enumerate().for_each(|(r, orow)| {
+            qkv_run_heads(&kernels, &offs, &xd[r * d..(r + 1) * d], 0, orow);
+        });
+    }
+
+    let mut heads = Vec::with_capacity(3);
+    for (h, &dh_out) in [d0, d1, d2].iter().enumerate() {
+        let mut hd = pool::zeroed(na * dh_out);
+        for r in 0..na {
+            hd[r * dh_out..(r + 1) * dh_out]
+                .copy_from_slice(&out[r * dtot + offs[h]..r * dtot + offs[h] + dh_out]);
+        }
+        let mut t = Tensor::new(&[na, dh_out], hd);
+        if gi.mm.cfg.use_bias {
+            let base = &names[h][..names[h].len() - 2]; // strip the "_w"
+            ops::add_bias(&mut t, gi.p(&format!("{base}_b")));
+        }
+        heads.push(t);
+    }
+    pool::recycle(Tensor::new(&[na, dtot], out));
+    let mut it = heads.into_iter();
+    Some((it.next().unwrap(), it.next().unwrap(), it.next().unwrap()))
 }
 
 /// One query per active stream against its cache rows plus the freshly

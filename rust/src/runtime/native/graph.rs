@@ -13,7 +13,7 @@
 use std::collections::{BTreeMap, HashSet};
 
 use crate::runtime::manifest::ModelManifest;
-use crate::tensor::{linalg, pool, sparse, Tensor};
+use crate::tensor::{linalg, pool, Tensor};
 
 use super::ops;
 
@@ -285,40 +285,55 @@ fn norm_bwd(
     }
 }
 
+/// One `spmm.<layout>` tick per dispatched contraction — each arm is its
+/// own call site so the [`crate::count!`] handle caching stays valid.
+pub(crate) fn count_spmm(layout: WeightLayout) {
+    match layout {
+        WeightLayout::Dense => crate::count!("spmm.dense"),
+        WeightLayout::Masked => crate::count!("spmm.masked"),
+        WeightLayout::Csr => crate::count!("spmm.csr"),
+        WeightLayout::Bsr => crate::count!("spmm.bsr"),
+        WeightLayout::CsrF16 => crate::count!("spmm.csr_f16"),
+        WeightLayout::CsrQ8 => crate::count!("spmm.csr_q8"),
+        WeightLayout::BsrF16 => crate::count!("spmm.bsr_f16"),
+        WeightLayout::BsrQ8 => crate::count!("spmm.bsr_q8"),
+    }
+}
+
 /// `x @ (W⊙M)ᵀ` through the weight's resolved [`WeightLayout`] — the
-/// forward/decode dispatch seam.  CSR touches only surviving weights;
-/// Masked reads W and M fused; Dense materialises `W⊙M` (the pre-fusion
-/// baseline, kept for A/B benches and `--layout dense`).
+/// forward/decode dispatch seam.  CSR touches only surviving weights; BSR
+/// streams dense tiles with pipelined accumulators; the quantised forms
+/// dequantise in-register; Masked reads W and M fused; Dense materialises
+/// `W⊙M` (the pre-fusion baseline, kept for A/B benches and
+/// `--layout dense`).
 pub(crate) fn masked_fwd(gi: &GraphIn, wname: &str, x: &Tensor) -> Tensor {
-    match gi.sparse.layout_of(wname) {
-        WeightLayout::Csr => {
-            crate::count!("spmm.csr");
-            sparse::spmm_nt(x, gi.sparse.get_csr(wname).expect("csr layout implies a cached form"))
-        }
-        WeightLayout::Masked => {
-            crate::count!("spmm.masked");
-            linalg::matmul_nt_masked(x, gi.p(wname), gi.m(wname))
-        }
+    let layout = gi.sparse.layout_of(wname);
+    count_spmm(layout);
+    match layout {
+        WeightLayout::Masked => linalg::matmul_nt_masked(x, gi.p(wname), gi.m(wname)),
         WeightLayout::Dense => {
-            crate::count!("spmm.dense");
             let wm = gi.p(wname).hadamard(gi.m(wname));
             let y = linalg::matmul_nt(x, &wm);
             pool::recycle(wm);
             y
         }
+        _ => gi
+            .sparse
+            .get_form(wname)
+            .expect("compressed layout implies a cached form")
+            .spmm_nt(x),
     }
 }
 
 /// `dy @ (W⊙M)` through the weight's resolved layout — the backward-dx
 /// seam.  Weight-gradient accumulation stays dense in all layouts: masks
 /// freeze pruned coordinates, so only the dx contraction profits from
-/// compression.
+/// compression.  Quantised forms refuse the backward contraction
+/// (`SparseForm::spmm` returns `None`) — gradients must never be
+/// approximate, so they fall back to the exact masked kernel.
 pub(crate) fn masked_bwd_dx(gi: &GraphIn, wname: &str, dy: &Tensor) -> Tensor {
-    match gi.sparse.layout_of(wname) {
-        WeightLayout::Csr => {
-            crate::count!("spmm.csr");
-            sparse::spmm(dy, gi.sparse.get_csr(wname).expect("csr layout implies a cached form"))
-        }
+    let layout = gi.sparse.layout_of(wname);
+    match layout {
         WeightLayout::Masked => {
             crate::count!("spmm.masked");
             linalg::matmul_masked(dy, gi.p(wname), gi.m(wname))
@@ -329,6 +344,22 @@ pub(crate) fn masked_bwd_dx(gi: &GraphIn, wname: &str, dy: &Tensor) -> Tensor {
             let dx = linalg::matmul(dy, &wm);
             pool::recycle(wm);
             dx
+        }
+        _ => {
+            let form = gi
+                .sparse
+                .get_form(wname)
+                .expect("compressed layout implies a cached form");
+            match form.spmm(dy) {
+                Some(dx) => {
+                    count_spmm(layout);
+                    dx
+                }
+                None => {
+                    crate::count!("spmm.masked");
+                    linalg::matmul_masked(dy, gi.p(wname), gi.m(wname))
+                }
+            }
         }
     }
 }
@@ -833,8 +864,7 @@ mod tests {
         }
     }
 
-    #[test]
-    fn csr_layout_forward_and_dx_match_masked() {
+    fn layout_forward_and_dx_vs_masked(layout: WeightLayout, bitwise: bool) {
         use crate::tensor::sparse::{LayoutPolicy, SparseStore};
         let mm = micro("layernorm", true);
         let st = random_state(&mm, 6);
@@ -843,10 +873,10 @@ mod tests {
         let masks: BTreeMap<String, &Tensor> =
             st.masks.iter().map(|(k, v)| (k.clone(), v)).collect();
         let store = SparseStore::build(
-            LayoutPolicy::Fixed(WeightLayout::Csr),
+            LayoutPolicy::Fixed(layout),
             mm.prunable.iter().map(|n| (n.clone(), &st.params[n.as_str()], &st.masks[n.as_str()])),
         );
-        assert_eq!(store.csr.len(), mm.prunable.len());
+        assert_eq!(store.forms.len(), mm.prunable.len());
         let b = mm.cfg.train_batch;
         let s = mm.cfg.seq_len;
         let base = GraphIn {
@@ -857,18 +887,45 @@ mod tests {
             mode: ModeKind::Subset,
             sparse: SparseView::default(),
         };
-        let csr = GraphIn { sparse: store.view(), ..base };
+        let routed = GraphIn { sparse: store.view(), ..base };
         let t_masked = forward(&base, &st.tokens, b, s);
-        let t_csr = forward(&csr, &st.tokens, b, s);
-        assert!(
-            t_csr.logits.allclose(&t_masked.logits, 1e-6, 1e-6),
-            "csr forward diverged from masked"
-        );
+        let t_routed = forward(&routed, &st.tokens, b, s);
+        if bitwise {
+            for (x, y) in t_routed.logits.data().iter().zip(t_masked.logits.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{} forward diverged", layout.name());
+            }
+        } else {
+            // quantised layouts are approximate by design
+            assert!(
+                t_routed.logits.allclose(&t_masked.logits, 0.35, 0.35),
+                "{} forward drifted beyond its error model",
+                layout.name()
+            );
+        }
         // backward dx path: gradients of a below-the-linears leaf agree
+        // (quantised forms fall back to the exact masked kernel, so this
+        // holds tightly for every layout given identical upstream logits)
         let (_, dl) = ops::ce_grad(&t_masked.logits, &st.tokens, b, s);
         let wants: HashSet<String> = ["embed_tokens".to_string()].into();
         let gm = backward(&base, &t_masked, &st.tokens, &dl, wants.clone());
-        let gc = backward(&csr, &t_csr, &st.tokens, &dl, wants);
+        let gc = backward(&routed, &t_masked, &st.tokens, &dl, wants);
         assert!(gc["embed_tokens"].allclose(&gm["embed_tokens"], 1e-6, 1e-5));
+    }
+
+    #[test]
+    fn csr_layout_forward_and_dx_match_masked() {
+        layout_forward_and_dx_vs_masked(WeightLayout::Csr, true);
+    }
+
+    #[test]
+    fn bsr_layout_forward_and_dx_match_masked_bitwise() {
+        layout_forward_and_dx_vs_masked(WeightLayout::Bsr, true);
+    }
+
+    #[test]
+    fn quantised_layouts_forward_within_error_model() {
+        layout_forward_and_dx_vs_masked(WeightLayout::CsrQ8, false);
+        layout_forward_and_dx_vs_masked(WeightLayout::BsrQ8, false);
+        layout_forward_and_dx_vs_masked(WeightLayout::CsrF16, false);
     }
 }

@@ -192,8 +192,8 @@ fn gather_sparse<'a>(mm: &ModelManifest, feed: &Feed<'a>) -> SparseView<'a> {
         if let Some(l) = feed.get_weight_layout(n) {
             sv.layouts.insert(n.clone(), l);
         }
-        if let Some(c) = feed.get_csr(n) {
-            sv.csr.insert(n.clone(), c);
+        if let Some(f) = feed.get_form(n) {
+            sv.forms.insert(n.clone(), f);
         }
     }
     sv

@@ -122,8 +122,9 @@ pub struct EngineInfo {
     pub max_active: usize,
     pub seq_len: usize,
     pub kv_bytes: usize,
-    /// Compressed weight bytes across CSR-routed layers (0 = none routed).
-    pub csr_bytes: usize,
+    /// Compressed weight bytes across layers routed to a compressed layout
+    /// (CSR/BSR, exact or quantised; 0 = none routed).
+    pub sparse_bytes: usize,
     pub checkpoint: Option<String>,
 }
 
@@ -256,7 +257,7 @@ fn engine_main(
         max_active,
         seq_len: cfg.seq_len,
         kv_bytes: kv::kv_bytes(cfg),
-        csr_bytes: s.sparse.csr_bytes(),
+        sparse_bytes: s.sparse.compressed_bytes(),
         checkpoint: spec.checkpoint.as_ref().map(|p| p.display().to_string()),
     };
     if ready.send(Ok(info)).is_err() {

@@ -226,7 +226,7 @@ fn models(state: &ServeState) -> String {
                 ("max_active", Json::Num(e.info.max_active as f64)),
                 ("seq_len", Json::Num(e.info.seq_len as f64)),
                 ("kv_cache_bytes", Json::Num(e.info.kv_bytes as f64)),
-                ("csr_weight_bytes", Json::Num(e.info.csr_bytes as f64)),
+                ("sparse_weight_bytes", Json::Num(e.info.sparse_bytes as f64)),
                 (
                     "checkpoint",
                     e.info
@@ -272,8 +272,8 @@ fn metrics(state: &ServeState) -> String {
             e.info.kv_bytes
         ));
         out.push_str(&format!(
-            "perp_serve_csr_weight_bytes{tag} {}\n",
-            e.info.csr_bytes
+            "perp_serve_sparse_weight_bytes{tag} {}\n",
+            e.info.sparse_bytes
         ));
     }
     // process-wide obs registry: backend exec counts, SpMM layout dispatch,

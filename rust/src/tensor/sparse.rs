@@ -1,36 +1,54 @@
-//! Index-compressed sparse weight layout (CSR) and its SpMM kernels.
+//! Compressed sparse weight layouts (CSR / BSR, exact and quantised) and
+//! their SpMM kernels.
 //!
 //! PERP keeps pruned networks pruned, but the masked kernels
 //! (`linalg::matmul_nt_masked` / `matmul_masked`) still stream the full
 //! dense `(m, k)` weight *and* mask buffers and branch per element — a
 //! 90%-sparse layer pays almost the same memory traffic as a dense one.
-//! [`CsrMatrix`] stores only the surviving weights
-//! (row-ptr / col-idx / values, `nnz × 8 B + (m+1) × 4 B` vs the dense
-//! `m·k × 4 B`), so the SpMM kernels touch exactly the kept entries:
+//! Four compressed forms fix that at different operating points:
 //!
-//! * [`spmm_nt`] — `a:(n,k) @ Wᵀ` with `W:(m,k)` compressed: the forward /
-//!   serve-decode contraction;
-//! * [`spmm`]    — `a:(n,m) @ W`  with `W:(m,k)` compressed: the
-//!   backward-dx contraction.
+//! * [`CsrMatrix`] — classic compressed rows: only the `nnz` surviving
+//!   weights are stored and touched.  Wins at high unstructured sparsity;
+//!   loses at moderate sparsity because the scalar gather does not
+//!   vectorise.
+//! * [`BsrMatrix`] — block-sparse rows: dense `R×C` value tiles (1×4 for
+//!   2:4-structured masks, where every aligned group of four columns keeps
+//!   at most two survivors and so every 1×4 block is live; 4×4 otherwise).
+//!   Inner loops run over dense tiles with independent per-output
+//!   accumulators, so the FMA chains pipeline instead of serialising.
+//! * [`QuantCsr`] / [`QuantBsr`] — the same index structures with `f16` or
+//!   `i8` values (per-matrix-row scales, dequantised in-register inside
+//!   the dot product).  These are *approximate* (`i8` error ≤ scale·0.5
+//!   per entry), so they are decode/eval-only and never auto-selected on
+//!   paths that pin bitwise parity.
 //!
-//! Both mirror the masked kernels' per-element accumulation order
-//! (ascending inner index), so switching layouts never changes results
-//! beyond dropped exact-zero products — greedy decode stays bit-identical
-//! within a layout (pinned by `tests/decode_parity.rs`).
+//! All exact kernels mirror the masked kernels' per-element accumulation
+//! order (one accumulator per output element, contributions in ascending
+//! column order).  BSR tiles additionally store explicit zeros for pruned
+//! entries inside a live block; adding those `a·0.0` terms is an IEEE
+//! accumulation identity (the accumulator starts at +0.0 and can never
+//! become −0.0 through additions), so dense/masked/csr/bsr stay
+//! bit-identical — pinned by the unit tests here and by
+//! `tests/decode_parity.rs`.
 //!
-//! Layout *selection* lives here too: [`WeightLayout`] names the three
-//! execution strategies and [`LayoutPolicy`] resolves one per layer from
-//! its measured sparsity ([`LayoutPolicy::Auto`] compresses layers at or
-//! above the crossover sparsity, `PERP_CSR_CROSSOVER`, default 0.75 —
-//! measured with `repro bench-kernels`).  [`SparseStore`] is the cached,
-//! named collection the coordinator builds once at prune / merge /
+//! Layout *selection* lives here too: [`WeightLayout`] names the execution
+//! strategies and [`LayoutPolicy`] resolves one per layer from its measured
+//! sparsity and structure.  [`LayoutPolicy::Auto`] consults the *measured*
+//! [`CrossoverTable`] written by `repro bench-kernels` (cached under
+//! `results/bench_kernels.json`, advertised via `PERP_CROSSOVER_TABLE`)
+//! and falls back to the single `PERP_CSR_CROSSOVER` threshold (default
+//! 0.75) when no table has been measured yet.  [`SparseStore`] is the
+//! cached, named collection the coordinator builds once at prune / merge /
 //! load-checkpoint time and feeds to every subsequent execution.
 
 use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::OnceLock;
 
 use rayon::prelude::*;
 
 use super::{pool, Tensor};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 // ---------------------------------------------------------------------------
@@ -44,8 +62,18 @@ pub enum WeightLayout {
     Dense,
     /// Fused masked kernels: read W and M, skip pruned entries per element.
     Masked,
-    /// Compressed rows: touch only surviving weights ([`spmm_nt`]/[`spmm`]).
+    /// Compressed rows: touch only surviving weights.
     Csr,
+    /// Block-sparse rows: dense value tiles, vectorisable inner loops.
+    Bsr,
+    /// CSR with f16 values (approximate; decode/eval only).
+    CsrF16,
+    /// CSR with i8 values + per-row scales (approximate; decode/eval only).
+    CsrQ8,
+    /// BSR with f16 values (approximate; decode/eval only).
+    BsrF16,
+    /// BSR with i8 values + per-row scales (approximate; decode/eval only).
+    BsrQ8,
 }
 
 impl WeightLayout {
@@ -54,17 +82,63 @@ impl WeightLayout {
             WeightLayout::Dense => "dense",
             WeightLayout::Masked => "masked",
             WeightLayout::Csr => "csr",
+            WeightLayout::Bsr => "bsr",
+            WeightLayout::CsrF16 => "csr-f16",
+            WeightLayout::CsrQ8 => "csr-q8",
+            WeightLayout::BsrF16 => "bsr-f16",
+            WeightLayout::BsrQ8 => "bsr-q8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<WeightLayout> {
+        Some(match s {
+            "dense" => WeightLayout::Dense,
+            "masked" => WeightLayout::Masked,
+            "csr" => WeightLayout::Csr,
+            "bsr" => WeightLayout::Bsr,
+            "csr-f16" => WeightLayout::CsrF16,
+            "csr-q8" => WeightLayout::CsrQ8,
+            "bsr-f16" => WeightLayout::BsrF16,
+            "bsr-q8" => WeightLayout::BsrQ8,
+            _ => return None,
+        })
+    }
+
+    /// Approximate layouts: results differ from the masked reference, so
+    /// they are barred from training/backward and from auto-selection on
+    /// bitwise-pinned paths.
+    pub fn is_quantised(&self) -> bool {
+        matches!(
+            self,
+            WeightLayout::CsrF16 | WeightLayout::CsrQ8 | WeightLayout::BsrF16 | WeightLayout::BsrQ8
+        )
+    }
+
+    /// The exact layout a quantised one degrades to (identity for exact).
+    pub fn exact_counterpart(&self) -> WeightLayout {
+        match self {
+            WeightLayout::CsrF16 | WeightLayout::CsrQ8 => WeightLayout::Csr,
+            WeightLayout::BsrF16 | WeightLayout::BsrQ8 => WeightLayout::Bsr,
+            other => *other,
         }
     }
 }
 
+/// The layout / policy strings `--layout` accepts.
+pub const ALLOWED_LAYOUTS: &str =
+    "auto|auto-q|dense|masked|csr|bsr|csr-f16|csr-q8|bsr-f16|bsr-q8";
+
 /// Per-layer layout choice: forced, or resolved from measured sparsity.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LayoutPolicy {
-    /// Pick per layer: CSR at or above the crossover sparsity, fused masked
-    /// kernels below it (they never lose to the materialising dense path).
+    /// Pick an *exact* layout per layer from the measured crossover table
+    /// (fallback heuristic: BSR for 2:4-structured masks, CSR at or above
+    /// the crossover sparsity, fused masked kernels below it).
     Auto,
-    /// One layout for every layer (`--layout dense|masked|csr`).
+    /// Like [`LayoutPolicy::Auto`] but quantised layouts are allowed — an
+    /// explicit opt-in for decode/eval paths that tolerate approximation.
+    AutoQuant,
+    /// One layout for every layer (`--layout dense|masked|csr|bsr|...`).
     Fixed(WeightLayout),
 }
 
@@ -72,23 +146,35 @@ impl LayoutPolicy {
     pub fn parse(s: &str) -> Result<LayoutPolicy, String> {
         match s {
             "auto" => Ok(LayoutPolicy::Auto),
-            "dense" => Ok(LayoutPolicy::Fixed(WeightLayout::Dense)),
-            "masked" => Ok(LayoutPolicy::Fixed(WeightLayout::Masked)),
-            "csr" => Ok(LayoutPolicy::Fixed(WeightLayout::Csr)),
-            other => Err(format!("unknown layout {other:?} (auto|dense|masked|csr)")),
+            "auto-q" => Ok(LayoutPolicy::AutoQuant),
+            other => WeightLayout::parse(other).map(LayoutPolicy::Fixed).ok_or_else(|| {
+                format!("unknown layout {other:?} (allowed: {ALLOWED_LAYOUTS})")
+            }),
         }
     }
 
     pub fn name(&self) -> &'static str {
         match self {
             LayoutPolicy::Auto => "auto",
+            LayoutPolicy::AutoQuant => "auto-q",
             LayoutPolicy::Fixed(l) => l.name(),
         }
     }
 
-    /// Sparsity at which CSR overtakes the fused masked kernel.  The default
-    /// comes from `repro bench-kernels` on the runtime_micro GEMM shapes;
-    /// `PERP_CSR_CROSSOVER` overrides it for other machines.
+    /// Whether this policy can ever route a layer to an approximate layout.
+    /// Callers with bitwise-parity pins (training, cached-artifact reuse)
+    /// gate on this.
+    pub fn may_quantise(&self) -> bool {
+        match self {
+            LayoutPolicy::AutoQuant => true,
+            LayoutPolicy::Fixed(l) => l.is_quantised(),
+            LayoutPolicy::Auto => false,
+        }
+    }
+
+    /// Sparsity at which CSR overtakes the fused masked kernel — the
+    /// fallback when no measured [`CrossoverTable`] is available.
+    /// `PERP_CSR_CROSSOVER` overrides the default for other machines.
     pub fn csr_crossover() -> f64 {
         std::env::var("PERP_CSR_CROSSOVER")
             .ok()
@@ -97,18 +183,254 @@ impl LayoutPolicy {
             .unwrap_or(0.75)
     }
 
-    /// Resolve the layout for one layer from its measured sparsity.
-    pub fn resolve(&self, sparsity: f64) -> WeightLayout {
-        match self {
-            LayoutPolicy::Fixed(l) => *l,
-            LayoutPolicy::Auto => {
-                if sparsity >= Self::csr_crossover() {
-                    WeightLayout::Csr
-                } else {
-                    WeightLayout::Masked
+    /// Resolve the layout for one layer from its measured sparsity and
+    /// whether its mask is 2:4-structured, consulting the process-wide
+    /// measured crossover table when one was advertised.
+    pub fn resolve(&self, sparsity: f64, structured: bool) -> WeightLayout {
+        self.resolve_with(sparsity, structured, CrossoverTable::cached())
+    }
+
+    /// [`LayoutPolicy::resolve`] against an explicit table (unit-testable:
+    /// the dispatcher must pick the table's argmax per layer).
+    pub fn resolve_with(
+        &self,
+        sparsity: f64,
+        structured: bool,
+        table: Option<&CrossoverTable>,
+    ) -> WeightLayout {
+        let quant = match self {
+            LayoutPolicy::Fixed(l) => return *l,
+            LayoutPolicy::Auto => false,
+            LayoutPolicy::AutoQuant => true,
+        };
+        if let Some(best) = table.and_then(|t| t.best(sparsity, structured, quant)) {
+            // Auto must stay exact even if a table claims otherwise.
+            return if quant { best } else { best.exact_counterpart() };
+        }
+        // No measurements yet: single-threshold heuristic.
+        let base = if structured {
+            WeightLayout::Bsr
+        } else if sparsity >= Self::csr_crossover() {
+            WeightLayout::Csr
+        } else {
+            WeightLayout::Masked
+        };
+        match (quant, base) {
+            (true, WeightLayout::Csr) => WeightLayout::CsrQ8,
+            (true, WeightLayout::Bsr) => WeightLayout::BsrQ8,
+            (_, other) => other,
+        }
+    }
+}
+
+impl std::str::FromStr for LayoutPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<LayoutPolicy, String> {
+        LayoutPolicy::parse(s)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Measured crossover table.
+// ---------------------------------------------------------------------------
+
+/// One measured operating point: at `sparsity` (and mask structure), which
+/// layout had the lowest summed forward+backward time across the bench
+/// shapes.  `best_exact` is restricted to bitwise-exact layouts;
+/// `best_any` may name a quantised one.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CrossoverEntry {
+    pub sparsity: f64,
+    pub structured: bool,
+    pub best_exact: WeightLayout,
+    pub best_any: WeightLayout,
+}
+
+/// The measured layout-crossover table `repro bench-kernels` embeds in
+/// `results/bench_kernels.json` under the `"crossover"` key.  `--layout
+/// auto` consumes it via [`CrossoverTable::cached`]: the CLI points
+/// `PERP_CROSSOVER_TABLE` at the report once one exists, replacing the
+/// single hard-coded threshold with per-operating-point measurements.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CrossoverTable {
+    pub entries: Vec<CrossoverEntry>,
+}
+
+impl CrossoverTable {
+    /// Parse the `"crossover"` array out of a bench-kernels report.
+    pub fn from_json(report: &Json) -> Result<CrossoverTable, String> {
+        let arr = report
+            .get("crossover")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "report has no \"crossover\" array".to_string())?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for e in arr {
+            let sparsity = e
+                .get("sparsity")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| "crossover entry missing sparsity".to_string())?;
+            let pattern = e.get("pattern").and_then(Json::as_str).unwrap_or("unstructured");
+            let parse_layout = |key: &str| -> Result<Option<WeightLayout>, String> {
+                match e.get(key).and_then(Json::as_str) {
+                    None => Ok(None),
+                    Some(s) => WeightLayout::parse(s)
+                        .map(Some)
+                        .ok_or_else(|| format!("crossover entry has unknown layout {s:?}")),
+                }
+            };
+            let best_exact = parse_layout("best_exact")?
+                .ok_or_else(|| "crossover entry missing best_exact".to_string())?;
+            if best_exact.is_quantised() {
+                return Err(format!(
+                    "crossover best_exact {} is quantised — table rejected",
+                    best_exact.name()
+                ));
+            }
+            let best_any = parse_layout("best_any")?.unwrap_or(best_exact);
+            entries.push(CrossoverEntry {
+                sparsity,
+                structured: pattern != "unstructured",
+                best_exact,
+                best_any,
+            });
+        }
+        Ok(CrossoverTable { entries })
+    }
+
+    /// Load from a bench-kernels report file; `None` on any read/parse
+    /// failure (auto-dispatch then falls back to the threshold heuristic).
+    pub fn load(path: &Path) -> Option<CrossoverTable> {
+        let text = std::fs::read_to_string(path).ok()?;
+        let json = Json::parse(&text).ok()?;
+        CrossoverTable::from_json(&json).ok()
+    }
+
+    /// The process-wide table, loaded once from the file named by
+    /// `PERP_CROSSOVER_TABLE` (set by the CLI when a measured
+    /// `results/bench_kernels.json` exists).  Reading only the env var
+    /// keeps unit tests hermetic.
+    pub fn cached() -> Option<&'static CrossoverTable> {
+        static CACHE: OnceLock<Option<CrossoverTable>> = OnceLock::new();
+        CACHE
+            .get_or_init(|| {
+                std::env::var("PERP_CROSSOVER_TABLE")
+                    .ok()
+                    .and_then(|p| CrossoverTable::load(Path::new(&p)))
+            })
+            .as_ref()
+    }
+
+    /// Best measured layout for an operating point: entries matching the
+    /// mask structure are preferred, then the nearest measured sparsity.
+    pub fn best(&self, sparsity: f64, structured: bool, quant: bool) -> Option<WeightLayout> {
+        let pick = |es: &[&CrossoverEntry]| -> Option<WeightLayout> {
+            es.iter()
+                .min_by(|a, b| {
+                    let da = (a.sparsity - sparsity).abs();
+                    let db = (b.sparsity - sparsity).abs();
+                    da.partial_cmp(&db).unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .map(|e| if quant { e.best_any } else { e.best_exact })
+        };
+        let matching: Vec<&CrossoverEntry> =
+            self.entries.iter().filter(|e| e.structured == structured).collect();
+        if !matching.is_empty() {
+            return pick(&matching);
+        }
+        let all: Vec<&CrossoverEntry> = self.entries.iter().collect();
+        pick(&all)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mask-structure probe.
+// ---------------------------------------------------------------------------
+
+/// True when `w ⊙ mask` satisfies n:m semi-structured sparsity: `cols`
+/// divides into aligned groups of `m` and every group keeps at most `n`
+/// non-zeros.  Used to pick the 1×4 BSR block size for 2:4 masks.
+pub fn is_nm_structured(w: &Tensor, mask: &Tensor, n: usize, m: usize) -> bool {
+    let (rows, cols) = (w.rows(), w.cols());
+    if m == 0 || cols % m != 0 {
+        return false;
+    }
+    let (wd, md) = (w.data(), mask.data());
+    for i in 0..rows {
+        let row = i * cols;
+        for g in (0..cols).step_by(m) {
+            let mut kept = 0usize;
+            for t in 0..m {
+                if wd[row + g + t] * md[row + g + t] != 0.0 {
+                    kept += 1;
                 }
             }
+            if kept > n {
+                return false;
+            }
         }
+    }
+    true
+}
+
+// ---------------------------------------------------------------------------
+// f16 bit conversion (no half-float dependency).
+// ---------------------------------------------------------------------------
+
+/// f32 → IEEE binary16 bits: round-to-nearest-even, overflow saturates to
+/// ±65504 (weights never legitimately overflow f16; saturation keeps the
+/// kernels NaN-free), subnormals handled exactly.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / NaN
+        return sign | 0x7c00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7bff; // saturate to ±65504
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflows to ±0
+        }
+        // subnormal: shift the (implicit-1) mantissa into place, RNE
+        let man = man | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let rounded = (man + (1 << (shift - 1)) - 1 + ((man >> shift) & 1)) >> shift;
+        return sign | rounded as u16;
+    }
+    // normal: drop 13 mantissa bits with round-to-nearest-even
+    let rounded = man + 0x0fff + ((man >> 13) & 1);
+    let mut e16 = e as u32;
+    let mut man16 = rounded >> 13;
+    if man16 >= 0x400 {
+        man16 = 0;
+        e16 += 1;
+    }
+    if e16 >= 0x1f {
+        return sign | 0x7bff;
+    }
+    sign | ((e16 as u16) << 10) | man16 as u16
+}
+
+/// IEEE binary16 bits → f32 (exact: every f16 value is representable).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = if h & 0x8000 != 0 { -1.0f32 } else { 1.0 };
+    let e = ((h >> 10) & 0x1f) as i32;
+    let man = (h & 0x3ff) as f32;
+    match e {
+        0 => sign * man * (2.0f32).powi(-24),
+        0x1f => {
+            if man == 0.0 {
+                sign * f32::INFINITY
+            } else {
+                f32::NAN
+            }
+        }
+        _ => sign * (1.0 + man / 1024.0) * (2.0f32).powi(e - 15),
     }
 }
 
@@ -192,6 +514,11 @@ impl CsrMatrix {
         1.0 - self.nnz() as f64 / (self.rows * self.cols).max(1) as f64
     }
 
+    /// Bytes spent on values alone (`nnz × 4`).
+    pub fn value_bytes(&self) -> usize {
+        self.nnz() * 4
+    }
+
     /// Compressed footprint: `nnz × 8 B + (rows + 1) × 4 B` (values +
     /// col-idx per entry, plus the row-pointer array).
     pub fn mem_bytes(&self) -> usize {
@@ -202,15 +529,700 @@ impl CsrMatrix {
     pub fn dense_bytes(&self) -> usize {
         self.rows * self.cols * 4
     }
+
+    /// Dot products for output columns `j0 .. j0+out.len()` of one
+    /// activation row — the per-chunk unit both the SpMM driver and the
+    /// fused q/k/v decode kernel dispatch to.
+    #[inline]
+    pub fn dots_range(&self, arow: &[f32], j0: usize, out: &mut [f32]) {
+        for (jj, o) in out.iter_mut().enumerate() {
+            let (cols, vals) = self.row(j0 + jj);
+            *o = csr_dot(arow, cols, vals);
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
-// SpMM kernels.
+// BSR matrix.
+// ---------------------------------------------------------------------------
+
+/// Largest supported block height (accumulator array size in the lockstep
+/// kernels).
+const MAX_BR: usize = 8;
+
+/// Block-sparse-row form of a 2-D weight matrix: only blocks with at least
+/// one survivor of `W ⊙ M` are stored, as dense row-major `br×bc` tiles
+/// (pruned entries inside a live tile are explicit 0.0).  2:4 masks use
+/// 1×4 tiles — every aligned group of four keeps ≥1 survivor at 50%, so
+/// the block structure is fully dense and the inner loops stream
+/// sequentially; unstructured masks default to 4×4 tiles.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BsrMatrix {
+    rows: usize,
+    cols: usize,
+    br: usize,
+    bc: usize,
+    /// `n_block_rows + 1` offsets into `block_col`.
+    row_ptr: Vec<u32>,
+    /// Block-column index (in units of `bc`) per stored block, ascending
+    /// within each block row.
+    block_col: Vec<u32>,
+    /// `n_blocks × br × bc` tile values, row-major within each tile.
+    values: Vec<f32>,
+    /// Per block row: does it store *all* `ceil(cols/bc)` blocks?  Full
+    /// rows take the lockstep fast path (always true for 2:4 masks).
+    full: Vec<bool>,
+}
+
+impl BsrMatrix {
+    /// The native block shape for a mask: 1×4 when 2:4-structured (tiles
+    /// align with the n:m groups), 4×4 otherwise.
+    pub fn native_block(structured: bool) -> (usize, usize) {
+        if structured {
+            (1, 4)
+        } else {
+            (4, 4)
+        }
+    }
+
+    /// Compress `w ⊙ mask` into `br×bc` tiles, keeping any tile with at
+    /// least one non-zero.
+    pub fn from_dense_masked(w: &Tensor, mask: &Tensor, br: usize, bc: usize) -> BsrMatrix {
+        assert_eq!(w.shape(), mask.shape(), "mask must be shaped like w");
+        assert!(br >= 1 && br <= MAX_BR && bc >= 1, "unsupported block shape {br}x{bc}");
+        let (m, k) = (w.rows(), w.cols());
+        assert!(m * k <= u32::MAX as usize, "matrix too large for u32 BSR offsets");
+        let (wd, md) = (w.data(), mask.data());
+        let nbr = m.div_ceil(br);
+        let nbc = k.div_ceil(bc);
+        let mut row_ptr = Vec::with_capacity(nbr + 1);
+        let mut block_col = Vec::new();
+        let mut values = Vec::new();
+        let mut full = Vec::with_capacity(nbr);
+        row_ptr.push(0u32);
+        let mut tile = vec![0.0f32; br * bc];
+        for bi in 0..nbr {
+            let row_start = block_col.len();
+            for bj in 0..nbc {
+                tile.iter_mut().for_each(|t| *t = 0.0);
+                let mut live = false;
+                for rr in 0..br.min(m - bi * br) {
+                    let i = bi * br + rr;
+                    for t in 0..bc.min(k - bj * bc) {
+                        let j = bj * bc + t;
+                        let v = wd[i * k + j] * md[i * k + j];
+                        if v != 0.0 {
+                            live = true;
+                        }
+                        tile[rr * bc + t] = v;
+                    }
+                }
+                if live {
+                    block_col.push(bj as u32);
+                    values.extend_from_slice(&tile);
+                }
+            }
+            full.push(block_col.len() - row_start == nbc);
+            row_ptr.push(block_col.len() as u32);
+        }
+        BsrMatrix { rows: m, cols: k, br, bc, row_ptr, block_col, values, full }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn block_shape(&self) -> (usize, usize) {
+        (self.br, self.bc)
+    }
+    pub fn n_blocks(&self) -> usize {
+        self.block_col.len()
+    }
+
+    /// Stored entries (block area × block count) — includes the explicit
+    /// zeros padding partially-live tiles.
+    pub fn stored(&self) -> usize {
+        self.n_blocks() * self.br * self.bc
+    }
+
+    /// Bytes spent on values alone.
+    pub fn value_bytes(&self) -> usize {
+        self.stored() * 4
+    }
+
+    /// Compressed footprint: tile values + block-col indices + row
+    /// pointers.
+    pub fn mem_bytes(&self) -> usize {
+        self.value_bytes() + self.block_col.len() * 4 + self.row_ptr.len() * 4
+    }
+
+    pub fn dense_bytes(&self) -> usize {
+        self.rows * self.cols * 4
+    }
+
+    /// Decompress back to dense (entries outside stored blocks and pruned
+    /// entries inside them come back as exact 0.0).
+    pub fn to_dense(&self) -> Tensor {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        let (br, bc) = (self.br, self.bc);
+        for bi in 0..self.full.len() {
+            let lo = self.row_ptr[bi] as usize;
+            let hi = self.row_ptr[bi + 1] as usize;
+            for b in lo..hi {
+                let bj = self.block_col[b] as usize;
+                let tile = &self.values[b * br * bc..(b + 1) * br * bc];
+                for rr in 0..br.min(self.rows - bi * br) {
+                    for t in 0..bc.min(self.cols - bj * bc) {
+                        out[(bi * br + rr) * self.cols + bj * bc + t] = tile[rr * bc + t];
+                    }
+                }
+            }
+        }
+        Tensor::new(&[self.rows, self.cols], out)
+    }
+
+    /// Dot of one activation row against matrix row `i` (scalar reference
+    /// path; ascending-column accumulation, one accumulator).
+    #[inline]
+    fn dot_one(&self, arow: &[f32], i: usize) -> f32 {
+        let (br, bc) = (self.br, self.bc);
+        let (bi, rr) = (i / br, i % br);
+        let lo = self.row_ptr[bi] as usize;
+        let hi = self.row_ptr[bi + 1] as usize;
+        let mut acc = 0.0f32;
+        for b in lo..hi {
+            let cb = self.block_col[b] as usize * bc;
+            let width = bc.min(self.cols - cb);
+            let trow = &self.values[b * br * bc + rr * bc..][..width];
+            let a = &arow[cb..cb + width];
+            for t in 0..width {
+                acc += a[t] * trow[t];
+            }
+        }
+        acc
+    }
+
+    /// One aligned block row (`br` outputs) with `br` independent
+    /// accumulators: the FMA chains of the `br` output elements interleave,
+    /// hiding the add latency that serialises the scalar path.  Each
+    /// accumulator still sums in ascending column order, so results are
+    /// bitwise identical to [`BsrMatrix::dot_one`].
+    #[inline]
+    fn block_row_lockstep(&self, arow: &[f32], bi: usize, out: &mut [f32]) {
+        let (br, bc) = (self.br, self.bc);
+        let lo = self.row_ptr[bi] as usize;
+        let hi = self.row_ptr[bi + 1] as usize;
+        let mut acc = [0.0f32; MAX_BR];
+        for b in lo..hi {
+            let cb = self.block_col[b] as usize * bc;
+            let width = bc.min(self.cols - cb);
+            let tile = &self.values[b * br * bc..(b + 1) * br * bc];
+            let a = &arow[cb..cb + width];
+            for rr in 0..br {
+                let trow = &tile[rr * bc..rr * bc + width];
+                let mut s = acc[rr];
+                for t in 0..width {
+                    s += a[t] * trow[t];
+                }
+                acc[rr] = s;
+            }
+        }
+        out.copy_from_slice(&acc[..br]);
+    }
+
+    /// Four consecutive *full* 1-high block rows in lockstep (the 2:4 hot
+    /// path: every block row is full, block `b` sits at column `b·bc`, so
+    /// the tile stream is fully sequential and four output accumulators
+    /// pipeline together).
+    #[inline]
+    fn four_full_rows(&self, arow: &[f32], i0: usize, out: &mut [f32]) {
+        let bc = self.bc;
+        let nbc = self.cols.div_ceil(bc);
+        let base = [
+            self.row_ptr[i0] as usize * bc,
+            self.row_ptr[i0 + 1] as usize * bc,
+            self.row_ptr[i0 + 2] as usize * bc,
+            self.row_ptr[i0 + 3] as usize * bc,
+        ];
+        let mut acc = [0.0f32; 4];
+        for b in 0..nbc {
+            let cb = b * bc;
+            let width = bc.min(self.cols - cb);
+            let a = &arow[cb..cb + width];
+            for r in 0..4 {
+                let trow = &self.values[base[r] + b * bc..][..width];
+                let mut s = acc[r];
+                for t in 0..width {
+                    s += a[t] * trow[t];
+                }
+                acc[r] = s;
+            }
+        }
+        out.copy_from_slice(&acc);
+    }
+
+    /// Dot products for output columns `j0 .. j0+out.len()` of one
+    /// activation row.  Chunks are routed to the lockstep kernels wherever
+    /// alignment allows and fall back to the scalar path at ragged tails —
+    /// all paths accumulate identically, so chunking never changes bits.
+    pub fn dots_range(&self, arow: &[f32], j0: usize, out: &mut [f32]) {
+        if self.br == 1 {
+            let mut jj = 0usize;
+            while jj < out.len() {
+                let i = j0 + jj;
+                if jj + 4 <= out.len()
+                    && self.full[i]
+                    && self.full[i + 1]
+                    && self.full[i + 2]
+                    && self.full[i + 3]
+                {
+                    self.four_full_rows(arow, i, &mut out[jj..jj + 4]);
+                    jj += 4;
+                } else {
+                    out[jj] = self.dot_one(arow, i);
+                    jj += 1;
+                }
+            }
+            return;
+        }
+        let br = self.br;
+        let mut jj = 0usize;
+        while jj < out.len() {
+            let i = j0 + jj;
+            let take = (br - i % br).min(out.len() - jj);
+            if i % br == 0 && take == br {
+                self.block_row_lockstep(arow, i / br, &mut out[jj..jj + br]);
+            } else {
+                for t in 0..take {
+                    out[jj + t] = self.dot_one(arow, i + t);
+                }
+            }
+            jj += take;
+        }
+    }
+
+    /// `a:(n,k) @ W:(m,k)ᵀ -> (n,m)` — forward / decode contraction.
+    pub fn spmm_nt(&self, a: &Tensor) -> Tensor {
+        let (n, k) = (a.rows(), a.cols());
+        assert_eq!(k, self.cols, "bsr spmm_nt inner-dim mismatch {k} vs {}", self.cols);
+        let m = self.rows;
+        let mut out = pool::zeroed(n * m);
+        let ad = a.data();
+        if n == 1 {
+            out.par_chunks_mut(COLS_PER_TASK).enumerate().for_each(|(cj, chunk)| {
+                self.dots_range(ad, cj * COLS_PER_TASK, chunk);
+            });
+        } else {
+            out.par_chunks_mut(ROWS_PER_TASK * m).enumerate().for_each(|(ci, chunk)| {
+                let i0 = ci * ROWS_PER_TASK;
+                for (ii, orow) in chunk.chunks_mut(m).enumerate() {
+                    let arow = &ad[(i0 + ii) * k..(i0 + ii + 1) * k];
+                    self.dots_range(arow, 0, orow);
+                }
+            });
+        }
+        Tensor::new(&[n, m], out)
+    }
+
+    /// `a:(n,m) @ W:(m,k) -> (n,k)` — backward-dx contraction.  Exact
+    /// zeros of `a` are skipped; each consumed element scatters its
+    /// matrix row's tiles contiguously.
+    pub fn spmm(&self, a: &Tensor) -> Tensor {
+        let (n, m) = (a.rows(), a.cols());
+        assert_eq!(m, self.rows, "bsr spmm inner-dim mismatch {m} vs {}", self.rows);
+        let k = self.cols;
+        let (br, bc) = (self.br, self.bc);
+        let mut out = pool::zeroed(n * k);
+        let ad = a.data();
+        out.par_chunks_mut(ROWS_PER_TASK * k).enumerate().for_each(|(ci, chunk)| {
+            let i0 = ci * ROWS_PER_TASK;
+            for (ii, orow) in chunk.chunks_mut(k).enumerate() {
+                let arow = &ad[(i0 + ii) * m..(i0 + ii + 1) * m];
+                for (j, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let (bi, rr) = (j / br, j % br);
+                    let lo = self.row_ptr[bi] as usize;
+                    let hi = self.row_ptr[bi + 1] as usize;
+                    for b in lo..hi {
+                        let cb = self.block_col[b] as usize * bc;
+                        let width = bc.min(k - cb);
+                        let trow = &self.values[b * br * bc + rr * bc..][..width];
+                        let orun = &mut orow[cb..cb + width];
+                        for t in 0..width {
+                            orun[t] += av * trow[t];
+                        }
+                    }
+                }
+            }
+        });
+        Tensor::new(&[n, k], out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantised value storage (decode/eval only).
+// ---------------------------------------------------------------------------
+
+/// Which reduced-precision value encoding a quantised form uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantKind {
+    /// IEEE binary16 per value — ~1e-3 relative error, half the bytes.
+    F16,
+    /// i8 per value + one f32 scale per matrix row — error ≤ scale·0.5,
+    /// a quarter of the bytes (amortised).
+    I8,
+}
+
+/// Quantised values: the payload both [`QuantCsr`] and [`QuantBsr`] carry.
+#[derive(Debug, Clone, PartialEq)]
+enum QVals {
+    F16(Vec<u16>),
+    I8 { q: Vec<i8>, scales: Vec<f32> },
+}
+
+impl QVals {
+    fn quantise(values: &[f32], kind: QuantKind, row_of: impl Fn(usize) -> usize, rows: usize) -> QVals {
+        match kind {
+            QuantKind::F16 => QVals::F16(values.iter().map(|&v| f32_to_f16_bits(v)).collect()),
+            QuantKind::I8 => {
+                let mut maxabs = vec![0.0f32; rows];
+                for (idx, &v) in values.iter().enumerate() {
+                    let r = row_of(idx);
+                    if v.abs() > maxabs[r] {
+                        maxabs[r] = v.abs();
+                    }
+                }
+                let scales: Vec<f32> = maxabs.iter().map(|&m| m / 127.0).collect();
+                let q = values
+                    .iter()
+                    .enumerate()
+                    .map(|(idx, &v)| {
+                        let s = scales[row_of(idx)];
+                        if s == 0.0 {
+                            0i8
+                        } else {
+                            (v / s).round().clamp(-127.0, 127.0) as i8
+                        }
+                    })
+                    .collect();
+                QVals::I8 { q, scales }
+            }
+        }
+    }
+
+    fn kind(&self) -> QuantKind {
+        match self {
+            QVals::F16(_) => QuantKind::F16,
+            QVals::I8 { .. } => QuantKind::I8,
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            QVals::F16(v) => v.len(),
+            QVals::I8 { q, .. } => q.len(),
+        }
+    }
+
+    fn value_bytes(&self) -> usize {
+        match self {
+            QVals::F16(v) => v.len() * 2,
+            QVals::I8 { q, scales } => q.len() + scales.len() * 4,
+        }
+    }
+
+    /// Dequantise entry `idx` belonging to matrix row `row`.
+    #[inline]
+    fn get(&self, idx: usize, row: usize) -> f32 {
+        match self {
+            QVals::F16(v) => f16_bits_to_f32(v[idx]),
+            QVals::I8 { q, scales } => q[idx] as f32 * scales[row],
+        }
+    }
+}
+
+/// CSR index structure with quantised values (decode/eval only).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantCsr {
+    rows: usize,
+    cols: usize,
+    row_ptr: Vec<u32>,
+    col_idx: Vec<u32>,
+    vals: QVals,
+}
+
+impl QuantCsr {
+    pub fn from_csr(csr: &CsrMatrix, kind: QuantKind) -> QuantCsr {
+        let row_ptr = csr.row_ptr.clone();
+        // entry -> matrix row, from the row pointers
+        let mut entry_row = vec![0u32; csr.nnz()];
+        for i in 0..csr.rows {
+            for e in csr.row_ptr[i]..csr.row_ptr[i + 1] {
+                entry_row[e as usize] = i as u32;
+            }
+        }
+        let vals =
+            QVals::quantise(&csr.values, kind, |idx| entry_row[idx] as usize, csr.rows.max(1));
+        QuantCsr { rows: csr.rows, cols: csr.cols, row_ptr, col_idx: csr.col_idx.clone(), vals }
+    }
+
+    pub fn kind(&self) -> QuantKind {
+        self.vals.kind()
+    }
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn value_bytes(&self) -> usize {
+        self.vals.value_bytes()
+    }
+
+    pub fn mem_bytes(&self) -> usize {
+        self.value_bytes() + self.col_idx.len() * 4 + self.row_ptr.len() * 4
+    }
+
+    /// Per-row i8 scales (empty for f16) — tests bound the round-trip
+    /// error by `scale · 0.5`.
+    pub fn scales(&self) -> &[f32] {
+        match &self.vals {
+            QVals::I8 { scales, .. } => scales,
+            QVals::F16(_) => &[],
+        }
+    }
+
+    /// Dequantise to dense — the *approximate* reconstruction.
+    pub fn to_dense(&self) -> Tensor {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for i in 0..self.rows {
+            let lo = self.row_ptr[i] as usize;
+            let hi = self.row_ptr[i + 1] as usize;
+            for e in lo..hi {
+                out[i * self.cols + self.col_idx[e] as usize] = self.vals.get(e, i);
+            }
+        }
+        Tensor::new(&[self.rows, self.cols], out)
+    }
+
+    /// Dot products for output columns `j0 .. j0+out.len()` of one
+    /// activation row, dequantising in-register.
+    pub fn dots_range(&self, arow: &[f32], j0: usize, out: &mut [f32]) {
+        match &self.vals {
+            QVals::F16(v) => {
+                for (jj, o) in out.iter_mut().enumerate() {
+                    let i = j0 + jj;
+                    let lo = self.row_ptr[i] as usize;
+                    let hi = self.row_ptr[i + 1] as usize;
+                    let mut acc = 0.0f32;
+                    for e in lo..hi {
+                        acc += arow[self.col_idx[e] as usize] * f16_bits_to_f32(v[e]);
+                    }
+                    *o = acc;
+                }
+            }
+            QVals::I8 { q, scales } => {
+                for (jj, o) in out.iter_mut().enumerate() {
+                    let i = j0 + jj;
+                    let lo = self.row_ptr[i] as usize;
+                    let hi = self.row_ptr[i + 1] as usize;
+                    // factor the row scale out of the accumulation
+                    let mut acc = 0.0f32;
+                    for e in lo..hi {
+                        acc += arow[self.col_idx[e] as usize] * q[e] as f32;
+                    }
+                    *o = acc * scales[i];
+                }
+            }
+        }
+    }
+
+    /// Forward / decode contraction with in-register dequantisation.
+    pub fn spmm_nt(&self, a: &Tensor) -> Tensor {
+        let (n, k) = (a.rows(), a.cols());
+        assert_eq!(k, self.cols, "qcsr spmm_nt inner-dim mismatch {k} vs {}", self.cols);
+        let m = self.rows;
+        let mut out = pool::zeroed(n * m);
+        let ad = a.data();
+        if n == 1 {
+            out.par_chunks_mut(COLS_PER_TASK).enumerate().for_each(|(cj, chunk)| {
+                self.dots_range(ad, cj * COLS_PER_TASK, chunk);
+            });
+        } else {
+            out.par_chunks_mut(ROWS_PER_TASK * m).enumerate().for_each(|(ci, chunk)| {
+                let i0 = ci * ROWS_PER_TASK;
+                for (ii, orow) in chunk.chunks_mut(m).enumerate() {
+                    let arow = &ad[(i0 + ii) * k..(i0 + ii + 1) * k];
+                    self.dots_range(arow, 0, orow);
+                }
+            });
+        }
+        Tensor::new(&[n, m], out)
+    }
+}
+
+/// BSR index structure with quantised tile values (decode/eval only).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantBsr {
+    rows: usize,
+    cols: usize,
+    br: usize,
+    bc: usize,
+    row_ptr: Vec<u32>,
+    block_col: Vec<u32>,
+    full: Vec<bool>,
+    vals: QVals,
+}
+
+impl QuantBsr {
+    pub fn from_bsr(bsr: &BsrMatrix, kind: QuantKind) -> QuantBsr {
+        let (br, bc) = (bsr.br, bsr.bc);
+        // tile entry -> matrix row
+        let mut entry_row = vec![0u32; bsr.values.len()];
+        for bi in 0..bsr.full.len() {
+            let lo = bsr.row_ptr[bi] as usize;
+            let hi = bsr.row_ptr[bi + 1] as usize;
+            for b in lo..hi {
+                for rr in 0..br {
+                    let row = (bi * br + rr).min(bsr.rows.saturating_sub(1));
+                    for t in 0..bc {
+                        entry_row[b * br * bc + rr * bc + t] = row as u32;
+                    }
+                }
+            }
+        }
+        let vals =
+            QVals::quantise(&bsr.values, kind, |idx| entry_row[idx] as usize, bsr.rows.max(1));
+        QuantBsr {
+            rows: bsr.rows,
+            cols: bsr.cols,
+            br,
+            bc,
+            row_ptr: bsr.row_ptr.clone(),
+            block_col: bsr.block_col.clone(),
+            full: bsr.full.clone(),
+            vals,
+        }
+    }
+
+    pub fn kind(&self) -> QuantKind {
+        self.vals.kind()
+    }
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn block_shape(&self) -> (usize, usize) {
+        (self.br, self.bc)
+    }
+
+    pub fn value_bytes(&self) -> usize {
+        self.vals.value_bytes()
+    }
+
+    pub fn mem_bytes(&self) -> usize {
+        self.value_bytes() + self.block_col.len() * 4 + self.row_ptr.len() * 4
+    }
+
+    /// Dequantise to dense — the *approximate* reconstruction.
+    pub fn to_dense(&self) -> Tensor {
+        let (br, bc) = (self.br, self.bc);
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for bi in 0..self.full.len() {
+            let lo = self.row_ptr[bi] as usize;
+            let hi = self.row_ptr[bi + 1] as usize;
+            for b in lo..hi {
+                let bj = self.block_col[b] as usize;
+                for rr in 0..br.min(self.rows - bi * br) {
+                    for t in 0..bc.min(self.cols - bj * bc) {
+                        out[(bi * br + rr) * self.cols + bj * bc + t] =
+                            self.vals.get(b * br * bc + rr * bc + t, bi * br + rr);
+                    }
+                }
+            }
+        }
+        Tensor::new(&[self.rows, self.cols], out)
+    }
+
+    /// Dot products for output columns `j0 .. j0+out.len()` of one
+    /// activation row, dequantising in-register.
+    pub fn dots_range(&self, arow: &[f32], j0: usize, out: &mut [f32]) {
+        let (br, bc) = (self.br, self.bc);
+        for (jj, o) in out.iter_mut().enumerate() {
+            let i = j0 + jj;
+            let (bi, rr) = (i / br, i % br);
+            let lo = self.row_ptr[bi] as usize;
+            let hi = self.row_ptr[bi + 1] as usize;
+            let mut acc = 0.0f32;
+            match &self.vals {
+                QVals::F16(v) => {
+                    for b in lo..hi {
+                        let cb = self.block_col[b] as usize * bc;
+                        let width = bc.min(self.cols - cb);
+                        let base = b * br * bc + rr * bc;
+                        for t in 0..width {
+                            acc += arow[cb + t] * f16_bits_to_f32(v[base + t]);
+                        }
+                    }
+                    *o = acc;
+                }
+                QVals::I8 { q, scales } => {
+                    for b in lo..hi {
+                        let cb = self.block_col[b] as usize * bc;
+                        let width = bc.min(self.cols - cb);
+                        let base = b * br * bc + rr * bc;
+                        for t in 0..width {
+                            acc += arow[cb + t] * q[base + t] as f32;
+                        }
+                    }
+                    *o = acc * scales[i];
+                }
+            }
+        }
+    }
+
+    /// Forward / decode contraction with in-register dequantisation.
+    pub fn spmm_nt(&self, a: &Tensor) -> Tensor {
+        let (n, k) = (a.rows(), a.cols());
+        assert_eq!(k, self.cols, "qbsr spmm_nt inner-dim mismatch {k} vs {}", self.cols);
+        let m = self.rows;
+        let mut out = pool::zeroed(n * m);
+        let ad = a.data();
+        if n == 1 {
+            out.par_chunks_mut(COLS_PER_TASK).enumerate().for_each(|(cj, chunk)| {
+                self.dots_range(ad, cj * COLS_PER_TASK, chunk);
+            });
+        } else {
+            out.par_chunks_mut(ROWS_PER_TASK * m).enumerate().for_each(|(ci, chunk)| {
+                let i0 = ci * ROWS_PER_TASK;
+                for (ii, orow) in chunk.chunks_mut(m).enumerate() {
+                    let arow = &ad[(i0 + ii) * k..(i0 + ii + 1) * k];
+                    self.dots_range(arow, 0, orow);
+                }
+            });
+        }
+        Tensor::new(&[n, m], out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SpMM kernels (CSR free functions — the PR 4 public surface).
 // ---------------------------------------------------------------------------
 
 /// Rows of `a` each rayon task owns in the tall-activation strategy.
 const ROWS_PER_TASK: usize = 4;
-/// Output columns per task in the single-row (decode) strategy.
+/// Output columns per task in the single-row (decode) strategy.  A
+/// multiple of every supported block height, so BSR chunks stay aligned.
 const COLS_PER_TASK: usize = 64;
 
 #[inline]
@@ -237,21 +1249,14 @@ pub fn spmm_nt(a: &Tensor, w: &CsrMatrix) -> Tensor {
     if n == 1 {
         // one activation row (serve decode): parallelise over W rows instead
         out.par_chunks_mut(COLS_PER_TASK).enumerate().for_each(|(cj, chunk)| {
-            let j0 = cj * COLS_PER_TASK;
-            for (jj, o) in chunk.iter_mut().enumerate() {
-                let (cols, vals) = w.row(j0 + jj);
-                *o = csr_dot(ad, cols, vals);
-            }
+            w.dots_range(ad, cj * COLS_PER_TASK, chunk);
         });
     } else {
         out.par_chunks_mut(ROWS_PER_TASK * m).enumerate().for_each(|(ci, chunk)| {
             let i0 = ci * ROWS_PER_TASK;
             for (ii, orow) in chunk.chunks_mut(m).enumerate() {
                 let arow = &ad[(i0 + ii) * k..(i0 + ii + 1) * k];
-                for (j, o) in orow.iter_mut().enumerate() {
-                    let (cols, vals) = w.row(j);
-                    *o = csr_dot(arow, cols, vals);
-                }
+                w.dots_range(arow, 0, orow);
             }
         });
     }
@@ -288,22 +1293,150 @@ pub fn spmm(a: &Tensor, w: &CsrMatrix) -> Tensor {
 }
 
 // ---------------------------------------------------------------------------
+// Unified compressed form.
+// ---------------------------------------------------------------------------
+
+/// One compressed representation of a weight — what [`SparseStore`] caches
+/// per layer and the kernels dispatch on.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SparseForm {
+    Csr(CsrMatrix),
+    Bsr(BsrMatrix),
+    QCsr(QuantCsr),
+    QBsr(QuantBsr),
+}
+
+impl SparseForm {
+    /// Build the form a resolved layout calls for (`None` for the
+    /// uncompressed dense/masked layouts).  `structured` picks the native
+    /// BSR block shape.
+    pub fn build(
+        layout: WeightLayout,
+        w: &Tensor,
+        mask: &Tensor,
+        structured: bool,
+    ) -> Option<SparseForm> {
+        let bsr = || {
+            let (br, bc) = BsrMatrix::native_block(structured);
+            BsrMatrix::from_dense_masked(w, mask, br, bc)
+        };
+        match layout {
+            WeightLayout::Dense | WeightLayout::Masked => None,
+            WeightLayout::Csr => Some(SparseForm::Csr(CsrMatrix::from_dense_masked(w, mask))),
+            WeightLayout::Bsr => Some(SparseForm::Bsr(bsr())),
+            WeightLayout::CsrF16 => Some(SparseForm::QCsr(QuantCsr::from_csr(
+                &CsrMatrix::from_dense_masked(w, mask),
+                QuantKind::F16,
+            ))),
+            WeightLayout::CsrQ8 => Some(SparseForm::QCsr(QuantCsr::from_csr(
+                &CsrMatrix::from_dense_masked(w, mask),
+                QuantKind::I8,
+            ))),
+            WeightLayout::BsrF16 => {
+                Some(SparseForm::QBsr(QuantBsr::from_bsr(&bsr(), QuantKind::F16)))
+            }
+            WeightLayout::BsrQ8 => {
+                Some(SparseForm::QBsr(QuantBsr::from_bsr(&bsr(), QuantKind::I8)))
+            }
+        }
+    }
+
+    /// The layout this form executes as.
+    pub fn layout(&self) -> WeightLayout {
+        match self {
+            SparseForm::Csr(_) => WeightLayout::Csr,
+            SparseForm::Bsr(_) => WeightLayout::Bsr,
+            SparseForm::QCsr(q) => match q.kind() {
+                QuantKind::F16 => WeightLayout::CsrF16,
+                QuantKind::I8 => WeightLayout::CsrQ8,
+            },
+            SparseForm::QBsr(q) => match q.kind() {
+                QuantKind::F16 => WeightLayout::BsrF16,
+                QuantKind::I8 => WeightLayout::BsrQ8,
+            },
+        }
+    }
+
+    pub fn mem_bytes(&self) -> usize {
+        match self {
+            SparseForm::Csr(c) => c.mem_bytes(),
+            SparseForm::Bsr(b) => b.mem_bytes(),
+            SparseForm::QCsr(q) => q.mem_bytes(),
+            SparseForm::QBsr(q) => q.mem_bytes(),
+        }
+    }
+
+    pub fn value_bytes(&self) -> usize {
+        match self {
+            SparseForm::Csr(c) => c.value_bytes(),
+            SparseForm::Bsr(b) => b.value_bytes(),
+            SparseForm::QCsr(q) => q.value_bytes(),
+            SparseForm::QBsr(q) => q.value_bytes(),
+        }
+    }
+
+    /// Decompress (exact for CSR/BSR, approximate for quantised forms).
+    pub fn to_dense(&self) -> Tensor {
+        match self {
+            SparseForm::Csr(c) => c.to_dense(),
+            SparseForm::Bsr(b) => b.to_dense(),
+            SparseForm::QCsr(q) => q.to_dense(),
+            SparseForm::QBsr(q) => q.to_dense(),
+        }
+    }
+
+    /// Forward / decode contraction `a:(n,k) @ Wᵀ`.
+    pub fn spmm_nt(&self, a: &Tensor) -> Tensor {
+        match self {
+            SparseForm::Csr(c) => spmm_nt(a, c),
+            SparseForm::Bsr(b) => b.spmm_nt(a),
+            SparseForm::QCsr(q) => q.spmm_nt(a),
+            SparseForm::QBsr(q) => q.spmm_nt(a),
+        }
+    }
+
+    /// Backward-dx contraction `a:(n,m) @ W` — exact forms only.
+    /// Quantised forms return `None`: gradients must never be approximate,
+    /// so callers fall back to the exact masked kernel.
+    pub fn spmm(&self, a: &Tensor) -> Option<Tensor> {
+        match self {
+            SparseForm::Csr(c) => Some(spmm(a, c)),
+            SparseForm::Bsr(b) => Some(b.spmm(a)),
+            SparseForm::QCsr(_) | SparseForm::QBsr(_) => None,
+        }
+    }
+
+    /// Dot products for output columns `j0 .. j0+out.len()` of one
+    /// activation row — the shared unit the fused q/k/v decode kernel
+    /// dispatches on per head run.
+    pub fn dots_range(&self, arow: &[f32], j0: usize, out: &mut [f32]) {
+        match self {
+            SparseForm::Csr(c) => c.dots_range(arow, j0, out),
+            SparseForm::Bsr(b) => b.dots_range(arow, j0, out),
+            SparseForm::QCsr(q) => q.dots_range(arow, j0, out),
+            SparseForm::QBsr(q) => q.dots_range(arow, j0, out),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Named collections: the coordinator-side cache and its borrowed view.
 // ---------------------------------------------------------------------------
 
 /// Cached sparse state for a model's prunable linears: one resolved
-/// [`WeightLayout`] per weight, plus the [`CsrMatrix`] forms for the
-/// CSR-routed ones.  Built once per weight/mask change (prune, merge,
-/// checkpoint load) so steady-state train/serve loops never re-compress.
+/// [`WeightLayout`] per weight, plus the compressed [`SparseForm`]s for the
+/// layers routed away from the dense/masked paths.  Built once per
+/// weight/mask change (prune, merge, checkpoint load) so steady-state
+/// train/serve loops never re-compress.
 #[derive(Debug, Clone, Default)]
 pub struct SparseStore {
     pub layouts: BTreeMap<String, WeightLayout>,
-    pub csr: BTreeMap<String, CsrMatrix>,
+    pub forms: BTreeMap<String, SparseForm>,
 }
 
 impl SparseStore {
-    /// Resolve a layout per layer from its measured `W⊙M` sparsity and
-    /// compress the CSR-routed layers.
+    /// Resolve a layout per layer from its measured `W⊙M` sparsity /
+    /// structure and compress the routed layers.
     pub fn build<'a>(
         policy: LayoutPolicy,
         layers: impl Iterator<Item = (String, &'a Tensor, &'a Tensor)>,
@@ -322,23 +1455,37 @@ impl SparseStore {
         layers: impl Iterator<Item = (String, &'a Tensor, &'a Tensor)>,
     ) {
         for (name, w, mask) in layers {
-            let layout = match policy {
-                // fixed policies never read the sparsity — skip the scan
-                LayoutPolicy::Fixed(l) => l,
-                LayoutPolicy::Auto => {
-                    let nnz = w
-                        .data()
-                        .iter()
-                        .zip(mask.data())
-                        .filter(|(&wv, &mv)| wv * mv != 0.0)
-                        .count();
-                    policy.resolve(1.0 - nnz as f64 / w.numel().max(1) as f64)
+            let (layout, structured) = match policy {
+                // fixed non-BSR policies never read the sparsity — skip the scan
+                LayoutPolicy::Fixed(l)
+                    if l.exact_counterpart() != WeightLayout::Bsr =>
+                {
+                    (l, false)
+                }
+                _ => {
+                    let structured = is_nm_structured(w, mask, 2, 4);
+                    let layout = match policy {
+                        LayoutPolicy::Fixed(l) => l,
+                        _ => {
+                            let nnz = w
+                                .data()
+                                .iter()
+                                .zip(mask.data())
+                                .filter(|(&wv, &mv)| wv * mv != 0.0)
+                                .count();
+                            policy.resolve(1.0 - nnz as f64 / w.numel().max(1) as f64, structured)
+                        }
+                    };
+                    (layout, structured)
                 }
             };
-            if layout == WeightLayout::Csr {
-                self.csr.insert(name.clone(), CsrMatrix::from_dense_masked(w, mask));
-            } else {
-                self.csr.remove(&name);
+            match SparseForm::build(layout, w, mask, structured) {
+                Some(form) => {
+                    self.forms.insert(name.clone(), form);
+                }
+                None => {
+                    self.forms.remove(&name);
+                }
             }
             self.layouts.insert(name, layout);
         }
@@ -349,20 +1496,20 @@ impl SparseStore {
         self.layouts.values().all(|l| *l == WeightLayout::Masked)
     }
 
-    pub fn has_csr(&self, name: &str) -> bool {
-        self.csr.contains_key(name)
+    pub fn has_form(&self, name: &str) -> bool {
+        self.forms.contains_key(name)
     }
 
     /// Total compressed bytes across layers (exported by the serve layer
-    /// as the `perp_serve_csr_weight_bytes` gauge).
-    pub fn csr_bytes(&self) -> usize {
-        self.csr.values().map(CsrMatrix::mem_bytes).sum()
+    /// as the `perp_serve_sparse_weight_bytes` gauge).
+    pub fn compressed_bytes(&self) -> usize {
+        self.forms.values().map(SparseForm::mem_bytes).sum()
     }
 
     pub fn view(&self) -> SparseView<'_> {
         SparseView {
             layouts: self.layouts.clone(),
-            csr: self.csr.iter().map(|(n, c)| (n.clone(), c)).collect(),
+            forms: self.forms.iter().map(|(n, f)| (n.clone(), f)).collect(),
         }
     }
 }
@@ -373,15 +1520,16 @@ impl SparseStore {
 #[derive(Debug, Default)]
 pub struct SparseView<'a> {
     pub layouts: BTreeMap<String, WeightLayout>,
-    pub csr: BTreeMap<String, &'a CsrMatrix>,
+    pub forms: BTreeMap<String, &'a SparseForm>,
 }
 
 impl<'a> SparseView<'a> {
-    /// Resolved layout for one weight; CSR only when the compressed form is
-    /// actually present, so a stale routing can never panic the kernels.
+    /// Resolved layout for one weight; a compressed layout only when the
+    /// form is actually present, so a stale routing can never panic the
+    /// kernels.
     pub fn layout_of(&self, wname: &str) -> WeightLayout {
-        if self.csr.contains_key(wname) {
-            return WeightLayout::Csr;
+        if let Some(form) = self.forms.get(wname) {
+            return form.layout();
         }
         match self.layouts.get(wname) {
             Some(WeightLayout::Dense) => WeightLayout::Dense,
@@ -389,8 +1537,17 @@ impl<'a> SparseView<'a> {
         }
     }
 
+    pub fn get_form(&self, wname: &str) -> Option<&'a SparseForm> {
+        self.forms.get(wname).copied()
+    }
+
+    /// The CSR form, when that is what's cached (compat shim for callers
+    /// that only understand CSR).
     pub fn get_csr(&self, wname: &str) -> Option<&'a CsrMatrix> {
-        self.csr.get(wname).copied()
+        match self.forms.get(wname) {
+            Some(SparseForm::Csr(c)) => Some(c),
+            _ => None,
+        }
     }
 }
 
@@ -420,6 +1577,22 @@ mod tests {
         (w, mask)
     }
 
+    /// A 2:4 semi-structured mask: exactly two survivors per aligned group
+    /// of four columns.
+    fn nm24_mask(m: usize, k: usize, rng: &mut Rng) -> Tensor {
+        assert_eq!(k % 4, 0);
+        let mut data = vec![0.0f32; m * k];
+        for i in 0..m {
+            for g in (0..k).step_by(4) {
+                let mut picks = [0u32, 1, 2, 3];
+                rng.shuffle(&mut picks);
+                data[i * k + g + picks[0] as usize] = 1.0;
+                data[i * k + g + picks[1] as usize] = 1.0;
+            }
+        }
+        Tensor::new(&[m, k], data)
+    }
+
     #[test]
     fn roundtrip_matches_masked_product() {
         for (m, k, s) in [(1usize, 1usize, 0.0), (7, 13, 0.5), (33, 65, 0.99), (8, 8, 1.0)] {
@@ -445,6 +1618,7 @@ mod tests {
         let (w, mask) = random_case(16, 32, 0.9, 5);
         let csr = CsrMatrix::from_dense_masked(&w, &mask);
         assert_eq!(csr.mem_bytes(), csr.nnz() * 8 + (16 + 1) * 4);
+        assert_eq!(csr.value_bytes(), csr.nnz() * 4);
         assert_eq!(csr.dense_bytes(), 16 * 32 * 4);
         assert!(csr.mem_bytes() < csr.dense_bytes());
     }
@@ -466,6 +1640,107 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits(), "{n}x{k}x{m}@{s}");
             }
         }
+    }
+
+    #[test]
+    fn bsr_roundtrip_blocks_and_memory() {
+        let mut rng = Rng::new(29);
+        // ragged both ways: rows % br != 0, cols % bc != 0
+        for (m, k, br, bc, s) in [
+            (7usize, 13usize, 4usize, 4usize, 0.5),
+            (16, 32, 4, 4, 0.9),
+            (5, 12, 1, 4, 0.5),
+            (9, 10, 2, 3, 0.7),
+        ] {
+            let w = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let mask = random_mask(&[m, k], s, &mut rng);
+            let bsr = BsrMatrix::from_dense_masked(&w, &mask, br, bc);
+            assert_eq!(bsr.to_dense(), w.hadamard(&mask), "{m}x{k} {br}x{bc}@{s}");
+            assert_eq!(bsr.block_shape(), (br, bc));
+            assert_eq!(bsr.value_bytes(), bsr.n_blocks() * br * bc * 4);
+            assert_eq!(
+                bsr.mem_bytes(),
+                bsr.value_bytes() + bsr.n_blocks() * 4 + (m.div_ceil(br) + 1) * 4
+            );
+        }
+    }
+
+    #[test]
+    fn bsr_spmm_nt_bitwise_matches_masked_kernel() {
+        let mut rng = Rng::new(31);
+        // unstructured masks at 4x4 and 1x4 blocks, ragged dims, n==1 and n>1
+        for (n, k, m, s) in
+            [(1usize, 33usize, 17usize, 0.9), (5, 64, 31, 0.5), (9, 17, 65, 0.0), (4, 8, 8, 1.0)]
+        {
+            let a = Tensor::randn(&[n, k], 1.0, &mut rng);
+            let w = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let mask = random_mask(&[m, k], s, &mut rng);
+            let want = linalg::matmul_nt_masked(&a, &w, &mask);
+            for (br, bc) in [(4usize, 4usize), (1, 4), (2, 3)] {
+                let bsr = BsrMatrix::from_dense_masked(&w, &mask, br, bc);
+                let got = bsr.spmm_nt(&a);
+                assert_eq!(got.shape(), want.shape());
+                for (x, y) in got.data().iter().zip(want.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{n}x{k}x{m}@{s} {br}x{bc}");
+                }
+            }
+        }
+        // the 2:4 hot path: 1x4 blocks, every block row full -> lockstep
+        for (n, k, m) in [(1usize, 64usize, 96usize), (3, 32, 48)] {
+            let a = Tensor::randn(&[n, k], 1.0, &mut rng);
+            let w = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let mask = nm24_mask(m, k, &mut rng);
+            assert!(is_nm_structured(&w, &mask, 2, 4));
+            let bsr = BsrMatrix::from_dense_masked(&w, &mask, 1, 4);
+            let want = linalg::matmul_nt_masked(&a, &w, &mask);
+            for (x, y) in bsr.spmm_nt(&a).data().iter().zip(want.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "2:4 {n}x{k}x{m}");
+            }
+        }
+    }
+
+    #[test]
+    fn bsr_spmm_matches_masked_backward() {
+        let mut rng = Rng::new(37);
+        for (n, m, k, s) in [(1usize, 17usize, 33usize, 0.9), (6, 31, 64, 0.5), (3, 8, 8, 1.0)] {
+            let dy = Tensor::randn(&[n, m], 1.0, &mut rng);
+            let w = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let mask = random_mask(&[m, k], s, &mut rng);
+            let want = linalg::matmul_masked(&dy, &w, &mask);
+            for (br, bc) in [(4usize, 4usize), (1, 4)] {
+                let bsr = BsrMatrix::from_dense_masked(&w, &mask, br, bc);
+                assert!(bsr.spmm(&dy).allclose(&want, 1e-6, 1e-6), "{n}x{m}x{k}@{s} {br}x{bc}");
+            }
+        }
+    }
+
+    #[test]
+    fn bsr_empty_block_rows_and_ragged_tails() {
+        // block row 0 fully pruned; rows not a multiple of br
+        let w = Tensor::new(&[3, 5], vec![1.0; 15]);
+        let mut md = vec![0.0f32; 15];
+        md[1 * 5 + 2] = 1.0; // only row 1, col 2 survives
+        let mask = Tensor::new(&[3, 5], md);
+        let bsr = BsrMatrix::from_dense_masked(&w, &mask, 2, 4);
+        assert_eq!(bsr.to_dense(), w.hadamard(&mask));
+        let a = Tensor::new(&[1, 5], vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(bsr.spmm_nt(&a).data(), &[0.0, 3.0, 0.0]);
+
+        // fully pruned matrix stores no blocks at all
+        let dead = BsrMatrix::from_dense_masked(&w, &Tensor::zeros(&[3, 5]), 2, 4);
+        assert_eq!(dead.n_blocks(), 0);
+        assert_eq!(dead.spmm_nt(&a).data(), &[0.0; 3]);
+        assert_eq!(dead.spmm(&Tensor::ones(&[2, 3])).data(), &[0.0; 10]);
+
+        // single row, single partial block
+        let single = BsrMatrix::from_dense_masked(
+            &Tensor::new(&[1, 3], vec![2.0, 0.0, 4.0]),
+            &Tensor::ones(&[1, 3]),
+            1,
+            4,
+        );
+        assert_eq!(single.n_blocks(), 1);
+        assert_eq!(single.spmm_nt(&Tensor::new(&[1, 3], vec![1.0, 1.0, 1.0])).data(), &[6.0]);
     }
 
     #[test]
@@ -505,23 +1780,209 @@ mod tests {
     }
 
     #[test]
-    fn policy_parse_and_resolve() {
-        assert_eq!(LayoutPolicy::parse("auto").unwrap(), LayoutPolicy::Auto);
-        assert_eq!(
-            LayoutPolicy::parse("csr").unwrap(),
-            LayoutPolicy::Fixed(WeightLayout::Csr)
-        );
-        assert!(LayoutPolicy::parse("coo").is_err());
-        assert_eq!(LayoutPolicy::Auto.resolve(0.99), WeightLayout::Csr);
-        assert_eq!(LayoutPolicy::Auto.resolve(0.0), WeightLayout::Masked);
-        assert_eq!(
-            LayoutPolicy::Fixed(WeightLayout::Dense).resolve(0.99),
-            WeightLayout::Dense
-        );
+    fn f16_bits_exhaustive_roundtrip() {
+        // every non-NaN f16 pattern survives f16 -> f32 -> f16 exactly
+        for h in 0..=u16::MAX {
+            let e = (h >> 10) & 0x1f;
+            let man = h & 0x3ff;
+            if e == 0x1f && man != 0 {
+                assert!(f16_bits_to_f32(h).is_nan());
+                continue;
+            }
+            let back = f32_to_f16_bits(f16_bits_to_f32(h));
+            assert_eq!(back, h, "pattern {h:#06x}");
+        }
+        // overflow saturates instead of producing inf
+        assert_eq!(f32_to_f16_bits(1e6), 0x7bff);
+        assert_eq!(f32_to_f16_bits(-1e6), 0xfbff);
+        assert_eq!(f16_bits_to_f32(0x7bff), 65504.0);
     }
 
     #[test]
-    fn store_builds_csr_only_where_routed() {
+    fn quant_i8_roundtrip_error_within_half_scale() {
+        let mut rng = Rng::new(41);
+        let (w, mask) = random_case(24, 40, 0.6, 43);
+        let exact = w.hadamard(&mask);
+        let csr = CsrMatrix::from_dense_masked(&w, &mask);
+        let q = QuantCsr::from_csr(&csr, QuantKind::I8);
+        assert_eq!(q.scales().len(), 24);
+        let dq = q.to_dense();
+        for i in 0..24 {
+            let bound = q.scales()[i] * 0.5 + 1e-6;
+            for j in 0..40 {
+                let err = (dq.data()[i * 40 + j] - exact.data()[i * 40 + j]).abs();
+                assert!(err <= bound, "row {i}: err {err} > scale/2 {bound}");
+            }
+        }
+        // BSR variant: same per-matrix-row bound
+        let bsr = BsrMatrix::from_dense_masked(&w, &mask, 4, 4);
+        let qb = QuantBsr::from_bsr(&bsr, QuantKind::I8);
+        let dqb = qb.to_dense();
+        for i in 0..24 {
+            let bound = q.scales()[i] * 0.5 + 1e-6;
+            for j in 0..40 {
+                let err = (dqb.data()[i * 40 + j] - exact.data()[i * 40 + j]).abs();
+                assert!(err <= bound, "bsr row {i}: err {err} > {bound}");
+            }
+        }
+        // f16 variant: relative error within 2^-11 (plus tiny absolute slack)
+        let qf = QuantCsr::from_csr(&csr, QuantKind::F16);
+        let dqf = qf.to_dense();
+        for (x, y) in dqf.data().iter().zip(exact.data()) {
+            assert!((x - y).abs() <= y.abs() * 4.9e-4 + 1e-7, "f16 {x} vs {y}");
+        }
+        // quantised spmm stays close to the exact contraction
+        let a = Tensor::randn(&[3, 40], 1.0, &mut rng);
+        let want = linalg::matmul_nt_masked(&a, &w, &mask);
+        assert!(qf.spmm_nt(&a).allclose(&want, 1e-2, 1e-2));
+        assert!(q.spmm_nt(&a).allclose(&want, 0.2, 0.2));
+        assert!(qb.spmm_nt(&a).allclose(&want, 0.2, 0.2));
+    }
+
+    #[test]
+    fn quant_value_bytes_shrink() {
+        let (w, mask) = random_case(64, 64, 0.7, 47);
+        let csr = CsrMatrix::from_dense_masked(&w, &mask);
+        let q8 = QuantCsr::from_csr(&csr, QuantKind::I8);
+        let f16 = QuantCsr::from_csr(&csr, QuantKind::F16);
+        // i8 + per-row scales: <= 0.55x the f32 value bytes (the
+        // acceptance bound); f16 exactly half
+        assert!(
+            (q8.value_bytes() as f64) <= 0.55 * csr.value_bytes() as f64,
+            "q8 {} vs csr {}",
+            q8.value_bytes(),
+            csr.value_bytes()
+        );
+        assert_eq!(f16.value_bytes(), csr.value_bytes() / 2);
+    }
+
+    #[test]
+    fn sparse_form_dispatch_and_dots_range() {
+        let mut rng = Rng::new(53);
+        let w = Tensor::randn(&[20, 16], 1.0, &mut rng);
+        let mask = random_mask(&[20, 16], 0.6, &mut rng);
+        let a = Tensor::randn(&[1, 16], 1.0, &mut rng);
+        for layout in [
+            WeightLayout::Csr,
+            WeightLayout::Bsr,
+            WeightLayout::CsrF16,
+            WeightLayout::CsrQ8,
+            WeightLayout::BsrF16,
+            WeightLayout::BsrQ8,
+        ] {
+            let form = SparseForm::build(layout, &w, &mask, false).unwrap();
+            assert_eq!(form.layout(), layout);
+            let via_spmm = form.spmm_nt(&a);
+            // dots_range in odd-sized chunks must agree bit-for-bit with
+            // the full spmm (the fused-qkv contract)
+            let mut out = vec![0.0f32; 20];
+            let mut j0 = 0usize;
+            for chunk in [7usize, 9, 4] {
+                let hi = (j0 + chunk).min(20);
+                form.dots_range(a.data(), j0, &mut out[j0..hi]);
+                j0 = hi;
+            }
+            for (x, y) in out.iter().zip(via_spmm.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{}", layout.name());
+            }
+            // backward only exists for exact forms
+            assert_eq!(form.spmm(&a).is_some(), !layout.is_quantised());
+            assert!(form.value_bytes() > 0 && form.mem_bytes() > form.value_bytes());
+        }
+        assert!(SparseForm::build(WeightLayout::Masked, &w, &mask, false).is_none());
+        assert!(SparseForm::build(WeightLayout::Dense, &w, &mask, false).is_none());
+    }
+
+    #[test]
+    fn nm_structure_probe() {
+        let mut rng = Rng::new(59);
+        let w = Tensor::randn(&[8, 16], 1.0, &mut rng);
+        let mask24 = nm24_mask(8, 16, &mut rng);
+        assert!(is_nm_structured(&w, &mask24, 2, 4));
+        assert!(!is_nm_structured(&w, &Tensor::ones(&[8, 16]), 2, 4));
+        // cols not divisible by the group size
+        let w5 = Tensor::randn(&[4, 5], 1.0, &mut rng);
+        assert!(!is_nm_structured(&w5, &Tensor::zeros(&[4, 5]), 2, 4));
+        // all-pruned is trivially structured
+        assert!(is_nm_structured(&w, &Tensor::zeros(&[8, 16]), 2, 4));
+        assert_eq!(BsrMatrix::native_block(true), (1, 4));
+        assert_eq!(BsrMatrix::native_block(false), (4, 4));
+    }
+
+    #[test]
+    fn policy_parse_and_resolve() {
+        assert_eq!(LayoutPolicy::parse("auto").unwrap(), LayoutPolicy::Auto);
+        assert_eq!(LayoutPolicy::parse("auto-q").unwrap(), LayoutPolicy::AutoQuant);
+        assert_eq!(LayoutPolicy::parse("csr").unwrap(), LayoutPolicy::Fixed(WeightLayout::Csr));
+        assert_eq!(LayoutPolicy::parse("bsr").unwrap(), LayoutPolicy::Fixed(WeightLayout::Bsr));
+        assert_eq!(
+            LayoutPolicy::parse("bsr-q8").unwrap(),
+            LayoutPolicy::Fixed(WeightLayout::BsrQ8)
+        );
+        let err = LayoutPolicy::parse("coo").unwrap_err();
+        assert!(err.contains("allowed:") && err.contains("bsr-q8"), "{err}");
+        assert_eq!("csr-f16".parse::<LayoutPolicy>().unwrap().name(), "csr-f16");
+
+        // fallback heuristic (no table): threshold + structure
+        let none: Option<&CrossoverTable> = None;
+        assert_eq!(LayoutPolicy::Auto.resolve_with(0.99, false, none), WeightLayout::Csr);
+        assert_eq!(LayoutPolicy::Auto.resolve_with(0.0, false, none), WeightLayout::Masked);
+        assert_eq!(LayoutPolicy::Auto.resolve_with(0.5, true, none), WeightLayout::Bsr);
+        assert_eq!(LayoutPolicy::AutoQuant.resolve_with(0.99, false, none), WeightLayout::CsrQ8);
+        assert_eq!(LayoutPolicy::AutoQuant.resolve_with(0.5, true, none), WeightLayout::BsrQ8);
+        assert_eq!(LayoutPolicy::AutoQuant.resolve_with(0.0, false, none), WeightLayout::Masked);
+        assert_eq!(
+            LayoutPolicy::Fixed(WeightLayout::Dense).resolve_with(0.99, false, none),
+            WeightLayout::Dense
+        );
+        assert!(LayoutPolicy::AutoQuant.may_quantise());
+        assert!(!LayoutPolicy::Auto.may_quantise());
+        assert!(LayoutPolicy::Fixed(WeightLayout::BsrQ8).may_quantise());
+        assert!(!LayoutPolicy::Fixed(WeightLayout::Bsr).may_quantise());
+    }
+
+    #[test]
+    fn auto_dispatch_consumes_crossover_table_argmax() {
+        // the measured table, not the threshold, decides: entries where the
+        // heuristic would pick differently
+        let json = Json::parse(
+            r#"{"crossover":[
+                {"sparsity":0.5,"pattern":"2:4","best_exact":"bsr","best_any":"bsr-q8"},
+                {"sparsity":0.5,"pattern":"unstructured","best_exact":"masked","best_any":"masked"},
+                {"sparsity":0.9,"pattern":"unstructured","best_exact":"csr","best_any":"csr-q8"},
+                {"sparsity":0.95,"pattern":"unstructured","best_exact":"bsr","best_any":"bsr-q8"}
+            ]}"#,
+        )
+        .unwrap();
+        let table = CrossoverTable::from_json(&json).unwrap();
+        assert_eq!(table.entries.len(), 4);
+        let t = Some(&table);
+
+        // argmax per operating point: nearest sparsity, matching structure
+        assert_eq!(LayoutPolicy::Auto.resolve_with(0.5, true, t), WeightLayout::Bsr);
+        assert_eq!(LayoutPolicy::Auto.resolve_with(0.55, false, t), WeightLayout::Masked);
+        assert_eq!(LayoutPolicy::Auto.resolve_with(0.88, false, t), WeightLayout::Csr);
+        // 0.94 is nearest the 0.95 entry -> the table overrides the
+        // hard-coded csr choice with the measured bsr win
+        assert_eq!(LayoutPolicy::Auto.resolve_with(0.94, false, t), WeightLayout::Bsr);
+        // plain auto stays exact even where best_any is quantised
+        assert!(!LayoutPolicy::Auto.resolve_with(0.9, false, t).is_quantised());
+        // auto-q takes the quantised argmax
+        assert_eq!(LayoutPolicy::AutoQuant.resolve_with(0.9, false, t), WeightLayout::CsrQ8);
+        assert_eq!(LayoutPolicy::AutoQuant.resolve_with(0.5, true, t), WeightLayout::BsrQ8);
+
+        // a table claiming a quantised best_exact is rejected outright
+        let bad = Json::parse(
+            r#"{"crossover":[{"sparsity":0.9,"pattern":"unstructured","best_exact":"csr-q8"}]}"#,
+        )
+        .unwrap();
+        assert!(CrossoverTable::from_json(&bad).is_err());
+        // and a report with no crossover key is an error, not a panic
+        assert!(CrossoverTable::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn store_builds_forms_only_where_routed() {
         let mut rng = Rng::new(17);
         let dense_w = Tensor::randn(&[8, 8], 1.0, &mut rng);
         let sparse_w = Tensor::randn(&[8, 8], 1.0, &mut rng);
@@ -534,18 +1995,62 @@ mod tests {
         let store = SparseStore::build(LayoutPolicy::Auto, layers.into_iter());
         assert_eq!(store.layouts["a_w"], WeightLayout::Masked);
         assert_eq!(store.layouts["b_w"], WeightLayout::Csr);
-        assert!(store.has_csr("b_w") && !store.has_csr("a_w"));
+        assert!(store.has_form("b_w") && !store.has_form("a_w"));
         assert!(!store.is_empty());
-        assert!(store.csr_bytes() > 0);
+        assert!(store.compressed_bytes() > 0);
         let view = store.view();
         assert_eq!(view.layout_of("a_w"), WeightLayout::Masked);
         assert_eq!(view.layout_of("b_w"), WeightLayout::Csr);
         assert_eq!(view.layout_of("unknown_w"), WeightLayout::Masked);
+        assert!(view.get_form("b_w").is_some());
         assert!(view.get_csr("b_w").is_some());
     }
 
     #[test]
-    fn store_update_rescans_only_named_layers_and_drops_stale_csr() {
+    fn store_routes_structured_masks_to_1x4_bsr() {
+        let mut rng = Rng::new(61);
+        let w = Tensor::randn(&[8, 16], 1.0, &mut rng);
+        let mask = nm24_mask(8, 16, &mut rng);
+        let store = SparseStore::build(
+            LayoutPolicy::Auto,
+            vec![("q_w".to_string(), &w, &mask)].into_iter(),
+        );
+        assert_eq!(store.layouts["q_w"], WeightLayout::Bsr);
+        match &store.forms["q_w"] {
+            SparseForm::Bsr(b) => assert_eq!(b.block_shape(), (1, 4)),
+            other => panic!("expected bsr form, got {:?}", other.layout()),
+        }
+        // fixed bsr on an unstructured mask falls back to 4x4 tiles
+        let um = random_mask(&[8, 16], 0.9, &mut rng);
+        let fixed = SparseStore::build(
+            LayoutPolicy::Fixed(WeightLayout::Bsr),
+            vec![("u_w".to_string(), &w, &um)].into_iter(),
+        );
+        match &fixed.forms["u_w"] {
+            SparseForm::Bsr(b) => assert_eq!(b.block_shape(), (4, 4)),
+            other => panic!("expected bsr form, got {:?}", other.layout()),
+        }
+    }
+
+    #[test]
+    fn store_auto_quant_routes_quantised_forms() {
+        let mut rng = Rng::new(67);
+        let w = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let mask = random_mask(&[8, 8], 0.9, &mut rng);
+        let store = SparseStore::build(
+            LayoutPolicy::AutoQuant,
+            vec![("a_w".to_string(), &w, &mask)].into_iter(),
+        );
+        assert_eq!(store.layouts["a_w"], WeightLayout::CsrQ8);
+        let view = store.view();
+        assert_eq!(view.layout_of("a_w"), WeightLayout::CsrQ8);
+        assert!(view.get_form("a_w").is_some());
+        // the CSR compat accessor refuses to hand out a quantised form
+        assert!(view.get_csr("a_w").is_none());
+    }
+
+    #[test]
+    fn store_update_rescans_only_named_layers_and_drops_stale_forms() {
         let mut rng = Rng::new(23);
         let w = Tensor::randn(&[8, 8], 1.0, &mut rng);
         let sparse_mask = random_mask(&[8, 8], 0.9, &mut rng);
@@ -554,18 +2059,18 @@ mod tests {
             LayoutPolicy::Auto,
             vec![("a_w".to_string(), &w, &sparse_mask)].into_iter(),
         );
-        assert!(store.has_csr("a_w"));
-        // the layer went dense (e.g. reconstruction reset): CSR must go away
+        assert!(store.has_form("a_w"));
+        // the layer went dense (e.g. reconstruction reset): the form must go away
         store.update(LayoutPolicy::Auto, vec![("a_w".to_string(), &w, &ones)].into_iter());
-        assert!(!store.has_csr("a_w"));
+        assert!(!store.has_form("a_w"));
         assert_eq!(store.layouts["a_w"], WeightLayout::Masked);
         // and back to pruned: recompressed, other entries untouched
         store.update(
             LayoutPolicy::Auto,
             vec![("a_w".to_string(), &w, &sparse_mask)].into_iter(),
         );
-        assert!(store.has_csr("a_w"));
-        assert_eq!(store.csr["a_w"].to_dense(), w.hadamard(&sparse_mask));
+        assert!(store.has_form("a_w"));
+        assert_eq!(store.forms["a_w"].to_dense(), w.hadamard(&sparse_mask));
     }
 
     #[test]

@@ -124,6 +124,14 @@ impl Args {
         self.parsed("jobs", "\"auto\" or a positive integer")
     }
 
+    /// `--layout <policy>`: weight-layout selection policy.  An unknown
+    /// layout name is an [`ArgError`] listing the allowed set (the launcher
+    /// exits 2) — it must never fall through to a default.
+    pub fn opt_layout(&self) -> Result<Option<crate::tensor::sparse::LayoutPolicy>, ArgError> {
+        let want = format!("one of {}", crate::tensor::sparse::ALLOWED_LAYOUTS);
+        self.parsed("layout", &want)
+    }
+
     pub fn flag(&self, key: &str) -> bool {
         self.mark(key);
         self.flags.iter().any(|f| f == key)
@@ -243,6 +251,24 @@ mod tests {
             let e = a.opt_jobs().unwrap_err();
             assert!(e.to_string().contains("--jobs"), "{e}");
         }
+    }
+
+    #[test]
+    fn layout_accessor_rejects_unknown_with_allowed_set() {
+        use crate::tensor::sparse::{LayoutPolicy, WeightLayout};
+        let a = args("serve --layout bsr");
+        assert_eq!(a.opt_layout().unwrap(), Some(LayoutPolicy::Fixed(WeightLayout::Bsr)));
+        a.finish().unwrap();
+        let a = args("serve --layout auto-q");
+        assert_eq!(a.opt_layout().unwrap(), Some(LayoutPolicy::AutoQuant));
+        let a = args("serve");
+        assert_eq!(a.opt_layout().unwrap(), None);
+        // unknown layouts are an ArgError (exit 2) naming the allowed set
+        let a = args("serve --layout coo");
+        let e = a.opt_layout().unwrap_err().to_string();
+        assert!(e.contains("--layout"), "{e}");
+        assert!(e.contains("coo"), "{e}");
+        assert!(e.contains("bsr-q8"), "{e}");
     }
 
     #[test]

@@ -3,10 +3,11 @@
 //! token-identical output to re-running the growing context through the
 //! full forward pass — on gpt-nano, dense and at 50% unstructured
 //! sparsity, for single and batched (multi-slot) streams, and under the
-//! compressed CSR weight layout at 90% sparsity.
+//! compressed weight layouts: CSR at 90%, BSR at 2:4 and at 90%
+//! unstructured, and `auto` (which routes 2:4 masks to BSR).
 //!
 //! The decode kernels mirror the forward pass' accumulation order exactly
-//! (the CSR SpMM kernels mirror the masked kernels' order in turn), so
+//! (the CSR/BSR SpMM kernels mirror the masked kernels' order in turn), so
 //! this holds bitwise within a layout, not just within tolerance.
 
 use std::collections::BTreeMap;
@@ -26,7 +27,7 @@ struct Fixture {
     mm: ModelManifest,
     params: BTreeMap<String, Tensor>,
     masks: BTreeMap<String, Tensor>,
-    /// Cached CSR forms under the fixture's layout (empty for Masked).
+    /// Cached compressed forms under the fixture's layout (empty for Masked).
     sparse: SparseStore,
 }
 
@@ -35,21 +36,25 @@ fn fixture(sparsity: Option<f64>) -> Fixture {
 }
 
 fn fixture_with_layout(sparsity: Option<f64>, layout: LayoutPolicy) -> Fixture {
+    fixture_pattern(sparsity.map(Pattern::Unstructured), layout)
+}
+
+fn fixture_pattern(pattern: Option<Pattern>, layout: LayoutPolicy) -> Fixture {
     let be = NativeBackend::new();
     let mm = be.model("gpt-nano").unwrap().clone();
     let mut rng = Rng::new(42);
     let params: BTreeMap<String, Tensor> =
         init::init_params(&mm, &mut rng).map().clone();
-    let masks: BTreeMap<String, Tensor> = match sparsity {
+    let masks: BTreeMap<String, Tensor> = match pattern {
         None => mm
             .prunable
             .iter()
             .map(|n| (n.clone(), Tensor::ones(mm.param_shape(n))))
             .collect(),
-        Some(f) => {
+        Some(p) => {
             let weights: BTreeMap<String, &Tensor> =
                 mm.prunable.iter().map(|n| (n.clone(), &params[n])).collect();
-            magnitude::uniform(&weights, Pattern::Unstructured(f)).masks
+            magnitude::uniform(&weights, p).masks
         }
     };
     let sparse = SparseStore::build(
@@ -236,22 +241,69 @@ fn greedy_kv_decode_matches_full_forward_half_sparse() {
 fn greedy_kv_decode_matches_full_forward_csr_layout() {
     // the --layout csr serving path: every prunable linear compressed
     let fx = fixture_with_layout(Some(0.9), LayoutPolicy::Fixed(WeightLayout::Csr));
-    assert_eq!(fx.sparse.csr.len(), fx.mm.prunable.len(), "all linears should be compressed");
+    assert_eq!(fx.sparse.forms.len(), fx.mm.prunable.len(), "all linears should be compressed");
     check_parity_with(&fx, "layout csr @ 90%");
+}
+
+#[test]
+fn greedy_kv_decode_matches_full_forward_bsr_24() {
+    // 2:4 masks compress into native 1x4 blocks; the decode path runs the
+    // fused q/k/v kernel over the BSR forms — still bitwise vs full forward
+    let fx = fixture_pattern(
+        Some(Pattern::SemiStructured { n: 2, m: 4 }),
+        LayoutPolicy::Fixed(WeightLayout::Bsr),
+    );
+    assert_eq!(fx.sparse.forms.len(), fx.mm.prunable.len(), "all linears should be compressed");
+    for (n, f) in &fx.sparse.forms {
+        assert_eq!(f.layout(), WeightLayout::Bsr, "{n} not BSR-routed");
+    }
+    check_parity_with(&fx, "layout bsr @ 2:4");
+}
+
+#[test]
+fn greedy_kv_decode_matches_full_forward_bsr_90() {
+    // unstructured masks fall back to 4x4 tiles; parity must still be exact
+    let fx = fixture_with_layout(Some(0.9), LayoutPolicy::Fixed(WeightLayout::Bsr));
+    assert_eq!(fx.sparse.forms.len(), fx.mm.prunable.len(), "all linears should be compressed");
+    check_parity_with(&fx, "layout bsr @ 90%");
 }
 
 #[test]
 fn greedy_kv_decode_matches_full_forward_auto_layout() {
     // auto routes 90%-sparse layers to CSR (0.9 >= default crossover 0.75)
     let fx = fixture_with_layout(Some(0.9), LayoutPolicy::Auto);
-    assert!(!fx.sparse.csr.is_empty(), "auto should compress 90%-sparse layers");
+    assert!(!fx.sparse.forms.is_empty(), "auto should compress 90%-sparse layers");
     check_parity_with(&fx, "layout auto @ 90%");
+}
+
+#[test]
+fn greedy_kv_decode_matches_full_forward_auto_24() {
+    // without a crossover table, auto's fallback routes 2:4 masks to BSR —
+    // and never to a quantised layout on this bitwise-pinned path
+    let fx = fixture_pattern(Some(Pattern::SemiStructured { n: 2, m: 4 }), LayoutPolicy::Auto);
+    assert!(
+        fx.sparse.forms.values().any(|f| f.layout() == WeightLayout::Bsr),
+        "auto should BSR-route 2:4 masks"
+    );
+    for (n, l) in &fx.sparse.layouts {
+        assert!(!l.is_quantised(), "auto quantised {n}: {l:?}");
+    }
+    check_parity_with(&fx, "layout auto @ 2:4");
 }
 
 #[test]
 fn prefill_logits_match_full_forward_bitwise_csr() {
     // same bitwise pin as the masked-layout test below, under CSR
     let fx = fixture_with_layout(Some(0.9), LayoutPolicy::Fixed(WeightLayout::Csr));
+    prefill_bitwise_check(&fx);
+}
+
+#[test]
+fn prefill_logits_match_full_forward_bitwise_bsr() {
+    let fx = fixture_pattern(
+        Some(Pattern::SemiStructured { n: 2, m: 4 }),
+        LayoutPolicy::Fixed(WeightLayout::Bsr),
+    );
     prefill_bitwise_check(&fx);
 }
 
