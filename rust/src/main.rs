@@ -95,6 +95,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "daemon" => daemon(args),
         "jobs" => jobs_cmd(args),
         "bench-serve" => bench_serve(args),
+        "bench-spec" => bench_spec(args),
         "bench-kernels" => bench_kernels(args),
         "bench-graph" => bench_graph(args),
         "sweep" => sweep_cmd(args),
@@ -130,6 +131,8 @@ subcommands:
                 repro jobs submit --stages \"...\" | --plan <file> [--watch]
                 repro jobs list | status <id> | cancel <id> | watch <id>
   bench-serve   load-generate against the batcher; write results/bench_serve.json
+  bench-spec    plain vs speculative decoding across draft sparsities × K;
+                write results/bench_spec.json (throughput, acceptance rate)
   bench-kernels dense/masked/CSR/BSR/quantised matmul A/B + the crossover
                 table --layout auto consumes; write results/bench_kernels.json
   bench-graph   serial vs parallel plan-graph A/B; write results/bench_graph.json
@@ -196,6 +199,9 @@ eval flags:
 serve flags:
   --from <ckpt>        checkpoint to serve            [cached dense pretrain]
   --variants n=p,...   extra hot-loaded variants (name=checkpoint pairs)
+  --draft <ckpt>       draft checkpoint for speculative decoding (greedy
+                       streams only; typically a prune|retrain|merge product)
+  --spec-k <n>         draft tokens per speculative round  [4, max spec_width-1]
   --host <h>           bind address                   [127.0.0.1]
   --port <p>           bind port                      [7777]
   --workers <n>        HTTP worker threads            [serve_slots + 2]
@@ -219,6 +225,13 @@ bench-serve flags:
   --max-tokens <n>     new tokens per request                [16]
   --concurrency <n>    concurrent clients (batched phase)    [8]
   --from <ckpt>        checkpoint to serve                   [cached dense]
+
+bench-spec flags:
+  --requests <n>       /generate requests per phase          [8]
+  --max-tokens <n>     new tokens per request                [24]
+  --sparsities <list>  draft sparsities to manufacture       [0.5,0.9]
+  --ks <list>          speculative draft lengths             [2,4]
+  --retrain-steps <n>  draft masklora retrain steps          [profile default]
 
 bench-kernels flags:
   --shapes <list>      NxKxM GEMM shapes     [256x256x256,512x512x512,1024x256x1024]
@@ -978,7 +991,12 @@ fn serve(args: &Args) -> Result<()> {
     let max_batch = args.opt_usize("max-batch")?;
     let from = args.opt_str("from").map(PathBuf::from);
     let variants = args.opt_str("variants");
+    let draft = args.opt_str("draft").map(PathBuf::from);
+    let spec_k = args.usize("spec-k", 4)?;
     args.finish()?;
+    if draft.is_some() && spec_k == 0 {
+        bail!("--spec-k must be >= 1 when --draft is given");
+    }
 
     let cache_dir = env.out.join("cache");
     let mut batch = BatchCfg::default();
@@ -999,6 +1017,8 @@ fn serve(args: &Args) -> Result<()> {
         checkpoint: from,
         cache_dir: cache_dir.clone(),
         batch: batch.clone(),
+        draft,
+        spec_k,
     })?;
     state.insert(handle)?;
     if let Some(pairs) = variants {
@@ -1013,6 +1033,8 @@ fn serve(args: &Args) -> Result<()> {
                 checkpoint: Some(PathBuf::from(path.trim())),
                 cache_dir: cache_dir.clone(),
                 batch: batch.clone(),
+                draft: None,
+                spec_k: 0,
             })?;
             state.insert(handle)?;
         }
@@ -1338,10 +1360,16 @@ fn jobs_cancel(addr: std::net::SocketAddr, id: &str) -> Result<()> {
 }
 
 /// Poll every 2s until the job reaches a terminal state; nonzero exit
-/// unless that state is `done`.
+/// unless that state is `done`.  One keep-alive connection serves the
+/// whole watch instead of a fresh TCP dial per poll.
 fn jobs_watch(addr: std::net::SocketAddr, id: &str) -> Result<()> {
+    let mut conn = client::Conn::new(addr);
     loop {
-        let j = fetch_job(addr, id)?;
+        let (status_code, body) = conn.get(&format!("/jobs/{id}"))?;
+        if status_code != 200 {
+            bail!("GET /jobs/{id} failed ({status_code}): {body}");
+        }
+        let j = Json::parse(&body).map_err(|e| anyhow::anyhow!("parsing response: {e}"))?;
         let status = j.str_or("status", "?");
         let (done, total) = job_progress(&j);
         println!("{id}: {status} ({done}/{total} nodes)");
@@ -1381,6 +1409,8 @@ fn bench_phase(
         for w in 0..concurrency {
             let share = requests / concurrency + usize::from(w < requests % concurrency);
             scope.spawn(move || {
+                // one keep-alive socket per worker for the whole phase
+                let mut conn = client::Conn::new(addr);
                 for i in 0..share {
                     let body = Json::obj(vec![
                         ("prompt", Json::Str(format!("the model serves request {w} {i}"))),
@@ -1388,7 +1418,7 @@ fn bench_phase(
                         ("max_tokens", Json::Num(max_tokens as f64)),
                     ]);
                     let t = Instant::now();
-                    match client::post_json(addr, "/generate", &body) {
+                    match conn.post_json("/generate", &body) {
                         Ok((200, j)) => {
                             let toks = j
                                 .get("tokens")
@@ -2005,6 +2035,8 @@ fn bench_serve(args: &Args) -> Result<()> {
                 max_new_default: max_tokens,
                 min_tokens: 1,
             },
+            draft: None,
+            spec_k: 0,
         })?;
         state.insert(handle)?;
     }
@@ -2061,6 +2093,195 @@ fn bench_serve(args: &Args) -> Result<()> {
         ("speedup", Json::Num(speedup)),
     ]);
     let path = env.out.join("bench_serve.json");
+    std::fs::write(&path, report.to_string()).with_context(|| format!("writing {path:?}"))?;
+    println!("wrote {path:?}");
+    Ok(())
+}
+
+/// `repro bench-spec`: sequential decode vs speculative decode across a
+/// grid of (draft sparsity × K).  Drafts are manufactured on the spot with
+/// the paper's own recipe — magnitude prune, short MaskLoRA retrain, merge —
+/// then each (draft, K) cell serves the same greedy `/generate` load as the
+/// target-only baseline.  Acceptance statistics come from the engines'
+/// `perp_obs_spec_*` metric families.
+fn bench_spec(args: &Args) -> Result<()> {
+    use perp::util::bench::Table;
+
+    let env = common(args)?;
+    let requests = args.usize("requests", 8)?.max(1);
+    let max_tokens = args.usize("max-tokens", 24)?.max(1);
+    let sparsities: Vec<f64> = args
+        .str("sparsities", "0.5,0.9")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<f64>().map_err(|_| anyhow::anyhow!("bad sparsity {s:?}")))
+        .collect::<Result<_>>()?;
+    let ks: Vec<usize> = args
+        .str("ks", "2,4")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<usize>().map_err(|_| anyhow::anyhow!("bad K {s:?}")))
+        .collect::<Result<_>>()?;
+    let retrain_steps = args
+        .opt_usize("retrain-steps")?
+        .map(|s| s as u64)
+        .unwrap_or(env.cfg.retrain_steps);
+    args.finish()?;
+    anyhow::ensure!(!sparsities.is_empty() && !ks.is_empty(), "empty sparsity/K grid");
+    let sw = env.rt.model(&env.cfg.model)?.cfg.spec_width;
+    for &k in &ks {
+        anyhow::ensure!(
+            k >= 1 && k < sw,
+            "K={k} outside [1, {}] (spec_width {sw})",
+            sw - 1
+        );
+    }
+
+    // -- manufacture drafts: prune -> masklora retrain -> merge -> save ----
+    let cache_dir = env.out.join("cache");
+    let cx = ctx(&env);
+    cx.dense_session(env.seed)?; // converge/cache once; engines boot from it
+    let lr = env.cfg.lr_grid.first().copied().unwrap_or(1e-3);
+    let draft_dir = env.out.join("bench_spec_drafts");
+    std::fs::create_dir_all(&draft_dir)?;
+    let mut drafts: Vec<(f64, PathBuf)> = Vec::new();
+    for &sp in &sparsities {
+        let path = draft_dir.join(format!("draft_s{:03}.ptns", (sp * 1000.0).round() as u32));
+        perp::util::logging::progress(&format!(
+            "[bench-spec] draft @ {sp:.2}: magnitude prune + masklora x{retrain_steps} + merge"
+        ));
+        let (mut s, _dense) =
+            cx.pruned_session(env.seed, Criterion::Magnitude, Pattern::Unstructured(sp))?;
+        s.retrain(Mode::MaskLora, retrain_steps, lr)?;
+        s.merge_adapters()?;
+        s.save(&path)?;
+        drafts.push((sp, path));
+    }
+
+    // -- one server, one engine per cell plus the target-only baseline -----
+    let state = Arc::new(ServeState::new(
+        "target".to_string(),
+        env.cfg.clone(),
+        cache_dir.clone(),
+        env.seed,
+    ));
+    let batch = BatchCfg { max_active: 1, max_new_default: max_tokens, min_tokens: 1 };
+    let mut cells: Vec<(f64, usize, String)> = Vec::new();
+    let mut engine_specs = vec![EngineSpec {
+        name: "target".to_string(),
+        cfg: env.cfg.clone(),
+        seed: env.seed,
+        checkpoint: None,
+        cache_dir: cache_dir.clone(),
+        batch: batch.clone(),
+        draft: None,
+        spec_k: 0,
+    }];
+    for &(sp, ref path) in &drafts {
+        for &k in &ks {
+            let name = format!("spec-s{:03}-k{k}", (sp * 1000.0).round() as u32);
+            cells.push((sp, k, name.clone()));
+            engine_specs.push(EngineSpec {
+                name,
+                cfg: env.cfg.clone(),
+                seed: env.seed,
+                checkpoint: None,
+                cache_dir: cache_dir.clone(),
+                batch: batch.clone(),
+                draft: Some(path.clone()),
+                spec_k: k,
+            });
+        }
+    }
+    for spec in engine_specs {
+        state.insert(batcher::spawn(spec)?)?;
+    }
+    let server = Server::bind(state, "127.0.0.1:0", 4)?;
+    let addr = server.addr;
+    let handle = server.spawn();
+
+    println!(
+        "bench-spec: {requests} requests x {max_tokens} tokens on {addr} \
+         (sparsities {sparsities:?}, K {ks:?})"
+    );
+    let base = bench_phase(addr, "target", requests, 1, max_tokens)?;
+    let mut phases: Vec<PhaseStats> = Vec::new();
+    for (_, _, name) in &cells {
+        phases.push(bench_phase(addr, name, requests, 1, max_tokens)?);
+    }
+    let (status, metrics) = client::get(addr, "/metrics")?;
+    anyhow::ensure!(status == 200, "GET /metrics failed ({status})");
+    handle.stop();
+
+    // `perp_obs_spec_<family>_total{model="<name>"} <value>`
+    let counter = |family: &str, model: &str| -> u64 {
+        let needle = format!("perp_obs_spec_{family}_total{{model=\"{model}\"}}");
+        metrics
+            .lines()
+            .find_map(|l| l.strip_prefix(needle.as_str()))
+            .and_then(|rest| rest.trim().parse().ok())
+            .unwrap_or(0)
+    };
+
+    let mut t = Table::new(
+        &format!("speculative vs sequential decode ({}, {requests} reqs)", env.cfg.model),
+        &["cell", "tok/s", "speedup", "accept", "rounds", "proposed"],
+    );
+    t.row(vec![
+        "target".to_string(),
+        format!("{:.1}", base.tps),
+        "1.00x".to_string(),
+        "-".to_string(),
+        "-".to_string(),
+        "-".to_string(),
+    ]);
+    let mut rows = Vec::new();
+    for ((sp, k, name), p) in cells.iter().zip(&phases) {
+        let (rounds, proposed, accepted) =
+            (counter("rounds", name), counter("proposed", name), counter("accepted", name));
+        let acceptance = accepted as f64 / proposed.max(1) as f64;
+        let speedup = p.tps / base.tps.max(1e-9);
+        t.row(vec![
+            format!("s={sp:.2} K={k}"),
+            format!("{:.1}", p.tps),
+            format!("{speedup:.2}x"),
+            format!("{:.0}%", acceptance * 100.0),
+            format!("{rounds}"),
+            format!("{proposed}"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("sparsity", Json::Num(*sp)),
+            ("k", Json::Num(*k as f64)),
+            ("tokens_per_s", Json::Num(p.tps)),
+            ("speedup", Json::Num(speedup)),
+            ("acceptance", Json::Num(acceptance)),
+            ("rounds", Json::Num(rounds as f64)),
+            ("proposed", Json::Num(proposed as f64)),
+            ("accepted", Json::Num(accepted as f64)),
+        ]));
+    }
+    t.print();
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("spec".to_string())),
+        ("model", Json::Str(env.cfg.model.clone())),
+        ("layout", Json::Str(env.cfg.layout.clone())),
+        ("requests", Json::Num(requests as f64)),
+        ("max_tokens", Json::Num(max_tokens as f64)),
+        ("retrain_steps", Json::Num(retrain_steps as f64)),
+        (
+            "target",
+            Json::obj(vec![
+                ("tokens", Json::Num(base.tokens as f64)),
+                ("wall_s", Json::Num(base.wall_s)),
+                ("tokens_per_s", Json::Num(base.tps)),
+            ]),
+        ),
+        ("cells", Json::Arr(rows)),
+    ]);
+    let path = env.out.join("bench_spec.json");
     std::fs::write(&path, report.to_string()).with_context(|| format!("writing {path:?}"))?;
     println!("wrote {path:?}");
     Ok(())

@@ -4,7 +4,7 @@
 //! spec    := elem ('|' elem)*
 //! elem    := stage | fork | seeds | agg
 //! stage   := name [ '(' arg (',' arg)* ')' ]
-//! name    := pretrain | prune | retrain | reconstruct | merge | eval | export
+//! name    := pretrain | prune | retrain | reconstruct | merge | eval | export | spec
 //! fork    := 'fork[' spec (';' spec)* ']'
 //! seeds   := 'seeds(' n ')'
 //! agg     := 'agg' [ '(' name ')' ]
@@ -23,6 +23,11 @@
 //! `retrain(mode[,steps[,lr]])`, `reconstruct(mode[,steps[,lr]])`,
 //! `eval([ppl|tasks])`, `export(path)`.  A leading `pretrain` is implied
 //! when absent — every plan starts from the (cached) dense model.
+//!
+//! `spec(sparsity[,method])` is a macro, not a stage of its own: it expands
+//! to the draft-production recipe `prune(method,sparsity)|retrain(masklora)|
+//! merge` — the checkpoint a speculative-decoding draft is made of.  Chain
+//! `|export(path)` and point `repro serve --draft path` at the result.
 //!
 //! **Fan-out forms** build a [`PlanGraph`] instead of a linear [`Plan`]:
 //! `fork[...]` runs each `;`-separated branch off the current leaves (every
@@ -72,8 +77,47 @@ fn is_agg_elem(e: &str) -> bool {
 }
 
 /// Parse one `|`-separated stage spec into stages (no implied pretrain).
+/// Macro elements (`spec(...)`) may expand to several stages each.
 pub fn parse_stages(spec: &str) -> Result<Vec<Stage>, String> {
-    split_top(spec, '|').into_iter().map(parse_stage).collect()
+    let mut stages = Vec::new();
+    for elem in split_top(spec, '|') {
+        stages.extend(parse_elem(elem)?);
+    }
+    Ok(stages)
+}
+
+/// One grammar element → one or more stages.  `spec(sparsity[,method])`
+/// expands to the draft-production recipe; everything else is a single
+/// stage via [`parse_stage`].
+fn parse_elem(s: &str) -> Result<Vec<Stage>, String> {
+    if s == "spec" || s.starts_with("spec(") {
+        return expand_spec_macro(s);
+    }
+    parse_stage(s).map(|st| vec![st])
+}
+
+/// `spec(sparsity[,method])` → `prune(method,sparsity)|retrain(masklora)|merge`.
+fn expand_spec_macro(s: &str) -> Result<Vec<Stage>, String> {
+    let args: Vec<&str> = match s.strip_prefix("spec(") {
+        None => Vec::new(), // bare `spec`
+        Some(rest) => rest
+            .strip_suffix(')')
+            .ok_or_else(|| format!("malformed stage {s:?} (unbalanced parentheses)"))?
+            .split(',')
+            .map(str::trim)
+            .filter(|a| !a.is_empty())
+            .collect(),
+    };
+    if args.len() > 2 {
+        return Err(format!("spec: too many arguments in {s:?} (max 2)"));
+    }
+    let pattern = Pattern::parse(args.first().copied().unwrap_or("0.9"))?;
+    let criterion = Criterion::parse(args.get(1).copied().unwrap_or("magnitude"))?;
+    Ok(vec![
+        Stage::Prune { criterion, pattern },
+        Stage::Retrain { mode: Mode::MaskLora, steps: None, lr: None },
+        Stage::Merge,
+    ])
 }
 
 /// Parse a spec into a runnable [`Plan`], prepending `pretrain` if absent.
@@ -146,7 +190,9 @@ fn apply_seq(mut b: GraphBuilder, elems: &[&str]) -> Result<GraphBuilder, String
             };
             b = b.aggregate(&name);
         } else {
-            b = b.stage(parse_stage(elem)?);
+            for st in parse_elem(elem)? {
+                b = b.stage(st);
+            }
         }
     }
     Ok(b)
@@ -230,7 +276,7 @@ fn parse_stage(s: &str) -> Result<Stage, String> {
             Ok(Stage::Export { path: path.to_string() })
         }
         other => Err(format!(
-            "unknown stage {other:?} (pretrain|prune|retrain|reconstruct|merge|eval|export)"
+            "unknown stage {other:?} (pretrain|prune|retrain|reconstruct|merge|eval|export|spec)"
         )),
     }
 }
@@ -312,6 +358,39 @@ mod tests {
             }
         );
         assert_eq!(p.stages[4], Stage::Export { path: "out/m.ptns".to_string() });
+    }
+
+    #[test]
+    fn spec_macro_expands_to_draft_recipe() {
+        let p = parse_plan("draft", "spec(0.9)|export(out/draft.ptns)").unwrap();
+        assert_eq!(
+            p.stages,
+            vec![
+                Stage::Pretrain,
+                Stage::Prune {
+                    criterion: Criterion::Magnitude,
+                    pattern: Pattern::Unstructured(0.9)
+                },
+                Stage::Retrain { mode: Mode::MaskLora, steps: None, lr: None },
+                Stage::Merge,
+                Stage::Export { path: "out/draft.ptns".to_string() },
+            ]
+        );
+        p.validate().unwrap();
+
+        // explicit method, and the macro works inside graph specs too
+        let p = parse_plan("d2", "spec(0.5,wanda)|eval(ppl)").unwrap();
+        assert_eq!(
+            p.stages[1],
+            Stage::Prune { criterion: Criterion::Wanda, pattern: Pattern::Unstructured(0.5) }
+        );
+        let g = parse_graph("g", "spec(0.9)|eval(ppl)|seeds(2)").unwrap();
+        g.validate().unwrap();
+        // 2 seeds × (pretrain|prune|retrain|merge|eval)
+        assert_eq!(g.stage_count(), 2 * 5);
+
+        assert!(parse_stages("spec(0.9,magnitude,extra)").is_err());
+        assert!(parse_stages("spec(nonsense)").is_err());
     }
 
     #[test]

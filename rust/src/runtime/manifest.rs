@@ -111,6 +111,11 @@ pub struct ModelCfg {
     /// (`prefill` / `decode_step`) — the lock-step batch width of the
     /// dynamic request batcher.
     pub serve_slots: usize,
+    /// Token width of the speculative `verify_step` executable: the target
+    /// model scores up to `spec_width` positions per stream in one pass, so
+    /// the largest usable draft length is `spec_width - 1` (one slot goes
+    /// to the already-committed input token).
+    pub spec_width: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -232,6 +237,7 @@ impl ModelCfg {
             eval_batch: 8,
             calib_rows: 512,
             serve_slots: 8,
+            spec_width: 8,
         };
         Some(match name {
             "gpt-nano" => ModelCfg {
@@ -581,6 +587,33 @@ impl ModelManifest {
                 }))
                 .collect(),
         );
+        // `verify_step` scores up to `spec_width` consecutive tokens per
+        // stream in one pass over the target KV cache — the batched check of
+        // a speculative draft.  `klen[b]` carries the actual token count for
+        // slot b (rows beyond it are padding); logits row j scores position
+        // pos[b]+j, and the server commits/rolls back via the returned
+        // per-position K/V rows.
+        let sw = cfg.spec_width;
+        add(
+            "verify_step",
+            base.iter()
+                .cloned()
+                .chain(kv_planes.iter().cloned())
+                .chain([
+                    io_i32("tokens", &[slots, sw]),
+                    io_i32("pos", &[slots]),
+                    io_i32("klen", &[slots]),
+                ])
+                .collect(),
+            std::iter::once(io("logits", &[slots, sw, cfg.vocab]))
+                .chain((0..cfg.n_layers).flat_map(|i| {
+                    [
+                        io(format!("knew::h{i}"), &[slots, sw, nh, dh]),
+                        io(format!("vnew::h{i}"), &[slots, sw, nh, dh]),
+                    ]
+                }))
+                .collect(),
+        );
 
         ModelManifest { cfg, params, prunable, taps, adapters, trainable, executables }
     }
@@ -647,6 +680,7 @@ fn parse_model(j: &Json) -> Result<ModelManifest> {
         calib_rows: c.req("calib_rows").as_usize().unwrap(),
         // older aot.py manifests predate the serving executables
         serve_slots: c.get("serve_slots").and_then(Json::as_usize).unwrap_or(8),
+        spec_width: c.get("spec_width").and_then(Json::as_usize).unwrap_or(8),
     };
     let params = j
         .req("params")
@@ -754,6 +788,7 @@ mod tests {
         assert!(nano.exec("recon_full_32x32").is_ok());
         assert!(nano.exec("prefill").is_ok());
         assert!(nano.exec("decode_step").is_ok());
+        assert!(nano.exec("verify_step").is_ok());
         assert!(nano.exec("nope").is_err());
         assert!(m.model("nope").is_err());
     }
@@ -783,6 +818,18 @@ mod tests {
         let tok = d.inputs.iter().find(|i| i.name == "tokens").unwrap();
         assert_eq!(tok.dtype, DType::I32);
         assert_eq!(tok.shape, vec![slots]);
+        let v = mm.exec("verify_step").unwrap();
+        // decode_step's planes plus a klen vector; logits widen to spec_width
+        assert_eq!(
+            v.inputs.len(),
+            mm.params.len() + mm.prunable.len() + 2 * cfg.n_layers + 3
+        );
+        assert_eq!(v.outputs.len(), 1 + 2 * cfg.n_layers);
+        assert_eq!(v.outputs[0].shape, vec![slots, cfg.spec_width, cfg.vocab]);
+        let vt = v.inputs.iter().find(|i| i.name == "tokens").unwrap();
+        assert_eq!(vt.shape, vec![slots, cfg.spec_width]);
+        let vk = v.outputs.iter().find(|o| o.name == "knew::h1").unwrap();
+        assert_eq!(vk.shape, vec![slots, cfg.spec_width, nh, dh]);
     }
 
     #[test]

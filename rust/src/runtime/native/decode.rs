@@ -187,7 +187,7 @@ pub(super) fn decode_step(
 }
 
 /// Norm forward without keeping the backward cache.
-fn norm_apply(gi: &GraphIn, prefix: &str, x: &Tensor) -> Tensor {
+pub(super) fn norm_apply(gi: &GraphIn, prefix: &str, x: &Tensor) -> Tensor {
     let scale = gi.p(&format!("{prefix}_scale"));
     if gi.mm.cfg.norm == "layernorm" {
         let (y, cache) = ops::layernorm_fwd(x, scale, gi.p(&format!("{prefix}_bias")));
@@ -204,7 +204,7 @@ fn norm_apply(gi: &GraphIn, prefix: &str, x: &Tensor) -> Tensor {
 /// adapters are folded before serving), routed through the layout seam: at
 /// serve-time sparsities the CSR form reads only surviving weights, which
 /// is where the decode path's memory-traffic reduction comes from.
-fn linear_apply(gi: &GraphIn, base: &str, x: &Tensor) -> Tensor {
+pub(super) fn linear_apply(gi: &GraphIn, base: &str, x: &Tensor) -> Tensor {
     let wname = format!("{base}_w");
     let mut y = graph::masked_fwd(gi, &wname, x);
     if gi.mm.cfg.use_bias {
@@ -288,7 +288,7 @@ fn qkv_run_heads(
 /// per-column loop.  Bitwise-identical to the unfused path because every
 /// head run reuses the same per-output-element kernels (`dots_range` /
 /// the masked inner loop) the separate calls would hit.
-fn fused_qkv(gi: &GraphIn, pfx: &str, x: &Tensor) -> Option<(Tensor, Tensor, Tensor)> {
+pub(super) fn fused_qkv(gi: &GraphIn, pfx: &str, x: &Tensor) -> Option<(Tensor, Tensor, Tensor)> {
     let names = [
         format!("{pfx}attn_q_w"),
         format!("{pfx}attn_k_w"),

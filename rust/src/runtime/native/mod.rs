@@ -19,6 +19,7 @@
 pub mod decode;
 pub mod graph;
 pub mod ops;
+pub mod verify;
 
 use std::collections::{BTreeMap, BTreeSet, HashSet};
 use std::sync::Mutex;
@@ -140,6 +141,7 @@ impl Backend for NativeBackend {
             "capture_inputs" => capture(mm, &f32s, &i32s, sv, false),
             "prefill" => decode::prefill(mm, &f32s, &i32s, sv),
             "decode_step" => decode::decode_step(mm, &f32s, &i32s, sv),
+            "verify_step" => verify::verify_step(mm, &f32s, &i32s, sv),
             e if e.starts_with("train_") => {
                 train(mm, &f32s, &i32s, sv, e.strip_prefix("train_").unwrap())
             }

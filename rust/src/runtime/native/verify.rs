@@ -1,0 +1,233 @@
+//! Speculative `verify_step`: score up to `spec_width` consecutive tokens
+//! per stream in one pass over the target KV cache.
+//!
+//! The batcher feeds each spec stream its already-committed last token plus
+//! the draft's proposals — `klen[b]` tokens occupying absolute positions
+//! `pos[b] .. pos[b]+klen[b]` — and this executable returns the target's
+//! logits for *every* one of those positions, so the longest accepted
+//! prefix falls out of one forward instead of `klen` sequential
+//! `decode_step` calls.  Rows are compacted across streams exactly like
+//! `decode_step` compacts active slots: a round with two streams of three
+//! proposals each runs the per-layer linears over 8 rows, not
+//! `slots * spec_width`.
+//!
+//! Attention is the only stage where the multi-token shape matters: the
+//! query at absolute position `pos[b]+jq` scores the cache rows `0..pos[b]`
+//! plus this pass's own fresh K rows at `pos[b]..=pos[b]+jq` (causal within
+//! the speculated window).  Scores accumulate in ascending position order
+//! with the same running-max softmax as `decode::attend`, and every linear
+//! reuses `decode`'s per-output-element kernels, so each logits row is
+//! bitwise what a sequential greedy `decode_step` at that position would
+//! produce — the foundation of the spec engine's exactness guarantee,
+//! pinned end-to-end by `tests/decode_parity.rs`.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+use rayon::prelude::*;
+
+use crate::runtime::manifest::ModelManifest;
+use crate::runtime::Outputs;
+use crate::tensor::{linalg, pool, Tensor};
+
+use super::decode::{fused_qkv, linear_apply, norm_apply};
+use super::graph::{GraphIn, ModeKind, SparseView};
+use super::ops;
+
+pub(super) fn verify_step(
+    mm: &ModelManifest,
+    f32s: &BTreeMap<&str, &Tensor>,
+    i32s: &BTreeMap<&str, (&[usize], &[i32])>,
+    sparse: SparseView,
+) -> Result<Outputs> {
+    let cfg = &mm.cfg;
+    let (nh, dh, d) = (cfg.n_heads, cfg.d_head(), cfg.d_model);
+    let (slots, seq, vocab, sw) = (cfg.serve_slots, cfg.seq_len, cfg.vocab, cfg.spec_width);
+    let (params, masks) = super::gather_params(mm, f32s);
+    let gi = GraphIn {
+        mm,
+        params: &params,
+        masks: &masks,
+        adapters: None,
+        mode: ModeKind::Subset,
+        sparse,
+    };
+    let (_, toks) = i32s["tokens"];
+    let (_, pos) = i32s["pos"];
+    let (_, klen) = i32s["klen"];
+
+    // Compact (slot, offset) rows: row r below belongs to stream
+    // `rows[r].0` at window offset `rows[r].1`.  `base[b]` is slot b's
+    // first compacted row — attention uses it to reach the stream's own
+    // fresh K/V rows for positions at or beyond `pos[b]`.
+    let mut rows: Vec<(usize, usize)> = Vec::new();
+    let mut base = vec![usize::MAX; slots];
+    for b in 0..slots {
+        let (p, kl) = (pos[b], klen[b]);
+        if p < 0 || kl < 1 {
+            continue;
+        }
+        let (p, kl) = (p as usize, (kl as usize).min(sw));
+        if p + kl > seq {
+            continue; // would overrun the cache plane: slot sits this round out
+        }
+        base[b] = rows.len();
+        rows.extend((0..kl).map(|j| (b, j)));
+    }
+    crate::count!("decode.verify_steps");
+    crate::count!("decode.verify_rows", rows.len() as u64);
+
+    let mut out_logits = pool::zeroed(slots * sw * vocab);
+    let mut knew: Vec<Vec<f32>> =
+        (0..cfg.n_layers).map(|_| pool::zeroed(slots * sw * nh * dh)).collect();
+    let mut vnew: Vec<Vec<f32>> =
+        (0..cfg.n_layers).map(|_| pool::zeroed(slots * sw * nh * dh)).collect();
+
+    if !rows.is_empty() {
+        let na = rows.len();
+        let embt = gi.p("embed_tokens");
+        let post = gi.p("embed_pos");
+        let mut x = pool::zeroed(na * d);
+        for (r, &(b, j)) in rows.iter().enumerate() {
+            let tok = (toks[b * sw + j].max(0) as usize).min(vocab - 1);
+            let p = pos[b] as usize + j;
+            let erow = &embt.data()[tok * d..(tok + 1) * d];
+            let prow = &post.data()[p * d..(p + 1) * d];
+            for c in 0..d {
+                x[r * d + c] = erow[c] + prow[c];
+            }
+        }
+        let mut cur = Tensor::new(&[na, d], x);
+
+        for i in 0..cfg.n_layers {
+            let pfx = format!("h{i}_");
+            let h1 = norm_apply(&gi, &format!("{pfx}ln1"), &cur);
+            let (q, k, v) = match fused_qkv(&gi, &pfx, &h1) {
+                Some(heads) => heads,
+                None => (
+                    linear_apply(&gi, &format!("{pfx}attn_q"), &h1),
+                    linear_apply(&gi, &format!("{pfx}attn_k"), &h1),
+                    linear_apply(&gi, &format!("{pfx}attn_v"), &h1),
+                ),
+            };
+            pool::recycle(h1);
+            for (r, &(b, j)) in rows.iter().enumerate() {
+                for hd in 0..nh {
+                    let src = r * d + hd * dh;
+                    let dst = ((b * sw + j) * nh + hd) * dh;
+                    knew[i][dst..dst + dh].copy_from_slice(&k.data()[src..src + dh]);
+                    vnew[i][dst..dst + dh].copy_from_slice(&v.data()[src..src + dh]);
+                }
+            }
+            let kc = f32s[format!("k::h{i}").as_str()];
+            let vc = f32s[format!("v::h{i}").as_str()];
+            let merged = attend_multi(&q, &k, &v, kc, vc, &rows, &base, pos, nh, dh, seq);
+            pool::recycle(q);
+            pool::recycle(k);
+            pool::recycle(v);
+            let o = linear_apply(&gi, &format!("{pfx}attn_o"), &merged);
+            pool::recycle(merged);
+            let res_mid = cur.add(&o);
+            pool::recycle(cur);
+            pool::recycle(o);
+            let h2 = norm_apply(&gi, &format!("{pfx}ln2"), &res_mid);
+            let fc = linear_apply(&gi, &format!("{pfx}mlp_fc"), &h2);
+            pool::recycle(h2);
+            let g = ops::gelu(&fc);
+            pool::recycle(fc);
+            let proj = linear_apply(&gi, &format!("{pfx}mlp_proj"), &g);
+            pool::recycle(g);
+            cur = res_mid.add(&proj);
+            pool::recycle(res_mid);
+            pool::recycle(proj);
+        }
+
+        let hf = norm_apply(&gi, "final_ln", &cur);
+        pool::recycle(cur);
+        let logits = linalg::matmul_nt(&hf, gi.p("head_w"));
+        pool::recycle(hf);
+        for (r, &(b, j)) in rows.iter().enumerate() {
+            let dst = (b * sw + j) * vocab;
+            out_logits[dst..dst + vocab]
+                .copy_from_slice(&logits.data()[r * vocab..(r + 1) * vocab]);
+        }
+        pool::recycle(logits);
+    }
+
+    let mut values =
+        vec![("logits".to_string(), Tensor::new(&[slots, sw, vocab], out_logits))];
+    for (i, (kn, vn)) in knew.into_iter().zip(vnew).enumerate() {
+        values.push((format!("knew::h{i}"), Tensor::new(&[slots, sw, nh, dh], kn)));
+        values.push((format!("vnew::h{i}"), Tensor::new(&[slots, sw, nh, dh], vn)));
+    }
+    Ok(Outputs { values })
+}
+
+/// Causal attention across the speculated window.  Query row `r = (b, jq)`
+/// sits at absolute position `pos[b]+jq` and scores positions
+/// `0..=pos[b]+jq`: cache rows below `pos[b]`, this pass's fresh K/V rows
+/// (compacted at `base[b] + (idx - pos[b])`) at or above it.  Position
+/// order, running-max softmax, and the j-ascending weighted-V accumulation
+/// mirror `decode::attend` exactly — same dots, same order, same bits.
+#[allow(clippy::too_many_arguments)]
+fn attend_multi(
+    q: &Tensor,
+    knew: &Tensor,
+    vnew: &Tensor,
+    kc: &Tensor,
+    vc: &Tensor,
+    rows: &[(usize, usize)],
+    base: &[usize],
+    pos: &[i32],
+    nh: usize,
+    dh: usize,
+    seq: usize,
+) -> Tensor {
+    let na = rows.len();
+    let d = nh * dh;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = pool::zeroed(na * d);
+    let (qd, knd, vnd) = (q.data(), knew.data(), vnew.data());
+    let (kcd, vcd) = (kc.data(), vc.data());
+    out.par_chunks_mut(d).enumerate().for_each(|(r, orow)| {
+        let (b, jq) = rows[r];
+        let p = pos[b] as usize; // cache rows 0..p valid; window starts at p
+        let ap = p + jq; // absolute query position
+        for hd in 0..nh {
+            let qv = &qd[r * d + hd * dh..r * d + (hd + 1) * dh];
+            let cbase = b * nh * seq * dh + hd * seq * dh;
+            let mut row = vec![0.0f32; ap + 1];
+            let mut mx = f32::NEG_INFINITY;
+            for (j, rj) in row.iter_mut().enumerate() {
+                let kj: &[f32] = if j < p {
+                    &kcd[cbase + j * dh..cbase + (j + 1) * dh]
+                } else {
+                    let nr = base[b] + (j - p);
+                    &knd[nr * d + hd * dh..nr * d + (hd + 1) * dh]
+                };
+                let dot: f32 = qv.iter().zip(kj).map(|(&a, &c)| a * c).sum();
+                *rj = dot * scale;
+                mx = mx.max(*rj);
+            }
+            let mut denom = 0.0f32;
+            for rj in row.iter_mut() {
+                *rj = (*rj - mx).exp();
+                denom += *rj;
+            }
+            let orow_h = &mut orow[hd * dh..(hd + 1) * dh];
+            for (j, &rj) in row.iter().enumerate() {
+                let pj = rj / denom;
+                let vj: &[f32] = if j < p {
+                    &vcd[cbase + j * dh..cbase + (j + 1) * dh]
+                } else {
+                    let nr = base[b] + (j - p);
+                    &vnd[nr * d + hd * dh..nr * d + (hd + 1) * dh]
+                };
+                for (o, &vv) in orow_h.iter_mut().zip(vj) {
+                    *o += pj * vv;
+                }
+            }
+        }
+    });
+    Tensor::new(&[na, d], out)
+}

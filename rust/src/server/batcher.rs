@@ -37,6 +37,7 @@ use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 use super::kv::{self, KvCache};
+use super::spec::{RoundInput, SpecEngine};
 
 // ---------------------------------------------------------------------------
 // Requests and results.
@@ -111,6 +112,17 @@ pub struct EngineMetrics {
     pub queued: AtomicU64,
     pub active: AtomicU64,
     pub peak_active: AtomicU64,
+    /// Speculative rounds (draft + verify pairs) — 0 when no draft is
+    /// configured.
+    pub spec_rounds: AtomicU64,
+    /// Batched draft decode steps across all rounds.
+    pub spec_draft_steps: AtomicU64,
+    pub spec_proposed: AtomicU64,
+    pub spec_accepted: AtomicU64,
+    pub spec_rejected: AtomicU64,
+    /// Rounds × streams where some proposal was refused and the KV planes
+    /// rolled back.
+    pub spec_rollbacks: AtomicU64,
 }
 
 /// Static facts about a spawned engine (for `/models` and `/healthz`).
@@ -126,6 +138,12 @@ pub struct EngineInfo {
     /// (CSR/BSR, exact or quantised; 0 = none routed).
     pub sparse_bytes: usize,
     pub checkpoint: Option<String>,
+    /// Draft checkpoint when speculative decoding is on.
+    pub draft: Option<String>,
+    /// Draft sparsity (0 when no draft).
+    pub draft_sparsity: f64,
+    /// Effective draft length (0 = speculation disabled).
+    pub spec_k: usize,
 }
 
 /// Everything needed to bring one model variant up.
@@ -139,6 +157,12 @@ pub struct EngineSpec {
     /// Dense-checkpoint cache directory (`<out>/cache`).
     pub cache_dir: PathBuf,
     pub batch: BatchCfg,
+    /// Draft checkpoint for speculative decoding (same architecture as the
+    /// target; typically a `prune|retrain|merge` product).  `None` = plain
+    /// decoding.
+    pub draft: Option<PathBuf>,
+    /// Draft tokens per round; clamped to `spec_width - 1`.
+    pub spec_k: usize,
 }
 
 pub struct EngineHandle {
@@ -248,8 +272,27 @@ fn engine_main(
             return;
         }
     };
+    // the draft shares the backend and the architecture; only its weights
+    // (typically a prune|retrain|merge product) differ
+    let draft = match &spec.draft {
+        None => None,
+        Some(path) => {
+            match Session::from_checkpoint(backend.as_ref(), spec.cfg.clone(), spec.seed, path) {
+                Ok(d) => Some(d),
+                Err(e) => {
+                    let _ = ready.send(Err(format!("loading draft {}: {e:#}", path.display())));
+                    return;
+                }
+            }
+        }
+    };
     let cfg = &s.mm.cfg;
     let max_active = spec.batch.max_active.clamp(1, cfg.serve_slots);
+    let spec_k = if draft.is_some() {
+        spec.spec_k.clamp(1, cfg.spec_width.saturating_sub(1).max(1))
+    } else {
+        0
+    };
     let info = EngineInfo {
         total_params: s.mm.total_params(),
         weight_sparsity: s.params.weight_sparsity(&s.mm),
@@ -259,19 +302,30 @@ fn engine_main(
         kv_bytes: kv::kv_bytes(cfg),
         sparse_bytes: s.sparse.compressed_bytes(),
         checkpoint: spec.checkpoint.as_ref().map(|p| p.display().to_string()),
+        draft: spec.draft.as_ref().map(|p| p.display().to_string()),
+        draft_sparsity: draft.as_ref().map_or(0.0, |d| d.params.weight_sparsity(&d.mm)),
+        spec_k,
     };
     if ready.send(Ok(info)).is_err() {
         return; // spawner gave up
     }
     crate::info!(
-        "engine {}: serving {} (sparsity {:.3}, {} slots, max_active {})",
+        "engine {}: serving {} (sparsity {:.3}, {} slots, max_active {}{})",
         spec.name,
         cfg.name,
         s.params.weight_sparsity(&s.mm),
         cfg.serve_slots,
-        max_active
+        max_active,
+        match &draft {
+            Some(d) => format!(
+                ", spec k={} draft sparsity {:.3}",
+                spec_k,
+                d.params.weight_sparsity(&d.mm)
+            ),
+            None => String::new(),
+        }
     );
-    run_loop(&spec, &s, rx, &metrics, max_active);
+    run_loop(&spec, &s, draft.as_ref(), spec_k, rx, &metrics, max_active);
 }
 
 struct Stream {
@@ -289,6 +343,8 @@ struct Stream {
 fn run_loop(
     spec: &EngineSpec,
     s: &Session,
+    draft: Option<&Session>,
+    spec_k: usize,
     rx: Receiver<Work>,
     metrics: &EngineMetrics,
     max_active: usize,
@@ -296,9 +352,15 @@ fn run_loop(
     let mm = &s.mm;
     let cfg = &mm.cfg;
     let (slots, seq, vocab) = (cfg.serve_slots, cfg.seq_len, cfg.vocab);
+    let sw = cfg.spec_width;
     let eos = s.tokenizer.eos();
     let min_tokens = spec.batch.min_tokens;
     let mut cache = KvCache::new(cfg);
+    // greedy streams run draft-verify rounds through this; sampling
+    // streams (and everything when no draft is loaded) take plain decode
+    let mut speceng: Option<SpecEngine> =
+        if spec_k > 0 && draft.is_some() { Some(SpecEngine::new(cfg, spec_k)) } else { None };
+    let spec_tokens_shape = [slots, sw];
     let mut streams: Vec<Option<Stream>> = (0..slots).map(|_| None).collect();
     let mut pending: VecDeque<GenRequest> = VecDeque::new();
     type ScoreReply = Sender<std::result::Result<ScoreResult, String>>;
@@ -393,6 +455,50 @@ fn run_loop(
                             cache.adopt_prefill(slot, layer, k, v);
                         }
                     }
+                    // draft prefill for the greedy admits — same prompts,
+                    // same slot indices, into the spec engine's planes.
+                    // A failure only downgrades those streams to plain
+                    // decode; the target path is unaffected.
+                    if let (Some(sp), Some(ds)) = (speceng.as_mut(), draft) {
+                        let greedy: Vec<usize> = admitted
+                            .iter()
+                            .copied()
+                            .filter(|&sl| {
+                                streams[sl].as_ref().is_some_and(|st| st.temperature <= 0.0)
+                            })
+                            .collect();
+                        if !greedy.is_empty() {
+                            let run = {
+                                let _sp = crate::span!("spec", "draft_prefill")
+                                    .arg("admitted", greedy.len());
+                                let feed = ds
+                                    .feed()
+                                    .ints("tokens", &prefill_shape, &ptoks)
+                                    .ints("lens", &slot_shape, &lens);
+                                ds.rt.run(&cfg.name, "prefill", &feed)
+                            };
+                            match run {
+                                Err(e) => {
+                                    crate::warn!(
+                                        "draft prefill failed (streams fall back to plain decode): {e:#}"
+                                    );
+                                }
+                                Ok(dout) => {
+                                    let dc = sp.draft_cache();
+                                    for layer in 0..dc.n_layers() {
+                                        let k = dout.get(&format!("k::h{layer}"));
+                                        let v = dout.get(&format!("v::h{layer}"));
+                                        for &slot in &greedy {
+                                            dc.adopt_prefill(slot, layer, k, v);
+                                        }
+                                    }
+                                    for &slot in &greedy {
+                                        sp.admit(slot, lens[slot] as usize);
+                                    }
+                                }
+                            }
+                        }
+                    }
                     let logits = out.get("logits");
                     for &slot in &admitted {
                         let st = streams[slot].as_mut().expect("just admitted");
@@ -407,6 +513,9 @@ fn run_loop(
                             .gen_tokens
                             .fetch_add((st.out.len() - before) as u64, Ordering::Relaxed);
                         if let Some(reason) = done {
+                            if let Some(sp) = speceng.as_mut() {
+                                sp.release(slot);
+                            }
                             finish_stream(&mut streams, slot, &mut cache, &s.tokenizer, reason, metrics);
                         }
                     }
@@ -423,18 +532,23 @@ fn run_loop(
         }
 
         // ---- 4. one lock-step decode over the active streams -----------
+        // Spec-tracked streams (greedy, draft prefill adopted) take a
+        // draft-verify round; everything else takes the plain decode step.
+        // Both batches coexist in one loop iteration, so sampling streams
+        // keep continuous batching while greedy ones speculate.
         if active == 0 {
             continue;
         }
+        let mut spec_inputs: Vec<RoundInput> = Vec::new();
         for b in 0..slots {
-            match &streams[b] {
-                Some(st) => {
+            step_tokens[b] = 0;
+            step_pos[b] = -1;
+            if let Some(st) = &streams[b] {
+                if speceng.as_ref().is_some_and(|sp| sp.tracks(b)) {
+                    spec_inputs.push(RoundInput { slot: b, pos: st.pos, last: st.last });
+                } else {
                     step_tokens[b] = st.last;
                     step_pos[b] = st.pos as i32;
-                }
-                None => {
-                    step_tokens[b] = 0;
-                    step_pos[b] = -1;
                 }
             }
         }
@@ -445,53 +559,142 @@ fn run_loop(
             reg.observe("serve.batch.fill", active as f64);
             reg.observe("serve.kv.occupied", cache.occupied() as f64);
         }
-        let run = {
-            let _sp = crate::span!("serve", "decode_step").arg("active", active);
-            let mut feed = s
-                .feed()
-                .ints("tokens", &slot_shape, &step_tokens)
-                .ints("pos", &slot_shape, &step_pos);
-            for layer in 0..cache.n_layers() {
-                feed = feed
-                    .owned_key(format!("k::h{layer}"), &cache.k[layer])
-                    .owned_key(format!("v::h{layer}"), &cache.v[layer]);
-            }
-            s.rt.run(&cfg.name, "decode_step", &feed)
-        };
-        match run {
-            Err(e) => {
-                crate::warn!("decode_step failed: {e:#}");
-                for b in 0..slots {
-                    if streams[b].is_some() {
-                        streams[b] = None;
-                        cache.release(b);
-                    }
-                }
-            }
-            Ok(out) => {
-                metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+        if step_pos.iter().any(|&p| p >= 0) {
+            let run = {
+                let _sp = crate::span!("serve", "decode_step").arg("active", active);
+                let mut feed = s
+                    .feed()
+                    .ints("tokens", &slot_shape, &step_tokens)
+                    .ints("pos", &slot_shape, &step_pos);
                 for layer in 0..cache.n_layers() {
-                    let kn = out.get(&format!("knew::h{layer}"));
-                    let vn = out.get(&format!("vnew::h{layer}"));
+                    feed = feed
+                        .owned_key(format!("k::h{layer}"), &cache.k[layer])
+                        .owned_key(format!("v::h{layer}"), &cache.v[layer]);
+                }
+                s.rt.run(&cfg.name, "decode_step", &feed)
+            };
+            match run {
+                Err(e) => {
+                    crate::warn!("decode_step failed: {e:#}");
                     for b in 0..slots {
-                        if let Some(st) = &streams[b] {
-                            cache.write_new(b, st.pos, layer, kn, vn);
+                        if step_pos[b] >= 0 && streams[b].is_some() {
+                            streams[b] = None;
+                            cache.release(b);
                         }
                     }
                 }
-                let logits = out.get("logits");
-                for b in 0..slots {
-                    let Some(st) = streams[b].as_mut() else { continue };
-                    st.pos += 1;
-                    let tok =
-                        sample(&logits.data()[b * vocab..(b + 1) * vocab], st.temperature, &mut rng);
-                    let before = st.out.len();
-                    let done = advance(st, tok, eos, min_tokens, seq);
-                    metrics
-                        .gen_tokens
-                        .fetch_add((st.out.len() - before) as u64, Ordering::Relaxed);
-                    if let Some(reason) = done {
-                        finish_stream(&mut streams, b, &mut cache, &s.tokenizer, reason, metrics);
+                Ok(out) => {
+                    metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+                    for layer in 0..cache.n_layers() {
+                        let kn = out.get(&format!("knew::h{layer}"));
+                        let vn = out.get(&format!("vnew::h{layer}"));
+                        for b in 0..slots {
+                            if step_pos[b] < 0 {
+                                continue;
+                            }
+                            if let Some(st) = &streams[b] {
+                                cache.write_new(b, st.pos, layer, kn, vn);
+                            }
+                        }
+                    }
+                    let logits = out.get("logits");
+                    for b in 0..slots {
+                        if step_pos[b] < 0 {
+                            continue;
+                        }
+                        let Some(st) = streams[b].as_mut() else { continue };
+                        st.pos += 1;
+                        let tok = sample(
+                            &logits.data()[b * vocab..(b + 1) * vocab],
+                            st.temperature,
+                            &mut rng,
+                        );
+                        let before = st.out.len();
+                        let done = advance(st, tok, eos, min_tokens, seq);
+                        metrics
+                            .gen_tokens
+                            .fetch_add((st.out.len() - before) as u64, Ordering::Relaxed);
+                        if let Some(reason) = done {
+                            finish_stream(&mut streams, b, &mut cache, &s.tokenizer, reason, metrics);
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- 5. one speculative round over the spec-tracked streams ----
+        if let (Some(sp), Some(ds), false) =
+            (speceng.as_mut(), draft, spec_inputs.is_empty())
+        {
+            let round = sp.round(
+                &mut cache,
+                &spec_inputs,
+                |dc, toks, pos| {
+                    let mut feed = ds
+                        .feed()
+                        .ints("tokens", &slot_shape, toks)
+                        .ints("pos", &slot_shape, pos);
+                    for layer in 0..dc.n_layers() {
+                        feed = feed
+                            .owned_key(format!("k::h{layer}"), &dc.k[layer])
+                            .owned_key(format!("v::h{layer}"), &dc.v[layer]);
+                    }
+                    ds.rt.run(&cfg.name, "decode_step", &feed)
+                },
+                |tc, toks, pos, klen| {
+                    let mut feed = s
+                        .feed()
+                        .ints("tokens", &spec_tokens_shape, toks)
+                        .ints("pos", &slot_shape, pos)
+                        .ints("klen", &slot_shape, klen);
+                    for layer in 0..tc.n_layers() {
+                        feed = feed
+                            .owned_key(format!("k::h{layer}"), &tc.k[layer])
+                            .owned_key(format!("v::h{layer}"), &tc.v[layer]);
+                    }
+                    s.rt.run(&cfg.name, "verify_step", &feed)
+                },
+            );
+            match round {
+                Err(e) => {
+                    crate::warn!("spec round failed: {e:#}");
+                    for inp in &spec_inputs {
+                        if streams[inp.slot].is_some() {
+                            streams[inp.slot] = None;
+                            sp.release(inp.slot);
+                            cache.release(inp.slot);
+                        }
+                    }
+                }
+                Ok((results, stats)) => {
+                    metrics.spec_rounds.fetch_add(1, Ordering::Relaxed);
+                    metrics.spec_draft_steps.fetch_add(stats.draft_steps, Ordering::Relaxed);
+                    metrics.spec_proposed.fetch_add(stats.proposed, Ordering::Relaxed);
+                    metrics.spec_accepted.fetch_add(stats.accepted, Ordering::Relaxed);
+                    metrics.spec_rejected.fetch_add(stats.rejected, Ordering::Relaxed);
+                    metrics.spec_rollbacks.fetch_add(stats.rollbacks, Ordering::Relaxed);
+                    for r in results {
+                        let Some(st) = streams[r.slot].as_mut() else { continue };
+                        let p = st.pos;
+                        let before = st.out.len();
+                        let mut finished = None;
+                        for (i, &tok) in r.committed.iter().enumerate() {
+                            // valid cache rows after token i becomes
+                            // context — keeps advance's cache-full check
+                            // firing exactly where plain decode would
+                            st.pos = p + i + 1;
+                            if let Some(reason) = advance(st, tok, eos, min_tokens, seq) {
+                                finished = Some(reason);
+                                break;
+                            }
+                        }
+                        metrics
+                            .gen_tokens
+                            .fetch_add((st.out.len() - before) as u64, Ordering::Relaxed);
+                        if let Some(reason) = finished {
+                            sp.release(r.slot);
+                            finish_stream(&mut streams, r.slot, &mut cache, &s.tokenizer, reason, metrics);
+                        }
                     }
                 }
             }

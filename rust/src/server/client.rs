@@ -1,6 +1,11 @@
 //! Minimal blocking HTTP/1.1 client — just enough to drive the serving
-//! endpoints from `repro bench-serve` and the integration tests.  One
-//! request per connection, mirroring the server's `Connection: close`.
+//! endpoints from `repro bench-serve` and the integration tests.
+//!
+//! Two flavors: the one-shot [`request`]/[`get`]/[`post_json`] helpers
+//! (`Connection: close`, read-to-EOF — fine for occasional calls), and the
+//! persistent [`Conn`] which keeps one keep-alive socket open across
+//! requests, reading `Content-Length`-bounded bodies.  Load generators and
+//! pollers use `Conn` so they stop paying per-request TCP setup.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -55,4 +60,122 @@ pub fn post_json(addr: SocketAddr, path: &str, body: &Json) -> Result<(u16, Json
     let parsed = Json::parse(&text)
         .map_err(|e| anyhow::anyhow!("non-json response ({status}): {e} — body {text:?}"))?;
     Ok((status, parsed))
+}
+
+/// A persistent keep-alive connection.  Lazily (re)connects: the first
+/// request dials, later ones reuse the socket, and an IO failure mid-cycle
+/// (server reaped an idle connection, process restarted) retries once on a
+/// fresh socket before surfacing the error.
+pub struct Conn {
+    addr: SocketAddr,
+    stream: Option<TcpStream>,
+}
+
+impl Conn {
+    pub fn new(addr: SocketAddr) -> Conn {
+        Conn { addr, stream: None }
+    }
+
+    fn connect(&mut self) -> Result<&mut TcpStream> {
+        if self.stream.is_none() {
+            let s = TcpStream::connect(self.addr)
+                .with_context(|| format!("connecting {}", self.addr))?;
+            let _ = s.set_read_timeout(Some(READ_TIMEOUT));
+            self.stream = Some(s);
+        }
+        Ok(self.stream.as_mut().expect("just connected"))
+    }
+
+    /// One request/response cycle on the persistent socket.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, String)> {
+        match self.try_cycle(method, path, body) {
+            Ok(r) => Ok(r),
+            Err(_) => {
+                // stale socket (idle-reaped or the server bounced): one
+                // fresh-connection retry, then give up honestly
+                self.stream = None;
+                self.try_cycle(method, path, body)
+            }
+        }
+    }
+
+    fn try_cycle(&mut self, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+        let addr = self.addr;
+        let stream = self.connect()?;
+        let body = body.unwrap_or("");
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            body.len()
+        );
+        let cycle = (|| -> Result<(u16, String)> {
+            stream.write_all(head.as_bytes())?;
+            stream.write_all(body.as_bytes())?;
+            read_response(stream)
+        })();
+        if cycle.is_err() {
+            self.stream = None; // never reuse a half-consumed socket
+        }
+        cycle
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<(u16, String)> {
+        self.request("GET", path, None)
+    }
+
+    /// POST a JSON value and parse the JSON response body.
+    pub fn post_json(&mut self, path: &str, body: &Json) -> Result<(u16, Json)> {
+        let (status, text) = self.request("POST", path, Some(&body.to_string()))?;
+        let parsed = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("non-json response ({status}): {e} — body {text:?}"))?;
+        Ok((status, parsed))
+    }
+}
+
+/// Read one keep-alive response: headers, then exactly `Content-Length`
+/// body bytes (the server always sends the header).
+fn read_response(stream: &mut TcpStream) -> Result<(u16, String)> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut tmp = [0u8; 4096];
+    let header_end = loop {
+        let n = stream.read(&mut tmp).context("reading response head")?;
+        if n == 0 {
+            bail!("connection closed mid-response");
+        }
+        buf.extend_from_slice(&tmp[..n]);
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos;
+        }
+    };
+    let head = String::from_utf8_lossy(&buf[..header_end]).into_owned();
+    let status_line = head.lines().next().unwrap_or("");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("bad status line {status_line:?}"))?;
+    let mut content_length = 0usize;
+    for line in head.lines().skip(1) {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let body_start = header_end + 4;
+    while buf.len() < body_start + content_length {
+        let n = stream.read(&mut tmp).context("reading response body")?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    }
+    let body =
+        String::from_utf8_lossy(&buf[body_start..body_start + content_length]).into_owned();
+    Ok((status, body))
 }

@@ -82,6 +82,48 @@ impl KvCache {
         }
     }
 
+    /// Write one verified position from a `verify_step` result: row `j` of
+    /// the (slots, spec_width, H, dh) `knew::`/`vnew::` outputs lands at
+    /// position `pos` of stream `slot`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn write_spec(
+        &mut self,
+        slot: usize,
+        pos: usize,
+        layer: usize,
+        j: usize,
+        sw: usize,
+        knew: &Tensor,
+        vnew: &Tensor,
+    ) {
+        debug_assert!(pos < self.seq, "cache overflow: pos {pos} >= seq {}", self.seq);
+        let (heads, seq, dh) = (self.heads, self.seq, self.dh);
+        for hd in 0..heads {
+            let src = ((slot * sw + j) * heads + hd) * dh;
+            let dst = slot * heads * seq * dh + hd * seq * dh + pos * dh;
+            self.k[layer].data_mut()[dst..dst + dh].copy_from_slice(&knew.data()[src..src + dh]);
+            self.v[layer].data_mut()[dst..dst + dh].copy_from_slice(&vnew.data()[src..src + dh]);
+        }
+    }
+
+    /// Roll stream `slot` back to `pos` valid tokens: zero every K/V row at
+    /// positions `pos..seq` across all layers and heads.  After a rejected
+    /// speculative proposal this leaves the slot bitwise-identical to never
+    /// having drafted, because a fresh cache plane is all-zeros and
+    /// `write_new`/`write_spec` only ever touch the row they commit.
+    pub fn truncate_to(&mut self, slot: usize, pos: usize) {
+        let (heads, seq, dh) = (self.heads, self.seq, self.dh);
+        let pos = pos.min(seq);
+        for layer in 0..self.n_layers() {
+            for hd in 0..heads {
+                let row0 = slot * heads * seq * dh + hd * seq * dh;
+                let span = row0 + pos * dh..row0 + seq * dh;
+                self.k[layer].data_mut()[span.clone()].fill(0.0);
+                self.v[layer].data_mut()[span].fill(0.0);
+            }
+        }
+    }
+
     /// Resident cache size: layers × 2 (K and V) × slots × H × S × dh × 4 B.
     pub fn bytes(&self) -> usize {
         kv_bytes_for(self.n_layers(), self.slots, self.heads, self.seq, self.dh)
@@ -138,6 +180,79 @@ mod tests {
         assert_eq!(c.v[1].data()[idx], 5.0);
         // other layers and slots untouched
         assert_eq!(c.k[0].data()[idx], 0.0);
+    }
+
+    #[test]
+    fn spec_writes_land_at_the_right_position() {
+        let mut c = cache();
+        let (slots, heads, seq, dh) = (c.slots, c.heads, c.seq, c.dh);
+        let sw = 4;
+        let mut knew = Tensor::zeros(&[slots, sw, heads, dh]);
+        // slot 1, window row 2, head 1, first lane
+        knew.data_mut()[((sw + 2) * heads + 1) * dh] = 7.0;
+        let vnew = knew.clone();
+        c.write_spec(1, 5, 0, 2, sw, &knew, &vnew);
+        let idx = heads * seq * dh + seq * dh + 5 * dh;
+        assert_eq!(c.k[0].data()[idx], 7.0);
+        assert_eq!(c.v[0].data()[idx], 7.0);
+    }
+
+    /// The rollback guarantee the spec engine leans on: drafting rows past
+    /// the accept point and truncating back is bitwise-identical to never
+    /// having written them.
+    #[test]
+    fn truncate_restores_never_drafted_planes() {
+        let mut c = cache();
+        let (slots, heads, dh) = (c.slots, c.heads, c.dh);
+        let mk = |seed: f32| {
+            let mut t = Tensor::zeros(&[slots, heads, dh]);
+            for (i, x) in t.data_mut().iter_mut().enumerate() {
+                *x = seed + i as f32 * 0.25;
+            }
+            t
+        };
+        // commit positions 0..3 on slot 2 across every layer
+        for layer in 0..c.n_layers() {
+            for pos in 0..3 {
+                let t = mk((layer * 10 + pos) as f32);
+                c.write_new(2, pos, layer, &t, &t);
+            }
+        }
+        let snap_k: Vec<Vec<f32>> = c.k.iter().map(|t| t.data().to_vec()).collect();
+        let snap_v: Vec<Vec<f32>> = c.v.iter().map(|t| t.data().to_vec()).collect();
+        // draft three more positions, then reject them all
+        for layer in 0..c.n_layers() {
+            for pos in 3..6 {
+                let t = mk(-1.0 - (layer + pos) as f32);
+                c.write_new(2, pos, layer, &t, &t);
+            }
+        }
+        assert_ne!(snap_k[0], c.k[0].data());
+        c.truncate_to(2, 3);
+        for layer in 0..c.n_layers() {
+            assert_eq!(snap_k[layer], c.k[layer].data(), "layer {layer} K diverged");
+            assert_eq!(snap_v[layer], c.v[layer].data(), "layer {layer} V diverged");
+        }
+    }
+
+    #[test]
+    fn truncate_touches_only_its_slot() {
+        let mut c = cache();
+        let (slots, heads, dh) = (c.slots, c.heads, c.dh);
+        let mut t = Tensor::zeros(&[slots, heads, dh]);
+        t.data_mut().fill(3.0);
+        for pos in 0..4 {
+            c.write_new(0, pos, 0, &t, &t);
+            c.write_new(1, pos, 0, &t, &t);
+        }
+        let snap = c.k[0].data().to_vec();
+        c.truncate_to(1, 0); // wipe slot 1 entirely
+        let n = heads * c.seq * dh;
+        assert_eq!(&c.k[0].data()[..n], &snap[..n], "slot 0 must be untouched");
+        assert!(c.k[0].data()[n..2 * n].iter().all(|&x| x == 0.0));
+        // truncating past seq is a no-op rather than a panic
+        c.truncate_to(0, c.seq + 5);
+        assert_eq!(&c.k[0].data()[..n], &snap[..n]);
     }
 
     #[test]

@@ -20,6 +20,7 @@ pub mod batcher;
 pub mod client;
 pub mod kv;
 pub mod router;
+pub mod spec;
 
 use std::collections::BTreeMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};

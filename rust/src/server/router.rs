@@ -1,15 +1,19 @@
 //! Hand-rolled HTTP/1.1 codec and the endpoint routing table.
 //!
-//! Zero-dependency by design (std `TcpStream` only): one request per
-//! connection (`Connection: close`), bodies bounded by `Content-Length`,
-//! JSON in/out through [`crate::util::json::Json`].  Endpoints:
+//! Zero-dependency by design (std `TcpStream` only): persistent
+//! connections per HTTP/1.1 defaults (`Connection: keep-alive` honored;
+//! clients opt out with `Connection: close`), bodies bounded by
+//! `Content-Length`, JSON in/out through [`crate::util::json::Json`].
+//! Idle keep-alive connections are reaped after
+//! [`KEEP_ALIVE_IDLE_SECS`], polled in one-second slices so shutdown is
+//! never held hostage by a parked socket.  Endpoints:
 //!
 //! | route               | verb | body                                        |
 //! |---------------------|------|---------------------------------------------|
 //! | `/healthz`          | GET  | status + loaded variants                    |
 //! | `/metrics`          | GET  | Prometheus text exposition                  |
 //! | `/models`           | GET  | per-variant detail (params, sparsity, KV)   |
-//! | `/models/load`      | POST | `{name, checkpoint[, model, max_active]}`   |
+//! | `/models/load`      | POST | `{name, checkpoint[, model, max_active, draft, spec_k]}` |
 //! | `/generate`         | POST | `{prompt[, model, max_tokens, temperature]}`|
 //! | `/score`            | POST | `{text[, model]}`                           |
 //! | `/jobs`             | POST | submit a plan graph (see [`crate::jobs::api`]) |
@@ -47,10 +51,16 @@ pub struct Request {
     /// endpoints (`POST /shutdown`) are restricted to local peers so a
     /// `--host 0.0.0.0` bind doesn't hand remote clients a process kill.
     pub peer_loopback: bool,
+    /// HTTP/1.1 default: the connection persists unless the client sent
+    /// `Connection: close`.
+    pub keep_alive: bool,
 }
 
 const MAX_HEADER_BYTES: usize = 64 * 1024;
 const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+/// Seconds a keep-alive connection may sit idle between requests before
+/// the worker reclaims it.
+const KEEP_ALIVE_IDLE_SECS: usize = 30;
 
 pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
     let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
@@ -76,10 +86,13 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
     let method = parts.next().context("missing method")?.to_ascii_uppercase();
     let path = parts.next().context("missing path")?.to_string();
     let mut content_length = 0usize;
+    let mut keep_alive = true;
     for line in lines {
         if let Some((k, v)) = line.split_once(':') {
             if k.trim().eq_ignore_ascii_case("content-length") {
                 content_length = v.trim().parse().unwrap_or(0);
+            } else if k.trim().eq_ignore_ascii_case("connection") {
+                keep_alive = !v.trim().eq_ignore_ascii_case("close");
             }
         }
     }
@@ -97,7 +110,7 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
     let body =
         String::from_utf8_lossy(&buf[body_start..body_start + content_length]).into_owned();
     let peer_loopback = stream.peer_addr().map(|a| a.ip().is_loopback()).unwrap_or(false);
-    Ok(Request { method, path, body, peer_loopback })
+    Ok(Request { method, path, body, peer_loopback, keep_alive })
 }
 
 fn find(haystack: &[u8], needle: &[u8]) -> Option<usize> {
@@ -109,6 +122,7 @@ pub fn respond(
     status: u16,
     content_type: &str,
     body: &str,
+    keep_alive: bool,
 ) -> std::io::Result<()> {
     let reason = match status {
         200 => "OK",
@@ -121,26 +135,79 @@ pub fn respond(
         503 => "Service Unavailable",
         _ => "Unknown",
     };
+    let conn = if keep_alive { "keep-alive" } else { "close" };
     let head = format!(
         "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
+         Content-Length: {}\r\nConnection: {conn}\r\n\r\n",
         body.len()
     );
     stream.write_all(head.as_bytes())?;
     stream.write_all(body.as_bytes())
 }
 
-/// One connection end-to-end: parse, route, respond.
-pub fn serve_connection(state: &ServeState, stream: &mut TcpStream) {
-    match read_request(stream) {
-        Ok(req) => {
-            state.http_requests.fetch_add(1, Ordering::Relaxed);
-            let (status, ctype, body) = route(state, &req);
-            let _ = respond(stream, status, ctype, &body);
+/// What the between-requests idle wait observed.
+enum Wait {
+    /// Bytes arrived — another request is on the wire.
+    Request,
+    /// Peer closed, socket error, idle cap hit, or the server is stopping.
+    Done,
+}
+
+/// Park between keep-alive requests in one-second `peek` slices, checking
+/// the process stop flag each slice — a graceful shutdown never waits on
+/// an idle connection, and a closed peer is noticed without issuing a
+/// spurious 400.
+fn wait_for_request(state: &ServeState, stream: &mut TcpStream) -> Wait {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(1)));
+    let mut probe = [0u8; 1];
+    for _ in 0..KEEP_ALIVE_IDLE_SECS {
+        if state.stop.load(Ordering::Relaxed) {
+            return Wait::Done;
         }
-        Err(e) => {
-            let body = err_body(400, "bad request", &format!("{e:#}"));
-            let _ = respond(stream, 400, "application/json", &body);
+        match stream.peek(&mut probe) {
+            Ok(0) => return Wait::Done, // clean close from the peer
+            Ok(_) => return Wait::Request,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => return Wait::Done,
+        }
+    }
+    Wait::Done // idle cap reached
+}
+
+/// One connection end-to-end: parse, route, respond — looping while the
+/// client keeps the connection alive.
+pub fn serve_connection(state: &ServeState, stream: &mut TcpStream) {
+    let mut first = true;
+    loop {
+        // The first request follows the connect immediately; later ones
+        // may be a while coming, so park stop-aware instead of letting
+        // read_request time out into a 400.
+        if !first {
+            match wait_for_request(state, stream) {
+                Wait::Request => {}
+                Wait::Done => return,
+            }
+        }
+        first = false;
+        match read_request(stream) {
+            Ok(req) => {
+                state.http_requests.fetch_add(1, Ordering::Relaxed);
+                let keep = req.keep_alive;
+                let (status, ctype, body) = route(state, &req);
+                if respond(stream, status, ctype, &body, keep).is_err() || !keep {
+                    return;
+                }
+            }
+            Err(e) => {
+                let body = err_body(400, "bad request", &format!("{e:#}"));
+                let _ = respond(stream, 400, "application/json", &body, false);
+                return;
+            }
         }
     }
 }
@@ -235,6 +302,12 @@ fn models(state: &ServeState) -> String {
                         .map(Json::Str)
                         .unwrap_or(Json::Null),
                 ),
+                (
+                    "draft",
+                    e.info.draft.clone().map(Json::Str).unwrap_or(Json::Null),
+                ),
+                ("draft_sparsity", Json::Num(e.info.draft_sparsity)),
+                ("spec_k", Json::Num(e.info.spec_k as f64)),
             ])
         })
         .collect();
@@ -275,6 +348,22 @@ fn metrics(state: &ServeState) -> String {
             "perp_serve_sparse_weight_bytes{tag} {}\n",
             e.info.sparse_bytes
         ));
+        // speculative-decoding families, present only on engines with a
+        // draft loaded (acceptance rate = accepted / proposed)
+        if e.info.spec_k > 0 {
+            let srows: [(&str, u64); 6] = [
+                ("rounds_total", m.spec_rounds.load(Ordering::Relaxed)),
+                ("draft_steps_total", m.spec_draft_steps.load(Ordering::Relaxed)),
+                ("proposed_total", m.spec_proposed.load(Ordering::Relaxed)),
+                ("accepted_total", m.spec_accepted.load(Ordering::Relaxed)),
+                ("rejected_total", m.spec_rejected.load(Ordering::Relaxed)),
+                ("rollbacks_total", m.spec_rollbacks.load(Ordering::Relaxed)),
+            ];
+            for (name, value) in srows {
+                out.push_str(&format!("perp_obs_spec_{name}{tag} {value}\n"));
+            }
+            out.push_str(&format!("perp_obs_spec_k{tag} {}\n", e.info.spec_k));
+        }
     }
     // process-wide obs registry: backend exec counts, SpMM layout dispatch,
     // tape-pool reuse, queue-wait / batch-fill / KV-occupancy histograms
@@ -374,6 +463,12 @@ fn models_load(state: &ServeState, body: &str) -> (u16, String) {
     if let Some(a) = j.get("max_active").and_then(Json::as_usize) {
         batch.max_active = a;
     }
+    // optional speculative decoding: a draft checkpoint plus draft length
+    let draft = j.get("draft").and_then(Json::as_str).map(PathBuf::from);
+    let spec_k = j.get("spec_k").and_then(Json::as_usize).unwrap_or(4);
+    if spec_k == 0 {
+        return err(400, "invalid spec_k", "\"spec_k\" must be >= 1");
+    }
     let spec = EngineSpec {
         name: name.to_string(),
         cfg,
@@ -381,6 +476,8 @@ fn models_load(state: &ServeState, body: &str) -> (u16, String) {
         checkpoint: Some(PathBuf::from(ckpt)),
         cache_dir: state.cache_dir.clone(),
         batch,
+        draft,
+        spec_k,
     };
     match batcher::spawn(spec) {
         Ok(handle) => match state.insert(handle) {
@@ -547,6 +644,7 @@ mod tests {
             path: "/shutdown".to_string(),
             body: String::new(),
             peer_loopback: loopback,
+            keep_alive: false,
         };
         let (status, _, body) = route(&state, &req(false));
         assert_eq!(status, 403, "{body}");

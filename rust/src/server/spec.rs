@@ -1,0 +1,444 @@
+//! `perp::spec` — the speculative draft-verify decode engine.
+//!
+//! PERP manufactures its own draft models: a pruned+retrained variant
+//! recovers dense-level quality from a fraction of the parameters, so it
+//! proposes tokens cheaply while the dense target stays the source of
+//! truth.  Each round the [`SpecEngine`] runs up to `k` greedy draft steps
+//! against a dedicated draft KV plane, verifies every proposal in one
+//! batched multi-token `verify_step` pass over the target cache, accepts
+//! the longest matching prefix plus the target's own next token, and rolls
+//! both planes back to the divergence point with [`KvCache::truncate_to`].
+//!
+//! **Exactness.**  Both sides decode greedily (first-maximum [`argmax`]),
+//! and `verify_step`'s logits rows are bitwise what sequential
+//! `decode_step` calls would produce (see `runtime/native/verify.rs`), so
+//! a proposal is accepted *iff* plain target-only decoding would have
+//! emitted that exact token.  By induction the committed stream is
+//! bitwise-identical to never having speculated — pinned end-to-end by
+//! `tests/decode_parity.rs` — and speculation is purely a latency play:
+//! `m` accepted tokens cost one verify pass instead of `m` decode steps.
+//! The guarantee is greedy-only: at `temperature > 0` the batcher bypasses
+//! this engine entirely.
+//!
+//! **Bookkeeping.**  The draft cache runs one round behind the target: a
+//! round that accepts `m` of `keff` proposals leaves the draft holding
+//! `pending` tokens (committed to the target, not yet fed to the draft)
+//! satisfying `draft_pos + pending.len() == target_pos`.  The engine owns
+//! all cache writes and truncations; the batcher only consumes the
+//! committed tokens through its ordinary `advance` path, so EOS /
+//! max-tokens / cache-full semantics are shared with plain decoding.
+
+use anyhow::Result;
+
+use crate::runtime::{ModelCfg, Outputs};
+
+use super::batcher::argmax;
+use super::kv::KvCache;
+
+/// Per-slot draft bookkeeping: where the draft cache is, and which
+/// already-committed target tokens it still has to consume.
+#[derive(Debug, Clone, Default)]
+struct SpecState {
+    /// Valid draft cache rows (== next draft write position).
+    draft_pos: usize,
+    /// Committed target tokens not yet fed to the draft.  Together with
+    /// the stream's `last` token this is the next round's feed queue.
+    pending: Vec<i32>,
+}
+
+/// One active stream's view for a spec round.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundInput {
+    pub slot: usize,
+    /// Valid target cache rows (the batcher's `Stream::pos`).
+    pub pos: usize,
+    /// Last committed token — the verify window's first input.
+    pub last: i32,
+}
+
+/// What one stream got out of a round.
+#[derive(Debug, Clone)]
+pub struct RoundResult {
+    pub slot: usize,
+    /// `accepted` draft tokens plus the target's next token — in plain
+    /// decoding order.  The caller feeds these through `advance` one at a
+    /// time; position `pos + i + 1` is valid after consuming token `i`.
+    pub committed: Vec<i32>,
+    /// Draft tokens proposed this round (`keff <= k`, window-clamped).
+    pub proposed: usize,
+    /// Leading proposals the target agreed with (`<= proposed`).
+    pub accepted: usize,
+}
+
+/// Counters one round accumulates — the batcher folds these into
+/// `EngineMetrics` (and the obs registry is fed directly in here).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundStats {
+    /// Batched draft `decode_step` calls this round.
+    pub draft_steps: u64,
+    pub proposed: u64,
+    pub accepted: u64,
+    pub rejected: u64,
+    /// Streams that needed a target-plane rollback (some proposal refused).
+    pub rollbacks: u64,
+}
+
+/// One stream's in-flight drafting state within a round.
+struct Drafting {
+    slot: usize,
+    /// Target position at round entry (verify window base).
+    tpos: usize,
+    /// Draft cache position at round entry (first write position).
+    dpos: usize,
+    /// Pending committed tokens then `last`; past it, own proposals.
+    queue: Vec<i32>,
+    keff: usize,
+    fed: usize,
+    proposals: Vec<i32>,
+}
+
+impl Drafting {
+    /// `(token, active)` for the next micro-step.  A stream stays active
+    /// until it has proposed `keff` tokens; the final proposal is sampled
+    /// but never fed (its K/V row would be rolled back regardless).
+    fn next_feed(&self) -> (i32, bool) {
+        if self.proposals.len() >= self.keff {
+            return (0, false);
+        }
+        let tok = if self.fed < self.queue.len() {
+            self.queue[self.fed]
+        } else {
+            self.proposals[self.fed - self.queue.len()]
+        };
+        (tok, true)
+    }
+}
+
+pub struct SpecEngine {
+    /// Requested draft length; clamped to `spec_width - 1` (one verify row
+    /// carries the committed input token).
+    pub k: usize,
+    sw: usize,
+    seq: usize,
+    draft: KvCache,
+    states: Vec<Option<SpecState>>,
+}
+
+impl SpecEngine {
+    /// `cfg` is the shared model config (draft and target are the same
+    /// architecture — the draft differs only in weights/sparsity).
+    pub fn new(cfg: &ModelCfg, k: usize) -> SpecEngine {
+        let sw = cfg.spec_width;
+        SpecEngine {
+            k: k.clamp(1, sw.saturating_sub(1).max(1)),
+            sw,
+            seq: cfg.seq_len,
+            draft: KvCache::new(cfg),
+            states: (0..cfg.serve_slots).map(|_| None).collect(),
+        }
+    }
+
+    /// The draft KV planes — the batcher adopts the draft model's prefill
+    /// output into these (same slot indices as the target cache).
+    pub fn draft_cache(&mut self) -> &mut KvCache {
+        &mut self.draft
+    }
+
+    /// Register a freshly admitted stream after its draft prefill:
+    /// `prompt_len` rows of the draft plane are valid, nothing pending.
+    pub fn admit(&mut self, slot: usize, prompt_len: usize) {
+        self.states[slot] = Some(SpecState { draft_pos: prompt_len, pending: Vec::new() });
+    }
+
+    /// Stream `slot` is tracked for speculative rounds.
+    pub fn tracks(&self, slot: usize) -> bool {
+        self.states[slot].is_some()
+    }
+
+    /// Drop a finished stream's spec state.
+    pub fn release(&mut self, slot: usize) {
+        self.states[slot] = None;
+    }
+
+    /// Run one draft-propose / target-verify round over `streams`.
+    ///
+    /// `draft_step(draft_cache, tokens, pos)` runs the draft model's
+    /// `decode_step`; `verify(target_cache, tokens, pos, klen)` runs the
+    /// target's `verify_step` — closures, so the engine stays agnostic of
+    /// sessions and backends (the parity test drives it directly).  All
+    /// cache writes and rollbacks happen in here; on return the target
+    /// cache holds exactly `pos + committed.len()` valid rows per stream.
+    pub fn round<FD, FV>(
+        &mut self,
+        target: &mut KvCache,
+        streams: &[RoundInput],
+        mut draft_step: FD,
+        mut verify: FV,
+    ) -> Result<(Vec<RoundResult>, RoundStats)>
+    where
+        FD: FnMut(&KvCache, &[i32], &[i32]) -> Result<Outputs>,
+        FV: FnMut(&KvCache, &[i32], &[i32], &[i32]) -> Result<Outputs>,
+    {
+        let slots = self.states.len();
+        let (sw, seq) = (self.sw, self.seq);
+        let mut stats = RoundStats::default();
+
+        // ---- 1. draft: flush pending + propose keff tokens per stream --
+        // Micro-steps stay batched across streams — one draft decode_step
+        // per step, streams going idle (pos = -1) as their budget is met.
+        let mut drafting: Vec<Drafting> = Vec::with_capacity(streams.len());
+        for s in streams {
+            let st = self.states[s.slot]
+                .as_ref()
+                .unwrap_or_else(|| panic!("spec round over untracked slot {}", s.slot));
+            debug_assert_eq!(
+                st.draft_pos + st.pending.len(),
+                s.pos,
+                "draft lag invariant broken on slot {}",
+                s.slot
+            );
+            // the verify window writes rows pos..=pos+keff, all < seq
+            let keff = self.k.min(seq.saturating_sub(s.pos + 1));
+            let mut queue = st.pending.clone();
+            queue.push(s.last);
+            drafting.push(Drafting {
+                slot: s.slot,
+                tpos: s.pos,
+                dpos: st.draft_pos,
+                queue,
+                keff,
+                fed: 0,
+                proposals: Vec::new(),
+            });
+        }
+        let mut step_tokens = vec![0i32; slots];
+        let mut step_pos = vec![-1i32; slots];
+        loop {
+            let mut any = false;
+            step_pos.iter_mut().for_each(|p| *p = -1);
+            for d in &drafting {
+                let (tok, active) = d.next_feed();
+                if active {
+                    any = true;
+                    step_tokens[d.slot] = tok;
+                    step_pos[d.slot] = (d.dpos + d.fed) as i32;
+                }
+            }
+            if !any {
+                break;
+            }
+            let out = {
+                let _sp = crate::span!("spec", "draft_step");
+                draft_step(&self.draft, &step_tokens, &step_pos)?
+            };
+            stats.draft_steps += 1;
+            crate::count!("spec.draft_steps");
+            for layer in 0..self.draft.n_layers() {
+                let kn = out.get(&format!("knew::h{layer}"));
+                let vn = out.get(&format!("vnew::h{layer}"));
+                for d in &drafting {
+                    if step_pos[d.slot] >= 0 {
+                        self.draft.write_new(d.slot, d.dpos + d.fed, layer, kn, vn);
+                    }
+                }
+            }
+            let logits = out.get("logits");
+            let vocab = logits.cols();
+            for d in drafting.iter_mut() {
+                if step_pos[d.slot] < 0 {
+                    continue;
+                }
+                d.fed += 1;
+                // logits past the queue's last token are proposals
+                if d.fed >= d.queue.len() {
+                    let row = &logits.data()[d.slot * vocab..(d.slot + 1) * vocab];
+                    d.proposals.push(argmax(row));
+                }
+            }
+        }
+
+        // ---- 2. verify every window in one multi-token target pass -----
+        let mut vtokens = vec![0i32; slots * sw];
+        let mut vpos = vec![-1i32; slots];
+        let mut vklen = vec![0i32; slots];
+        for d in &drafting {
+            vtokens[d.slot * sw] = *d.queue.last().expect("queue holds at least `last`");
+            for (i, &p) in d.proposals.iter().enumerate() {
+                vtokens[d.slot * sw + 1 + i] = p;
+            }
+            vpos[d.slot] = d.tpos as i32;
+            vklen[d.slot] = (d.proposals.len() + 1) as i32;
+        }
+        let out = {
+            let _sp = crate::span!("spec", "verify_step").arg("streams", drafting.len());
+            verify(target, &vtokens, &vpos, &vklen)?
+        };
+        crate::count!("spec.verify_steps");
+
+        // ---- 3. accept the longest matching prefix, roll back the rest -
+        let logits = out.get("logits");
+        let vocab = logits.data().len() / (slots * sw);
+        let mut results = Vec::with_capacity(drafting.len());
+        for d in &drafting {
+            let (p, keff) = (d.tpos, d.keff);
+            let klen = d.proposals.len() + 1;
+            let row = |j: usize| {
+                let base = (d.slot * sw + j) * vocab;
+                &logits.data()[base..base + vocab]
+            };
+            // proposal i (0-based) survives iff it matches the target's
+            // argmax at the same position and every earlier proposal did
+            let mut m = 0usize;
+            while m < d.proposals.len() && d.proposals[m] == argmax(row(m)) {
+                m += 1;
+            }
+            let mut committed: Vec<i32> = d.proposals[..m].to_vec();
+            committed.push(argmax(row(m))); // the target's own next token
+
+            // target plane: commit all klen fresh rows, then roll back to
+            // the divergence point — bitwise "never drafted" (kv.rs tests)
+            for layer in 0..target.n_layers() {
+                let kn = out.get(&format!("knew::h{layer}"));
+                let vn = out.get(&format!("vnew::h{layer}"));
+                for j in 0..klen {
+                    target.write_spec(d.slot, p + j, layer, j, sw, kn, vn);
+                }
+            }
+            target.truncate_to(d.slot, p + m + 1);
+
+            // draft plane: rows for rejected proposals are invalid; on a
+            // full accept the final (never-fed) proposal becomes pending.
+            // keff == 0 means the cache fills this round and the caller
+            // releases the stream — leave its draft state alone.
+            if keff > 0 {
+                let st = self.states[d.slot].as_mut().expect("tracked");
+                st.draft_pos = p + keff.min(m + 1);
+                st.pending.clear();
+                if m == keff {
+                    st.pending.push(d.proposals[keff - 1]);
+                }
+                self.draft.truncate_to(d.slot, st.draft_pos);
+            }
+
+            stats.proposed += keff as u64;
+            stats.accepted += m as u64;
+            stats.rejected += (keff - m) as u64;
+            if m < keff {
+                stats.rollbacks += 1;
+                crate::count!("spec.rollbacks");
+            }
+            crate::count!("spec.accepted", m as u64);
+            crate::count!("spec.rejected", (keff - m) as u64);
+            crate::obs::counters::Registry::global().observe("spec.accept_len", m as f64);
+            results.push(RoundResult { slot: d.slot, committed, proposed: keff, accepted: m });
+        }
+        Ok((results, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ModelCfg;
+    use crate::tensor::Tensor;
+
+    fn cfg() -> ModelCfg {
+        ModelCfg::builtin("gpt-nano").unwrap()
+    }
+
+    /// Fake draft: argmax of the logits row for slot 0 walks 10, 11, 12 …
+    /// across successive calls; K/V rows are zeros.
+    fn fake_draft(cfg: &ModelCfg, call: &mut usize) -> Outputs {
+        let (slots, vocab) = (cfg.serve_slots, cfg.vocab);
+        let (nh, dh) = (cfg.n_heads, cfg.d_head());
+        let mut lg = vec![0.0f32; slots * vocab];
+        lg[10 + *call] = 1.0; // slot 0 argmax = 10 + call
+        *call += 1;
+        let mut values = vec![("logits".to_string(), Tensor::new(&[slots, vocab], lg))];
+        for i in 0..cfg.n_layers {
+            values.push((format!("knew::h{i}"), Tensor::zeros(&[slots, nh, dh])));
+            values.push((format!("vnew::h{i}"), Tensor::zeros(&[slots, nh, dh])));
+        }
+        Outputs { values }
+    }
+
+    /// Fake verify: rows 0 and 1 agree with proposals 10 and 11, row 2
+    /// insists on 99 (rejecting proposal 12), later rows pick 0.
+    fn fake_verify(cfg: &ModelCfg) -> Outputs {
+        let (slots, vocab, sw) = (cfg.serve_slots, cfg.vocab, cfg.spec_width);
+        let (nh, dh) = (cfg.n_heads, cfg.d_head());
+        let mut lg = vec![0.0f32; slots * sw * vocab];
+        lg[10] = 1.0; // row 0 -> 10
+        lg[vocab + 11] = 1.0; // row 1 -> 11
+        lg[2 * vocab + 99] = 1.0; // row 2 -> 99 (diverges from 12)
+        let mut values = vec![("logits".to_string(), Tensor::new(&[slots, sw, vocab], lg))];
+        for i in 0..cfg.n_layers {
+            values.push((format!("knew::h{i}"), Tensor::zeros(&[slots, sw, nh, dh])));
+            values.push((format!("vnew::h{i}"), Tensor::zeros(&[slots, sw, nh, dh])));
+        }
+        Outputs { values }
+    }
+
+    #[test]
+    fn round_accepts_prefix_and_keeps_the_lag_invariant() {
+        let cfg = cfg();
+        let mut eng = SpecEngine::new(&cfg, 3);
+        let mut target = KvCache::new(&cfg);
+        eng.admit(0, 4);
+        assert!(eng.tracks(0));
+
+        let mut call = 0usize;
+        let mut fed: Vec<(i32, i32)> = Vec::new(); // (token, pos) fed to the draft
+        let (results, stats) = eng
+            .round(
+                &mut target,
+                &[RoundInput { slot: 0, pos: 4, last: 7 }],
+                |_, toks, pos| {
+                    fed.push((toks[0], pos[0]));
+                    Ok(fake_draft(&cfg, &mut call))
+                },
+                |_, toks, pos, klen| {
+                    assert_eq!(&toks[..4], &[7, 10, 11, 12]);
+                    assert_eq!(pos[0], 4);
+                    assert_eq!(klen[0], 4);
+                    Ok(fake_verify(&cfg))
+                },
+            )
+            .unwrap();
+
+        // drafted `last` then its own proposals, in position order
+        assert_eq!(fed, vec![(7, 4), (10, 5), (11, 6)]);
+        assert_eq!(results.len(), 1);
+        let r = &results[0];
+        assert_eq!(r.committed, vec![10, 11, 99]);
+        assert_eq!((r.proposed, r.accepted), (3, 2));
+        assert_eq!(stats.draft_steps, 3);
+        assert_eq!((stats.proposed, stats.accepted, stats.rejected), (3, 2, 1));
+        assert_eq!(stats.rollbacks, 1);
+
+        // next round entry at pos 7 (= 4 + committed.len()) must satisfy
+        // the draft-lag invariant — the debug_assert inside round checks it
+        let mut call2 = 0usize;
+        let (r2, _) = eng
+            .round(
+                &mut target,
+                &[RoundInput { slot: 0, pos: 7, last: 99 }],
+                |_, toks, pos| {
+                    // nothing pending after a rollback: the first feed is
+                    // `last` itself, at the draft's rolled-back position
+                    if call2 == 0 {
+                        assert_eq!((toks[0], pos[0]), (99, 7));
+                    }
+                    Ok(fake_draft(&cfg, &mut call2))
+                },
+                |_, _, pos, klen| {
+                    assert_eq!((pos[0], klen[0]), (7, 4));
+                    Ok(fake_verify(&cfg))
+                },
+            )
+            .unwrap();
+        assert_eq!(r2[0].committed, vec![10, 11, 99]);
+        eng.release(0);
+        assert!(!eng.tracks(0));
+    }
+}

@@ -18,6 +18,7 @@ use perp::runtime::native::graph::{self, GraphIn, ModeKind};
 use perp::runtime::{Backend, Feed, ModelManifest, NativeBackend};
 use perp::server::batcher::argmax;
 use perp::server::kv::KvCache;
+use perp::server::spec::{RoundInput, SpecEngine};
 use perp::tensor::sparse::{LayoutPolicy, SparseStore, WeightLayout};
 use perp::tensor::Tensor;
 use perp::util::rng::Rng;
@@ -199,6 +200,178 @@ impl Fixture {
         }
         results
     }
+}
+
+/// Speculative decode: the draft fixture proposes K tokens per round, the
+/// target fixture verifies them through `verify_step`, and [`SpecEngine`]
+/// owns all cache writes and rollbacks.  Returns `steps` greedy tokens per
+/// prompt — which must be bitwise what target-only decoding emits, no
+/// matter how good or bad the draft is.
+fn spec_greedy(
+    target: &Fixture,
+    draft: &Fixture,
+    prompts: &[Vec<i32>],
+    steps: usize,
+    k: usize,
+) -> Vec<Vec<i32>> {
+    let cfg = &target.mm.cfg;
+    let (slots, s, vocab, sw) = (cfg.serve_slots, cfg.seq_len, cfg.vocab, cfg.spec_width);
+    assert!(prompts.len() <= slots);
+    let mut cache = KvCache::new(cfg);
+    let mut eng = SpecEngine::new(cfg, k);
+    let assigned: Vec<usize> = prompts.iter().map(|_| cache.alloc().unwrap()).collect();
+
+    // prefill both planes over the same prompts (same slot indices)
+    let mut ptoks = vec![0i32; slots * s];
+    let mut lens = vec![0i32; slots];
+    for (p, &slot) in prompts.iter().zip(&assigned) {
+        ptoks[slot * s..slot * s + p.len()].copy_from_slice(p);
+        lens[slot] = p.len() as i32;
+    }
+    let pshape = [slots, s];
+    let sshape = [slots];
+    let vshape = [slots, sw];
+    let tout = {
+        let feed = target
+            .base_feed(Feed::new())
+            .ints("tokens", &pshape, &ptoks)
+            .ints("lens", &sshape, &lens);
+        target.be.run("gpt-nano", "prefill", &feed).unwrap()
+    };
+    let dout = {
+        let feed = draft
+            .base_feed(Feed::new())
+            .ints("tokens", &pshape, &ptoks)
+            .ints("lens", &sshape, &lens);
+        draft.be.run("gpt-nano", "prefill", &feed).unwrap()
+    };
+    for layer in 0..cache.n_layers() {
+        let (k_, v_) = (tout.get(&format!("k::h{layer}")), tout.get(&format!("v::h{layer}")));
+        let dc = eng.draft_cache();
+        let (dk, dv) = (dout.get(&format!("k::h{layer}")), dout.get(&format!("v::h{layer}")));
+        for &slot in &assigned {
+            dc.adopt_prefill(slot, layer, dk, dv);
+        }
+        for &slot in &assigned {
+            cache.adopt_prefill(slot, layer, k_, v_);
+        }
+    }
+    for (p, &slot) in prompts.iter().zip(&assigned) {
+        eng.admit(slot, p.len());
+    }
+
+    let mut pos: Vec<usize> = prompts.iter().map(Vec::len).collect();
+    let mut last: Vec<i32> = assigned
+        .iter()
+        .map(|&slot| argmax(&tout.get("logits").data()[slot * vocab..(slot + 1) * vocab]))
+        .collect();
+    let mut results: Vec<Vec<i32>> = last.iter().map(|&t| vec![t]).collect();
+
+    loop {
+        let inputs: Vec<RoundInput> = assigned
+            .iter()
+            .enumerate()
+            .filter(|&(r, _)| results[r].len() < steps && pos[r] + 1 < s)
+            .map(|(r, &slot)| RoundInput { slot, pos: pos[r], last: last[r] })
+            .collect();
+        if inputs.is_empty() {
+            break;
+        }
+        let (round, _stats) = eng
+            .round(
+                &mut cache,
+                &inputs,
+                |dc, toks, dpos| {
+                    let mut feed = draft
+                        .base_feed(Feed::new())
+                        .ints("tokens", &sshape, toks)
+                        .ints("pos", &sshape, dpos);
+                    for layer in 0..dc.n_layers() {
+                        feed = feed
+                            .owned_key(format!("k::h{layer}"), &dc.k[layer])
+                            .owned_key(format!("v::h{layer}"), &dc.v[layer]);
+                    }
+                    draft.be.run("gpt-nano", "decode_step", &feed)
+                },
+                |tc, toks, vpos, klen| {
+                    let mut feed = target
+                        .base_feed(Feed::new())
+                        .ints("tokens", &vshape, toks)
+                        .ints("pos", &sshape, vpos)
+                        .ints("klen", &sshape, klen);
+                    for layer in 0..tc.n_layers() {
+                        feed = feed
+                            .owned_key(format!("k::h{layer}"), &tc.k[layer])
+                            .owned_key(format!("v::h{layer}"), &tc.v[layer]);
+                    }
+                    target.be.run("gpt-nano", "verify_step", &feed)
+                },
+            )
+            .unwrap();
+        for rr in &round {
+            let r = assigned.iter().position(|&sl| sl == rr.slot).unwrap();
+            assert!(!rr.committed.is_empty(), "a round always commits >= 1 token");
+            results[r].extend_from_slice(&rr.committed);
+            pos[r] += rr.committed.len();
+            last[r] = *rr.committed.last().unwrap();
+        }
+    }
+    for r in &mut results {
+        r.truncate(steps);
+    }
+    results
+}
+
+/// Speculative decoding must be bitwise-invisible: the committed stream
+/// equals target-only KV decoding (itself pinned against the full forward
+/// pass above) for every draft and every K.
+fn check_spec_parity(target: &Fixture, draft: &Fixture, k: usize, label: &str) {
+    let prompts: Vec<Vec<i32>> = vec![
+        vec![2, 7, 19, 4],
+        vec![2, 33, 8],
+        vec![2, 5, 90, 17, 61, 3],
+    ];
+    let steps = 10;
+    let refs = target.kv_greedy(&prompts, steps);
+
+    let single = spec_greedy(target, draft, &prompts[..1], steps, k);
+    assert_eq!(single[0], refs[0], "single-stream spec decode diverged ({label})");
+
+    let batched = spec_greedy(target, draft, &prompts, steps, k);
+    for (i, (got, want)) in batched.iter().zip(&refs).enumerate() {
+        assert_eq!(got, want, "spec stream {i} diverged under batching ({label})");
+    }
+}
+
+#[test]
+fn speculative_decode_matches_target_only_dense_draft() {
+    // a perfect draft (identical weights): everything accepted, still exact
+    let target = fixture(None);
+    let draft = fixture(None);
+    for k in [2, 4] {
+        check_spec_parity(&target, &draft, k, &format!("dense draft, K={k}"));
+    }
+}
+
+#[test]
+fn speculative_decode_matches_target_only_sparse_draft() {
+    // a 90%-pruned draft diverges often — rollbacks must be invisible
+    let target = fixture(None);
+    let draft = fixture(Some(0.9));
+    for k in [2, 4] {
+        check_spec_parity(&target, &draft, k, &format!("90% draft, K={k}"));
+    }
+}
+
+#[test]
+fn speculative_decode_matches_under_compressed_layouts() {
+    // draft weights served from CSR and BSR compressed forms: the spec
+    // round (and its rollbacks) stays bitwise-exact under layout dispatch
+    let target = fixture(None);
+    let csr = fixture_with_layout(Some(0.9), LayoutPolicy::Fixed(WeightLayout::Csr));
+    check_spec_parity(&target, &csr, 4, "csr draft @ 90%, K=4");
+    let bsr = fixture_with_layout(Some(0.9), LayoutPolicy::Fixed(WeightLayout::Bsr));
+    check_spec_parity(&target, &bsr, 4, "bsr draft @ 90%, K=4");
 }
 
 fn check_parity_with(fx: &Fixture, label: &str) {

@@ -27,6 +27,8 @@ fn serve_endpoints_and_concurrent_streams() {
         checkpoint: None,
         cache_dir: cache,
         batch: BatchCfg::default(),
+        draft: None,
+        spec_k: 0,
     })
     .unwrap();
     state.insert(engine).unwrap();
